@@ -1,0 +1,60 @@
+//! The communication–computation trade-off (§5.5): sweep H for a cheap-
+//! communication substrate (MPI) and an expensive one (pySpark+C) and show
+//! the optimum moves — plus the adaptive-H controller finding a good H in
+//! a single run.
+//!
+//! ```sh
+//! cargo run --release --example h_tradeoff
+//! ```
+
+use sparkbench::config::{Impl, TrainConfig};
+use sparkbench::coordinator::{self, tuner};
+use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+use sparkbench::framework::build_engine;
+use sparkbench::metrics::Table;
+
+fn main() {
+    let mut spec = SyntheticSpec::small();
+    spec.n = 1024;
+    spec.avg_col_nnz = 24;
+    let ds = webspam_like(&spec);
+    let mut cfg = TrainConfig::default_for(&ds);
+    cfg.workers = 4;
+    cfg.max_rounds = 4000;
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    let grid = [0.1, 0.25, 0.5, 1.0, 2.0, 4.0];
+
+    for imp in [Impl::Mpi, Impl::PySparkC] {
+        let make = || build_engine(imp, &ds, &cfg);
+        let (points, best) = tuner::grid_search_h(&make, &ds, &cfg, fstar, &grid);
+        println!("{} — time to ε=1e-3 vs H/n_local:", imp.name());
+        let mut table = Table::new(&["H/n_local", "rounds", "time (virt s)", "compute %"]);
+        for (i, p) in points.iter().enumerate() {
+            table.row(vec![
+                format!("{}{:.2}", if i == best { "→" } else { " " }, p.h_frac),
+                p.report.rounds.to_string(),
+                p.report
+                    .time_to_target
+                    .map(|t| format!("{:.4}", t))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.0}%", 100.0 * p.report.compute_fraction()),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+
+    // The future-work feature: adapt H online instead of grid searching.
+    println!("adaptive-H (single run, no grid):");
+    for (imp, target) in [(Impl::Mpi, 0.9), (Impl::PySparkC, 0.6)] {
+        let mut engine = build_engine(imp, &ds, &cfg);
+        let rep = tuner::train_adaptive(engine.as_mut(), &ds, &cfg, fstar, target);
+        println!(
+            "  {:16} reached ε at {} (final H = {})",
+            imp.name(),
+            rep.time_to_target
+                .map(|t| format!("{:.4} virt s", t))
+                .unwrap_or_else(|| "-".into()),
+            rep.logs.last().map(|l| l.h).unwrap_or(0)
+        );
+    }
+}

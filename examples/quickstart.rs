@@ -1,0 +1,50 @@
+//! Quickstart: train a ridge-regression model with CoCoA on the MPI-like
+//! substrate and print the convergence report.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use sparkbench::config::{Impl, TrainConfig};
+use sparkbench::coordinator;
+use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+use sparkbench::framework::build_engine;
+
+fn main() {
+    // 1. A webspam-like sparse dataset (use `data::libsvm::read_libsvm`
+    //    for real corpora).
+    let ds = webspam_like(&SyntheticSpec::small());
+    println!("dataset: {} ({} x {}, {} nnz)", ds.name, ds.m(), ds.n(), ds.nnz());
+
+    // 2. Training configuration: K workers, ridge (η=1), H = n_local.
+    let mut cfg = TrainConfig::default_for(&ds);
+    cfg.workers = 4;
+    cfg.max_rounds = 2000;
+
+    // 3. Pick a framework substrate — the whole point of the paper is that
+    //    this choice (and tuning H to it) decides performance.
+    let mut engine = build_engine(Impl::Mpi, &ds, &cfg);
+
+    // 4. Train to 1e-3 suboptimality.
+    let report = coordinator::train(engine.as_mut(), &ds, &cfg);
+    println!(
+        "{}: {} rounds, {:.4} virtual s (worker {:.4} / master {:.4} / overhead {:.4})",
+        report.impl_name,
+        report.rounds,
+        report.total_time,
+        report.total_worker,
+        report.total_master,
+        report.total_overhead
+    );
+    match report.time_to_target {
+        Some(t) => println!("reached ε = 1e-3 at {:.4} virtual s", t),
+        None => println!("did not reach target; final ε = {:.3e}", report.final_suboptimality),
+    }
+
+    // 5. The last few points of the convergence curve.
+    for log in report.logs.iter().rev().take(3).collect::<Vec<_>>().into_iter().rev() {
+        if let (Some(f), Some(s)) = (log.objective, log.suboptimality) {
+            println!("  round {:4}  t={:.4}s  f={:.6e}  ε={:.3e}", log.round, log.time, f, s);
+        }
+    }
+}

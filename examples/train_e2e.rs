@@ -1,0 +1,167 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Layer 1 (Pallas SCD kernel) + Layer 2 (JAX `local_solve` graph) were
+//! AOT-lowered by `make artifacts`; this binary — pure rust, python never
+//! runs here — loads the HLO artifact, compiles it on the PJRT CPU client,
+//! and uses it as the local solver inside the Layer-3 CoCoA coordinator to
+//! train ridge regression on a webspam-like corpus to 1e-3 suboptimality,
+//! logging the loss curve and verifying the result against the native
+//! solver and the CG oracle.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example train_e2e
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use sparkbench::config::TrainConfig;
+use sparkbench::coordinator;
+use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+use sparkbench::data::{Partitioner, Partitioning, WorkerData};
+use sparkbench::linalg;
+use sparkbench::metrics::write_file;
+use sparkbench::runtime::{Manifest, PjrtRuntime};
+use sparkbench::solver::{pjrt::PjrtScd, scd::NativeScd, LocalSolver, SolveRequest};
+
+fn main() {
+    // ---- Load the AOT artifact (L1+L2) -------------------------------
+    let dir = Manifest::default_dir();
+    let man = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{:#}", e);
+            std::process::exit(1);
+        }
+    };
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    println!(
+        "PJRT platform {} | artifact {} (m={}, nk={}, h_max={}, VMEM≈{})",
+        rt.platform(),
+        man.local_solve_file,
+        man.m,
+        man.nk,
+        man.h_max,
+        man.vmem_bytes_estimate
+            .map(sparkbench::util::fmt_bytes)
+            .unwrap_or_else(|| "?".into())
+    );
+    let exec = Arc::new(rt.load_local_solve(&man).expect("compile local_solve"));
+
+    // ---- Workload: webspam-like corpus matching the artifact shape ----
+    let mut spec = SyntheticSpec::pjrt_default();
+    spec.m = man.m;
+    spec.n = 4 * man.nk; // K=4 workers at full artifact width
+    let ds = webspam_like(&spec);
+    let k = 4usize;
+    let mut cfg = TrainConfig::default_for(&ds);
+    cfg.workers = k;
+    cfg.lam_n = 5e-2 * ds.n() as f64;
+    println!("dataset {} ({}x{}, {} nnz), K={}", ds.name, ds.m(), ds.n(), ds.nnz(), k);
+
+    // Range partitioning gives exactly nk columns per worker (the
+    // artifact is compiled for [m, nk]); balanced-nnz may exceed it.
+    let parts = Partitioning::build(Partitioner::Range, &ds.a, k, cfg.seed);
+    let workers: Vec<WorkerData> = parts
+        .parts
+        .iter()
+        .map(|cols| WorkerData::from_columns(&ds.a, cols))
+        .collect();
+    let mut solvers: Vec<PjrtScd> = (0..k).map(|_| PjrtScd::new(Arc::clone(&exec))).collect();
+    for (s, w) in solvers.iter_mut().zip(workers.iter()) {
+        assert!(s.fits(w), "partition exceeds compiled artifact");
+    }
+
+    // ---- Oracle for suboptimality --------------------------------------
+    let (_, fstar) = sparkbench::solver::cg::ridge_optimum(&ds, cfg.lam_n, 1e-12, 20_000);
+
+    // ---- L3 training loop: CoCoA rounds over the PJRT local solver -----
+    let h = workers[0].n_local(); // H = n_local
+    let mut alphas: Vec<Vec<f64>> = workers.iter().map(|w| vec![0.0; w.n_local()]).collect();
+    let mut v = vec![0.0; ds.m()];
+    let mut csv = String::from("round,wall_s,objective,suboptimality\n");
+    let t0 = Instant::now();
+    let mut reached = None;
+    let max_rounds = 1500usize;
+
+    for round in 0..max_rounds {
+        for (w, solver) in solvers.iter_mut().enumerate() {
+            let req = SolveRequest {
+                v: &v,
+                b: &ds.b,
+                h,
+                lam_n: cfg.lam_n,
+                eta: 1.0,
+                sigma: cfg.sigma(),
+                seed: cfg.seed ^ (round as u64 * 1315423911) ^ w as u64,
+            };
+            let res = solver.solve(&workers[w], &alphas[w], &req);
+            linalg::add_assign(&mut alphas[w], &res.delta_alpha);
+            linalg::add_assign(&mut v, &res.delta_v);
+        }
+        // Recompute v from α every few rounds to cancel f32 drift from the
+        // kernel (the coordinator owns f64 state; the artifact is f32).
+        if round % 10 == 9 {
+            let mut alpha = vec![0.0; ds.n()];
+            for (wd, al) in workers.iter().zip(alphas.iter()) {
+                for (&g, &a) in wd.global_ids.iter().zip(al.iter()) {
+                    alpha[g as usize] = a;
+                }
+            }
+            v = ds.shared_vector(&alpha);
+        }
+
+        let mut alpha = vec![0.0; ds.n()];
+        for (wd, al) in workers.iter().zip(alphas.iter()) {
+            for (&g, &a) in wd.global_ids.iter().zip(al.iter()) {
+                alpha[g as usize] = a;
+            }
+        }
+        let f = ds.objective(&alpha, cfg.lam_n, 1.0);
+        let sub = coordinator::suboptimality(f, fstar);
+        let wall = t0.elapsed().as_secs_f64();
+        csv.push_str(&format!("{},{:.6},{:.9e},{:.6e}\n", round, wall, f, sub));
+        if round % 50 == 0 || sub <= 1e-3 {
+            println!("round {:4}  wall {:7.3}s  f {:.6e}  ε {:.3e}", round, wall, f, sub);
+        }
+        if sub <= 1e-3 {
+            reached = Some((round, wall));
+            break;
+        }
+    }
+
+    write_file(std::path::Path::new("results/train_e2e.csv"), &csv).ok();
+    println!("loss curve written to results/train_e2e.csv");
+
+    // ---- Verify against the native solver (one round, same seed) -------
+    let req = SolveRequest {
+        v: &v,
+        b: &ds.b,
+        h: 128,
+        lam_n: cfg.lam_n,
+        eta: 1.0,
+        sigma: cfg.sigma(),
+        seed: 424242,
+    };
+    let res_pjrt = solvers[0].solve(&workers[0], &alphas[0], &req);
+    let res_native = NativeScd::new().solve(&workers[0], &alphas[0], &req);
+    let max_err = res_pjrt
+        .delta_alpha
+        .iter()
+        .zip(res_native.delta_alpha.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("pjrt-vs-native one-round max |Δα| diff: {:.3e} (f32 kernel)", max_err);
+
+    match reached {
+        Some((round, wall)) => {
+            println!("E2E OK: reached ε=1e-3 in {} rounds, {:.2}s wall (three-layer stack)", round + 1, wall);
+        }
+        None => {
+            eprintln!("E2E: target not reached in {} rounds", max_rounds);
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (never ``lowered.compile()`` output or ``.serialize()`` protos) is
+the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the rust binary is self-contained after.
+
+    python -m compile.aot --out-dir ../artifacts [--m 512 --nk 512 --hmax 4096]
+
+Emits:
+    artifacts/local_solve_m{M}_nk{NK}_h{HMAX}.hlo.txt
+    artifacts/objective_m{M}_n{N}.hlo.txt
+    artifacts/manifest.json   (shapes + VMEM estimate, read by rust runtime)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.scd_kernel import vmem_footprint_bytes
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_local_solve(m: int, nk: int, h_max: int) -> str:
+    spec = model.local_solve_spec(m, nk, h_max)
+    return to_hlo_text(jax.jit(model.local_solve).lower(*spec))
+
+
+def lower_objective(m: int, n: int) -> str:
+    spec = model.objective_spec(m, n)
+    return to_hlo_text(jax.jit(model.objective).lower(*spec))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--m", type=int, default=512, help="rows (datapoints)")
+    p.add_argument("--nk", type=int, default=512, help="local partition width")
+    p.add_argument("--n", type=int, default=1024, help="total features (objective)")
+    p.add_argument("--hmax", type=int, default=4096, help="max SCD steps per round")
+    # Legacy single-file mode used by the original Makefile skeleton.
+    p.add_argument("--out", default=None, help="write only local_solve to this path")
+    args = p.parse_args()
+
+    if args.out is not None:
+        text = lower_local_solve(args.m, args.nk, args.hmax)
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"wrote {args.out} ({len(text)} chars)")
+
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    ls_name = f"local_solve_m{args.m}_nk{args.nk}_h{args.hmax}.hlo.txt"
+    obj_name = f"objective_m{args.m}_n{args.n}.hlo.txt"
+
+    ls_text = lower_local_solve(args.m, args.nk, args.hmax)
+    with open(os.path.join(out, ls_name), "w") as f:
+        f.write(ls_text)
+    print(f"wrote {ls_name} ({len(ls_text)} chars)")
+
+    obj_text = lower_objective(args.m, args.n)
+    with open(os.path.join(out, obj_name), "w") as f:
+        f.write(obj_text)
+    print(f"wrote {obj_name} ({len(obj_text)} chars)")
+
+    manifest = {
+        "format": "hlo-text",
+        "local_solve": {
+            "file": ls_name,
+            "m": args.m,
+            "nk": args.nk,
+            "h_max": args.hmax,
+            "inputs": [
+                {"name": "a", "shape": [args.m, args.nk], "dtype": "f32"},
+                {"name": "col_sq", "shape": [args.nk], "dtype": "f32"},
+                {"name": "alpha", "shape": [args.nk], "dtype": "f32"},
+                {"name": "v", "shape": [args.m], "dtype": "f32"},
+                {"name": "b", "shape": [args.m], "dtype": "f32"},
+                {"name": "idx", "shape": [args.hmax], "dtype": "i32"},
+                {"name": "h", "shape": [], "dtype": "i32"},
+                {"name": "lam_n", "shape": [], "dtype": "f32"},
+                {"name": "eta", "shape": [], "dtype": "f32"},
+                {"name": "sigma", "shape": [], "dtype": "f32"},
+            ],
+            "outputs": [
+                {"name": "delta_alpha", "shape": [args.nk], "dtype": "f32"},
+                {"name": "delta_v", "shape": [args.m], "dtype": "f32"},
+            ],
+            "vmem_bytes_estimate": vmem_footprint_bytes(args.m, args.nk, args.hmax),
+        },
+        "objective": {
+            "file": obj_name,
+            "m": args.m,
+            "n": args.n,
+        },
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

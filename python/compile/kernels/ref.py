@@ -1,0 +1,86 @@
+"""Pure-jnp correctness oracle for the SCD local-solver kernel.
+
+Implements exactly the math of Appendix A of the paper (elastic-net
+regularized least squares, stochastic coordinate descent with immediate
+local residual updates — the CoCoA local solver):
+
+    r    := v - b                       (local residual, VMEM-resident in L1)
+    for t in range(h):
+        j      = idx[t]
+        c_j    = A[:, j]
+        denom  = sigma * ||c_j||^2 + lam_n * eta
+        atilde = (sigma * ||c_j||^2 * alpha_j - c_j^T r) / denom
+        tau    = lam_n * (1 - eta) / denom
+        alpha_j^+ = sign(atilde) * max(|atilde| - tau, 0)
+        r     += sigma * c_j * (alpha_j^+ - alpha_j)
+    delta_v = (r - r0) / sigma          (= A @ delta_alpha)
+
+This file is the ground truth against which the Pallas kernel
+(``scd_kernel.py``) is verified at build time; it is never shipped.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scd_local_solve_ref(a, col_sq, alpha, v, b, idx, h, lam_n, eta, sigma):
+    """Reference SCD local solve.
+
+    Args:
+        a:      [m, nk] dense local partition (zero-padded columns allowed).
+        col_sq: [nk] squared column norms of ``a`` (0 for padding columns).
+        alpha:  [nk] local coordinates of the model vector.
+        v:      [m] shared vector v = A @ alpha (global).
+        b:      [m] labels.
+        idx:    [h_max] int32 coordinate indices into the local partition.
+        h:      scalar int32, number of coordinate steps actually taken
+                (h <= h_max; runtime-variable via ``lax.while_loop``).
+        lam_n:  scalar f32, effective regularization lambda * n.
+        eta:    scalar f32 in [0, 1]; eta=1 -> ridge, eta=0 -> lasso.
+        sigma:  scalar f32, CoCoA subproblem safety parameter (sigma' = gamma*K).
+
+    Returns:
+        (delta_alpha [nk], delta_v [m]) with delta_v = A @ delta_alpha.
+    """
+    a, col_sq, alpha, v, b, idx = (
+        jnp.asarray(a), jnp.asarray(col_sq), jnp.asarray(alpha),
+        jnp.asarray(v), jnp.asarray(b), jnp.asarray(idx),
+    )
+    r0 = v - b
+
+    def step(carry):
+        t, alpha_c, r = carry
+        j = idx[t]
+        c_j = jax.lax.dynamic_slice_in_dim(a, j, 1, axis=1)[:, 0]
+        csq = col_sq[j]
+        a_j = alpha_c[j]
+        denom = sigma * csq + lam_n * eta
+        safe = denom > 0.0
+        denom_s = jnp.where(safe, denom, 1.0)
+        atilde = (sigma * csq * a_j - jnp.dot(c_j, r)) / denom_s
+        tau = lam_n * (1.0 - eta) / denom_s
+        a_new = jnp.sign(atilde) * jnp.maximum(jnp.abs(atilde) - tau, 0.0)
+        a_new = jnp.where(safe, a_new, a_j)
+        delta = a_new - a_j
+        r = r + sigma * delta * c_j
+        alpha_c = alpha_c.at[j].set(a_new)
+        return t + 1, alpha_c, r
+
+    def cond(carry):
+        return carry[0] < h
+
+    _, alpha_f, r_f = jax.lax.while_loop(cond, step, (jnp.int32(0), alpha, r0))
+    delta_alpha = alpha_f - alpha
+    delta_v = (r_f - r0) / sigma
+    return delta_alpha, delta_v
+
+
+def objective_ref(a, b, alpha, lam_n, eta):
+    """Elastic-net objective f(alpha) = 0.5*||A@alpha - b||^2 + lam_n*(eta/2*||alpha||^2 + (1-eta)*||alpha||_1)."""
+    res = a @ alpha - b
+    return (
+        0.5 * jnp.dot(res, res)
+        + lam_n * (0.5 * eta * jnp.dot(alpha, alpha) + (1.0 - eta) * jnp.sum(jnp.abs(alpha)))
+    )

@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: the CoCoA local solver (H steps of SCD) hot loop.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper runs this
+loop as compiled C++ over cache-resident sparse columns. On TPU the same
+insight — *touch only worker-local memory for H steps, then emit a single
+m-vector* — maps to:
+
+  * the local partition ``A_k`` ([m, nk] dense, f32) is staged HBM→VMEM once
+    per round via the BlockSpec (one whole-array block; for larger shapes the
+    m axis is the natural lane dimension and nk the sublane/loop dimension);
+  * the residual ``r`` lives in VMEM for the *entire* H-step loop — this is
+    the kernel-level analogue of the paper's "persistent local memory"
+    optimization: no HBM traffic inside the loop;
+  * the per-step column gather is a dynamic slice along the feature axis;
+  * the rank-1 update ``r += sigma * delta * c_j`` and the dot ``c_j^T r``
+    vectorize over the m lanes on the VPU (this workload is VPU-bound, not
+    MXU-bound: there is no matmul inside the sequential loop).
+
+VMEM budget: A_k (m*nk*4 B) + r, v, b (3*m*4 B) + alpha, colsq, dalpha
+(3*nk*4 B). For the default artifact (m=512, nk=512) that is ~1.05 MB,
+comfortably inside the ~16 MB/core VMEM. The AOT manifest records the
+footprint so the rust runtime can reason about padding choices.
+
+``interpret=True`` is mandatory in this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Numerics are
+validated against ``ref.py`` by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scd_kernel(a_ref, colsq_ref, alpha_ref, v_ref, b_ref, idx_ref, h_ref,
+                params_ref, dalpha_ref, dv_ref):
+    """Pallas kernel body. params_ref = [lam_n, eta, sigma]."""
+    a = a_ref[...]                 # [m, nk] — staged to VMEM once per round
+    colsq = colsq_ref[...]         # [nk]
+    alpha0 = alpha_ref[...]        # [nk]
+    idx = idx_ref[...]             # [h_max] int32
+    h = h_ref[0]
+    lam_n = params_ref[0]
+    eta = params_ref[1]
+    sigma = params_ref[2]
+
+    r0 = v_ref[...] - b_ref[...]   # residual, VMEM-resident across the loop
+
+    def step(carry):
+        t, alpha_c, r = carry
+        j = idx[t]
+        # Column gather: dynamic slice along the feature axis.
+        c_j = jax.lax.dynamic_slice_in_dim(a, j, 1, axis=1)[:, 0]
+        csq = colsq[j]
+        a_j = alpha_c[j]
+        denom = sigma * csq + lam_n * eta
+        safe = denom > 0.0
+        denom_s = jnp.where(safe, denom, 1.0)
+        # Closed-form elastic-net coordinate update (paper eq. (7)-(8)).
+        atilde = (sigma * csq * a_j - jnp.dot(c_j, r)) / denom_s
+        tau = lam_n * (1.0 - eta) / denom_s
+        a_new = jnp.sign(atilde) * jnp.maximum(jnp.abs(atilde) - tau, 0.0)
+        a_new = jnp.where(safe, a_new, a_j)
+        delta = a_new - a_j
+        # Rank-1 residual update — VPU-vectorized over the m lanes.
+        r = r + sigma * delta * c_j
+        alpha_c = alpha_c.at[j].set(a_new)
+        return t + 1, alpha_c, r
+
+    def cond(carry):
+        return carry[0] < h
+
+    _, alpha_f, r_f = jax.lax.while_loop(cond, step, (jnp.int32(0), alpha0, r0))
+
+    dalpha_ref[...] = alpha_f - alpha0
+    # delta_v = A @ delta_alpha, recovered from the residual trajectory.
+    dv_ref[...] = (r_f - r0) / sigma
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scd_local_solve(a, col_sq, alpha, v, b, idx, h, lam_n, eta, sigma,
+                    interpret=True):
+    """Run H steps of SCD on the local partition via the Pallas kernel.
+
+    Same contract as ``ref.scd_local_solve_ref``; scalars are packed into
+    small arrays so the lowered HLO takes them as runtime inputs (one AOT
+    artifact serves every (H, lambda, eta, sigma) the rust sweep needs).
+    """
+    m, nk = a.shape
+    h_arr = jnp.asarray(h, jnp.int32).reshape(1)
+    params = jnp.stack([
+        jnp.asarray(lam_n, jnp.float32),
+        jnp.asarray(eta, jnp.float32),
+        jnp.asarray(sigma, jnp.float32),
+    ])
+    return pl.pallas_call(
+        _scd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((nk,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(a, col_sq, alpha, v, b, idx, h_arr, params)
+
+
+def vmem_footprint_bytes(m: int, nk: int, h_max: int) -> int:
+    """Estimated VMEM bytes the kernel holds live (see module docstring)."""
+    return 4 * (m * nk + 3 * m + 3 * nk + h_max) + 4 * 4

@@ -1,0 +1,72 @@
+"""L2: the CoCoA compute graph, calling the L1 Pallas kernel.
+
+Two jitted entry points are AOT-lowered to HLO text by ``aot.py``:
+
+  * ``local_solve`` — one CoCoA round's worker computation: H steps of SCD
+    on the local column partition (the Pallas kernel), returning the local
+    coordinate update ``delta_alpha`` and the shared-vector update
+    ``delta_v = A_k @ delta_alpha`` that is AllReduced by the L3 rust
+    coordinator (Algorithm 1, lines 4-6).
+
+  * ``objective`` — the global elastic-net objective used by the rust side
+    for suboptimality tracking, evaluated on (padded) dense data.
+
+Shapes are fixed at lowering time; the rust runtime zero-pads smaller
+partitions up to the compiled (m, nk) and masks padded indices (padding
+columns have zero norm, so the kernel provably leaves them untouched —
+property-tested in ``tests/test_kernel.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.scd_kernel import scd_local_solve
+from .kernels import ref
+
+
+def local_solve(a, col_sq, alpha, v, b, idx, h, lam_n, eta, sigma):
+    """One CoCoA round on a worker. Returns (delta_alpha [nk], delta_v [m]).
+
+    ``h`` arrives as a [1] int32 array and ``params`` as runtime scalars so a
+    single artifact serves the whole H sweep (Figure 6) without recompiles.
+    """
+    dalpha, dv = scd_local_solve(
+        a, col_sq, alpha, v, b, idx, h, lam_n, eta, sigma, interpret=True
+    )
+    return dalpha, dv
+
+
+def objective(a, b, alpha, lam_n, eta):
+    """Global objective f(alpha); pure jnp (no kernel — XLA fuses this fine)."""
+    return ref.objective_ref(a, b, alpha, lam_n, eta)
+
+
+def local_solve_spec(m: int, nk: int, h_max: int):
+    """ShapeDtypeStructs for lowering ``local_solve`` at (m, nk, h_max)."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((m, nk), f32),   # a
+        jax.ShapeDtypeStruct((nk,), f32),     # col_sq
+        jax.ShapeDtypeStruct((nk,), f32),     # alpha
+        jax.ShapeDtypeStruct((m,), f32),      # v
+        jax.ShapeDtypeStruct((m,), f32),      # b
+        jax.ShapeDtypeStruct((h_max,), jnp.int32),  # idx
+        jax.ShapeDtypeStruct((), jnp.int32),  # h
+        jax.ShapeDtypeStruct((), f32),        # lam_n
+        jax.ShapeDtypeStruct((), f32),        # eta
+        jax.ShapeDtypeStruct((), f32),        # sigma
+    )
+
+
+def objective_spec(m: int, n: int):
+    """ShapeDtypeStructs for lowering ``objective`` at (m, n)."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((m, n), f32),    # a
+        jax.ShapeDtypeStruct((m,), f32),      # b
+        jax.ShapeDtypeStruct((n,), f32),      # alpha
+        jax.ShapeDtypeStruct((), f32),        # lam_n
+        jax.ShapeDtypeStruct((), f32),        # eta
+    )

@@ -1,0 +1,72 @@
+"""AOT lowering contract tests: the HLO text the rust runtime will load."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels.ref import objective_ref
+
+
+class TestLowering:
+    def test_local_solve_lowers_to_hlo_text(self):
+        text = aot.lower_local_solve(m=16, nk=8, h_max=32)
+        assert "ENTRY" in text
+        assert "while" in text  # the H-step loop must survive lowering
+        # All 10 parameters present.
+        for i in range(10):
+            assert f"parameter({i})" in text
+
+    def test_objective_lowers_to_hlo_text(self):
+        text = aot.lower_objective(m=16, n=8)
+        assert "ENTRY" in text
+        assert "dot(" in text or "dot." in text  # A @ alpha
+
+    def test_local_solve_output_is_tuple_of_two(self):
+        text = aot.lower_local_solve(m=8, nk=4, h_max=8)
+        # return_tuple=True => root is a tuple (f32[4], f32[8]).
+        assert "(f32[4]" in text and "f32[8]" in text
+
+    def test_deterministic_lowering(self):
+        t1 = aot.lower_local_solve(m=8, nk=4, h_max=8)
+        t2 = aot.lower_local_solve(m=8, nk=4, h_max=8)
+        assert t1 == t2
+
+    def test_manifest_written(self, tmp_path):
+        import subprocess, sys
+        res = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+             "--m", "8", "--nk", "4", "--n", "8", "--hmax", "8"],
+            capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        assert res.returncode == 0, res.stderr
+        man = json.loads((tmp_path / "manifest.json").read_text())
+        assert man["format"] == "hlo-text"
+        ls = man["local_solve"]
+        assert (tmp_path / ls["file"]).exists()
+        assert ls["m"] == 8 and ls["nk"] == 4 and ls["h_max"] == 8
+        assert len(ls["inputs"]) == 10 and len(ls["outputs"]) == 2
+        assert (tmp_path / man["objective"]["file"]).exists()
+
+
+class TestModelGraph:
+    def test_objective_matches_numpy(self):
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((12, 6)).astype(np.float32)
+        b = rng.standard_normal(12).astype(np.float32)
+        alpha = rng.standard_normal(6).astype(np.float32)
+        lam_n, eta = 0.7, 0.6
+        got = float(model.objective(a, b, alpha, jnp.float32(lam_n), jnp.float32(eta)))
+        res = a @ alpha - b
+        want = 0.5 * res @ res + lam_n * (0.5 * eta * alpha @ alpha + (1 - eta) * np.abs(alpha).sum())
+        assert abs(got - want) < 1e-3
+
+    def test_local_solve_spec_shapes(self):
+        spec = model.local_solve_spec(32, 16, 64)
+        assert spec[0].shape == (32, 16)
+        assert spec[5].shape == (64,)
+        assert spec[6].shape == ()

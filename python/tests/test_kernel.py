@@ -1,0 +1,160 @@
+"""L1 correctness: Pallas SCD kernel vs the pure-jnp oracle.
+
+The CORE correctness signal of the build path: every artifact the rust
+runtime executes is the lowering of exactly the function tested here.
+Hypothesis sweeps shapes/params; fixed tests pin the algebraic invariants.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import scd_local_solve_ref, objective_ref
+from compile.kernels.scd_kernel import scd_local_solve, vmem_footprint_bytes
+
+
+def make_problem(m, nk, h_max, seed, density=1.0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, nk)).astype(np.float32)
+    if density < 1.0:
+        mask = rng.random((m, nk)) < density
+        a = (a * mask).astype(np.float32)
+    col_sq = (a * a).sum(axis=0).astype(np.float32)
+    alpha = (rng.standard_normal(nk) * 0.1).astype(np.float32)
+    b = rng.standard_normal(m).astype(np.float32)
+    v = (a @ alpha).astype(np.float32)
+    idx = rng.integers(0, nk, size=h_max).astype(np.int32)
+    return a, col_sq, alpha, v, b, idx
+
+
+def run_both(prob, h, lam_n, eta, sigma):
+    got = scd_local_solve(*prob, h, lam_n, eta, sigma)
+    want = scd_local_solve_ref(
+        *prob, jnp.int32(h), jnp.float32(lam_n), jnp.float32(eta), jnp.float32(sigma)
+    )
+    return got, want
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("m,nk,h", [(8, 4, 6), (16, 16, 32), (32, 8, 20), (64, 48, 100)])
+    def test_matches_ref_ridge(self, m, nk, h):
+        prob = make_problem(m, nk, max(h, 1), seed=m * 1000 + nk)
+        (da, dv), (da_r, dv_r) = run_both(prob, h, 0.5, 1.0, 2.0)
+        np.testing.assert_allclose(da, da_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(dv, dv_r, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("eta", [0.0, 0.25, 0.5, 0.9, 1.0])
+    def test_matches_ref_elastic_net(self, eta):
+        prob = make_problem(24, 12, 40, seed=7)
+        (da, dv), (da_r, dv_r) = run_both(prob, 40, 1.0, eta, 3.0)
+        np.testing.assert_allclose(da, da_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(dv, dv_r, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(2, 40),
+        nk=st.integers(1, 32),
+        h=st.integers(0, 64),
+        lam=st.floats(1e-3, 10.0),
+        eta=st.floats(0.0, 1.0),
+        sigma=st.floats(0.5, 8.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_hypothesis(self, m, nk, h, lam, eta, sigma, seed):
+        prob = make_problem(m, nk, max(h, 1), seed=seed)
+        (da, dv), (da_r, dv_r) = run_both(prob, h, lam, eta, sigma)
+        np.testing.assert_allclose(da, da_r, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(dv, dv_r, rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(density=st.floats(0.05, 0.9), seed=st.integers(0, 2**16))
+    def test_sparse_data(self, density, seed):
+        prob = make_problem(32, 16, 48, seed=seed, density=density)
+        (da, dv), (da_r, dv_r) = run_both(prob, 48, 0.1, 1.0, 2.0)
+        np.testing.assert_allclose(da, da_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(dv, dv_r, rtol=1e-4, atol=1e-4)
+
+
+class TestAlgebraicInvariants:
+    def test_h_zero_is_noop(self):
+        prob = make_problem(16, 8, 4, seed=1)
+        da, dv = scd_local_solve(*prob, 0, 0.5, 1.0, 2.0)
+        assert np.all(np.asarray(da) == 0.0)
+        assert np.all(np.asarray(dv) == 0.0)
+
+    def test_delta_v_equals_a_delta_alpha(self):
+        prob = make_problem(32, 16, 64, seed=3)
+        a = prob[0]
+        da, dv = scd_local_solve(*prob, 64, 0.5, 1.0, 2.0)
+        np.testing.assert_allclose(np.asarray(dv), a @ np.asarray(da), rtol=1e-4, atol=1e-4)
+
+    def test_padding_columns_untouched(self):
+        """Zero-padded columns (col_sq == 0) must keep alpha and v unchanged."""
+        m, nk, pad, h = 16, 8, 5, 40
+        a, col_sq, alpha, v, b, idx = make_problem(m, nk, h, seed=11)
+        a_p = np.concatenate([a, np.zeros((m, pad), np.float32)], axis=1)
+        col_p = np.concatenate([col_sq, np.zeros(pad, np.float32)])
+        alpha_p = np.concatenate([alpha, np.zeros(pad, np.float32)])
+        rng = np.random.default_rng(0)
+        idx_p = rng.integers(0, nk + pad, size=h).astype(np.int32)  # hits padding
+        da, dv = scd_local_solve(a_p, col_p, alpha_p, v, b, idx_p, h, 0.5, 1.0, 2.0)
+        assert np.all(np.asarray(da)[nk:] == 0.0)
+        # And the non-padded result equals running with padding indices skipped.
+        kept = idx_p[idx_p < nk]
+        idx_ref = np.concatenate([kept, np.zeros(h - len(kept), np.int32)])
+        da_r, dv_r = scd_local_solve(a, col_sq, alpha, v, b, idx_ref, len(kept), 0.5, 1.0, 2.0)
+        np.testing.assert_allclose(np.asarray(da)[:nk], da_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(dv, dv_r, rtol=1e-5, atol=1e-5)
+
+    def test_subproblem_objective_decreases(self):
+        """Each SCD pass must not increase the global objective (K=1, sigma=1)."""
+        m, nk = 32, 16
+        a, col_sq, alpha, v, b, idx = make_problem(m, nk, nk, seed=5)
+        lam_n, eta = 0.5, 1.0
+        prev = float(objective_ref(a, b, alpha, lam_n, eta))
+        for it in range(5):
+            rng = np.random.default_rng(it)
+            idx = rng.permutation(nk).astype(np.int32)
+            da, dv = scd_local_solve(a, col_sq, alpha, v, b, idx, nk, lam_n, eta, 1.0)
+            alpha = alpha + np.asarray(da)
+            v = v + np.asarray(dv)
+            cur = float(objective_ref(a, b, alpha, lam_n, eta))
+            assert cur <= prev + 1e-4, f"objective increased at pass {it}: {prev} -> {cur}"
+            prev = cur
+
+    def test_converges_to_ridge_solution(self):
+        """K=1, sigma=1, eta=1: SCD must converge to the closed-form ridge solution."""
+        m, nk = 24, 8
+        a, col_sq, alpha, v, b, _ = make_problem(m, nk, nk, seed=9)
+        lam_n = 1.0
+        for it in range(200):
+            rng = np.random.default_rng(it)
+            idx = rng.permutation(nk).astype(np.int32)
+            da, dv = scd_local_solve(a, col_sq, alpha, v, b, idx, nk, lam_n, 1.0, 1.0)
+            alpha = alpha + np.asarray(da)
+            v = v + np.asarray(dv)
+        closed = np.linalg.solve(a.T @ a + lam_n * np.eye(nk), a.T @ b)
+        np.testing.assert_allclose(alpha, closed.astype(np.float32), rtol=1e-3, atol=1e-3)
+
+    def test_lasso_soft_threshold_sparsifies(self):
+        """eta=0 with large lambda must drive coordinates exactly to zero."""
+        a, col_sq, alpha, v, b, _ = make_problem(16, 8, 8, seed=13)
+        lam_n = 50.0
+        for it in range(30):
+            rng = np.random.default_rng(it)
+            idx = rng.permutation(8).astype(np.int32)
+            da, dv = scd_local_solve(a, col_sq, alpha, v, b, idx, 8, lam_n, 0.0, 1.0)
+            alpha = alpha + np.asarray(da)
+            v = v + np.asarray(dv)
+        assert np.sum(np.abs(alpha) < 1e-7) >= 6, f"expected sparsity, got {alpha}"
+
+
+class TestVmemEstimate:
+    def test_default_artifact_fits_vmem(self):
+        assert vmem_footprint_bytes(512, 512, 4096) < 16 * 1024 * 1024
+
+    def test_monotone_in_shape(self):
+        assert vmem_footprint_bytes(512, 512, 64) < vmem_footprint_bytes(1024, 512, 64)
+        assert vmem_footprint_bytes(512, 512, 64) < vmem_footprint_bytes(512, 1024, 64)

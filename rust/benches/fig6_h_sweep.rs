@@ -1,0 +1,24 @@
+//! End-to-end bench: regenerate paper Figure 6 at reduced scale and time it.
+//!
+//! `cargo bench --bench fig6_*` — the full-scale regeneration is
+//! `sparkbench figure 6`; this bench keeps CI latency bounded while
+//! exercising the identical code path.
+
+use sparkbench::bench::{render_results, Bencher};
+use sparkbench::experiments::{run_figure, ExpOptions};
+
+fn main() {
+    let mut opts = ExpOptions::default();
+    opts.scale = "512,4096,48".into();
+    opts.workers = 4;
+    opts.seeds = 1;
+    opts.out_dir = std::env::temp_dir().join("sparkbench_bench_results");
+    let b = Bencher::quick();
+    let stats = b.run("figure 6 (reduced scale)", || {
+        run_figure(6, &opts).expect("figure 6")
+    });
+    // Print the last rendition so the bench output carries the series.
+    let out = run_figure(6, &opts).unwrap();
+    println!("{}", out);
+    println!("{}", render_results("figure 6", &[stats]));
+}

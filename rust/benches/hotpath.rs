@@ -1,0 +1,114 @@
+//! Hot-path micro-benchmarks: the kernels the §Perf pass optimizes.
+//!
+//! Run with `cargo bench --bench hotpath`.
+
+use sparkbench::bench::{render_results, Bencher};
+use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+use sparkbench::data::WorkerData;
+use sparkbench::framework::serialization::{JavaSer, PickleSer};
+use sparkbench::linalg;
+use sparkbench::solver::{scd::NativeScd, LocalSolver, SolveRequest};
+
+fn main() {
+    let b = Bencher::default();
+    let mut results = Vec::new();
+
+    // Sparse dot / axpy — one call per SCD step, THE hot pair.
+    let ds = webspam_like(&SyntheticSpec::webspam_mini());
+    let (ri, vs) = ds.a.col(100);
+    let dense = vec![1.0; ds.m()];
+    results.push(b.run("dot_indexed (1 col)", || {
+        linalg::dot_indexed(ri, vs, &dense)
+    }));
+    let mut dense_mut = vec![1.0; ds.m()];
+    results.push(b.run("axpy_indexed (1 col)", || {
+        linalg::axpy_indexed(0.5, ri, vs, &mut dense_mut);
+    }));
+    results.push(b.run("dot_indexed_fused (1 col)", || {
+        linalg::dot_indexed_fused(ri, vs, &dense)
+    }));
+
+    // Full local solve, H = n_local (one worker round).
+    let cols: Vec<u32> = (0..(ds.n() as u32 / 8)).collect();
+    let wd = WorkerData::from_columns(&ds.a, &cols);
+    let alpha = vec![0.0; wd.n_local()];
+    let v = vec![0.0; ds.m()];
+    let mut solver = NativeScd::new();
+    let req = SolveRequest {
+        v: &v,
+        b: &ds.b,
+        h: wd.n_local(),
+        lam_n: 1.0,
+        eta: 1.0,
+        sigma: 8.0,
+        seed: 1,
+    };
+    results.push(b.run("native_scd round (H=n_local)", || {
+        solver.solve(&wd, &alpha, &req)
+    }));
+
+    // AllReduce aggregation (master hot loop).
+    let delta: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64; ds.m()]).collect();
+    results.push(b.run("allreduce agg (K=8, m=2048)", || {
+        let mut agg = vec![0.0; ds.m()];
+        for d in &delta {
+            linalg::add_assign(&mut agg, d);
+        }
+        agg
+    }));
+
+    // Serialization codecs (real byte work on the communicated vectors).
+    let payload = vec![1.5f64; ds.m()];
+    results.push(b.run("java ser+deser (m=2048)", || {
+        JavaSer::decode(&JavaSer::encode(&payload)).unwrap()
+    }));
+    results.push(b.run("pickle ser+deser (m=2048)", || {
+        PickleSer::decode(&PickleSer::encode(&payload)).unwrap()
+    }));
+
+    // Dataset objective (suboptimality tracking cost) — O(nnz) matvec path
+    // vs the O(m+n) tracked-v path the coordinator uses (§Perf).
+    let alpha_full = vec![0.01; ds.n()];
+    results.push(b.run("objective (O(nnz) matvec)", || {
+        ds.objective(&alpha_full, 1.0, 1.0)
+    }));
+    let v_full = ds.shared_vector(&alpha_full);
+    results.push(b.run("objective_given_v (O(m+n))", || {
+        ds.objective_given_v(&v_full, &alpha_full, 1.0, 1.0)
+    }));
+
+    // PJRT-executed Pallas kernel round (needs `make artifacts`).
+    use sparkbench::runtime::{Manifest, PjrtRuntime};
+    use sparkbench::solver::pjrt::PjrtScd;
+    use std::sync::Arc;
+    match Manifest::load(&Manifest::default_dir()) {
+        Ok(man) => {
+            let rt = PjrtRuntime::cpu().expect("pjrt client");
+            let exec = Arc::new(rt.load_local_solve(&man).expect("compile"));
+            let mut spec = sparkbench::data::synthetic::SyntheticSpec::pjrt_default();
+            spec.m = man.m;
+            spec.n = man.nk;
+            let pds = webspam_like(&spec);
+            let cols: Vec<u32> = (0..man.nk as u32).collect();
+            let pwd = WorkerData::from_columns(&pds.a, &cols);
+            let palpha = vec![0.0; pwd.n_local()];
+            let pv = vec![0.0; pds.m()];
+            let mut psolver = PjrtScd::new(exec);
+            let preq = SolveRequest {
+                v: &pv,
+                b: &pds.b,
+                h: pwd.n_local().min(man.h_max),
+                lam_n: 10.0,
+                eta: 1.0,
+                sigma: 4.0,
+                seed: 1,
+            };
+            results.push(b.run("pjrt_scd round (H=n_local, artifact)", || {
+                psolver.solve(&pwd, &palpha, &preq)
+            }));
+        }
+        Err(_) => eprintln!("(artifacts missing — skipping pjrt bench; run `make artifacts`)"),
+    }
+
+    println!("{}", render_results("hotpath", &results));
+}

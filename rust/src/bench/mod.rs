@@ -1,0 +1,155 @@
+//! Mini-criterion: the benchmark harness used by `cargo bench` targets
+//! (criterion is unavailable in the offline build image — DESIGN.md
+//! §Offline-toolchain substitution).
+//!
+//! Provides warmup, adaptive iteration counts, and mean/median/stddev
+//! reporting, plus a suite runner that renders a results table and writes
+//! CSV next to the paper-figure outputs.
+
+use std::time::Instant;
+
+use crate::linalg;
+
+/// Statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Minimum measurement time per benchmark.
+    pub min_time_s: f64,
+    /// Max samples to collect.
+    pub max_samples: usize,
+    /// Warmup iterations.
+    pub warmup: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            min_time_s: 0.5,
+            max_samples: 50,
+            warmup: 2,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for slow end-to-end benches (figure regenerations).
+    pub fn quick() -> Bencher {
+        Bencher {
+            min_time_s: 0.0,
+            max_samples: 3,
+            warmup: 0,
+        }
+    }
+
+    /// Run `f` repeatedly, returning timing statistics. The closure's
+    /// return value is black-boxed so the optimizer cannot elide work.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() >= self.max_samples
+                || (samples.len() >= 3 && start.elapsed().as_secs_f64() > self.min_time_s)
+            {
+                break;
+            }
+        }
+        BenchStats {
+            name: name.to_string(),
+            samples: samples.len(),
+            mean_s: linalg::mean(&samples),
+            median_s: linalg::median(&samples),
+            stddev_s: linalg::stddev(&samples),
+            min_s: samples.iter().cloned().fold(f64::MAX, f64::min),
+            max_s: samples.iter().cloned().fold(f64::MIN, f64::max),
+        }
+    }
+}
+
+/// Render a set of results as a table (used by every bench binary).
+pub fn render_results(title: &str, stats: &[BenchStats]) -> String {
+    let mut t = crate::metrics::Table::new(&["benchmark", "samples", "mean", "median", "stddev"]);
+    for s in stats {
+        t.row(vec![
+            s.name.clone(),
+            s.samples.to_string(),
+            crate::util::fmt_duration(s.mean_s),
+            crate::util::fmt_duration(s.median_s),
+            crate::util::fmt_duration(s.stddev_s),
+        ]);
+    }
+    format!("== {} ==\n{}", title, t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_positive_time() {
+        let b = Bencher {
+            min_time_s: 10.0, // never trips → runs to max_samples
+            max_samples: 5,
+            warmup: 1,
+        };
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(s.samples, 5);
+        assert!(s.mean_s > 0.0);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let b = Bencher {
+            min_time_s: 0.0,
+            max_samples: 8,
+            warmup: 0,
+        };
+        let s = b.run("noop", || 1 + 1);
+        assert!(s.mean_s >= 0.0);
+        assert!(s.stddev_s >= 0.0);
+        assert!(s.throughput_per_s() > 0.0);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let b = Bencher::quick();
+        let s = b.run("x", || 0);
+        let out = render_results("suite", &[s]);
+        assert!(out.contains("suite"));
+        assert!(out.contains("| x"));
+    }
+}

@@ -1,0 +1,287 @@
+//! Run configuration: the five paper implementations, solver kinds and the
+//! training hyper-parameters (λ, η, H, K, σ′).
+
+use crate::data::{Dataset, Partitioner};
+
+/// The implementations compared by the paper (§4.1), plus the two optimized
+/// variants of §5.3 and an MLlib-style baseline (§5.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Impl {
+    /// (A) Spark, Scala local solver (Breeze).
+    SparkScala,
+    /// (B) Spark + compiled native local solver via JNI, flat partitions.
+    SparkC,
+    /// (B)* = (B) + persistent local memory + meta-RDD (§5.3).
+    SparkCOpt,
+    /// (C) pySpark, NumPy local solver.
+    PySpark,
+    /// (D) pySpark + compiled native local solver via Python-C API.
+    PySparkC,
+    /// (D)* = (D) + persistent local memory + meta-RDD (§5.3).
+    PySparkCOpt,
+    /// (E) MPI, all C++.
+    Mpi,
+    /// MLlib-style mini-batch SGD solver on pySpark (Figure 5 baseline).
+    MllibSgd,
+}
+
+impl Impl {
+    pub const ALL_PAPER: [Impl; 5] = [
+        Impl::SparkScala,
+        Impl::SparkC,
+        Impl::PySpark,
+        Impl::PySparkC,
+        Impl::Mpi,
+    ];
+
+    pub const ALL: [Impl; 8] = [
+        Impl::SparkScala,
+        Impl::SparkC,
+        Impl::SparkCOpt,
+        Impl::PySpark,
+        Impl::PySparkC,
+        Impl::PySparkCOpt,
+        Impl::Mpi,
+        Impl::MllibSgd,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Impl::SparkScala => "A:spark",
+            Impl::SparkC => "B:spark+c",
+            Impl::SparkCOpt => "B*:spark+c-opt",
+            Impl::PySpark => "C:pyspark",
+            Impl::PySparkC => "D:pyspark+c",
+            Impl::PySparkCOpt => "D*:pyspark+c-opt",
+            Impl::Mpi => "E:mpi",
+            Impl::MllibSgd => "mllib-sgd",
+        }
+    }
+
+    /// Parse friendly aliases used on the CLI.
+    pub fn parse(s: &str) -> Option<Impl> {
+        match s.to_ascii_lowercase().as_str() {
+            "a" | "spark" | "spark-scala" => Some(Impl::SparkScala),
+            "b" | "spark+c" | "spark-c" => Some(Impl::SparkC),
+            "b*" | "bstar" | "spark+c-opt" => Some(Impl::SparkCOpt),
+            "c" | "pyspark" => Some(Impl::PySpark),
+            "d" | "pyspark+c" | "pyspark-c" => Some(Impl::PySparkC),
+            "d*" | "dstar" | "pyspark+c-opt" => Some(Impl::PySparkCOpt),
+            "e" | "mpi" => Some(Impl::Mpi),
+            "mllib" | "mllib-sgd" => Some(Impl::MllibSgd),
+            _ => None,
+        }
+    }
+
+    /// Does this implementation use the compiled native local solver?
+    /// (The "+C" variants and MPI share identical solver code — §4.1 note.)
+    pub fn uses_native_solver(&self) -> bool {
+        !matches!(self, Impl::SparkScala | Impl::PySpark)
+    }
+
+    /// Can worker-local state (α_[k]) persist across rounds? True only for
+    /// MPI and the §5.3 persistent-local-memory variants: vanilla Spark has
+    /// no persistent worker variables, so α must round-trip every stage.
+    pub fn has_persistent_local_state(&self) -> bool {
+        matches!(self, Impl::Mpi | Impl::SparkCOpt | Impl::PySparkCOpt)
+    }
+
+    /// Meta-RDD mode (§5.3): RDD holds only metadata; data lives in native
+    /// memory, eliminating per-record (de)serialization at task boundaries.
+    pub fn uses_meta_rdd(&self) -> bool {
+        matches!(self, Impl::SparkCOpt | Impl::PySparkCOpt)
+    }
+}
+
+/// Which local-solver implementation a worker runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Compiled native SCD (the paper's C++ module; rust here).
+    NativeScd,
+    /// Scala/Breeze-like managed-runtime SCD (measured slowdown vs native).
+    ManagedScala,
+    /// Python/NumPy-like SCD (measured slowdown vs native).
+    ManagedPython,
+    /// Mini-batch SGD (the MLlib LinearRegressionWithSGD stand-in).
+    MiniBatchSgd,
+    /// PJRT-executed Pallas artifact (the L1/L2 path).
+    Pjrt,
+}
+
+impl SolverKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::NativeScd => "native-scd",
+            SolverKind::ManagedScala => "managed-scala",
+            SolverKind::ManagedPython => "managed-python",
+            SolverKind::MiniBatchSgd => "minibatch-sgd",
+            SolverKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// The solver an implementation runs in the paper's setup.
+    pub fn for_impl(imp: Impl) -> SolverKind {
+        match imp {
+            Impl::SparkScala => SolverKind::ManagedScala,
+            Impl::PySpark => SolverKind::ManagedPython,
+            Impl::MllibSgd => SolverKind::MiniBatchSgd,
+            _ => SolverKind::NativeScd,
+        }
+    }
+}
+
+/// Training hyper-parameters and run controls.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Number of workers K.
+    pub workers: usize,
+    /// Effective regularizer λ·n (DESIGN.md §5 objective).
+    pub lam_n: f64,
+    /// Elastic-net mix η (1 = ridge, the paper's experiment).
+    pub eta: f64,
+    /// Local steps per round, as a fraction of n_local (the paper sweeps
+    /// H relative to n_local; `h_abs` overrides when Some).
+    pub h_frac: f64,
+    /// Absolute H override.
+    pub h_abs: Option<usize>,
+    /// CoCoA aggregation parameter γ ∈ (0,1]; σ′ = γ·K ("adding" = 1).
+    pub gamma: f64,
+    /// Stop when suboptimality ≤ this (paper: 1e-3).
+    pub target_subopt: f64,
+    /// Hard round cap.
+    pub max_rounds: usize,
+    /// Partitioner for the column distribution.
+    pub partitioner: Partitioner,
+    /// RNG seed (coordinate sampling, partitioning).
+    pub seed: u64,
+    /// Evaluate the objective every so many rounds (1 = every round).
+    pub eval_every: usize,
+}
+
+impl TrainConfig {
+    /// Paper-like defaults for a dataset: 8 workers, λ chosen so the
+    /// problem is well-conditioned at this scale, ridge, H = n_local.
+    pub fn default_for(ds: &Dataset) -> TrainConfig {
+        TrainConfig {
+            workers: 8,
+            lam_n: 1e-2 * ds.n() as f64,
+            eta: 1.0,
+            h_frac: 1.0,
+            h_abs: None,
+            gamma: 1.0,
+            target_subopt: 1e-3,
+            max_rounds: 400,
+            partitioner: Partitioner::BalancedNnz,
+            seed: 42,
+            eval_every: 1,
+        }
+    }
+
+    /// σ′ = γ·K (CoCoA⁺ "adding" default).
+    pub fn sigma(&self) -> f64 {
+        self.gamma * self.workers as f64
+    }
+
+    /// Resolve H for a worker with `n_local` columns.
+    pub fn h_for(&self, n_local: usize) -> usize {
+        match self.h_abs {
+            Some(h) => h.max(1),
+            None => ((self.h_frac * n_local as f64).round() as usize).max(1),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 {
+            return Err("workers must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.eta) {
+            return Err(format!("eta {} outside [0,1]", self.eta));
+        }
+        if self.lam_n <= 0.0 {
+            return Err("lam_n must be > 0".into());
+        }
+        if self.gamma <= 0.0 || self.gamma > 1.0 {
+            return Err(format!("gamma {} outside (0,1]", self.gamma));
+        }
+        if self.h_frac <= 0.0 && self.h_abs.is_none() {
+            return Err("H must be positive".into());
+        }
+        if self.eval_every == 0 {
+            return Err("eval_every must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{webspam_like, SyntheticSpec};
+
+    #[test]
+    fn impl_parse_roundtrip() {
+        for imp in Impl::ALL {
+            // name() prefix before ':' parses back (A, B, B*, ...)
+            let short = imp.name().split(':').next().unwrap();
+            assert_eq!(Impl::parse(short), Some(imp), "{}", short);
+        }
+        assert_eq!(Impl::parse("MPI"), Some(Impl::Mpi));
+        assert!(Impl::parse("flink").is_none());
+    }
+
+    #[test]
+    fn solver_mapping_matches_paper() {
+        assert_eq!(SolverKind::for_impl(Impl::SparkScala), SolverKind::ManagedScala);
+        assert_eq!(SolverKind::for_impl(Impl::PySpark), SolverKind::ManagedPython);
+        for imp in [Impl::SparkC, Impl::PySparkC, Impl::Mpi, Impl::SparkCOpt, Impl::PySparkCOpt] {
+            assert_eq!(SolverKind::for_impl(imp), SolverKind::NativeScd);
+        }
+    }
+
+    #[test]
+    fn persistence_flags() {
+        assert!(Impl::Mpi.has_persistent_local_state());
+        assert!(Impl::SparkCOpt.has_persistent_local_state());
+        assert!(!Impl::SparkC.has_persistent_local_state());
+        assert!(Impl::PySparkCOpt.uses_meta_rdd());
+        assert!(!Impl::Mpi.uses_meta_rdd());
+    }
+
+    #[test]
+    fn h_resolution() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        assert_eq!(cfg.h_for(100), 100);
+        cfg.h_frac = 0.2;
+        assert_eq!(cfg.h_for(100), 20);
+        cfg.h_abs = Some(7);
+        assert_eq!(cfg.h_for(100), 7);
+        cfg.h_frac = 1e-9;
+        cfg.h_abs = None;
+        assert_eq!(cfg.h_for(100), 1); // clamped to >= 1
+    }
+
+    #[test]
+    fn validation() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.validate().unwrap();
+        cfg.eta = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.eta = 1.0;
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        cfg.workers = 4;
+        cfg.gamma = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn sigma_is_gamma_k() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 8;
+        cfg.gamma = 0.5;
+        assert_eq!(cfg.sigma(), 4.0);
+    }
+}

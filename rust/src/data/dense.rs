@@ -1,0 +1,128 @@
+//! Dense column-major matrix — the layout the L1 Pallas kernel consumes.
+//!
+//! The PJRT local-solve artifact is compiled for a fixed `[m, nk]` f32
+//! block; [`DenseMatrix::padded_f32`] zero-pads a worker partition up to
+//! the compiled shape (padding columns have zero norm, which the kernel
+//! provably ignores — see `python/tests/test_kernel.py`).
+
+use super::sparse::CscMatrix;
+
+/// Column-major dense matrix (f64; converted to f32 at the PJRT boundary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    pub m: usize,
+    pub n: usize,
+    /// Column-major data, length m*n.
+    pub data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(m: usize, n: usize) -> DenseMatrix {
+        DenseMatrix {
+            m,
+            n,
+            data: vec![0.0; m * n],
+        }
+    }
+
+    pub fn from_csc(a: &CscMatrix) -> DenseMatrix {
+        DenseMatrix {
+            m: a.m,
+            n: a.n,
+            data: a.to_dense_cols(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[c * self.m + r]
+    }
+
+    #[inline]
+    pub fn col(&self, c: usize) -> &[f64] {
+        &self.data[c * self.m..(c + 1) * self.m]
+    }
+
+    /// `A @ x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut out = vec![0.0; self.m];
+        for c in 0..self.n {
+            crate::linalg::axpy(x[c], self.col(c), &mut out);
+        }
+        out
+    }
+
+    /// Zero-pad to `[m_pad, n_pad]` **row-major** f32 — exactly the literal
+    /// layout the XLA CPU client expects for the artifact's `a` parameter.
+    pub fn padded_f32_row_major(&self, m_pad: usize, n_pad: usize) -> Vec<f32> {
+        assert!(m_pad >= self.m && n_pad >= self.n, "pad smaller than data");
+        let mut out = vec![0.0f32; m_pad * n_pad];
+        for r in 0..self.m {
+            for c in 0..self.n {
+                out[r * n_pad + c] = self.at(r, c) as f32;
+            }
+        }
+        out
+    }
+}
+
+/// Zero-pad a vector to `len` as f32.
+pub fn padded_vec_f32(v: &[f64], len: usize) -> Vec<f32> {
+    assert!(len >= v.len());
+    let mut out = vec![0.0f32; len];
+    for (o, &x) in out.iter_mut().zip(v.iter()) {
+        *o = x as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csc_conversion_and_access() {
+        let a = CscMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (1, 1, 2.0)]);
+        let d = DenseMatrix::from_csc(&a);
+        assert_eq!(d.at(0, 0), 1.0);
+        assert_eq!(d.at(1, 0), 0.0);
+        assert_eq!(d.at(1, 1), 2.0);
+        assert_eq!(d.col(1), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn matvec_matches_sparse() {
+        let a = CscMatrix::from_triplets(3, 2, &[(0, 0, 1.0), (2, 0, 4.0), (1, 1, 3.0)]);
+        let d = DenseMatrix::from_csc(&a);
+        let x = vec![2.0, -1.0];
+        assert_eq!(d.matvec(&x), a.matvec(&x));
+    }
+
+    #[test]
+    fn padding_layout() {
+        // A = [[1, 3], [2, 4]] col-major data [1,2,3,4]; padded to 3x3 row-major.
+        let d = DenseMatrix {
+            m: 2,
+            n: 2,
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let p = d.padded_f32_row_major(3, 3);
+        assert_eq!(
+            p,
+            vec![1.0, 3.0, 0.0, /* row0 */ 2.0, 4.0, 0.0, /* row1 */ 0.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn vec_padding() {
+        assert_eq!(padded_vec_f32(&[1.0, 2.0], 4), vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_too_small_panics() {
+        let d = DenseMatrix::zeros(4, 4);
+        d.padded_f32_row_major(2, 4);
+    }
+}

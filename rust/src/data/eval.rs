@@ -1,0 +1,155 @@
+//! Model evaluation: prediction and regression quality metrics, plus
+//! train/test splitting — what a downstream user runs after training.
+
+use super::sparse::CscMatrix;
+use super::Dataset;
+use crate::linalg::Xorshift128;
+
+/// Predictions `ŷ = Aα` for a dataset (same column space as training).
+pub fn predict(a: &CscMatrix, alpha: &[f64]) -> Vec<f64> {
+    a.matvec(alpha)
+}
+
+/// Root-mean-square error between predictions and labels.
+pub fn rmse(pred: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let mse: f64 = pred
+        .iter()
+        .zip(labels.iter())
+        .map(|(p, y)| (p - y) * (p - y))
+        .sum::<f64>()
+        / pred.len() as f64;
+    mse.sqrt()
+}
+
+/// Coefficient of determination R².
+pub fn r2(pred: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    let mean = crate::linalg::mean(labels);
+    let ss_tot: f64 = labels.iter().map(|y| (y - mean) * (y - mean)).sum();
+    let ss_res: f64 = pred
+        .iter()
+        .zip(labels.iter())
+        .map(|(p, y)| (p - y) * (p - y))
+        .sum();
+    if ss_tot <= 0.0 {
+        return if ss_res <= 1e-12 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Split a dataset's *rows* into train/test subsets (features shared).
+/// `test_fraction` of rows go to the test set; deterministic per seed.
+pub fn train_test_split(ds: &Dataset, test_fraction: f64, seed: u64) -> (Dataset, Dataset) {
+    assert!((0.0..1.0).contains(&test_fraction));
+    let m = ds.m();
+    let mut rng = Xorshift128::new(seed);
+    let mut is_test = vec![false; m];
+    for flag in is_test.iter_mut() {
+        *flag = rng.next_f64() < test_fraction;
+    }
+    // Guarantee both sides non-empty for any sane fraction.
+    if !is_test.iter().any(|&t| t) {
+        is_test[0] = true;
+    }
+    if is_test.iter().all(|&t| t) {
+        is_test[0] = false;
+    }
+
+    let build = |keep_test: bool| -> Dataset {
+        let rows: Vec<usize> = (0..m).filter(|&r| is_test[r] == keep_test).collect();
+        let mut remap = vec![usize::MAX; m];
+        for (new, &old) in rows.iter().enumerate() {
+            remap[old] = new;
+        }
+        let mut triplets = Vec::new();
+        for c in 0..ds.n() {
+            let (ri, vs) = ds.a.col(c);
+            for (&r, &v) in ri.iter().zip(vs.iter()) {
+                let nr = remap[r as usize];
+                if nr != usize::MAX {
+                    triplets.push((nr, c, v));
+                }
+            }
+        }
+        Dataset {
+            a: CscMatrix::from_triplets(rows.len(), ds.n(), &triplets),
+            b: rows.iter().map(|&r| ds.b[r]).collect(),
+            name: format!("{}[{}]", ds.name, if keep_test { "test" } else { "train" }),
+        }
+    };
+    (build(false), build(true))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{dense_gaussian, webspam_like, SyntheticSpec};
+
+    #[test]
+    fn perfect_predictions() {
+        let pred = vec![1.0, 2.0, 3.0];
+        assert_eq!(rmse(&pred, &pred), 0.0);
+        assert_eq!(r2(&pred, &pred), 1.0);
+    }
+
+    #[test]
+    fn rmse_hand_computed() {
+        // errors: 1, -1 → mse 1 → rmse 1
+        assert!((rmse(&[2.0, 1.0], &[1.0, 2.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_of_mean_predictor_is_zero() {
+        let labels = vec![1.0, 2.0, 3.0, 4.0];
+        let mean_pred = vec![2.5; 4];
+        assert!(r2(&mean_pred, &labels).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trained_model_beats_zero_model() {
+        let ds = dense_gaussian(60, 12, 3);
+        let (alpha, _) = crate::solver::cg::ridge_optimum(&ds, 0.5, 1e-10, 5000);
+        let pred = predict(&ds.a, &alpha);
+        let zero = vec![0.0; ds.m()];
+        assert!(rmse(&pred, &ds.b) < 0.3 * rmse(&zero, &ds.b));
+        assert!(r2(&pred, &ds.b) > 0.8);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let (train, test) = train_test_split(&ds, 0.25, 7);
+        assert_eq!(train.m() + test.m(), ds.m());
+        assert_eq!(train.n(), ds.n());
+        assert_eq!(test.n(), ds.n());
+        assert_eq!(train.nnz() + test.nnz(), ds.nnz());
+        assert!(test.m() > 0 && train.m() > 0);
+        train.a.validate().unwrap();
+        test.a.validate().unwrap();
+        // Deterministic
+        let (t2, _) = train_test_split(&ds, 0.25, 7);
+        assert_eq!(train.a, t2.a);
+    }
+
+    #[test]
+    fn generalization_on_held_out_rows() {
+        // Training on the train split must generalize to the test split
+        // (labels come from a shared ground-truth model).
+        let ds = webspam_like(&SyntheticSpec::small());
+        let (train, test) = train_test_split(&ds, 0.3, 1);
+        let lam_n = 1e-2 * train.n() as f64;
+        let (alpha, _) = crate::solver::cg::ridge_optimum(&train, lam_n, 1e-10, 20_000);
+        let pred = predict(&test.a, &alpha);
+        let zero = vec![0.0; test.m()];
+        assert!(
+            rmse(&pred, &test.b) < 0.8 * rmse(&zero, &test.b),
+            "no generalization: {} vs baseline {}",
+            rmse(&pred, &test.b),
+            rmse(&zero, &test.b)
+        );
+    }
+}

@@ -1,0 +1,181 @@
+//! LIBSVM format reader/writer.
+//!
+//! webspam and most public sparse-learning corpora ship in this row-major
+//! text format (`label idx:val idx:val ...`, 1-based indices). The reader
+//! streams rows and builds the column-wise CSC the study needs; the writer
+//! round-trips for dataset export and tests.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use super::sparse::CscMatrix;
+use super::Dataset;
+
+/// Parse LIBSVM text into a [`Dataset`]. `n_hint` (optional) pre-declares
+/// the feature count; otherwise it is inferred from the max index seen.
+pub fn parse_libsvm(text: &str, n_hint: Option<usize>) -> Result<Dataset, String> {
+    let mut labels = Vec::new();
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+    let mut max_col = 0usize;
+
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .ok_or_else(|| format!("line {}: empty", lineno + 1))?
+            .parse()
+            .map_err(|e| format!("line {}: bad label: {}", lineno + 1, e))?;
+        let row = labels.len();
+        labels.push(label);
+        for tok in parts {
+            let (is, vs) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("line {}: bad token '{}'", lineno + 1, tok))?;
+            let idx: usize = is
+                .parse()
+                .map_err(|e| format!("line {}: bad index: {}", lineno + 1, e))?;
+            if idx == 0 {
+                return Err(format!("line {}: libsvm indices are 1-based", lineno + 1));
+            }
+            let val: f64 = vs
+                .parse()
+                .map_err(|e| format!("line {}: bad value: {}", lineno + 1, e))?;
+            max_col = max_col.max(idx);
+            triplets.push((row, idx - 1, val));
+        }
+    }
+
+    let m = labels.len();
+    let n = n_hint.unwrap_or(max_col).max(max_col);
+    if m == 0 {
+        return Err("no rows".into());
+    }
+    let a = CscMatrix::from_triplets(m, n, &triplets);
+    Ok(Dataset {
+        a,
+        b: labels,
+        name: "libsvm".into(),
+    })
+}
+
+/// Read a LIBSVM file from disk.
+pub fn read_libsvm(path: &Path, n_hint: Option<usize>) -> Result<Dataset, String> {
+    let f = File::open(path).map_err(|e| format!("open {}: {}", path.display(), e))?;
+    let mut text = String::new();
+    let mut reader = BufReader::new(f);
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => text.push_str(&line),
+            Err(e) => return Err(format!("read {}: {}", path.display(), e)),
+        }
+    }
+    let mut ds = parse_libsvm(&text, n_hint)?;
+    ds.name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    Ok(ds)
+}
+
+/// Serialize a dataset to LIBSVM text (row-major; requires a CSR pass).
+pub fn to_libsvm_string(ds: &Dataset) -> String {
+    // Transpose CSC to per-row lists.
+    let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); ds.m()];
+    for j in 0..ds.n() {
+        let (ri, vs) = ds.a.col(j);
+        for (&r, &v) in ri.iter().zip(vs.iter()) {
+            rows[r as usize].push((j + 1, v));
+        }
+    }
+    let mut out = String::new();
+    for (r, feats) in rows.iter().enumerate() {
+        out.push_str(&format!("{}", ds.b[r]));
+        for &(j, v) in feats {
+            out.push_str(&format!(" {}:{}", j, v));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a dataset to disk in LIBSVM format.
+pub fn write_libsvm(ds: &Dataset, path: &Path) -> Result<(), String> {
+    let f = File::create(path).map_err(|e| format!("create {}: {}", path.display(), e))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(to_libsvm_string(ds).as_bytes())
+        .map_err(|e| format!("write {}: {}", path.display(), e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{webspam_like, SyntheticSpec};
+
+    #[test]
+    fn parse_basic() {
+        let ds = parse_libsvm("1.5 1:2.0 3:4.0\n-1 2:1.0\n", None).unwrap();
+        assert_eq!(ds.m(), 2);
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.b, vec![1.5, -1.0]);
+        assert_eq!(ds.a.col(0), (&[0u32][..], &[2.0][..]));
+        assert_eq!(ds.a.col(2), (&[0u32][..], &[4.0][..]));
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let ds = parse_libsvm("# header\n\n1 1:1\n", None).unwrap();
+        assert_eq!(ds.m(), 1);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse_libsvm("1 0:2.0\n", None).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_libsvm("1 broken\n", None).is_err());
+        assert!(parse_libsvm("notanumber 1:1\n", None).is_err());
+        assert!(parse_libsvm("", None).is_err());
+    }
+
+    #[test]
+    fn n_hint_expands_width() {
+        let ds = parse_libsvm("1 1:1\n", Some(10)).unwrap();
+        assert_eq!(ds.n(), 10);
+    }
+
+    #[test]
+    fn roundtrip_synthetic() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let text = to_libsvm_string(&ds);
+        let back = parse_libsvm(&text, Some(ds.n())).unwrap();
+        assert_eq!(back.m(), ds.m());
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.a.nnz(), ds.a.nnz());
+        // Spot-check a column's values survive the text round trip.
+        let (ri0, vs0) = ds.a.col(5);
+        let (ri1, vs1) = back.a.col(5);
+        assert_eq!(ri0, ri1);
+        for (&a, &b) in vs0.iter().zip(vs1.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let path = std::env::temp_dir().join("sparkbench_libsvm_test.txt");
+        write_libsvm(&ds, &path).unwrap();
+        let back = read_libsvm(&path, Some(ds.n())).unwrap();
+        assert_eq!(back.a.nnz(), ds.a.nnz());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,264 @@
+//! Compressed sparse column matrix — the storage format of the study.
+//!
+//! Column-wise access is the algorithm's access pattern (every SCD step
+//! touches exactly one column), so CSC makes the hot loop a pair of
+//! contiguous slices.
+
+/// CSC matrix with u32 row indices (m < 2^32 always holds here).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscMatrix {
+    /// Rows (datapoints).
+    pub m: usize,
+    /// Columns (features).
+    pub n: usize,
+    /// Column pointers, length n+1.
+    pub col_ptr: Vec<usize>,
+    /// Row indices, length nnz.
+    pub row_idx: Vec<u32>,
+    /// Values, length nnz.
+    pub vals: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Empty matrix of given shape.
+    pub fn zeros(m: usize, n: usize) -> CscMatrix {
+        CscMatrix {
+            m,
+            n,
+            col_ptr: vec![0; n + 1],
+            row_idx: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Build from (row, col, val) triplets (duplicates summed, zero entries kept).
+    pub fn from_triplets(m: usize, n: usize, triplets: &[(usize, usize, f64)]) -> CscMatrix {
+        let mut per_col: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+        for &(r, c, v) in triplets {
+            assert!(r < m && c < n, "triplet ({}, {}) out of {}x{}", r, c, m, n);
+            per_col[c].push((r as u32, v));
+        }
+        let mut col_ptr = Vec::with_capacity(n + 1);
+        let mut row_idx = Vec::new();
+        let mut vals = Vec::new();
+        col_ptr.push(0);
+        for col in per_col.iter_mut() {
+            col.sort_by_key(|&(r, _)| r);
+            // merge duplicates
+            let mut i = 0;
+            while i < col.len() {
+                let r = col[i].0;
+                let mut v = col[i].1;
+                let mut j = i + 1;
+                while j < col.len() && col[j].0 == r {
+                    v += col[j].1;
+                    j += 1;
+                }
+                row_idx.push(r);
+                vals.push(v);
+                i = j;
+            }
+            col_ptr.push(row_idx.len());
+        }
+        CscMatrix {
+            m,
+            n,
+            col_ptr,
+            row_idx,
+            vals,
+        }
+    }
+
+    /// Build from dense column-major data (tests, PJRT conversions).
+    pub fn from_dense_cols(m: usize, n: usize, data: &[f64]) -> CscMatrix {
+        assert_eq!(data.len(), m * n);
+        let mut t = Vec::new();
+        for c in 0..n {
+            for r in 0..m {
+                let v = data[c * m + r];
+                if v != 0.0 {
+                    t.push((r, c, v));
+                }
+            }
+        }
+        CscMatrix::from_triplets(m, n, &t)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Column j as (row indices, values) slices.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let lo = self.col_ptr[j];
+        let hi = self.col_ptr[j + 1];
+        (&self.row_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// nnz of column j.
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// `A @ x` (x over columns) → length-m vector.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut out = vec![0.0; self.m];
+        for j in 0..self.n {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            let (ri, vs) = self.col(j);
+            crate::linalg::axpy_indexed(xj, ri, vs, &mut out);
+        }
+        out
+    }
+
+    /// `A^T @ y` (y over rows) → length-n vector.
+    pub fn matvec_t(&self, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.m);
+        (0..self.n)
+            .map(|j| {
+                let (ri, vs) = self.col(j);
+                crate::linalg::dot_indexed(ri, vs, y)
+            })
+            .collect()
+    }
+
+    /// Squared norms of all columns.
+    pub fn col_sq_norms(&self) -> Vec<f64> {
+        (0..self.n)
+            .map(|j| {
+                let (_, vs) = self.col(j);
+                crate::linalg::nrm2_sq(vs)
+            })
+            .collect()
+    }
+
+    /// Densify (column-major); test/PJRT-padding helper.
+    pub fn to_dense_cols(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.m * self.n];
+        for j in 0..self.n {
+            let (ri, vs) = self.col(j);
+            for (&r, &v) in ri.iter().zip(vs.iter()) {
+                out[j * self.m + r as usize] = v;
+            }
+        }
+        out
+    }
+
+    /// Density in [0, 1].
+    pub fn density(&self) -> f64 {
+        if self.m == 0 || self.n == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.m * self.n) as f64
+        }
+    }
+
+    /// Structural validation (used by property tests and the loaders).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.col_ptr.len() != self.n + 1 {
+            return Err(format!("col_ptr len {} != n+1", self.col_ptr.len()));
+        }
+        if self.col_ptr[0] != 0 || *self.col_ptr.last().unwrap() != self.nnz() {
+            return Err("col_ptr endpoints wrong".into());
+        }
+        if self.row_idx.len() != self.vals.len() {
+            return Err("row_idx/vals length mismatch".into());
+        }
+        for j in 0..self.n {
+            if self.col_ptr[j] > self.col_ptr[j + 1] {
+                return Err(format!("col_ptr not monotone at {}", j));
+            }
+            let (ri, _) = self.col(j);
+            for w in ri.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("rows not strictly sorted in col {}", j));
+                }
+            }
+            if let Some(&last) = ri.last() {
+                if last as usize >= self.m {
+                    return Err(format!("row {} out of bounds in col {}", last, j));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CscMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        CscMatrix::from_triplets(
+            3,
+            3,
+            &[(0, 0, 1.0), (2, 0, 4.0), (1, 1, 3.0), (0, 2, 2.0), (2, 2, 5.0)],
+        )
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let a = sample();
+        assert_eq!(a.nnz(), 5);
+        assert_eq!(a.col(0), (&[0u32, 2][..], &[1.0, 4.0][..]));
+        assert_eq!(a.col(1), (&[1u32][..], &[3.0][..]));
+        assert_eq!(a.col_nnz(2), 2);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn duplicate_triplets_summed() {
+        let a = CscMatrix::from_triplets(2, 1, &[(0, 0, 1.0), (0, 0, 2.5)]);
+        assert_eq!(a.col(0), (&[0u32][..], &[3.5][..]));
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let a = sample();
+        assert_eq!(a.matvec(&[1.0, 1.0, 1.0]), vec![3.0, 3.0, 9.0]);
+        assert_eq!(a.matvec(&[0.0, 0.0, 0.0]), vec![0.0, 0.0, 0.0]);
+        assert_eq!(a.matvec_t(&[1.0, 1.0, 1.0]), vec![5.0, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let a = sample();
+        let d = a.to_dense_cols();
+        let back = CscMatrix::from_dense_cols(3, 3, &d);
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn col_norms_and_density() {
+        let a = sample();
+        assert_eq!(a.col_sq_norms(), vec![17.0, 9.0, 29.0]);
+        assert!((a.density() - 5.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut a = sample();
+        a.row_idx[0] = 99;
+        assert!(a.validate().is_err());
+        let mut b = sample();
+        b.col_ptr[1] = 5;
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn zeros_matrix() {
+        let a = CscMatrix::zeros(4, 3);
+        assert_eq!(a.nnz(), 0);
+        assert_eq!(a.matvec(&[1.0; 3]), vec![0.0; 4]);
+        a.validate().unwrap();
+    }
+}

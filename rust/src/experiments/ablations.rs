@@ -1,0 +1,300 @@
+//! Ablations of the design choices DESIGN.md calls out.
+//!
+//! * `layout` — flat vs record partitions for Spark+C (the paper's §4.1-B
+//!   flattening trick: "this flat data format ... reduces overheads by a
+//!   factor of 3" for Scala).
+//! * `partitioner` — the paper's balanced-nnz MPI load balancer vs Spark
+//!   range partitioning ("was found to perform comparable").
+//! * `minibatch-cd` — CoCoA's immediate local updates vs classical
+//!   mini-batch CD (§2.1).
+//! * `adaptive-h` — the conclusion's future-work feature: auto-adapting H
+//!   vs grid-tuned H.
+//! * `gamma` — adding (γ=1) vs averaging (γ=1/K) aggregation (CoCoA⁺).
+
+use super::common::{make_engine, ExpOptions};
+use crate::config::{Impl, TrainConfig};
+use crate::coordinator::{self, run_fixed_rounds, tuner};
+use crate::data::{Partitioner, Partitioning};
+use crate::framework::{build_engine_with, LayoutOverride};
+use crate::metrics::Table;
+
+pub fn layout(opts: &ExpOptions) -> String {
+    let ds = opts.dataset();
+    let mut cfg = opts.config(&ds);
+    cfg.h_frac = 1.0;
+    let mut out = String::from("Ablation: flat vs record partition layout for (B) spark+c\n\n");
+    let mut table = Table::new(&["layout", "T_overhead (s)", "T_tot (s)"]);
+    let mut csv = String::from("layout,t_overhead,t_tot\n");
+    for (name, layout) in [
+        ("flat (paper B)", LayoutOverride::Flat),
+        ("records (un-flattened)", LayoutOverride::Records),
+    ] {
+        let mut eopts = opts.engine_options();
+        eopts.force_layout = Some(layout);
+        let mut engine = build_engine_with(Impl::SparkC, &ds, &cfg, &eopts);
+        let rep = run_fixed_rounds(engine.as_mut(), &ds, &cfg, 50);
+        table.row(vec![
+            name.to_string(),
+            format!("{:.4}", rep.total_overhead),
+            format!("{:.4}", rep.total_time),
+        ]);
+        csv.push_str(&format!("{},{:.6},{:.6}\n", name, rep.total_overhead, rep.total_time));
+    }
+    out.push_str(&table.render());
+    out.push_str("\npaper: flattening buys ~3× overhead for Scala (it removes per-record iteration + per-record JNI crossings).\n");
+    opts.save("ablation_layout.csv", &csv);
+    out
+}
+
+pub fn partitioner(opts: &ExpOptions) -> String {
+    let ds = opts.dataset();
+    let cfg = opts.config(&ds);
+    let mut out = String::from("Ablation: partitioner load balance + training impact (E)\n\n");
+    let mut table = Table::new(&["partitioner", "nnz imbalance", "time-to-1e-3 (virt s)"]);
+    let mut csv = String::from("partitioner,imbalance,time_to_target\n");
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    for p in [
+        Partitioner::BalancedNnz,
+        Partitioner::Range,
+        Partitioner::RoundRobin,
+        Partitioner::Random,
+    ] {
+        let parts = Partitioning::build(p, &ds.a, cfg.workers, cfg.seed);
+        let imb = parts.imbalance(&ds.a);
+        let mut c = cfg.clone();
+        c.partitioner = p;
+        let mut engine = make_engine(Impl::Mpi, &ds, &c, opts);
+        let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &c, fstar);
+        let t = rep
+            .time_to_target
+            .map(|t| format!("{:.4}", t))
+            .unwrap_or_else(|| "not reached".into());
+        table.row(vec![p.name().to_string(), format!("{:.3}", imb), t.clone()]);
+        csv.push_str(&format!("{},{:.6},{}\n", p.name(), imb, t));
+    }
+    out.push_str(&table.render());
+    out.push_str("\npaper: the custom balanced-nnz partitioning 'performs comparable to the SPARK partitioning' — load balance matters at higher skew.\n");
+    opts.save("ablation_partitioner.csv", &csv);
+    out
+}
+
+pub fn minibatch_cd(opts: &ExpOptions) -> String {
+    use crate::data::WorkerData;
+    use crate::solver::{minibatch_cd::MiniBatchCd, scd::NativeScd, LocalSolver, SolveRequest};
+
+    let ds = opts.dataset();
+    let cfg = opts.config(&ds);
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    let parts = Partitioning::build(cfg.partitioner, &ds.a, cfg.workers, cfg.seed);
+    let workers: Vec<WorkerData> = parts
+        .parts
+        .iter()
+        .map(|c| WorkerData::from_columns(&ds.a, c))
+        .collect();
+
+    let run = |use_cocoa: bool, rounds: usize| -> Vec<f64> {
+        let mut alphas: Vec<Vec<f64>> = workers.iter().map(|w| vec![0.0; w.n_local()]).collect();
+        let mut v = vec![0.0; ds.m()];
+        let mut solvers: Vec<Box<dyn LocalSolver>> = workers
+            .iter()
+            .map(|_| -> Box<dyn LocalSolver> {
+                if use_cocoa {
+                    Box::new(NativeScd::new())
+                } else {
+                    Box::new(MiniBatchCd::new())
+                }
+            })
+            .collect();
+        let mut subopts = Vec::new();
+        for round in 0..rounds {
+            let mut agg = vec![0.0; ds.m()];
+            for (w, solver) in solvers.iter_mut().enumerate() {
+                let req = SolveRequest {
+                    v: &v,
+                    b: &ds.b,
+                    h: workers[w].n_local(),
+                    lam_n: cfg.lam_n,
+                    eta: cfg.eta,
+                    sigma: cfg.sigma(),
+                    seed: round as u64 * 31 + w as u64,
+                };
+                let res = solver.solve(&workers[w], &alphas[w], &req);
+                crate::linalg::add_assign(&mut alphas[w], &res.delta_alpha);
+                crate::linalg::add_assign(&mut agg, &res.delta_v);
+            }
+            crate::linalg::add_assign(&mut v, &agg);
+            let mut alpha = vec![0.0; ds.n()];
+            for (wd, al) in workers.iter().zip(alphas.iter()) {
+                for (&g, &a) in wd.global_ids.iter().zip(al.iter()) {
+                    alpha[g as usize] = a;
+                }
+            }
+            subopts.push(coordinator::suboptimality(
+                ds.objective(&alpha, cfg.lam_n, cfg.eta),
+                fstar,
+            ));
+        }
+        subopts
+    };
+
+    let rounds = 40;
+    let cocoa = run(true, rounds);
+    let mb = run(false, rounds);
+    let mut out = String::from("Ablation: CoCoA (immediate local updates) vs classical mini-batch CD\n\n");
+    let mut table = Table::new(&["round", "CoCoA subopt", "mini-batch CD subopt"]);
+    let mut csv = String::from("round,cocoa,minibatch_cd\n");
+    for r in [0, 4, 9, 19, rounds - 1] {
+        table.row(vec![
+            (r + 1).to_string(),
+            format!("{:.3e}", cocoa[r]),
+            format!("{:.3e}", mb[r]),
+        ]);
+        csv.push_str(&format!("{},{:.9e},{:.9e}\n", r + 1, cocoa[r], mb[r]));
+    }
+    out.push_str(&table.render());
+    out.push_str("\npaper §2.1: immediate local updates are why CoCoA needs far fewer rounds at equal H.\n");
+    opts.save("ablation_minibatch_cd.csv", &csv);
+    out
+}
+
+pub fn adaptive_h(opts: &ExpOptions) -> String {
+    let ds = opts.dataset();
+    let cfg = opts.config(&ds);
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    let mut out = String::from("Ablation: adaptive-H controller vs grid-tuned H (§6 future work)\n\n");
+    let mut table = Table::new(&["impl", "grid-tuned (virt s)", "adaptive (virt s)", "grid cost (runs)"]);
+    let mut csv = String::from("impl,tuned_time,adaptive_time\n");
+    for (imp, target_frac) in [(Impl::Mpi, 0.9), (Impl::SparkC, 0.75), (Impl::PySparkC, 0.6)] {
+        let make = || make_engine(imp, &ds, &cfg, opts);
+        let (points, best) = tuner::grid_search_h(&make, &ds, &cfg, fstar, &tuner::DEFAULT_H_GRID);
+        let tuned = points[best].report.time_to_target;
+        let mut engine = make_engine(imp, &ds, &cfg, opts);
+        let adaptive = tuner::train_adaptive(engine.as_mut(), &ds, &cfg, fstar, target_frac);
+        table.row(vec![
+            imp.name().to_string(),
+            tuned.map(|t| format!("{:.4}", t)).unwrap_or_else(|| "-".into()),
+            adaptive
+                .time_to_target
+                .map(|t| format!("{:.4}", t))
+                .unwrap_or_else(|| "-".into()),
+            format!("{}", points.len()),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{}\n",
+            imp.name(),
+            tuned.map(|t| t.to_string()).unwrap_or_default(),
+            adaptive.time_to_target.map(|t| t.to_string()).unwrap_or_default()
+        ));
+    }
+    out.push_str(&table.render());
+    out.push_str("\nadaptive-H reaches the target in ONE run (no grid), at a modest premium over the oracle-tuned H.\n");
+    opts.save("ablation_adaptive_h.csv", &csv);
+    out
+}
+
+pub fn gamma(opts: &ExpOptions) -> String {
+    let ds = opts.dataset();
+    let base = opts.config(&ds);
+    let fstar = coordinator::oracle_objective(&ds, &base);
+    let mut out = String::from("Ablation: CoCoA⁺ aggregation γ (adding=1 vs averaging=1/K)\n\n");
+    let mut table = Table::new(&["gamma", "sigma'", "rounds to 1e-3", "reached"]);
+    let mut csv = String::from("gamma,sigma,rounds,reached\n");
+    for gamma in [1.0, 0.5, 1.0 / base.workers as f64] {
+        let mut cfg = base.clone();
+        cfg.gamma = gamma;
+        let mut engine = make_engine(Impl::Mpi, &ds, &cfg, opts);
+        let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &cfg, fstar);
+        table.row(vec![
+            format!("{:.3}", gamma),
+            format!("{:.2}", cfg.sigma()),
+            rep.rounds.to_string(),
+            rep.time_to_target.is_some().to_string(),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{},{}\n",
+            gamma,
+            cfg.sigma(),
+            rep.rounds,
+            rep.time_to_target.is_some()
+        ));
+    }
+    out.push_str(&table.render());
+    out.push_str("\nCoCoA⁺ (Ma et al. 2015): 'adding' (γ=1, σ'=K) dominates 'averaging' — fewer rounds at equal safety.\n");
+    opts.save("ablation_gamma.csv", &csv);
+    out
+}
+
+pub fn async_ps(opts: &ExpOptions) -> String {
+    use crate::framework::param_server::ParamServerSim;
+    let ds = opts.dataset();
+    let cfg = opts.config(&ds);
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    let parts = Partitioning::build(cfg.partitioner, &ds.a, cfg.workers, cfg.seed);
+    let h = ds.n() / cfg.workers; // H = n_local
+
+    let mut out = String::from(
+        "Ablation: synchronous CoCoA vs asynchronous parameter server (staleness sweep)\n\n",
+    );
+    let mut table = Table::new(&["staleness", "epochs to 1e-3", "relative epochs"]);
+    let mut csv = String::from("staleness,epochs\n");
+    let mut base = None;
+    for s_val in [0usize, 1, 2, 4, 8] {
+        let mut ps = ParamServerSim::new(&ds, &parts, &cfg, s_val);
+        let epochs = ps.epochs_to_target(&ds, fstar, cfg.target_subopt, h, 20_000);
+        let e = epochs.map(|e| e as f64);
+        if s_val == 0 {
+            base = e;
+        }
+        table.row(vec![
+            s_val.to_string(),
+            epochs.map(|e| e.to_string()).unwrap_or_else(|| "> 20000".into()),
+            match (base, e) {
+                (Some(b), Some(e)) => format!("{:.2}×", e / b),
+                _ => "-".into(),
+            },
+        ]);
+        csv.push_str(&format!(
+            "{},{}\n",
+            s_val,
+            epochs.map(|e| e.to_string()).unwrap_or_default()
+        ));
+    }
+    out.push_str(&table.render());
+    out.push_str("\nstaleness removes barriers (cheaper epochs) but costs convergence — the trade the paper's §1 cites for avoiding parameter servers in a controlled study.\n");
+    opts.save("ablation_async_ps.csv", &csv);
+    out
+}
+
+pub fn broadcast(opts: &ExpOptions) -> String {
+    let ds = opts.dataset();
+    let mut cfg = opts.config(&ds);
+    cfg.h_frac = 1.0;
+    let mut out = String::from("Ablation: driver-star vs TorrentBroadcast for (B), scaling in K\n\n");
+    let mut table = Table::new(&["K", "star overhead (s)", "torrent overhead (s)"]);
+    let mut csv = String::from("workers,star,torrent\n");
+    for k in [4usize, 8, 16] {
+        let mut c = cfg.clone();
+        c.workers = k;
+        let run = |torrent: bool| -> f64 {
+            let mut eopts = opts.engine_options();
+            eopts.torrent_broadcast = torrent;
+            let mut engine = build_engine_with(Impl::SparkC, &ds, &c, &eopts);
+            run_fixed_rounds(engine.as_mut(), &ds, &c, 30).total_overhead
+        };
+        let star = run(false);
+        let torrent = run(true);
+        table.row(vec![
+            k.to_string(),
+            format!("{:.4}", star),
+            format!("{:.4}", torrent),
+        ]);
+        csv.push_str(&format!("{},{:.6},{:.6}\n", k, star, torrent));
+    }
+    out.push_str(&table.render());
+    out.push_str("\nTorrentBroadcast removes the driver-NIC bottleneck; the gap widens with K (why Spark 1.5 made it the default).\n");
+    opts.save("ablation_broadcast.csv", &csv);
+    out
+}
+
+#[allow(unused)]
+fn unused_train_config_guard(_c: &TrainConfig) {}

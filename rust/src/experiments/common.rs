@@ -1,0 +1,219 @@
+//! Shared experiment machinery: dataset/config construction, tuned-H cache,
+//! output plumbing.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::config::{Impl, TrainConfig};
+use crate::coordinator::{self, tuner};
+use crate::data::synthetic::{webspam_like, SyntheticSpec};
+use crate::data::Dataset;
+use crate::framework::{build_engine_with, DistEngine, EngineOptions};
+use crate::metrics::{write_file, TrainReport};
+
+/// Options common to all experiments.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Workers K (paper default: 8).
+    pub workers: usize,
+    /// Dataset scale: "mini" (default), "small" (CI), or "m,n,nnz" custom.
+    pub scale: String,
+    /// Output directory for CSVs.
+    pub out_dir: PathBuf,
+    /// Runs to average over (paper: 10; default 3 for time).
+    pub seeds: usize,
+    /// Execute the genuinely interpreted managed solvers (slow; Figure 3
+    /// validation) instead of native + measured multiplier.
+    pub real_managed: bool,
+    /// λ·n override (default: 1e-2 · n).
+    pub lam_n: Option<f64>,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            workers: 8,
+            scale: "mini".into(),
+            out_dir: PathBuf::from("results"),
+            seeds: 3,
+            real_managed: false,
+            lam_n: None,
+        }
+    }
+}
+
+impl ExpOptions {
+    pub fn dataset(&self) -> Dataset {
+        let spec = match self.scale.as_str() {
+            "mini" => SyntheticSpec::webspam_mini(),
+            "small" => SyntheticSpec::small(),
+            custom => {
+                let parts: Vec<usize> = custom
+                    .split(',')
+                    .filter_map(|p| p.trim().parse().ok())
+                    .collect();
+                if parts.len() == 3 {
+                    SyntheticSpec {
+                        m: parts[0],
+                        n: parts[1],
+                        avg_col_nnz: parts[2],
+                        ..SyntheticSpec::webspam_mini()
+                    }
+                } else {
+                    SyntheticSpec::webspam_mini()
+                }
+            }
+        };
+        webspam_like(&spec)
+    }
+
+    pub fn config(&self, ds: &Dataset) -> TrainConfig {
+        let mut cfg = TrainConfig::default_for(ds);
+        cfg.workers = self.workers;
+        if let Some(l) = self.lam_n {
+            cfg.lam_n = l;
+        }
+        cfg
+    }
+
+    pub fn engine_options(&self) -> EngineOptions {
+        EngineOptions {
+            real_managed_compute: self.real_managed,
+            ..Default::default()
+        }
+    }
+
+    pub fn save(&self, filename: &str, contents: &str) {
+        let path = self.out_dir.join(filename);
+        if let Err(e) = write_file(&path, contents) {
+            eprintln!("warn: could not write {}: {}", path.display(), e);
+        } else {
+            eprintln!("wrote {}", path.display());
+        }
+    }
+}
+
+/// Build an engine for an implementation under these options.
+pub fn make_engine(
+    imp: Impl,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    opts: &ExpOptions,
+) -> Box<dyn DistEngine> {
+    build_engine_with(imp, ds, cfg, &opts.engine_options())
+}
+
+/// Tune H for an implementation by grid search; memoized per (impl,K).
+pub struct HTuneCache {
+    cache: HashMap<(Impl, usize), f64>,
+}
+
+impl HTuneCache {
+    pub fn new() -> HTuneCache {
+        HTuneCache {
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Best h_frac for `imp` (grid search over the default grid).
+    pub fn tuned_h_frac(
+        &mut self,
+        imp: Impl,
+        ds: &Dataset,
+        cfg: &TrainConfig,
+        fstar: f64,
+        opts: &ExpOptions,
+    ) -> f64 {
+        if let Some(&h) = self.cache.get(&(imp, cfg.workers)) {
+            return h;
+        }
+        let make = || make_engine(imp, ds, cfg, opts);
+        let (points, best) =
+            tuner::grid_search_h(&make, ds, cfg, fstar, &tuner::DEFAULT_H_GRID);
+        let h = points[best].h_frac;
+        self.cache.insert((imp, cfg.workers), h);
+        h
+    }
+}
+
+impl Default for HTuneCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Train `imp` at a given h_frac, averaged over `seeds` runs.
+/// Returns (mean time-to-target across seeds that reached it, reports).
+pub fn train_averaged(
+    imp: Impl,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    fstar: f64,
+    h_frac: f64,
+    opts: &ExpOptions,
+) -> (Option<f64>, Vec<TrainReport>) {
+    let mut reports = Vec::new();
+    let mut times = Vec::new();
+    for s in 0..opts.seeds.max(1) {
+        let mut c = cfg.clone();
+        c.h_frac = h_frac;
+        c.h_abs = None;
+        c.seed = cfg.seed + s as u64;
+        let mut engine = make_engine(imp, ds, &c, opts);
+        let report = coordinator::train_with_oracle(engine.as_mut(), ds, &c, fstar);
+        if let Some(t) = report.time_to_target {
+            times.push(t);
+        }
+        reports.push(report);
+    }
+    let mean = if times.is_empty() {
+        None
+    } else {
+        Some(crate::linalg::mean(&times))
+    };
+    (mean, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parsing() {
+        let mut o = ExpOptions::default();
+        o.scale = "small".into();
+        let ds = o.dataset();
+        assert_eq!(ds.m(), 128);
+        o.scale = "64,128,8".into();
+        let ds = o.dataset();
+        assert_eq!(ds.m(), 64);
+        assert_eq!(ds.n(), 128);
+    }
+
+    #[test]
+    fn config_uses_workers() {
+        let mut o = ExpOptions::default();
+        o.scale = "small".into();
+        o.workers = 5;
+        let ds = o.dataset();
+        let cfg = o.config(&ds);
+        assert_eq!(cfg.workers, 5);
+    }
+
+    #[test]
+    fn tune_cache_memoizes() {
+        let mut o = ExpOptions::default();
+        o.scale = "small".into();
+        o.workers = 2;
+        o.seeds = 1;
+        let ds = o.dataset();
+        let mut cfg = o.config(&ds);
+        cfg.max_rounds = 60;
+        let fstar = coordinator::oracle_objective(&ds, &cfg);
+        let mut cache = HTuneCache::new();
+        let h1 = cache.tuned_h_frac(Impl::Mpi, &ds, &cfg, fstar, &o);
+        let h2 = cache.tuned_h_frac(Impl::Mpi, &ds, &cfg, fstar, &o);
+        assert_eq!(h1, h2);
+        assert!(h1 > 0.0);
+    }
+}

@@ -1,0 +1,105 @@
+//! Figure 3: execution-time decomposition (T_worker / T_master /
+//! T_overhead) for 100 rounds at H = n_local, implementations (A)–(E).
+//!
+//! Expected shape (paper §5.2): master < 2 s everywhere; (A)/(C) dominated
+//! by managed-solver compute; +C variants cut worker time 10×/100×+;
+//! pySpark overhead ≈ 15× Spark overhead; MPI overhead ≈ 3% of total.
+
+use super::common::{make_engine, ExpOptions};
+use crate::config::Impl;
+use crate::coordinator::run_fixed_rounds;
+use crate::metrics::Table;
+
+pub const ROUNDS: usize = 100;
+
+pub fn run(opts: &ExpOptions) -> String {
+    let ds = opts.dataset();
+    let mut cfg = opts.config(&ds);
+    cfg.h_frac = 1.0; // H = n_local, the paper's setting
+    cfg.h_abs = None;
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Figure 3 — {} rounds at H=n_local, {} (K={}){}\n\n",
+        ROUNDS,
+        ds.name,
+        cfg.workers,
+        if opts.real_managed {
+            " [real interpreted managed solvers]"
+        } else {
+            " [native numerics × measured multiplier]"
+        }
+    ));
+
+    let mut table = Table::new(&[
+        "impl",
+        "T_tot (s)",
+        "T_worker (s)",
+        "T_master (s)",
+        "T_overhead (s)",
+        "ovh %",
+    ]);
+    let mut csv = String::from("impl,t_tot,t_worker,t_master,t_overhead\n");
+    let mut rows = Vec::new();
+
+    for imp in Impl::ALL_PAPER {
+        let mut engine = make_engine(imp, &ds, &cfg, opts);
+        let rep = run_fixed_rounds(engine.as_mut(), &ds, &cfg, ROUNDS);
+        csv.push_str(&format!(
+            "{},{:.6},{:.6},{:.6},{:.6}\n",
+            imp.name(),
+            rep.total_time,
+            rep.total_worker,
+            rep.total_master,
+            rep.total_overhead
+        ));
+        table.row(vec![
+            imp.name().to_string(),
+            format!("{:.4}", rep.total_time),
+            format!("{:.4}", rep.total_worker),
+            format!("{:.4}", rep.total_master),
+            format!("{:.4}", rep.total_overhead),
+            format!("{:.1}%", 100.0 * rep.total_overhead / rep.total_time),
+        ]);
+        rows.push((imp, rep));
+    }
+
+    out.push_str(&table.render());
+
+    // The paper's §5.2 checkpoints, computed from this run:
+    let find = |imp: Impl| rows.iter().find(|(i, _)| *i == imp).map(|(_, r)| r).unwrap();
+    let (a, b, c, d, e) = (
+        find(Impl::SparkScala),
+        find(Impl::SparkC),
+        find(Impl::PySpark),
+        find(Impl::PySparkC),
+        find(Impl::Mpi),
+    );
+    out.push_str("\npaper checkpoints:\n");
+    out.push_str(&format!(
+        "  MPI overhead fraction:        {:.1}% (paper ≈ 3%)\n",
+        100.0 * e.total_overhead / e.total_time
+    ));
+    out.push_str(&format!(
+        "  pySpark / Spark overhead:     {:.1}× (paper ≈ 15×)\n",
+        d.total_overhead / b.total_overhead
+    ));
+    out.push_str(&format!(
+        "  (A)→(B) worker-time speedup:  {:.1}× (paper ≈ 10×)\n",
+        a.total_worker / b.total_worker
+    ));
+    out.push_str(&format!(
+        "  (C)→(D) worker-time speedup:  {:.0}× (paper ≈ 100×+)\n",
+        c.total_worker / d.total_worker
+    ));
+    out.push_str(&format!(
+        "  master time max:              {:.4} s (paper < 2 s)\n",
+        [a, b, c, d, e]
+            .iter()
+            .map(|r| r.total_master)
+            .fold(0.0f64, f64::max)
+    ));
+
+    opts.save("fig3_overheads.csv", &csv);
+    out
+}

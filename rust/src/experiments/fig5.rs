@@ -1,0 +1,137 @@
+//! Figure 5: performance gain of the optimized Spark implementation over
+//! the reference CoCoA (A) and the MLlib SGD solver.
+//!
+//! Expected shape (paper §5.4): reference CoCoA beats MLlib by up to ~50×;
+//! the optimized implementation gains another order of magnitude; B\*/D\*
+//! land within 2× of MPI.
+
+use super::common::{train_averaged, ExpOptions, HTuneCache};
+use crate::config::Impl;
+use crate::coordinator;
+use crate::framework::build_engine_with;
+use crate::metrics::Table;
+
+pub fn run(opts: &ExpOptions) -> String {
+    let ds = opts.dataset();
+    let mut cfg = opts.config(&ds);
+    // MLlib needs far more rounds than CoCoA to reach the target.
+    cfg.max_rounds = cfg.max_rounds.max(2000);
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    let mut cache = HTuneCache::new();
+
+    let impls = [
+        Impl::MllibSgd,
+        Impl::SparkScala,
+        Impl::SparkCOpt,
+        Impl::PySparkCOpt,
+        Impl::Mpi,
+    ];
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Figure 5 — time to suboptimality 1e-3 vs MLlib baseline (K={})\n\n",
+        cfg.workers
+    ));
+    let mut table = Table::new(&[
+        "impl",
+        "time-to-1e-3 (virt s)",
+        "time-to-1e-1",
+        "rounds",
+        "speedup vs MLlib @1e-1",
+    ]);
+    let mut csv = String::from("impl,time_to_target,time_to_1e1,rounds\n");
+    let mut results = Vec::new();
+
+    // First virtual time at which a run crossed the weaker ε = 0.1 (the
+    // paper's Figure 5 compares full curves; this anchors a finite ratio
+    // even when SGD cannot reach 1e-3 inside the round budget).
+    fn time_to(rep: &crate::metrics::TrainReport, eps: f64) -> Option<f64> {
+        rep.logs
+            .iter()
+            .find(|l| l.suboptimality.map(|s| s <= eps).unwrap_or(false))
+            .map(|l| l.time)
+    }
+
+    for imp in impls {
+        if imp == Impl::MllibSgd {
+            // The paper "tuned its batch size to get the best performance";
+            // we tune (step, batch fraction) over a grid and keep the best.
+            // Rank configurations by (reached target? time) then final ε;
+            // divergent runs (non-finite ε) rank last.
+            let mut best: Option<(Option<f64>, usize, f64, Option<f64>)> = None;
+            let score = |time: Option<f64>, fin: f64| -> (f64, f64) {
+                (time.unwrap_or(f64::INFINITY), if fin.is_finite() { fin } else { f64::INFINITY })
+            };
+            for step in [5e-4, 2e-3, 1e-2, 0.05] {
+                for frac in [1.0] {
+                    let mut eopts = opts.engine_options();
+                    eopts.sgd_step = step;
+                    eopts.sgd_batch_fraction = frac;
+                    let mut engine = build_engine_with(imp, &ds, &cfg, &eopts);
+                    let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &cfg, fstar);
+                    let cand = (
+                        rep.time_to_target,
+                        rep.rounds,
+                        rep.final_suboptimality,
+                        time_to(&rep, 0.1),
+                    );
+                    let replace = match &best {
+                        None => true,
+                        Some((bt, _, bf, _)) => score(cand.0, cand.2) < score(*bt, *bf),
+                    };
+                    if replace {
+                        best = Some(cand);
+                    }
+                }
+            }
+            let (best_time, rounds, fin, t01) = best.unwrap();
+            csv.push_str(&format!(
+                "{},{},{},{}\n",
+                imp.name(),
+                best_time.map(|t| format!("{:.6}", t)).unwrap_or_default(),
+                t01.map(|t| format!("{:.6}", t)).unwrap_or_default(),
+                rounds
+            ));
+            results.push((imp, best_time, rounds, fin, t01));
+            continue;
+        }
+        let h = cache.tuned_h_frac(imp, &ds, &cfg, fstar, opts);
+        let (mean_time, reports) = train_averaged(imp, &ds, &cfg, fstar, h, opts);
+        let t01 = time_to(&reports[0], 0.1);
+        csv.push_str(&format!(
+            "{},{},{},{}\n",
+            imp.name(),
+            mean_time.map(|t| format!("{:.6}", t)).unwrap_or_default(),
+            t01.map(|t| format!("{:.6}", t)).unwrap_or_default(),
+            reports[0].rounds
+        ));
+        results.push((imp, mean_time, reports[0].rounds, reports[0].final_suboptimality, t01));
+    }
+
+    let mllib_t01 = results
+        .iter()
+        .find(|(i, _, _, _, _)| *i == Impl::MllibSgd)
+        .and_then(|(_, _, _, _, t)| *t);
+
+    for (imp, time, rounds, final_sub, t01) in &results {
+        let time_str = time
+            .map(|t| format!("{:.4}", t))
+            .unwrap_or_else(|| format!("not reached (ε={:.1e})", final_sub));
+        let speedup = match (mllib_t01, t01) {
+            (Some(mt), Some(t)) => format!("{:.0}×", mt / t),
+            _ => "-".into(),
+        };
+        table.row(vec![
+            imp.name().to_string(),
+            time_str,
+            t01.map(|t| format!("{:.4}", t)).unwrap_or_else(|| "-".into()),
+            rounds.to_string(),
+            speedup,
+        ]);
+    }
+
+    out.push_str(&table.render());
+    out.push_str("\npaper checkpoints: CoCoA(A) ≥ ~10× MLlib; optimized ≥ ~10× (A); optimized < 2× from MPI.\n");
+    opts.save("fig5_mllib.csv", &csv);
+    out
+}

@@ -1,0 +1,50 @@
+//! Experiment harness: one module per paper figure, regenerating the same
+//! rows/series the paper reports (DESIGN.md §4, experiment index).
+//!
+//! Every experiment writes CSV to `--out-dir` (default `results/`) and
+//! returns an ASCII rendition for stdout. Absolute virtual seconds are not
+//! comparable to the paper's testbed; *ratios, orderings, optimal-H
+//! positions and curve shapes* are the reproduction targets.
+
+pub mod ablations;
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+
+pub use common::ExpOptions;
+
+/// Dispatch a figure by number.
+pub fn run_figure(n: usize, opts: &ExpOptions) -> Result<String, String> {
+    match n {
+        2 => Ok(fig2::run(opts)),
+        3 => Ok(fig3::run(opts)),
+        4 => Ok(fig4::run(opts)),
+        5 => Ok(fig5::run(opts)),
+        6 => Ok(fig6::run(opts)),
+        7 => Ok(fig7::run(opts)),
+        8 => Ok(fig8::run(opts)),
+        _ => Err(format!("no figure {} in the paper (2-8 exist)", n)),
+    }
+}
+
+/// Dispatch an ablation by name.
+pub fn run_ablation(name: &str, opts: &ExpOptions) -> Result<String, String> {
+    match name {
+        "layout" => Ok(ablations::layout(opts)),
+        "partitioner" => Ok(ablations::partitioner(opts)),
+        "minibatch-cd" => Ok(ablations::minibatch_cd(opts)),
+        "adaptive-h" => Ok(ablations::adaptive_h(opts)),
+        "gamma" => Ok(ablations::gamma(opts)),
+        "async-ps" => Ok(ablations::async_ps(opts)),
+        "broadcast" => Ok(ablations::broadcast(opts)),
+        _ => Err(format!(
+            "unknown ablation '{}' (layout, partitioner, minibatch-cd, adaptive-h, gamma, async-ps, broadcast)",
+            name
+        )),
+    }
+}

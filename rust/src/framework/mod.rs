@@ -1,0 +1,230 @@
+//! Distributed-execution substrates: the five framework stacks the paper
+//! compares, behind one [`DistEngine`] interface.
+//!
+//! * [`spark`] — implementations (A), (B) and (B)\* on the mini-RDD engine;
+//! * [`pyspark`] — implementations (C), (D) and (D)\* (adds the
+//!   pickle / py4j / python-worker layers), plus the MLlib-SGD baseline;
+//! * [`mpi`] — implementation (E): tree AllReduce, persistent ranks;
+//! * [`rdd`] — the Spark programming model itself;
+//! * [`overhead`] / [`serialization`] — the calibrated cost model and the
+//!   real byte codecs.
+//!
+//! Engines execute the *real* algorithm (numerics are bit-identical across
+//! engines given the same seed — enforced by integration tests) and fold
+//! measured compute plus modeled framework costs onto the virtual clock
+//! (DESIGN.md §2).
+
+pub mod mpi;
+pub mod param_server;
+pub mod overhead;
+pub mod pyspark;
+pub mod rdd;
+pub mod serialization;
+pub mod spark;
+pub mod threads;
+
+use std::sync::OnceLock;
+
+use crate::config::{Impl, TrainConfig};
+use crate::data::{Dataset, Partitioning, WorkerData};
+use crate::framework::overhead::{auto_time_scale, OverheadModel};
+use crate::simnet::ClusterModel;
+use crate::solver::managed::Calibration;
+
+/// Timing breakdown of one synchronous CoCoA round, in virtual seconds —
+/// the decomposition of §5.2 (`T_tot = T_worker + T_master + T_overhead`).
+#[derive(Debug, Clone, Default)]
+pub struct RoundTiming {
+    /// Critical-path local-solver compute (max over workers).
+    pub t_worker: f64,
+    /// Master aggregation compute (measured).
+    pub t_master: f64,
+    /// Framework overhead: serialization, network, scheduling, language
+    /// boundaries — everything that is neither worker nor master compute.
+    pub t_overhead: f64,
+    /// Per-worker solver compute (virtual seconds, after multiplier).
+    pub worker_compute: Vec<f64>,
+    /// Bytes moved worker→master this round (all workers).
+    pub bytes_up: u64,
+    /// Bytes moved master→worker this round (all workers).
+    pub bytes_down: u64,
+}
+
+impl RoundTiming {
+    /// Total round wall time.
+    pub fn wall(&self) -> f64 {
+        self.t_worker + self.t_master + self.t_overhead
+    }
+}
+
+/// One framework substrate executing CoCoA rounds.
+pub trait DistEngine {
+    fn imp(&self) -> Impl;
+
+    fn num_workers(&self) -> usize;
+
+    /// Columns per worker.
+    fn n_locals(&self) -> Vec<usize>;
+
+    /// Execute one round: broadcast shared state, run H local steps per
+    /// worker, aggregate. Returns the aggregated Δv and the timing split.
+    /// `round_seed` drives coordinate sampling (deterministic runs).
+    fn run_round(&mut self, v: &[f64], h: usize, round_seed: u64) -> (Vec<f64>, RoundTiming);
+
+    /// Assemble the global α from worker state — metrics only, free of
+    /// charge on the virtual clock.
+    fn alpha_global(&self) -> Vec<f64>;
+
+    /// Virtual time consumed so far.
+    fn clock(&self) -> f64;
+}
+
+/// Shared engine internals: partitioned data + per-worker α state.
+pub(crate) struct WorkerSet {
+    pub data: Vec<WorkerData>,
+    pub alpha: Vec<Vec<f64>>,
+    pub n_total: usize,
+}
+
+impl WorkerSet {
+    pub fn build(ds: &Dataset, parts: &Partitioning) -> WorkerSet {
+        let data: Vec<WorkerData> = parts
+            .parts
+            .iter()
+            .map(|cols| WorkerData::from_columns(&ds.a, cols))
+            .collect();
+        let alpha = data.iter().map(|d| vec![0.0; d.n_local()]).collect();
+        WorkerSet {
+            data,
+            alpha,
+            n_total: ds.n(),
+        }
+    }
+
+    pub fn alpha_global(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.n_total];
+        for (wd, al) in self.data.iter().zip(self.alpha.iter()) {
+            for (&gid, &a) in wd.global_ids.iter().zip(al.iter()) {
+                out[gid as usize] = a;
+            }
+        }
+        out
+    }
+
+    pub fn n_locals(&self) -> Vec<usize> {
+        self.data.iter().map(|d| d.n_local()).collect()
+    }
+}
+
+/// Partition layout override for the flat-vs-records ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayoutOverride {
+    /// One contiguous record per partition (paper impl. B).
+    Flat,
+    /// One record per feature (paper impls. A/C/D).
+    Records,
+    /// No records in the RDD at all (§5.3 meta-RDD).
+    Meta,
+}
+
+/// Options controlling engine construction.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// Execute the genuinely interpreted managed solvers for (A)/(C)
+    /// instead of native-numerics + measured multiplier. Slower; used by
+    /// the Figure 3 validation run.
+    pub real_managed_compute: bool,
+    /// Override the virtual-cluster time scale (default: auto from nnz).
+    pub time_scale: Option<f64>,
+    /// MLlib SGD step size / batch fraction (Figure 5 baseline).
+    pub sgd_step: f64,
+    pub sgd_batch_fraction: f64,
+    /// Force a partition layout (ablation: flat vs records).
+    pub force_layout: Option<LayoutOverride>,
+    /// Use TorrentBroadcast for the master→worker path (Spark 1.5 default)
+    /// instead of the driver-star model (ablation: `broadcast`).
+    pub torrent_broadcast: bool,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            real_managed_compute: false,
+            time_scale: None,
+            sgd_step: 1.0,
+            sgd_batch_fraction: 1.0,
+            force_layout: None,
+            torrent_broadcast: false,
+        }
+    }
+}
+
+/// Measured managed-runtime slowdowns, calibrated once per process.
+pub fn calibration() -> &'static Calibration {
+    static CAL: OnceLock<Calibration> = OnceLock::new();
+    CAL.get_or_init(|| crate::solver::managed::calibrate(1))
+}
+
+/// Build the engine for an implementation on a dataset.
+pub fn build_engine(imp: Impl, ds: &Dataset, cfg: &TrainConfig) -> Box<dyn DistEngine> {
+    build_engine_with(imp, ds, cfg, &EngineOptions::default())
+}
+
+/// Build with explicit options.
+pub fn build_engine_with(
+    imp: Impl,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    opts: &EngineOptions,
+) -> Box<dyn DistEngine> {
+    cfg.validate().expect("invalid TrainConfig");
+    let parts = Partitioning::build(cfg.partitioner, &ds.a, cfg.workers, cfg.seed);
+    let tau = opts.time_scale.unwrap_or_else(|| auto_time_scale(ds.m(), ds.n()));
+    let cluster = ClusterModel::paper_testbed(tau);
+    let model = OverheadModel::paper_defaults(cluster);
+    match imp {
+        Impl::SparkScala | Impl::SparkC | Impl::SparkCOpt | Impl::MllibSgd => Box::new(
+            spark::SparkEngine::new(imp, ds, &parts, cfg, model, opts.clone()),
+        ),
+        Impl::PySpark | Impl::PySparkC | Impl::PySparkCOpt => Box::new(
+            pyspark::PySparkEngine::new(imp, ds, &parts, cfg, model, opts.clone()),
+        ),
+        Impl::Mpi => Box::new(mpi::MpiEngine::new(ds, &parts, cfg, model)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{webspam_like, SyntheticSpec};
+    use crate::data::Partitioner;
+
+    #[test]
+    fn worker_set_assembles_alpha() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let parts = Partitioning::build(Partitioner::RoundRobin, &ds.a, 3, 0);
+        let mut ws = WorkerSet::build(&ds, &parts);
+        // Tag each worker's coordinates with its id.
+        for (w, al) in ws.alpha.iter_mut().enumerate() {
+            for a in al.iter_mut() {
+                *a = (w + 1) as f64;
+            }
+        }
+        let global = ws.alpha_global();
+        assert_eq!(global.len(), ds.n());
+        for (c, &g) in global.iter().enumerate() {
+            assert_eq!(g, (c % 3 + 1) as f64, "column {}", c);
+        }
+    }
+
+    #[test]
+    fn round_timing_wall_is_sum() {
+        let t = RoundTiming {
+            t_worker: 1.0,
+            t_master: 0.25,
+            t_overhead: 0.5,
+            ..Default::default()
+        };
+        assert!((t.wall() - 1.75).abs() < 1e-15);
+    }
+}

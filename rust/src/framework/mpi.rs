@@ -1,0 +1,213 @@
+//! MPI engine: implementation (E) — the paper's no-overhead reference.
+//!
+//! All-C++ ranks with persistent local state: α_[k] lives in rank memory
+//! forever, the only communication is the tree AllReduce of the
+//! m-dimensional Δv (Figure 1), there is no serialization (raw buffers on
+//! the wire) and no per-stage scheduling. Framework overhead per the paper
+//! is ~3% of total runtime — here a barrier plus the AllReduce transfer.
+
+use std::time::Instant;
+
+use super::overhead::OverheadModel;
+use super::{DistEngine, EngineOptions, RoundTiming, WorkerSet};
+use crate::config::{Impl, TrainConfig};
+use crate::data::{Dataset, Partitioning};
+use crate::linalg;
+use crate::simnet::VirtualClock;
+use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest};
+
+pub struct MpiEngine {
+    ws: WorkerSet,
+    solvers: Vec<NativeScd>,
+    model: OverheadModel,
+    clock: VirtualClock,
+    lam_n: f64,
+    eta: f64,
+    sigma: f64,
+    b: Vec<f64>,
+    m: usize,
+}
+
+impl MpiEngine {
+    pub fn new(
+        ds: &Dataset,
+        parts: &Partitioning,
+        cfg: &TrainConfig,
+        model: OverheadModel,
+    ) -> MpiEngine {
+        let ws = WorkerSet::build(ds, parts);
+        let solvers = (0..ws.data.len()).map(|_| NativeScd::new()).collect();
+        MpiEngine {
+            ws,
+            solvers,
+            model,
+            clock: VirtualClock::new(),
+            lam_n: cfg.lam_n,
+            eta: cfg.eta,
+            sigma: cfg.sigma(),
+            b: ds.b.clone(),
+            m: ds.m(),
+        }
+    }
+
+    /// Construct via the generic builder path (used by tests).
+    pub fn build(ds: &Dataset, parts: &Partitioning, cfg: &TrainConfig) -> MpiEngine {
+        let tau = super::overhead::auto_time_scale(ds.m(), ds.n());
+        let model = OverheadModel::paper_defaults(crate::simnet::ClusterModel::paper_testbed(tau));
+        let _ = EngineOptions::default();
+        MpiEngine::new(ds, parts, cfg, model)
+    }
+}
+
+impl DistEngine for MpiEngine {
+    fn imp(&self) -> Impl {
+        Impl::Mpi
+    }
+
+    fn num_workers(&self) -> usize {
+        self.ws.data.len()
+    }
+
+    fn n_locals(&self) -> Vec<usize> {
+        self.ws.n_locals()
+    }
+
+    fn alpha_global(&self) -> Vec<f64> {
+        self.ws.alpha_global()
+    }
+
+    fn clock(&self) -> f64 {
+        self.clock.now()
+    }
+
+    fn run_round(&mut self, v: &[f64], h: usize, round_seed: u64) -> (Vec<f64>, RoundTiming) {
+        let k = self.num_workers();
+
+        // ---- 1. local solves (ranks run in parallel; real measured) ------
+        let mut computes = vec![0.0; k];
+        let mut results = Vec::with_capacity(k);
+        for w in 0..k {
+            let req = SolveRequest {
+                v,
+                b: &self.b,
+                h,
+                lam_n: self.lam_n,
+                eta: self.eta,
+                sigma: self.sigma,
+                seed: round_seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            };
+            let t0 = Instant::now();
+            let res = self.solvers[w].solve(&self.ws.data[w], &self.ws.alpha[w], &req);
+            computes[w] = t0.elapsed().as_secs_f64();
+            results.push(res);
+        }
+        let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
+
+        // ---- 2. AllReduce of Δv (tree) + barrier --------------------------
+        let payload = (self.m * 8) as u64; // raw doubles, no codec
+        let t_allreduce = self.model.cluster.tree_allreduce(payload, k);
+        let t_barrier = self.model.mpi_barrier();
+
+        // Real aggregation (the reduction operator actually executes; in
+        // MPI it runs inside the collective — we count it as master time,
+        // matching the paper's < 2 s measurement).
+        let t0 = Instant::now();
+        let mut agg = vec![0.0; self.m];
+        for (w, res) in results.iter().enumerate() {
+            linalg::add_assign(&mut agg, &res.delta_v);
+            linalg::add_assign(&mut self.ws.alpha[w], &res.delta_alpha);
+        }
+        let t_master = t0.elapsed().as_secs_f64();
+
+        let wall = t_worker + t_allreduce + t_barrier + t_master;
+        self.clock.advance(wall);
+
+        let timing = RoundTiming {
+            t_worker,
+            t_master,
+            t_overhead: t_allreduce + t_barrier,
+            worker_compute: computes,
+            bytes_up: payload * k as u64,
+            bytes_down: payload * k as u64,
+        };
+        (agg, timing)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{webspam_like, SyntheticSpec};
+    use crate::data::Partitioner;
+
+    fn engine() -> (Dataset, MpiEngine) {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 4;
+        let parts = Partitioning::build(Partitioner::BalancedNnz, &ds.a, 4, 0);
+        let eng = MpiEngine::build(&ds, &parts, &cfg);
+        (ds, eng)
+    }
+
+    #[test]
+    fn round_consistency() {
+        let (ds, mut eng) = engine();
+        let v0 = vec![0.0; ds.m()];
+        let (dv, timing) = eng.run_round(&v0, 50, 1);
+        let alpha = eng.alpha_global();
+        let want = ds.shared_vector(&alpha);
+        for (a, b) in dv.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        assert!(timing.t_worker > 0.0);
+    }
+
+    #[test]
+    fn mpi_overhead_is_small_fraction() {
+        // §5.2: MPI overheads ≈ 3% of total. At full H the solve dominates.
+        let (ds, mut eng) = engine();
+        let v0 = vec![0.0; ds.m()];
+        let n_local = eng.n_locals()[0];
+        let (_, t) = eng.run_round(&v0, 4 * n_local, 1);
+        let frac = t.t_overhead / t.wall();
+        assert!(frac < 0.25, "overhead fraction {} too high", frac);
+    }
+
+    #[test]
+    fn persistent_alpha_state_accumulates() {
+        let (ds, mut eng) = engine();
+        let mut v = vec![0.0; ds.m()];
+        let lam_n = eng.lam_n;
+        let mut prev = ds.objective(&eng.alpha_global(), lam_n, 1.0);
+        for round in 0..5 {
+            let (dv, _) = eng.run_round(&v, 100, round);
+            linalg::add_assign(&mut v, &dv);
+            let cur = ds.objective(&eng.alpha_global(), lam_n, 1.0);
+            assert!(cur <= prev + 1e-9, "round {}: {} -> {}", round, prev, cur);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn convergence_insensitive_to_worker_count() {
+        // CoCoA converges for any K (σ′ = γK keeps aggregation safe).
+        for k in [1usize, 2, 8] {
+            let ds = webspam_like(&SyntheticSpec::small());
+            let mut cfg = TrainConfig::default_for(&ds);
+            cfg.workers = k;
+            let parts = Partitioning::build(Partitioner::Range, &ds.a, k, 0);
+            let model =
+                OverheadModel::paper_defaults(crate::simnet::ClusterModel::paper_testbed(1.0));
+            let mut eng = MpiEngine::new(&ds, &parts, &cfg, model);
+            let mut v = vec![0.0; ds.m()];
+            let f0 = ds.objective(&eng.alpha_global(), cfg.lam_n, 1.0);
+            for round in 0..20 {
+                let h = eng.n_locals()[0];
+                let (dv, _) = eng.run_round(&v, h, round);
+                linalg::add_assign(&mut v, &dv);
+            }
+            let f = ds.objective(&eng.alpha_global(), cfg.lam_n, 1.0);
+            assert!(f < 0.6 * f0, "K={}: {} -> {}", k, f0, f);
+        }
+    }
+}

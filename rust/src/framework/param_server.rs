@@ -1,0 +1,208 @@
+//! Asynchronous parameter-server baseline (simulated).
+//!
+//! The paper's §1/§2 contrasts synchronous schemes (its subject) with
+//! parameter servers (Li et al. OSDI'14; Multiverso): workers push updates
+//! against *stale* views of the shared state and never barrier. We build
+//! the simulation the comparison implies: a server holding `v`, workers
+//! computing CoCoA-style local updates against snapshots that are
+//! `staleness` rounds old, updates applied in arrival order. With
+//! staleness 0 this reduces exactly to the synchronous engine (tested);
+//! growing staleness trades per-round progress for removed barriers —
+//! quantified by `sparkbench ablation async-ps`.
+
+use std::collections::VecDeque;
+
+use crate::config::TrainConfig;
+use crate::data::{Dataset, Partitioning, WorkerData};
+use crate::linalg;
+use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest};
+
+/// Simulated asynchronous parameter server running CoCoA-style updates.
+pub struct ParamServerSim {
+    workers: Vec<WorkerData>,
+    alphas: Vec<Vec<f64>>,
+    solvers: Vec<NativeScd>,
+    /// Authoritative shared vector at the server.
+    v: Vec<f64>,
+    /// Ring of historical v snapshots (index 0 = newest).
+    history: VecDeque<Vec<f64>>,
+    /// How many epochs old the view a worker computes against is.
+    pub staleness: usize,
+    lam_n: f64,
+    eta: f64,
+    sigma: f64,
+    b: Vec<f64>,
+    epoch: u64,
+    /// Staleness-aware damping 1/(1+s) applied to every push (the standard
+    /// step-size correction that keeps bounded-staleness updates stable;
+    /// identity at s = 0).
+    damping: f64,
+}
+
+impl ParamServerSim {
+    pub fn new(ds: &Dataset, parts: &Partitioning, cfg: &TrainConfig, staleness: usize) -> Self {
+        let workers: Vec<WorkerData> = parts
+            .parts
+            .iter()
+            .map(|cols| WorkerData::from_columns(&ds.a, cols))
+            .collect();
+        let alphas = workers.iter().map(|w| vec![0.0; w.n_local()]).collect();
+        let solvers = (0..workers.len()).map(|_| NativeScd::new()).collect();
+        let v = vec![0.0; ds.m()];
+        let mut history = VecDeque::with_capacity(staleness + 1);
+        history.push_front(v.clone());
+        ParamServerSim {
+            workers,
+            alphas,
+            solvers,
+            v,
+            history,
+            staleness,
+            lam_n: cfg.lam_n,
+            eta: cfg.eta,
+            sigma: cfg.sigma(),
+            b: ds.b.clone(),
+            epoch: 0,
+            damping: 1.0 / (1.0 + staleness as f64),
+        }
+    }
+
+    /// The stale view workers read this epoch.
+    fn stale_view(&self) -> &Vec<f64> {
+        let idx = self.staleness.min(self.history.len() - 1);
+        &self.history[idx]
+    }
+
+    /// One epoch: every worker computes H steps against its stale view;
+    /// the server applies the pushes in arrival order (no barrier — the
+    /// virtual-time benefit is that the epoch costs max(compute) with no
+    /// synchronization gap, which the caller accounts for).
+    pub fn run_epoch(&mut self, h: usize, seed: u64) {
+        let view = self.stale_view().clone();
+        for w in 0..self.workers.len() {
+            let req = SolveRequest {
+                v: &view,
+                b: &self.b,
+                h,
+                lam_n: self.lam_n,
+                eta: self.eta,
+                sigma: self.sigma,
+                seed: seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            };
+            let res = self.solvers[w].solve(&self.workers[w], &self.alphas[w], &req);
+            // Push: applied immediately at the server (arrival order),
+            // damped by 1/(1+staleness) to keep stale updates stable.
+            linalg::axpy(self.damping, &res.delta_alpha, &mut self.alphas[w]);
+            linalg::axpy(self.damping, &res.delta_v, &mut self.v);
+        }
+        self.history.push_front(self.v.clone());
+        while self.history.len() > self.staleness + 1 {
+            self.history.pop_back();
+        }
+        self.epoch += 1;
+    }
+
+    pub fn alpha_global(&self, n: usize) -> Vec<f64> {
+        let mut out = vec![0.0; n];
+        for (wd, al) in self.workers.iter().zip(self.alphas.iter()) {
+            for (&gid, &a) in wd.global_ids.iter().zip(al.iter()) {
+                out[gid as usize] = a;
+            }
+        }
+        out
+    }
+
+    /// Epochs to reach `target` suboptimality (None if `max_epochs` hit).
+    pub fn epochs_to_target(
+        &mut self,
+        ds: &Dataset,
+        fstar: f64,
+        target: f64,
+        h: usize,
+        max_epochs: usize,
+    ) -> Option<usize> {
+        for e in 0..max_epochs {
+            self.run_epoch(h, e as u64);
+            let alpha = self.alpha_global(ds.n());
+            let f = ds.objective(&alpha, self.lam_n, self.eta);
+            if crate::coordinator::suboptimality(f, fstar) <= target {
+                return Some(e + 1);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{webspam_like, SyntheticSpec};
+    use crate::data::Partitioner;
+    use crate::framework::DistEngine;
+    
+    fn setup() -> (Dataset, TrainConfig, Partitioning) {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 4;
+        let parts = Partitioning::build(Partitioner::Range, &ds.a, 4, 0);
+        (ds, cfg, parts)
+    }
+
+    #[test]
+    fn zero_staleness_equals_synchronous_engine() {
+        let (ds, cfg, parts) = setup();
+        let mut ps = ParamServerSim::new(&ds, &parts, &cfg, 0);
+        // Same partitioning for both sides (build_engine would re-partition
+        // with the config default).
+        let mut sync = crate::framework::mpi::MpiEngine::build(&ds, &parts, &cfg);
+        let mut v_sync = vec![0.0; ds.m()];
+        for round in 0..5 {
+            ps.run_epoch(40, round);
+            let (dv, _) = sync.run_round(&v_sync, 40, round);
+            linalg::add_assign(&mut v_sync, &dv);
+        }
+        let a_ps = ps.alpha_global(ds.n());
+        let a_sync = sync.alpha_global();
+        for (x, y) in a_ps.iter().zip(a_sync.iter()) {
+            assert!((x - y).abs() < 1e-12, "{} vs {}", x, y);
+        }
+    }
+
+    #[test]
+    fn converges_under_bounded_staleness() {
+        let (ds, cfg, parts) = setup();
+        let fstar = crate::coordinator::oracle_objective(&ds, &cfg);
+        let mut ps = ParamServerSim::new(&ds, &parts, &cfg, 2);
+        let reached = ps.epochs_to_target(&ds, fstar, 1e-3, 64, 20_000);
+        assert!(reached.is_some(), "stale-2 PS failed to converge");
+    }
+
+    #[test]
+    fn staleness_costs_epochs() {
+        let (ds, cfg, parts) = setup();
+        let fstar = crate::coordinator::oracle_objective(&ds, &cfg);
+        let epochs_at = |s: usize| -> usize {
+            let mut ps = ParamServerSim::new(&ds, &parts, &cfg, s);
+            ps.epochs_to_target(&ds, fstar, 1e-2, 64, 5000)
+                .unwrap_or(usize::MAX)
+        };
+        let fresh = epochs_at(0);
+        let stale = epochs_at(4);
+        assert!(
+            stale >= fresh,
+            "staleness should not accelerate per-epoch progress: {} vs {}",
+            stale,
+            fresh
+        );
+    }
+
+    #[test]
+    fn history_ring_is_bounded() {
+        let (ds, cfg, parts) = setup();
+        let mut ps = ParamServerSim::new(&ds, &parts, &cfg, 3);
+        for e in 0..10 {
+            ps.run_epoch(8, e);
+        }
+        assert!(ps.history.len() <= 4);
+    }
+}

@@ -1,0 +1,362 @@
+//! Mini-RDD engine: the Spark programming model the paper's code runs on.
+//!
+//! A faithful, small re-implementation of the RDD abstraction (Zaharia et
+//! al., NSDI'12) sufficient for the paper's workloads:
+//!
+//! * **lazy transformations** (`map`, `filter`, `map_partitions_indexed`) —
+//!   nothing executes until an action; each transformation only records a
+//!   closure and a parent pointer (the lineage);
+//! * **actions** (`collect`, `reduce`, `count`) — run one *job* of one task
+//!   per partition and report per-task statistics the engines convert into
+//!   virtual-clock time;
+//! * **lineage & fault tolerance** — an uncached RDD recomputes its chain
+//!   from the source on every action (and after simulated partition loss),
+//!   exactly like Spark; `cache()` memoizes per-partition results;
+//! * **broadcast variables** — read-only values shipped to every task.
+//!
+//! The CoCoA-on-Spark engines (`spark.rs`, `pyspark.rs`) express each round
+//! as `broadcast → map_partitions → collect`, so the structural costs the
+//! paper attributes to Spark (stage per round, task per partition, records
+//! iterated at task boundaries) are *counted by the engine that actually
+//! runs the computation* rather than assumed.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+/// Per-task runtime context handed to partition closures.
+pub struct TaskContext {
+    pub partition: usize,
+    /// Records the closure pulled through the iterator boundary.
+    records_read: Cell<usize>,
+}
+
+impl TaskContext {
+    pub fn read_records(&self, n: usize) {
+        self.records_read.set(self.records_read.get() + n);
+    }
+}
+
+/// Statistics of one job (one action).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JobStats {
+    pub tasks: usize,
+    pub records_read: usize,
+    /// Measured wall-clock seconds per task (real execution).
+    pub task_seconds: Vec<f64>,
+}
+
+/// A broadcast variable (driver → every task, read-only).
+#[derive(Clone)]
+pub struct Broadcast<T> {
+    value: Rc<T>,
+}
+
+impl<T> Broadcast<T> {
+    pub fn value(&self) -> &T {
+        &self.value
+    }
+}
+
+type ComputeFn<T> = Rc<dyn Fn(usize, &TaskContext) -> Vec<T>>;
+
+/// A resilient distributed dataset.
+pub struct Rdd<T> {
+    num_partitions: usize,
+    compute: ComputeFn<T>,
+    cache: Rc<RefCell<Vec<Option<Vec<T>>>>>,
+    cached: Cell<bool>,
+    /// Human-readable lineage for debugging/tests, e.g.
+    /// `parallelize → map → mapPartitions`.
+    lineage: String,
+}
+
+impl<T> Clone for Rdd<T> {
+    fn clone(&self) -> Self {
+        Rdd {
+            num_partitions: self.num_partitions,
+            compute: Rc::clone(&self.compute),
+            cache: Rc::clone(&self.cache),
+            cached: self.cached.clone(),
+            lineage: self.lineage.clone(),
+        }
+    }
+}
+
+/// Driver-side context (creates RDDs and broadcasts).
+#[derive(Default)]
+pub struct SparkContext;
+
+impl SparkContext {
+    pub fn new() -> SparkContext {
+        SparkContext
+    }
+
+    /// Create a source RDD from pre-partitioned data.
+    pub fn parallelize<T: Clone + 'static>(&self, parts: Vec<Vec<T>>) -> Rdd<T> {
+        let n = parts.len();
+        let src = Rc::new(parts);
+        Rdd {
+            num_partitions: n,
+            compute: Rc::new(move |p, _ctx| src[p].clone()),
+            cache: Rc::new(RefCell::new((0..n).map(|_| None).collect())),
+            cached: Cell::new(false),
+            lineage: "parallelize".to_string(),
+        }
+    }
+
+    pub fn broadcast<T>(&self, value: T) -> Broadcast<T> {
+        Broadcast {
+            value: Rc::new(value),
+        }
+    }
+}
+
+impl<T: Clone + 'static> Rdd<T> {
+    pub fn num_partitions(&self) -> usize {
+        self.num_partitions
+    }
+
+    pub fn lineage(&self) -> &str {
+        &self.lineage
+    }
+
+    /// Partition data, honoring the cache, recomputing from lineage
+    /// otherwise.
+    fn partition_data(&self, p: usize, ctx: &TaskContext) -> Vec<T> {
+        if self.cached.get() {
+            if let Some(data) = &self.cache.borrow()[p] {
+                return data.clone();
+            }
+        }
+        let data = (self.compute)(p, ctx);
+        if self.cached.get() {
+            self.cache.borrow_mut()[p] = Some(data.clone());
+        }
+        data
+    }
+
+    /// Lazy element-wise transformation.
+    pub fn map<U: Clone + 'static>(&self, f: impl Fn(&T) -> U + 'static) -> Rdd<U> {
+        let parent = self.clone();
+        let n = self.num_partitions;
+        Rdd {
+            num_partitions: n,
+            compute: Rc::new(move |p, ctx| {
+                let input = parent.partition_data(p, ctx);
+                ctx.read_records(input.len());
+                input.iter().map(&f).collect()
+            }),
+            cache: Rc::new(RefCell::new((0..n).map(|_| None).collect())),
+            cached: Cell::new(false),
+            lineage: format!("{} → map", self.lineage),
+        }
+    }
+
+    /// Lazy filter.
+    pub fn filter(&self, f: impl Fn(&T) -> bool + 'static) -> Rdd<T> {
+        let parent = self.clone();
+        let n = self.num_partitions;
+        Rdd {
+            num_partitions: n,
+            compute: Rc::new(move |p, ctx| {
+                let input = parent.partition_data(p, ctx);
+                ctx.read_records(input.len());
+                input.into_iter().filter(|x| f(x)).collect()
+            }),
+            cache: Rc::new(RefCell::new((0..n).map(|_| None).collect())),
+            cached: Cell::new(false),
+            lineage: format!("{} → filter", self.lineage),
+        }
+    }
+
+    /// Lazy whole-partition transformation with partition index — the
+    /// operation the paper's implementations build their local solve on
+    /// (`mapPartitions` for (A)/(C)/(D), `map` over flat records for (B)).
+    pub fn map_partitions_indexed<U: Clone + 'static>(
+        &self,
+        f: impl Fn(usize, Vec<T>, &TaskContext) -> Vec<U> + 'static,
+    ) -> Rdd<U> {
+        let parent = self.clone();
+        let n = self.num_partitions;
+        Rdd {
+            num_partitions: n,
+            compute: Rc::new(move |p, ctx| {
+                let input = parent.partition_data(p, ctx);
+                f(p, input, ctx)
+            }),
+            cache: Rc::new(RefCell::new((0..n).map(|_| None).collect())),
+            cached: Cell::new(false),
+            lineage: format!("{} → mapPartitions", self.lineage),
+        }
+    }
+
+    /// Mark for caching (memoized on next action, like `persist()`).
+    pub fn cache(&self) -> &Self {
+        self.cached.set(true);
+        self
+    }
+
+    /// Drop cached partitions (simulates executor loss → lineage recompute).
+    pub fn unpersist(&self) {
+        for slot in self.cache.borrow_mut().iter_mut() {
+            *slot = None;
+        }
+    }
+
+    /// ACTION: materialize all partitions, returning data + job stats.
+    pub fn collect_with_stats(&self) -> (Vec<T>, JobStats) {
+        let mut out = Vec::new();
+        let mut stats = JobStats {
+            tasks: self.num_partitions,
+            ..Default::default()
+        };
+        for p in 0..self.num_partitions {
+            let ctx = TaskContext {
+                partition: p,
+                records_read: Cell::new(0),
+            };
+            let t0 = std::time::Instant::now();
+            let data = self.partition_data(p, &ctx);
+            stats.task_seconds.push(t0.elapsed().as_secs_f64());
+            stats.records_read += ctx.records_read.get();
+            out.extend(data);
+        }
+        (out, stats)
+    }
+
+    /// ACTION: collect without stats.
+    pub fn collect(&self) -> Vec<T> {
+        self.collect_with_stats().0
+    }
+
+    /// ACTION: element count.
+    pub fn count(&self) -> usize {
+        self.collect().len()
+    }
+
+    /// ACTION: fold all elements with `f` (requires at least one element).
+    pub fn reduce(&self, f: impl Fn(T, T) -> T) -> Option<T> {
+        self.collect().into_iter().reduce(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sc() -> SparkContext {
+        SparkContext::new()
+    }
+
+    #[test]
+    fn transformations_are_lazy() {
+        let calls = Rc::new(Cell::new(0usize));
+        let c2 = Rc::clone(&calls);
+        let rdd = sc().parallelize(vec![vec![1, 2], vec![3]]);
+        let mapped = rdd.map(move |x| {
+            c2.set(c2.get() + 1);
+            x * 10
+        });
+        assert_eq!(calls.get(), 0, "map must not execute before an action");
+        let out = mapped.collect();
+        assert_eq!(out, vec![10, 20, 30]);
+        assert_eq!(calls.get(), 3);
+    }
+
+    #[test]
+    fn lineage_recomputes_without_cache() {
+        let calls = Rc::new(Cell::new(0usize));
+        let c2 = Rc::clone(&calls);
+        let rdd = sc().parallelize(vec![vec![1, 2, 3]]).map(move |x| {
+            c2.set(c2.get() + 1);
+            x + 1
+        });
+        rdd.collect();
+        rdd.collect();
+        assert_eq!(calls.get(), 6, "uncached RDD recomputes per action");
+    }
+
+    #[test]
+    fn cache_memoizes_and_unpersist_recomputes() {
+        let calls = Rc::new(Cell::new(0usize));
+        let c2 = Rc::clone(&calls);
+        let rdd = sc().parallelize(vec![vec![1, 2, 3]]).map(move |x| {
+            c2.set(c2.get() + 1);
+            x + 1
+        });
+        rdd.cache();
+        assert_eq!(rdd.collect(), vec![2, 3, 4]);
+        assert_eq!(rdd.collect(), vec![2, 3, 4]);
+        assert_eq!(calls.get(), 3, "cached RDD computes once");
+        // Simulated partition loss: recompute from lineage, same result.
+        rdd.unpersist();
+        assert_eq!(rdd.collect(), vec![2, 3, 4]);
+        assert_eq!(calls.get(), 6);
+    }
+
+    #[test]
+    fn map_partitions_sees_partition_index() {
+        let rdd = sc().parallelize(vec![vec![1], vec![2], vec![3]]);
+        let out = rdd
+            .map_partitions_indexed(|p, data, _| vec![(p, data[0])])
+            .collect();
+        assert_eq!(out, vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn actions_and_stats() {
+        let rdd = sc().parallelize(vec![vec![1, 2], vec![3, 4, 5]]);
+        assert_eq!(rdd.count(), 5);
+        assert_eq!(rdd.reduce(|a, b| a + b), Some(15));
+        let doubled = rdd.map(|x| x * 2);
+        let (_, stats) = doubled.collect_with_stats();
+        assert_eq!(stats.tasks, 2);
+        assert_eq!(stats.records_read, 5);
+        assert_eq!(stats.task_seconds.len(), 2);
+    }
+
+    #[test]
+    fn filter_chain_and_lineage_string() {
+        let rdd = sc()
+            .parallelize(vec![(1..=10).collect::<Vec<i32>>()])
+            .filter(|x| x % 2 == 0)
+            .map(|x| x * x);
+        assert_eq!(rdd.collect(), vec![4, 16, 36, 64, 100]);
+        assert_eq!(rdd.lineage(), "parallelize → filter → map");
+    }
+
+    #[test]
+    fn broadcast_shared_across_tasks() {
+        let ctx = sc();
+        let bc = ctx.broadcast(vec![10, 20, 30]);
+        let rdd = ctx.parallelize(vec![vec![0usize, 1], vec![2]]);
+        let bc2 = bc.clone();
+        let out = rdd.map(move |&i| bc2.value()[i]).collect();
+        assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn empty_rdd() {
+        let rdd = sc().parallelize(Vec::<Vec<i32>>::new());
+        assert_eq!(rdd.count(), 0);
+        assert_eq!(rdd.reduce(|a, b| a + b), None);
+    }
+
+    #[test]
+    fn reduce_matches_cocoa_aggregation_shape() {
+        // Vector-sum reduce — exactly the Δv aggregation of Algorithm 1.
+        let parts: Vec<Vec<Vec<f64>>> = vec![
+            vec![vec![1.0, 2.0]],
+            vec![vec![10.0, 20.0]],
+            vec![vec![100.0, 200.0]],
+        ];
+        let rdd = sc().parallelize(parts);
+        let sum = rdd
+            .reduce(|mut a, b| {
+                crate::linalg::add_assign(&mut a, &b);
+                a
+            })
+            .unwrap();
+        assert_eq!(sum, vec![111.0, 222.0]);
+    }
+}

@@ -1,0 +1,435 @@
+//! Spark (JVM) engine: implementations (A), (B), (B)\* and the MLlib-SGD
+//! baseline, on the mini-RDD engine.
+//!
+//! Round = one Spark stage: `broadcast(shared) → mapPartitions(local solve)
+//! → collect → driver reduce`. Costs charged per DESIGN.md §6:
+//!
+//! * (A) `spark`: managed Scala solver, record-layout partitions, α
+//!   round-trips driver↔worker every stage (no persistent worker state);
+//! * (B) `spark+c`: native solver behind a JNI call, **flat** partitions
+//!   (one record per partition → per-record iteration cost collapses);
+//! * (B)\*: (B) + persistent local memory (no α traffic) + meta-RDD
+//!   (no partition records at all);
+//! * `mllib-sgd`: one gradient step per round; communicates the full
+//!   n-dimensional weight/gradient vectors (MLlib's pattern) instead of
+//!   CoCoA's m-dimensional shared vector.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use super::overhead::OverheadModel;
+use super::rdd::{Rdd, SparkContext};
+use super::serialization::{java_encoded_len, JavaSer};
+use super::{DistEngine, EngineOptions, RoundTiming};
+use crate::config::{Impl, TrainConfig};
+use crate::data::{Dataset, Partitioning, WorkerData};
+use crate::linalg;
+use crate::simnet::VirtualClock;
+use crate::solver::{managed, scd, sgd, LocalSolver, SolveRequest};
+
+pub struct SparkEngine {
+    imp: Impl,
+    data: Rc<Vec<WorkerData>>,
+    alpha: Rc<RefCell<Vec<Vec<f64>>>>,
+    solvers: Rc<RefCell<Vec<Box<dyn LocalSolver>>>>,
+    base: Rdd<usize>,
+    #[allow(dead_code)]
+    sc: SparkContext,
+    model: OverheadModel,
+    clock: VirtualClock,
+    lam_n: f64,
+    eta: f64,
+    sigma: f64,
+    b: Rc<Vec<f64>>,
+    n_total: usize,
+    m: usize,
+    /// Records iterated per task (layout-dependent; see module docs).
+    records_per_task: Vec<usize>,
+    /// Virtual-clock multiplier applied to measured solver seconds.
+    compute_multiplier: f64,
+    /// Extra driver-side cost per round (py4j for the pySpark-driven MLlib).
+    extra_round_fixed: f64,
+    /// TorrentBroadcast (vs driver star) for the broadcast path.
+    torrent: bool,
+}
+
+impl SparkEngine {
+    pub fn new(
+        imp: Impl,
+        ds: &Dataset,
+        parts: &Partitioning,
+        cfg: &TrainConfig,
+        model: OverheadModel,
+        opts: EngineOptions,
+    ) -> SparkEngine {
+        assert!(matches!(
+            imp,
+            Impl::SparkScala | Impl::SparkC | Impl::SparkCOpt | Impl::MllibSgd
+        ));
+        let data: Vec<WorkerData> = parts
+            .parts
+            .iter()
+            .map(|cols| WorkerData::from_columns(&ds.a, cols))
+            .collect();
+        let k = data.len();
+        let alpha: Vec<Vec<f64>> = data.iter().map(|d| vec![0.0; d.n_local()]).collect();
+
+        let cal = super::calibration();
+        let (solvers, compute_multiplier): (Vec<Box<dyn LocalSolver>>, f64) = match imp {
+            Impl::SparkScala => {
+                if opts.real_managed_compute {
+                    (
+                        (0..k)
+                            .map(|_| Box::new(managed::ScalaLikeScd::new()) as Box<dyn LocalSolver>)
+                            .collect(),
+                        1.0,
+                    )
+                } else {
+                    (
+                        (0..k)
+                            .map(|_| Box::new(scd::NativeScd::new()) as Box<dyn LocalSolver>)
+                            .collect(),
+                        cal.scala_multiplier,
+                    )
+                }
+            }
+            Impl::MllibSgd => (
+                (0..k)
+                    .map(|_| {
+                        Box::new(sgd::MiniBatchSgd::new(opts.sgd_step, opts.sgd_batch_fraction))
+                            as Box<dyn LocalSolver>
+                    })
+                    .collect(),
+                cal.scala_multiplier,
+            ),
+            _ => (
+                (0..k)
+                    .map(|_| Box::new(scd::NativeScd::new()) as Box<dyn LocalSolver>)
+                    .collect(),
+                1.0,
+            ),
+        };
+
+        let layout = opts.force_layout.unwrap_or(match imp {
+            // (A): one record per feature flows through the task iterator.
+            Impl::SparkScala => super::LayoutOverride::Records,
+            // (B): flattened partition = a single record.
+            Impl::SparkC | Impl::MllibSgd => super::LayoutOverride::Flat,
+            // (B)*: meta-RDD — the RDD carries only partition ids.
+            Impl::SparkCOpt => super::LayoutOverride::Meta,
+            _ => unreachable!(),
+        });
+        let records_per_task: Vec<usize> = match layout {
+            super::LayoutOverride::Records => data.iter().map(|d| d.n_local()).collect(),
+            super::LayoutOverride::Flat => vec![1; k],
+            super::LayoutOverride::Meta => vec![0; k],
+        };
+
+        let sc = SparkContext::new();
+        let base = sc.parallelize((0..k).map(|w| vec![w]).collect());
+        base.cache();
+
+        // MLlib is driven from pySpark in the paper's §5.4 comparison: one
+        // py4j round trip per job submission.
+        let extra_round_fixed = if imp == Impl::MllibSgd {
+            model.py4j_roundtrip()
+        } else {
+            0.0
+        };
+
+        SparkEngine {
+            imp,
+            data: Rc::new(data),
+            alpha: Rc::new(RefCell::new(alpha)),
+            solvers: Rc::new(RefCell::new(solvers)),
+            base,
+            sc,
+            model,
+            clock: VirtualClock::new(),
+            lam_n: cfg.lam_n,
+            eta: cfg.eta,
+            sigma: cfg.sigma(),
+            b: Rc::new(ds.b.clone()),
+            n_total: ds.n(),
+            m: ds.m(),
+            records_per_task,
+            compute_multiplier,
+            extra_round_fixed,
+            torrent: opts.torrent_broadcast,
+        }
+    }
+
+    fn persistent(&self) -> bool {
+        self.imp.has_persistent_local_state()
+    }
+}
+
+impl DistEngine for SparkEngine {
+    fn imp(&self) -> Impl {
+        self.imp
+    }
+
+    fn num_workers(&self) -> usize {
+        self.data.len()
+    }
+
+    fn n_locals(&self) -> Vec<usize> {
+        self.data.iter().map(|d| d.n_local()).collect()
+    }
+
+    fn alpha_global(&self) -> Vec<f64> {
+        let alpha = self.alpha.borrow();
+        let mut out = vec![0.0; self.n_total];
+        for (wd, al) in self.data.iter().zip(alpha.iter()) {
+            for (&gid, &a) in wd.global_ids.iter().zip(al.iter()) {
+                out[gid as usize] = a;
+            }
+        }
+        out
+    }
+
+    fn clock(&self) -> f64 {
+        self.clock.now()
+    }
+
+    fn run_round(&mut self, v: &[f64], h: usize, round_seed: u64) -> (Vec<f64>, RoundTiming) {
+        let k = self.num_workers();
+        let mllib = self.imp == Impl::MllibSgd;
+
+        // ---- 1. Driver: serialize + broadcast shared state --------------
+        // Real encode (byte counts + integrity), modeled time.
+        let v_frame = JavaSer::encode(v);
+        debug_assert_eq!(JavaSer::decode(&v_frame).unwrap().len(), v.len());
+        let alpha_down_bytes: Vec<u64> = if self.persistent() {
+            vec![0; k]
+        } else if mllib {
+            // MLlib broadcasts the full n-dim weight vector to every worker.
+            vec![java_encoded_len(self.n_total) as u64; k]
+        } else {
+            self.data
+                .iter()
+                .map(|d| java_encoded_len(d.n_local()) as u64)
+                .collect()
+        };
+        let down_per_worker: Vec<u64> = alpha_down_bytes
+            .iter()
+            .map(|&ab| ab + if mllib { 0 } else { v_frame.len() as u64 })
+            .collect();
+        let bytes_down: u64 = down_per_worker.iter().sum();
+        let t_ser_driver = self.model.java_ser(bytes_down);
+        let t_net_down = if self.torrent {
+            // Torrent: one (max-size) payload spreads peer-to-peer.
+            let max_bytes = down_per_worker.iter().copied().max().unwrap_or(0);
+            self.model.cluster.torrent_broadcast(max_bytes, k)
+        } else {
+            self.model.cluster.star_varied(&down_per_worker)
+        };
+
+        // ---- 2. The stage: mapPartitions(local solve) over the RDD ------
+        let data = Rc::clone(&self.data);
+        let alpha = Rc::clone(&self.alpha);
+        let solvers = Rc::clone(&self.solvers);
+        let b = Rc::clone(&self.b);
+        let v_shared: Rc<Vec<f64>> = Rc::new(v.to_vec());
+        let (lam_n, eta, sigma) = (self.lam_n, self.eta, self.sigma);
+        let records_per_task = self.records_per_task.clone();
+
+        let job = self.base.map_partitions_indexed(move |p, ids, ctx| {
+            let w = ids[0];
+            debug_assert_eq!(p, w);
+            ctx.read_records(records_per_task[w]);
+            let req = SolveRequest {
+                v: &v_shared,
+                b: &b,
+                h,
+                lam_n,
+                eta,
+                sigma,
+                seed: round_seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            };
+            let alpha_w = alpha.borrow()[w].clone();
+            let t0 = Instant::now();
+            let res = solvers.borrow_mut()[w].solve(&data[w], &alpha_w, &req);
+            let secs = t0.elapsed().as_secs_f64();
+            vec![(w, res, secs)]
+        });
+        let (outs, stats) = job.collect_with_stats();
+        debug_assert_eq!(stats.tasks, k);
+
+        // ---- 3. Per-task virtual times -----------------------------------
+        let native_call = match self.imp {
+            Impl::SparkC | Impl::SparkCOpt => self.model.jni_call(),
+            _ => 0.0,
+        };
+        let mut task_times = vec![0.0; k];
+        let mut computes = vec![0.0; k];
+        let mut up_per_worker = vec![0u64; k];
+        for (w, res, secs) in &outs {
+            let compute = secs * self.compute_multiplier;
+            computes[*w] = compute;
+            let up = if mllib {
+                java_encoded_len(self.n_total) as u64
+            } else {
+                let dv = java_encoded_len(res.delta_v.len()) as u64;
+                let da = if self.persistent() {
+                    0
+                } else {
+                    java_encoded_len(res.delta_alpha.len()) as u64
+                };
+                dv + da
+            };
+            up_per_worker[*w] = up;
+            task_times[*w] = self.model.spark_task_launch()
+                + self.model.java_deser(down_per_worker[*w])
+                + self.model.record_iter_scala(self.records_per_task[*w])
+                + native_call
+                + compute
+                + self.model.java_ser(up);
+        }
+        let bytes_up: u64 = up_per_worker.iter().sum();
+        let t_tasks_max = task_times.iter().cloned().fold(0.0f64, f64::max);
+        let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
+
+        // ---- 4. Gather + driver aggregate --------------------------------
+        let t_net_up = self.model.cluster.star_varied(&up_per_worker);
+        let t_deser_driver = self.model.java_deser(bytes_up);
+
+        let t0 = Instant::now();
+        let mut agg = vec![0.0; self.m];
+        {
+            let mut alpha = self.alpha.borrow_mut();
+            for (w, res, _) in &outs {
+                linalg::add_assign(&mut agg, &res.delta_v);
+                linalg::add_assign(&mut alpha[*w], &res.delta_alpha);
+            }
+        }
+        let t_master = t0.elapsed().as_secs_f64();
+
+        // ---- 5. Compose the round on the virtual clock -------------------
+        let wall = self.model.spark_stage()
+            + self.extra_round_fixed
+            + t_ser_driver
+            + t_net_down
+            + t_tasks_max
+            + t_net_up
+            + t_deser_driver
+            + t_master;
+        self.clock.advance(wall);
+
+        let timing = RoundTiming {
+            t_worker,
+            t_master,
+            t_overhead: (wall - t_worker - t_master).max(0.0),
+            worker_compute: computes,
+            bytes_up,
+            bytes_down,
+        };
+        (agg, timing)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{webspam_like, SyntheticSpec};
+    use crate::data::Partitioner;
+
+    fn engine(imp: Impl) -> (Dataset, SparkEngine) {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 4;
+        let parts = Partitioning::build(Partitioner::Range, &ds.a, 4, 0);
+        let model = OverheadModel::paper_defaults(crate::simnet::ClusterModel::paper_testbed(1.0));
+        let eng = SparkEngine::new(imp, &ds, &parts, &cfg, model, EngineOptions::default());
+        (ds, eng)
+    }
+
+    #[test]
+    fn round_aggregates_delta_v() {
+        let (ds, mut eng) = engine(Impl::SparkC);
+        let v0 = vec![0.0; ds.m()];
+        let (dv, timing) = eng.run_round(&v0, 50, 1);
+        assert_eq!(dv.len(), ds.m());
+        assert!(dv.iter().any(|&x| x != 0.0));
+        assert!(timing.wall() > 0.0);
+        assert!(timing.bytes_up > 0 && timing.bytes_down > 0);
+        // Aggregate must equal A·Δα over the assembled global update.
+        let alpha = eng.alpha_global();
+        let v_from_alpha = ds.shared_vector(&alpha);
+        for (a, b) in dv.iter().zip(v_from_alpha.iter()) {
+            assert!((a - b).abs() < 1e-9, "{} vs {}", a, b);
+        }
+    }
+
+    #[test]
+    fn persistent_variant_moves_fewer_bytes() {
+        let (ds, mut eng_b) = engine(Impl::SparkC);
+        let (_, mut eng_bstar) = engine(Impl::SparkCOpt);
+        let v0 = vec![0.0; ds.m()];
+        let (_, tb) = eng_b.run_round(&v0, 50, 1);
+        let (_, tbs) = eng_bstar.run_round(&v0, 50, 1);
+        assert!(
+            tbs.bytes_down < tb.bytes_down,
+            "B* down {} !< B down {}",
+            tbs.bytes_down,
+            tb.bytes_down
+        );
+        assert!(tbs.bytes_up < tb.bytes_up);
+        assert!(tbs.t_overhead < tb.t_overhead);
+    }
+
+    #[test]
+    fn identical_numerics_across_variants() {
+        // (A), (B), (B)* run identical math — same seed, same Δv.
+        let (ds, mut ea) = engine(Impl::SparkScala);
+        let (_, mut eb) = engine(Impl::SparkC);
+        let (_, mut ebs) = engine(Impl::SparkCOpt);
+        let v0 = vec![0.0; ds.m()];
+        let (dva, _) = ea.run_round(&v0, 30, 9);
+        let (dvb, _) = eb.run_round(&v0, 30, 9);
+        let (dvbs, _) = ebs.run_round(&v0, 30, 9);
+        for ((a, b), c) in dva.iter().zip(dvb.iter()).zip(dvbs.iter()) {
+            assert!((a - b).abs() < 1e-12);
+            assert!((b - c).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn scala_variant_charges_multiplier() {
+        let (ds, mut ea) = engine(Impl::SparkScala);
+        let (_, mut eb) = engine(Impl::SparkC);
+        let v0 = vec![0.0; ds.m()];
+        let (_, ta) = ea.run_round(&v0, 200, 1);
+        let (_, tb) = eb.run_round(&v0, 200, 1);
+        assert!(
+            ta.t_worker > tb.t_worker,
+            "managed compute {} !> native {}",
+            ta.t_worker,
+            tb.t_worker
+        );
+    }
+
+    #[test]
+    fn mllib_moves_n_dimensional_payloads() {
+        let (ds, mut em) = engine(Impl::MllibSgd);
+        let (_, mut eb) = engine(Impl::SparkC);
+        let v0 = vec![0.0; ds.m()];
+        let (_, tm) = em.run_round(&v0, 0, 1);
+        let (_, tb) = eb.run_round(&v0, 50, 1);
+        // n = 256 vs m = 128 at this scale → heavier traffic for MLlib.
+        assert!(tm.bytes_down > tb.bytes_down);
+    }
+
+    #[test]
+    fn clock_accumulates() {
+        let (ds, mut eng) = engine(Impl::SparkC);
+        let v0 = vec![0.0; ds.m()];
+        assert_eq!(eng.clock(), 0.0);
+        let (_, t1) = eng.run_round(&v0, 10, 1);
+        let c1 = eng.clock();
+        assert!((c1 - t1.wall()).abs() < 1e-12);
+        let (_, t2) = eng.run_round(&v0, 10, 2);
+        assert!((eng.clock() - t1.wall() - t2.wall()).abs() < 1e-12);
+    }
+}

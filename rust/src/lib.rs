@@ -1,0 +1,61 @@
+//! # sparkbench — distributed ML framework-overhead study
+//!
+//! Reproduction of *"Understanding and Optimizing the Performance of
+//! Distributed Machine Learning Applications on Apache Spark"*
+//! (Dünner, Parnell, Atasu, Sifalakis, Pozidis — IEEE BigData 2017;
+//! arXiv title: "High-Performance Distributed Machine Learning using
+//! Apache SPARK").
+//!
+//! The library implements the paper's full experimental apparatus as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed coordination study: a mini-RDD
+//!   Spark-like engine ([`framework::rdd`]), pySpark and MPI substrates,
+//!   calibrated framework overhead models ([`framework::overhead`]), a
+//!   discrete-event cluster simulator ([`simnet`]), the CoCoA round
+//!   coordinator ([`coordinator`]), local solvers ([`solver`]) and the
+//!   experiment harness regenerating every figure of the paper
+//!   ([`experiments`]).
+//! * **L2/L1 (build time, `python/compile`)** — the CoCoA local subproblem
+//!   as a JAX graph calling a Pallas SCD kernel, AOT-lowered to HLO text
+//!   and executed from rust through [`runtime`] (PJRT CPU client).
+//!
+//! Python never runs on the training path: `make artifacts` is the only
+//! python invocation, after which the `sparkbench` binary is self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use sparkbench::prelude::*;
+//!
+//! let ds = sparkbench::data::synthetic::webspam_like(&SyntheticSpec::small());
+//! let cfg = TrainConfig::default_for(&ds);
+//! let mut engine = sparkbench::framework::build_engine(Impl::Mpi, &ds, &cfg);
+//! let report = sparkbench::coordinator::train(engine.as_mut(), &ds, &cfg);
+//! println!("final suboptimality {:.3e}", report.final_suboptimality);
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod framework;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod simnet;
+pub mod solver;
+pub mod testkit;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{Impl, SolverKind, TrainConfig};
+    
+    pub use crate::data::synthetic::SyntheticSpec;
+    pub use crate::data::{Dataset, Partitioning};
+    
+    
+    pub use crate::solver::LocalSolver;
+}

@@ -1,0 +1,329 @@
+//! `sparkbench` — leader entrypoint and CLI.
+//!
+//! ```text
+//! sparkbench train     --impl mpi --workers 8 [--h-frac 1.0] [--lambda-n X]
+//! sparkbench figure N  [--workers 8] [--scale mini] [--out-dir results]
+//! sparkbench figures   # regenerate 2..8
+//! sparkbench ablation <layout|partitioner|minibatch-cd|adaptive-h|gamma>
+//! sparkbench sweep-h   --impl d [--grid 0.1,0.5,1,4]
+//! sparkbench calibrate
+//! sparkbench partition-stats [--workers 8]
+//! sparkbench list-artifacts
+//! sparkbench pjrt-smoke   # load + run the AOT artifact end to end
+//! ```
+
+use std::path::PathBuf;
+
+use sparkbench::config::Impl;
+use sparkbench::coordinator::{self, tuner};
+use sparkbench::data::{Partitioner, Partitioning};
+use sparkbench::experiments::{run_ablation, run_figure, ExpOptions};
+use sparkbench::framework::build_engine;
+use sparkbench::metrics::Table;
+use sparkbench::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let code = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("figure") => cmd_figure(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("ablation") => cmd_ablation(&args),
+        Some("sweep-h") => cmd_sweep_h(&args),
+        Some("calibrate") => cmd_calibrate(),
+        Some("partition-stats") => cmd_partition_stats(&args),
+        Some("list-artifacts") => cmd_list_artifacts(),
+        Some("pjrt-smoke") => cmd_pjrt_smoke(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand '{}'\n", other);
+            usage();
+            2
+        }
+        None => {
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!("{}", include_str!("usage.txt"));
+}
+
+fn exp_options(args: &Args) -> ExpOptions {
+    ExpOptions {
+        workers: args.get_usize("workers", 8),
+        scale: args.get_str("scale", "mini").to_string(),
+        out_dir: PathBuf::from(args.get_str("out-dir", "results")),
+        seeds: args.get_usize("seeds", 3),
+        real_managed: args.flag("real-managed"),
+        lam_n: args.get("lambda-n").and_then(|s| s.parse().ok()),
+    }
+}
+
+fn parse_impl(args: &Args) -> Option<Impl> {
+    Impl::parse(args.get_str("impl", "mpi"))
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let opts = exp_options(args);
+    let Some(imp) = parse_impl(args) else {
+        eprintln!("bad --impl (try: a, b, b*, c, d, d*, mpi, mllib)");
+        return 2;
+    };
+    let ds = opts.dataset();
+    let mut cfg = opts.config(&ds);
+    cfg.h_frac = args.get_f64("h-frac", 1.0);
+    if let Some(h) = args.get("h") {
+        cfg.h_abs = h.parse().ok();
+    }
+    cfg.max_rounds = args.get_usize("max-rounds", cfg.max_rounds);
+    cfg.target_subopt = args.get_f64("target", cfg.target_subopt);
+    if let Some(p) = args.get("partitioner").and_then(Partitioner::parse) {
+        cfg.partitioner = p;
+    }
+    println!(
+        "training {} on {} (K={}, λn={:.3}, H={})",
+        imp.name(),
+        ds.name,
+        cfg.workers,
+        cfg.lam_n,
+        cfg.h_for(ds.n() / cfg.workers)
+    );
+    let mut engine = build_engine(imp, &ds, &cfg);
+    let report = coordinator::train(engine.as_mut(), &ds, &cfg);
+    println!(
+        "rounds={} time={:.4}s (virt) worker={:.4} master={:.4} overhead={:.4}",
+        report.rounds,
+        report.total_time,
+        report.total_worker,
+        report.total_master,
+        report.total_overhead
+    );
+    match report.time_to_target {
+        Some(t) => println!("reached ε={:.1e} at {:.4}s (virt)", cfg.target_subopt, t),
+        None => println!(
+            "did NOT reach ε={:.1e}; final suboptimality {:.3e}",
+            cfg.target_subopt, report.final_suboptimality
+        ),
+    }
+    opts.save(&format!("train_{}.csv", imp.name().replace([':', '*'], "_")), &report.trace_csv());
+    0
+}
+
+fn cmd_figure(args: &Args) -> i32 {
+    let opts = exp_options(args);
+    let Some(n) = args.positional.first().and_then(|s| s.parse::<usize>().ok()) else {
+        eprintln!("usage: sparkbench figure <2-8>");
+        return 2;
+    };
+    match run_figure(n, &opts) {
+        Ok(out) => {
+            println!("{}", out);
+            0
+        }
+        Err(e) => {
+            eprintln!("{}", e);
+            2
+        }
+    }
+}
+
+fn cmd_figures(args: &Args) -> i32 {
+    let opts = exp_options(args);
+    for n in 2..=8 {
+        match run_figure(n, &opts) {
+            Ok(out) => println!("{}\n", out),
+            Err(e) => {
+                eprintln!("figure {}: {}", n, e);
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_ablation(args: &Args) -> i32 {
+    let opts = exp_options(args);
+    let Some(name) = args.positional.first() else {
+        eprintln!("usage: sparkbench ablation <layout|partitioner|minibatch-cd|adaptive-h|gamma>");
+        return 2;
+    };
+    match run_ablation(name, &opts) {
+        Ok(out) => {
+            println!("{}", out);
+            0
+        }
+        Err(e) => {
+            eprintln!("{}", e);
+            2
+        }
+    }
+}
+
+fn cmd_sweep_h(args: &Args) -> i32 {
+    let opts = exp_options(args);
+    let Some(imp) = parse_impl(args) else {
+        eprintln!("bad --impl");
+        return 2;
+    };
+    let grid: Vec<f64> = args
+        .get_list("grid")
+        .map(|l| l.iter().filter_map(|s| s.parse().ok()).collect())
+        .unwrap_or_else(|| tuner::DEFAULT_H_GRID.to_vec());
+    let ds = opts.dataset();
+    let cfg = opts.config(&ds);
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    let make = || sparkbench::experiments::common::make_engine(imp, &ds, &cfg, &opts);
+    let (points, best) = tuner::grid_search_h(&make, &ds, &cfg, fstar, &grid);
+    let mut table = Table::new(&["H/n_local", "rounds", "time-to-target (virt s)", "compute frac"]);
+    for (i, p) in points.iter().enumerate() {
+        table.row(vec![
+            format!("{}{:.2}", if i == best { "*" } else { " " }, p.h_frac),
+            p.report.rounds.to_string(),
+            p.report
+                .time_to_target
+                .map(|t| format!("{:.4}", t))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.1}%", 100.0 * p.report.compute_fraction()),
+        ]);
+    }
+    println!("H sweep for {} on {} (K={})", imp.name(), ds.name, cfg.workers);
+    println!("{}", table.render());
+    0
+}
+
+fn cmd_calibrate() -> i32 {
+    println!("calibrating managed-runtime solvers against native SCD ...");
+    let cal = sparkbench::solver::managed::calibrate(1);
+    println!("  scala-like multiplier:  {:.2}×", cal.scala_multiplier);
+    println!("  python-like multiplier: {:.2}×", cal.python_multiplier);
+    println!("(paper Fig 3: Scala ≈ 10×, Python ≈ 100×+ vs the C++ module)");
+    0
+}
+
+fn cmd_partition_stats(args: &Args) -> i32 {
+    let opts = exp_options(args);
+    let ds = opts.dataset();
+    let k = opts.workers;
+    let mut table = Table::new(&["partitioner", "min nnz", "max nnz", "imbalance"]);
+    for p in [
+        Partitioner::Range,
+        Partitioner::RoundRobin,
+        Partitioner::BalancedNnz,
+        Partitioner::Random,
+    ] {
+        let parts = Partitioning::build(p, &ds.a, k, 42);
+        let loads = parts.loads(&ds.a);
+        table.row(vec![
+            p.name().to_string(),
+            loads.iter().min().unwrap().to_string(),
+            loads.iter().max().unwrap().to_string(),
+            format!("{:.4}", parts.imbalance(&ds.a)),
+        ]);
+    }
+    println!("{} (m={}, n={}, nnz={}) across K={} workers", ds.name, ds.m(), ds.n(), ds.nnz(), k);
+    println!("{}", table.render());
+    0
+}
+
+fn cmd_list_artifacts() -> i32 {
+    let dir = sparkbench::runtime::Manifest::default_dir();
+    match sparkbench::runtime::Manifest::load(&dir) {
+        Ok(man) => {
+            println!("artifacts dir: {}", man.dir.display());
+            println!(
+                "  local_solve: {} (m={}, nk={}, h_max={}, vmem≈{})",
+                man.local_solve_file,
+                man.m,
+                man.nk,
+                man.h_max,
+                man.vmem_bytes_estimate
+                    .map(crate::fmt_b)
+                    .unwrap_or_else(|| "?".into())
+            );
+            if let Some(obj) = man.objective_file {
+                println!("  objective:  {}", obj);
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{:#}", e);
+            1
+        }
+    }
+}
+
+pub(crate) fn fmt_b(b: u64) -> String {
+    sparkbench::util::fmt_bytes(b)
+}
+
+fn cmd_pjrt_smoke(args: &Args) -> i32 {
+    use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+    use sparkbench::data::WorkerData;
+    use sparkbench::runtime::{Manifest, PjrtRuntime};
+    use sparkbench::solver::{pjrt::PjrtScd, scd::NativeScd, LocalSolver, SolveRequest};
+    use std::sync::Arc;
+
+    let dir = PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let man = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{:#}", e);
+            return 1;
+        }
+    };
+    let rt = match PjrtRuntime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{:#}", e);
+            return 1;
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+    let exec = match rt.load_local_solve(&man) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{:#}", e);
+            return 1;
+        }
+    };
+    println!("compiled {} (m={}, nk={}, h_max={})", man.local_solve_file, man.m, man.nk, man.h_max);
+
+    // Run one local solve on a fitting synthetic partition, compare to the
+    // native solver at f32 tolerance.
+    let mut spec = SyntheticSpec::pjrt_default();
+    spec.m = man.m.min(spec.m);
+    let ds = webspam_like(&spec);
+    let cols: Vec<u32> = (0..(man.nk as u32 / 2)).collect();
+    let wd = WorkerData::from_columns(&ds.a, &cols);
+    let alpha = vec![0.0; wd.n_local()];
+    let v = vec![0.0; ds.m()];
+    let req = SolveRequest {
+        v: &v,
+        b: &ds.b,
+        h: 64.min(man.h_max),
+        lam_n: 10.0,
+        eta: 1.0,
+        sigma: 2.0,
+        seed: 7,
+    };
+    let mut pjrt_solver = PjrtScd::new(Arc::new(exec));
+    let res_pjrt = pjrt_solver.solve(&wd, &alpha, &req);
+    let res_native = NativeScd::new().solve(&wd, &alpha, &req);
+    let max_err = res_pjrt
+        .delta_alpha
+        .iter()
+        .zip(res_native.delta_alpha.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("pjrt vs native max |Δα| error: {:.3e} (f32 tolerance)", max_err);
+    if max_err < 1e-3 {
+        println!("pjrt-smoke OK");
+        0
+    } else {
+        eprintln!("pjrt-smoke FAILED: divergence {}", max_err);
+        1
+    }
+}

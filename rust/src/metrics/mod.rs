@@ -1,0 +1,327 @@
+//! Metrics: per-round logs, training reports, CSV emission and ASCII plots.
+//!
+//! Every experiment regenerates its paper figure as (a) a CSV under
+//! `results/` and (b) an ASCII rendition on stdout, so runs are inspectable
+//! without plotting infrastructure.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::framework::RoundTiming;
+
+/// One CoCoA round as logged by the coordinator.
+#[derive(Debug, Clone)]
+pub struct RoundLog {
+    pub round: usize,
+    /// Cumulative virtual time at the end of this round (seconds).
+    pub time: f64,
+    /// Objective value f(α) (evaluated every `eval_every` rounds).
+    pub objective: Option<f64>,
+    /// Relative suboptimality (f − f*)/max(1, |f*|).
+    pub suboptimality: Option<f64>,
+    pub timing: RoundTiming,
+    /// H used this round (the adaptive tuner may vary it).
+    pub h: usize,
+}
+
+/// Outcome of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub impl_name: String,
+    pub rounds: usize,
+    /// Virtual seconds to reach the target suboptimality (None = not reached).
+    pub time_to_target: Option<f64>,
+    pub final_suboptimality: f64,
+    pub final_objective: f64,
+    pub total_time: f64,
+    /// Σ per-round critical-path worker compute.
+    pub total_worker: f64,
+    pub total_master: f64,
+    pub total_overhead: f64,
+    pub logs: Vec<RoundLog>,
+}
+
+impl TrainReport {
+    /// Fraction of total time spent in worker compute (Figure 7's y-axis).
+    pub fn compute_fraction(&self) -> f64 {
+        if self.total_time <= 0.0 {
+            return 0.0;
+        }
+        self.total_worker / self.total_time
+    }
+
+    /// CSV of the convergence trace: round,time,objective,suboptimality.
+    pub fn trace_csv(&self) -> String {
+        let mut out = String::from("round,time_s,objective,suboptimality,h,t_worker,t_master,t_overhead\n");
+        for l in &self.logs {
+            let _ = writeln!(
+                out,
+                "{},{:.9},{},{},{},{:.9},{:.9},{:.9}",
+                l.round,
+                l.time,
+                l.objective.map(|o| format!("{:.9e}", o)).unwrap_or_default(),
+                l.suboptimality
+                    .map(|s| format!("{:.9e}", s))
+                    .unwrap_or_default(),
+                l.h,
+                l.timing.t_worker,
+                l.timing.t_master,
+                l.timing.t_overhead,
+            );
+        }
+        out
+    }
+}
+
+/// Write text to a file, creating parent dirs.
+pub fn write_file(path: &Path, contents: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)
+}
+
+/// A simple fixed-width table renderer.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(width.iter()) {
+                let pad = w - c.chars().count();
+                let _ = write!(line, " {}{} |", c, " ".repeat(pad));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &width {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// ASCII scatter/line plot on a log-log or lin-log grid.
+pub struct AsciiPlot {
+    width: usize,
+    height: usize,
+    log_x: bool,
+    log_y: bool,
+    series: Vec<(String, char, Vec<(f64, f64)>)>,
+}
+
+impl AsciiPlot {
+    pub fn new(width: usize, height: usize) -> AsciiPlot {
+        AsciiPlot {
+            width,
+            height,
+            log_x: false,
+            log_y: false,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn log_x(mut self) -> Self {
+        self.log_x = true;
+        self
+    }
+
+    pub fn log_y(mut self) -> Self {
+        self.log_y = true;
+        self
+    }
+
+    pub fn series(mut self, name: &str, marker: char, pts: Vec<(f64, f64)>) -> Self {
+        self.series.push((name.to_string(), marker, pts));
+        self
+    }
+
+    fn tx(&self, v: f64) -> f64 {
+        if self.log_x {
+            v.max(1e-300).log10()
+        } else {
+            v
+        }
+    }
+
+    fn ty(&self, v: f64) -> f64 {
+        if self.log_y {
+            v.max(1e-300).log10()
+        } else {
+            v
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let pts: Vec<(f64, f64)> = self
+            .series
+            .iter()
+            .flat_map(|(_, _, p)| p.iter().map(|&(x, y)| (self.tx(x), self.ty(y))))
+            .filter(|(x, y)| x.is_finite() && y.is_finite())
+            .collect();
+        if pts.is_empty() {
+            return "(no data)\n".to_string();
+        }
+        let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+        for &(x, y) in &pts {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (_, marker, series_pts) in &self.series {
+            for &(x, y) in series_pts {
+                let (tx, ty) = (self.tx(x), self.ty(y));
+                if !tx.is_finite() || !ty.is_finite() {
+                    continue;
+                }
+                let cx = ((tx - x0) / (x1 - x0) * (self.width - 1) as f64).round() as usize;
+                let cy = ((ty - y0) / (y1 - y0) * (self.height - 1) as f64).round() as usize;
+                let row = self.height - 1 - cy.min(self.height - 1);
+                grid[row][cx.min(self.width - 1)] = *marker;
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "  y: [{:.3e}, {:.3e}]{}",
+            if self.log_y { 10f64.powf(y0) } else { y0 },
+            if self.log_y { 10f64.powf(y1) } else { y1 },
+            if self.log_y { " (log)" } else { "" });
+        for row in &grid {
+            out.push_str("  |");
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        let _ = writeln!(out, "  +{}", "-".repeat(self.width));
+        let _ = writeln!(out, "  x: [{:.3e}, {:.3e}]{}",
+            if self.log_x { 10f64.powf(x0) } else { x0 },
+            if self.log_x { 10f64.powf(x1) } else { x1 },
+            if self.log_x { " (log)" } else { "" });
+        for (name, marker, _) in &self.series {
+            let _ = writeln!(out, "  {} = {}", marker, name);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> TrainReport {
+        TrainReport {
+            impl_name: "E:mpi".into(),
+            rounds: 2,
+            time_to_target: Some(1.5),
+            final_suboptimality: 5e-4,
+            final_objective: 1.0,
+            total_time: 2.0,
+            total_worker: 1.6,
+            total_master: 0.1,
+            total_overhead: 0.3,
+            logs: vec![RoundLog {
+                round: 0,
+                time: 1.0,
+                objective: Some(2.0),
+                suboptimality: Some(0.1),
+                timing: RoundTiming::default(),
+                h: 100,
+            }],
+        }
+    }
+
+    #[test]
+    fn compute_fraction() {
+        let r = report();
+        assert!((r.compute_fraction() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = report().trace_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("round,time_s"));
+        assert!(lines[1].starts_with("0,1.0"));
+        assert_eq!(lines[1].split(',').count(), 8);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["impl", "time"]);
+        t.row(vec!["E:mpi".into(), "1.5".into()]);
+        t.row(vec!["B*:spark+c-opt".into(), "3.0".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All lines equal width.
+        assert!(lines.iter().all(|l| l.chars().count() == lines[0].chars().count()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn plot_renders_points() {
+        let p = AsciiPlot::new(40, 10)
+            .log_y()
+            .series("conv", '*', vec![(0.0, 1.0), (1.0, 0.1), (2.0, 0.01)]);
+        let s = p.render();
+        assert!(s.contains('*'));
+        assert!(s.contains("(log)"));
+        assert!(s.contains("conv"));
+    }
+
+    #[test]
+    fn plot_empty_is_safe() {
+        let p = AsciiPlot::new(10, 5);
+        assert_eq!(p.render(), "(no data)\n");
+    }
+}

@@ -1,0 +1,230 @@
+//! PJRT runtime: load AOT artifacts (HLO text, produced once by
+//! `make artifacts` → `python/compile/aot.py`) and execute them on the CPU
+//! PJRT client from the rust hot path. Python never runs at training time.
+//!
+//! Pattern adapted from `/opt/xla-example/load_hlo`: HLO *text* is the
+//! interchange format (jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects in proto form; the text parser reassigns
+//! ids). Executables are compiled once per process and cached.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub local_solve_file: String,
+    /// Compiled row count (m).
+    pub m: usize,
+    /// Compiled partition width (nk) — partitions are padded up to this.
+    pub nk: usize,
+    /// Compiled index-buffer length (max H per kernel invocation).
+    pub h_max: usize,
+    pub objective_file: Option<String>,
+    pub vmem_bytes_estimate: Option<u64>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {}", e))?;
+        if j.at(&["format"]).and_then(|f| f.as_str()) != Some("hlo-text") {
+            bail!("manifest format is not hlo-text");
+        }
+        let ls = j
+            .get("local_solve")
+            .ok_or_else(|| anyhow!("manifest missing local_solve"))?;
+        let field = |k: &str| -> Result<usize> {
+            ls.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest local_solve.{} missing", k))
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            local_solve_file: ls
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("manifest local_solve.file missing"))?
+                .to_string(),
+            m: field("m")?,
+            nk: field("nk")?,
+            h_max: field("h_max")?,
+            objective_file: j
+                .at(&["objective", "file"])
+                .and_then(|f| f.as_str())
+                .map(String::from),
+            vmem_bytes_estimate: ls
+                .get("vmem_bytes_estimate")
+                .and_then(|v| v.as_f64())
+                .map(|v| v as u64),
+        })
+    }
+
+    /// Default artifacts directory: `$SPARKBENCH_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SPARKBENCH_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+/// A compiled PJRT executable for the L2 `local_solve` graph.
+pub struct LocalSolveExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+/// The PJRT runtime: CPU client + compiled executables.
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {:?}", e))?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text file.
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {:?}", path.display(), e))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {:?}", path.display(), e))
+    }
+
+    /// Compile the `local_solve` artifact described by the manifest.
+    pub fn load_local_solve(&self, manifest: &Manifest) -> Result<LocalSolveExec> {
+        let path = manifest.dir.join(&manifest.local_solve_file);
+        let exe = self.compile_file(&path)?;
+        Ok(LocalSolveExec {
+            exe,
+            manifest: manifest.clone(),
+        })
+    }
+}
+
+/// Inputs to one kernel invocation, already padded to the compiled shape.
+pub struct LocalSolveArgs<'a> {
+    /// Row-major `[m, nk]` f32.
+    pub a: &'a [f32],
+    pub col_sq: &'a [f32],
+    pub alpha: &'a [f32],
+    pub v: &'a [f32],
+    pub b: &'a [f32],
+    /// Length `h_max`, entries < nk.
+    pub idx: &'a [i32],
+    pub h: i32,
+    pub lam_n: f32,
+    pub eta: f32,
+    pub sigma: f32,
+}
+
+impl LocalSolveExec {
+    /// Execute one CoCoA round on the PJRT device.
+    /// Returns `(delta_alpha [nk], delta_v [m])`.
+    pub fn run(&self, args: &LocalSolveArgs) -> Result<(Vec<f32>, Vec<f32>)> {
+        let man = &self.manifest;
+        let (m, nk, h_max) = (man.m as i64, man.nk as i64, man.h_max as i64);
+        if args.a.len() != (m * nk) as usize {
+            bail!("a has {} elems, artifact wants {}", args.a.len(), m * nk);
+        }
+        if args.idx.len() != h_max as usize {
+            bail!("idx has {} elems, artifact wants {}", args.idx.len(), h_max);
+        }
+        if args.h < 0 || args.h as i64 > h_max {
+            bail!("h {} outside [0, {}]", args.h, h_max);
+        }
+
+        let lit_a = xla::Literal::vec1(args.a)
+            .reshape(&[m, nk])
+            .map_err(|e| anyhow!("reshape a: {:?}", e))?;
+        let lit_colsq = xla::Literal::vec1(args.col_sq);
+        let lit_alpha = xla::Literal::vec1(args.alpha);
+        let lit_v = xla::Literal::vec1(args.v);
+        let lit_b = xla::Literal::vec1(args.b);
+        let lit_idx = xla::Literal::vec1(args.idx);
+        let lit_h = xla::Literal::scalar(args.h);
+        let lit_lam = xla::Literal::scalar(args.lam_n);
+        let lit_eta = xla::Literal::scalar(args.eta);
+        let lit_sigma = xla::Literal::scalar(args.sigma);
+
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(&[
+                lit_a, lit_colsq, lit_alpha, lit_v, lit_b, lit_idx, lit_h, lit_lam, lit_eta,
+                lit_sigma,
+            ])
+            .map_err(|e| anyhow!("execute: {:?}", e))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {:?}", e))?;
+        // aot.py lowers with return_tuple=True → a 2-tuple.
+        let (da, dv) = lit.to_tuple2().map_err(|e| anyhow!("tuple2: {:?}", e))?;
+        let delta_alpha = da.to_vec::<f32>().map_err(|e| anyhow!("dalpha: {:?}", e))?;
+        let delta_v = dv.to_vec::<f32>().map_err(|e| anyhow!("dv: {:?}", e))?;
+        Ok((delta_alpha, delta_v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_generated_schema() {
+        let dir = std::env::temp_dir().join("sparkbench_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "hlo-text",
+                "local_solve": {"file": "ls.hlo.txt", "m": 512, "nk": 512,
+                                 "h_max": 4096, "vmem_bytes_estimate": 1100000},
+                "objective": {"file": "obj.hlo.txt", "m": 512, "n": 1024}}"#,
+        )
+        .unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.m, 512);
+        assert_eq!(man.nk, 512);
+        assert_eq!(man.h_max, 4096);
+        assert_eq!(man.local_solve_file, "ls.hlo.txt");
+        assert_eq!(man.objective_file.as_deref(), Some("obj.hlo.txt"));
+        assert_eq!(man.vmem_bytes_estimate, Some(1_100_000));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_is_actionable_error() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(format!("{:#}", err).contains("make artifacts"));
+    }
+
+    #[test]
+    fn manifest_rejects_wrong_format() {
+        let dir = std::env::temp_dir().join("sparkbench_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "proto", "local_solve": {"file": "x", "m": 1, "nk": 1, "h_max": 1}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

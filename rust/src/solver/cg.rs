@@ -1,0 +1,159 @@
+//! Conjugate-gradient exact ridge solver — the suboptimality oracle.
+//!
+//! Suboptimality curves (Figures 2, 6, 8) need `f(α*)`. For ridge (η = 1)
+//! the optimum solves the normal equations `(AᵀA + λn I) α = Aᵀ b`, which CG
+//! handles matrix-free via `matvec`/`matvec_t`. For η < 1 there is no closed
+//! form; [`elastic_net_optimum`] falls back to running the native CoCoA
+//! solver single-worker to high precision.
+
+use crate::data::Dataset;
+use crate::linalg;
+
+/// Solve `(AᵀA + lam_n·I) x = Aᵀ b` by conjugate gradients.
+/// Returns `(α*, f(α*))` under the study objective (DESIGN.md §5).
+pub fn ridge_optimum(ds: &Dataset, lam_n: f64, tol: f64, max_iter: usize) -> (Vec<f64>, f64) {
+    let n = ds.n();
+    let rhs = ds.a.matvec_t(&ds.b);
+    let apply = |x: &[f64]| -> Vec<f64> {
+        let ax = ds.a.matvec(x);
+        let mut out = ds.a.matvec_t(&ax);
+        linalg::axpy(lam_n, x, &mut out);
+        out
+    };
+
+    let mut x = vec![0.0; n];
+    let mut r = rhs.clone(); // r = b - A x with x = 0
+    let mut p = r.clone();
+    let mut rs_old = linalg::nrm2_sq(&r);
+    let rhs_norm = rs_old.sqrt().max(1e-300);
+
+    for _ in 0..max_iter {
+        if rs_old.sqrt() / rhs_norm < tol {
+            break;
+        }
+        let ap = apply(&p);
+        let alpha = rs_old / linalg::dot(&p, &ap).max(1e-300);
+        linalg::axpy(alpha, &p, &mut x);
+        linalg::axpy(-alpha, &ap, &mut r);
+        let rs_new = linalg::nrm2_sq(&r);
+        let beta = rs_new / rs_old;
+        for (pi, &ri) in p.iter_mut().zip(r.iter()) {
+            *pi = ri + beta * *pi;
+        }
+        rs_old = rs_new;
+    }
+
+    let f = ds.objective(&x, lam_n, 1.0);
+    (x, f)
+}
+
+/// High-precision optimum for general η via long single-worker CoCoA
+/// (σ = 1, full coordinate passes). Slow; used once per experiment config.
+pub fn elastic_net_optimum(ds: &Dataset, lam_n: f64, eta: f64, passes: usize) -> (Vec<f64>, f64) {
+    if (eta - 1.0).abs() < 1e-12 {
+        return ridge_optimum(ds, lam_n, 1e-12, 50_000);
+    }
+    use crate::data::WorkerData;
+    use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest};
+
+    let cols: Vec<u32> = (0..ds.n() as u32).collect();
+    let wd = WorkerData::from_columns(&ds.a, &cols);
+    let mut alpha = vec![0.0; ds.n()];
+    let mut v = vec![0.0; ds.m()];
+    let mut solver = NativeScd::new();
+    for pass in 0..passes {
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: ds.n(),
+            lam_n,
+            eta,
+            sigma: 1.0,
+            seed: pass as u64,
+        };
+        let res = solver.solve(&wd, &alpha, &req);
+        for (a, d) in alpha.iter_mut().zip(res.delta_alpha.iter()) {
+            *a += d;
+        }
+        for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
+            *vi += d;
+        }
+    }
+    let f = ds.objective(&alpha, lam_n, eta);
+    (alpha, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{dense_gaussian, webspam_like, SyntheticSpec};
+
+    #[test]
+    fn cg_solves_normal_equations() {
+        let ds = dense_gaussian(30, 10, 4);
+        let lam_n = 0.7;
+        let (x, _) = ridge_optimum(&ds, lam_n, 1e-12, 5000);
+        // Check residual of the normal equations directly.
+        let ax = ds.a.matvec(&x);
+        let mut lhs = ds.a.matvec_t(&ax);
+        linalg::axpy(lam_n, &x, &mut lhs);
+        let rhs = ds.a.matvec_t(&ds.b);
+        for (l, r) in lhs.iter().zip(rhs.iter()) {
+            assert!((l - r).abs() < 1e-6, "{} vs {}", l, r);
+        }
+    }
+
+    #[test]
+    fn optimum_is_a_minimum() {
+        let ds = dense_gaussian(24, 8, 6);
+        let lam_n = 0.5;
+        let (x, f) = ridge_optimum(&ds, lam_n, 1e-12, 5000);
+        // Perturbations in random directions must not decrease f.
+        let mut rng = crate::linalg::Xorshift128::new(1);
+        for _ in 0..10 {
+            let mut y = x.clone();
+            for yi in y.iter_mut() {
+                *yi += 1e-3 * rng.next_gaussian();
+            }
+            assert!(ds.objective(&y, lam_n, 1.0) >= f - 1e-9);
+        }
+    }
+
+    #[test]
+    fn works_on_sparse_data() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let lam_n = 1e-2 * ds.n() as f64;
+        let (_, f) = ridge_optimum(&ds, lam_n, 1e-10, 20_000);
+        assert!(f.is_finite());
+        assert!(f >= 0.0);
+        // f* must be below f(0) = 0.5||b||².
+        let f0 = ds.objective(&vec![0.0; ds.n()], lam_n, 1.0);
+        assert!(f < f0, "f* {} !< f(0) {}", f, f0);
+    }
+
+    #[test]
+    fn elastic_net_matches_ridge_at_eta_one() {
+        let ds = dense_gaussian(20, 6, 8);
+        let (x1, f1) = ridge_optimum(&ds, 0.3, 1e-12, 5000);
+        let (x2, f2) = elastic_net_optimum(&ds, 0.3, 1.0, 0);
+        assert!((f1 - f2).abs() < 1e-9);
+        for (a, b) in x1.iter().zip(x2.iter()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn elastic_net_optimum_converges() {
+        let ds = dense_gaussian(20, 6, 10);
+        let (x, f) = elastic_net_optimum(&ds, 2.0, 0.5, 400);
+        // Must be a stationary point: small perturbations don't improve.
+        let mut rng = crate::linalg::Xorshift128::new(2);
+        for _ in 0..10 {
+            let mut y = x.clone();
+            for yi in y.iter_mut() {
+                *yi += 1e-4 * rng.next_gaussian();
+            }
+            assert!(ds.objective(&y, 2.0, 0.5) >= f - 1e-7);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Local solvers: the per-worker computation of a CoCoA round.
+//!
+//! The paper's implementations differ in *what executes* the identical math:
+//! compiled C++ (here [`scd::NativeScd`]), a managed-runtime Scala/Python
+//! solver (here the genuinely interpreted [`managed`] solvers), an
+//! MLlib-style mini-batch SGD baseline ([`sgd`]), a classical mini-batch CD
+//! ablation ([`minibatch_cd`]) and the accelerator-offloaded Pallas/PJRT
+//! path ([`pjrt`]). All implement [`LocalSolver`].
+
+pub mod cg;
+pub mod managed;
+pub mod minibatch_cd;
+pub mod pjrt;
+pub mod scd;
+pub mod sgd;
+
+use crate::data::WorkerData;
+
+/// Immutable per-round inputs shared by every solver.
+#[derive(Debug, Clone)]
+pub struct SolveRequest<'a> {
+    /// Shared vector v = Aα (broadcast by the master).
+    pub v: &'a [f64],
+    /// Labels (length m; workers hold a copy in all implementations).
+    pub b: &'a [f64],
+    /// Local steps this round (the paper's H).
+    pub h: usize,
+    /// Effective regularizer λ·n.
+    pub lam_n: f64,
+    /// Elastic-net mix η.
+    pub eta: f64,
+    /// CoCoA subproblem parameter σ′.
+    pub sigma: f64,
+    /// Per-round sampling seed (deterministic experiments).
+    pub seed: u64,
+}
+
+/// A worker's round output: its coordinate update and the m-dimensional
+/// shared-vector update Δv = A·Δα_[k] it communicates (the ONLY payload the
+/// algorithm fundamentally requires — Figure 1).
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    pub delta_alpha: Vec<f64>,
+    pub delta_v: Vec<f64>,
+    /// Coordinate steps actually executed.
+    pub steps: usize,
+}
+
+/// A local subproblem solver.
+///
+/// Not `Send`: the PJRT client is single-threaded and the experiment
+/// engines execute workers on the virtual clock (DESIGN.md §2); the
+/// real-thread e2e example uses per-thread native solvers directly.
+pub trait LocalSolver {
+    fn name(&self) -> &'static str;
+
+    /// Run one round: `alpha` is the worker's current local coordinates
+    /// (never mutated — the engine owns state placement, because *where*
+    /// α lives is exactly what differs between implementations).
+    fn solve(&mut self, data: &WorkerData, alpha: &[f64], req: &SolveRequest) -> SolveResult;
+
+    /// Virtual-clock multiplier relative to the native solver (1.0 for
+    /// native; the managed solvers report their *measured* slowdown).
+    /// See DESIGN.md §2 — numerics always come from real execution; only
+    /// wall-time folding uses this factor.
+    fn time_multiplier(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Verify a [`SolveResult`] against the data: Δv must equal A_k·Δα (within
+/// float tolerance). Used by integration tests and `--paranoid` runs.
+pub fn check_result(data: &WorkerData, res: &SolveResult, tol: f64) -> Result<(), String> {
+    if res.delta_alpha.len() != data.n_local() {
+        return Err("delta_alpha length mismatch".into());
+    }
+    if res.delta_v.len() != data.flat.m {
+        return Err("delta_v length mismatch".into());
+    }
+    let want = data.flat.matvec(&res.delta_alpha);
+    for (i, (&got, &w)) in res.delta_v.iter().zip(want.iter()).enumerate() {
+        if (got - w).abs() > tol * (1.0 + w.abs()) {
+            return Err(format!("delta_v[{}]: {} vs {}", i, got, w));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{webspam_like, SyntheticSpec};
+    use crate::data::{Partitioner, Partitioning};
+
+    #[test]
+    fn check_result_accepts_consistent_and_rejects_corrupt() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let parts = Partitioning::build(Partitioner::Range, &ds.a, 4, 0);
+        let wd = crate::data::WorkerData::from_columns(&ds.a, &parts.parts[0]);
+        let alpha = vec![0.0; wd.n_local()];
+        let v = vec![0.0; ds.m()];
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: 50,
+            lam_n: 1.0,
+            eta: 1.0,
+            sigma: 4.0,
+            seed: 3,
+        };
+        let mut s = scd::NativeScd::new();
+        let res = s.solve(&wd, &alpha, &req);
+        check_result(&wd, &res, 1e-9).unwrap();
+        let mut bad = res.clone();
+        bad.delta_v[0] += 1.0;
+        assert!(check_result(&wd, &bad, 1e-9).is_err());
+    }
+}

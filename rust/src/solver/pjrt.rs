@@ -1,0 +1,125 @@
+//! PJRT-backed local solver: runs the L1 Pallas kernel (via the L2 JAX
+//! graph, AOT-lowered to HLO) on the CPU PJRT client.
+//!
+//! This is the modernized "offload the hot loop to an accelerator" variant
+//! of the paper's C++-module idea: the identical SCD math executes inside
+//! an XLA executable compiled once at startup. Partitions smaller than the
+//! compiled `[m, nk]` block are zero-padded (padding columns have zero
+//! norm; the kernel provably leaves them untouched — property-tested on
+//! the python side and re-checked in `rust/tests/integration_runtime.rs`).
+
+use std::sync::Arc;
+
+use super::{LocalSolver, SolveRequest, SolveResult};
+use crate::data::dense::{padded_vec_f32, DenseMatrix};
+use crate::data::WorkerData;
+use crate::linalg::Xorshift128;
+use crate::runtime::{LocalSolveArgs, LocalSolveExec};
+
+/// Local solver executing the AOT artifact.
+pub struct PjrtScd {
+    exec: Arc<LocalSolveExec>,
+    /// Cached dense padded partition keyed by WorkerData address.
+    cache: Option<(usize, CachedPartition)>,
+}
+
+struct CachedPartition {
+    a_pad: Vec<f32>,
+    col_sq_pad: Vec<f32>,
+    nk_real: usize,
+}
+
+impl PjrtScd {
+    pub fn new(exec: Arc<LocalSolveExec>) -> PjrtScd {
+        PjrtScd { exec, cache: None }
+    }
+
+    /// Whether a worker partition fits the compiled artifact.
+    pub fn fits(&self, data: &WorkerData) -> bool {
+        data.flat.m <= self.exec.manifest.m && data.n_local() <= self.exec.manifest.nk
+    }
+
+    fn ensure_cache(&mut self, data: &WorkerData) {
+        let key = data as *const _ as usize;
+        if matches!(&self.cache, Some((k, _)) if *k == key) {
+            return;
+        }
+        let man = &self.exec.manifest;
+        assert!(
+            self.fits(data),
+            "partition {}x{} exceeds compiled artifact {}x{}; regenerate with \
+             `make artifacts M={} NK={}`",
+            data.flat.m,
+            data.n_local(),
+            man.m,
+            man.nk,
+            data.flat.m,
+            data.n_local()
+        );
+        let dense = DenseMatrix::from_csc(&data.flat);
+        let a_pad = dense.padded_f32_row_major(man.m, man.nk);
+        let col_sq_pad = padded_vec_f32(&data.col_sq, man.nk);
+        self.cache = Some((
+            key,
+            CachedPartition {
+                a_pad,
+                col_sq_pad,
+                nk_real: data.n_local(),
+            },
+        ));
+    }
+}
+
+impl LocalSolver for PjrtScd {
+    fn name(&self) -> &'static str {
+        "pjrt-scd"
+    }
+
+    fn solve(&mut self, data: &WorkerData, alpha: &[f64], req: &SolveRequest) -> SolveResult {
+        self.ensure_cache(data);
+        let man = self.exec.manifest.clone();
+        let cached = &self.cache.as_ref().unwrap().1;
+        let nk_real = cached.nk_real;
+        let m_real = data.flat.m;
+
+        // Coordinate schedule generated host-side (keeps the kernel RNG-free
+        // and lets rust own determinism).
+        let h = req.h.min(man.h_max);
+        let mut rng = Xorshift128::new(req.seed);
+        let mut idx = vec![0i32; man.h_max];
+        if nk_real > 0 {
+            for slot in idx.iter_mut().take(h) {
+                *slot = rng.next_usize(nk_real) as i32;
+            }
+        }
+
+        let alpha_pad = padded_vec_f32(alpha, man.nk);
+        let v_pad = padded_vec_f32(req.v, man.m);
+        let b_pad = padded_vec_f32(req.b, man.m);
+
+        let (da, dv) = self
+            .exec
+            .run(&LocalSolveArgs {
+                a: &cached.a_pad,
+                col_sq: &cached.col_sq_pad,
+                alpha: &alpha_pad,
+                v: &v_pad,
+                b: &b_pad,
+                idx: &idx,
+                h: if nk_real > 0 { h as i32 } else { 0 },
+                lam_n: req.lam_n as f32,
+                eta: req.eta as f32,
+                sigma: req.sigma as f32,
+            })
+            .expect("pjrt local_solve execution failed");
+
+        SolveResult {
+            delta_alpha: da[..nk_real].iter().map(|&x| x as f64).collect(),
+            delta_v: dv[..m_real].iter().map(|&x| x as f64).collect(),
+            steps: if nk_real > 0 { h } else { 0 },
+        }
+    }
+}
+
+// Tests live in `rust/tests/integration_runtime.rs` — they need the real
+// artifact from `make artifacts`, which unit tests must not depend on.

@@ -1,0 +1,274 @@
+//! Native stochastic coordinate descent — the paper's compiled C++ module.
+//!
+//! Implementations (B), (D) and (E) call *identical* native code; here that
+//! code is this solver. It is the hot path of the entire system: one
+//! [`crate::linalg::dot_indexed`] + one [`crate::linalg::axpy_indexed`] per
+//! coordinate step, no allocation inside the loop.
+//!
+//! Math (paper Appendix A.2, DESIGN.md §5): for sampled coordinate j
+//!
+//! ```text
+//! α̃⁺ = (σ‖c_j‖²·α_j − c_jᵀ r) / (σ‖c_j‖² + λnη)
+//! α⁺  = sign(α̃⁺) · max(|α̃⁺| − τ, 0),   τ = λn(1−η) / (σ‖c_j‖² + λnη)
+//! r  += σ · (α⁺ − α_j) · c_j
+//! ```
+
+use super::{LocalSolver, SolveRequest, SolveResult};
+use crate::data::WorkerData;
+use crate::linalg::{self, Xorshift128};
+
+/// The compiled native local solver.
+#[derive(Debug, Default)]
+pub struct NativeScd {
+    /// Reused residual buffer (avoids an m-sized allocation per round).
+    r: Vec<f64>,
+    /// Reused local-alpha scratch.
+    alpha_buf: Vec<f64>,
+}
+
+impl NativeScd {
+    pub fn new() -> NativeScd {
+        NativeScd::default()
+    }
+}
+
+impl LocalSolver for NativeScd {
+    fn name(&self) -> &'static str {
+        "native-scd"
+    }
+
+    fn solve(&mut self, data: &WorkerData, alpha: &[f64], req: &SolveRequest) -> SolveResult {
+        let m = data.flat.m;
+        let nk = data.n_local();
+        debug_assert_eq!(alpha.len(), nk);
+        debug_assert_eq!(req.v.len(), m);
+        debug_assert_eq!(req.b.len(), m);
+
+        // r = v - b (the paper initializes the local residual from the
+        // shared vector each round).
+        self.r.clear();
+        self.r.extend(req.v.iter().zip(req.b.iter()).map(|(&v, &b)| v - b));
+        let r0: Vec<f64> = self.r.clone();
+
+        self.alpha_buf.clear();
+        self.alpha_buf.extend_from_slice(alpha);
+
+        let mut rng = Xorshift128::new(req.seed);
+        let sigma = req.sigma;
+        let lam_eta = req.lam_n * req.eta;
+        let tau_num = req.lam_n * (1.0 - req.eta);
+
+        let mut steps = 0usize;
+        if nk > 0 {
+            for _ in 0..req.h {
+                let j = rng.next_usize(nk);
+                let csq = data.col_sq[j];
+                let denom = sigma * csq + lam_eta;
+                if denom <= 0.0 {
+                    continue;
+                }
+                let (ri, vs) = data.flat.col(j);
+                let cj_r = linalg::dot_indexed(ri, vs, &self.r);
+                let aj = self.alpha_buf[j];
+                let atilde = (sigma * csq * aj - cj_r) / denom;
+                let anew = linalg::soft_threshold(atilde, tau_num / denom);
+                let delta = anew - aj;
+                if delta != 0.0 {
+                    linalg::axpy_indexed(sigma * delta, ri, vs, &mut self.r);
+                    self.alpha_buf[j] = anew;
+                }
+                steps += 1;
+            }
+        }
+
+        let delta_alpha: Vec<f64> = self
+            .alpha_buf
+            .iter()
+            .zip(alpha.iter())
+            .map(|(&a, &a0)| a - a0)
+            .collect();
+        let inv_sigma = 1.0 / sigma;
+        let delta_v: Vec<f64> = self
+            .r
+            .iter()
+            .zip(r0.iter())
+            .map(|(&rf, &r0)| (rf - r0) * inv_sigma)
+            .collect();
+
+        SolveResult {
+            delta_alpha,
+            delta_v,
+            steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::dense_gaussian;
+    use crate::data::WorkerData;
+    use crate::solver::check_result;
+
+    fn single_worker(m: usize, n: usize, seed: u64) -> (crate::data::Dataset, WorkerData) {
+        let ds = dense_gaussian(m, n, seed);
+        let cols: Vec<u32> = (0..n as u32).collect();
+        let wd = WorkerData::from_columns(&ds.a, &cols);
+        (ds, wd)
+    }
+
+    #[test]
+    fn delta_v_consistency() {
+        let (ds, wd) = single_worker(32, 16, 1);
+        let alpha = vec![0.0; 16];
+        let v = vec![0.0; 32];
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: 64,
+            lam_n: 0.5,
+            eta: 1.0,
+            sigma: 1.0,
+            seed: 2,
+        };
+        let res = NativeScd::new().solve(&wd, &alpha, &req);
+        assert_eq!(res.steps, 64);
+        check_result(&wd, &res, 1e-9).unwrap();
+    }
+
+    #[test]
+    fn objective_decreases_every_round() {
+        let (ds, wd) = single_worker(48, 24, 5);
+        let lam_n = 1.0;
+        let mut alpha = vec![0.0; 24];
+        let mut v = vec![0.0; 48];
+        let mut solver = NativeScd::new();
+        let mut prev = ds.objective(&alpha, lam_n, 1.0);
+        for round in 0..10 {
+            let req = SolveRequest {
+                v: &v,
+                b: &ds.b,
+                h: 24,
+                lam_n,
+                eta: 1.0,
+                sigma: 1.0,
+                seed: round,
+            };
+            let res = solver.solve(&wd, &alpha, &req);
+            for (a, d) in alpha.iter_mut().zip(res.delta_alpha.iter()) {
+                *a += d;
+            }
+            for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
+                *vi += d;
+            }
+            let cur = ds.objective(&alpha, lam_n, 1.0);
+            assert!(cur <= prev + 1e-10, "round {}: {} -> {}", round, prev, cur);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn converges_to_cg_ridge_optimum() {
+        let (ds, wd) = single_worker(40, 12, 9);
+        let lam_n = 0.8;
+        let mut alpha = vec![0.0; 12];
+        let mut v = vec![0.0; 40];
+        let mut solver = NativeScd::new();
+        for round in 0..300 {
+            let req = SolveRequest {
+                v: &v,
+                b: &ds.b,
+                h: 12,
+                lam_n,
+                eta: 1.0,
+                sigma: 1.0,
+                seed: round,
+            };
+            let res = solver.solve(&wd, &alpha, &req);
+            for (a, d) in alpha.iter_mut().zip(res.delta_alpha.iter()) {
+                *a += d;
+            }
+            for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
+                *vi += d;
+            }
+        }
+        let (opt, fstar) = crate::solver::cg::ridge_optimum(&ds, lam_n, 1e-12, 10_000);
+        let f = ds.objective(&alpha, lam_n, 1.0);
+        assert!(
+            (f - fstar) / fstar.abs().max(1.0) < 1e-6,
+            "f {} vs f* {}",
+            f,
+            fstar
+        );
+        for (a, o) in alpha.iter().zip(opt.iter()) {
+            assert!((a - o).abs() < 1e-4, "{} vs {}", a, o);
+        }
+    }
+
+    #[test]
+    fn lasso_produces_sparsity() {
+        let (ds, wd) = single_worker(32, 16, 11);
+        let lam_n = 60.0;
+        let mut alpha = vec![0.0; 16];
+        let mut v = vec![0.0; 32];
+        let mut solver = NativeScd::new();
+        for round in 0..60 {
+            let req = SolveRequest {
+                v: &v,
+                b: &ds.b,
+                h: 16,
+                lam_n,
+                eta: 0.0,
+                sigma: 1.0,
+                seed: round,
+            };
+            let res = solver.solve(&wd, &alpha, &req);
+            for (a, d) in alpha.iter_mut().zip(res.delta_alpha.iter()) {
+                *a += d;
+            }
+            for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
+                *vi += d;
+            }
+        }
+        let zeros = alpha.iter().filter(|a| a.abs() < 1e-10).count();
+        assert!(zeros >= 8, "expected sparsity, zeros = {}", zeros);
+    }
+
+    #[test]
+    fn empty_partition_is_noop() {
+        let ds = dense_gaussian(8, 4, 1);
+        let wd = WorkerData::from_columns(&ds.a, &[]);
+        let req = SolveRequest {
+            v: &vec![0.0; 8],
+            b: &ds.b,
+            h: 10,
+            lam_n: 1.0,
+            eta: 1.0,
+            sigma: 1.0,
+            seed: 0,
+        };
+        let res = NativeScd::new().solve(&wd, &[], &req);
+        assert_eq!(res.steps, 0);
+        assert!(res.delta_v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (ds, wd) = single_worker(16, 8, 3);
+        let alpha = vec![0.1; 8];
+        let v = ds.shared_vector(&alpha);
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: 32,
+            lam_n: 0.5,
+            eta: 0.7,
+            sigma: 2.0,
+            seed: 77,
+        };
+        let r1 = NativeScd::new().solve(&wd, &alpha, &req);
+        let r2 = NativeScd::new().solve(&wd, &alpha, &req);
+        assert_eq!(r1.delta_alpha, r2.delta_alpha);
+        assert_eq!(r1.delta_v, r2.delta_v);
+    }
+}

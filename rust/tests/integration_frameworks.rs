@@ -1,0 +1,163 @@
+//! Integration: framework substrates — byte accounting, overhead ordering,
+//! layout effects, RDD semantics under engine use.
+
+use sparkbench::config::{Impl, TrainConfig};
+use sparkbench::coordinator::run_fixed_rounds;
+use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+use sparkbench::data::Dataset;
+use sparkbench::framework::{build_engine, build_engine_with, EngineOptions, LayoutOverride};
+
+fn mid_dataset() -> Dataset {
+    // Large enough that per-byte/per-record costs dominate the τ-scaled
+    // fixed costs — the regime the paper operates in.
+    let mut spec = SyntheticSpec::small();
+    spec.m = 512;
+    spec.n = 4096;
+    spec.avg_col_nnz = 48;
+    webspam_like(&spec)
+}
+
+fn cfg_for(ds: &Dataset) -> TrainConfig {
+    let mut cfg = TrainConfig::default_for(ds);
+    cfg.workers = 4;
+    cfg
+}
+
+fn overheads(ds: &Dataset, cfg: &TrainConfig, imp: Impl, rounds: usize) -> (f64, f64, u64, u64) {
+    let mut engine = build_engine(imp, ds, cfg);
+    let rep = run_fixed_rounds(engine.as_mut(), ds, cfg, rounds);
+    let down: u64 = rep.logs.iter().map(|l| l.timing.bytes_down).sum();
+    let up: u64 = rep.logs.iter().map(|l| l.timing.bytes_up).sum();
+    (rep.total_overhead, rep.total_worker, down, up)
+}
+
+#[test]
+fn overhead_ordering_matches_figure3() {
+    let ds = mid_dataset();
+    let cfg = cfg_for(&ds);
+    let (ovh_e, _, _, _) = overheads(&ds, &cfg, Impl::Mpi, 20);
+    let (ovh_b, _, _, _) = overheads(&ds, &cfg, Impl::SparkC, 20);
+    let (ovh_a, _, _, _) = overheads(&ds, &cfg, Impl::SparkScala, 20);
+    let (ovh_d, _, _, _) = overheads(&ds, &cfg, Impl::PySparkC, 20);
+    assert!(ovh_e < ovh_b, "E {} !< B {}", ovh_e, ovh_b);
+    assert!(ovh_b <= ovh_a, "B {} !<= A {}", ovh_b, ovh_a);
+    assert!(
+        ovh_d > 3.0 * ovh_b,
+        "pySpark {} should far exceed Spark {}",
+        ovh_d,
+        ovh_b
+    );
+}
+
+#[test]
+fn persistent_memory_eliminates_alpha_traffic() {
+    let ds = mid_dataset();
+    let cfg = cfg_for(&ds);
+    let (_, _, down_b, up_b) = overheads(&ds, &cfg, Impl::SparkC, 10);
+    let (_, _, down_bs, up_bs) = overheads(&ds, &cfg, Impl::SparkCOpt, 10);
+    // B ships v+α down and Δv+α up; B* only v/Δv. With n_local = 2·m the
+    // α share is ~2/3 of traffic.
+    assert!(
+        (down_bs as f64) < 0.6 * down_b as f64,
+        "B* down {} !≪ B down {}",
+        down_bs,
+        down_b
+    );
+    assert!((up_bs as f64) < 0.6 * up_b as f64);
+}
+
+#[test]
+fn layout_ablation_flat_beats_records() {
+    let ds = mid_dataset();
+    let cfg = cfg_for(&ds);
+    let run = |layout: LayoutOverride| -> f64 {
+        let opts = EngineOptions {
+            force_layout: Some(layout),
+            ..Default::default()
+        };
+        let mut engine = build_engine_with(Impl::SparkC, &ds, &cfg, &opts);
+        run_fixed_rounds(engine.as_mut(), &ds, &cfg, 10).total_overhead
+    };
+    let flat = run(LayoutOverride::Flat);
+    let records = run(LayoutOverride::Records);
+    let meta = run(LayoutOverride::Meta);
+    assert!(flat < records, "flat {} !< records {}", flat, records);
+    assert!(meta <= flat, "meta {} !<= flat {}", meta, flat);
+}
+
+#[test]
+fn engines_expose_consistent_topology() {
+    let ds = mid_dataset();
+    let cfg = cfg_for(&ds);
+    for imp in Impl::ALL {
+        let engine = build_engine(imp, &ds, &cfg);
+        assert_eq!(engine.num_workers(), 4, "{}", imp.name());
+        let n_locals = engine.n_locals();
+        assert_eq!(n_locals.iter().sum::<usize>(), ds.n(), "{}", imp.name());
+        assert_eq!(engine.alpha_global().len(), ds.n());
+        assert_eq!(engine.clock(), 0.0);
+    }
+}
+
+#[test]
+fn timing_decomposition_is_complete() {
+    // T_tot == T_worker + T_master + T_overhead per round, for every engine.
+    let ds = mid_dataset();
+    let cfg = cfg_for(&ds);
+    for imp in [Impl::SparkScala, Impl::SparkC, Impl::PySpark, Impl::PySparkC, Impl::Mpi] {
+        let mut engine = build_engine(imp, &ds, &cfg);
+        let v = vec![0.0; ds.m()];
+        let before = engine.clock();
+        let (_, t) = engine.run_round(&v, 64, 1);
+        let after = engine.clock();
+        assert!(
+            ((after - before) - t.wall()).abs() < 1e-12,
+            "{}: clock delta {} != wall {}",
+            imp.name(),
+            after - before,
+            t.wall()
+        );
+        assert!(t.t_worker > 0.0);
+        assert!(t.t_overhead >= 0.0);
+        assert_eq!(t.worker_compute.len(), 4);
+    }
+}
+
+#[test]
+fn real_managed_compute_matches_multiplier_numerics() {
+    // The Figure 3 validation mode: genuinely interpreted solvers produce
+    // the same Δv as the native+multiplier mode (math is identical).
+    let ds = webspam_like(&SyntheticSpec::small());
+    let cfg = cfg_for(&ds);
+    let v = vec![0.0; ds.m()];
+    let fast_opts = EngineOptions::default();
+    let real_opts = EngineOptions {
+        real_managed_compute: true,
+        ..Default::default()
+    };
+    let mut fast = build_engine_with(Impl::SparkScala, &ds, &cfg, &fast_opts);
+    let mut real = build_engine_with(Impl::SparkScala, &ds, &cfg, &real_opts);
+    let (dv_fast, _) = fast.run_round(&v, 50, 7);
+    let (dv_real, _) = real.run_round(&v, 50, 7);
+    for (a, b) in dv_fast.iter().zip(dv_real.iter()) {
+        assert!((a - b).abs() < 1e-10, "{} vs {}", a, b);
+    }
+}
+
+#[test]
+fn scaling_worker_counts() {
+    // Engines work at every K the paper sweeps (Figure 8).
+    let ds = mid_dataset();
+    for k in [1usize, 2, 4, 8, 16] {
+        let mut cfg = cfg_for(&ds);
+        cfg.workers = k;
+        let mut engine = build_engine(Impl::Mpi, &ds, &cfg);
+        let v = vec![0.0; ds.m()];
+        let (dv, _) = engine.run_round(&v, 32, 1);
+        let alpha = engine.alpha_global();
+        let want = ds.shared_vector(&alpha);
+        for (a, b) in dv.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-9, "K={}", k);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Integration: the PJRT runtime against the real AOT artifact.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+//! These tests prove the L1 Pallas kernel ≡ L3 native solver equivalence
+//! across the actual serialized HLO boundary — the end-to-end correctness
+//! claim of the three-layer architecture.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+use sparkbench::data::WorkerData;
+use sparkbench::runtime::{Manifest, PjrtRuntime};
+use sparkbench::solver::{pjrt::PjrtScd, scd::NativeScd, LocalSolver, SolveRequest};
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("SPARKBENCH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            // cargo test runs from the workspace root
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+fn load() -> (Manifest, Arc<sparkbench::runtime::LocalSolveExec>) {
+    let man = Manifest::load(&artifacts_dir())
+        .expect("artifacts missing — run `make artifacts` before `cargo test`");
+    let rt = PjrtRuntime::cpu().expect("pjrt cpu client");
+    let exec = rt.load_local_solve(&man).expect("compile artifact");
+    (man, Arc::new(exec))
+}
+
+fn problem(man: &Manifest, nk: usize, seed: u64) -> (sparkbench::data::Dataset, WorkerData) {
+    let mut spec = SyntheticSpec::pjrt_default();
+    spec.m = man.m;
+    spec.n = nk.max(8);
+    spec.seed = seed;
+    let ds = webspam_like(&spec);
+    let cols: Vec<u32> = (0..nk as u32).collect();
+    let wd = WorkerData::from_columns(&ds.a, &cols);
+    (ds, wd)
+}
+
+#[test]
+fn artifact_loads_and_matches_manifest() {
+    let (man, exec) = load();
+    assert!(man.m > 0 && man.nk > 0 && man.h_max > 0);
+    assert_eq!(exec.manifest.m, man.m);
+}
+
+#[test]
+fn pjrt_matches_native_full_width() {
+    let (man, exec) = load();
+    let (ds, wd) = problem(&man, man.nk, 3);
+    let alpha = vec![0.0; wd.n_local()];
+    let v = vec![0.0; ds.m()];
+    let req = SolveRequest {
+        v: &v,
+        b: &ds.b,
+        h: 200.min(man.h_max),
+        lam_n: 25.0,
+        eta: 1.0,
+        sigma: 4.0,
+        seed: 11,
+    };
+    let rp = PjrtScd::new(exec).solve(&wd, &alpha, &req);
+    let rn = NativeScd::new().solve(&wd, &alpha, &req);
+    for (a, b) in rp.delta_alpha.iter().zip(rn.delta_alpha.iter()) {
+        assert!((a - b).abs() < 1e-3, "{} vs {} (f32 tolerance)", a, b);
+    }
+    for (a, b) in rp.delta_v.iter().zip(rn.delta_v.iter()) {
+        assert!((a - b).abs() < 1e-2, "{} vs {}", a, b);
+    }
+}
+
+#[test]
+fn pjrt_handles_padded_partition() {
+    // Partition narrower than the compiled nk → zero-column padding path.
+    let (man, exec) = load();
+    let (ds, wd) = problem(&man, man.nk / 3, 5);
+    let alpha = vec![0.0; wd.n_local()];
+    let v = vec![0.0; ds.m()];
+    let req = SolveRequest {
+        v: &v,
+        b: &ds.b,
+        h: 100.min(man.h_max),
+        lam_n: 10.0,
+        eta: 0.8, // elastic net through the artifact's runtime scalars
+        sigma: 2.0,
+        seed: 17,
+    };
+    let mut solver = PjrtScd::new(exec);
+    assert!(solver.fits(&wd));
+    let rp = solver.solve(&wd, &alpha, &req);
+    let rn = NativeScd::new().solve(&wd, &alpha, &req);
+    assert_eq!(rp.delta_alpha.len(), wd.n_local());
+    assert_eq!(rp.delta_v.len(), ds.m());
+    for (a, b) in rp.delta_alpha.iter().zip(rn.delta_alpha.iter()) {
+        assert!((a - b).abs() < 1e-3, "{} vs {}", a, b);
+    }
+}
+
+#[test]
+fn pjrt_h_zero_is_noop() {
+    let (man, exec) = load();
+    let (ds, wd) = problem(&man, man.nk / 4, 7);
+    let alpha = vec![0.1; wd.n_local()];
+    let v = ds.shared_vector(&{
+        let mut full = vec![0.0; ds.n()];
+        full[..wd.n_local()].copy_from_slice(&alpha);
+        full
+    });
+    let req = SolveRequest {
+        v: &v,
+        b: &ds.b,
+        h: 0,
+        lam_n: 1.0,
+        eta: 1.0,
+        sigma: 1.0,
+        seed: 0,
+    };
+    let rp = PjrtScd::new(exec).solve(&wd, &alpha, &req);
+    assert!(rp.delta_alpha.iter().all(|&x| x == 0.0));
+    assert!(rp.delta_v.iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn pjrt_multi_round_training_descends() {
+    // Several CoCoA rounds purely through the artifact: objective must
+    // decrease monotonically (within f32 noise).
+    let (man, exec) = load();
+    let (ds, wd) = problem(&man, man.nk, 9);
+    let lam_n = 0.05 * ds.n() as f64;
+    let mut alpha = vec![0.0; wd.n_local()];
+    let mut v = vec![0.0; ds.m()];
+    let mut solver = PjrtScd::new(exec);
+    let mut alpha_full = vec![0.0; ds.n()];
+    let mut prev = ds.objective(&alpha_full, lam_n, 1.0);
+    for round in 0..5 {
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: wd.n_local().min(man.h_max),
+            lam_n,
+            eta: 1.0,
+            sigma: 1.0,
+            seed: round,
+        };
+        let res = solver.solve(&wd, &alpha, &req);
+        for (a, d) in alpha.iter_mut().zip(res.delta_alpha.iter()) {
+            *a += d;
+        }
+        for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
+            *vi += d;
+        }
+        for (slot, &a) in alpha_full.iter_mut().zip(alpha.iter()) {
+            *slot = a;
+        }
+        let cur = ds.objective(&alpha_full, lam_n, 1.0);
+        assert!(cur <= prev * (1.0 + 1e-4), "round {}: {} -> {}", round, prev, cur);
+        prev = cur;
+    }
+}
+
+#[test]
+fn rejects_oversized_partition() {
+    let (man, exec) = load();
+    let mut spec = SyntheticSpec::pjrt_default();
+    spec.m = man.m;
+    spec.n = man.nk + 8;
+    let ds = webspam_like(&spec);
+    let cols: Vec<u32> = (0..(man.nk + 8) as u32).collect();
+    let wd = WorkerData::from_columns(&ds.a, &cols);
+    let solver = PjrtScd::new(exec);
+    assert!(!solver.fits(&wd));
+}

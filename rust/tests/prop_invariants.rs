@@ -1,0 +1,264 @@
+//! Property-based tests over the system invariants (testkit driver;
+//! proptest is unavailable offline — DESIGN.md).
+
+use sparkbench::config::{Impl, TrainConfig};
+use sparkbench::data::sparse::CscMatrix;
+use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+use sparkbench::data::{Partitioner, Partitioning, WorkerData};
+use sparkbench::framework::build_engine;
+use sparkbench::framework::serialization::{JavaSer, PickleSer};
+use sparkbench::linalg;
+use sparkbench::solver::{
+    check_result, minibatch_cd::MiniBatchCd, scd::NativeScd, sgd::MiniBatchSgd, LocalSolver,
+    SolveRequest,
+};
+use sparkbench::testkit::{check, Gen};
+
+fn random_dataset(g: &mut Gen) -> sparkbench::data::Dataset {
+    let spec = SyntheticSpec {
+        m: g.usize_in(8, 96),
+        n: g.usize_in(8, 192),
+        avg_col_nnz: g.usize_in(2, 12),
+        powerlaw_s: g.f64_in(1.05, 1.8),
+        model_density: g.f64_in(0.1, 0.9),
+        noise: g.f64_in(0.0, 0.2),
+        seed: g.seed(),
+    };
+    webspam_like(&spec)
+}
+
+#[test]
+fn prop_delta_v_always_equals_a_delta_alpha() {
+    check("delta_v == A·Δα for every solver", 40, |g| {
+        let ds = random_dataset(g);
+        let k = g.usize_in(1, 5);
+        let parts = Partitioning::build(
+            *g.pick(&[Partitioner::Range, Partitioner::RoundRobin, Partitioner::BalancedNnz]),
+            &ds.a,
+            k,
+            g.seed(),
+        );
+        let w = g.usize_in(0, k);
+        let wd = WorkerData::from_columns(&ds.a, &parts.parts[w]);
+        let alpha: Vec<f64> = g.gaussian_vec(wd.n_local());
+        let alpha_scaled: Vec<f64> = alpha.iter().map(|a| a * 0.1).collect();
+        let mut full = vec![0.0; ds.n()];
+        for (&gid, &a) in wd.global_ids.iter().zip(alpha_scaled.iter()) {
+            full[gid as usize] = a;
+        }
+        let v = ds.shared_vector(&full);
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: g.usize_in(0, 80),
+            lam_n: g.f64_in(0.01, 20.0),
+            eta: g.f64_in(0.0, 1.0),
+            sigma: g.f64_in(0.5, 8.0),
+            seed: g.seed(),
+        };
+        let mut solver: Box<dyn LocalSolver> = match g.usize_in(0, 3) {
+            0 => Box::new(NativeScd::new()),
+            1 => Box::new(MiniBatchCd::new()),
+            _ => Box::new(MiniBatchSgd::new(g.f64_in(0.01, 1.0), g.f64_in(0.1, 1.0))),
+        };
+        let res = solver.solve(&wd, &alpha_scaled, &req);
+        check_result(&wd, &res, 1e-7).map_err(|e| format!("{}: {}", solver.name(), e))
+    });
+}
+
+#[test]
+fn prop_partitioning_is_exact_cover() {
+    check("partitioning covers all columns exactly once", 60, |g| {
+        let n = g.usize_in(1, 500);
+        let m = g.usize_in(1, 50);
+        let a = CscMatrix::zeros(m, n);
+        let k = g.usize_in(1, 17);
+        let p = *g.pick(&[
+            Partitioner::Range,
+            Partitioner::RoundRobin,
+            Partitioner::BalancedNnz,
+            Partitioner::Random,
+        ]);
+        Partitioning::build(p, &a, k, g.seed()).validate(n)
+    });
+}
+
+#[test]
+fn prop_codecs_roundtrip() {
+    check("serialization codecs round-trip", 60, |g| {
+        let len = g.usize_in(0, 3000);
+        let v = g.gaussian_vec(len);
+        let j = JavaSer::decode(&JavaSer::encode(&v)).map_err(|e| e.to_string())?;
+        if j != v {
+            return Err("java mismatch".into());
+        }
+        let p = PickleSer::decode(&PickleSer::encode(&v)).map_err(|e| e.to_string())?;
+        if p != v {
+            return Err("pickle mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_objective_never_increases_under_cocoa_rounds() {
+    check("CoCoA round monotonically decreases objective", 20, |g| {
+        let ds = random_dataset(g);
+        let k = g.usize_in(1, 5);
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = k;
+        cfg.lam_n = g.f64_in(0.1, 5.0) * ds.n() as f64 * 0.01;
+        cfg.eta = 1.0;
+        let mut engine = build_engine(Impl::Mpi, &ds, &cfg);
+        let mut v = vec![0.0; ds.m()];
+        let mut prev = ds.objective(&engine.alpha_global(), cfg.lam_n, cfg.eta);
+        for round in 0..6 {
+            let h = g.usize_in(1, 64);
+            let (dv, _) = engine.run_round(&v, h, round);
+            linalg::add_assign(&mut v, &dv);
+            let cur = ds.objective(&engine.alpha_global(), cfg.lam_n, cfg.eta);
+            if cur > prev + 1e-7 * (1.0 + prev.abs()) {
+                return Err(format!("round {}: {} -> {}", round, prev, cur));
+            }
+            prev = cur;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engines_agree_numerically() {
+    check("all engines produce identical Δv given a seed", 12, |g| {
+        let ds = random_dataset(g);
+        let k = g.usize_in(2, 5);
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = k;
+        let v = vec![0.0; ds.m()];
+        let h = g.usize_in(1, 50);
+        let seed = g.seed();
+        let mut reference: Option<Vec<f64>> = None;
+        for imp in [Impl::Mpi, Impl::SparkC, Impl::SparkCOpt, Impl::PySpark, Impl::PySparkCOpt] {
+            let mut engine = build_engine(imp, &ds, &cfg);
+            let (dv, _) = engine.run_round(&v, h, seed);
+            match &reference {
+                None => reference = Some(dv),
+                Some(r) => {
+                    for (a, b) in dv.iter().zip(r.iter()) {
+                        if (a - b).abs() > 1e-10 {
+                            return Err(format!("{} diverged: {} vs {}", imp.name(), a, b));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csc_matvec_matches_dense() {
+    check("CSC matvec == dense matvec", 40, |g| {
+        let m = g.usize_in(1, 40);
+        let n = g.usize_in(1, 40);
+        let mut triplets = Vec::new();
+        for _ in 0..g.usize_in(0, 200) {
+            triplets.push((g.usize_in(0, m), g.usize_in(0, n), g.f64_in(-2.0, 2.0)));
+        }
+        let a = CscMatrix::from_triplets(m, n, &triplets);
+        a.validate()?;
+        let x = g.gaussian_vec(n);
+        let sparse = a.matvec(&x);
+        let dense = sparkbench::data::dense::DenseMatrix::from_csc(&a).matvec(&x);
+        for (s, d) in sparse.iter().zip(dense.iter()) {
+            if (s - d).abs() > 1e-9 {
+                return Err(format!("{} vs {}", s, d));
+            }
+        }
+        // And Aᵀy
+        let y = g.gaussian_vec(m);
+        let at = a.matvec_t(&y);
+        for (j, atj) in at.iter().enumerate() {
+            let (ri, vs) = a.col(j);
+            let want = linalg::dot_indexed(ri, vs, &y);
+            if (atj - want).abs() > 1e-9 {
+                return Err(format!("matvec_t col {}", j));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_libsvm_roundtrip() {
+    check("libsvm text round-trips datasets", 20, |g| {
+        let ds = random_dataset(g);
+        let text = sparkbench::data::libsvm::to_libsvm_string(&ds);
+        let back = sparkbench::data::libsvm::parse_libsvm(&text, Some(ds.n()))
+            .map_err(|e| e.to_string())?;
+        if back.m() != ds.m() || back.a.nnz() != ds.nnz() {
+            return Err(format!(
+                "shape changed: {}x{} nnz {} -> {}x{} nnz {}",
+                ds.m(),
+                ds.n(),
+                ds.nnz(),
+                back.m(),
+                back.n(),
+                back.a.nnz()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use sparkbench::util::json::Json;
+    check("json writer/parser round-trip", 40, |g| {
+        // build a random nested value
+        fn rand_json(g: &mut Gen, depth: usize) -> Json {
+            match if depth > 2 { g.usize_in(0, 4) } else { g.usize_in(0, 6) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                3 => Json::Str(format!("s{}-µ✓", g.usize_in(0, 1000))),
+                4 => Json::Num(g.usize_in(0, 100000) as f64),
+                5 => Json::Arr((0..g.usize_in(0, 5)).map(|_| rand_json(g, depth + 1)).collect()),
+                _ => {
+                    let mut o = Json::obj();
+                    for i in 0..g.usize_in(0, 5) {
+                        o.set(&format!("k{}", i), rand_json(g, depth + 1));
+                    }
+                    o
+                }
+            }
+        }
+        let j = rand_json(g, 0);
+        let s = j.pretty();
+        let back = Json::parse(&s).map_err(|e| e.to_string())?;
+        if back != j {
+            return Err(format!("mismatch:\n{}\nvs\n{}", s, back.pretty()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_worker_data_preserves_columns() {
+    check("WorkerData slices match the global matrix", 30, |g| {
+        let ds = random_dataset(g);
+        let k = g.usize_in(1, 6);
+        let parts = Partitioning::build(Partitioner::Random, &ds.a, k, g.seed());
+        for (w, cols) in parts.parts.iter().enumerate() {
+            let wd = WorkerData::from_columns(&ds.a, cols);
+            wd.flat.validate()?;
+            for (j, &gid) in wd.global_ids.iter().enumerate() {
+                let (ri_l, vs_l) = wd.flat.col(j);
+                let (ri_g, vs_g) = ds.a.col(gid as usize);
+                if ri_l != ri_g || vs_l != vs_g {
+                    return Err(format!("worker {} col {} mismatch", w, j));
+                }
+            }
+        }
+        Ok(())
+    });
+}
