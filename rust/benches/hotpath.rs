@@ -1,19 +1,50 @@
 //! Hot-path micro-benchmarks: the kernels the §Perf pass optimizes.
 //!
-//! Run with `cargo bench --bench hotpath`.
+//! Run with `cargo bench --bench hotpath`. Besides the per-kernel table it
+//! writes `BENCH_hotpath.json` at the repo root so the perf trajectory of
+//! the reduction/allocation work is tracked PR-over-PR. The headline
+//! comparisons:
+//!
+//! * **tree vs serial AllReduce** at K ∈ {4, 8, 16}: the old master loop
+//!   (fresh zeroed accumulator + K sequential `add_assign` passes) against
+//!   [`linalg::tree_reduce`] (in-place pairwise tree, level-parallel on
+//!   multi-core) — the acceptance bar is ≥ 1.5× at K = 8;
+//! * **pooled vs fresh-alloc round**: `NativeScd::solve` (owned result
+//!   buffers per call) against `solve_into` with persistent buffers, plus
+//!   the measured allocation counts per round from the counting allocator.
 
 use sparkbench::bench::{render_results, Bencher};
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
 use sparkbench::data::WorkerData;
 use sparkbench::framework::serialization::{JavaSer, PickleSer};
 use sparkbench::linalg;
-use sparkbench::solver::{scd::NativeScd, LocalSolver, SolveRequest};
+use sparkbench::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
+use sparkbench::testkit::alloc::{current_thread_allocations, CountingAllocator};
+use sparkbench::util::json::Json;
+
+/// Count every allocation the bench performs so the pooled-vs-fresh cases
+/// can report exact allocations/round next to their timings.
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// AllReduce problem size: large enough that one pairwise add dwarfs a
+/// thread spawn, which is the regime the reduction actually runs in at
+/// production scale (m = 1M doubles ≈ 8 MB/worker).
+const REDUCE_M: usize = 1 << 20;
+
+fn reduce_inputs(k: usize, m: usize) -> Vec<Vec<f64>> {
+    (0..k)
+        .map(|w| (0..m).map(|i| ((w * 31 + i) % 97) as f64 * 0.125).collect())
+        .collect()
+}
 
 fn main() {
     let b = Bencher::default();
     let mut results = Vec::new();
+    let mut json = Json::obj();
+    json.set("bench", "hotpath").set("schema_version", 2usize);
 
-    // Sparse dot / axpy — one call per SCD step, THE hot pair.
+    // ---- sparse dot / axpy — one call per SCD step, THE hot pair --------
     let ds = webspam_like(&SyntheticSpec::webspam_mini());
     let (ri, vs) = ds.a.col(100);
     let dense = vec![1.0; ds.m()];
@@ -28,7 +59,7 @@ fn main() {
         linalg::dot_indexed_fused(ri, vs, &dense)
     }));
 
-    // Full local solve, H = n_local (one worker round).
+    // ---- full local solve: fresh-alloc vs pooled ------------------------
     let cols: Vec<u32> = (0..(ds.n() as u32 / 8)).collect();
     let wd = WorkerData::from_columns(&ds.a, &cols);
     let alpha = vec![0.0; wd.n_local()];
@@ -43,31 +74,93 @@ fn main() {
         sigma: 8.0,
         seed: 1,
     };
-    results.push(b.run("native_scd round (H=n_local)", || {
+    let fresh = b.run("native_scd round (fresh alloc)", || {
         solver.solve(&wd, &alpha, &req)
-    }));
+    });
+    let a0 = current_thread_allocations();
+    let _ = solver.solve(&wd, &alpha, &req);
+    let fresh_allocs = current_thread_allocations() - a0;
 
-    // AllReduce aggregation (master hot loop).
-    let delta: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64; ds.m()]).collect();
-    results.push(b.run("allreduce agg (K=8, m=2048)", || {
-        let mut agg = vec![0.0; ds.m()];
-        for d in &delta {
-            linalg::add_assign(&mut agg, d);
-        }
-        agg
-    }));
+    let mut out = SolveResult::default();
+    solver.solve_into(&wd, &alpha, &req, &mut out); // warmup buffers
+    let pooled = b.run("native_scd round (pooled, solve_into)", || {
+        solver.solve_into(&wd, &alpha, &req, &mut out)
+    });
+    let a0 = current_thread_allocations();
+    solver.solve_into(&wd, &alpha, &req, &mut out);
+    let pooled_allocs = current_thread_allocations() - a0;
+    println!(
+        "allocations/round: fresh = {}, pooled = {} (pooled MUST be 0)",
+        fresh_allocs, pooled_allocs
+    );
+    let round_speedup = fresh.mean_s / pooled.mean_s.max(1e-12);
+    results.push(fresh.clone());
+    results.push(pooled.clone());
+    {
+        let mut jr = Json::obj();
+        jr.set("fresh_mean_s", fresh.mean_s)
+            .set("pooled_mean_s", pooled.mean_s)
+            .set("speedup", round_speedup)
+            .set("fresh_allocs_per_round", fresh_allocs)
+            .set("pooled_allocs_per_round", pooled_allocs);
+        json.set("pooled_round", jr);
+    }
 
-    // Serialization codecs (real byte work on the communicated vectors).
+    // ---- AllReduce: serial fold (old master loop) vs pairwise tree ------
+    let mut jallr = Json::obj();
+    for k in [4usize, 8, 16] {
+        let mut bufs = reduce_inputs(k, REDUCE_M);
+        let serial = b.run(&format!("allreduce serial fold (K={})", k), || {
+            let mut agg = vec![0.0; REDUCE_M];
+            for d in &bufs {
+                linalg::add_assign(&mut agg, d);
+            }
+            agg
+        });
+        let tree = b.run(&format!("allreduce tree (K={})", k), || {
+            let mut refs: Vec<&mut [f64]> =
+                bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            linalg::tree_reduce(&mut refs);
+        });
+        let speedup = serial.mean_s / tree.mean_s.max(1e-12);
+        println!(
+            "K={:2}: serial {:.3} ms, tree {:.3} ms → {:.2}x",
+            k,
+            serial.mean_s * 1e3,
+            tree.mean_s * 1e3,
+            speedup
+        );
+        let mut jk = Json::obj();
+        jk.set("serial_mean_s", serial.mean_s)
+            .set("tree_mean_s", tree.mean_s)
+            .set("speedup", speedup)
+            .set("m", REDUCE_M);
+        jallr.set(&format!("k{}", k), jk);
+        results.push(serial);
+        results.push(tree);
+    }
+    json.set("allreduce", jallr);
+
+    // ---- serialization codecs: fresh frames vs pooled encode_into -------
     let payload = vec![1.5f64; ds.m()];
-    results.push(b.run("java ser+deser (m=2048)", || {
+    results.push(b.run("java ser+deser (fresh frame)", || {
         JavaSer::decode(&JavaSer::encode(&payload)).unwrap()
     }));
-    results.push(b.run("pickle ser+deser (m=2048)", || {
+    let mut jframe = Vec::new();
+    JavaSer::encode_into(&payload, &mut jframe);
+    results.push(b.run("java encode_into (pooled frame)", || {
+        JavaSer::encode_into(&payload, &mut jframe)
+    }));
+    results.push(b.run("pickle ser+deser (fresh frame)", || {
         PickleSer::decode(&PickleSer::encode(&payload)).unwrap()
     }));
+    let mut pframe = Vec::new();
+    PickleSer::encode_into(&payload, &mut pframe);
+    results.push(b.run("pickle encode_into (pooled frame)", || {
+        PickleSer::encode_into(&payload, &mut pframe)
+    }));
 
-    // Dataset objective (suboptimality tracking cost) — O(nnz) matvec path
-    // vs the O(m+n) tracked-v path the coordinator uses (§Perf).
+    // ---- dataset objective (suboptimality tracking cost) ----------------
     let alpha_full = vec![0.01; ds.n()];
     results.push(b.run("objective (O(nnz) matvec)", || {
         ds.objective(&alpha_full, 1.0, 1.0)
@@ -77,38 +170,60 @@ fn main() {
         ds.objective_given_v(&v_full, &alpha_full, 1.0, 1.0)
     }));
 
-    // PJRT-executed Pallas kernel round (needs `make artifacts`).
-    use sparkbench::runtime::{Manifest, PjrtRuntime};
-    use sparkbench::solver::pjrt::PjrtScd;
-    use std::sync::Arc;
-    match Manifest::load(&Manifest::default_dir()) {
-        Ok(man) => {
-            let rt = PjrtRuntime::cpu().expect("pjrt client");
-            let exec = Arc::new(rt.load_local_solve(&man).expect("compile"));
-            let mut spec = sparkbench::data::synthetic::SyntheticSpec::pjrt_default();
-            spec.m = man.m;
-            spec.n = man.nk;
-            let pds = webspam_like(&spec);
-            let cols: Vec<u32> = (0..man.nk as u32).collect();
-            let pwd = WorkerData::from_columns(&pds.a, &cols);
-            let palpha = vec![0.0; pwd.n_local()];
-            let pv = vec![0.0; pds.m()];
-            let mut psolver = PjrtScd::new(exec);
-            let preq = SolveRequest {
-                v: &pv,
-                b: &pds.b,
-                h: pwd.n_local().min(man.h_max),
-                lam_n: 10.0,
-                eta: 1.0,
-                sigma: 4.0,
-                seed: 1,
-            };
-            results.push(b.run("pjrt_scd round (H=n_local, artifact)", || {
-                psolver.solve(&pwd, &palpha, &preq)
-            }));
+    // ---- PJRT-executed Pallas kernel round (needs `make artifacts`) -----
+    #[cfg(feature = "pjrt")]
+    {
+        use sparkbench::runtime::{Manifest, PjrtRuntime};
+        use sparkbench::solver::pjrt::PjrtScd;
+        use std::sync::Arc;
+        match Manifest::load(&Manifest::default_dir()) {
+            Ok(man) => {
+                let rt = PjrtRuntime::cpu().expect("pjrt client");
+                let exec = Arc::new(rt.load_local_solve(&man).expect("compile"));
+                let mut spec = SyntheticSpec::pjrt_default();
+                spec.m = man.m;
+                spec.n = man.nk;
+                let pds = webspam_like(&spec);
+                let pcols: Vec<u32> = (0..man.nk as u32).collect();
+                let pwd = WorkerData::from_columns(&pds.a, &pcols);
+                let palpha = vec![0.0; pwd.n_local()];
+                let pv = vec![0.0; pds.m()];
+                let mut psolver = PjrtScd::new(exec);
+                let preq = SolveRequest {
+                    v: &pv,
+                    b: &pds.b,
+                    h: pwd.n_local().min(man.h_max),
+                    lam_n: 10.0,
+                    eta: 1.0,
+                    sigma: 4.0,
+                    seed: 1,
+                };
+                results.push(b.run("pjrt_scd round (H=n_local, artifact)", || {
+                    psolver.solve(&pwd, &palpha, &preq)
+                }));
+            }
+            Err(_) => {
+                eprintln!("(artifacts missing — skipping pjrt bench; run `make artifacts`)")
+            }
         }
-        Err(_) => eprintln!("(artifacts missing — skipping pjrt bench; run `make artifacts`)"),
     }
 
     println!("{}", render_results("hotpath", &results));
+
+    // ---- perf-trajectory record -----------------------------------------
+    let mut jcases = Json::obj();
+    for s in &results {
+        let mut jc = Json::obj();
+        jc.set("mean_s", s.mean_s)
+            .set("median_s", s.median_s)
+            .set("stddev_s", s.stddev_s)
+            .set("samples", s.samples);
+        jcases.set(&s.name, jc);
+    }
+    json.set("cases", jcases);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    match std::fs::write(path, json.pretty() + "\n") {
+        Ok(()) => println!("wrote {}", path),
+        Err(e) => eprintln!("could not write {}: {}", path, e),
+    }
 }

@@ -15,7 +15,7 @@ use std::collections::VecDeque;
 use crate::config::TrainConfig;
 use crate::data::{Dataset, Partitioning, WorkerData};
 use crate::linalg;
-use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest};
+use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
 
 /// Simulated asynchronous parameter server running CoCoA-style updates.
 pub struct ParamServerSim {
@@ -37,6 +37,11 @@ pub struct ParamServerSim {
     /// step-size correction that keeps bounded-staleness updates stable;
     /// identity at s = 0).
     damping: f64,
+    /// Reused stale-view scratch (copy of the historical v the workers
+    /// read this epoch; zero-alloc steady state).
+    view_buf: Vec<f64>,
+    /// Per-worker reused round results (`solve_into` targets).
+    results: Vec<SolveResult>,
 }
 
 impl ParamServerSim {
@@ -51,6 +56,7 @@ impl ParamServerSim {
         let v = vec![0.0; ds.m()];
         let mut history = VecDeque::with_capacity(staleness + 1);
         history.push_front(v.clone());
+        let k = workers.len();
         ParamServerSim {
             workers,
             alphas,
@@ -64,13 +70,9 @@ impl ParamServerSim {
             b: ds.b.clone(),
             epoch: 0,
             damping: 1.0 / (1.0 + staleness as f64),
+            view_buf: Vec::with_capacity(ds.m()),
+            results: (0..k).map(|_| SolveResult::default()).collect(),
         }
-    }
-
-    /// The stale view workers read this epoch.
-    fn stale_view(&self) -> &Vec<f64> {
-        let idx = self.staleness.min(self.history.len() - 1);
-        &self.history[idx]
     }
 
     /// One epoch: every worker computes H steps against its stale view;
@@ -78,10 +80,13 @@ impl ParamServerSim {
     /// virtual-time benefit is that the epoch costs max(compute) with no
     /// synchronization gap, which the caller accounts for).
     pub fn run_epoch(&mut self, h: usize, seed: u64) {
-        let view = self.stale_view().clone();
+        // Copy the stale view into the reused scratch (no per-epoch clone).
+        let idx = self.staleness.min(self.history.len() - 1);
+        self.view_buf.clear();
+        self.view_buf.extend_from_slice(&self.history[idx]);
         for w in 0..self.workers.len() {
             let req = SolveRequest {
-                v: &view,
+                v: &self.view_buf,
                 b: &self.b,
                 h,
                 lam_n: self.lam_n,
@@ -89,16 +94,22 @@ impl ParamServerSim {
                 sigma: self.sigma,
                 seed: seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
             };
-            let res = self.solvers[w].solve(&self.workers[w], &self.alphas[w], &req);
+            self.solvers[w].solve_into(&self.workers[w], &self.alphas[w], &req, &mut self.results[w]);
             // Push: applied immediately at the server (arrival order),
             // damped by 1/(1+staleness) to keep stale updates stable.
-            linalg::axpy(self.damping, &res.delta_alpha, &mut self.alphas[w]);
-            linalg::axpy(self.damping, &res.delta_v, &mut self.v);
+            linalg::axpy(self.damping, &self.results[w].delta_alpha, &mut self.alphas[w]);
+            linalg::axpy(self.damping, &self.results[w].delta_v, &mut self.v);
         }
-        self.history.push_front(self.v.clone());
-        while self.history.len() > self.staleness + 1 {
-            self.history.pop_back();
-        }
+        // Ring update: recycle the evicted snapshot buffer instead of
+        // allocating a fresh clone of v every epoch.
+        let mut snap = if self.history.len() > self.staleness {
+            self.history.pop_back().unwrap()
+        } else {
+            Vec::with_capacity(self.v.len())
+        };
+        snap.clear();
+        snap.extend_from_slice(&self.v);
+        self.history.push_front(snap);
         self.epoch += 1;
     }
 

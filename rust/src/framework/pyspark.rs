@@ -26,6 +26,7 @@ use crate::data::{Dataset, Partitioning, WorkerData};
 use crate::linalg;
 use crate::simnet::VirtualClock;
 use crate::solver::{managed, scd, LocalSolver, SolveRequest};
+use crate::util::pool::BytePool;
 
 pub struct PySparkEngine {
     imp: Impl,
@@ -43,6 +44,8 @@ pub struct PySparkEngine {
     m: usize,
     records_per_task: Vec<usize>,
     compute_multiplier: f64,
+    /// Pooled pickle frames (driver-side encode reuses one buffer/round).
+    frame_pool: BytePool,
 }
 
 impl PySparkEngine {
@@ -124,6 +127,7 @@ impl PySparkEngine {
             m: ds.m(),
             records_per_task,
             compute_multiplier,
+            frame_pool: BytePool::with_buffers(1, pickle_encoded_len(ds.m())),
         }
     }
 
@@ -168,8 +172,9 @@ impl DistEngine for PySparkEngine {
         // is java-serialized for the wire, then unpickled in each python
         // worker: both codecs are charged (the paper's "additional
         // serialization steps").
-        let v_frame = PickleSer::encode(v);
-        debug_assert_eq!(PickleSer::decode(&v_frame).unwrap().len(), v.len());
+        let mut v_frame = self.frame_pool.take_cleared();
+        PickleSer::encode_into(v, &mut v_frame);
+        debug_assert_eq!(PickleSer::decode_slice(&v_frame).unwrap().len(), v.len());
         let alpha_down_bytes: Vec<u64> = if self.persistent() {
             vec![0; k]
         } else {
@@ -188,6 +193,7 @@ impl DistEngine for PySparkEngine {
             + self.model.py4j_roundtrip()
             + self.model.java_ser(bytes_down);
         let t_net_down = self.model.cluster.star_varied(&down_per_worker);
+        self.frame_pool.put(v_frame);
 
         // ---- 2. the stage -------------------------------------------------
         let data = Rc::clone(&self.data);
@@ -217,8 +223,10 @@ impl DistEngine for PySparkEngine {
             let secs = t0.elapsed().as_secs_f64();
             vec![(w, res, secs)]
         });
-        let (outs, stats) = job.collect_with_stats();
+        let (mut outs, stats) = job.collect_with_stats();
         debug_assert_eq!(stats.tasks, k);
+        // Rank order for the deterministic reduction tree below.
+        outs.sort_by_key(|(w, _, _)| *w);
 
         // ---- 3. per-task virtual times ------------------------------------
         let native_call = match self.imp {
@@ -257,15 +265,17 @@ impl DistEngine for PySparkEngine {
             + self.model.py4j_roundtrip()
             + self.model.numpy_pickle(bytes_up);
 
+        // Driver reduce: same pairwise tree as every other engine, in place
+        // (bit-identical Δv across substrates, no zeroed accumulator).
         let t0 = Instant::now();
-        let mut agg = vec![0.0; self.m];
         {
             let mut alpha = self.alpha.borrow_mut();
             for (w, res, _) in &outs {
-                linalg::add_assign(&mut agg, &res.delta_v);
                 linalg::add_assign(&mut alpha[*w], &res.delta_alpha);
             }
         }
+        let agg = linalg::tree_reduce_collect(outs.iter_mut().map(|(_, res, _)| &mut res.delta_v));
+        debug_assert_eq!(agg.len(), self.m);
         let t_master = t0.elapsed().as_secs_f64();
 
         // ---- 5. compose ----------------------------------------------------

@@ -35,9 +35,13 @@ const JAVA_MAGIC: u16 = 0xACED;
 const JAVA_BLOCK: usize = 1024;
 
 impl JavaSer {
-    /// Encode an f64 vector.
-    pub fn encode(v: &[f64]) -> Frame {
-        let mut out = Vec::with_capacity(8 + v.len() * 8 + v.len() / JAVA_BLOCK * 2 + 16);
+    /// Encode an f64 vector into a caller-owned buffer (cleared first).
+    /// With a pooled/persistent buffer the codec stops churning the
+    /// allocator — one `encode_into` per round instead of one `Vec` per
+    /// round (zero-allocation hot path; see `util::pool`).
+    pub fn encode_into(v: &[f64], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(java_encoded_len(v.len()));
         out.extend_from_slice(&JAVA_MAGIC.to_be_bytes());
         out.extend_from_slice(&(5u16).to_be_bytes()); // stream version
         out.extend_from_slice(&(v.len() as u64).to_be_bytes());
@@ -48,12 +52,22 @@ impl JavaSer {
             }
             out.extend_from_slice(&x.to_be_bytes());
         }
+    }
+
+    /// Encode an f64 vector.
+    pub fn encode(v: &[f64]) -> Frame {
+        let mut out = Vec::new();
+        JavaSer::encode_into(v, &mut out);
         Frame { bytes: out }
     }
 
     /// Decode; errors on malformed input.
     pub fn decode(f: &Frame) -> Result<Vec<f64>, String> {
-        let b = &f.bytes;
+        JavaSer::decode_slice(&f.bytes)
+    }
+
+    /// Decode raw bytes (the pooled-buffer counterpart of [`Self::decode`]).
+    pub fn decode_slice(b: &[u8]) -> Result<Vec<f64>, String> {
         if b.len() < 12 {
             return Err("short frame".into());
         }
@@ -90,9 +104,12 @@ const OP_APPEND: u8 = b'a';
 const OP_STOP: u8 = b'.';
 
 impl PickleSer {
-    pub fn encode(v: &[f64]) -> Frame {
+    /// Encode into a caller-owned buffer (cleared first) — the pooled,
+    /// allocation-free variant of [`Self::encode`].
+    pub fn encode_into(v: &[f64], out: &mut Vec<u8>) {
         // pickle floats are actually big-endian 'G'; we keep that detail.
-        let mut out = Vec::with_capacity(v.len() * 10 + 8);
+        out.clear();
+        out.reserve(pickle_encoded_len(v.len()));
         out.push(OP_PROTO);
         out.push(2);
         out.push(OP_EMPTY_LIST);
@@ -103,11 +120,20 @@ impl PickleSer {
             out.push(OP_APPEND);
         }
         out.push(OP_STOP);
+    }
+
+    pub fn encode(v: &[f64]) -> Frame {
+        let mut out = Vec::new();
+        PickleSer::encode_into(v, &mut out);
         Frame { bytes: out }
     }
 
     pub fn decode(f: &Frame) -> Result<Vec<f64>, String> {
-        let b = &f.bytes;
+        PickleSer::decode_slice(&f.bytes)
+    }
+
+    /// Decode raw bytes (pooled-buffer counterpart of [`Self::decode`]).
+    pub fn decode_slice(b: &[u8]) -> Result<Vec<f64>, String> {
         if b.len() < 12 || b[0] != OP_PROTO || b[2] != OP_EMPTY_LIST {
             return Err("bad pickle header".into());
         }
@@ -191,6 +217,36 @@ mod tests {
             bytes: JavaSer::encode(&v).bytes[..40].to_vec(),
         };
         assert!(JavaSer::decode(&t).is_err());
+    }
+
+    #[test]
+    fn encode_into_matches_encode_and_reuses_capacity() {
+        let v = sample();
+        let mut buf = Vec::new();
+        JavaSer::encode_into(&v, &mut buf);
+        assert_eq!(buf, JavaSer::encode(&v).bytes);
+        assert_eq!(JavaSer::decode_slice(&buf).unwrap(), v);
+        let cap = buf.capacity();
+        // Re-encoding a same-size payload must not grow the buffer, and
+        // after warmup must not allocate at all.
+        let before = crate::testkit::alloc::current_thread_allocations();
+        for _ in 0..5 {
+            JavaSer::encode_into(&v, &mut buf);
+        }
+        let after = crate::testkit::alloc::current_thread_allocations();
+        assert_eq!(after - before, 0, "pooled java encode allocated");
+        assert_eq!(buf.capacity(), cap);
+
+        let mut pbuf = Vec::new();
+        PickleSer::encode_into(&v, &mut pbuf);
+        assert_eq!(pbuf, PickleSer::encode(&v).bytes);
+        assert_eq!(PickleSer::decode_slice(&pbuf).unwrap(), v);
+        let before = crate::testkit::alloc::current_thread_allocations();
+        for _ in 0..5 {
+            PickleSer::encode_into(&v, &mut pbuf);
+        }
+        let after = crate::testkit::alloc::current_thread_allocations();
+        assert_eq!(after - before, 0, "pooled pickle encode allocated");
     }
 
     #[test]

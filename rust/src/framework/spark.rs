@@ -27,6 +27,7 @@ use crate::data::{Dataset, Partitioning, WorkerData};
 use crate::linalg;
 use crate::simnet::VirtualClock;
 use crate::solver::{managed, scd, sgd, LocalSolver, SolveRequest};
+use crate::util::pool::BytePool;
 
 pub struct SparkEngine {
     imp: Impl,
@@ -52,6 +53,9 @@ pub struct SparkEngine {
     extra_round_fixed: f64,
     /// TorrentBroadcast (vs driver star) for the broadcast path.
     torrent: bool,
+    /// Pooled serialization frames — the driver-side encode reuses one
+    /// checked-out buffer per round instead of allocating a codec frame.
+    frame_pool: BytePool,
 }
 
 impl SparkEngine {
@@ -157,6 +161,7 @@ impl SparkEngine {
             compute_multiplier,
             extra_round_fixed,
             torrent: opts.torrent_broadcast,
+            frame_pool: BytePool::with_buffers(1, java_encoded_len(ds.m())),
         }
     }
 
@@ -198,9 +203,12 @@ impl DistEngine for SparkEngine {
         let mllib = self.imp == Impl::MllibSgd;
 
         // ---- 1. Driver: serialize + broadcast shared state --------------
-        // Real encode (byte counts + integrity), modeled time.
-        let v_frame = JavaSer::encode(v);
-        debug_assert_eq!(JavaSer::decode(&v_frame).unwrap().len(), v.len());
+        // Real encode (byte counts + integrity), modeled time. The frame
+        // buffer is checked out of the engine's pool: zero steady-state
+        // allocations on the codec path (§Perf; util::pool).
+        let mut v_frame = self.frame_pool.take_cleared();
+        JavaSer::encode_into(v, &mut v_frame);
+        debug_assert_eq!(JavaSer::decode_slice(&v_frame).unwrap().len(), v.len());
         let alpha_down_bytes: Vec<u64> = if self.persistent() {
             vec![0; k]
         } else if mllib {
@@ -225,6 +233,7 @@ impl DistEngine for SparkEngine {
         } else {
             self.model.cluster.star_varied(&down_per_worker)
         };
+        self.frame_pool.put(v_frame);
 
         // ---- 2. The stage: mapPartitions(local solve) over the RDD ------
         let data = Rc::clone(&self.data);
@@ -248,14 +257,20 @@ impl DistEngine for SparkEngine {
                 sigma,
                 seed: round_seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
             };
+            // The per-task α clone and owned result are deliberate: vanilla
+            // Spark has no persistent worker buffers — every task ships its
+            // state (that cost is the paper's point; the zero-alloc path
+            // lives in the MPI/threaded engines).
             let alpha_w = alpha.borrow()[w].clone();
             let t0 = Instant::now();
             let res = solvers.borrow_mut()[w].solve(&data[w], &alpha_w, &req);
             let secs = t0.elapsed().as_secs_f64();
             vec![(w, res, secs)]
         });
-        let (outs, stats) = job.collect_with_stats();
+        let (mut outs, stats) = job.collect_with_stats();
         debug_assert_eq!(stats.tasks, k);
+        // Rank order for the deterministic reduction tree below.
+        outs.sort_by_key(|(w, _, _)| *w);
 
         // ---- 3. Per-task virtual times -----------------------------------
         let native_call = match self.imp {
@@ -295,15 +310,18 @@ impl DistEngine for SparkEngine {
         let t_net_up = self.model.cluster.star_varied(&up_per_worker);
         let t_deser_driver = self.model.java_deser(bytes_up);
 
+        // Driver reduce: the same pairwise tree as the MPI engines (Δv
+        // stays bit-identical across substrates), in place — no zeroed
+        // m-vector accumulator.
         let t0 = Instant::now();
-        let mut agg = vec![0.0; self.m];
         {
             let mut alpha = self.alpha.borrow_mut();
             for (w, res, _) in &outs {
-                linalg::add_assign(&mut agg, &res.delta_v);
                 linalg::add_assign(&mut alpha[*w], &res.delta_alpha);
             }
         }
+        let agg = linalg::tree_reduce_collect(outs.iter_mut().map(|(_, res, _)| &mut res.delta_v));
+        debug_assert_eq!(agg.len(), self.m);
         let t_master = t0.elapsed().as_secs_f64();
 
         // ---- 5. Compose the round on the virtual clock -------------------

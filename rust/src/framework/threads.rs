@@ -7,8 +7,32 @@
 //! virtual. Used by the e2e examples and as a cross-check that the
 //! virtual-clock trajectories equal physically-parallel trajectories
 //! (same seeds ⇒ same Δv, regardless of execution interleaving).
+//!
+//! ## Zero-allocation round protocol
+//!
+//! The original implementation paid, per round: a full clone of the shared
+//! vector `v` into *every* worker (K·m doubles), a clone of the label
+//! vector at construction per worker, a fresh Δv allocation per worker per
+//! round and a serial K-pass fold at the master — exactly the framework
+//! overheads the paper indicts. The broadcast, solve and reduce paths now
+//! run allocation-free in steady state (what remains per round is the
+//! caller-owned aggregate `Vec` the `run_round` API returns, plus the
+//! small timing vectors):
+//!
+//! * `v` is written once into an `Arc<Vec<f64>>` and *shared* with all
+//!   workers (true shared-memory broadcast; `Arc::make_mut` reclaims the
+//!   buffer after the barrier, so no allocation either);
+//! * labels `b` are a construction-time `Arc` shared by every rank;
+//! * each `Round` message carries a recycled Δv buffer from the master's
+//!   [`F64Pool`]; the worker swaps its result into it and the buffer comes
+//!   home with the reply — buffers orbit master ↔ workers forever;
+//! * the master combines the K deltas with the pairwise
+//!   [`linalg::tree_reduce`] **in rank order**, making the result
+//!   bit-identical to the virtual-clock MPI engine regardless of arrival
+//!   interleaving (asserted by `tests/integration_allreduce.rs`).
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -16,13 +40,18 @@ use super::{DistEngine, RoundTiming};
 use crate::config::{Impl, TrainConfig};
 use crate::data::{Dataset, Partitioning, WorkerData};
 use crate::linalg;
-use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest};
+use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
+use crate::util::pool::F64Pool;
 
 enum ToWorker {
     Round {
-        v: Vec<f64>,
+        /// Shared-memory broadcast of v — one copy total, not one per rank.
+        v: Arc<Vec<f64>>,
         h: usize,
         seed: u64,
+        /// Recycled Δv buffer from the master's pool; returns with the
+        /// reply carrying this round's result.
+        recycle: Vec<f64>,
     },
     GetAlpha,
     Shutdown,
@@ -54,6 +83,13 @@ pub struct ThreadedMpiEngine {
     n_total: usize,
     m: usize,
     wall: f64,
+    /// Reused broadcast buffer; refcount returns to 1 at the round barrier.
+    v_shared: Arc<Vec<f64>>,
+    /// Free list of Δv buffers cycling master → worker → master.
+    delta_pool: F64Pool,
+    /// Per-rank landing slots for this round's deltas (worker order, so the
+    /// reduction tree is deterministic under any arrival interleaving).
+    slots: Vec<Vec<f64>>,
 }
 
 impl ThreadedMpiEngine {
@@ -63,7 +99,9 @@ impl ThreadedMpiEngine {
         let mut global_ids = Vec::new();
         let mut n_locals = Vec::new();
         let (lam_n, eta, sigma) = (cfg.lam_n, cfg.eta, cfg.sigma());
-        let b_shared = ds.b.clone();
+        // One shared label vector for all ranks (the paper's workers each
+        // hold b; in shared memory one copy serves everyone).
+        let b_shared: Arc<Vec<f64>> = Arc::new(ds.b.clone());
 
         for (w, cols) in parts.parts.iter().enumerate() {
             let data = WorkerData::from_columns(&ds.a, cols);
@@ -71,17 +109,23 @@ impl ThreadedMpiEngine {
             n_locals.push(data.n_local());
             let (tx, worker_rx) = mpsc::channel::<ToWorker>();
             let result_tx = result_tx.clone();
-            let b = b_shared.clone();
+            let b = Arc::clone(&b_shared);
             let join = std::thread::Builder::new()
                 .name(format!("rank-{}", w))
                 .spawn(move || {
                     let mut alpha = vec![0.0; data.n_local()];
                     let mut solver = NativeScd::new();
+                    let mut res = SolveResult::default();
                     while let Ok(msg) = worker_rx.recv() {
                         match msg {
-                            ToWorker::Round { v, h, seed } => {
+                            ToWorker::Round {
+                                v,
+                                h,
+                                seed,
+                                mut recycle,
+                            } => {
                                 let req = SolveRequest {
-                                    v: &v,
+                                    v: v.as_slice(),
                                     b: &b,
                                     h,
                                     lam_n,
@@ -90,12 +134,20 @@ impl ThreadedMpiEngine {
                                     seed: seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
                                 };
                                 let t0 = Instant::now();
-                                let res = solver.solve(&data, &alpha, &req);
+                                solver.solve_into(&data, &alpha, &req, &mut res);
                                 let compute_s = t0.elapsed().as_secs_f64();
                                 linalg::add_assign(&mut alpha, &res.delta_alpha);
+                                // Hand the result back inside the recycled
+                                // buffer; keep its capacity for next round.
+                                std::mem::swap(&mut res.delta_v, &mut recycle);
+                                // Drop our v reference BEFORE the reply so
+                                // the master (which proceeds only after all
+                                // replies) sees refcount 1 and reuses the
+                                // broadcast buffer without cloning.
+                                drop(v);
                                 let _ = result_tx.send(FromWorker::RoundDone {
                                     worker: w,
-                                    delta_v: res.delta_v,
+                                    delta_v: recycle,
                                     compute_s,
                                 });
                             }
@@ -116,6 +168,7 @@ impl ThreadedMpiEngine {
             });
         }
 
+        let k = workers.len();
         ThreadedMpiEngine {
             workers,
             rx,
@@ -124,6 +177,9 @@ impl ThreadedMpiEngine {
             n_total: ds.n(),
             m: ds.m(),
             wall: 0.0,
+            v_shared: Arc::new(Vec::with_capacity(ds.m())),
+            delta_pool: F64Pool::with_buffers(k, ds.m()),
+            slots: (0..k).map(|_| Vec::new()).collect(),
         }
     }
 }
@@ -164,17 +220,26 @@ impl DistEngine for ThreadedMpiEngine {
         let k = self.workers.len();
         let t0 = Instant::now();
 
-        // Broadcast (real copy per worker — exactly MPI_Bcast semantics).
-        for w in &self.workers {
-            let _ = w.tx.send(ToWorker::Round {
-                v: v.to_vec(),
+        // Broadcast: one copy of v into the shared buffer, then an Arc
+        // clone per worker (pointer bump — the shared-memory equivalent of
+        // MPI_Bcast over ranks on one node). All worker references were
+        // dropped before last round's replies, so make_mut reclaims the
+        // existing buffer without cloning or allocating.
+        {
+            let buf = Arc::make_mut(&mut self.v_shared);
+            buf.clear();
+            buf.extend_from_slice(v);
+        }
+        for wk in self.workers.iter() {
+            let _ = wk.tx.send(ToWorker::Round {
+                v: Arc::clone(&self.v_shared),
                 h,
                 seed: round_seed,
+                recycle: self.delta_pool.take_cleared(),
             });
         }
 
-        // Gather + reduce (leader-side sum, real).
-        let mut agg = vec![0.0; self.m];
+        // Gather into rank-ordered slots (replies arrive in any order).
         let mut computes = vec![0.0; k];
         for _ in 0..k {
             match self.rx.recv().expect("worker died") {
@@ -183,11 +248,21 @@ impl DistEngine for ThreadedMpiEngine {
                     delta_v,
                     compute_s,
                 } => {
-                    linalg::add_assign(&mut agg, &delta_v);
+                    self.slots[worker] = delta_v;
                     computes[worker] = compute_s;
                 }
                 FromWorker::Alpha { .. } => unreachable!("unexpected alpha reply"),
             }
+        }
+
+        // Pairwise tree reduce in rank order — same tree as the
+        // virtual-clock MPI engine, hence bit-identical Δv.
+        let rt0 = Instant::now();
+        let agg = linalg::tree_reduce_collect(self.slots.iter_mut());
+        let t_master = rt0.elapsed().as_secs_f64();
+        // All K buffers go back to the pool for the next round.
+        for slot in self.slots.iter_mut() {
+            self.delta_pool.put(std::mem::take(slot));
         }
 
         let wall = t0.elapsed().as_secs_f64();
@@ -195,11 +270,12 @@ impl DistEngine for ThreadedMpiEngine {
         let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
         let timing = RoundTiming {
             t_worker,
-            t_master: 0.0,
-            t_overhead: (wall - t_worker).max(0.0),
+            t_master,
+            t_overhead: (wall - t_worker - t_master).max(0.0),
             worker_compute: computes,
             bytes_up: (self.m * 8 * k) as u64,
-            bytes_down: (self.m * 8 * k) as u64,
+            // Shared-memory broadcast moves one m-vector, not K.
+            bytes_down: (self.m * 8) as u64,
         };
         (agg, timing)
     }

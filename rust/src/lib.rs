@@ -35,6 +35,17 @@
 //! println!("final suboptimality {:.3e}", report.final_suboptimality);
 //! ```
 
+// The codebase favors explicit index loops where they mirror the paper's
+// per-worker/per-coordinate structure; keep clippy's style opinions on
+// those patterns out of `-D warnings` CI runs.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::manual_memcpy,
+    clippy::new_without_default
+)]
+
 pub mod bench;
 pub mod config;
 pub mod coordinator;
@@ -48,6 +59,14 @@ pub mod simnet;
 pub mod solver;
 pub mod testkit;
 pub mod util;
+
+/// Counting allocator for the unit-test binary: lets tests assert that the
+/// pooled round path performs zero steady-state heap allocations
+/// (see [`testkit::alloc`]). Deallocation is uncounted and delegated, so
+/// installing it costs one relaxed TLS bump per allocation.
+#[cfg(test)]
+#[global_allocator]
+static TEST_ALLOCATOR: testkit::alloc::CountingAllocator = testkit::alloc::CountingAllocator;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {

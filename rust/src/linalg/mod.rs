@@ -7,14 +7,33 @@
 //! bench tracks their throughput.
 
 pub mod rng;
+pub mod tree_reduce;
 
 pub use rng::Xorshift128;
+pub use tree_reduce::{tree_reduce, tree_reduce_collect, tree_reduce_seq, tree_reduce_vecs};
 
 /// `y += x`, the AllReduce aggregation kernel.
+///
+/// Processed in fixed-width chunks of 8 through `chunks_exact`, which hands
+/// the compiler bounds-check-free lanes it reliably turns into packed adds
+/// (`y += x` carries no cross-lane dependency, so the chunking exists purely
+/// to guarantee vectorization survives across rustc versions; §Perf log).
 #[inline]
 pub fn add_assign(y: &mut [f64], x: &[f64]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+    let mut yc = y.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (a, b) in yc.by_ref().zip(xc.by_ref()) {
+        a[0] += b[0];
+        a[1] += b[1];
+        a[2] += b[2];
+        a[3] += b[3];
+        a[4] += b[4];
+        a[5] += b[5];
+        a[6] += b[6];
+        a[7] += b[7];
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder().iter()) {
         *yi += *xi;
     }
 }
@@ -160,13 +179,21 @@ pub fn stddev(x: &[f64]) -> f64 {
     (x.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (x.len() - 1) as f64).sqrt()
 }
 
-/// Median (of a copy; input untouched).
+/// Median of the *finite-comparable* samples (of a copy; input untouched).
+/// NaN samples are excluded rather than panicking (`partial_cmp().unwrap()`
+/// used to abort here) or skewing the statistic toward the tail — bench
+/// samples can contain NaN when a clock misbehaves, and a stats helper
+/// must neither take the process down nor bias the report over it.
+/// All-NaN input yields NaN.
 pub fn median(x: &[f64]) -> f64 {
     if x.is_empty() {
         return 0.0;
     }
-    let mut v = x.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut v: Vec<f64> = x.iter().copied().filter(|f| !f.is_nan()).collect();
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -229,5 +256,34 @@ mod tests {
     fn norms() {
         assert_eq!(nrm2_sq(&[3.0, 4.0]), 25.0);
         assert_eq!(nrm1(&[-3.0, 4.0]), 7.0);
+    }
+
+    #[test]
+    fn median_survives_nan_input() {
+        // Regression: partial_cmp().unwrap() used to panic here. NaN
+        // samples are dropped, so the result is the median of the valid
+        // samples, not a tail-biased slot.
+        assert_eq!(median(&[f64::NAN, 1.0, 3.0]), 2.0);
+        assert_eq!(median(&[1.0, f64::NAN, 2.0, 3.0, f64::NAN]), 2.0);
+        assert!(median(&[f64::NAN]).is_nan());
+        assert!(median(&[f64::NAN, f64::NAN]).is_nan());
+        // Negative NaN is NaN too.
+        assert_eq!(median(&[-f64::NAN, 5.0, 7.0]), 6.0);
+    }
+
+    #[test]
+    fn add_assign_handles_all_remainder_lengths() {
+        // The chunked kernel must agree with the naive loop at every
+        // length around the unroll width.
+        for n in 0..33usize {
+            let x: Vec<f64> = (0..n).map(|i| i as f64 * 0.25 - 2.0).collect();
+            let mut y: Vec<f64> = (0..n).map(|i| i as f64 * -0.5 + 1.0).collect();
+            let mut want = y.clone();
+            for (w, xi) in want.iter_mut().zip(x.iter()) {
+                *w += *xi;
+            }
+            add_assign(&mut y, &x);
+            assert_eq!(y, want, "n={}", n);
+        }
     }
 }

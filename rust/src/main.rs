@@ -259,6 +259,16 @@ pub(crate) fn fmt_b(b: u64) -> String {
     sparkbench::util::fmt_bytes(b)
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_pjrt_smoke(_args: &Args) -> i32 {
+    eprintln!(
+        "pjrt support is not compiled into this binary; rebuild with \
+         `cargo build --features pjrt` (requires the xla crate — see rust/README.md)"
+    );
+    2
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_pjrt_smoke(args: &Args) -> i32 {
     use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
     use sparkbench::data::WorkerData;

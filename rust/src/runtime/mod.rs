@@ -6,12 +6,44 @@
 //! interchange format (jax ≥ 0.5 emits 64-bit instruction ids that
 //! xla_extension 0.5.1 rejects in proto form; the text parser reassigns
 //! ids). Executables are compiled once per process and cached.
+//!
+//! The manifest reader below is always available (it needs only the
+//! in-tree JSON codec); the PJRT client itself — everything touching the
+//! external `xla` crate — is compiled only under the off-by-default `pjrt`
+//! feature, so the default build carries zero external native
+//! dependencies. Enable with `--features pjrt` after adding the `xla`
+//! crate from the rust_pallas toolchain as a path dependency (see
+//! `rust/README.md`).
 
+use std::fmt;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
 use crate::util::json::Json;
+
+/// Error type of the runtime layer: a human-actionable message chain
+/// (replaces `anyhow`, which is unavailable in the offline build image).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> RuntimeError {
+        RuntimeError(msg.into())
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+macro_rules! rt_err {
+    ($($arg:tt)*) => { RuntimeError::new(format!($($arg)*)) };
+}
 
 /// Parsed `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
@@ -32,26 +64,27 @@ impl Manifest {
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {}", e))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            rt_err!("reading {} (run `make artifacts`): {}", path.display(), e)
+        })?;
+        let j = Json::parse(&text).map_err(|e| rt_err!("parsing manifest: {}", e))?;
         if j.at(&["format"]).and_then(|f| f.as_str()) != Some("hlo-text") {
-            bail!("manifest format is not hlo-text");
+            return Err(rt_err!("manifest format is not hlo-text"));
         }
         let ls = j
             .get("local_solve")
-            .ok_or_else(|| anyhow!("manifest missing local_solve"))?;
+            .ok_or_else(|| rt_err!("manifest missing local_solve"))?;
         let field = |k: &str| -> Result<usize> {
             ls.get(k)
                 .and_then(|v| v.as_usize())
-                .ok_or_else(|| anyhow!("manifest local_solve.{} missing", k))
+                .ok_or_else(|| rt_err!("manifest local_solve.{} missing", k))
         };
         Ok(Manifest {
             dir: dir.to_path_buf(),
             local_solve_file: ls
                 .get("file")
                 .and_then(|f| f.as_str())
-                .ok_or_else(|| anyhow!("manifest local_solve.file missing"))?
+                .ok_or_else(|| rt_err!("manifest local_solve.file missing"))?
                 .to_string(),
             m: field("m")?,
             nk: field("nk")?,
@@ -75,51 +108,6 @@ impl Manifest {
     }
 }
 
-/// A compiled PJRT executable for the L2 `local_solve` graph.
-pub struct LocalSolveExec {
-    exe: xla::PjRtLoadedExecutable,
-    pub manifest: Manifest,
-}
-
-/// The PJRT runtime: CPU client + compiled executables.
-pub struct PjrtRuntime {
-    pub client: xla::PjRtClient,
-}
-
-impl PjrtRuntime {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {:?}", e))?;
-        Ok(PjrtRuntime { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text file.
-    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {:?}", path.display(), e))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {:?}", path.display(), e))
-    }
-
-    /// Compile the `local_solve` artifact described by the manifest.
-    pub fn load_local_solve(&self, manifest: &Manifest) -> Result<LocalSolveExec> {
-        let path = manifest.dir.join(&manifest.local_solve_file);
-        let exe = self.compile_file(&path)?;
-        Ok(LocalSolveExec {
-            exe,
-            manifest: manifest.clone(),
-        })
-    }
-}
-
 /// Inputs to one kernel invocation, already padded to the compiled shape.
 pub struct LocalSolveArgs<'a> {
     /// Row-major `[m, nk]` f32.
@@ -136,52 +124,115 @@ pub struct LocalSolveArgs<'a> {
     pub sigma: f32,
 }
 
-impl LocalSolveExec {
-    /// Execute one CoCoA round on the PJRT device.
-    /// Returns `(delta_alpha [nk], delta_v [m])`.
-    pub fn run(&self, args: &LocalSolveArgs) -> Result<(Vec<f32>, Vec<f32>)> {
-        let man = &self.manifest;
-        let (m, nk, h_max) = (man.m as i64, man.nk as i64, man.h_max as i64);
-        if args.a.len() != (m * nk) as usize {
-            bail!("a has {} elems, artifact wants {}", args.a.len(), m * nk);
-        }
-        if args.idx.len() != h_max as usize {
-            bail!("idx has {} elems, artifact wants {}", args.idx.len(), h_max);
-        }
-        if args.h < 0 || args.h as i64 > h_max {
-            bail!("h {} outside [0, {}]", args.h, h_max);
+#[cfg(feature = "pjrt")]
+mod pjrt_exec {
+    use super::{LocalSolveArgs, Manifest, Result, RuntimeError};
+    use std::path::Path;
+
+    /// A compiled PJRT executable for the L2 `local_solve` graph.
+    pub struct LocalSolveExec {
+        exe: xla::PjRtLoadedExecutable,
+        pub manifest: Manifest,
+    }
+
+    /// The PJRT runtime: CPU client + compiled executables.
+    pub struct PjrtRuntime {
+        pub client: xla::PjRtClient,
+    }
+
+    impl PjrtRuntime {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> Result<PjrtRuntime> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| rt_err!("pjrt cpu client: {:?}", e))?;
+            Ok(PjrtRuntime { client })
         }
 
-        let lit_a = xla::Literal::vec1(args.a)
-            .reshape(&[m, nk])
-            .map_err(|e| anyhow!("reshape a: {:?}", e))?;
-        let lit_colsq = xla::Literal::vec1(args.col_sq);
-        let lit_alpha = xla::Literal::vec1(args.alpha);
-        let lit_v = xla::Literal::vec1(args.v);
-        let lit_b = xla::Literal::vec1(args.b);
-        let lit_idx = xla::Literal::vec1(args.idx);
-        let lit_h = xla::Literal::scalar(args.h);
-        let lit_lam = xla::Literal::scalar(args.lam_n);
-        let lit_eta = xla::Literal::scalar(args.eta);
-        let lit_sigma = xla::Literal::scalar(args.sigma);
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-        let outs = self
-            .exe
-            .execute::<xla::Literal>(&[
-                lit_a, lit_colsq, lit_alpha, lit_v, lit_b, lit_idx, lit_h, lit_lam, lit_eta,
-                lit_sigma,
-            ])
-            .map_err(|e| anyhow!("execute: {:?}", e))?;
-        let lit = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {:?}", e))?;
-        // aot.py lowers with return_tuple=True → a 2-tuple.
-        let (da, dv) = lit.to_tuple2().map_err(|e| anyhow!("tuple2: {:?}", e))?;
-        let delta_alpha = da.to_vec::<f32>().map_err(|e| anyhow!("dalpha: {:?}", e))?;
-        let delta_v = dv.to_vec::<f32>().map_err(|e| anyhow!("dv: {:?}", e))?;
-        Ok((delta_alpha, delta_v))
+        /// Load + compile an HLO-text file.
+        fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| rt_err!("non-utf8 path"))?,
+            )
+            .map_err(|e| rt_err!("parse {}: {:?}", path.display(), e))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client
+                .compile(&comp)
+                .map_err(|e| rt_err!("compile {}: {:?}", path.display(), e))
+        }
+
+        /// Compile the `local_solve` artifact described by the manifest.
+        pub fn load_local_solve(&self, manifest: &Manifest) -> Result<LocalSolveExec> {
+            let path = manifest.dir.join(&manifest.local_solve_file);
+            let exe = self.compile_file(&path)?;
+            Ok(LocalSolveExec {
+                exe,
+                manifest: manifest.clone(),
+            })
+        }
+    }
+
+    impl LocalSolveExec {
+        /// Execute one CoCoA round on the PJRT device.
+        /// Returns `(delta_alpha [nk], delta_v [m])`.
+        pub fn run(&self, args: &LocalSolveArgs) -> Result<(Vec<f32>, Vec<f32>)> {
+            let man = &self.manifest;
+            let (m, nk, h_max) = (man.m as i64, man.nk as i64, man.h_max as i64);
+            if args.a.len() != (m * nk) as usize {
+                return Err(rt_err!(
+                    "a has {} elems, artifact wants {}",
+                    args.a.len(),
+                    m * nk
+                ));
+            }
+            if args.idx.len() != h_max as usize {
+                return Err(rt_err!(
+                    "idx has {} elems, artifact wants {}",
+                    args.idx.len(),
+                    h_max
+                ));
+            }
+            if args.h < 0 || args.h as i64 > h_max {
+                return Err(rt_err!("h {} outside [0, {}]", args.h, h_max));
+            }
+
+            let lit_a = xla::Literal::vec1(args.a)
+                .reshape(&[m, nk])
+                .map_err(|e| rt_err!("reshape a: {:?}", e))?;
+            let lit_colsq = xla::Literal::vec1(args.col_sq);
+            let lit_alpha = xla::Literal::vec1(args.alpha);
+            let lit_v = xla::Literal::vec1(args.v);
+            let lit_b = xla::Literal::vec1(args.b);
+            let lit_idx = xla::Literal::vec1(args.idx);
+            let lit_h = xla::Literal::scalar(args.h);
+            let lit_lam = xla::Literal::scalar(args.lam_n);
+            let lit_eta = xla::Literal::scalar(args.eta);
+            let lit_sigma = xla::Literal::scalar(args.sigma);
+
+            let outs = self
+                .exe
+                .execute::<xla::Literal>(&[
+                    lit_a, lit_colsq, lit_alpha, lit_v, lit_b, lit_idx, lit_h, lit_lam, lit_eta,
+                    lit_sigma,
+                ])
+                .map_err(|e| rt_err!("execute: {:?}", e))?;
+            let lit = outs[0][0]
+                .to_literal_sync()
+                .map_err(|e| rt_err!("to_literal: {:?}", e))?;
+            // aot.py lowers with return_tuple=True → a 2-tuple.
+            let (da, dv) = lit.to_tuple2().map_err(|e| rt_err!("tuple2: {:?}", e))?;
+            let delta_alpha = da.to_vec::<f32>().map_err(|e| rt_err!("dalpha: {:?}", e))?;
+            let delta_v = dv.to_vec::<f32>().map_err(|e| rt_err!("dv: {:?}", e))?;
+            Ok((delta_alpha, delta_v))
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_exec::{LocalSolveExec, PjrtRuntime};
 
 #[cfg(test)]
 mod tests {

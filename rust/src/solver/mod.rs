@@ -10,6 +10,7 @@
 pub mod cg;
 pub mod managed;
 pub mod minibatch_cd;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod scd;
 pub mod sgd;
@@ -38,7 +39,11 @@ pub struct SolveRequest<'a> {
 /// A worker's round output: its coordinate update and the m-dimensional
 /// shared-vector update Δv = A·Δα_[k] it communicates (the ONLY payload the
 /// algorithm fundamentally requires — Figure 1).
-#[derive(Debug, Clone)]
+///
+/// Engines keep one `SolveResult` per worker alive across rounds and refill
+/// it through [`LocalSolver::solve_into`]; the buffers then reach steady
+/// capacity after the first round and the hot path stops allocating.
+#[derive(Debug, Clone, Default)]
 pub struct SolveResult {
     pub delta_alpha: Vec<f64>,
     pub delta_v: Vec<f64>,
@@ -57,7 +62,31 @@ pub trait LocalSolver {
     /// Run one round: `alpha` is the worker's current local coordinates
     /// (never mutated — the engine owns state placement, because *where*
     /// α lives is exactly what differs between implementations).
-    fn solve(&mut self, data: &WorkerData, alpha: &[f64], req: &SolveRequest) -> SolveResult;
+    fn solve(&mut self, data: &WorkerData, alpha: &[f64], req: &SolveRequest) -> SolveResult {
+        let mut out = SolveResult::default();
+        self.solve_into(data, alpha, req, &mut out);
+        out
+    }
+
+    /// Allocation-free variant: refill a caller-owned [`SolveResult`]
+    /// instead of returning fresh buffers. Engines call this with per-worker
+    /// persistent results so the round loop stops churning the allocator
+    /// (the tentpole of the zero-allocation hot path; verified by the
+    /// counting-allocator tests).
+    ///
+    /// Implementors must override at least one of `solve` / `solve_into`;
+    /// the defaults are defined in terms of each other. Solvers whose
+    /// runtime model *is* per-step allocation (the managed Scala/Python
+    /// solvers) keep the allocating default on purpose.
+    fn solve_into(
+        &mut self,
+        data: &WorkerData,
+        alpha: &[f64],
+        req: &SolveRequest,
+        out: &mut SolveResult,
+    ) {
+        *out = self.solve(data, alpha, req);
+    }
 
     /// Virtual-clock multiplier relative to the native solver (1.0 for
     /// native; the managed solvers report their *measured* slowdown).

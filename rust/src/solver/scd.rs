@@ -18,10 +18,18 @@ use crate::data::WorkerData;
 use crate::linalg::{self, Xorshift128};
 
 /// The compiled native local solver.
+///
+/// All scratch state (residual, round-start residual, local α copy) lives
+/// in reused members, and results are written through
+/// [`LocalSolver::solve_into`] into caller-owned buffers — after the first
+/// round a solve performs **zero** heap allocations (asserted by the
+/// counting-allocator test below and tracked by the hotpath bench).
 #[derive(Debug, Default)]
 pub struct NativeScd {
     /// Reused residual buffer (avoids an m-sized allocation per round).
     r: Vec<f64>,
+    /// Reused round-start residual (Δv = (r − r₀)/σ′ at round end).
+    r0: Vec<f64>,
     /// Reused local-alpha scratch.
     alpha_buf: Vec<f64>,
 }
@@ -37,7 +45,13 @@ impl LocalSolver for NativeScd {
         "native-scd"
     }
 
-    fn solve(&mut self, data: &WorkerData, alpha: &[f64], req: &SolveRequest) -> SolveResult {
+    fn solve_into(
+        &mut self,
+        data: &WorkerData,
+        alpha: &[f64],
+        req: &SolveRequest,
+        out: &mut SolveResult,
+    ) {
         let m = data.flat.m;
         let nk = data.n_local();
         debug_assert_eq!(alpha.len(), nk);
@@ -48,7 +62,8 @@ impl LocalSolver for NativeScd {
         // shared vector each round).
         self.r.clear();
         self.r.extend(req.v.iter().zip(req.b.iter()).map(|(&v, &b)| v - b));
-        let r0: Vec<f64> = self.r.clone();
+        self.r0.clear();
+        self.r0.extend_from_slice(&self.r);
 
         self.alpha_buf.clear();
         self.alpha_buf.extend_from_slice(alpha);
@@ -81,25 +96,22 @@ impl LocalSolver for NativeScd {
             }
         }
 
-        let delta_alpha: Vec<f64> = self
-            .alpha_buf
-            .iter()
-            .zip(alpha.iter())
-            .map(|(&a, &a0)| a - a0)
-            .collect();
+        out.delta_alpha.clear();
+        out.delta_alpha.extend(
+            self.alpha_buf
+                .iter()
+                .zip(alpha.iter())
+                .map(|(&a, &a0)| a - a0),
+        );
         let inv_sigma = 1.0 / sigma;
-        let delta_v: Vec<f64> = self
-            .r
-            .iter()
-            .zip(r0.iter())
-            .map(|(&rf, &r0)| (rf - r0) * inv_sigma)
-            .collect();
-
-        SolveResult {
-            delta_alpha,
-            delta_v,
-            steps,
-        }
+        out.delta_v.clear();
+        out.delta_v.extend(
+            self.r
+                .iter()
+                .zip(self.r0.iter())
+                .map(|(&rf, &r0)| (rf - r0) * inv_sigma),
+        );
+        out.steps = steps;
     }
 }
 
@@ -250,6 +262,65 @@ mod tests {
         let res = NativeScd::new().solve(&wd, &[], &req);
         assert_eq!(res.steps, 0);
         assert!(res.delta_v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn steady_state_solve_is_allocation_free() {
+        // The tentpole invariant: after one warmup round, `solve_into` with
+        // persistent result buffers never touches the allocator.
+        let (ds, wd) = single_worker(64, 32, 21);
+        let alpha = vec![0.0; 32];
+        let v = vec![0.0; 64];
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: 128,
+            lam_n: 0.5,
+            eta: 0.8,
+            sigma: 2.0,
+            seed: 9,
+        };
+        let mut solver = NativeScd::new();
+        let mut out = SolveResult::default();
+        solver.solve_into(&wd, &alpha, &req, &mut out); // warmup sizes all buffers
+        let before = crate::testkit::alloc::current_thread_allocations();
+        for round in 0..10u64 {
+            let round_req = SolveRequest { seed: round, ..req.clone() };
+            solver.solve_into(&wd, &alpha, &round_req, &mut out);
+        }
+        let after = crate::testkit::alloc::current_thread_allocations();
+        assert_eq!(after - before, 0, "pooled SCD round allocated");
+        assert!(out.steps > 0);
+    }
+
+    #[test]
+    fn solve_into_matches_solve() {
+        let (ds, wd) = single_worker(24, 12, 13);
+        let alpha = vec![0.05; 12];
+        let v = ds.shared_vector(&{
+            let mut full = vec![0.0; 12];
+            full.copy_from_slice(&alpha);
+            full
+        });
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: 48,
+            lam_n: 1.5,
+            eta: 0.6,
+            sigma: 3.0,
+            seed: 4,
+        };
+        let owned = NativeScd::new().solve(&wd, &alpha, &req);
+        let mut pooled = SolveResult {
+            delta_alpha: vec![99.0; 40], // stale garbage must be overwritten
+            delta_v: Vec::new(),
+            steps: 77,
+        };
+        NativeScd::new().solve_into(&wd, &alpha, &req, &mut pooled);
+        assert_eq!(owned.delta_alpha, pooled.delta_alpha);
+        assert_eq!(owned.delta_v, pooled.delta_v);
+        assert_eq!(owned.steps, pooled.steps);
     }
 
     #[test]

@@ -23,6 +23,10 @@ pub struct MiniBatchSgd {
     pub batch_fraction: f64,
     /// Round counter for the 1/√t decay schedule (MLlib default).
     t: usize,
+    /// Reused masked-residual scratch (m elements; zero-alloc rounds).
+    r: Vec<f64>,
+    /// Reused mini-batch row mask.
+    mask: Vec<bool>,
 }
 
 impl MiniBatchSgd {
@@ -31,6 +35,8 @@ impl MiniBatchSgd {
             step_size,
             batch_fraction: batch_fraction.clamp(1e-6, 1.0),
             t: 0,
+            r: Vec::new(),
+            mask: Vec::new(),
         }
     }
 
@@ -46,7 +52,13 @@ impl LocalSolver for MiniBatchSgd {
         "minibatch-sgd"
     }
 
-    fn solve(&mut self, data: &WorkerData, alpha: &[f64], req: &SolveRequest) -> SolveResult {
+    fn solve_into(
+        &mut self,
+        data: &WorkerData,
+        alpha: &[f64],
+        req: &SolveRequest,
+        out: &mut SolveResult,
+    ) {
         let m = data.flat.m;
         let nk = data.n_local();
         self.t += 1;
@@ -55,50 +67,52 @@ impl LocalSolver for MiniBatchSgd {
         // seeded by round — as if the driver broadcast the batch ids).
         let mut rng = Xorshift128::new(req.seed ^ 0x5bd1e995);
         let full_batch = self.batch_fraction >= 1.0;
-        let mut mask: Vec<bool> = Vec::new();
         let mut batch = m;
         if !full_batch {
-            mask = (0..m).map(|_| rng.next_f64() < self.batch_fraction).collect();
-            batch = mask.iter().filter(|&&x| x).count().max(1);
+            self.mask.clear();
+            self.mask
+                .extend((0..m).map(|_| rng.next_f64() < self.batch_fraction));
+            batch = self.mask.iter().filter(|&&x| x).count().max(1);
         }
         let scale = m as f64 / batch as f64;
 
-        let r: Vec<f64> = req
-            .v
-            .iter()
-            .zip(req.b.iter())
-            .enumerate()
-            .map(|(i, (&v, &b))| {
-                if full_batch || mask[i] {
-                    v - b
-                } else {
-                    0.0
-                }
-            })
-            .collect();
+        self.r.clear();
+        {
+            let mask = &self.mask;
+            self.r.extend(
+                req.v
+                    .iter()
+                    .zip(req.b.iter())
+                    .enumerate()
+                    .map(|(i, (&v, &b))| {
+                        if full_batch || mask[i] {
+                            v - b
+                        } else {
+                            0.0
+                        }
+                    }),
+            );
+        }
 
         // γ_t = stepSize / √t, normalized by m so the gradient magnitude is
         // scale-free (MLlib normalizes the loss by the datapoint count).
         let gamma = self.step_size / (self.t as f64).sqrt() / m as f64;
         let lam_eta = req.lam_n * req.eta;
 
-        let mut delta_alpha = vec![0.0; nk];
-        let mut delta_v = vec![0.0; m];
+        out.delta_alpha.clear();
+        out.delta_alpha.resize(nk, 0.0);
+        out.delta_v.clear();
+        out.delta_v.resize(m, 0.0);
         for j in 0..nk {
             let (ri, vs) = data.flat.col(j);
-            let g = scale * linalg::dot_indexed(ri, vs, &r) + lam_eta * alpha[j];
+            let g = scale * linalg::dot_indexed(ri, vs, &self.r) + lam_eta * alpha[j];
             let d = -gamma * g;
             if d != 0.0 {
-                delta_alpha[j] = d;
-                linalg::axpy_indexed(d, ri, vs, &mut delta_v);
+                out.delta_alpha[j] = d;
+                linalg::axpy_indexed(d, ri, vs, &mut out.delta_v);
             }
         }
-
-        SolveResult {
-            delta_alpha,
-            delta_v,
-            steps: nk,
-        }
+        out.steps = nk;
     }
 }
 

@@ -7,6 +7,8 @@
 
 use crate::linalg::Xorshift128;
 
+pub mod alloc;
+
 /// Random input generator handed to properties.
 pub struct Gen {
     rng: Xorshift128,

@@ -7,6 +7,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod pool;
 
 /// Format a duration in engineer-friendly units (`1.23s`, `45.6ms`, `789µs`).
 pub fn fmt_duration(secs: f64) -> String {

@@ -1,0 +1,164 @@
+//! Reusable-buffer pool: checkout/checkin of `Vec<f64>` / `Vec<u8>` scratch
+//! buffers so the per-round hot path performs zero steady-state heap
+//! allocations.
+//!
+//! The paper's central measurement is that framework overhead — copies,
+//! serialization, aggregation bookkeeping — dominates distributed training
+//! long before arithmetic does. Our own engines initially re-created those
+//! overheads in miniature: every CoCoA round allocated fresh Δv buffers on
+//! every worker, a fresh aggregation accumulator on the master and a fresh
+//! codec frame per broadcast. This pool closes that gap: buffers are checked
+//! out (`take_cleared` / `take_zeroed`), used, and checked back in (`put`);
+//! after the first round the free list supplies every request and the
+//! allocator is never entered again (verified by the counting-allocator
+//! tests in [`crate::testkit::alloc`] and tracked by `cargo bench --bench
+//! hotpath`).
+//!
+//! Pools are deliberately single-threaded (`&mut self`): each engine — and
+//! each worker thread of the threaded engine — owns its own pool, so there
+//! is no cross-thread synchronization on the hot path. Buffers that cross
+//! threads (the threaded engine's Δv exchange) travel *through messages* and
+//! return to the master's pool with the reply, which keeps ownership simple
+//! and allocation-free at the same time.
+
+/// A free list of reusable `Vec<T>` buffers.
+///
+/// `put` returns a buffer to the pool; `take_*` reuses the most recently
+/// returned buffer (LIFO — the warmest cache lines first) or allocates a
+/// fresh one only when the pool is empty.
+#[derive(Debug)]
+pub struct Pool<T> {
+    free: Vec<Vec<T>>,
+    created: u64,
+    reused: u64,
+}
+
+/// Pool of `Vec<f64>` scratch buffers (Δv slots, residuals, aggregates).
+pub type F64Pool = Pool<f64>;
+/// Pool of `Vec<u8>` scratch buffers (serialization frames).
+pub type BytePool = Pool<u8>;
+
+impl<T: Copy + Default> Pool<T> {
+    pub fn new() -> Pool<T> {
+        Pool {
+            free: Vec::new(),
+            created: 0,
+            reused: 0,
+        }
+    }
+
+    /// Pre-populate the pool with `count` buffers of capacity `cap` so the
+    /// very first round is allocation-free too.
+    pub fn with_buffers(count: usize, cap: usize) -> Pool<T> {
+        let mut p = Pool::new();
+        for _ in 0..count {
+            p.free.push(Vec::with_capacity(cap));
+        }
+        p
+    }
+
+    /// Check out an empty buffer (length 0, capacity whatever the returned
+    /// buffer accumulated in prior rounds).
+    pub fn take_cleared(&mut self) -> Vec<T> {
+        match self.free.pop() {
+            Some(mut b) => {
+                b.clear();
+                self.reused += 1;
+                b
+            }
+            None => {
+                self.created += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Check out a buffer of exactly `len` default-valued elements.
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<T> {
+        let mut b = self.take_cleared();
+        b.resize(len, T::default());
+        b
+    }
+
+    /// Check a buffer back in. Its contents are irrelevant; its capacity is
+    /// what the pool preserves.
+    pub fn put(&mut self, buf: Vec<T>) {
+        self.free.push(buf);
+    }
+
+    /// Buffers currently parked in the free list.
+    pub fn idle(&self) -> usize {
+        self.free.len()
+    }
+
+    /// `(fresh allocations, reuses)` served so far — the steady-state
+    /// invariant is that `created` stops growing after warmup.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.created, self.reused)
+    }
+}
+
+impl<T: Copy + Default> Default for Pool<T> {
+    fn default() -> Self {
+        Pool::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuses_buffers_lifo() {
+        let mut p = F64Pool::new();
+        let mut a = p.take_zeroed(16);
+        assert_eq!(a.len(), 16);
+        a[3] = 7.0;
+        let cap = a.capacity();
+        p.put(a);
+        let b = p.take_zeroed(8);
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|&x| x == 0.0), "take_zeroed must zero");
+        assert_eq!(b.capacity(), cap, "capacity survives the round trip");
+        assert_eq!(p.stats(), (1, 1));
+    }
+
+    #[test]
+    fn prewarmed_pool_never_allocates() {
+        let mut p = BytePool::with_buffers(4, 64);
+        for _ in 0..10 {
+            let bufs: Vec<Vec<u8>> = (0..4).map(|_| p.take_zeroed(64)).collect();
+            for b in bufs {
+                p.put(b);
+            }
+        }
+        let (created, reused) = p.stats();
+        assert_eq!(created, 0, "prewarmed pool must not allocate");
+        assert_eq!(reused, 40);
+        assert_eq!(p.idle(), 4);
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        // After warmup, checkout/checkin cycles never touch the allocator.
+        let mut p = F64Pool::new();
+        // warmup round
+        let bufs: Vec<Vec<f64>> = (0..3).map(|_| p.take_zeroed(256)).collect();
+        for b in bufs {
+            p.put(b);
+        }
+        let before = crate::testkit::alloc::current_thread_allocations();
+        for _ in 0..50 {
+            let bufs: Vec<Vec<f64>> = Vec::new(); // no outer alloc either
+            drop(bufs);
+            let a = p.take_zeroed(256);
+            let b = p.take_cleared();
+            let c = p.take_zeroed(128);
+            p.put(a);
+            p.put(b);
+            p.put(c);
+        }
+        let after = crate::testkit::alloc::current_thread_allocations();
+        assert_eq!(after - before, 0, "steady-state pool cycles allocated");
+    }
+}

@@ -1,0 +1,112 @@
+//! Integration: AllReduce equivalence across execution substrates.
+//!
+//! The tree reduction must make physical parallelism numerically
+//! invisible: the physically-threaded engine (replies arrive in arbitrary
+//! interleavings, deltas land in rank-ordered slots) and the virtual-clock
+//! MPI engine (sequential execution) combine worker deltas through the
+//! identical pairwise tree, so their Δv trajectories are **bit-identical**
+//! — not merely close. K covers powers of two and the non-power-of-two
+//! binomial-tree edge cases.
+
+use sparkbench::config::TrainConfig;
+use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+use sparkbench::data::{Dataset, Partitioner, Partitioning};
+use sparkbench::framework::mpi::MpiEngine;
+use sparkbench::framework::threads::ThreadedMpiEngine;
+use sparkbench::framework::DistEngine;
+use sparkbench::linalg;
+
+fn setup(k: usize) -> (Dataset, TrainConfig, Partitioning) {
+    let ds = webspam_like(&SyntheticSpec::small());
+    let mut cfg = TrainConfig::default_for(&ds);
+    cfg.workers = k;
+    let parts = Partitioning::build(Partitioner::Range, &ds.a, k, 0);
+    (ds, cfg, parts)
+}
+
+/// Run `rounds` rounds on both engines, asserting bitwise-equal Δv and
+/// identical α state afterwards.
+fn assert_bit_identical_trajectories(k: usize, rounds: u64, h: usize) {
+    let (ds, cfg, parts) = setup(k);
+    let mut threaded = ThreadedMpiEngine::new(&ds, &parts, &cfg);
+    let mut virtual_eng = MpiEngine::build(&ds, &parts, &cfg);
+    let mut v1 = vec![0.0; ds.m()];
+    let mut v2 = vec![0.0; ds.m()];
+    for round in 0..rounds {
+        let (dv1, _) = threaded.run_round(&v1, h, round);
+        let (dv2, _) = virtual_eng.run_round(&v2, h, round);
+        for (i, (a, b)) in dv1.iter().zip(dv2.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "K={} round {} dv[{}]: {} vs {} (must be BIT-identical)",
+                k,
+                round,
+                i,
+                a,
+                b
+            );
+        }
+        linalg::add_assign(&mut v1, &dv1);
+        linalg::add_assign(&mut v2, &dv2);
+    }
+    let a1 = threaded.alpha_global();
+    let a2 = virtual_eng.alpha_global();
+    for (x, y) in a1.iter().zip(a2.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "K={}: alpha diverged", k);
+    }
+}
+
+#[test]
+fn threaded_equals_virtual_k2() {
+    assert_bit_identical_trajectories(2, 6, 40);
+}
+
+#[test]
+fn threaded_equals_virtual_k8() {
+    assert_bit_identical_trajectories(8, 6, 40);
+}
+
+#[test]
+fn threaded_equals_virtual_non_power_of_two() {
+    // K=5 exercises the orphan-rank path of the binomial tree:
+    // (0+1), (2+3) → (0+2) → (0+4).
+    assert_bit_identical_trajectories(5, 5, 30);
+    assert_bit_identical_trajectories(3, 5, 30);
+}
+
+#[test]
+fn tree_order_is_rank_order_not_arrival_order() {
+    // Run the threaded engine many times on the same round; thread
+    // scheduling permutes arrival order between runs, but slotting +
+    // fixed-tree reduction must make every run emit identical bits.
+    let (ds, cfg, parts) = setup(8);
+    let v = vec![0.0; ds.m()];
+    let mut reference: Option<Vec<u64>> = None;
+    for _ in 0..5 {
+        let mut eng = ThreadedMpiEngine::new(&ds, &parts, &cfg);
+        let (dv, _) = eng.run_round(&v, 50, 7);
+        let bits: Vec<u64> = dv.iter().map(|x| x.to_bits()).collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(r) => assert_eq!(&bits, r, "arrival interleaving leaked into the reduction"),
+        }
+    }
+}
+
+#[test]
+fn every_worker_count_reduces_consistently() {
+    // Δv == A·Δα must hold for every K, including K > sensible (idle
+    // workers contribute zero-vectors to the tree).
+    for k in [1usize, 2, 4, 6, 7, 16] {
+        let (ds, cfg, parts) = setup(k);
+        let mut eng = ThreadedMpiEngine::new(&ds, &parts, &cfg);
+        let v = vec![0.0; ds.m()];
+        let (dv, _) = eng.run_round(&v, 25, 3);
+        let alpha = eng.alpha_global();
+        let want = ds.shared_vector(&alpha);
+        for (a, b) in dv.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-9, "K={}: {} vs {}", k, a, b);
+        }
+    }
+}

@@ -1,9 +1,13 @@
 //! Integration: the PJRT runtime against the real AOT artifact.
 //!
-//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+//! Requires `make artifacts` (the Makefile `test` target guarantees it)
+//! and a build with the off-by-default `pjrt` feature — without it this
+//! test crate compiles to nothing.
+//!
 //! These tests prove the L1 Pallas kernel ≡ L3 native solver equivalence
 //! across the actual serialized HLO boundary — the end-to-end correctness
 //! claim of the three-layer architecture.
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 use std::sync::Arc;
