@@ -11,13 +11,22 @@
 //!   multi-core) — the acceptance bar is ≥ 1.5× at K = 8;
 //! * **pooled vs fresh-alloc round**: `NativeScd::solve` (owned result
 //!   buffers per call) against `solve_into` with persistent buffers, plus
-//!   the measured allocation counts per round from the counting allocator.
+//!   the measured allocation counts per round from the counting allocator;
+//! * **sparse Δv frames** (DESIGN.md §7): actual encoded bytes/round of
+//!   the nnz-adaptive frames vs dense on a sparse workload (bar: ≥ 5×
+//!   fewer at nnz/m ≤ 0.1, 0 steady-state allocations in the
+//!   extract→encode→reduce pipeline), and a dense-vs-sparse H sweep
+//!   locating the optimal-H shift.
 
 use sparkbench::bench::{render_results, Bencher};
+use sparkbench::config::{Impl, TrainConfig};
+use sparkbench::coordinator;
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
-use sparkbench::data::WorkerData;
-use sparkbench::framework::serialization::{JavaSer, PickleSer};
+use sparkbench::data::{Partitioner, Partitioning, WorkerData};
+use sparkbench::framework::serialization::{java_encoded_len, java_sparse_cutover, JavaSer, PickleSer};
+use sparkbench::framework::{build_engine_with, EngineOptions};
 use sparkbench::linalg;
+use sparkbench::linalg::{DeltaReducer, DeltaSlot};
 use sparkbench::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
 use sparkbench::testkit::alloc::{current_thread_allocations, CountingAllocator};
 use sparkbench::util::json::Json;
@@ -42,7 +51,7 @@ fn main() {
     let b = Bencher::default();
     let mut results = Vec::new();
     let mut json = Json::obj();
-    json.set("bench", "hotpath").set("schema_version", 2usize);
+    json.set("bench", "hotpath").set("schema_version", 3usize);
 
     // ---- sparse dot / axpy — one call per SCD step, THE hot pair --------
     let ds = webspam_like(&SyntheticSpec::webspam_mini());
@@ -159,6 +168,163 @@ fn main() {
     results.push(b.run("pickle encode_into (pooled frame)", || {
         PickleSer::encode_into(&payload, &mut pframe)
     }));
+
+    // ---- sparse Δv frames: bytes/round, allocs, optimal-H shift ---------
+    // Sparse workload (DESIGN.md §7): columns carry ~8 of 4096 rows, so a
+    // small-H round's Δv has nnz/m ≤ 0.1 and the nnz-adaptive layer emits
+    // sparse frames. Acceptance bars: ≥5× fewer Δv bytes/round than dense
+    // and 0 steady-state allocations in the extract→encode→reduce pipeline.
+    {
+        let spec = SyntheticSpec {
+            m: 4096,
+            n: 8192,
+            avg_col_nnz: 8,
+            powerlaw_s: 1.1,
+            model_density: 0.2,
+            noise: 0.02,
+            seed: 5,
+        };
+        let sds = webspam_like(&spec);
+        let m = sds.m();
+        let k = 8usize;
+        let mut cfg = TrainConfig::default_for(&sds);
+        cfg.workers = k;
+        let h_sparse = 32usize;
+
+        // K real worker deltas at small H (the sparse regime).
+        let parts = Partitioning::build(Partitioner::Range, &sds.a, k, 0);
+        let v0 = vec![0.0; m];
+        let mut deltas: Vec<Vec<f64>> = Vec::new();
+        for w in 0..k {
+            let swd = WorkerData::from_columns(&sds.a, &parts.parts[w]);
+            let salpha = vec![0.0; swd.n_local()];
+            let sreq = SolveRequest {
+                v: &v0,
+                b: &sds.b,
+                h: h_sparse,
+                lam_n: cfg.lam_n,
+                eta: cfg.eta,
+                sigma: cfg.sigma(),
+                seed: 1 + w as u64,
+            };
+            deltas.push(NativeScd::new().solve(&swd, &salpha, &sreq).delta_v);
+        }
+        let nnz_max = deltas
+            .iter()
+            .map(|d| d.iter().filter(|&&x| x != 0.0).count())
+            .max()
+            .unwrap_or(0);
+        let nnz_frac = nnz_max as f64 / m as f64;
+
+        // Frame bytes: the counterfactual dense frames vs the ACTUAL
+        // sparse encodes (java codec, delta-varint indices).
+        let mut red = DeltaReducer::new(m, java_sparse_cutover(m));
+        let mut slots: Vec<DeltaSlot> = (0..k).map(|_| DeltaSlot::new()).collect();
+        let mut frame = Vec::new();
+        let mut sparse_bytes = 0u64;
+        for (slot, d) in slots.iter_mut().zip(deltas.iter()) {
+            red.load(slot, d);
+            JavaSer::encode_delta_into(slot, &mut frame);
+            sparse_bytes += frame.len() as u64;
+        }
+        let dense_bytes = (k * java_encoded_len(m)) as u64;
+        let byte_ratio = dense_bytes as f64 / sparse_bytes.max(1) as f64;
+        println!(
+            "sparse Δv frames (nnz/m ≤ {:.3}): dense {} B/round vs sparse {} B/round → {:.1}x fewer bytes (MUST be ≥ 5x)",
+            nnz_frac, dense_bytes, sparse_bytes, byte_ratio
+        );
+
+        // Steady-state allocations of the full sparse pipeline.
+        red.reduce(&mut slots); // warmup: merge scratch + any promotions
+        let a0 = current_thread_allocations();
+        const SPARSE_ROUNDS: u64 = 5;
+        for _ in 0..SPARSE_ROUNDS {
+            for (slot, d) in slots.iter_mut().zip(deltas.iter()) {
+                red.load(slot, d);
+                JavaSer::encode_delta_into(slot, &mut frame);
+            }
+            red.reduce(&mut slots);
+        }
+        let sparse_allocs = (current_thread_allocations() - a0) / SPARSE_ROUNDS;
+        println!(
+            "sparse pipeline (extract→encode→reduce) allocations/round: {} (MUST be 0)",
+            sparse_allocs
+        );
+
+        // Reduce timings on the same deltas: sparse-aware vs dense tree.
+        let tr_sparse = b.run("sparse delta reduce (K=8, sparse Δv)", || {
+            for (slot, d) in slots.iter_mut().zip(deltas.iter()) {
+                red.load(slot, d);
+            }
+            red.reduce(&mut slots);
+        });
+        let mut dense_bufs = deltas.clone();
+        let tr_dense = b.run("dense tree reduce (same Δv)", || {
+            for (buf, d) in dense_bufs.iter_mut().zip(deltas.iter()) {
+                buf.copy_from_slice(d);
+            }
+            let mut refs: Vec<&mut [f64]> =
+                dense_bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            linalg::tree_reduce(&mut refs);
+        });
+        let reduce_speedup = tr_dense.mean_s / tr_sparse.mean_s.max(1e-12);
+        results.push(tr_sparse);
+        results.push(tr_dense);
+
+        // H sweep: how sparse frames shift the optimal H. Per H, train to
+        // target with dense-forced vs adaptive frames; virtual
+        // time-to-target reflects the actual bytes charged per round.
+        let fstar = coordinator::oracle_objective(&sds, &cfg);
+        let hs = [4usize, 16, 64, 256, 1024];
+        let mut jsweep = Json::obj();
+        let mut best = [(f64::INFINITY, 0usize); 2]; // [dense, sparse]
+        for &h in &hs {
+            let mut c = cfg.clone();
+            c.h_abs = Some(h);
+            c.max_rounds = 600;
+            let time_for = |dense_frames: bool| -> f64 {
+                let opts = EngineOptions {
+                    dense_frames,
+                    ..Default::default()
+                };
+                let mut eng = build_engine_with(Impl::SparkCOpt, &sds, &c, &opts);
+                let rep = coordinator::train_with_oracle(eng.as_mut(), &sds, &c, fstar);
+                // Penalize runs that missed the target inside max_rounds.
+                rep.time_to_target.unwrap_or(rep.total_time * 10.0)
+            };
+            let td = time_for(true);
+            let ts = time_for(false);
+            if td < best[0].0 {
+                best[0] = (td, h);
+            }
+            if ts < best[1].0 {
+                best[1] = (ts, h);
+            }
+            println!(
+                "H={:5}: dense-frames {:.3} s vs sparse-frames {:.3} s (virtual time-to-target)",
+                h, td, ts
+            );
+            let mut jh = Json::obj();
+            jh.set("dense_s", td).set("sparse_s", ts);
+            jsweep.set(&format!("h{}", h), jh);
+        }
+        println!(
+            "optimal H: dense-frames {} vs sparse-frames {} (sparse comm shifts the trade-off toward more communication)",
+            best[0].1, best[1].1
+        );
+
+        let mut js = Json::obj();
+        js.set("dv_nnz_frac_max", nnz_frac)
+            .set("dense_bytes_per_round", dense_bytes)
+            .set("sparse_bytes_per_round", sparse_bytes)
+            .set("byte_ratio", byte_ratio)
+            .set("allocs_per_round", sparse_allocs)
+            .set("reduce_speedup_vs_dense", reduce_speedup)
+            .set("h_sweep", jsweep)
+            .set("optimal_h_dense", best[0].1)
+            .set("optimal_h_sparse", best[1].1);
+        json.set("sparse_frames", js);
+    }
 
     // ---- dataset objective (suboptimality tracking cost) ----------------
     let alpha_full = vec![0.01; ds.n()];

@@ -79,7 +79,7 @@ impl Impl {
         !matches!(self, Impl::SparkScala | Impl::PySpark)
     }
 
-    /// Can worker-local state (α_[k]) persist across rounds? True only for
+    /// Can worker-local state (`α_[k]`) persist across rounds? True only for
     /// MPI and the §5.3 persistent-local-memory variants: vanilla Spark has
     /// no persistent worker variables, so α must round-trip every stage.
     pub fn has_persistent_local_state(&self) -> bool {

@@ -1,7 +1,8 @@
 //! Dense column-major matrix — the layout the L1 Pallas kernel consumes.
 //!
 //! The PJRT local-solve artifact is compiled for a fixed `[m, nk]` f32
-//! block; [`DenseMatrix::padded_f32`] zero-pads a worker partition up to
+//! block; [`DenseMatrix::padded_f32_row_major`] zero-pads a worker
+//! partition up to
 //! the compiled shape (padding columns have zero norm, which the kernel
 //! provably ignores — see `python/tests/test_kernel.py`).
 

@@ -63,7 +63,8 @@ impl Dataset {
     }
 
     /// Objective evaluated from an already-maintained shared vector
-    /// `v = Aα`: O(m + n) instead of the O(nnz) matvec in [`objective`].
+    /// `v = Aα`: O(m + n) instead of the O(nnz) matvec in
+    /// [`Dataset::objective`].
     /// The coordinator tracks v exactly (it is the algorithm's state), so
     /// per-round suboptimality tracking uses this path (§Perf log: ~40×
     /// faster round evaluation on webspam-mini).
@@ -84,8 +85,8 @@ impl Dataset {
 ///
 /// * [`WorkerData::flat`] — one contiguous CSC block ("flattened RDD
 ///   partition", what impl. B passes to the C++ module as raw pointers);
-/// * [`WorkerData::records`] — one allocation per feature record (what a
-///   `mapPartitions` iterator over an RDD yields).
+/// * [`WorkerData::to_records`] — one allocation per feature record (what
+///   a `mapPartitions` iterator over an RDD yields).
 ///
 /// Both carry the same numbers; solvers accept either and the layout cost
 /// difference is measured, not assumed.

@@ -12,7 +12,10 @@
 //! Engines execute the *real* algorithm (numerics are bit-identical across
 //! engines given the same seed — enforced by integration tests) and fold
 //! measured compute plus modeled framework costs onto the virtual clock
-//! (DESIGN.md §2).
+//! (DESIGN.md §2). Every engine's workers emit their Δv as whichever frame
+//! is cheaper — sparse (sorted index + value) or dense — under the
+//! byte-cost cutover rule of DESIGN.md §7, and the overhead model is
+//! charged the actual encoded bytes.
 
 pub mod mpi;
 pub mod param_server;
@@ -144,6 +147,11 @@ pub struct EngineOptions {
     /// Use TorrentBroadcast for the master→worker path (Spark 1.5 default)
     /// instead of the driver-star model (ablation: `broadcast`).
     pub torrent_broadcast: bool,
+    /// Force dense Δv frames, disabling the nnz-adaptive sparse
+    /// communication layer (DESIGN.md §7). The numerics are bit-identical
+    /// either way (asserted by `tests/integration_sparse_frames.rs`);
+    /// this is the A/B baseline for byte accounting and the H-sweep bench.
+    pub dense_frames: bool,
 }
 
 impl Default for EngineOptions {
@@ -155,6 +163,7 @@ impl Default for EngineOptions {
             sgd_batch_fraction: 1.0,
             force_layout: None,
             torrent_broadcast: false,
+            dense_frames: false,
         }
     }
 }
@@ -189,7 +198,13 @@ pub fn build_engine_with(
         Impl::PySpark | Impl::PySparkC | Impl::PySparkCOpt => Box::new(
             pyspark::PySparkEngine::new(imp, ds, &parts, cfg, model, opts.clone()),
         ),
-        Impl::Mpi => Box::new(mpi::MpiEngine::new(ds, &parts, cfg, model)),
+        Impl::Mpi => {
+            let mut eng = mpi::MpiEngine::new(ds, &parts, cfg, model);
+            if opts.dense_frames {
+                eng.force_dense_frames();
+            }
+            Box::new(eng)
+        }
     }
 }
 

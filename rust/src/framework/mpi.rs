@@ -1,10 +1,16 @@
 //! MPI engine: implementation (E) — the paper's no-overhead reference.
 //!
-//! All-C++ ranks with persistent local state: α_[k] lives in rank memory
-//! forever, the only communication is the tree AllReduce of the
-//! m-dimensional Δv (Figure 1), there is no serialization (raw buffers on
-//! the wire) and no per-stage scheduling. Framework overhead per the paper
-//! is ~3% of total runtime — here a barrier plus the AllReduce transfer.
+//! All-C++ ranks with persistent local state: `α_[k]` lives in rank memory
+//! forever, the only communication is the tree AllReduce of the Δv update
+//! (Figure 1), there is no serialization (raw buffers on the wire) and no
+//! per-stage scheduling. Framework overhead per the paper is ~3% of total
+//! runtime — here a barrier plus the AllReduce transfer.
+//!
+//! Each rank emits its Δv as a raw sparse frame when that is cheaper than
+//! the dense m-vector (`linalg::raw_sparse_cutover`; DESIGN.md §7), the
+//! reduction runs the sparse-aware pairwise tree (`linalg::DeltaReducer`,
+//! bit-identical to the dense tree), and the cost model is charged the
+//! actual frame bytes.
 
 use std::time::Instant;
 
@@ -23,6 +29,10 @@ pub struct MpiEngine {
     /// them and the tree reduce consumes `delta_v` in place, so the
     /// steady-state round performs no per-worker allocations.
     results: Vec<SolveResult>,
+    /// Per-rank Δv frames (sparse or dense by the raw cutover) feeding the
+    /// sparse-aware reduction tree; arenas persist across rounds.
+    slots: Vec<linalg::DeltaSlot>,
+    reducer: linalg::DeltaReducer,
     model: OverheadModel,
     clock: VirtualClock,
     lam_n: f64,
@@ -42,10 +52,13 @@ impl MpiEngine {
         let ws = WorkerSet::build(ds, parts);
         let solvers = (0..ws.data.len()).map(|_| NativeScd::new()).collect();
         let results = (0..ws.data.len()).map(|_| SolveResult::default()).collect();
+        let slots = (0..ws.data.len()).map(|_| linalg::DeltaSlot::new()).collect();
         MpiEngine {
             ws,
             solvers,
             results,
+            slots,
+            reducer: linalg::DeltaReducer::raw(ds.m()),
             model,
             clock: VirtualClock::new(),
             lam_n: cfg.lam_n,
@@ -62,6 +75,12 @@ impl MpiEngine {
         let model = OverheadModel::paper_defaults(crate::simnet::ClusterModel::paper_testbed(tau));
         let _ = EngineOptions::default();
         MpiEngine::new(ds, parts, cfg, model)
+    }
+
+    /// Disable the sparse frame path (cutover 0 → every rank emits dense),
+    /// the `EngineOptions::dense_frames` baseline.
+    pub fn force_dense_frames(&mut self) {
+        self.reducer = linalg::DeltaReducer::new(self.m, 0);
     }
 }
 
@@ -113,23 +132,39 @@ impl DistEngine for MpiEngine {
         let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
 
         // ---- 2. AllReduce of Δv (tree) + barrier --------------------------
-        let payload = (self.m * 8) as u64; // raw doubles, no codec
-        let t_allreduce = self.model.cluster.tree_allreduce(payload, k);
-        let t_barrier = self.model.mpi_barrier();
-
-        // Real aggregation: the log₂(K) pairwise tree the cost model above
-        // charges for actually executes — deltas are combined in place in
-        // rank order, no zeroed accumulator is allocated, and the identical
-        // tree shape across all engines keeps Δv bit-identical between
-        // substrates. Counted as master time, matching the paper's < 2 s
-        // measurement.
+        // Real aggregation: the log₂(K) pairwise tree the cost model below
+        // charges for actually executes — each rank emits its Δv as a raw
+        // sparse frame when that is cheaper (DESIGN.md §7 cutover), deltas
+        // are combined in place in rank order (sparse pairs merge, growth
+        // past the cutover promotes to dense), no zeroed accumulator is
+        // allocated, and the identical tree shape across all engines keeps
+        // Δv bit-identical between substrates. Counted as master time,
+        // matching the paper's < 2 s measurement.
         let t0 = Instant::now();
         for (al, res) in self.ws.alpha.iter_mut().zip(self.results.iter()) {
             linalg::add_assign(al, &res.delta_alpha);
         }
-        let agg =
-            linalg::tree_reduce_collect(self.results.iter_mut().map(|r| &mut r.delta_v));
+        let mut bytes_up = 0u64;
+        let mut rank_payload_max = 0u64;
+        for (slot, res) in self.slots.iter_mut().zip(self.results.iter()) {
+            self.reducer.load(slot, &res.delta_v);
+            let b = slot.raw_bytes(self.m) as u64;
+            bytes_up += b;
+            rank_payload_max = rank_payload_max.max(b);
+        }
+        self.reducer.reduce(&mut self.slots);
+        // Broadcast leg: every rank receives the merged Δv in whichever
+        // representation it ended up in.
+        let down_payload = self.slots[0].raw_bytes(self.m) as u64;
+        let agg = self.slots[0].densify_collect(self.m);
         let t_master = t0.elapsed().as_secs_f64();
+
+        // Charged bytes are the ACTUAL frame sizes: the reduce waves carry
+        // at most max(rank frames, merged frame), the broadcast waves the
+        // merged frame — charge the tree with the larger (conservative).
+        let payload = rank_payload_max.max(down_payload);
+        let t_allreduce = self.model.cluster.tree_allreduce(payload, k);
+        let t_barrier = self.model.mpi_barrier();
 
         let wall = t_worker + t_allreduce + t_barrier + t_master;
         self.clock.advance(wall);
@@ -139,8 +174,8 @@ impl DistEngine for MpiEngine {
             t_master,
             t_overhead: t_allreduce + t_barrier,
             worker_compute: computes,
-            bytes_up: payload * k as u64,
-            bytes_down: payload * k as u64,
+            bytes_up,
+            bytes_down: down_payload * k as u64,
         };
         (agg, timing)
     }
@@ -198,6 +233,33 @@ mod tests {
             assert!(cur <= prev + 1e-9, "round {}: {} -> {}", round, prev, cur);
             prev = cur;
         }
+    }
+
+    #[test]
+    fn sparse_frames_cut_bytes_and_keep_bits() {
+        // Small H on a sparse dataset → sparse Δv frames; the adaptive
+        // engine must move fewer bytes than the dense-forced one while
+        // producing BIT-identical aggregates.
+        let (ds, mut adaptive) = engine();
+        let (_, mut dense) = engine();
+        dense.force_dense_frames();
+        let mut v1 = vec![0.0; ds.m()];
+        let mut v2 = vec![0.0; ds.m()];
+        let mut saw_sparse_savings = false;
+        for round in 0..4 {
+            let (dv1, t1) = adaptive.run_round(&v1, 2, round);
+            let (dv2, t2) = dense.run_round(&v2, 2, round);
+            for (a, b) in dv1.iter().zip(dv2.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert!(t1.bytes_up <= t2.bytes_up);
+            if t1.bytes_up < t2.bytes_up {
+                saw_sparse_savings = true;
+            }
+            linalg::add_assign(&mut v1, &dv1);
+            linalg::add_assign(&mut v2, &dv2);
+        }
+        assert!(saw_sparse_savings, "no round used a cheaper sparse frame");
     }
 
     #[test]

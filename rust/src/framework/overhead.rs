@@ -21,11 +21,19 @@
 //! scale within ~30% per component (checked in the unit tests below and
 //! validated end-to-end by `sparkbench figure 3`).
 //!
-//! What is modeled vs real:
-//! * **real** — solver execution (measured), serialization byte counts
-//!   (codecs actually run), aggregation arithmetic, algorithm trajectories;
+//! What is modeled vs real (DESIGN.md §6):
+//! * **real** — solver execution (measured), the aggregation arithmetic
+//!   (the pairwise tree AllReduce of `linalg::tree_reduce` /
+//!   `linalg::DeltaReducer` actually executes, in pooled buffers), the Δv
+//!   frame encodes (each worker's frame — sparse or dense per the
+//!   DESIGN.md §7 cutover — is really produced, and the byte counts
+//!   charged below are the actual encoded lengths), algorithm
+//!   trajectories;
 //! * **modeled** — network transfer times, JVM/python process costs,
-//!   scheduler latencies (cannot be physically produced on this machine).
+//!   scheduler latencies (cannot be physically produced on this machine),
+//!   and the α-payload byte counts (computed by the `*_encoded_len` size
+//!   functions rather than encoded — their layout is the fixed dense one,
+//!   so length needs no encode).
 
 use crate::simnet::ClusterModel;
 

@@ -9,12 +9,17 @@
 //! staleness 0 this reduces exactly to the synchronous engine (tested);
 //! growing staleness trades per-round progress for removed barriers —
 //! quantified by `sparkbench ablation async-ps`.
+//!
+//! Pushes ride the sparse layer too: a worker ships its Δv as the raw
+//! sparse frame when that is cheaper (DESIGN.md §7 cutover) and the
+//! server applies the damped update straight from the sparse entries;
+//! `bytes_pushed` accounts the actual frame bytes.
 
 use std::collections::VecDeque;
 
 use crate::config::TrainConfig;
 use crate::data::{Dataset, Partitioning, WorkerData};
-use crate::linalg;
+use crate::linalg::{self, DeltaShape, DeltaSlot};
 use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
 
 /// Simulated asynchronous parameter server running CoCoA-style updates.
@@ -42,6 +47,12 @@ pub struct ParamServerSim {
     view_buf: Vec<f64>,
     /// Per-worker reused round results (`solve_into` targets).
     results: Vec<SolveResult>,
+    /// Per-worker push frames (sparse when cheaper; arenas persist).
+    push_slots: Vec<DeltaSlot>,
+    /// Raw-frame cutover for pushes (see `linalg::raw_sparse_cutover`).
+    cutover_nnz: usize,
+    /// Actual Δv bytes pushed to the server so far (raw frame sizes).
+    pub bytes_pushed: u64,
 }
 
 impl ParamServerSim {
@@ -72,6 +83,9 @@ impl ParamServerSim {
             damping: 1.0 / (1.0 + staleness as f64),
             view_buf: Vec::with_capacity(ds.m()),
             results: (0..k).map(|_| SolveResult::default()).collect(),
+            push_slots: (0..k).map(|_| DeltaSlot::new()).collect(),
+            cutover_nnz: linalg::raw_sparse_cutover(ds.m()),
+            bytes_pushed: 0,
         }
     }
 
@@ -96,9 +110,25 @@ impl ParamServerSim {
             };
             self.solvers[w].solve_into(&self.workers[w], &self.alphas[w], &req, &mut self.results[w]);
             // Push: applied immediately at the server (arrival order),
-            // damped by 1/(1+staleness) to keep stale updates stable.
+            // damped by 1/(1+staleness) to keep stale updates stable. The
+            // worker ships whichever raw frame is cheaper; the server
+            // applies sparse pushes entry-wise (same multiplies and adds
+            // the dense axpy performs at those indices).
             linalg::axpy(self.damping, &self.results[w].delta_alpha, &mut self.alphas[w]);
-            linalg::axpy(self.damping, &self.results[w].delta_v, &mut self.v);
+            let slot = &mut self.push_slots[w];
+            slot.fill_from_dense(&self.results[w].delta_v, self.cutover_nnz);
+            self.bytes_pushed += slot.raw_bytes(self.v.len()) as u64;
+            match slot.shape() {
+                DeltaShape::Sparse => {
+                    let sv = slot.sparse().unwrap();
+                    for (&i, &x) in sv.idx.iter().zip(sv.vals.iter()) {
+                        self.v[i as usize] += self.damping * x;
+                    }
+                }
+                DeltaShape::Dense => {
+                    linalg::axpy(self.damping, slot.dense().unwrap(), &mut self.v);
+                }
+            }
         }
         // Ring update: recycle the evicted snapshot buffer instead of
         // allocating a fresh clone of v every epoch.
@@ -205,6 +235,28 @@ mod tests {
             stale,
             fresh
         );
+    }
+
+    #[test]
+    fn sparse_pushes_charge_fewer_bytes_and_match_dense() {
+        let (ds, cfg, parts) = setup();
+        let mut sparse_ps = ParamServerSim::new(&ds, &parts, &cfg, 1);
+        let mut dense_ps = ParamServerSim::new(&ds, &parts, &cfg, 1);
+        dense_ps.cutover_nnz = 0; // force dense pushes
+        for e in 0..5 {
+            sparse_ps.run_epoch(2, e); // tiny H → sparse Δv
+            dense_ps.run_epoch(2, e);
+        }
+        assert!(
+            sparse_ps.bytes_pushed < dense_ps.bytes_pushed,
+            "sparse {} !< dense {}",
+            sparse_ps.bytes_pushed,
+            dense_ps.bytes_pushed
+        );
+        // The applied updates are the same multiplies/adds → identical v.
+        for (a, b) in sparse_ps.v.iter().zip(dense_ps.v.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -19,11 +19,11 @@ use std::time::Instant;
 
 use super::overhead::OverheadModel;
 use super::rdd::{Rdd, SparkContext};
-use super::serialization::{pickle_encoded_len, PickleSer};
+use super::serialization::{pickle_encoded_len, pickle_sparse_cutover, PickleSer};
 use super::{DistEngine, EngineOptions, RoundTiming};
 use crate::config::{Impl, TrainConfig};
 use crate::data::{Dataset, Partitioning, WorkerData};
-use crate::linalg;
+use crate::linalg::{self, DeltaReducer, DeltaSlot};
 use crate::simnet::VirtualClock;
 use crate::solver::{managed, scd, LocalSolver, SolveRequest};
 use crate::util::pool::BytePool;
@@ -46,6 +46,10 @@ pub struct PySparkEngine {
     compute_multiplier: f64,
     /// Pooled pickle frames (driver-side encode reuses one buffer/round).
     frame_pool: BytePool,
+    /// Per-worker Δv frames under the pickle-codec cutover (DESIGN.md §7)
+    /// feeding the sparse-aware reduction tree; arenas persist.
+    slots: Vec<DeltaSlot>,
+    reducer: DeltaReducer,
 }
 
 impl PySparkEngine {
@@ -128,6 +132,15 @@ impl PySparkEngine {
             records_per_task,
             compute_multiplier,
             frame_pool: BytePool::with_buffers(1, pickle_encoded_len(ds.m())),
+            slots: (0..k).map(|_| DeltaSlot::new()).collect(),
+            reducer: DeltaReducer::new(
+                ds.m(),
+                if opts.dense_frames {
+                    0
+                } else {
+                    pickle_sparse_cutover(ds.m())
+                },
+            ),
         }
     }
 
@@ -236,10 +249,21 @@ impl DistEngine for PySparkEngine {
         let mut task_times = vec![0.0; k];
         let mut computes = vec![0.0; k];
         let mut up_per_worker = vec![0u64; k];
+        // Each python worker pickles its Δv as the cheaper of the
+        // index/value-array (sparse) or flat-list (dense) frames — the
+        // codec really runs on a pooled buffer and the model is charged
+        // the ACTUAL encoded bytes.
+        let mut up_frame = self.frame_pool.take_cleared();
         for (w, res, secs) in &outs {
             let compute = secs * self.compute_multiplier;
             computes[*w] = compute;
-            let dv = pickle_encoded_len(res.delta_v.len()) as u64;
+            self.reducer.load(&mut self.slots[*w], &res.delta_v);
+            PickleSer::encode_delta_into(&self.slots[*w], &mut up_frame);
+            debug_assert_eq!(
+                PickleSer::decode_delta_dense(&up_frame).unwrap(),
+                res.delta_v
+            );
+            let dv = up_frame.len() as u64;
             let da = if self.persistent() {
                 0
             } else {
@@ -255,6 +279,7 @@ impl DistEngine for PySparkEngine {
                 + compute
                 + self.model.numpy_pickle(up);
         }
+        self.frame_pool.put(up_frame);
         let bytes_up: u64 = up_per_worker.iter().sum();
         let t_tasks_max = task_times.iter().cloned().fold(0.0f64, f64::max);
         let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
@@ -265,8 +290,9 @@ impl DistEngine for PySparkEngine {
             + self.model.py4j_roundtrip()
             + self.model.numpy_pickle(bytes_up);
 
-        // Driver reduce: same pairwise tree as every other engine, in place
-        // (bit-identical Δv across substrates, no zeroed accumulator).
+        // Driver reduce: same sparse-aware pairwise tree as every other
+        // engine, in place (bit-identical Δv across substrates and frame
+        // representations, no zeroed accumulator).
         let t0 = Instant::now();
         {
             let mut alpha = self.alpha.borrow_mut();
@@ -274,7 +300,7 @@ impl DistEngine for PySparkEngine {
                 linalg::add_assign(&mut alpha[*w], &res.delta_alpha);
             }
         }
-        let agg = linalg::tree_reduce_collect(outs.iter_mut().map(|(_, res, _)| &mut res.delta_v));
+        let agg = self.reducer.reduce_collect(&mut self.slots);
         debug_assert_eq!(agg.len(), self.m);
         let t_master = t0.elapsed().as_secs_f64();
 
@@ -381,6 +407,49 @@ mod tests {
             "D* {} !< 0.8 × D {}",
             tds.t_overhead,
             td.t_overhead
+        );
+    }
+
+    #[test]
+    fn sparse_frames_cut_up_bytes_and_keep_bits() {
+        // (D)* with small H: pure Δv up-traffic, sparse pickle frames must
+        // charge fewer bytes with a BIT-identical aggregate.
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 4;
+        let parts = Partitioning::build(Partitioner::Range, &ds.a, 4, 0);
+        let tau = crate::framework::overhead::auto_time_scale(ds.m(), ds.n());
+        let model = OverheadModel::paper_defaults(crate::simnet::ClusterModel::paper_testbed(tau));
+        let mut adaptive = PySparkEngine::new(
+            Impl::PySparkCOpt,
+            &ds,
+            &parts,
+            &cfg,
+            model.clone(),
+            EngineOptions::default(),
+        );
+        let mut dense = PySparkEngine::new(
+            Impl::PySparkCOpt,
+            &ds,
+            &parts,
+            &cfg,
+            model,
+            EngineOptions {
+                dense_frames: true,
+                ..Default::default()
+            },
+        );
+        let v0 = vec![0.0; ds.m()];
+        let (dv1, t1) = adaptive.run_round(&v0, 2, 1);
+        let (dv2, t2) = dense.run_round(&v0, 2, 1);
+        for (a, b) in dv1.iter().zip(dv2.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(
+            t1.bytes_up < t2.bytes_up,
+            "sparse {} !< dense {}",
+            t1.bytes_up,
+            t2.bytes_up
         );
     }
 

@@ -8,9 +8,26 @@
 //! * [`PickleSer`] — cPickle-protocol-2-flavoured: opcode byte per element
 //!   + little-endian payload (what pySpark pays on every task boundary).
 //!
+//! Each codec carries two frame layouts for the communicated Δv:
+//!
+//! * **dense** — the historical m-doubles frame;
+//! * **sparse** — nnz (index, value) pairs with delta-coded LEB128 varint
+//!   indices (Breeze-SparseVector-flavoured for [`JavaSer`], pickled
+//!   index/value arrays for [`PickleSer`]). A worker emits whichever is
+//!   cheaper under the cutover rule (DESIGN.md §7): sparse iff the
+//!   worst-case sparse length undercuts the dense length
+//!   ([`java_sparse_cutover`] / [`pickle_sparse_cutover`]).
+//!
+//! Every `encode_into` writes into a caller-owned (pooled / persistent)
+//! buffer, preserving the zero-allocation steady state of `util::pool`;
+//! the engines charge the overhead model the **actual** encoded frame
+//! lengths, not a counterfactual dense size.
+//!
 //! Time is *charged* via [`super::overhead::OverheadModel`] throughput
 //! constants rather than the codec's own wall time, because the dataset is
 //! a down-scaled stand-in (DESIGN.md §6); the bytes, however, are real.
+
+use crate::linalg::{sparse_cutover, DeltaShape, DeltaSlot, SparseVec};
 
 /// Encoded frame plus element count (for validation on decode).
 #[derive(Debug, Clone, PartialEq)]
@@ -75,6 +92,12 @@ impl JavaSer {
             return Err("bad magic".into());
         }
         let n = u64::from_be_bytes(b[4..12].try_into().unwrap()) as usize;
+        // Frame-supplied count: bound it by the frame length (≥ 8 bytes
+        // per element) before pre-allocating, so a corrupt frame returns
+        // Err instead of aborting on a huge allocation.
+        if n > b.len() {
+            return Err(format!("element count {} exceeds frame size {}", n, b.len()));
+        }
         let mut out = Vec::with_capacity(n);
         let mut pos = 12;
         for i in 0..n {
@@ -91,6 +114,78 @@ impl JavaSer {
             pos += 8;
         }
         Ok(out)
+    }
+
+    /// Encode a sparse Δv frame (Breeze-SparseVector-flavoured): magic +
+    /// stream version, a `0xFF` sparse marker (a dense frame's byte 4 is
+    /// the top byte of its u64 length, never `0xFF`), the `'S'` tag, dim
+    /// and nnz as u64 BE, delta-varint indices, then nnz f64 BE values.
+    pub fn encode_sparse_into(sv: &SparseVec, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(java_sparse_encoded_len_max(sv.nnz()));
+        out.extend_from_slice(&JAVA_MAGIC.to_be_bytes());
+        out.extend_from_slice(&(5u16).to_be_bytes());
+        out.push(SPARSE_MARKER);
+        out.push(b'S');
+        out.extend_from_slice(&(sv.dim as u64).to_be_bytes());
+        out.extend_from_slice(&(sv.nnz() as u64).to_be_bytes());
+        write_delta_varints(&sv.idx, out);
+        for &x in &sv.vals {
+            out.extend_from_slice(&x.to_be_bytes());
+        }
+    }
+
+    /// Decode a sparse frame; errors on malformed input.
+    pub fn decode_sparse_slice(b: &[u8]) -> Result<SparseVec, String> {
+        if b.len() < 22 {
+            return Err("short sparse frame".into());
+        }
+        if u16::from_be_bytes([b[0], b[1]]) != JAVA_MAGIC {
+            return Err("bad magic".into());
+        }
+        if b[4] != SPARSE_MARKER || b[5] != b'S' {
+            return Err("not a sparse java frame".into());
+        }
+        let dim = u64::from_be_bytes(b[6..14].try_into().unwrap()) as usize;
+        let nnz = u64::from_be_bytes(b[14..22].try_into().unwrap()) as usize;
+        // Each entry needs ≥ 1 varint byte + 8 value bytes, so a
+        // frame-supplied nnz beyond the frame length is provably corrupt —
+        // reject BEFORE pre-allocating instead of panicking on capacity.
+        if nnz > b.len() {
+            return Err(format!("nnz {} exceeds frame size {}", nnz, b.len()));
+        }
+        let mut pos = 22;
+        let idx = read_delta_varints(b, &mut pos, nnz, dim)?;
+        let mut vals = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            if pos + 8 > b.len() {
+                return Err("truncated sparse values".into());
+            }
+            vals.push(f64::from_be_bytes(b[pos..pos + 8].try_into().unwrap()));
+            pos += 8;
+        }
+        Ok(SparseVec { dim, idx, vals })
+    }
+
+    /// Encode a delta slot in whichever layout it holds.
+    pub fn encode_delta_into(slot: &DeltaSlot, out: &mut Vec<u8>) {
+        match slot.shape() {
+            DeltaShape::Dense => JavaSer::encode_into(slot.dense().unwrap(), out),
+            DeltaShape::Sparse => JavaSer::encode_sparse_into(slot.sparse().unwrap(), out),
+        }
+    }
+
+    /// Decode either frame layout to its dense form (test/debug surface;
+    /// sniffs the sparse marker byte).
+    pub fn decode_delta_dense(b: &[u8]) -> Result<Vec<f64>, String> {
+        if b.len() > 4 && b[4] == SPARSE_MARKER {
+            let sv = JavaSer::decode_sparse_slice(b)?;
+            let mut out = Vec::new();
+            sv.densify_into(&mut out);
+            Ok(out)
+        } else {
+            JavaSer::decode_slice(b)
+        }
     }
 }
 
@@ -138,6 +233,9 @@ impl PickleSer {
             return Err("bad pickle header".into());
         }
         let n = u64::from_le_bytes(b[3..11].try_into().unwrap()) as usize;
+        if n > b.len() {
+            return Err(format!("element count {} exceeds frame size {}", n, b.len()));
+        }
         let mut out = Vec::with_capacity(n);
         let mut pos = 11;
         for _ in 0..n {
@@ -155,7 +253,167 @@ impl PickleSer {
         }
         Ok(out)
     }
+
+    /// Encode a sparse Δv frame: proto-2 header, `'('` (MARK — a pickled
+    /// tuple of index/value arrays, vs the dense frame's `']'` list), dim
+    /// and nnz as u64 LE, delta-varint indices, then the value array as a
+    /// raw little-endian buffer (NumPy `tobytes`, the fast binary path),
+    /// and STOP.
+    pub fn encode_sparse_into(sv: &SparseVec, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(pickle_sparse_encoded_len_max(sv.nnz()));
+        out.push(OP_PROTO);
+        out.push(2);
+        out.push(OP_MARK);
+        out.extend_from_slice(&(sv.dim as u64).to_le_bytes());
+        out.extend_from_slice(&(sv.nnz() as u64).to_le_bytes());
+        write_delta_varints(&sv.idx, out);
+        for &x in &sv.vals {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out.push(OP_STOP);
+    }
+
+    /// Decode a sparse frame; errors on malformed input.
+    pub fn decode_sparse_slice(b: &[u8]) -> Result<SparseVec, String> {
+        if b.len() < 20 || b[0] != OP_PROTO || b[2] != OP_MARK {
+            return Err("bad sparse pickle header".into());
+        }
+        let dim = u64::from_le_bytes(b[3..11].try_into().unwrap()) as usize;
+        let nnz = u64::from_le_bytes(b[11..19].try_into().unwrap()) as usize;
+        if nnz > b.len() {
+            return Err(format!("nnz {} exceeds frame size {}", nnz, b.len()));
+        }
+        let mut pos = 19;
+        let idx = read_delta_varints(b, &mut pos, nnz, dim)?;
+        let mut vals = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            if pos + 8 > b.len() {
+                return Err("truncated sparse values".into());
+            }
+            vals.push(f64::from_le_bytes(b[pos..pos + 8].try_into().unwrap()));
+            pos += 8;
+        }
+        if pos >= b.len() || b[pos] != OP_STOP {
+            return Err("missing STOP".into());
+        }
+        Ok(SparseVec { dim, idx, vals })
+    }
+
+    /// Encode a delta slot in whichever layout it holds.
+    pub fn encode_delta_into(slot: &DeltaSlot, out: &mut Vec<u8>) {
+        match slot.shape() {
+            DeltaShape::Dense => PickleSer::encode_into(slot.dense().unwrap(), out),
+            DeltaShape::Sparse => PickleSer::encode_sparse_into(slot.sparse().unwrap(), out),
+        }
+    }
+
+    /// Decode either frame layout to its dense form (sniffs opcode 2).
+    pub fn decode_delta_dense(b: &[u8]) -> Result<Vec<f64>, String> {
+        if b.len() > 2 && b[2] == OP_MARK {
+            let sv = PickleSer::decode_sparse_slice(b)?;
+            let mut out = Vec::new();
+            sv.densify_into(&mut out);
+            Ok(out)
+        } else {
+            PickleSer::decode_slice(b)
+        }
+    }
 }
+
+/// Byte 4 of a sparse java frame; a dense frame carries the top byte of
+/// its u64 BE element count there, which is never `0xFF` for any payload
+/// this testbed can hold (< 2^56 elements).
+const SPARSE_MARKER: u8 = 0xFF;
+/// Pickle MARK opcode — opens the (indices, values) tuple of the sparse
+/// frame; the dense frame opens with EMPTY_LIST instead.
+const OP_MARK: u8 = b'(';
+
+// ---------------------------------------------------------------------------
+// Varint index coding shared by both sparse layouts
+// ---------------------------------------------------------------------------
+
+/// Append one LEB128 varint.
+fn write_varint_u32(mut v: u32, out: &mut Vec<u8>) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read one LEB128 varint, advancing `pos`.
+fn read_varint_u32(b: &[u8], pos: &mut usize) -> Result<u32, String> {
+    let mut v: u32 = 0;
+    let mut shift = 0u32;
+    loop {
+        if *pos >= b.len() {
+            return Err("truncated varint".into());
+        }
+        let byte = b[*pos];
+        *pos += 1;
+        if shift >= 32 || (shift == 28 && (byte & 0x7F) > 0x0F) {
+            return Err("varint overflows u32".into());
+        }
+        v |= ((byte & 0x7F) as u32) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Delta-code a strictly increasing index list: first index absolute,
+/// then the gaps (all ≥ 1) — small-column deltas compress to one byte.
+fn write_delta_varints(idx: &[u32], out: &mut Vec<u8>) {
+    let mut prev = 0u32;
+    for (i, &x) in idx.iter().enumerate() {
+        if i == 0 {
+            write_varint_u32(x, out);
+        } else {
+            write_varint_u32(x - prev, out);
+        }
+        prev = x;
+    }
+}
+
+/// Inverse of [`write_delta_varints`]; validates strict monotonicity and
+/// the `dim` bound so a corrupt frame cannot materialize out-of-range
+/// indices.
+fn read_delta_varints(
+    b: &[u8],
+    pos: &mut usize,
+    nnz: usize,
+    dim: usize,
+) -> Result<Vec<u32>, String> {
+    let mut idx = Vec::with_capacity(nnz);
+    let mut prev: u64 = 0;
+    for i in 0..nnz {
+        let raw = read_varint_u32(b, pos)? as u64;
+        let cur = if i == 0 {
+            raw
+        } else {
+            if raw == 0 {
+                return Err("zero index gap (duplicate index)".into());
+            }
+            prev + raw
+        };
+        if cur >= dim as u64 {
+            return Err(format!("index {} out of dim {}", cur, dim));
+        }
+        idx.push(cur as u32);
+        prev = cur;
+    }
+    Ok(idx)
+}
+
+// ---------------------------------------------------------------------------
+// Frame sizes and the cutover rule
+// ---------------------------------------------------------------------------
 
 /// Size in bytes of a payload under each codec without encoding it
 /// (used by the cost model for counterfactual byte accounting).
@@ -165,6 +423,30 @@ pub fn java_encoded_len(n_elems: usize) -> usize {
 
 pub fn pickle_encoded_len(n_elems: usize) -> usize {
     12 + n_elems * 10
+}
+
+/// Worst-case sparse java frame length (varints at 5 bytes each; the
+/// actual encoded frame is usually much smaller thanks to delta coding).
+pub fn java_sparse_encoded_len_max(nnz: usize) -> usize {
+    22 + nnz * 13
+}
+
+/// Worst-case sparse pickle frame length.
+pub fn pickle_sparse_encoded_len_max(nnz: usize) -> usize {
+    20 + nnz * 13
+}
+
+/// Cutover threshold for Spark's java frames: a worker emits the sparse
+/// layout iff its Δv nnz is ≤ this. Conservative: uses the worst-case
+/// sparse length, so sparse is chosen only when guaranteed smaller; the
+/// engines then charge the (smaller still) actual encoded bytes.
+pub fn java_sparse_cutover(m: usize) -> usize {
+    sparse_cutover(m, java_encoded_len(m), java_sparse_encoded_len_max)
+}
+
+/// Cutover threshold for pySpark's pickle frames.
+pub fn pickle_sparse_cutover(m: usize) -> usize {
+    sparse_cutover(m, pickle_encoded_len(m), pickle_sparse_encoded_len_max)
 }
 
 #[cfg(test)]
@@ -253,5 +535,201 @@ mod tests {
     fn pickle_is_fatter_than_java() {
         // The 10-vs-8 bytes/element tax is part of why pySpark moves more data.
         assert!(pickle_encoded_len(10_000) > java_encoded_len(10_000));
+    }
+
+    fn sv(dim: usize, entries: &[(u32, f64)]) -> SparseVec {
+        SparseVec {
+            dim,
+            idx: entries.iter().map(|&(i, _)| i).collect(),
+            vals: entries.iter().map(|&(_, v)| v).collect(),
+        }
+    }
+
+    #[test]
+    fn varint_roundtrip_all_widths() {
+        for v in [0u32, 1, 127, 128, 300, 16_383, 16_384, 1 << 21, u32::MAX] {
+            let mut buf = Vec::new();
+            write_varint_u32(v, &mut buf);
+            assert!(buf.len() <= 5);
+            let mut pos = 0;
+            assert_eq!(read_varint_u32(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+        // Truncation and overflow are detected.
+        let mut pos = 0;
+        assert!(read_varint_u32(&[0x80], &mut pos).is_err());
+        let mut pos = 0;
+        assert!(read_varint_u32(&[0xFF, 0xFF, 0xFF, 0xFF, 0x7F], &mut pos).is_err());
+    }
+
+    #[test]
+    fn sparse_roundtrip_both_codecs() {
+        let cases = [
+            sv(1000, &[]),                                  // empty
+            sv(1000, &[(999, -3.5)]),                       // single nnz at the edge
+            sv(8, &[(0, 1.0), (1, 2.0), (7, f64::INFINITY)]), // specials
+            sv(1 << 20, &[(0, 0.5), (1 << 10, -0.25), ((1 << 20) - 1, 1e-300)]),
+        ];
+        for v in &cases {
+            let mut jb = Vec::new();
+            JavaSer::encode_sparse_into(v, &mut jb);
+            assert!(jb.len() <= java_sparse_encoded_len_max(v.nnz()));
+            let back = JavaSer::decode_sparse_slice(&jb).unwrap();
+            assert_eq!(&back, v);
+            back.validate().unwrap();
+
+            let mut pb = Vec::new();
+            PickleSer::encode_sparse_into(v, &mut pb);
+            assert!(pb.len() <= pickle_sparse_encoded_len_max(v.nnz()));
+            let back = PickleSer::decode_sparse_slice(&pb).unwrap();
+            assert_eq!(&back, v);
+        }
+    }
+
+    #[test]
+    fn sparse_frames_are_distinguishable_from_dense() {
+        let dense = JavaSer::encode(&[1.0, 2.0, 3.0]);
+        assert_ne!(dense.bytes[4], 0xFF, "dense frame must not carry the sparse marker");
+        let v = sv(64, &[(3, 1.5), (40, -2.0)]);
+        let mut jb = Vec::new();
+        JavaSer::encode_sparse_into(&v, &mut jb);
+        // decode_delta_dense dispatches on the marker for both layouts.
+        assert_eq!(
+            JavaSer::decode_delta_dense(&dense.bytes).unwrap(),
+            vec![1.0, 2.0, 3.0]
+        );
+        let mut want = Vec::new();
+        v.densify_into(&mut want);
+        assert_eq!(JavaSer::decode_delta_dense(&jb).unwrap(), want);
+
+        let pdense = PickleSer::encode(&[4.0, 5.0]);
+        let mut pb = Vec::new();
+        PickleSer::encode_sparse_into(&v, &mut pb);
+        assert_eq!(PickleSer::decode_delta_dense(&pdense.bytes).unwrap(), vec![4.0, 5.0]);
+        assert_eq!(PickleSer::decode_delta_dense(&pb).unwrap(), want);
+    }
+
+    #[test]
+    fn sparse_corruption_detected() {
+        let v = sv(128, &[(1, 1.0), (2, 2.0), (100, 3.0)]);
+        let mut jb = Vec::new();
+        JavaSer::encode_sparse_into(&v, &mut jb);
+        let mut bad = jb.clone();
+        bad[0] ^= 0xFF; // magic
+        assert!(JavaSer::decode_sparse_slice(&bad).is_err());
+        assert!(JavaSer::decode_sparse_slice(&jb[..jb.len() - 4]).is_err()); // truncated
+        let mut bad = jb.clone();
+        bad[22] = 0x80; // first index varint becomes unterminated garbage run
+        bad.truncate(23);
+        assert!(JavaSer::decode_sparse_slice(&bad).is_err());
+
+        let mut pb = Vec::new();
+        PickleSer::encode_sparse_into(&v, &mut pb);
+        let mut bad = pb.clone();
+        bad[2] = OP_EMPTY_LIST; // wrong layout tag
+        assert!(PickleSer::decode_sparse_slice(&bad).is_err());
+        let mut bad = pb.clone();
+        let last = bad.len() - 1;
+        bad[last] = 0; // STOP
+        assert!(PickleSer::decode_sparse_slice(&bad).is_err());
+    }
+
+    #[test]
+    fn huge_frame_counts_error_instead_of_allocating() {
+        // A corrupt count field (e.g. 2^61) must return Err from the
+        // length guard, not abort inside Vec::with_capacity.
+        let v = sv(64, &[(1, 1.0), (30, 2.0)]);
+        let huge = (1u64 << 61).to_be_bytes();
+        let mut jb = Vec::new();
+        JavaSer::encode_sparse_into(&v, &mut jb);
+        jb[14..22].copy_from_slice(&huge); // nnz field
+        assert!(JavaSer::decode_sparse_slice(&jb).is_err());
+        let mut jd = JavaSer::encode(&[1.0, 2.0, 3.0]).bytes;
+        jd[4..12].copy_from_slice(&huge); // dense element count
+        assert!(JavaSer::decode_slice(&jd).is_err());
+
+        let huge_le = (1u64 << 61).to_le_bytes();
+        let mut pb = Vec::new();
+        PickleSer::encode_sparse_into(&v, &mut pb);
+        pb[11..19].copy_from_slice(&huge_le);
+        assert!(PickleSer::decode_sparse_slice(&pb).is_err());
+        let mut pd = PickleSer::encode(&[1.0, 2.0]).bytes;
+        pd[3..11].copy_from_slice(&huge_le);
+        assert!(PickleSer::decode_slice(&pd).is_err());
+    }
+
+    #[test]
+    fn duplicate_and_out_of_range_indices_rejected() {
+        // A zero gap (duplicate index) and an out-of-dim index must both
+        // fail the delta-varint validation on decode.
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&JAVA_MAGIC.to_be_bytes());
+        frame.extend_from_slice(&(5u16).to_be_bytes());
+        frame.push(SPARSE_MARKER);
+        frame.push(b'S');
+        frame.extend_from_slice(&(16u64).to_be_bytes()); // dim
+        frame.extend_from_slice(&(2u64).to_be_bytes()); // nnz
+        frame.push(3); // idx[0] = 3
+        frame.push(0); // gap 0 → duplicate
+        frame.extend_from_slice(&1.0f64.to_be_bytes());
+        frame.extend_from_slice(&2.0f64.to_be_bytes());
+        assert!(JavaSer::decode_sparse_slice(&frame).is_err());
+
+        let mut frame2 = frame.clone();
+        frame2[22] = 40; // idx[0] = 40 ≥ dim 16
+        frame2[23] = 1;
+        assert!(JavaSer::decode_sparse_slice(&frame2).is_err());
+    }
+
+    #[test]
+    fn cutover_thresholds_solve_the_rule() {
+        for m in [64usize, 1000, 1 << 17] {
+            let cj = java_sparse_cutover(m);
+            assert!(java_sparse_encoded_len_max(cj) < java_encoded_len(m));
+            assert!(java_sparse_encoded_len_max(cj + 1) >= java_encoded_len(m));
+            let cp = pickle_sparse_cutover(m);
+            assert!(pickle_sparse_encoded_len_max(cp) < pickle_encoded_len(m));
+            assert!(pickle_sparse_encoded_len_max(cp + 1) >= pickle_encoded_len(m));
+            // Both sit in the expected ~0.6m..0.8m band.
+            assert!(cj > m / 2 && cj < m, "java cutover {} at m={}", cj, m);
+            assert!(cp > m / 2 && cp < m, "pickle cutover {} at m={}", cp, m);
+        }
+    }
+
+    #[test]
+    fn sparse_encode_into_is_allocation_free_after_warmup() {
+        let v = sv(4096, &(0..200).map(|i| (i * 20, 0.5 + i as f64)).collect::<Vec<_>>());
+        let mut jb = Vec::new();
+        JavaSer::encode_sparse_into(&v, &mut jb); // warmup
+        let before = crate::testkit::alloc::current_thread_allocations();
+        for _ in 0..5 {
+            JavaSer::encode_sparse_into(&v, &mut jb);
+        }
+        let after = crate::testkit::alloc::current_thread_allocations();
+        assert_eq!(after - before, 0, "pooled sparse java encode allocated");
+
+        let mut pb = Vec::new();
+        PickleSer::encode_sparse_into(&v, &mut pb);
+        let before = crate::testkit::alloc::current_thread_allocations();
+        for _ in 0..5 {
+            PickleSer::encode_sparse_into(&v, &mut pb);
+        }
+        let after = crate::testkit::alloc::current_thread_allocations();
+        assert_eq!(after - before, 0, "pooled sparse pickle encode allocated");
+    }
+
+    #[test]
+    fn sparse_frame_much_smaller_at_low_density() {
+        // nnz/m = 0.05 → ≥ 5× fewer bytes under both codecs (the
+        // acceptance bar of the hotpath bench, checked here structurally).
+        let m = 20_000;
+        let nnz = m / 20;
+        let v = sv(m, &(0..nnz).map(|i| ((i * 20) as u32, 1.0)).collect::<Vec<_>>());
+        let mut jb = Vec::new();
+        JavaSer::encode_sparse_into(&v, &mut jb);
+        assert!(jb.len() * 5 < java_encoded_len(m), "java {} vs {}", jb.len(), java_encoded_len(m));
+        let mut pb = Vec::new();
+        PickleSer::encode_sparse_into(&v, &mut pb);
+        assert!(pb.len() * 5 < pickle_encoded_len(m));
     }
 }

@@ -20,11 +20,11 @@ use std::time::Instant;
 
 use super::overhead::OverheadModel;
 use super::rdd::{Rdd, SparkContext};
-use super::serialization::{java_encoded_len, JavaSer};
+use super::serialization::{java_encoded_len, java_sparse_cutover, JavaSer};
 use super::{DistEngine, EngineOptions, RoundTiming};
 use crate::config::{Impl, TrainConfig};
 use crate::data::{Dataset, Partitioning, WorkerData};
-use crate::linalg;
+use crate::linalg::{self, DeltaReducer, DeltaSlot};
 use crate::simnet::VirtualClock;
 use crate::solver::{managed, scd, sgd, LocalSolver, SolveRequest};
 use crate::util::pool::BytePool;
@@ -56,6 +56,10 @@ pub struct SparkEngine {
     /// Pooled serialization frames — the driver-side encode reuses one
     /// checked-out buffer per round instead of allocating a codec frame.
     frame_pool: BytePool,
+    /// Per-worker Δv frames under the java-codec cutover (DESIGN.md §7)
+    /// feeding the sparse-aware reduction tree; arenas persist.
+    slots: Vec<DeltaSlot>,
+    reducer: DeltaReducer,
 }
 
 impl SparkEngine {
@@ -162,6 +166,15 @@ impl SparkEngine {
             extra_round_fixed,
             torrent: opts.torrent_broadcast,
             frame_pool: BytePool::with_buffers(1, java_encoded_len(ds.m())),
+            slots: (0..k).map(|_| DeltaSlot::new()).collect(),
+            reducer: DeltaReducer::new(
+                ds.m(),
+                if opts.dense_frames {
+                    0
+                } else {
+                    java_sparse_cutover(ds.m())
+                },
+            ),
         }
     }
 
@@ -280,13 +293,24 @@ impl DistEngine for SparkEngine {
         let mut task_times = vec![0.0; k];
         let mut computes = vec![0.0; k];
         let mut up_per_worker = vec![0u64; k];
+        // Each task emits its Δv as the cheaper of the sparse/dense java
+        // frames (the codec really runs — the pooled buffer below — and
+        // the model is charged the ACTUAL encoded bytes), and the frame
+        // lands in the worker's reduction slot.
+        let mut up_frame = self.frame_pool.take_cleared();
         for (w, res, secs) in &outs {
             let compute = secs * self.compute_multiplier;
             computes[*w] = compute;
+            self.reducer.load(&mut self.slots[*w], &res.delta_v);
             let up = if mllib {
                 java_encoded_len(self.n_total) as u64
             } else {
-                let dv = java_encoded_len(res.delta_v.len()) as u64;
+                JavaSer::encode_delta_into(&self.slots[*w], &mut up_frame);
+                debug_assert_eq!(
+                    JavaSer::decode_delta_dense(&up_frame).unwrap(),
+                    res.delta_v
+                );
+                let dv = up_frame.len() as u64;
                 let da = if self.persistent() {
                     0
                 } else {
@@ -302,6 +326,7 @@ impl DistEngine for SparkEngine {
                 + compute
                 + self.model.java_ser(up);
         }
+        self.frame_pool.put(up_frame);
         let bytes_up: u64 = up_per_worker.iter().sum();
         let t_tasks_max = task_times.iter().cloned().fold(0.0f64, f64::max);
         let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
@@ -311,8 +336,10 @@ impl DistEngine for SparkEngine {
         let t_deser_driver = self.model.java_deser(bytes_up);
 
         // Driver reduce: the same pairwise tree as the MPI engines (Δv
-        // stays bit-identical across substrates), in place — no zeroed
-        // m-vector accumulator.
+        // stays bit-identical across substrates whatever mix of frame
+        // representations the tasks emitted), in place — no zeroed
+        // m-vector accumulator; sparse pairs merge, growth past the
+        // cutover promotes to dense.
         let t0 = Instant::now();
         {
             let mut alpha = self.alpha.borrow_mut();
@@ -320,7 +347,7 @@ impl DistEngine for SparkEngine {
                 linalg::add_assign(&mut alpha[*w], &res.delta_alpha);
             }
         }
-        let agg = linalg::tree_reduce_collect(outs.iter_mut().map(|(_, res, _)| &mut res.delta_v));
+        let agg = self.reducer.reduce_collect(&mut self.slots);
         debug_assert_eq!(agg.len(), self.m);
         let t_master = t0.elapsed().as_secs_f64();
 
@@ -437,6 +464,41 @@ mod tests {
         let (_, tb) = eb.run_round(&v0, 50, 1);
         // n = 256 vs m = 128 at this scale → heavier traffic for MLlib.
         assert!(tm.bytes_down > tb.bytes_down);
+    }
+
+    #[test]
+    fn sparse_frames_cut_up_bytes_and_keep_bits() {
+        // Small H → sparse Δv; (B)* has no α traffic, so bytes_up is the
+        // pure Δv frame — the adaptive engine must charge strictly fewer
+        // bytes while the aggregate stays BIT-identical.
+        let (ds, mut adaptive) = engine(Impl::SparkCOpt);
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 4;
+        let parts = Partitioning::build(Partitioner::Range, &ds.a, 4, 0);
+        let model = OverheadModel::paper_defaults(crate::simnet::ClusterModel::paper_testbed(1.0));
+        let mut dense = SparkEngine::new(
+            Impl::SparkCOpt,
+            &ds,
+            &parts,
+            &cfg,
+            model,
+            EngineOptions {
+                dense_frames: true,
+                ..Default::default()
+            },
+        );
+        let v0 = vec![0.0; ds.m()];
+        let (dv1, t1) = adaptive.run_round(&v0, 2, 1);
+        let (dv2, t2) = dense.run_round(&v0, 2, 1);
+        for (a, b) in dv1.iter().zip(dv2.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(
+            t1.bytes_up < t2.bytes_up,
+            "sparse {} !< dense {}",
+            t1.bytes_up,
+            t2.bytes_up
+        );
     }
 
     #[test]

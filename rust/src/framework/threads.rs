@@ -23,13 +23,16 @@
 //!   workers (true shared-memory broadcast; `Arc::make_mut` reclaims the
 //!   buffer after the barrier, so no allocation either);
 //! * labels `b` are a construction-time `Arc` shared by every rank;
-//! * each `Round` message carries a recycled Δv buffer from the master's
-//!   [`F64Pool`]; the worker swaps its result into it and the buffer comes
-//!   home with the reply — buffers orbit master ↔ workers forever;
-//! * the master combines the K deltas with the pairwise
-//!   [`linalg::tree_reduce`] **in rank order**, making the result
+//! * each `Round` message carries a recycled [`linalg::DeltaSlot`]; the
+//!   worker fills it with its Δv — **sparse when the raw frame is cheaper
+//!   than dense** (the DESIGN.md §7 cutover), dense otherwise — and the
+//!   slot comes home with the reply, orbiting master ↔ workers forever;
+//! * the master combines the K deltas with the sparse-aware pairwise
+//!   [`linalg::DeltaReducer`] **in rank order**, making the result
 //!   bit-identical to the virtual-clock MPI engine regardless of arrival
-//!   interleaving (asserted by `tests/integration_allreduce.rs`).
+//!   interleaving or frame representation (asserted by
+//!   `tests/integration_allreduce.rs` and
+//!   `tests/integration_sparse_frames.rs`).
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -39,9 +42,8 @@ use std::time::Instant;
 use super::{DistEngine, RoundTiming};
 use crate::config::{Impl, TrainConfig};
 use crate::data::{Dataset, Partitioning, WorkerData};
-use crate::linalg;
+use crate::linalg::{self, DeltaReducer, DeltaSlot};
 use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
-use crate::util::pool::F64Pool;
 
 enum ToWorker {
     Round {
@@ -49,9 +51,9 @@ enum ToWorker {
         v: Arc<Vec<f64>>,
         h: usize,
         seed: u64,
-        /// Recycled Δv buffer from the master's pool; returns with the
-        /// reply carrying this round's result.
-        recycle: Vec<f64>,
+        /// Recycled Δv slot; returns with the reply carrying this round's
+        /// delta in whichever representation the cutover picked.
+        recycle: DeltaSlot,
     },
     GetAlpha,
     Shutdown,
@@ -60,7 +62,7 @@ enum ToWorker {
 enum FromWorker {
     RoundDone {
         worker: usize,
-        delta_v: Vec<f64>,
+        delta: DeltaSlot,
         compute_s: f64,
     },
     Alpha {
@@ -85,15 +87,39 @@ pub struct ThreadedMpiEngine {
     wall: f64,
     /// Reused broadcast buffer; refcount returns to 1 at the round barrier.
     v_shared: Arc<Vec<f64>>,
-    /// Free list of Δv buffers cycling master → worker → master.
-    delta_pool: F64Pool,
+    /// Spare Δv slots cycling master → worker → master.
+    spare: Vec<DeltaSlot>,
     /// Per-rank landing slots for this round's deltas (worker order, so the
     /// reduction tree is deterministic under any arrival interleaving).
-    slots: Vec<Vec<f64>>,
+    slots: Vec<DeltaSlot>,
+    /// Sparse-aware pairwise reducer (same tree as every other engine).
+    reducer: DeltaReducer,
 }
 
 impl ThreadedMpiEngine {
+    /// Engine with the raw-frame cutover (sparse Δv when cheaper).
     pub fn new(ds: &Dataset, parts: &Partitioning, cfg: &TrainConfig) -> ThreadedMpiEngine {
+        ThreadedMpiEngine::with_cutover(ds, parts, cfg, linalg::raw_sparse_cutover(ds.m()))
+    }
+
+    /// Engine with every rank forced to dense frames (A/B baseline).
+    pub fn new_dense_frames(
+        ds: &Dataset,
+        parts: &Partitioning,
+        cfg: &TrainConfig,
+    ) -> ThreadedMpiEngine {
+        ThreadedMpiEngine::with_cutover(ds, parts, cfg, 0)
+    }
+
+    /// Engine with an explicit Δv frame cutover (nnz threshold; 0 = dense
+    /// always). Workers copy the threshold and make the sparse/dense call
+    /// locally — the master never inspects the dense Δv.
+    pub fn with_cutover(
+        ds: &Dataset,
+        parts: &Partitioning,
+        cfg: &TrainConfig,
+        cutover_nnz: usize,
+    ) -> ThreadedMpiEngine {
         let (result_tx, rx) = mpsc::channel::<FromWorker>();
         let mut workers = Vec::new();
         let mut global_ids = Vec::new();
@@ -137,9 +163,10 @@ impl ThreadedMpiEngine {
                                 solver.solve_into(&data, &alpha, &req, &mut res);
                                 let compute_s = t0.elapsed().as_secs_f64();
                                 linalg::add_assign(&mut alpha, &res.delta_alpha);
-                                // Hand the result back inside the recycled
-                                // buffer; keep its capacity for next round.
-                                std::mem::swap(&mut res.delta_v, &mut recycle);
+                                // Emit whichever frame is cheaper into the
+                                // recycled slot (its arenas keep capacity
+                                // across orbits — no steady-state allocs).
+                                recycle.fill_from_dense(&res.delta_v, cutover_nnz);
                                 // Drop our v reference BEFORE the reply so
                                 // the master (which proceeds only after all
                                 // replies) sees refcount 1 and reuses the
@@ -147,7 +174,7 @@ impl ThreadedMpiEngine {
                                 drop(v);
                                 let _ = result_tx.send(FromWorker::RoundDone {
                                     worker: w,
-                                    delta_v: recycle,
+                                    delta: recycle,
                                     compute_s,
                                 });
                             }
@@ -178,8 +205,9 @@ impl ThreadedMpiEngine {
             m: ds.m(),
             wall: 0.0,
             v_shared: Arc::new(Vec::with_capacity(ds.m())),
-            delta_pool: F64Pool::with_buffers(k, ds.m()),
-            slots: (0..k).map(|_| Vec::new()).collect(),
+            spare: (0..k).map(|_| DeltaSlot::new()).collect(),
+            slots: (0..k).map(|_| DeltaSlot::new()).collect(),
+            reducer: DeltaReducer::new(ds.m(), cutover_nnz),
         }
     }
 }
@@ -235,34 +263,37 @@ impl DistEngine for ThreadedMpiEngine {
                 v: Arc::clone(&self.v_shared),
                 h,
                 seed: round_seed,
-                recycle: self.delta_pool.take_cleared(),
+                recycle: self.spare.pop().unwrap_or_default(),
             });
         }
 
         // Gather into rank-ordered slots (replies arrive in any order).
         let mut computes = vec![0.0; k];
+        let mut bytes_up = 0u64;
         for _ in 0..k {
             match self.rx.recv().expect("worker died") {
                 FromWorker::RoundDone {
                     worker,
-                    delta_v,
+                    delta,
                     compute_s,
                 } => {
-                    self.slots[worker] = delta_v;
+                    bytes_up += delta.raw_bytes(self.m) as u64;
+                    self.slots[worker] = delta;
                     computes[worker] = compute_s;
                 }
                 FromWorker::Alpha { .. } => unreachable!("unexpected alpha reply"),
             }
         }
 
-        // Pairwise tree reduce in rank order — same tree as the
-        // virtual-clock MPI engine, hence bit-identical Δv.
+        // Sparse-aware pairwise tree reduce in rank order — same tree as
+        // the virtual-clock MPI engine, hence bit-identical Δv whatever
+        // mix of representations the workers chose.
         let rt0 = Instant::now();
-        let agg = linalg::tree_reduce_collect(self.slots.iter_mut());
+        let agg = self.reducer.reduce_collect(&mut self.slots);
         let t_master = rt0.elapsed().as_secs_f64();
-        // All K buffers go back to the pool for the next round.
+        // All K slots go back to the spare orbit for the next round.
         for slot in self.slots.iter_mut() {
-            self.delta_pool.put(std::mem::take(slot));
+            self.spare.push(std::mem::take(slot));
         }
 
         let wall = t0.elapsed().as_secs_f64();
@@ -273,7 +304,8 @@ impl DistEngine for ThreadedMpiEngine {
             t_master,
             t_overhead: (wall - t_worker - t_master).max(0.0),
             worker_compute: computes,
-            bytes_up: (self.m * 8 * k) as u64,
+            // Actual emitted frame bytes (sparse where cheaper).
+            bytes_up,
             // Shared-memory broadcast moves one m-vector, not K.
             bytes_down: (self.m * 8) as u64,
         };
@@ -347,6 +379,30 @@ mod tests {
         for (x, y) in a1.iter().zip(a2.iter()) {
             assert!((x - y).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn sparse_and_dense_frame_engines_agree_bitwise() {
+        // Small H → sparse frames on the adaptive engine; the dense-forced
+        // engine must see the exact same Δv bits and strictly more bytes.
+        let (ds, cfg, parts) = setup(4);
+        let mut adaptive = ThreadedMpiEngine::new(&ds, &parts, &cfg);
+        let mut dense = ThreadedMpiEngine::new_dense_frames(&ds, &parts, &cfg);
+        let mut v1 = vec![0.0; ds.m()];
+        let mut v2 = vec![0.0; ds.m()];
+        let mut saved = false;
+        for round in 0..4 {
+            let (dv1, t1) = adaptive.run_round(&v1, 2, round);
+            let (dv2, t2) = dense.run_round(&v2, 2, round);
+            for (a, b) in dv1.iter().zip(dv2.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert!(t1.bytes_up <= t2.bytes_up);
+            saved |= t1.bytes_up < t2.bytes_up;
+            linalg::add_assign(&mut v1, &dv1);
+            linalg::add_assign(&mut v2, &dv2);
+        }
+        assert!(saved, "adaptive engine never emitted a cheaper sparse frame");
     }
 
     #[test]

@@ -1,0 +1,644 @@
+//! nnz-adaptive Δv representation: sparse delta vectors, the byte-cost
+//! cutover rule and the sparse-aware pairwise reduction tree
+//! (DESIGN.md §7).
+//!
+//! A CoCoA worker that ran H local steps over sparse columns touches only
+//! the rows those columns carry, so its `Δv = A_k·Δα_[k]` is itself sparse —
+//! yet the engines used to broadcast and reduce **dense m-dim frames every
+//! round**, charging the overhead model for bytes the algorithm never
+//! needed to move (MLlib ships sparse Breeze vectors for exactly this
+//! reason). This module supplies the pieces every engine shares:
+//!
+//! * [`SparseVec`] — sorted-u32-index + f64-value delta representation,
+//!   extracted from a dense Δv and reconstructed bit-exactly;
+//! * the **cutover rule** — a worker emits the sparse frame iff
+//!   `cost_sparse(nnz) < cost_dense(m)` under its codec's byte costs
+//!   ([`sparse_cutover`] solves the rule for the threshold nnz once per
+//!   engine construction);
+//! * [`DeltaSlot`] / [`DeltaReducer`] — the pairwise binomial reduction
+//!   tree of [`super::tree_reduce()`], made representation-aware:
+//!   sparse+sparse pairs merge by sorted two-pointer walk, and a merge
+//!   whose nnz grows past the cutover **promotes to dense** (mixed pairs
+//!   scatter-add or promote). The tree shape and the per-index additions
+//!   are identical to the dense path, so the aggregate Δv is bit-identical
+//!   whether a round ran sparse, dense or mixed (asserted by
+//!   `tests/integration_sparse_frames.rs`).
+//!
+//! All buffers (slot storage, merge scratch) are persistent and reach
+//! steady capacity after warmup, preserving the zero-allocation hot path
+//! of `util::pool` (counting-allocator tests below).
+//!
+//! ## Exact-zero canonicalization
+//!
+//! Extraction keeps entries with `value != 0.0`, so a `-0.0` in a dense
+//! Δv is canonicalized to `+0.0` on reconstruction. This matches the dense
+//! reduce path (`-0.0 + 0.0 == +0.0` under IEEE addition) for every
+//! reachable input: untouched coordinates of a worker delta are exactly
+//! `+0.0` (`(r − r₀)·σ′⁻¹` with `r == r₀`), and a solver cannot produce a
+//! `-0.0` delta without an underflow ~10³⁰⁰× below the residual scale.
+
+use super::add_assign;
+
+// ---------------------------------------------------------------------------
+// Raw wire costs (MPI ranks / threaded engine: no codec framing)
+// ---------------------------------------------------------------------------
+
+/// Raw sparse frame header: dim u64 + nnz u64.
+pub const RAW_SPARSE_HEADER_BYTES: usize = 16;
+
+/// Bytes of a raw dense m-vector frame (doubles on the wire).
+pub fn raw_dense_bytes(m: usize) -> usize {
+    m * 8
+}
+
+/// Bytes of a raw sparse frame: header + u32 index + f64 value per entry.
+pub fn raw_sparse_bytes(nnz: usize) -> usize {
+    RAW_SPARSE_HEADER_BYTES + nnz * 12
+}
+
+/// Solve the cutover rule for a codec: the largest nnz in `[0, m]` with
+/// `cost_sparse(nnz) < cost_dense` (a worker emits sparse iff its Δv nnz
+/// is ≤ the returned threshold). Returns 0 when sparse never pays.
+/// `cost_sparse` must be non-decreasing in nnz (all our codecs are affine).
+pub fn sparse_cutover(m: usize, cost_dense: usize, cost_sparse: impl Fn(usize) -> usize) -> usize {
+    if cost_sparse(0) >= cost_dense {
+        return 0;
+    }
+    // Binary search the monotone predicate; invariant: pred(lo) holds.
+    let (mut lo, mut hi) = (0usize, m);
+    while lo < hi {
+        let mid = lo + (hi - lo + 1) / 2;
+        if cost_sparse(mid) < cost_dense {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// Cutover threshold under the raw wire costs (used by the MPI-flavoured
+/// engines): sparse iff `16 + 12·nnz < 8·m`.
+pub fn raw_sparse_cutover(m: usize) -> usize {
+    sparse_cutover(m, raw_dense_bytes(m), raw_sparse_bytes)
+}
+
+// ---------------------------------------------------------------------------
+// SparseVec
+// ---------------------------------------------------------------------------
+
+/// Sparse delta vector: strictly increasing u32 indices + f64 values.
+///
+/// The delta representation of the sparse communication layer: extracted
+/// from a worker's dense Δv ([`SparseVec::fill_from_dense`]), shipped as a
+/// codec frame, merged in the reduction tree and reconstructed bit-exactly
+/// ([`SparseVec::densify_into`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SparseVec {
+    /// Logical dimension m of the dense vector this represents.
+    pub dim: usize,
+    /// Strictly increasing indices of the stored entries.
+    pub idx: Vec<u32>,
+    /// Entry values, parallel to `idx`.
+    pub vals: Vec<f64>,
+}
+
+impl SparseVec {
+    pub fn new(dim: usize) -> SparseVec {
+        SparseVec {
+            dim,
+            idx: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Reset to an empty vector of dimension `dim`, keeping capacity.
+    pub fn clear(&mut self, dim: usize) {
+        self.dim = dim;
+        self.idx.clear();
+        self.vals.clear();
+    }
+
+    /// Extract the entries of `dense` with `value != 0.0` (reusing this
+    /// vector's capacity; zero steady-state allocations).
+    pub fn fill_from_dense(&mut self, dense: &[f64]) {
+        self.clear(dense.len());
+        for (i, &v) in dense.iter().enumerate() {
+            if v != 0.0 {
+                self.idx.push(i as u32);
+                self.vals.push(v);
+            }
+        }
+    }
+
+    /// Reconstruct the dense vector into `out` (cleared and zero-filled
+    /// first). Entry values are written verbatim — bit-exact round trip.
+    pub fn densify_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.dim, 0.0);
+        for (&i, &v) in self.idx.iter().zip(self.vals.iter()) {
+            out[i as usize] = v;
+        }
+    }
+
+    /// Scatter-add into a dense accumulator: `y[idx[i]] += vals[i]`.
+    /// Exactly the additions the dense path performs at these indices (it
+    /// additionally adds `+0.0` everywhere else, a bitwise no-op).
+    pub fn add_into_dense(&self, y: &mut [f64]) {
+        debug_assert_eq!(y.len(), self.dim);
+        for (&i, &v) in self.idx.iter().zip(self.vals.iter()) {
+            y[i as usize] += v;
+        }
+    }
+
+    /// Structural invariants: parallel arrays, strictly increasing
+    /// (duplicate-free) in-bounds indices.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.idx.len() != self.vals.len() {
+            return Err("idx/vals length mismatch".into());
+        }
+        for w in self.idx.windows(2) {
+            if w[0] >= w[1] {
+                return Err(format!("indices not strictly increasing at {}", w[0]));
+            }
+        }
+        if let Some(&last) = self.idx.last() {
+            if last as usize >= self.dim {
+                return Err(format!("index {} out of dim {}", last, self.dim));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DeltaSlot — one worker's Δv in whichever representation is cheaper
+// ---------------------------------------------------------------------------
+
+/// Which representation a Δv frame uses this round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeltaShape {
+    Dense,
+    #[default]
+    Sparse,
+}
+
+/// One worker's Δv landing slot: holds either a dense copy or the sparse
+/// extraction, with both storage arenas persistent across rounds so the
+/// representation can flip round-over-round without touching the
+/// allocator.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaSlot {
+    shape: DeltaShape,
+    dense: Vec<f64>,
+    sparse: SparseVec,
+}
+
+impl DeltaSlot {
+    pub fn new() -> DeltaSlot {
+        DeltaSlot::default()
+    }
+
+    pub fn shape(&self) -> DeltaShape {
+        self.shape
+    }
+
+    /// Stored entries: nnz for sparse, the full dimension for dense.
+    pub fn stored_len(&self) -> usize {
+        match self.shape {
+            DeltaShape::Dense => self.dense.len(),
+            DeltaShape::Sparse => self.sparse.nnz(),
+        }
+    }
+
+    /// The sparse payload (None when dense).
+    pub fn sparse(&self) -> Option<&SparseVec> {
+        match self.shape {
+            DeltaShape::Sparse => Some(&self.sparse),
+            DeltaShape::Dense => None,
+        }
+    }
+
+    /// The dense payload (None when sparse).
+    pub fn dense(&self) -> Option<&[f64]> {
+        match self.shape {
+            DeltaShape::Dense => Some(&self.dense),
+            DeltaShape::Sparse => None,
+        }
+    }
+
+    /// Fill from a worker's dense Δv, choosing the representation by the
+    /// cutover rule: sparse iff `nnz <= cutover_nnz` (and the cutover is
+    /// nonzero — 0 means frames are forced dense). Returns the chosen
+    /// shape and the counted nnz.
+    ///
+    /// Single pass over the m-vector: entries stream into the sparse
+    /// arena, and the moment the count exceeds the cutover we fall back to
+    /// the dense copy — so the common sparse case never re-scans.
+    pub fn fill_from_dense(&mut self, delta: &[f64], cutover_nnz: usize) -> (DeltaShape, usize) {
+        let dense_fallback = |slot: &mut DeltaSlot, seen: usize, rest: &[f64]| {
+            let nnz = seen + rest.iter().filter(|&&v| v != 0.0).count();
+            slot.dense.clear();
+            slot.dense.extend_from_slice(delta);
+            slot.shape = DeltaShape::Dense;
+            (DeltaShape::Dense, nnz)
+        };
+        if cutover_nnz == 0 {
+            return dense_fallback(self, 0, delta);
+        }
+        self.sparse.clear(delta.len());
+        for (i, &v) in delta.iter().enumerate() {
+            if v != 0.0 {
+                if self.sparse.nnz() == cutover_nnz {
+                    // This entry pushes nnz past the cutover: dense wins.
+                    return dense_fallback(self, cutover_nnz + 1, &delta[i + 1..]);
+                }
+                self.sparse.idx.push(i as u32);
+                self.sparse.vals.push(v);
+            }
+        }
+        self.shape = DeltaShape::Sparse;
+        (DeltaShape::Sparse, self.sparse.nnz())
+    }
+
+    /// Bytes this slot would occupy as a raw wire frame.
+    pub fn raw_bytes(&self, m: usize) -> usize {
+        match self.shape {
+            DeltaShape::Dense => raw_dense_bytes(m),
+            DeltaShape::Sparse => raw_sparse_bytes(self.sparse.nnz()),
+        }
+    }
+
+    /// Densify into an owned vector of dimension `m` (the per-round
+    /// aggregate the `run_round` API hands the caller).
+    pub fn densify_collect(&self, m: usize) -> Vec<f64> {
+        match self.shape {
+            DeltaShape::Dense => {
+                debug_assert_eq!(self.dense.len(), m);
+                self.dense.clone()
+            }
+            DeltaShape::Sparse => {
+                debug_assert_eq!(self.sparse.dim, m);
+                let mut out = Vec::new();
+                self.sparse.densify_into(&mut out);
+                out
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DeltaReducer — the sparse-aware pairwise reduction tree
+// ---------------------------------------------------------------------------
+
+/// Reduces K [`DeltaSlot`]s pairwise with the same binomial tree shape as
+/// [`super::tree_reduce()`] (result in `slots[0]`, the rest are scratch),
+/// merging sparse pairs and promoting to dense past the cutover.
+///
+/// Owns the merge scratch so steady-state rounds are allocation-free; each
+/// engine owns one reducer (single-threaded, like `util::pool`).
+#[derive(Debug)]
+pub struct DeltaReducer {
+    m: usize,
+    cutover_nnz: usize,
+    merge: SparseVec,
+}
+
+impl DeltaReducer {
+    /// Reducer with an explicit cutover threshold (0 forces dense frames —
+    /// the `EngineOptions::dense_frames` escape hatch and A/B baseline).
+    pub fn new(m: usize, cutover_nnz: usize) -> DeltaReducer {
+        DeltaReducer {
+            m,
+            cutover_nnz,
+            merge: SparseVec::new(m),
+        }
+    }
+
+    /// Reducer under the raw wire-cost cutover (MPI-flavoured engines).
+    pub fn raw(m: usize) -> DeltaReducer {
+        DeltaReducer::new(m, raw_sparse_cutover(m))
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn cutover_nnz(&self) -> usize {
+        self.cutover_nnz
+    }
+
+    /// Load a worker's dense Δv into its slot under this reducer's cutover.
+    pub fn load(&self, slot: &mut DeltaSlot, delta: &[f64]) -> (DeltaShape, usize) {
+        debug_assert_eq!(delta.len(), self.m);
+        slot.fill_from_dense(delta, self.cutover_nnz)
+    }
+
+    /// Reduce `slots[1..]` into `slots[0]` pairwise. The pairs come from
+    /// the shared [`super::tree_reduce::for_each_tree_pair`] enumeration —
+    /// the very loop [`super::tree_reduce_seq`] drives — and per-index
+    /// addition order matches the dense path, so the result is
+    /// bit-identical to the all-dense reduction by construction.
+    pub fn reduce(&mut self, slots: &mut [DeltaSlot]) {
+        super::tree_reduce::for_each_tree_pair(slots.len(), |dst, src| {
+            let (left, right) = slots.split_at_mut(src);
+            self.combine(&mut left[dst], &right[0]);
+        });
+    }
+
+    /// Reduce and densify the aggregate (the one per-round allocation the
+    /// `run_round` API imposes — the caller owns the result).
+    pub fn reduce_collect(&mut self, slots: &mut [DeltaSlot]) -> Vec<f64> {
+        if slots.is_empty() {
+            return Vec::new();
+        }
+        self.reduce(slots);
+        slots[0].densify_collect(self.m)
+    }
+
+    /// `left += right` in whichever representations the pair holds.
+    fn combine(&mut self, left: &mut DeltaSlot, right: &DeltaSlot) {
+        match (left.shape, right.shape) {
+            (DeltaShape::Dense, DeltaShape::Dense) => {
+                add_assign(&mut left.dense, &right.dense);
+            }
+            (DeltaShape::Dense, DeltaShape::Sparse) => {
+                right.sparse.add_into_dense(&mut left.dense);
+            }
+            (DeltaShape::Sparse, DeltaShape::Dense) => {
+                promote(self.m, left);
+                add_assign(&mut left.dense, &right.dense);
+            }
+            (DeltaShape::Sparse, DeltaShape::Sparse) => {
+                merge_sparse(&left.sparse, &right.sparse, &mut self.merge);
+                std::mem::swap(&mut left.sparse, &mut self.merge);
+                if left.sparse.nnz() > self.cutover_nnz {
+                    promote(self.m, left);
+                }
+            }
+        }
+    }
+}
+
+/// Promote a sparse slot to dense in place (reusing its dense arena — the
+/// scatter is [`SparseVec::densify_into`], the same reconstruction the
+/// frame decoders use).
+fn promote(m: usize, slot: &mut DeltaSlot) {
+    debug_assert_eq!(slot.shape, DeltaShape::Sparse);
+    debug_assert_eq!(slot.sparse.dim, m);
+    slot.sparse.densify_into(&mut slot.dense);
+    slot.shape = DeltaShape::Dense;
+}
+
+/// Sorted two-pointer merge: `out = a + b`. Indices present in both sides
+/// add (`a + b`, the dense path's operation); single-sided entries copy
+/// (bitwise equal to `x + 0.0` for the nonzero values stored here).
+/// Exact cancellations (`a + b == 0.0`) are kept as explicit `+0.0`
+/// entries — dropping them would also densify to `+0.0`, but keeping them
+/// avoids a re-filter pass (the promotion rule bounds growth anyway).
+fn merge_sparse(a: &SparseVec, b: &SparseVec, out: &mut SparseVec) {
+    debug_assert_eq!(a.dim, b.dim);
+    out.clear(a.dim);
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.idx.len() && j < b.idx.len() {
+        match a.idx[i].cmp(&b.idx[j]) {
+            std::cmp::Ordering::Less => {
+                out.idx.push(a.idx[i]);
+                out.vals.push(a.vals[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.idx.push(b.idx[j]);
+                out.vals.push(b.vals[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.idx.push(a.idx[i]);
+                out.vals.push(a.vals[i] + b.vals[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    while i < a.idx.len() {
+        out.idx.push(a.idx[i]);
+        out.vals.push(a.vals[i]);
+        i += 1;
+    }
+    while j < b.idx.len() {
+        out.idx.push(b.idx[j]);
+        out.vals.push(b.vals[j]);
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::tree_reduce_collect;
+
+    fn sparse_dense(m: usize, entries: &[(u32, f64)]) -> Vec<f64> {
+        let mut v = vec![0.0; m];
+        for &(i, x) in entries {
+            v[i as usize] = x;
+        }
+        v
+    }
+
+    #[test]
+    fn extraction_roundtrip_is_bit_exact() {
+        let d = sparse_dense(64, &[(0, 1.5), (7, -2.25), (63, 1e-300)]);
+        let mut sv = SparseVec::new(0);
+        sv.fill_from_dense(&d);
+        assert_eq!(sv.nnz(), 3);
+        sv.validate().unwrap();
+        let mut back = Vec::new();
+        sv.densify_into(&mut back);
+        for (a, b) in d.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn extraction_is_allocation_free_after_warmup() {
+        let d = sparse_dense(256, &[(3, 1.0), (100, 2.0), (200, -3.0)]);
+        let mut sv = SparseVec::new(0);
+        sv.fill_from_dense(&d); // warmup sizes the arenas
+        let before = crate::testkit::alloc::current_thread_allocations();
+        for _ in 0..20 {
+            sv.fill_from_dense(&d);
+        }
+        let after = crate::testkit::alloc::current_thread_allocations();
+        assert_eq!(after - before, 0, "steady-state extraction allocated");
+    }
+
+    #[test]
+    fn cutover_rule_solves_the_inequality() {
+        let m = 1000;
+        let c = raw_sparse_cutover(m);
+        assert!(raw_sparse_bytes(c) < raw_dense_bytes(m));
+        assert!(raw_sparse_bytes(c + 1) >= raw_dense_bytes(m));
+        // 16 + 12·nnz < 8000  →  nnz ≤ 665
+        assert_eq!(c, 665);
+        // Degenerate: dense never beaten → 0.
+        assert_eq!(sparse_cutover(10, 0, raw_sparse_bytes), 0);
+        // Sparse always cheaper → full range.
+        assert_eq!(sparse_cutover(10, usize::MAX, raw_sparse_bytes), 10);
+    }
+
+    #[test]
+    fn slot_picks_representation_by_cutover() {
+        let d = sparse_dense(100, &[(1, 1.0), (2, 2.0), (3, 3.0)]);
+        let mut slot = DeltaSlot::new();
+        let (shape, nnz) = slot.fill_from_dense(&d, 3);
+        assert_eq!((shape, nnz), (DeltaShape::Sparse, 3));
+        assert_eq!(slot.raw_bytes(100), raw_sparse_bytes(3));
+        let (shape, nnz) = slot.fill_from_dense(&d, 2);
+        assert_eq!((shape, nnz), (DeltaShape::Dense, 3));
+        assert_eq!(slot.raw_bytes(100), raw_dense_bytes(100));
+        // Either way the content round-trips bit-exactly.
+        let back = slot.densify_collect(100);
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn merge_matches_dense_add() {
+        let m = 40;
+        let da = sparse_dense(m, &[(1, 1.0), (5, 2.0), (9, -3.0)]);
+        let db = sparse_dense(m, &[(5, 0.5), (9, 3.0), (30, 7.0)]);
+        let (mut a, mut b) = (SparseVec::new(0), SparseVec::new(0));
+        a.fill_from_dense(&da);
+        b.fill_from_dense(&db);
+        let mut out = SparseVec::new(0);
+        merge_sparse(&a, &b, &mut out);
+        out.validate().unwrap();
+        // Exact cancellation at 9 is kept as an explicit +0.0 entry.
+        assert_eq!(out.nnz(), 4);
+        let mut got = Vec::new();
+        out.densify_into(&mut got);
+        let want: Vec<f64> = da.iter().zip(db.iter()).map(|(x, y)| x + y).collect();
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    /// The core guarantee: any mix of sparse/dense slots reduces to the
+    /// exact bits the all-dense pairwise tree produces.
+    #[test]
+    fn reducer_is_bit_identical_to_dense_tree() {
+        for k in [1usize, 2, 3, 5, 8, 13] {
+            for cutover_frac in [0.0, 0.05, 0.5, 1.0] {
+                let m = 97;
+                let mut rng = crate::linalg::Xorshift128::new(42 + k as u64);
+                let deltas: Vec<Vec<f64>> = (0..k)
+                    .map(|_| {
+                        (0..m)
+                            .map(|_| {
+                                if rng.next_f64() < 0.15 {
+                                    rng.next_gaussian()
+                                } else {
+                                    0.0
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let mut dense_bufs = deltas.clone();
+                let want = tree_reduce_collect(dense_bufs.iter_mut());
+
+                let cutover = (m as f64 * cutover_frac) as usize;
+                let mut red = DeltaReducer::new(m, cutover);
+                let mut slots: Vec<DeltaSlot> = (0..k).map(|_| DeltaSlot::new()).collect();
+                for (slot, d) in slots.iter_mut().zip(deltas.iter()) {
+                    red.load(slot, d);
+                }
+                let got = red.reduce_collect(&mut slots);
+                assert_eq!(got.len(), want.len());
+                for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "K={} cutover={} [{}]: {} vs {}",
+                        k,
+                        cutover,
+                        i,
+                        g,
+                        w
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merge_growth_promotes_to_dense() {
+        let m = 30;
+        // Cutover 10: two 8-nnz disjoint deltas merge to 16 > 10 → dense.
+        let da = sparse_dense(m, &(0..8).map(|i| (i as u32, 1.0)).collect::<Vec<_>>());
+        let db = sparse_dense(m, &(10..18).map(|i| (i as u32, 2.0)).collect::<Vec<_>>());
+        let mut red = DeltaReducer::new(m, 10);
+        let mut slots = vec![DeltaSlot::new(), DeltaSlot::new()];
+        assert_eq!(red.load(&mut slots[0], &da).0, DeltaShape::Sparse);
+        assert_eq!(red.load(&mut slots[1], &db).0, DeltaShape::Sparse);
+        red.reduce(&mut slots);
+        assert_eq!(slots[0].shape(), DeltaShape::Dense);
+        let got = slots[0].densify_collect(m);
+        let want: Vec<f64> = da.iter().zip(db.iter()).map(|(x, y)| x + y).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn reduce_handles_empty_and_single() {
+        let mut red = DeltaReducer::raw(8);
+        let mut none: Vec<DeltaSlot> = Vec::new();
+        assert!(red.reduce_collect(&mut none).is_empty());
+        let d = sparse_dense(8, &[(2, 5.0)]);
+        let mut one = vec![DeltaSlot::new()];
+        red.load(&mut one[0], &d);
+        assert_eq!(red.reduce_collect(&mut one), d);
+    }
+
+    #[test]
+    fn steady_state_reduce_is_allocation_free() {
+        let m = 64;
+        let k = 6;
+        let mut rng = crate::linalg::Xorshift128::new(9);
+        let deltas: Vec<Vec<f64>> = (0..k)
+            .map(|_| {
+                (0..m)
+                    .map(|_| {
+                        if rng.next_f64() < 0.2 {
+                            rng.next_gaussian()
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut red = DeltaReducer::raw(m);
+        let mut slots: Vec<DeltaSlot> = (0..k).map(|_| DeltaSlot::new()).collect();
+        // Warmup: sizes slot arenas and the merge scratch.
+        for (slot, d) in slots.iter_mut().zip(deltas.iter()) {
+            red.load(slot, d);
+        }
+        red.reduce(&mut slots);
+        let before = crate::testkit::alloc::current_thread_allocations();
+        for _ in 0..10 {
+            for (slot, d) in slots.iter_mut().zip(deltas.iter()) {
+                red.load(slot, d);
+            }
+            red.reduce(&mut slots);
+        }
+        let after = crate::testkit::alloc::current_thread_allocations();
+        assert_eq!(after - before, 0, "steady-state sparse reduce allocated");
+    }
+}

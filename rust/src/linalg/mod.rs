@@ -4,11 +4,18 @@
 //! time in [`dot_indexed`]/[`axpy_indexed`] (sparse column · dense residual),
 //! the MPI/Spark engines in [`add_assign`] (AllReduce aggregation). They are
 //! written as straight loops the compiler auto-vectorizes; the `hotpath`
-//! bench tracks their throughput.
+//! bench tracks their throughput. The [`delta`] module holds the
+//! nnz-adaptive Δv representation and its sparse-aware reduction tree
+//! (DESIGN.md §7).
 
+pub mod delta;
 pub mod rng;
 pub mod tree_reduce;
 
+pub use delta::{
+    raw_dense_bytes, raw_sparse_bytes, raw_sparse_cutover, sparse_cutover, DeltaReducer,
+    DeltaShape, DeltaSlot, SparseVec,
+};
 pub use rng::Xorshift128;
 pub use tree_reduce::{tree_reduce, tree_reduce_collect, tree_reduce_seq, tree_reduce_vecs};
 

@@ -25,23 +25,36 @@ use super::add_assign;
 /// adds it takes over (~0.5 µs/KiB).
 const PARALLEL_MIN_LEN: usize = 1 << 16;
 
+/// Enumerate the binomial-tree pairs for K buffers in reduction order,
+/// calling `f(dst, src)` for each combination (`dst < src`, result
+/// accumulates into `dst`; `dst = 0` at the root).
+///
+/// This is THE tree shape: [`tree_reduce_seq`] and the sparse-aware
+/// `DeltaReducer` both drive their combines through it, so the
+/// bit-identical-across-engines invariant cannot drift between the dense
+/// and sparse reduction paths.
+pub fn for_each_tree_pair(k: usize, mut f: impl FnMut(usize, usize)) {
+    let mut gap = 1;
+    while gap < k {
+        let mut i = 0;
+        while i + gap < k {
+            f(i, i + gap);
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+}
+
 /// Reduce `bufs[1..]` into `bufs[0]` pairwise, sequentially.
 ///
 /// Every buffer must have the same length; `bufs[1..]` are left holding
 /// partial sums (they are scratch). The reduction tree is identical to
 /// [`tree_reduce_parallel`], so both produce bit-identical results.
 pub fn tree_reduce_seq(bufs: &mut [&mut [f64]]) {
-    let k = bufs.len();
-    let mut gap = 1;
-    while gap < k {
-        let mut i = 0;
-        while i + gap < k {
-            let (left, right) = bufs.split_at_mut(i + gap);
-            add_assign(&mut *left[i], &*right[0]);
-            i += 2 * gap;
-        }
-        gap *= 2;
-    }
+    for_each_tree_pair(bufs.len(), |dst, src| {
+        let (left, right) = bufs.split_at_mut(src);
+        add_assign(&mut *left[dst], &*right[0]);
+    });
 }
 
 /// Reduce `bufs[1..]` into `bufs[0]` pairwise, running the independent

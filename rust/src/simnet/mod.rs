@@ -8,6 +8,14 @@
 //! 16-worker scaling experiments exactly reproducible on a single core —
 //! the quantity the paper reports (relative performance, optimal H,
 //! compute fractions) is scale-free.
+//!
+//! Only transfer *times* are modeled here. The payloads those times are
+//! charged for are real: the engines hand this model the actual encoded
+//! frame sizes (nnz-adaptive sparse Δv frames where cheaper — DESIGN.md
+//! §7), and the aggregation the [`ClusterModel::tree_allreduce`] cost
+//! stands in for is genuinely executed by `linalg`'s pairwise tree in
+//! pooled buffers (no serial fold, no fresh accumulator — see
+//! `linalg::tree_reduce` and `linalg::DeltaReducer`).
 
 /// Virtual clock measuring simulated seconds.
 #[derive(Debug, Clone, Default)]

@@ -5,7 +5,8 @@
 //! solver (here the genuinely interpreted [`managed`] solvers), an
 //! MLlib-style mini-batch SGD baseline ([`sgd`]), a classical mini-batch CD
 //! ablation ([`minibatch_cd`]) and the accelerator-offloaded Pallas/PJRT
-//! path ([`pjrt`]). All implement [`LocalSolver`].
+//! path (the `pjrt` module, present only under the `pjrt` feature). All
+//! implement [`LocalSolver`].
 
 pub mod cg;
 pub mod managed;
@@ -37,7 +38,7 @@ pub struct SolveRequest<'a> {
 }
 
 /// A worker's round output: its coordinate update and the m-dimensional
-/// shared-vector update Δv = A·Δα_[k] it communicates (the ONLY payload the
+/// shared-vector update `Δv = A·Δα_[k]` it communicates (the ONLY payload the
 /// algorithm fundamentally requires — Figure 1).
 ///
 /// Engines keep one `SolveResult` per worker alive across rounds and refill

@@ -262,3 +262,95 @@ fn prop_worker_data_preserves_columns() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_sparse_codec_roundtrip_bit_identical() {
+    // Randomized sparse Δv frames must round-trip bit-identically through
+    // both codecs (DESIGN.md §7), and the delta-varint index coding must
+    // preserve the strictly-increasing duplicate-free invariant.
+    check("sparse frames round-trip bit-identically", 60, |g| {
+        let dim = g.usize_in(1, 5000);
+        let density = g.f64_in(0.0, 1.0);
+        let mut sv = linalg::SparseVec::new(dim);
+        for i in 0..dim {
+            if g.f64_in(0.0, 1.0) < density {
+                sv.idx.push(i as u32);
+                // Mix magnitudes, signs, subnormals and specials.
+                let x = match g.usize_in(0, 5) {
+                    0 => g.f64_in(-1e3, 1e3),
+                    1 => g.f64_in(-1.0, 1.0) * 1e-300,
+                    2 => g.f64_in(-1.0, 1.0) * 1e300,
+                    3 => f64::INFINITY,
+                    _ => g.f64_in(-1.0, 1.0),
+                };
+                sv.vals.push(x);
+            }
+        }
+        sv.validate()?;
+
+        let mut jb = Vec::new();
+        JavaSer::encode_sparse_into(&sv, &mut jb);
+        let jback = JavaSer::decode_sparse_slice(&jb).map_err(|e| format!("java: {}", e))?;
+        jback.validate()?;
+        let mut pb = Vec::new();
+        PickleSer::encode_sparse_into(&sv, &mut pb);
+        let pback = PickleSer::decode_sparse_slice(&pb).map_err(|e| format!("pickle: {}", e))?;
+        pback.validate()?;
+        for back in [&jback, &pback] {
+            if back.dim != sv.dim || back.idx != sv.idx {
+                return Err("structure mismatch".into());
+            }
+            for (a, b) in back.vals.iter().zip(sv.vals.iter()) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("value bits {} vs {}", a, b));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_delta_reducer_matches_dense_tree_bitwise() {
+    // Random worker deltas at random densities and a random cutover must
+    // reduce to the exact bits of the all-dense pairwise tree, through
+    // sparse merges, mixed pairs and dense promotions alike.
+    check("sparse-aware reduce == dense tree (bitwise)", 40, |g| {
+        let m = g.usize_in(1, 300);
+        let k = g.usize_in(1, 9);
+        let cutover = g.usize_in(0, m + 1);
+        let deltas: Vec<Vec<f64>> = (0..k)
+            .map(|_| {
+                let density = g.f64_in(0.0, 0.6);
+                (0..m)
+                    .map(|_| {
+                        if g.f64_in(0.0, 1.0) < density {
+                            g.f64_in(-5.0, 5.0)
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut dense_bufs = deltas.clone();
+        let want = linalg::tree_reduce_collect(dense_bufs.iter_mut());
+
+        let mut red = linalg::DeltaReducer::new(m, cutover);
+        let mut slots: Vec<linalg::DeltaSlot> =
+            (0..k).map(|_| linalg::DeltaSlot::new()).collect();
+        for (slot, d) in slots.iter_mut().zip(deltas.iter()) {
+            red.load(slot, d);
+        }
+        let got = red.reduce_collect(&mut slots);
+        if got.len() != want.len() {
+            return Err("length mismatch".into());
+        }
+        for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("[{}] {} vs {} (cutover {})", i, a, b, cutover));
+            }
+        }
+        Ok(())
+    });
+}
