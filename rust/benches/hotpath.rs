@@ -24,9 +24,10 @@ use sparkbench::coordinator;
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
 use sparkbench::data::{Partitioner, Partitioning, WorkerData};
 use sparkbench::framework::serialization::{java_encoded_len, java_sparse_cutover, JavaSer, PickleSer};
-use sparkbench::framework::{build_engine_with, EngineOptions};
+use sparkbench::framework::EngineOptions;
 use sparkbench::linalg;
 use sparkbench::linalg::{DeltaReducer, DeltaSlot};
+use sparkbench::session::Session;
 use sparkbench::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
 use sparkbench::testkit::alloc::{current_thread_allocations, CountingAllocator};
 use sparkbench::util::json::Json;
@@ -287,8 +288,14 @@ fn main() {
                     dense_frames,
                     ..Default::default()
                 };
-                let mut eng = build_engine_with(Impl::SparkCOpt, &sds, &c, &opts);
-                let rep = coordinator::train_with_oracle(eng.as_mut(), &sds, &c, fstar);
+                let rep = Session::builder(&sds)
+                    .engine(Impl::SparkCOpt)
+                    .options(opts)
+                    .config(c.clone())
+                    .oracle(fstar)
+                    .build()
+                    .expect("valid bench session")
+                    .run();
                 // Penalize runs that missed the target inside max_rounds.
                 rep.time_to_target.unwrap_or(rep.total_time * 10.0)
             };

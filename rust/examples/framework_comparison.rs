@@ -1,8 +1,12 @@
 //! Framework comparison: the paper's headline experiment in miniature.
 //!
-//! Trains the *same* CoCoA algorithm on all five substrates (A)–(E) plus
-//! the §5.3 optimized variants, each at H = n_local, and prints the
-//! time-to-target ordering — the Figure 2 story.
+//! Trains the *same* CoCoA algorithm on every virtual-clock substrate in
+//! the session registry — (A)–(E), the §5.3 optimized variants and the
+//! parameter-server engine — each at H = n_local, and prints the
+//! time-to-target ordering (the Figure 2 story, extended to the
+//! registry). The wall-clock `Engine::Threads` substrate is omitted here
+//! because its times are not comparable to the virtual clock; see the
+//! quickstart and `session` docs for driving it.
 //!
 //! ```sh
 //! cargo run --release --example framework_comparison
@@ -11,8 +15,9 @@
 use sparkbench::config::{Impl, TrainConfig};
 use sparkbench::coordinator;
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
-use sparkbench::framework::build_engine;
+use sparkbench::framework::Engine;
 use sparkbench::metrics::Table;
+use sparkbench::session::Session;
 
 fn main() {
     let mut spec = SyntheticSpec::small();
@@ -27,31 +32,37 @@ fn main() {
     println!("dataset: {} | K={} | λn={:.2} | target ε=1e-3\n", ds.name, cfg.workers, cfg.lam_n);
     let fstar = coordinator::oracle_objective(&ds, &cfg);
 
-    let mut table = Table::new(&["impl", "rounds", "time (virt s)", "overhead share", "vs MPI"]);
+    let mut table = Table::new(&["engine", "rounds", "time (virt s)", "overhead share", "vs MPI"]);
     let mut mpi_time = None;
     let mut rows = Vec::new();
 
-    for imp in [
-        Impl::Mpi,
-        Impl::SparkCOpt,
-        Impl::PySparkCOpt,
-        Impl::SparkC,
-        Impl::SparkScala,
-        Impl::PySparkC,
-        Impl::PySpark,
+    for engine in [
+        Engine::Impl(Impl::Mpi),
+        Engine::Impl(Impl::SparkCOpt),
+        Engine::Impl(Impl::PySparkCOpt),
+        Engine::Impl(Impl::SparkC),
+        Engine::Impl(Impl::SparkScala),
+        Engine::Impl(Impl::PySparkC),
+        Engine::Impl(Impl::PySpark),
+        Engine::ParamServer { staleness: 0 },
     ] {
-        let mut engine = build_engine(imp, &ds, &cfg);
-        let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &cfg, fstar);
+        let rep = Session::builder(&ds)
+            .engine(engine)
+            .config(cfg.clone())
+            .oracle(fstar)
+            .build()
+            .expect("valid session")
+            .run();
         let t = rep.time_to_target.unwrap_or(rep.total_time);
-        if imp == Impl::Mpi {
+        if engine == Engine::Impl(Impl::Mpi) {
             mpi_time = Some(t);
         }
-        rows.push((imp, rep, t));
+        rows.push((rep, t));
     }
 
-    for (imp, rep, t) in &rows {
+    for (rep, t) in &rows {
         table.row(vec![
-            imp.name().to_string(),
+            rep.impl_name.clone(),
             rep.rounds.to_string(),
             format!("{:.4}", t),
             format!("{:.0}%", 100.0 * rep.total_overhead / rep.total_time),

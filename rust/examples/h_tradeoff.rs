@@ -1,7 +1,7 @@
 //! The communication–computation trade-off (§5.5): sweep H for a cheap-
 //! communication substrate (MPI) and an expensive one (pySpark+C) and show
-//! the optimum moves — plus the adaptive-H controller finding a good H in
-//! a single run.
+//! the optimum moves — plus the adaptive-H session finding a good H in a
+//! single run (no grid).
 //!
 //! ```sh
 //! cargo run --release --example h_tradeoff
@@ -12,6 +12,7 @@ use sparkbench::coordinator::{self, tuner};
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
 use sparkbench::framework::build_engine;
 use sparkbench::metrics::Table;
+use sparkbench::session::Session;
 
 fn main() {
     let mut spec = SyntheticSpec::small();
@@ -43,14 +44,21 @@ fn main() {
         println!("{}", table.render());
     }
 
-    // The future-work feature: adapt H online instead of grid searching.
+    // The future-work feature: adapt H online instead of grid searching —
+    // one session with the Adaptive policy.
     println!("adaptive-H (single run, no grid):");
     for (imp, target) in [(Impl::Mpi, 0.9), (Impl::PySparkC, 0.6)] {
-        let mut engine = build_engine(imp, &ds, &cfg);
-        let rep = tuner::train_adaptive(engine.as_mut(), &ds, &cfg, fstar, target);
+        let rep = Session::builder(&ds)
+            .engine(imp)
+            .config(cfg.clone())
+            .oracle(fstar)
+            .adaptive_h(target)
+            .build()
+            .expect("valid session")
+            .run();
         println!(
             "  {:16} reached ε at {} (final H = {})",
-            imp.name(),
+            rep.impl_name,
             rep.time_to_target
                 .map(|t| format!("{:.4} virt s", t))
                 .unwrap_or_else(|| "-".into()),

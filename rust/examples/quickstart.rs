@@ -1,14 +1,13 @@
-//! Quickstart: train a ridge-regression model with CoCoA on the MPI-like
-//! substrate and print the convergence report.
+//! Quickstart: train a ridge-regression model with CoCoA through the
+//! `Session` builder and print the convergence report.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use sparkbench::config::{Impl, TrainConfig};
-use sparkbench::coordinator;
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
-use sparkbench::framework::build_engine;
+use sparkbench::session::Session;
 
 fn main() {
     // 1. A webspam-like sparse dataset (use `data::libsvm::read_libsvm`
@@ -21,12 +20,18 @@ fn main() {
     cfg.workers = 4;
     cfg.max_rounds = 2000;
 
-    // 3. Pick a framework substrate — the whole point of the paper is that
-    //    this choice (and tuning H to it) decides performance.
-    let mut engine = build_engine(Impl::Mpi, &ds, &cfg);
+    // 3. Compose the session. The engine selector reaches the whole
+    //    registry — every paper impl, `Engine::Threads { .. }` and
+    //    `Engine::ParamServer { .. }` — and the whole point of the paper
+    //    is that this choice (plus tuning H to it) decides performance.
+    let report = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg)
+        .build()
+        .expect("valid session")
+        .run();
 
-    // 4. Train to 1e-3 suboptimality.
-    let report = coordinator::train(engine.as_mut(), &ds, &cfg);
+    // 4. One report, same shape for every engine.
     println!(
         "{}: {} rounds, {:.4} virtual s (worker {:.4} / master {:.4} / overhead {:.4})",
         report.impl_name,
@@ -36,9 +41,10 @@ fn main() {
         report.total_master,
         report.total_overhead
     );
-    match report.time_to_target {
-        Some(t) => println!("reached ε = 1e-3 at {:.4} virtual s", t),
-        None => println!("did not reach target; final ε = {:.3e}", report.final_suboptimality),
+    match (report.time_to_target, report.final_suboptimality) {
+        (Some(t), _) => println!("reached ε = 1e-3 at {:.4} virtual s", t),
+        (None, Some(s)) => println!("did not reach target; final ε = {:.3e}", s),
+        (None, None) => println!("timing run: objective not evaluated"),
     }
 
     // 5. The last few points of the convergence curve.

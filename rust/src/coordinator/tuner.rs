@@ -2,12 +2,17 @@
 //! the paper's conclusion calls for ("algorithms that are able to
 //! automatically adapt their parameters to changes in system-level
 //! conditions are of considerable interest").
+//!
+//! Both paths run on the ONE session loop: [`grid_search_h`] builds a
+//! fresh [`Session`] per grid point, and the controller is the
+//! [`session::policy::Adaptive`](crate::session::policy::Adaptive) H
+//! policy (this module keeps the controller math, [`AdaptiveH`]).
 
 use crate::config::TrainConfig;
 use crate::data::Dataset;
 use crate::framework::DistEngine;
-use crate::linalg;
 use crate::metrics::TrainReport;
+use crate::session::{policy, Session, StopPolicy};
 
 /// Result of evaluating one H value.
 #[derive(Debug, Clone)]
@@ -33,8 +38,16 @@ pub fn grid_search_h(
         let mut c = cfg.clone();
         c.h_frac = frac;
         c.h_abs = None;
+        let target = c.target_subopt;
         let mut engine = make_engine();
-        let report = super::train_with_oracle(engine.as_mut(), ds, &c, fstar);
+        let report = Session::builder(ds)
+            .config(c)
+            .attach(engine.as_mut())
+            .oracle(fstar)
+            .stop(StopPolicy::ToTarget { subopt: target })
+            .build()
+            .expect("invalid grid-search config")
+            .run();
         points.push(HPoint {
             h_frac: frac,
             report,
@@ -106,6 +119,12 @@ impl AdaptiveH {
 }
 
 /// Train with the adaptive controller in the loop.
+///
+/// Shim over the session loop with the
+/// [`Adaptive`](crate::session::policy::Adaptive) H policy; the H
+/// sequence is bit-for-bit the one the old dedicated loop produced
+/// (asserted by `tests/integration_session.rs`).
+#[deprecated(note = "compose a `session::Session` with `.adaptive_h(target_fraction)` instead")]
 pub fn train_adaptive(
     engine: &mut dyn DistEngine,
     ds: &Dataset,
@@ -113,61 +132,24 @@ pub fn train_adaptive(
     fstar: f64,
     target_fraction: f64,
 ) -> TrainReport {
-    let n_locals = engine.n_locals();
-    let mean_n_local =
-        (n_locals.iter().sum::<usize>() as f64 / n_locals.len().max(1) as f64).round() as usize;
-    let mut ctrl = AdaptiveH::new(cfg.h_for(mean_n_local), mean_n_local, target_fraction);
-    let mut h = ctrl.h as usize;
-
-    let mut v = vec![0.0; ds.m()];
-    let mut logs = Vec::new();
-    let mut time_to_target = None;
-    let (mut tot_worker, mut tot_master, mut tot_overhead) = (0.0, 0.0, 0.0);
-    let mut final_obj = ds.objective(&engine.alpha_global(), cfg.lam_n, cfg.eta);
-    let mut final_sub = super::suboptimality(final_obj, fstar);
-
-    for round in 0..cfg.max_rounds {
-        let seed = cfg.seed ^ (round as u64).wrapping_mul(0xA24BAED4963EE407);
-        let (dv, timing) = engine.run_round(&v, h, seed);
-        linalg::add_assign(&mut v, &dv);
-        tot_worker += timing.t_worker;
-        tot_master += timing.t_master;
-        tot_overhead += timing.t_overhead;
-
-        let f = ds.objective(&engine.alpha_global(), cfg.lam_n, cfg.eta);
-        final_obj = f;
-        final_sub = super::suboptimality(f, fstar);
-        logs.push(crate::metrics::RoundLog {
-            round,
-            time: engine.clock(),
-            objective: Some(f),
-            suboptimality: Some(final_sub),
-            timing: timing.clone(),
-            h,
-        });
-
-        if final_sub <= cfg.target_subopt {
-            time_to_target = Some(engine.clock());
-            break;
-        }
-        h = ctrl.observe(timing.t_worker, timing.t_overhead);
-    }
-
-    TrainReport {
-        impl_name: format!("{}+adaptiveH", engine.imp().name()),
-        rounds: logs.len(),
-        time_to_target,
-        final_suboptimality: final_sub,
-        final_objective: final_obj,
-        total_time: engine.clock(),
-        total_worker: tot_worker,
-        total_master: tot_master,
-        total_overhead: tot_overhead,
-        logs,
-    }
+    // The old loop evaluated the objective every round regardless of
+    // `eval_every`; preserve that cadence.
+    let mut c = cfg.clone();
+    c.eval_every = 1;
+    let target = c.target_subopt;
+    Session::builder(ds)
+        .config(c)
+        .attach(engine)
+        .oracle(fstar)
+        .stop(StopPolicy::ToTarget { subopt: target })
+        .h_policy(policy::Adaptive::new(target_fraction))
+        .build()
+        .expect("session build failed")
+        .run()
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the train_adaptive shim
 mod tests {
     use super::*;
     use crate::config::Impl;
@@ -230,7 +212,7 @@ mod tests {
         let report = train_adaptive(eng.as_mut(), &ds, &cfg, fstar, 0.9);
         assert!(
             report.time_to_target.is_some(),
-            "adaptive run missed target: {}",
+            "adaptive run missed target: {:?}",
             report.final_suboptimality
         );
         assert!(report.impl_name.contains("adaptiveH"));

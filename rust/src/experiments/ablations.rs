@@ -11,12 +11,13 @@
 //!   vs grid-tuned H.
 //! * `gamma` — adding (γ=1) vs averaging (γ=1/K) aggregation (CoCoA⁺).
 
-use super::common::{make_engine, ExpOptions};
+use super::common::{make_engine, run_to_target, ExpOptions};
 use crate::config::{Impl, TrainConfig};
-use crate::coordinator::{self, run_fixed_rounds, tuner};
+use crate::coordinator::{self, tuner};
 use crate::data::{Partitioner, Partitioning};
-use crate::framework::{build_engine_with, LayoutOverride};
+use crate::framework::LayoutOverride;
 use crate::metrics::Table;
+use crate::session::{Session, StopPolicy};
 
 pub fn layout(opts: &ExpOptions) -> String {
     let ds = opts.dataset();
@@ -31,8 +32,14 @@ pub fn layout(opts: &ExpOptions) -> String {
     ] {
         let mut eopts = opts.engine_options();
         eopts.force_layout = Some(layout);
-        let mut engine = build_engine_with(Impl::SparkC, &ds, &cfg, &eopts);
-        let rep = run_fixed_rounds(engine.as_mut(), &ds, &cfg, 50);
+        let rep = Session::builder(&ds)
+            .engine(Impl::SparkC)
+            .options(eopts)
+            .config(cfg.clone())
+            .stop(StopPolicy::FixedRounds { n: 50 })
+            .build()
+            .expect("invalid layout ablation config")
+            .run();
         table.row(vec![
             name.to_string(),
             format!("{:.4}", rep.total_overhead),
@@ -63,8 +70,7 @@ pub fn partitioner(opts: &ExpOptions) -> String {
         let imb = parts.imbalance(&ds.a);
         let mut c = cfg.clone();
         c.partitioner = p;
-        let mut engine = make_engine(Impl::Mpi, &ds, &c, opts);
-        let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &c, fstar);
+        let rep = run_to_target(Impl::Mpi, &ds, &c, fstar, opts);
         let t = rep
             .time_to_target
             .map(|t| format!("{:.4}", t))
@@ -168,8 +174,15 @@ pub fn adaptive_h(opts: &ExpOptions) -> String {
         let make = || make_engine(imp, &ds, &cfg, opts);
         let (points, best) = tuner::grid_search_h(&make, &ds, &cfg, fstar, &tuner::DEFAULT_H_GRID);
         let tuned = points[best].report.time_to_target;
-        let mut engine = make_engine(imp, &ds, &cfg, opts);
-        let adaptive = tuner::train_adaptive(engine.as_mut(), &ds, &cfg, fstar, target_frac);
+        let adaptive = Session::builder(&ds)
+            .engine(imp)
+            .options(opts.engine_options())
+            .config(cfg.clone())
+            .oracle(fstar)
+            .adaptive_h(target_frac)
+            .build()
+            .expect("invalid adaptive-h ablation config")
+            .run();
         table.row(vec![
             imp.name().to_string(),
             tuned.map(|t| format!("{:.4}", t)).unwrap_or_else(|| "-".into()),
@@ -202,8 +215,7 @@ pub fn gamma(opts: &ExpOptions) -> String {
     for gamma in [1.0, 0.5, 1.0 / base.workers as f64] {
         let mut cfg = base.clone();
         cfg.gamma = gamma;
-        let mut engine = make_engine(Impl::Mpi, &ds, &cfg, opts);
-        let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &cfg, fstar);
+        let rep = run_to_target(Impl::Mpi, &ds, &cfg, fstar, opts);
         table.row(vec![
             format!("{:.3}", gamma),
             format!("{:.2}", cfg.sigma()),
@@ -278,8 +290,15 @@ pub fn broadcast(opts: &ExpOptions) -> String {
         let run = |torrent: bool| -> f64 {
             let mut eopts = opts.engine_options();
             eopts.torrent_broadcast = torrent;
-            let mut engine = build_engine_with(Impl::SparkC, &ds, &c, &eopts);
-            run_fixed_rounds(engine.as_mut(), &ds, &c, 30).total_overhead
+            Session::builder(&ds)
+                .engine(Impl::SparkC)
+                .options(eopts)
+                .config(c.clone())
+                .stop(StopPolicy::FixedRounds { n: 30 })
+                .build()
+                .expect("invalid broadcast ablation config")
+                .run()
+                .total_overhead
         };
         let star = run(false);
         let torrent = run(true);

@@ -5,11 +5,12 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 
 use crate::config::{Impl, TrainConfig};
-use crate::coordinator::{self, tuner};
+use crate::coordinator::tuner;
 use crate::data::synthetic::{webspam_like, SyntheticSpec};
 use crate::data::Dataset;
-use crate::framework::{build_engine_with, DistEngine, EngineOptions};
+use crate::framework::{build_engine_with, DistEngine, Engine, EngineOptions};
 use crate::metrics::{write_file, TrainReport};
+use crate::session::{Session, StopPolicy};
 
 /// Options common to all experiments.
 #[derive(Debug, Clone)]
@@ -103,6 +104,44 @@ pub fn make_engine(
     build_engine_with(imp, ds, cfg, &opts.engine_options())
 }
 
+/// One session to the configured target with a known oracle — the common
+/// experiment step.
+pub fn run_to_target(
+    engine: impl Into<Engine>,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    fstar: f64,
+    opts: &ExpOptions,
+) -> TrainReport {
+    Session::builder(ds)
+        .engine(engine)
+        .options(opts.engine_options())
+        .config(cfg.clone())
+        .oracle(fstar)
+        .build()
+        .expect("invalid experiment config")
+        .run()
+}
+
+/// Pure timing run: exactly `rounds` rounds, objective never evaluated
+/// (the Figure 3/4 methodology).
+pub fn run_timing(
+    engine: impl Into<Engine>,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    rounds: usize,
+    opts: &ExpOptions,
+) -> TrainReport {
+    Session::builder(ds)
+        .engine(engine)
+        .options(opts.engine_options())
+        .config(cfg.clone())
+        .stop(StopPolicy::FixedRounds { n: rounds })
+        .build()
+        .expect("invalid experiment config")
+        .run()
+}
+
 /// Tune H for an implementation by grid search; memoized per (impl,K).
 pub struct HTuneCache {
     cache: HashMap<(Impl, usize), f64>,
@@ -159,8 +198,7 @@ pub fn train_averaged(
         c.h_frac = h_frac;
         c.h_abs = None;
         c.seed = cfg.seed + s as u64;
-        let mut engine = make_engine(imp, ds, &c, opts);
-        let report = coordinator::train_with_oracle(engine.as_mut(), ds, &c, fstar);
+        let report = run_to_target(imp, ds, &c, fstar, opts);
         if let Some(t) = report.time_to_target {
             times.push(t);
         }
@@ -209,7 +247,7 @@ mod tests {
         let ds = o.dataset();
         let mut cfg = o.config(&ds);
         cfg.max_rounds = 60;
-        let fstar = coordinator::oracle_objective(&ds, &cfg);
+        let fstar = crate::coordinator::oracle_objective(&ds, &cfg);
         let mut cache = HTuneCache::new();
         let h1 = cache.tuned_h_frac(Impl::Mpi, &ds, &cfg, fstar, &o);
         let h2 = cache.tuned_h_frac(Impl::Mpi, &ds, &cfg, fstar, &o);

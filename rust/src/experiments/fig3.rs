@@ -5,9 +5,8 @@
 //! by managed-solver compute; +C variants cut worker time 10×/100×+;
 //! pySpark overhead ≈ 15× Spark overhead; MPI overhead ≈ 3% of total.
 
-use super::common::{make_engine, ExpOptions};
+use super::common::{run_timing, ExpOptions};
 use crate::config::Impl;
-use crate::coordinator::run_fixed_rounds;
 use crate::metrics::Table;
 
 pub const ROUNDS: usize = 100;
@@ -43,8 +42,7 @@ pub fn run(opts: &ExpOptions) -> String {
     let mut rows = Vec::new();
 
     for imp in Impl::ALL_PAPER {
-        let mut engine = make_engine(imp, &ds, &cfg, opts);
-        let rep = run_fixed_rounds(engine.as_mut(), &ds, &cfg, ROUNDS);
+        let rep = run_timing(imp, &ds, &cfg, ROUNDS, opts);
         csv.push_str(&format!(
             "{},{:.6},{:.6},{:.6},{:.6}\n",
             imp.name(),

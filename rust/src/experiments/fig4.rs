@@ -5,9 +5,8 @@
 //! α), D→D\* overhead ↓ ≈10× (meta-RDD dominates — no python record
 //! traffic), leaving B\* ≈ D\* within 2× of MPI.
 
-use super::common::{make_engine, ExpOptions};
+use super::common::{run_timing, ExpOptions};
 use crate::config::Impl;
-use crate::coordinator::run_fixed_rounds;
 use crate::metrics::Table;
 
 pub const ROUNDS: usize = 100;
@@ -36,8 +35,7 @@ pub fn run(opts: &ExpOptions) -> String {
     let mut rows = Vec::new();
 
     for imp in impls {
-        let mut engine = make_engine(imp, &ds, &cfg, opts);
-        let rep = run_fixed_rounds(engine.as_mut(), &ds, &cfg, ROUNDS);
+        let rep = run_timing(imp, &ds, &cfg, ROUNDS, opts);
         let bytes_down: u64 = rep.logs.iter().map(|l| l.timing.bytes_down).sum::<u64>() / ROUNDS as u64;
         let bytes_up: u64 = rep.logs.iter().map(|l| l.timing.bytes_up).sum::<u64>() / ROUNDS as u64;
         csv.push_str(&format!(

@@ -8,8 +8,8 @@
 use super::common::{train_averaged, ExpOptions, HTuneCache};
 use crate::config::Impl;
 use crate::coordinator;
-use crate::framework::build_engine_with;
 use crate::metrics::Table;
+use crate::session::Session;
 
 pub fn run(opts: &ExpOptions) -> String {
     let ds = opts.dataset();
@@ -67,12 +67,18 @@ pub fn run(opts: &ExpOptions) -> String {
                     let mut eopts = opts.engine_options();
                     eopts.sgd_step = step;
                     eopts.sgd_batch_fraction = frac;
-                    let mut engine = build_engine_with(imp, &ds, &cfg, &eopts);
-                    let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &cfg, fstar);
+                    let rep = Session::builder(&ds)
+                        .engine(imp)
+                        .options(eopts)
+                        .config(cfg.clone())
+                        .oracle(fstar)
+                        .build()
+                        .expect("invalid fig5 config")
+                        .run();
                     let cand = (
                         rep.time_to_target,
                         rep.rounds,
-                        rep.final_suboptimality,
+                        rep.final_suboptimality.unwrap_or(f64::INFINITY),
                         time_to(&rep, 0.1),
                     );
                     let replace = match &best {
@@ -105,7 +111,13 @@ pub fn run(opts: &ExpOptions) -> String {
             t01.map(|t| format!("{:.6}", t)).unwrap_or_default(),
             reports[0].rounds
         ));
-        results.push((imp, mean_time, reports[0].rounds, reports[0].final_suboptimality, t01));
+        results.push((
+            imp,
+            mean_time,
+            reports[0].rounds,
+            reports[0].final_suboptimality.unwrap_or(f64::INFINITY),
+            t01,
+        ));
     }
 
     let mllib_t01 = results

@@ -62,7 +62,14 @@ impl RoundTiming {
 
 /// One framework substrate executing CoCoA rounds.
 pub trait DistEngine {
+    /// Paper-implementation classification (solver kind, persistence).
     fn imp(&self) -> Impl;
+
+    /// Registry identity — distinguishes the thread and parameter-server
+    /// substrates from the virtual-clock `Impl` they emulate.
+    fn engine(&self) -> Engine {
+        Engine::Impl(self.imp())
+    }
 
     fn num_workers(&self) -> usize;
 
@@ -78,8 +85,25 @@ pub trait DistEngine {
     /// charge on the virtual clock.
     fn alpha_global(&self) -> Vec<f64>;
 
+    /// Scatter a global α into the per-worker state (checkpoint resume).
+    /// Free of charge on the virtual clock, like [`alpha_global`].
+    ///
+    /// [`alpha_global`]: DistEngine::alpha_global
+    fn load_alpha(&mut self, alpha_global: &[f64]);
+
     /// Virtual time consumed so far.
     fn clock(&self) -> f64;
+}
+
+/// Scatter a global α into per-worker vectors by their global column ids
+/// — the one inverse of the `alpha_global` gather, shared by every
+/// engine's `load_alpha`.
+pub(crate) fn scatter_alpha(data: &[WorkerData], alpha: &mut [Vec<f64>], alpha_global: &[f64]) {
+    for (wd, al) in data.iter().zip(alpha.iter_mut()) {
+        for (&gid, a) in wd.global_ids.iter().zip(al.iter_mut()) {
+            *a = alpha_global[gid as usize];
+        }
+    }
 }
 
 /// Shared engine internals: partitioned data + per-worker α state.
@@ -112,6 +136,12 @@ impl WorkerSet {
             }
         }
         out
+    }
+
+    /// Inverse of [`alpha_global`](WorkerSet::alpha_global): scatter a global
+    /// α back into the per-worker vectors (checkpoint resume).
+    pub fn load_alpha(&mut self, alpha_global: &[f64]) {
+        scatter_alpha(&self.data, &mut self.alpha, alpha_global);
     }
 
     pub fn n_locals(&self) -> Vec<usize> {
@@ -174,37 +204,146 @@ pub fn calibration() -> &'static Calibration {
     CAL.get_or_init(|| crate::solver::managed::calibrate(1))
 }
 
-/// Build the engine for an implementation on a dataset.
-pub fn build_engine(imp: Impl, ds: &Dataset, cfg: &TrainConfig) -> Box<dyn DistEngine> {
-    build_engine_with(imp, ds, cfg, &EngineOptions::default())
+/// Selector for the full engine registry: every substrate the testbed can
+/// run. The eight virtual-clock [`Impl`] variants plus the two engines the
+/// old registry could not reach — the physically parallel thread engine
+/// and the parameter-server engine. One constructor path ([`build_any`])
+/// serves all of them and applies every applicable [`EngineOptions`]
+/// field uniformly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// A virtual-clock paper implementation (A..E, B*, D*, mllib-sgd).
+    Impl(Impl),
+    /// Physically parallel rank-per-thread engine (wall-clock timing, MPI
+    /// semantics). `k = 0` means "use `cfg.workers`"; any other value
+    /// overrides the worker count.
+    Threads { k: usize },
+    /// Parameter-server engine. `staleness = 0` is the synchronous mode
+    /// (bit-identical trajectories to MPI); larger values let workers
+    /// compute against views that many rounds old, damped by 1/(1+s).
+    ParamServer { staleness: usize },
 }
 
-/// Build with explicit options.
+impl From<Impl> for Engine {
+    fn from(imp: Impl) -> Engine {
+        Engine::Impl(imp)
+    }
+}
+
+impl Engine {
+    /// Human-readable registry label (CLI tables, reports).
+    pub fn label(&self) -> String {
+        match self {
+            Engine::Impl(imp) => imp.name().to_string(),
+            Engine::Threads { k: 0 } => "threads".to_string(),
+            Engine::Threads { k } => format!("threads:{}", k),
+            Engine::ParamServer { staleness: 0 } => "param-server".to_string(),
+            Engine::ParamServer { staleness } => format!("param-server:{}", staleness),
+        }
+    }
+
+    /// Parse CLI aliases: every [`Impl::parse`] alias, plus `threads`
+    /// (optionally `threads:K`) and `ps` / `param-server` (optionally
+    /// `ps:STALENESS`).
+    pub fn parse(s: &str) -> Option<Engine> {
+        if let Some(imp) = Impl::parse(s) {
+            return Some(Engine::Impl(imp));
+        }
+        let lower = s.to_ascii_lowercase();
+        let (head, arg) = match lower.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (lower.as_str(), None),
+        };
+        let num = |default: usize| -> Option<usize> {
+            match arg {
+                None => Some(default),
+                Some(a) => a.parse().ok(),
+            }
+        };
+        match head {
+            "threads" => Some(Engine::Threads { k: num(0)? }),
+            "ps" | "param-server" | "param_server" => {
+                Some(Engine::ParamServer { staleness: num(0)? })
+            }
+            _ => None,
+        }
+    }
+
+    /// Every engine family once — the registry sweep used by tests.
+    pub const FAMILIES: [Engine; 5] = [
+        Engine::Impl(Impl::SparkCOpt),
+        Engine::Impl(Impl::PySparkCOpt),
+        Engine::Impl(Impl::Mpi),
+        Engine::Threads { k: 0 },
+        Engine::ParamServer { staleness: 0 },
+    ];
+}
+
+/// Build the engine for an implementation on a dataset.
+pub fn build_engine(imp: Impl, ds: &Dataset, cfg: &TrainConfig) -> Box<dyn DistEngine> {
+    build_any(Engine::Impl(imp), ds, cfg, &EngineOptions::default())
+}
+
+/// Build an [`Impl`] with explicit options (shim over [`build_any`]).
 pub fn build_engine_with(
     imp: Impl,
     ds: &Dataset,
     cfg: &TrainConfig,
     opts: &EngineOptions,
 ) -> Box<dyn DistEngine> {
+    build_any(Engine::Impl(imp), ds, cfg, opts)
+}
+
+/// The unified constructor: build any registry [`Engine`] on a dataset.
+///
+/// Every substrate goes through the same path: one [`Partitioning`] from
+/// the config, one overhead model from the options, and every applicable
+/// [`EngineOptions`] field applied identically — in particular
+/// `dense_frames` disables the sparse Δv layer for **all** five engine
+/// families (spark, pyspark, mpi, threads, param-server), not just the
+/// virtual Spark engines. Substrate-specific fields (`sgd_step`,
+/// `force_layout`, `torrent_broadcast`, `real_managed_compute`) apply
+/// where the substrate has the corresponding layer and are inert
+/// elsewhere, exactly as they always were for the virtual engines.
+/// `time_scale` governs the virtual clock and is inert for the
+/// wall-clock thread engine.
+pub fn build_any(
+    engine: Engine,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    opts: &EngineOptions,
+) -> Box<dyn DistEngine> {
     cfg.validate().expect("invalid TrainConfig");
+    let cfg_owned;
+    let cfg = match engine {
+        Engine::Threads { k } if k > 0 => {
+            let mut c = cfg.clone();
+            c.workers = k;
+            cfg_owned = c;
+            &cfg_owned
+        }
+        _ => cfg,
+    };
     let parts = Partitioning::build(cfg.partitioner, &ds.a, cfg.workers, cfg.seed);
     let tau = opts.time_scale.unwrap_or_else(|| auto_time_scale(ds.m(), ds.n()));
     let cluster = ClusterModel::paper_testbed(tau);
     let model = OverheadModel::paper_defaults(cluster);
-    match imp {
-        Impl::SparkScala | Impl::SparkC | Impl::SparkCOpt | Impl::MllibSgd => Box::new(
-            spark::SparkEngine::new(imp, ds, &parts, cfg, model, opts.clone()),
-        ),
-        Impl::PySpark | Impl::PySparkC | Impl::PySparkCOpt => Box::new(
-            pyspark::PySparkEngine::new(imp, ds, &parts, cfg, model, opts.clone()),
-        ),
-        Impl::Mpi => {
-            let mut eng = mpi::MpiEngine::new(ds, &parts, cfg, model);
-            if opts.dense_frames {
-                eng.force_dense_frames();
-            }
-            Box::new(eng)
-        }
+    match engine {
+        Engine::Impl(imp) => match imp {
+            Impl::SparkScala | Impl::SparkC | Impl::SparkCOpt | Impl::MllibSgd => Box::new(
+                spark::SparkEngine::new(imp, ds, &parts, cfg, model, opts.clone()),
+            ),
+            Impl::PySpark | Impl::PySparkC | Impl::PySparkCOpt => Box::new(
+                pyspark::PySparkEngine::new(imp, ds, &parts, cfg, model, opts.clone()),
+            ),
+            Impl::Mpi => Box::new(mpi::MpiEngine::new_with(ds, &parts, cfg, model, opts)),
+        },
+        Engine::Threads { .. } => Box::new(threads::ThreadedMpiEngine::with_options(
+            ds, &parts, cfg, opts,
+        )),
+        Engine::ParamServer { staleness } => Box::new(param_server::ParamServerEngine::new(
+            ds, &parts, cfg, model, staleness, opts,
+        )),
     }
 }
 
@@ -241,5 +380,111 @@ mod tests {
             ..Default::default()
         };
         assert!((t.wall() - 1.75).abs() < 1e-15);
+    }
+
+    #[test]
+    fn worker_set_load_alpha_roundtrips() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let parts = Partitioning::build(Partitioner::RoundRobin, &ds.a, 3, 0);
+        let mut ws = WorkerSet::build(&ds, &parts);
+        let snapshot: Vec<f64> = (0..ds.n()).map(|i| i as f64 * 0.25 - 3.0).collect();
+        ws.load_alpha(&snapshot);
+        assert_eq!(ws.alpha_global(), snapshot);
+    }
+
+    #[test]
+    fn engine_parse_covers_full_registry() {
+        use crate::config::Impl;
+        assert_eq!(Engine::parse("mpi"), Some(Engine::Impl(Impl::Mpi)));
+        assert_eq!(Engine::parse("b*"), Some(Engine::Impl(Impl::SparkCOpt)));
+        assert_eq!(Engine::parse("threads"), Some(Engine::Threads { k: 0 }));
+        assert_eq!(Engine::parse("threads:4"), Some(Engine::Threads { k: 4 }));
+        assert_eq!(Engine::parse("ps"), Some(Engine::ParamServer { staleness: 0 }));
+        assert_eq!(
+            Engine::parse("param-server:2"),
+            Some(Engine::ParamServer { staleness: 2 })
+        );
+        assert!(Engine::parse("threads:x").is_none());
+        assert!(Engine::parse("flink").is_none());
+        assert_eq!(Engine::parse("THREADS"), Some(Engine::Threads { k: 0 }));
+        assert_eq!(Engine::Threads { k: 4 }.label(), "threads:4");
+        assert_eq!(Engine::ParamServer { staleness: 0 }.label(), "param-server");
+    }
+
+    #[test]
+    fn builder_reaches_threads_and_param_server() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 3;
+        for engine in [
+            Engine::Threads { k: 0 },
+            Engine::Threads { k: 2 },
+            Engine::ParamServer { staleness: 0 },
+            Engine::ParamServer { staleness: 2 },
+        ] {
+            let mut eng = build_any(engine, &ds, &cfg, &EngineOptions::default());
+            let expect_k = match engine {
+                Engine::Threads { k: 2 } => 2,
+                _ => 3,
+            };
+            assert_eq!(eng.num_workers(), expect_k, "{}", engine.label());
+            let v = vec![0.0; ds.m()];
+            let (dv, timing) = eng.run_round(&v, 8, 1);
+            assert_eq!(dv.len(), ds.m());
+            assert!(dv.iter().any(|&x| x != 0.0), "{}", engine.label());
+            assert!(timing.bytes_up > 0, "{}", engine.label());
+        }
+    }
+
+    #[test]
+    fn dense_frames_applies_identically_to_every_family() {
+        // Satellite regression: `EngineOptions::dense_frames` must take
+        // effect through the ONE constructor path for all five engine
+        // families — bit-identical Δv both ways, strictly more bytes_up
+        // when forced dense (tiny H → sparse frames win), and for the
+        // family where no effect is expected (MLlib ships fixed n-dim
+        // payloads) byte-identical accounting.
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 4;
+        let adaptive_opts = EngineOptions::default();
+        let dense_opts = EngineOptions {
+            dense_frames: true,
+            ..Default::default()
+        };
+        for engine in Engine::FAMILIES {
+            let mut adaptive = build_any(engine, &ds, &cfg, &adaptive_opts);
+            let mut dense = build_any(engine, &ds, &cfg, &dense_opts);
+            let (mut v1, mut v2) = (vec![0.0; ds.m()], vec![0.0; ds.m()]);
+            let (mut up1, mut up2) = (0u64, 0u64);
+            for round in 0..4 {
+                let (dv1, t1) = adaptive.run_round(&v1, 2, round);
+                let (dv2, t2) = dense.run_round(&v2, 2, round);
+                for (a, b) in dv1.iter().zip(dv2.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}", engine.label());
+                }
+                up1 += t1.bytes_up;
+                up2 += t2.bytes_up;
+                crate::linalg::add_assign(&mut v1, &dv1);
+                crate::linalg::add_assign(&mut v2, &dv2);
+            }
+            assert!(
+                up1 < up2,
+                "{}: adaptive {} !< dense {}",
+                engine.label(),
+                up1,
+                up2
+            );
+        }
+        // Expected-no-difference case: MLlib's traffic is the n-dim weight
+        // vector either way.
+        let mllib = Engine::Impl(crate::config::Impl::MllibSgd);
+        let mut a = build_any(mllib, &ds, &cfg, &adaptive_opts);
+        let mut d = build_any(mllib, &ds, &cfg, &dense_opts);
+        let v = vec![0.0; ds.m()];
+        let (_, ta) = a.run_round(&v, 2, 1);
+        let (_, td) = d.run_round(&v, 2, 1);
+        assert_eq!(ta.bytes_up, td.bytes_up);
+        assert_eq!(ta.bytes_down, td.bytes_down);
     }
 }

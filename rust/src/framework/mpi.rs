@@ -69,12 +69,29 @@ impl MpiEngine {
         }
     }
 
+    /// Construct with explicit [`EngineOptions`] — the unified-registry
+    /// path ([`crate::framework::build_any`]). `dense_frames` swaps the
+    /// raw sparse cutover for the dense-always reducer, exactly like the
+    /// Spark engines swap their codec cutover.
+    pub fn new_with(
+        ds: &Dataset,
+        parts: &Partitioning,
+        cfg: &TrainConfig,
+        model: OverheadModel,
+        opts: &EngineOptions,
+    ) -> MpiEngine {
+        let mut eng = MpiEngine::new(ds, parts, cfg, model);
+        if opts.dense_frames {
+            eng.force_dense_frames();
+        }
+        eng
+    }
+
     /// Construct via the generic builder path (used by tests).
     pub fn build(ds: &Dataset, parts: &Partitioning, cfg: &TrainConfig) -> MpiEngine {
         let tau = super::overhead::auto_time_scale(ds.m(), ds.n());
         let model = OverheadModel::paper_defaults(crate::simnet::ClusterModel::paper_testbed(tau));
-        let _ = EngineOptions::default();
-        MpiEngine::new(ds, parts, cfg, model)
+        MpiEngine::new_with(ds, parts, cfg, model, &EngineOptions::default())
     }
 
     /// Disable the sparse frame path (cutover 0 → every rank emits dense),
@@ -99,6 +116,10 @@ impl DistEngine for MpiEngine {
 
     fn alpha_global(&self) -> Vec<f64> {
         self.ws.alpha_global()
+    }
+
+    fn load_alpha(&mut self, alpha_global: &[f64]) {
+        self.ws.load_alpha(alpha_global);
     }
 
     fn clock(&self) -> f64 {

@@ -1,26 +1,216 @@
-//! Asynchronous parameter-server baseline (simulated).
+//! Parameter-server substrate: the registry engine and the asynchronous
+//! simulation baseline.
 //!
 //! The paper's §1/§2 contrasts synchronous schemes (its subject) with
 //! parameter servers (Li et al. OSDI'14; Multiverso): workers push updates
-//! against *stale* views of the shared state and never barrier. We build
-//! the simulation the comparison implies: a server holding `v`, workers
-//! computing CoCoA-style local updates against snapshots that are
-//! `staleness` rounds old, updates applied in arrival order. With
-//! staleness 0 this reduces exactly to the synchronous engine (tested);
-//! growing staleness trades per-round progress for removed barriers —
-//! quantified by `sparkbench ablation async-ps`.
+//! against *stale* views of the shared state and never barrier.
 //!
-//! Pushes ride the sparse layer too: a worker ships its Δv as the raw
-//! sparse frame when that is cheaper (DESIGN.md §7 cutover) and the
-//! server applies the damped update straight from the sparse entries;
-//! `bytes_pushed` accounts the actual frame bytes.
+//! Two faces of the same math live here:
+//!
+//! * [`ParamServerEngine`] — the first-class [`DistEngine`] reachable from
+//!   the unified registry (`Engine::ParamServer`). At staleness 0 it runs
+//!   the synchronous round on the server's star topology and its Δv is
+//!   **bit-identical** to the MPI engine (same solvers, same rank-ordered
+//!   reduction tree) — the paper's central invariant extends to it. With
+//!   staleness s > 0 workers compute against views `s` rounds old, every
+//!   push damped by 1/(1+s).
+//! * [`ParamServerSim`] — the free-running epoch simulation (pushes
+//!   applied in arrival order, no aggregate handed back) used by the
+//!   `sparkbench ablation async-ps` staleness sweep.
+//!
+//! Pushes ride the sparse layer in both: a worker ships its Δv as the raw
+//! sparse frame when that is cheaper (DESIGN.md §7 cutover) and the cost
+//! model is charged the actual frame bytes.
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
-use crate::config::TrainConfig;
+use super::overhead::OverheadModel;
+use super::{DistEngine, Engine, EngineOptions, RoundTiming, WorkerSet};
+use crate::config::{Impl, TrainConfig};
 use crate::data::{Dataset, Partitioning, WorkerData};
-use crate::linalg::{self, DeltaShape, DeltaSlot};
+use crate::linalg::{self, DeltaReducer, DeltaShape, DeltaSlot};
+use crate::simnet::VirtualClock;
 use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
+
+/// First-class parameter-server engine (see module docs).
+pub struct ParamServerEngine {
+    ws: WorkerSet,
+    solvers: Vec<NativeScd>,
+    results: Vec<SolveResult>,
+    slots: Vec<DeltaSlot>,
+    reducer: DeltaReducer,
+    model: OverheadModel,
+    clock: VirtualClock,
+    staleness: usize,
+    /// 1/(1+staleness): the standard step-size correction that keeps
+    /// bounded-staleness updates stable; exactly 1 at staleness 0.
+    damping: f64,
+    /// Ring of coordinator views (front = newest); workers read the view
+    /// `staleness` rounds old. Buffers recycle — no steady-state allocs.
+    history: VecDeque<Vec<f64>>,
+    lam_n: f64,
+    eta: f64,
+    sigma: f64,
+    b: Vec<f64>,
+    m: usize,
+}
+
+impl ParamServerEngine {
+    pub fn new(
+        ds: &Dataset,
+        parts: &Partitioning,
+        cfg: &TrainConfig,
+        model: OverheadModel,
+        staleness: usize,
+        opts: &EngineOptions,
+    ) -> ParamServerEngine {
+        let ws = WorkerSet::build(ds, parts);
+        let k = ws.data.len();
+        let cutover = if opts.dense_frames {
+            0
+        } else {
+            linalg::raw_sparse_cutover(ds.m())
+        };
+        ParamServerEngine {
+            solvers: (0..k).map(|_| NativeScd::new()).collect(),
+            results: (0..k).map(|_| SolveResult::default()).collect(),
+            slots: (0..k).map(|_| DeltaSlot::new()).collect(),
+            reducer: DeltaReducer::new(ds.m(), cutover),
+            model,
+            clock: VirtualClock::new(),
+            staleness,
+            damping: 1.0 / (1.0 + staleness as f64),
+            history: VecDeque::with_capacity(staleness + 1),
+            lam_n: cfg.lam_n,
+            eta: cfg.eta,
+            sigma: cfg.sigma(),
+            b: ds.b.clone(),
+            m: ds.m(),
+            ws,
+        }
+    }
+}
+
+impl DistEngine for ParamServerEngine {
+    fn imp(&self) -> Impl {
+        // Native ranks with persistent local state — the MPI column of the
+        // paper's classification; `engine()` carries the registry identity.
+        Impl::Mpi
+    }
+
+    fn engine(&self) -> Engine {
+        Engine::ParamServer {
+            staleness: self.staleness,
+        }
+    }
+
+    fn num_workers(&self) -> usize {
+        self.ws.data.len()
+    }
+
+    fn n_locals(&self) -> Vec<usize> {
+        self.ws.n_locals()
+    }
+
+    fn alpha_global(&self) -> Vec<f64> {
+        self.ws.alpha_global()
+    }
+
+    fn load_alpha(&mut self, alpha_global: &[f64]) {
+        self.ws.load_alpha(alpha_global);
+    }
+
+    fn clock(&self) -> f64 {
+        self.clock.now()
+    }
+
+    fn run_round(&mut self, v: &[f64], h: usize, round_seed: u64) -> (Vec<f64>, RoundTiming) {
+        let k = self.num_workers();
+
+        // Record the fresh coordinator view, then read the one `staleness`
+        // rounds old (ring recycles the evicted buffer).
+        let mut snap = if self.history.len() > self.staleness {
+            self.history.pop_back().unwrap()
+        } else {
+            Vec::with_capacity(self.m)
+        };
+        snap.clear();
+        snap.extend_from_slice(v);
+        self.history.push_front(snap);
+        let view = &self.history[self.staleness.min(self.history.len() - 1)];
+
+        // ---- 1. local solves against the (possibly stale) view ----------
+        let mut computes = vec![0.0; k];
+        for w in 0..k {
+            let req = SolveRequest {
+                v: view,
+                b: &self.b,
+                h,
+                lam_n: self.lam_n,
+                eta: self.eta,
+                sigma: self.sigma,
+                seed: round_seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            };
+            let t0 = Instant::now();
+            self.solvers[w].solve_into(
+                &self.ws.data[w],
+                &self.ws.alpha[w],
+                &req,
+                &mut self.results[w],
+            );
+            computes[w] = t0.elapsed().as_secs_f64();
+        }
+        let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
+
+        // ---- 2. damped pushes + server-side tree reduce ------------------
+        // Damping is skipped entirely at staleness 0 so the synchronous
+        // mode stays bit-identical to the MPI engine's round.
+        let t0 = Instant::now();
+        if self.damping != 1.0 {
+            for res in self.results.iter_mut() {
+                for x in res.delta_alpha.iter_mut() {
+                    *x *= self.damping;
+                }
+                for x in res.delta_v.iter_mut() {
+                    *x *= self.damping;
+                }
+            }
+        }
+        for (al, res) in self.ws.alpha.iter_mut().zip(self.results.iter()) {
+            linalg::add_assign(al, &res.delta_alpha);
+        }
+        let mut up_per_worker = vec![0u64; k];
+        for (w, (slot, res)) in self.slots.iter_mut().zip(self.results.iter()).enumerate() {
+            self.reducer.load(slot, &res.delta_v);
+            up_per_worker[w] = slot.raw_bytes(self.m) as u64;
+        }
+        let agg = self.reducer.reduce_collect(&mut self.slots);
+        let t_master = t0.elapsed().as_secs_f64();
+
+        // ---- 3. server star topology on the virtual clock ----------------
+        // Pushes gather on the server's NIC; the merged view fans back out.
+        // No barrier term: the PS removes the synchronization gap — that is
+        // its entire pitch (§1) — so overhead is pure transfer.
+        let bytes_up: u64 = up_per_worker.iter().sum();
+        let bytes_down = (self.m * 8 * k) as u64;
+        let t_push = self.model.cluster.star_varied(&up_per_worker);
+        let t_pull = self.model.cluster.star_broadcast((self.m * 8) as u64, k);
+
+        let wall = t_worker + t_master + t_push + t_pull;
+        self.clock.advance(wall);
+
+        let timing = RoundTiming {
+            t_worker,
+            t_master,
+            t_overhead: t_push + t_pull,
+            worker_compute: computes,
+            bytes_up,
+            bytes_down,
+        };
+        (agg, timing)
+    }
+}
 
 /// Simulated asynchronous parameter server running CoCoA-style updates.
 pub struct ParamServerSim {
@@ -267,5 +457,86 @@ mod tests {
             ps.run_epoch(8, e);
         }
         assert!(ps.history.len() <= 4);
+    }
+
+    fn default_model() -> OverheadModel {
+        OverheadModel::paper_defaults(crate::simnet::ClusterModel::paper_testbed(1.0))
+    }
+
+    #[test]
+    fn synchronous_engine_matches_mpi_bitwise() {
+        // The registry engine at staleness 0 IS the synchronous round:
+        // same solvers, same rank-ordered reduction tree ⇒ bit-identical
+        // Δv to the MPI engine, round after round.
+        let (ds, cfg, parts) = setup();
+        let mut ps = ParamServerEngine::new(
+            &ds,
+            &parts,
+            &cfg,
+            default_model(),
+            0,
+            &EngineOptions::default(),
+        );
+        let mut mpi = crate::framework::mpi::MpiEngine::build(&ds, &parts, &cfg);
+        let mut v1 = vec![0.0; ds.m()];
+        let mut v2 = vec![0.0; ds.m()];
+        for round in 0..5 {
+            let (dv1, t1) = ps.run_round(&v1, 40, round);
+            let (dv2, _) = mpi.run_round(&v2, 40, round);
+            for (a, b) in dv1.iter().zip(dv2.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "round {}", round);
+            }
+            assert!(t1.bytes_up > 0 && t1.t_overhead > 0.0);
+            linalg::add_assign(&mut v1, &dv1);
+            linalg::add_assign(&mut v2, &dv2);
+        }
+        let a1 = ps.alpha_global();
+        let a2 = mpi.alpha_global();
+        for (x, y) in a1.iter().zip(a2.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn stale_engine_damps_and_diverges_from_sync() {
+        let (ds, cfg, parts) = setup();
+        let opts = EngineOptions::default();
+        let mut stale = ParamServerEngine::new(&ds, &parts, &cfg, default_model(), 2, &opts);
+        let mut sync = ParamServerEngine::new(&ds, &parts, &cfg, default_model(), 0, &opts);
+        assert_eq!(stale.engine(), Engine::ParamServer { staleness: 2 });
+        let mut v1 = vec![0.0; ds.m()];
+        let mut v2 = vec![0.0; ds.m()];
+        let mut diverged = false;
+        for round in 0..6 {
+            let (dv1, _) = stale.run_round(&v1, 40, round);
+            let (dv2, _) = sync.run_round(&v2, 40, round);
+            diverged |= dv1.iter().zip(dv2.iter()).any(|(a, b)| a != b);
+            linalg::add_assign(&mut v1, &dv1);
+            linalg::add_assign(&mut v2, &dv2);
+        }
+        assert!(diverged, "staleness-2 engine behaved like the sync engine");
+        // Ring is bounded by staleness + 1.
+        assert!(stale.history.len() <= 3);
+        // Objective still decreases under bounded staleness + damping.
+        let zero = vec![0.0; ds.n()];
+        let f0 = ds.objective(&zero, cfg.lam_n, cfg.eta);
+        let f = ds.objective(&stale.alpha_global(), cfg.lam_n, cfg.eta);
+        assert!(f < f0, "{} !< {}", f, f0);
+    }
+
+    #[test]
+    fn engine_load_alpha_roundtrips() {
+        let (ds, cfg, parts) = setup();
+        let mut ps = ParamServerEngine::new(
+            &ds,
+            &parts,
+            &cfg,
+            default_model(),
+            0,
+            &EngineOptions::default(),
+        );
+        let snapshot: Vec<f64> = (0..ds.n()).map(|i| (i as f64).sin()).collect();
+        ps.load_alpha(&snapshot);
+        assert_eq!(ps.alpha_global(), snapshot);
     }
 }

@@ -173,6 +173,10 @@ impl DistEngine for PySparkEngine {
         out
     }
 
+    fn load_alpha(&mut self, alpha_global: &[f64]) {
+        super::scatter_alpha(&self.data, &mut self.alpha.borrow_mut(), alpha_global);
+    }
+
     fn clock(&self) -> f64 {
         self.clock.now()
     }

@@ -39,7 +39,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::{DistEngine, RoundTiming};
+use super::{DistEngine, EngineOptions, RoundTiming};
 use crate::config::{Impl, TrainConfig};
 use crate::data::{Dataset, Partitioning, WorkerData};
 use crate::linalg::{self, DeltaReducer, DeltaSlot};
@@ -56,6 +56,9 @@ enum ToWorker {
         recycle: DeltaSlot,
     },
     GetAlpha,
+    /// Replace the rank's local α with this slice (checkpoint resume).
+    /// Channel ordering guarantees it lands before any later `Round`.
+    SetAlpha(Vec<f64>),
     Shutdown,
 }
 
@@ -109,6 +112,24 @@ impl ThreadedMpiEngine {
         cfg: &TrainConfig,
     ) -> ThreadedMpiEngine {
         ThreadedMpiEngine::with_cutover(ds, parts, cfg, 0)
+    }
+
+    /// Construct from [`EngineOptions`] — the unified-registry path
+    /// ([`crate::framework::build_any`]). `dense_frames` maps to a zero
+    /// cutover exactly like the virtual engines; `time_scale` is inert
+    /// here (this engine reports wall-clock time).
+    pub fn with_options(
+        ds: &Dataset,
+        parts: &Partitioning,
+        cfg: &TrainConfig,
+        opts: &EngineOptions,
+    ) -> ThreadedMpiEngine {
+        let cutover = if opts.dense_frames {
+            0
+        } else {
+            linalg::raw_sparse_cutover(ds.m())
+        };
+        ThreadedMpiEngine::with_cutover(ds, parts, cfg, cutover)
     }
 
     /// Engine with an explicit Δv frame cutover (nnz threshold; 0 = dense
@@ -184,6 +205,10 @@ impl ThreadedMpiEngine {
                                     alpha: alpha.clone(),
                                 });
                             }
+                            ToWorker::SetAlpha(new_alpha) => {
+                                debug_assert_eq!(new_alpha.len(), alpha.len());
+                                alpha = new_alpha;
+                            }
                             ToWorker::Shutdown => break,
                         }
                     }
@@ -217,6 +242,12 @@ impl DistEngine for ThreadedMpiEngine {
         Impl::Mpi
     }
 
+    fn engine(&self) -> super::Engine {
+        super::Engine::Threads {
+            k: self.workers.len(),
+        }
+    }
+
     fn num_workers(&self) -> usize {
         self.workers.len()
     }
@@ -238,6 +269,16 @@ impl DistEngine for ThreadedMpiEngine {
             }
         }
         out
+    }
+
+    fn load_alpha(&mut self, alpha_global: &[f64]) {
+        for (w, wk) in self.workers.iter().enumerate() {
+            let local: Vec<f64> = self.global_ids[w]
+                .iter()
+                .map(|&gid| alpha_global[gid as usize])
+                .collect();
+            let _ = wk.tx.send(ToWorker::SetAlpha(local));
+        }
     }
 
     fn clock(&self) -> f64 {
@@ -410,12 +451,18 @@ mod tests {
         let (ds, mut cfg, parts) = setup(2);
         cfg.max_rounds = 1500;
         let mut eng = ThreadedMpiEngine::new(&ds, &parts, &cfg);
-        let report = crate::coordinator::train(&mut eng, &ds, &cfg);
+        let report = crate::session::Session::builder(&ds)
+            .config(cfg.clone())
+            .attach(&mut eng)
+            .build()
+            .unwrap()
+            .run();
         assert!(
             report.time_to_target.is_some(),
-            "threaded engine missed target: {:.3e}",
+            "threaded engine missed target: {:?}",
             report.final_suboptimality
         );
+        assert_eq!(report.impl_name, "threads:2");
     }
 
     #[test]

@@ -25,14 +25,40 @@
 //!
 //! ## Quickstart
 //!
+//! Training runs compose through the [`session`] builder: pick any engine
+//! from the registry (all eight paper `Impl`s, the physically parallel
+//! `Threads` engine, the `ParamServer` engine), a stopping policy, an H
+//! policy and any round observers — ONE loop drives them all.
+//!
 //! ```no_run
 //! use sparkbench::prelude::*;
 //!
 //! let ds = sparkbench::data::synthetic::webspam_like(&SyntheticSpec::small());
-//! let cfg = TrainConfig::default_for(&ds);
-//! let mut engine = sparkbench::framework::build_engine(Impl::Mpi, &ds, &cfg);
-//! let report = sparkbench::coordinator::train(engine.as_mut(), &ds, &cfg);
-//! println!("final suboptimality {:.3e}", report.final_suboptimality);
+//! let report = Session::builder(&ds)
+//!     .engine(Impl::Mpi) // or Engine::Threads { k: 8 }, Engine::ParamServer { .. }
+//!     .config(TrainConfig::default_for(&ds))
+//!     .build()
+//!     .unwrap()
+//!     .run();
+//! println!("final suboptimality {:?}", report.final_suboptimality);
+//! ```
+//!
+//! Fixed-round timing runs, adaptive H and streaming observers are one
+//! builder call each:
+//!
+//! ```no_run
+//! use sparkbench::prelude::*;
+//! use sparkbench::session::CsvTrace;
+//!
+//! let ds = sparkbench::data::synthetic::webspam_like(&SyntheticSpec::small());
+//! let report = Session::builder(&ds)
+//!     .engine(Engine::Threads { k: 4 })
+//!     .adaptive_h(0.9) // §5.5 controller instead of a fixed H
+//!     .observe(CsvTrace::create("results/trace.csv").unwrap())
+//!     .build()
+//!     .unwrap()
+//!     .run();
+//! assert!(report.time_to_target.is_some());
 //! ```
 
 // The codebase favors explicit index loops where they mirror the paper's
@@ -55,6 +81,7 @@ pub mod framework;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;
+pub mod session;
 pub mod simnet;
 pub mod solver;
 pub mod testkit;
@@ -71,10 +98,12 @@ static TEST_ALLOCATOR: testkit::alloc::CountingAllocator = testkit::alloc::Count
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{Impl, SolverKind, TrainConfig};
-    
+
     pub use crate::data::synthetic::SyntheticSpec;
     pub use crate::data::{Dataset, Partitioning};
-    
-    
+
+    pub use crate::framework::{Engine, EngineOptions};
+    pub use crate::session::{Session, StopPolicy};
+
     pub use crate::solver::LocalSolver;
 }

@@ -18,8 +18,9 @@ use sparkbench::config::Impl;
 use sparkbench::coordinator::{self, tuner};
 use sparkbench::data::{Partitioner, Partitioning};
 use sparkbench::experiments::{run_ablation, run_figure, ExpOptions};
-use sparkbench::framework::build_engine;
+use sparkbench::framework::Engine;
 use sparkbench::metrics::Table;
+use sparkbench::session::{CheckpointEvery, CsvTrace, Session, StopPolicy};
 use sparkbench::util::cli::Args;
 
 fn main() {
@@ -68,8 +69,10 @@ fn parse_impl(args: &Args) -> Option<Impl> {
 
 fn cmd_train(args: &Args) -> i32 {
     let opts = exp_options(args);
-    let Some(imp) = parse_impl(args) else {
-        eprintln!("bad --impl (try: a, b, b*, c, d, d*, mpi, mllib)");
+    // --impl reaches the FULL registry: the eight paper impls plus
+    // `threads[:K]` and `ps[:STALENESS]` / `param-server`.
+    let Some(engine) = Engine::parse(args.get_str("impl", "mpi")) else {
+        eprintln!("bad --impl (try: a, b, b*, c, d, d*, mpi, mllib, threads[:K], ps[:S])");
         return 2;
     };
     let ds = opts.dataset();
@@ -83,16 +86,61 @@ fn cmd_train(args: &Args) -> i32 {
     if let Some(p) = args.get("partitioner").and_then(Partitioner::parse) {
         cfg.partitioner = p;
     }
+    // `threads:K` overrides the configured worker count inside the builder;
+    // report the count the session will actually run with.
+    let eff_workers = match engine {
+        Engine::Threads { k } if k > 0 => k,
+        _ => cfg.workers,
+    };
     println!(
         "training {} on {} (K={}, λn={:.3}, H={})",
-        imp.name(),
+        engine.label(),
         ds.name,
-        cfg.workers,
+        eff_workers,
         cfg.lam_n,
-        cfg.h_for(ds.n() / cfg.workers)
+        cfg.h_for(ds.n() / eff_workers)
     );
-    let mut engine = build_engine(imp, &ds, &cfg);
-    let report = coordinator::train(engine.as_mut(), &ds, &cfg);
+
+    let mut builder = Session::builder(&ds).engine(engine).config(cfg.clone());
+    // Fixed-rounds timing runs (Figure 3/4 methodology) skip the oracle.
+    if let Some(s) = args.get("fixed-rounds") {
+        let Ok(n) = s.parse() else {
+            eprintln!("bad --fixed-rounds '{}' (want a round count)", s);
+            return 2;
+        };
+        builder = builder.stop(StopPolicy::FixedRounds { n });
+    }
+    // §5.5 controller instead of a fixed H.
+    if let Some(s) = args.get("adaptive-h") {
+        let Ok(frac) = s.parse() else {
+            eprintln!("bad --adaptive-h '{}' (want a compute fraction, e.g. 0.9)", s);
+            return 2;
+        };
+        builder = builder.adaptive_h(frac);
+    }
+    // Streaming observers: incremental CSV trace and periodic checkpoints.
+    if let Some(path) = args.get("trace") {
+        match CsvTrace::create(path) {
+            Ok(obs) => builder = builder.observe(obs),
+            Err(e) => {
+                eprintln!("cannot open --trace {}: {}", path, e);
+                return 2;
+            }
+        }
+    }
+    if let Some(path) = args.get("ckpt") {
+        let every = args.get_usize("ckpt-every", 50);
+        builder = builder.observe(CheckpointEvery::new(every, path));
+    }
+    let session = match builder.build() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{}", e);
+            return 2;
+        }
+    };
+    let report = session.run();
+
     println!(
         "rounds={} time={:.4}s (virt) worker={:.4} master={:.4} overhead={:.4}",
         report.rounds,
@@ -101,14 +149,18 @@ fn cmd_train(args: &Args) -> i32 {
         report.total_master,
         report.total_overhead
     );
-    match report.time_to_target {
-        Some(t) => println!("reached ε={:.1e} at {:.4}s (virt)", cfg.target_subopt, t),
-        None => println!(
+    match (report.time_to_target, report.final_suboptimality) {
+        (Some(t), _) => println!("reached ε={:.1e} at {:.4}s (virt)", cfg.target_subopt, t),
+        (None, Some(sub)) => println!(
             "did NOT reach ε={:.1e}; final suboptimality {:.3e}",
-            cfg.target_subopt, report.final_suboptimality
+            cfg.target_subopt, sub
         ),
+        (None, None) => println!("timing run: objective not evaluated"),
     }
-    opts.save(&format!("train_{}.csv", imp.name().replace([':', '*'], "_")), &report.trace_csv());
+    opts.save(
+        &format!("train_{}.csv", report.impl_name.replace([':', '*'], "_")),
+        &report.trace_csv(),
+    );
     0
 }
 

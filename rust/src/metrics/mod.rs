@@ -24,6 +24,33 @@ pub struct RoundLog {
     pub h: usize,
 }
 
+/// Header matching [`RoundLog::csv_row`] — the one trace-CSV format,
+/// shared by [`TrainReport::trace_csv`] and the session's streaming
+/// `CsvTrace` observer.
+pub const TRACE_CSV_HEADER: &str =
+    "round,time_s,objective,suboptimality,h,t_worker,t_master,t_overhead";
+
+impl RoundLog {
+    /// One trace-CSV row (no trailing newline); see [`TRACE_CSV_HEADER`].
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{:.9},{},{},{},{:.9},{:.9},{:.9}",
+            self.round,
+            self.time,
+            self.objective
+                .map(|o| format!("{:.9e}", o))
+                .unwrap_or_default(),
+            self.suboptimality
+                .map(|s| format!("{:.9e}", s))
+                .unwrap_or_default(),
+            self.h,
+            self.timing.t_worker,
+            self.timing.t_master,
+            self.timing.t_overhead,
+        )
+    }
+}
+
 /// Outcome of one training run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
@@ -31,8 +58,13 @@ pub struct TrainReport {
     pub rounds: usize,
     /// Virtual seconds to reach the target suboptimality (None = not reached).
     pub time_to_target: Option<f64>,
-    pub final_suboptimality: f64,
-    pub final_objective: f64,
+    /// Relative suboptimality at the end of the run. None when the run had
+    /// no oracle f* to measure against (e.g. a fixed-rounds timing run) —
+    /// absent, not a fake value computed against f* = 0.
+    pub final_suboptimality: Option<f64>,
+    /// Objective f(α) at the end of the run. None when the run never
+    /// evaluated the objective (fixed-rounds timing runs skip it).
+    pub final_objective: Option<f64>,
     pub total_time: f64,
     /// Σ per-round critical-path worker compute.
     pub total_worker: f64,
@@ -52,22 +84,10 @@ impl TrainReport {
 
     /// CSV of the convergence trace: round,time,objective,suboptimality.
     pub fn trace_csv(&self) -> String {
-        let mut out = String::from("round,time_s,objective,suboptimality,h,t_worker,t_master,t_overhead\n");
+        let mut out = String::from(TRACE_CSV_HEADER);
+        out.push('\n');
         for l in &self.logs {
-            let _ = writeln!(
-                out,
-                "{},{:.9},{},{},{},{:.9},{:.9},{:.9}",
-                l.round,
-                l.time,
-                l.objective.map(|o| format!("{:.9e}", o)).unwrap_or_default(),
-                l.suboptimality
-                    .map(|s| format!("{:.9e}", s))
-                    .unwrap_or_default(),
-                l.h,
-                l.timing.t_worker,
-                l.timing.t_master,
-                l.timing.t_overhead,
-            );
+            let _ = writeln!(out, "{}", l.csv_row());
         }
         out
     }
@@ -256,8 +276,8 @@ mod tests {
             impl_name: "E:mpi".into(),
             rounds: 2,
             time_to_target: Some(1.5),
-            final_suboptimality: 5e-4,
-            final_objective: 1.0,
+            final_suboptimality: Some(5e-4),
+            final_objective: Some(1.0),
             total_time: 2.0,
             total_worker: 1.6,
             total_master: 0.1,

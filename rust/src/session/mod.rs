@@ -1,0 +1,637 @@
+//! The unified `Session` training API: ONE round loop for every substrate.
+//!
+//! The paper's methodology is running the *same* algorithm over five
+//! framework substrates and comparing clocks. This module is the driver
+//! layer that finally expresses that uniformly (DESIGN.md §8):
+//!
+//! * an **engine selector** ([`Engine`]) covering the full registry — the
+//!   eight virtual-clock [`Impl`](crate::config::Impl) variants *plus* the
+//!   thread and parameter-server engines — through one constructor path
+//!   that applies every [`EngineOptions`] field identically;
+//! * a **stopping policy** ([`StopPolicy`]): train to a target
+//!   suboptimality, or run a fixed number of rounds as a pure timing run;
+//! * a pluggable **[`HPolicy`]** ([`policy::Fixed`], [`policy::Adaptive`])
+//!   deciding the local-steps knob every round;
+//! * a streaming **[`RoundObserver`]** fan-out ([`observer::CsvTrace`],
+//!   [`observer::CheckpointEvery`], [`observer::Recording`]) — the
+//!   features that used to own private copies of the loop.
+//!
+//! `coordinator::train`, `train_with_oracle`, `run_fixed_rounds` and
+//! `tuner::train_adaptive` survive as thin deprecated shims over this
+//! loop; there is no other `engine.run_round` driver in the crate.
+//!
+//! ```no_run
+//! use sparkbench::config::Impl;
+//! use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+//! use sparkbench::session::Session;
+//!
+//! let ds = webspam_like(&SyntheticSpec::small());
+//! let report = Session::builder(&ds)
+//!     .engine(Impl::Mpi)
+//!     .build()
+//!     .unwrap()
+//!     .run();
+//! println!("{} rounds, {:?} to target", report.rounds, report.time_to_target);
+//! ```
+
+pub mod observer;
+pub mod policy;
+
+pub use observer::{CheckpointEvery, CsvTrace, Recording, RoundCtx, RoundObserver};
+pub use policy::HPolicy;
+
+use crate::config::TrainConfig;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::{oracle_objective, suboptimality};
+use crate::data::Dataset;
+use crate::framework::{build_any, DistEngine, Engine, EngineOptions};
+use crate::linalg;
+use crate::metrics::{RoundLog, TrainReport};
+
+/// When a session stops driving rounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StopPolicy {
+    /// Stop once suboptimality ≤ `subopt` (bounded by `cfg.max_rounds`).
+    /// Requires an oracle f* — the builder computes one if none is given.
+    ToTarget { subopt: f64 },
+    /// Run exactly `n` rounds — the Figure 3/4 timing methodology. No
+    /// early stop; without an explicit oracle the objective is never
+    /// evaluated and the report's `final_*` fields are `None`, not fake
+    /// values against f* = 0.
+    FixedRounds { n: usize },
+}
+
+/// How the session obtains f* for suboptimality tracking.
+enum OracleMode {
+    /// Compute it (`ToTarget`) or go without (`FixedRounds`).
+    Auto,
+    /// Caller supplies a precomputed optimum (sweeps cache the oracle).
+    Known(f64),
+    /// Explicitly none — forces a pure timing run.
+    Off,
+}
+
+/// The engine a session drives: built by the registry, or attached by the
+/// caller (the deprecated shims and pre-built-engine tests use the
+/// latter).
+enum EngineRef<'a> {
+    Owned(Box<dyn DistEngine>),
+    Attached(&'a mut dyn DistEngine),
+}
+
+impl EngineRef<'_> {
+    fn get(&self) -> &(dyn DistEngine + '_) {
+        match self {
+            EngineRef::Owned(b) => &**b,
+            EngineRef::Attached(r) => &**r,
+        }
+    }
+
+    fn get_mut(&mut self) -> &mut (dyn DistEngine + '_) {
+        match self {
+            EngineRef::Owned(b) => &mut **b,
+            EngineRef::Attached(r) => &mut **r,
+        }
+    }
+}
+
+/// Builder for a [`Session`]. Start from [`Session::builder`].
+pub struct SessionBuilder<'a> {
+    ds: &'a Dataset,
+    engine: Engine,
+    attached: Option<&'a mut dyn DistEngine>,
+    cfg: Option<TrainConfig>,
+    opts: Option<EngineOptions>,
+    stop: Option<StopPolicy>,
+    h_policy: Box<dyn HPolicy>,
+    observers: Vec<Box<dyn RoundObserver>>,
+    oracle: OracleMode,
+    resume: Option<Checkpoint>,
+}
+
+impl<'a> SessionBuilder<'a> {
+    /// Select the engine from the registry (any [`Impl`] converts, and
+    /// [`Engine::Threads`]/[`Engine::ParamServer`] are first-class).
+    ///
+    /// [`Impl`]: crate::config::Impl
+    pub fn engine(mut self, engine: impl Into<Engine>) -> Self {
+        self.engine = engine.into();
+        self
+    }
+
+    /// Drive a caller-owned engine instead of building one. Overrides
+    /// [`engine`](Self::engine); the caller keeps the engine afterwards
+    /// (its α/clock state reflects the run).
+    pub fn attach(mut self, engine: &'a mut dyn DistEngine) -> Self {
+        self.attached = Some(engine);
+        self
+    }
+
+    /// Training configuration (default: `TrainConfig::default_for(ds)`).
+    pub fn config(mut self, cfg: TrainConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Engine-construction options, applied uniformly to every substrate.
+    /// Only meaningful for registry-built engines — combining with
+    /// [`attach`](Self::attach) is a build-time error (an already-built
+    /// engine cannot take construction options).
+    pub fn options(mut self, opts: EngineOptions) -> Self {
+        self.opts = Some(opts);
+        self
+    }
+
+    /// Stopping policy (default: `ToTarget` at the config's
+    /// `target_subopt`).
+    pub fn stop(mut self, stop: StopPolicy) -> Self {
+        self.stop = Some(stop);
+        self
+    }
+
+    /// Sugar for `stop(StopPolicy::FixedRounds { n })`.
+    pub fn fixed_rounds(self, n: usize) -> Self {
+        self.stop(StopPolicy::FixedRounds { n })
+    }
+
+    /// Sugar for `stop(StopPolicy::ToTarget { subopt })`.
+    pub fn target(self, subopt: f64) -> Self {
+        self.stop(StopPolicy::ToTarget { subopt })
+    }
+
+    /// H policy (default: [`policy::Fixed`]).
+    pub fn h_policy(mut self, p: impl HPolicy + 'static) -> Self {
+        self.h_policy = Box::new(p);
+        self
+    }
+
+    /// Sugar for `h_policy(policy::Adaptive::new(target_fraction))`.
+    pub fn adaptive_h(self, target_fraction: f64) -> Self {
+        self.h_policy(policy::Adaptive::new(target_fraction))
+    }
+
+    /// Register a round observer (any number; called in registration
+    /// order).
+    pub fn observe(mut self, o: impl RoundObserver + 'static) -> Self {
+        self.observers.push(Box::new(o));
+        self
+    }
+
+    /// Supply a precomputed optimum f* (sweeps cache the oracle instead
+    /// of re-running CG per point).
+    pub fn oracle(mut self, fstar: f64) -> Self {
+        self.oracle = OracleMode::Known(fstar);
+        self
+    }
+
+    /// Never evaluate the objective: a pure timing run. Incompatible with
+    /// `ToTarget` (build errors).
+    pub fn no_oracle(mut self) -> Self {
+        self.oracle = OracleMode::Off;
+        self
+    }
+
+    /// Resume from a checkpoint: restores α into the engine, v, the round
+    /// counter (round seeds line up) and the clock offset.
+    ///
+    /// The checkpoint fingerprint covers λn, η, K and the vector sizes
+    /// only. `seed`, `partitioner`, the H settings (`h_frac`/`h_abs`) and
+    /// `gamma` are NOT recorded in the (v1) format and are not checked —
+    /// bit-exact continuation requires resuming with the same values for
+    /// all of them as the original run.
+    pub fn resume_from(mut self, ckpt: Checkpoint) -> Self {
+        self.resume = Some(ckpt);
+        self
+    }
+
+    /// Validate and assemble the session (computes the oracle when needed).
+    pub fn build(self) -> Result<Session<'a>, String> {
+        let cfg = self
+            .cfg
+            .unwrap_or_else(|| TrainConfig::default_for(self.ds));
+        cfg.validate()?;
+        let stop = self.stop.unwrap_or(StopPolicy::ToTarget {
+            subopt: cfg.target_subopt,
+        });
+        let fstar = match self.oracle {
+            OracleMode::Known(f) => Some(f),
+            OracleMode::Off => None,
+            OracleMode::Auto => match stop {
+                StopPolicy::ToTarget { .. } => Some(oracle_objective(self.ds, &cfg)),
+                StopPolicy::FixedRounds { .. } => None,
+            },
+        };
+        if fstar.is_none() && matches!(stop, StopPolicy::ToTarget { .. }) {
+            return Err(
+                "StopPolicy::ToTarget needs an oracle (drop .no_oracle() or pass .oracle(fstar))"
+                    .into(),
+            );
+        }
+        if self.attached.is_some() && self.opts.is_some() {
+            return Err(
+                ".options(...) cannot apply to an attached engine — it is already \
+                 built; configure it at construction or select via .engine(...)"
+                    .into(),
+            );
+        }
+        let opts = self.opts.unwrap_or_default();
+        let mut engine = match self.attached {
+            Some(e) => EngineRef::Attached(e),
+            None => EngineRef::Owned(build_any(self.engine, self.ds, &cfg, &opts)),
+        };
+        let (start_round, v, clock_offset) = match self.resume {
+            Some(ckpt) => {
+                // λ/η fingerprints come from the config; K from the engine
+                // actually driving the rounds (`Engine::Threads { k }` may
+                // override `cfg.workers`).
+                let mut fingerprint = cfg.clone();
+                fingerprint.workers = engine.get().num_workers();
+                ckpt.compatible_with(&fingerprint)?;
+                if ckpt.v.len() != self.ds.m() {
+                    return Err(format!(
+                        "checkpoint v has {} entries, dataset m = {}",
+                        ckpt.v.len(),
+                        self.ds.m()
+                    ));
+                }
+                if ckpt.alpha.len() != self.ds.n() {
+                    return Err(format!(
+                        "checkpoint α has {} entries, dataset n = {}",
+                        ckpt.alpha.len(),
+                        self.ds.n()
+                    ));
+                }
+                engine.get_mut().load_alpha(&ckpt.alpha);
+                // Report times continue from the checkpointed clock. An
+                // attached engine may already carry (part of) that time on
+                // its own clock — offset only by the remainder, so resumed
+                // times are neither double-counted nor rewound.
+                let offset = ckpt.time - engine.get().clock();
+                (ckpt.round, ckpt.v, offset)
+            }
+            None => {
+                // A fresh run assumes v = Aα = 0. An attached engine that
+                // already trained would silently violate that invariant —
+                // reject it (resume_from is the sanctioned continuation).
+                if matches!(&engine, EngineRef::Attached(_))
+                    && engine.get().alpha_global().iter().any(|&a| a != 0.0)
+                {
+                    return Err(
+                        "attached engine has trained state (α ≠ 0); start from a fresh \
+                         engine or continue with .resume_from(checkpoint)"
+                            .into(),
+                    );
+                }
+                (0, vec![0.0; self.ds.m()], 0.0)
+            }
+        };
+        Ok(Session {
+            ds: self.ds,
+            engine,
+            cfg,
+            stop,
+            h_policy: self.h_policy,
+            observers: self.observers,
+            fstar,
+            start_round,
+            v,
+            clock_offset,
+        })
+    }
+
+    /// `build().unwrap().run()` — the one-liner for the common case.
+    pub fn train(self) -> TrainReport {
+        self.build().expect("invalid session").run()
+    }
+}
+
+/// A configured training run over one engine: see the module docs.
+pub struct Session<'a> {
+    ds: &'a Dataset,
+    engine: EngineRef<'a>,
+    cfg: TrainConfig,
+    stop: StopPolicy,
+    h_policy: Box<dyn HPolicy>,
+    observers: Vec<Box<dyn RoundObserver>>,
+    fstar: Option<f64>,
+    start_round: usize,
+    v: Vec<f64>,
+    clock_offset: f64,
+}
+
+impl<'a> Session<'a> {
+    /// Start composing a session on a dataset (defaults: MPI engine,
+    /// default config, `ToTarget`, fixed H, no observers).
+    pub fn builder(ds: &Dataset) -> SessionBuilder<'_> {
+        SessionBuilder {
+            ds,
+            engine: Engine::Impl(crate::config::Impl::Mpi),
+            attached: None,
+            cfg: None,
+            opts: None,
+            stop: None,
+            h_policy: Box::new(policy::Fixed),
+            observers: Vec::new(),
+            oracle: OracleMode::Auto,
+            resume: None,
+        }
+    }
+
+    /// Drive rounds until the stop policy fires — THE round loop. Every
+    /// other driver in the crate (the deprecated `coordinator` shims, the
+    /// tuner's grid search, the experiments, the CLI) delegates here.
+    pub fn run(self) -> TrainReport {
+        let Session {
+            ds,
+            mut engine,
+            cfg,
+            stop,
+            mut h_policy,
+            mut observers,
+            fstar,
+            start_round,
+            mut v,
+            clock_offset,
+        } = self;
+
+        let n_locals = engine.get().n_locals();
+        let mean_n_local = (n_locals.iter().sum::<usize>() as f64 / n_locals.len().max(1) as f64)
+            .round() as usize;
+        let mut h = h_policy.initial(&cfg, mean_n_local.max(1));
+
+        let budget = match stop {
+            StopPolicy::FixedRounds { n } => n,
+            StopPolicy::ToTarget { .. } => cfg.max_rounds,
+        };
+        let end_round = start_round + budget;
+
+        // Objective evaluation runs iff an oracle exists; `ToTarget`
+        // guarantees one (builder invariant), `FixedRounds` without one is
+        // a pure timing run.
+        let eval = fstar.is_some();
+        let mut final_obj = None;
+        let mut final_sub = None;
+        if eval {
+            let f = ds.objective_given_v(&v, &engine.get().alpha_global(), cfg.lam_n, cfg.eta);
+            final_obj = Some(f);
+            final_sub = fstar.map(|fs| suboptimality(f, fs));
+        }
+
+        let mut logs: Vec<RoundLog> = Vec::new();
+        let mut time_to_target = None;
+        let (mut tot_worker, mut tot_master, mut tot_overhead) = (0.0, 0.0, 0.0);
+
+        for round in start_round..end_round {
+            let seed = cfg.seed ^ (round as u64).wrapping_mul(0xA24BAED4963EE407);
+            let (dv, timing) = engine.get_mut().run_round(&v, h, seed);
+            linalg::add_assign(&mut v, &dv);
+            tot_worker += timing.t_worker;
+            tot_master += timing.t_master;
+            tot_overhead += timing.t_overhead;
+
+            let is_last = round + 1 == end_round;
+            // Absolute round index, so a resumed run evaluates at the same
+            // rounds the uninterrupted run would have.
+            let (objective, sub) = if eval && (round % cfg.eval_every == 0 || is_last) {
+                // O(m+n) evaluation from the tracked shared vector (§Perf);
+                // v is exact by construction (pure float additions of Δv).
+                let f = ds.objective_given_v(&v, &engine.get().alpha_global(), cfg.lam_n, cfg.eta);
+                final_obj = Some(f);
+                let s = fstar.map(|fs| suboptimality(f, fs));
+                final_sub = s;
+                (Some(f), s)
+            } else {
+                (None, None)
+            };
+
+            let log = RoundLog {
+                round,
+                time: engine.get().clock() + clock_offset,
+                objective,
+                suboptimality: sub,
+                timing: timing.clone(),
+                h,
+            };
+            for obs in observers.iter_mut() {
+                obs.on_round(&RoundCtx {
+                    log: &log,
+                    v: &v,
+                    engine: engine.get(),
+                    cfg: &cfg,
+                });
+            }
+            logs.push(log);
+
+            if let StopPolicy::ToTarget { subopt } = stop {
+                if let Some(s) = sub {
+                    if s <= subopt {
+                        if time_to_target.is_none() {
+                            time_to_target = Some(engine.get().clock() + clock_offset);
+                        }
+                        break;
+                    }
+                }
+            }
+            h = h_policy.next(&timing, h);
+        }
+
+        let impl_name = match h_policy.label() {
+            Some(sfx) => format!("{}+{}", engine.get().engine().label(), sfx),
+            None => engine.get().engine().label(),
+        };
+        let report = TrainReport {
+            impl_name,
+            rounds: logs.len(),
+            time_to_target,
+            final_suboptimality: final_sub,
+            final_objective: final_obj,
+            total_time: engine.get().clock() + clock_offset,
+            total_worker: tot_worker,
+            total_master: tot_master,
+            total_overhead: tot_overhead,
+            logs,
+        };
+        for obs in observers.iter_mut() {
+            obs.on_complete(&report);
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Impl;
+    use crate::data::synthetic::{webspam_like, SyntheticSpec};
+
+    fn setup() -> (Dataset, TrainConfig) {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 4;
+        cfg.max_rounds = 1200;
+        (ds, cfg)
+    }
+
+    #[test]
+    fn session_trains_to_target() {
+        let (ds, cfg) = setup();
+        let report = Session::builder(&ds)
+            .engine(Impl::Mpi)
+            .config(cfg.clone())
+            .build()
+            .unwrap()
+            .run();
+        assert!(report.time_to_target.is_some(), "{:?}", report.final_suboptimality);
+        assert!(report.final_suboptimality.unwrap() <= cfg.target_subopt);
+        assert_eq!(report.impl_name, "E:mpi");
+        for w in report.logs.windows(2) {
+            assert!(w[1].time >= w[0].time);
+        }
+    }
+
+    #[test]
+    fn fixed_rounds_is_a_pure_timing_run() {
+        let (ds, cfg) = setup();
+        let report = Session::builder(&ds)
+            .engine(Impl::Mpi)
+            .config(cfg)
+            .fixed_rounds(7)
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.rounds, 7);
+        assert!(report.total_time > 0.0);
+        assert!(report.total_worker > 0.0);
+        // Satellite: absent, not faked against f* = 0.
+        assert!(report.final_suboptimality.is_none());
+        assert!(report.final_objective.is_none());
+        assert!(report.time_to_target.is_none());
+        assert!(report.logs.iter().all(|l| l.objective.is_none()));
+    }
+
+    #[test]
+    fn fixed_rounds_with_oracle_still_evaluates() {
+        let (ds, mut cfg) = setup();
+        cfg.eval_every = 1;
+        let fstar = oracle_objective(&ds, &cfg);
+        let report = Session::builder(&ds)
+            .engine(Impl::Mpi)
+            .config(cfg)
+            .fixed_rounds(5)
+            .oracle(fstar)
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.rounds, 5);
+        assert!(report.final_objective.is_some());
+        assert!(report.final_suboptimality.is_some());
+        assert_eq!(report.logs.iter().filter(|l| l.objective.is_some()).count(), 5);
+    }
+
+    #[test]
+    fn to_target_without_oracle_is_rejected() {
+        let (ds, cfg) = setup();
+        let err = Session::builder(&ds)
+            .engine(Impl::Mpi)
+            .config(cfg)
+            .no_oracle()
+            .build()
+            .err()
+            .expect("must reject");
+        assert!(err.contains("oracle"), "{}", err);
+    }
+
+    #[test]
+    fn attach_drives_a_caller_owned_engine() {
+        let (ds, cfg) = setup();
+        let mut eng = crate::framework::build_engine(Impl::Mpi, &ds, &cfg);
+        let report = Session::builder(&ds)
+            .config(cfg)
+            .attach(eng.as_mut())
+            .fixed_rounds(3)
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.rounds, 3);
+        // The engine keeps its advanced state.
+        assert!(eng.clock() > 0.0);
+        assert!(eng.alpha_global().iter().any(|&a| a != 0.0));
+    }
+
+    #[test]
+    fn attach_rejects_already_trained_engine() {
+        // Reusing a trained engine without resume_from would silently run
+        // against v = 0 while α ≠ 0 — the builder must refuse.
+        let (ds, cfg) = setup();
+        let mut eng = crate::framework::build_engine(Impl::Mpi, &ds, &cfg);
+        let _ = Session::builder(&ds)
+            .config(cfg.clone())
+            .attach(eng.as_mut())
+            .fixed_rounds(2)
+            .build()
+            .unwrap()
+            .run();
+        let err = Session::builder(&ds)
+            .config(cfg)
+            .attach(eng.as_mut())
+            .fixed_rounds(2)
+            .build()
+            .err()
+            .expect("second attach of a trained engine must be rejected");
+        assert!(err.contains("trained state"), "{}", err);
+    }
+
+    #[test]
+    fn adaptive_session_reaches_target_and_labels_itself() {
+        let (ds, mut cfg) = setup();
+        cfg.max_rounds = 1500;
+        cfg.eval_every = 1;
+        let report = Session::builder(&ds)
+            .engine(Impl::Mpi)
+            .config(cfg)
+            .adaptive_h(0.9)
+            .build()
+            .unwrap()
+            .run();
+        assert!(
+            report.time_to_target.is_some(),
+            "adaptive session missed target: {:?}",
+            report.final_suboptimality
+        );
+        assert_eq!(report.impl_name, "E:mpi+adaptiveH");
+        // H actually moved at least once under the controller.
+        let hs: Vec<usize> = report.logs.iter().map(|l| l.h).collect();
+        assert!(
+            hs.windows(2).any(|w| w[0] != w[1]),
+            "H never adapted: {:?}",
+            &hs[..hs.len().min(8)]
+        );
+    }
+
+    #[test]
+    fn every_registry_engine_trains_through_session() {
+        let (ds, mut cfg) = setup();
+        cfg.max_rounds = 1500;
+        let fstar = oracle_objective(&ds, &cfg);
+        for engine in [
+            Engine::Impl(Impl::Mpi),
+            Engine::Impl(Impl::SparkCOpt),
+            Engine::Threads { k: 0 },
+            Engine::ParamServer { staleness: 0 },
+        ] {
+            let report = Session::builder(&ds)
+                .engine(engine)
+                .config(cfg.clone())
+                .oracle(fstar)
+                .build()
+                .unwrap()
+                .run();
+            assert!(
+                report.time_to_target.is_some(),
+                "{} missed target: {:?}",
+                engine.label(),
+                report.final_suboptimality
+            );
+        }
+    }
+}

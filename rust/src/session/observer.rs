@@ -1,0 +1,180 @@
+//! Streaming round observers: per-round callbacks a [`Session`] fans each
+//! finished round out to.
+//!
+//! Checkpointing ([`CheckpointEvery`]), CSV tracing ([`CsvTrace`]) and
+//! test/experiment instrumentation ([`Recording`]) are all ordinary
+//! observers — none of them owns a copy of the round loop.
+//!
+//! [`Session`]: crate::session::Session
+
+use std::cell::RefCell;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::config::TrainConfig;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::framework::DistEngine;
+use crate::metrics::{RoundLog, TrainReport};
+
+/// Everything an observer may inspect after a round completes.
+pub struct RoundCtx<'a> {
+    /// The round's log entry (timing split, H, objective when evaluated).
+    pub log: &'a RoundLog,
+    /// Shared vector v = Aα *after* this round's update.
+    pub v: &'a [f64],
+    /// The engine, read-only (`alpha_global()` for model snapshots).
+    pub engine: &'a dyn DistEngine,
+    pub cfg: &'a TrainConfig,
+}
+
+/// Per-round callback stream. `on_round` fires exactly once per completed
+/// round, in round order; `on_complete` fires once when the session ends.
+pub trait RoundObserver {
+    fn on_round(&mut self, ctx: &RoundCtx<'_>);
+
+    fn on_complete(&mut self, _report: &TrainReport) {}
+}
+
+/// Streams the convergence trace to a CSV file as rounds finish (same
+/// row format as [`TrainReport::trace_csv`], but incremental — a killed
+/// run keeps every completed round on disk).
+pub struct CsvTrace {
+    out: BufWriter<File>,
+}
+
+impl CsvTrace {
+    /// Create/truncate `path` (parent dirs included) and write the header.
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<CsvTrace> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", crate::metrics::TRACE_CSV_HEADER)?;
+        Ok(CsvTrace { out })
+    }
+}
+
+impl RoundObserver for CsvTrace {
+    fn on_round(&mut self, ctx: &RoundCtx<'_>) {
+        let _ = writeln!(self.out, "{}", ctx.log.csv_row());
+    }
+
+    fn on_complete(&mut self, _report: &TrainReport) {
+        let _ = self.out.flush();
+    }
+}
+
+/// Saves a [`Checkpoint`] after every `every`-th completed round, so a
+/// restart resumes from the newest finished multiple (rounds past the
+/// last multiple are re-run on resume — the round seeds make that
+/// bit-exact).
+pub struct CheckpointEvery {
+    every: usize,
+    path: PathBuf,
+    /// Successful saves so far.
+    pub saves: usize,
+    /// Most recent save failure (also reported once on stderr).
+    pub last_error: Option<String>,
+}
+
+impl CheckpointEvery {
+    pub fn new(every: usize, path: impl AsRef<Path>) -> CheckpointEvery {
+        CheckpointEvery {
+            every: every.max(1),
+            path: path.as_ref().to_path_buf(),
+            saves: 0,
+            last_error: None,
+        }
+    }
+
+    fn capture(&mut self, ctx: &RoundCtx<'_>) {
+        let ckpt = Checkpoint {
+            round: ctx.log.round + 1,
+            time: ctx.log.time,
+            alpha: ctx.engine.alpha_global(),
+            v: ctx.v.to_vec(),
+            lam_n: ctx.cfg.lam_n,
+            eta: ctx.cfg.eta,
+            workers: ctx.engine.num_workers(),
+        };
+        match ckpt.save(&self.path) {
+            Ok(()) => self.saves += 1,
+            Err(e) => {
+                // Sessions drop their observers after the run; surface the
+                // failure instead of burying it in an unreachable field.
+                if self.last_error.is_none() {
+                    eprintln!(
+                        "warn: checkpoint save to {} failed: {}",
+                        self.path.display(),
+                        e
+                    );
+                }
+                self.last_error = Some(e);
+            }
+        }
+    }
+}
+
+impl RoundObserver for CheckpointEvery {
+    fn on_round(&mut self, ctx: &RoundCtx<'_>) {
+        if (ctx.log.round + 1) % self.every == 0 {
+            self.capture(ctx);
+        }
+    }
+}
+
+/// What a [`Recording`] observer saw; one entry per round.
+#[derive(Debug, Default, Clone)]
+pub struct RecordingInner {
+    pub rounds: Vec<usize>,
+    pub hs: Vec<usize>,
+    pub times: Vec<f64>,
+    pub completions: usize,
+}
+
+/// Cheap cloneable recording observer: keep one handle, move the clone
+/// into the session, inspect afterwards. Used by tests and notebooks.
+#[derive(Debug, Default, Clone)]
+pub struct Recording {
+    inner: Rc<RefCell<RecordingInner>>,
+}
+
+impl Recording {
+    pub fn new() -> Recording {
+        Recording::default()
+    }
+
+    pub fn rounds(&self) -> Vec<usize> {
+        self.inner.borrow().rounds.clone()
+    }
+
+    pub fn hs(&self) -> Vec<usize> {
+        self.inner.borrow().hs.clone()
+    }
+
+    pub fn times(&self) -> Vec<f64> {
+        self.inner.borrow().times.clone()
+    }
+
+    pub fn completions(&self) -> usize {
+        self.inner.borrow().completions
+    }
+}
+
+impl RoundObserver for Recording {
+    fn on_round(&mut self, ctx: &RoundCtx<'_>) {
+        let mut inner = self.inner.borrow_mut();
+        inner.rounds.push(ctx.log.round);
+        inner.hs.push(ctx.log.h);
+        inner.times.push(ctx.log.time);
+    }
+
+    fn on_complete(&mut self, _report: &TrainReport) {
+        self.inner.borrow_mut().completions += 1;
+    }
+}

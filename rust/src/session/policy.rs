@@ -1,0 +1,130 @@
+//! Pluggable H policies: how many local steps each round runs.
+//!
+//! The paper's §5.5 shows H is *the* tuning knob of CoCoA-style training —
+//! its optimum moves with framework overhead. A session owns exactly one
+//! [`HPolicy`]; the built-ins are [`Fixed`] (the config's `h_frac`/`h_abs`
+//! resolution, what every figure run uses) and [`Adaptive`] (the
+//! compute-fraction controller the paper's conclusion calls for, absorbed
+//! from the old `tuner::train_adaptive` loop).
+
+use crate::config::TrainConfig;
+use crate::coordinator::tuner::AdaptiveH;
+use crate::framework::RoundTiming;
+
+/// Chooses H for every round of a session.
+///
+/// The session calls [`initial`](HPolicy::initial) once before round 0 and
+/// [`next`](HPolicy::next) after every *non-final* round (a round that
+/// triggers the stop policy is never observed — the same cadence the old
+/// `train_adaptive` loop had, which keeps H sequences reproducible
+/// bit-for-bit).
+pub trait HPolicy {
+    /// H for the first round, given the mean partition size.
+    fn initial(&mut self, cfg: &TrainConfig, mean_n_local: usize) -> usize;
+
+    /// Observe a completed round's timing split; return H for the next.
+    fn next(&mut self, timing: &RoundTiming, last_h: usize) -> usize;
+
+    /// Suffix for the report's `impl_name` (None = plain engine label).
+    fn label(&self) -> Option<&str> {
+        None
+    }
+}
+
+/// Fixed H resolved from the config (`h_abs`, else `h_frac · n_local`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fixed;
+
+impl HPolicy for Fixed {
+    fn initial(&mut self, cfg: &TrainConfig, mean_n_local: usize) -> usize {
+        cfg.h_for(mean_n_local)
+    }
+
+    fn next(&mut self, _timing: &RoundTiming, last_h: usize) -> usize {
+        last_h
+    }
+}
+
+/// The compute-fraction controller on the session loop: observes each
+/// round's worker/overhead split and multiplicatively scales H toward the
+/// target fraction (≈0.9 for MPI, ≈0.6 for pySpark+C — Figure 7).
+#[derive(Debug, Clone)]
+pub struct Adaptive {
+    pub target_compute_fraction: f64,
+    ctrl: Option<AdaptiveH>,
+}
+
+impl Adaptive {
+    pub fn new(target_compute_fraction: f64) -> Adaptive {
+        Adaptive {
+            target_compute_fraction,
+            ctrl: None,
+        }
+    }
+}
+
+impl HPolicy for Adaptive {
+    fn initial(&mut self, cfg: &TrainConfig, mean_n_local: usize) -> usize {
+        let ctrl = AdaptiveH::new(
+            cfg.h_for(mean_n_local),
+            mean_n_local,
+            self.target_compute_fraction,
+        );
+        let h0 = ctrl.h as usize;
+        self.ctrl = Some(ctrl);
+        h0
+    }
+
+    fn next(&mut self, timing: &RoundTiming, _last_h: usize) -> usize {
+        self.ctrl
+            .as_mut()
+            .expect("HPolicy::next before initial")
+            .observe(timing.t_worker, timing.t_overhead)
+    }
+
+    fn label(&self) -> Option<&str> {
+        Some("adaptiveH")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{webspam_like, SyntheticSpec};
+
+    #[test]
+    fn fixed_policy_is_constant() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.h_frac = 0.5;
+        let mut p = Fixed;
+        let h0 = p.initial(&cfg, 100);
+        assert_eq!(h0, 50);
+        let t = RoundTiming {
+            t_worker: 0.1,
+            t_overhead: 0.9,
+            ..Default::default()
+        };
+        assert_eq!(p.next(&t, h0), h0);
+        assert!(p.label().is_none());
+    }
+
+    #[test]
+    fn adaptive_policy_tracks_controller() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let cfg = TrainConfig::default_for(&ds);
+        let mut p = Adaptive::new(0.8);
+        let h0 = p.initial(&cfg, 100);
+        assert_eq!(h0, cfg.h_for(100));
+        // Overhead-dominated round → H must grow, exactly as the bare
+        // controller would say.
+        let mut reference = AdaptiveH::new(cfg.h_for(100), 100, 0.8);
+        let t = RoundTiming {
+            t_worker: 0.1,
+            t_overhead: 0.9,
+            ..Default::default()
+        };
+        assert_eq!(p.next(&t, h0), reference.observe(0.1, 0.9));
+        assert_eq!(p.label(), Some("adaptiveH"));
+    }
+}

@@ -1,10 +1,12 @@
-//! Integration: the CoCoA coordinator over every framework substrate.
+//! Integration: the session-driven CoCoA loop over every framework
+//! substrate in the registry.
 
 use sparkbench::config::{Impl, TrainConfig};
 use sparkbench::coordinator::{self, tuner};
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
 use sparkbench::data::Dataset;
-use sparkbench::framework::build_engine;
+use sparkbench::framework::{build_engine, Engine};
+use sparkbench::session::Session;
 
 fn setup() -> (Dataset, TrainConfig) {
     let ds = webspam_like(&SyntheticSpec::small());
@@ -14,20 +16,40 @@ fn setup() -> (Dataset, TrainConfig) {
     (ds, cfg)
 }
 
+fn run_to_target(
+    engine: impl Into<Engine>,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    fstar: f64,
+) -> sparkbench::metrics::TrainReport {
+    Session::builder(ds)
+        .engine(engine)
+        .config(cfg.clone())
+        .oracle(fstar)
+        .build()
+        .expect("valid session")
+        .run()
+}
+
 #[test]
 fn every_engine_reaches_target() {
     let (ds, cfg) = setup();
     let fstar = coordinator::oracle_objective(&ds, &cfg);
-    for imp in Impl::ALL {
-        if imp == Impl::MllibSgd {
-            continue; // needs far more rounds; covered below
-        }
-        let mut engine = build_engine(imp, &ds, &cfg);
-        let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &cfg, fstar);
+    // The FULL registry, not just the virtual-clock impls: the thread and
+    // parameter-server engines train through the same session loop.
+    let mut engines: Vec<Engine> = Impl::ALL
+        .iter()
+        .filter(|&&imp| imp != Impl::MllibSgd) // needs far more rounds; covered below
+        .map(|&imp| Engine::Impl(imp))
+        .collect();
+    engines.push(Engine::Threads { k: 0 });
+    engines.push(Engine::ParamServer { staleness: 0 });
+    for engine in engines {
+        let rep = run_to_target(engine, &ds, &cfg, fstar);
         assert!(
             rep.time_to_target.is_some(),
-            "{} failed to reach 1e-3 (final {:.3e} after {} rounds)",
-            imp.name(),
+            "{} failed to reach 1e-3 (final {:?} after {} rounds)",
+            engine.label(),
             rep.final_suboptimality,
             rep.rounds
         );
@@ -40,18 +62,20 @@ fn mllib_sgd_converges_but_slower_in_rounds() {
     cfg.max_rounds = 150;
     cfg.target_subopt = 0.0;
     let fstar = coordinator::oracle_objective(&ds, &cfg);
-    let mut mllib = build_engine(Impl::MllibSgd, &ds, &cfg);
-    let mut cocoa = build_engine(Impl::SparkScala, &ds, &cfg);
-    let r_mllib = coordinator::train_with_oracle(mllib.as_mut(), &ds, &cfg, fstar);
-    let r_cocoa = coordinator::train_with_oracle(cocoa.as_mut(), &ds, &cfg, fstar);
+    let r_mllib = run_to_target(Impl::MllibSgd, &ds, &cfg, fstar);
+    let r_cocoa = run_to_target(Impl::SparkScala, &ds, &cfg, fstar);
+    let (sub_mllib, sub_cocoa) = (
+        r_mllib.final_suboptimality.unwrap(),
+        r_cocoa.final_suboptimality.unwrap(),
+    );
     assert!(
-        r_cocoa.final_suboptimality < 0.5 * r_mllib.final_suboptimality,
+        sub_cocoa < 0.5 * sub_mllib,
         "CoCoA {:.3e} should be far ahead of SGD {:.3e} at equal rounds",
-        r_cocoa.final_suboptimality,
-        r_mllib.final_suboptimality
+        sub_cocoa,
+        sub_mllib
     );
     // But SGD must still make real progress (it is a correct solver).
-    assert!(r_mllib.final_suboptimality < 0.5, "{}", r_mllib.final_suboptimality);
+    assert!(sub_mllib < 0.5, "{}", sub_mllib);
 }
 
 #[test]
@@ -60,9 +84,8 @@ fn virtual_time_ordering_matches_figure2() {
     let (ds, cfg) = setup();
     let fstar = coordinator::oracle_objective(&ds, &cfg);
     let time_of = |imp: Impl| -> f64 {
-        let mut engine = build_engine(imp, &ds, &cfg);
-        let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &cfg, fstar);
-        rep.time_to_target
+        run_to_target(imp, &ds, &cfg, fstar)
+            .time_to_target
             .unwrap_or_else(|| panic!("{} missed target", imp.name()))
     };
     let e = time_of(Impl::Mpi);
@@ -114,8 +137,7 @@ fn eval_every_skips_objective_computation() {
     cfg.max_rounds = 17;
     cfg.target_subopt = 0.0;
     let fstar = coordinator::oracle_objective(&ds, &cfg);
-    let mut engine = build_engine(Impl::Mpi, &ds, &cfg);
-    let rep = coordinator::train_with_oracle(engine.as_mut(), &ds, &cfg, fstar);
+    let rep = run_to_target(Impl::Mpi, &ds, &cfg, fstar);
     let evals = rep.logs.iter().filter(|l| l.objective.is_some()).count();
     assert_eq!(evals, 5); // rounds 0,5,10,15 + final round 16
 }
@@ -128,10 +150,15 @@ fn elastic_net_trains_too() {
     cfg.max_rounds = 600;
     cfg.target_subopt = 1e-2;
     let mut engine = build_engine(Impl::Mpi, &ds, &cfg);
-    let rep = coordinator::train(engine.as_mut(), &ds, &cfg);
+    let rep = Session::builder(&ds)
+        .config(cfg)
+        .attach(engine.as_mut())
+        .build()
+        .expect("valid session")
+        .run();
     assert!(
         rep.time_to_target.is_some(),
-        "elastic net missed 1e-2: {:.3e}",
+        "elastic net missed 1e-2: {:?}",
         rep.final_suboptimality
     );
     // The l1 component must produce some sparsity in the model.
@@ -147,8 +174,14 @@ fn adaptive_h_competitive_with_tuned() {
     let make = || build_engine(Impl::SparkC, &ds, &cfg);
     let (points, best) = tuner::grid_search_h(&make, &ds, &cfg, fstar, &[0.2, 0.5, 1.0, 2.0]);
     let tuned = points[best].report.time_to_target.unwrap();
-    let mut engine = build_engine(Impl::SparkC, &ds, &cfg);
-    let adaptive = tuner::train_adaptive(engine.as_mut(), &ds, &cfg, fstar, 0.75);
+    let adaptive = Session::builder(&ds)
+        .engine(Impl::SparkC)
+        .config(cfg.clone())
+        .oracle(fstar)
+        .adaptive_h(0.75)
+        .build()
+        .expect("valid session")
+        .run();
     let t_adaptive = adaptive.time_to_target.expect("adaptive missed target");
     assert!(
         t_adaptive < 5.0 * tuned,

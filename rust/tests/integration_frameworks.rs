@@ -2,10 +2,10 @@
 //! layout effects, RDD semantics under engine use.
 
 use sparkbench::config::{Impl, TrainConfig};
-use sparkbench::coordinator::run_fixed_rounds;
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
 use sparkbench::data::Dataset;
 use sparkbench::framework::{build_engine, build_engine_with, EngineOptions, LayoutOverride};
+use sparkbench::session::Session;
 
 fn mid_dataset() -> Dataset {
     // Large enough that per-byte/per-record costs dominate the τ-scaled
@@ -24,8 +24,13 @@ fn cfg_for(ds: &Dataset) -> TrainConfig {
 }
 
 fn overheads(ds: &Dataset, cfg: &TrainConfig, imp: Impl, rounds: usize) -> (f64, f64, u64, u64) {
-    let mut engine = build_engine(imp, ds, cfg);
-    let rep = run_fixed_rounds(engine.as_mut(), ds, cfg, rounds);
+    let rep = Session::builder(ds)
+        .engine(imp)
+        .config(cfg.clone())
+        .fixed_rounds(rounds)
+        .build()
+        .expect("valid session")
+        .run();
     let down: u64 = rep.logs.iter().map(|l| l.timing.bytes_down).sum();
     let up: u64 = rep.logs.iter().map(|l| l.timing.bytes_up).sum();
     (rep.total_overhead, rep.total_worker, down, up)
@@ -75,8 +80,15 @@ fn layout_ablation_flat_beats_records() {
             force_layout: Some(layout),
             ..Default::default()
         };
-        let mut engine = build_engine_with(Impl::SparkC, &ds, &cfg, &opts);
-        run_fixed_rounds(engine.as_mut(), &ds, &cfg, 10).total_overhead
+        Session::builder(&ds)
+            .engine(Impl::SparkC)
+            .options(opts)
+            .config(cfg.clone())
+            .fixed_rounds(10)
+            .build()
+            .expect("valid session")
+            .run()
+            .total_overhead
     };
     let flat = run(LayoutOverride::Flat);
     let records = run(LayoutOverride::Records);

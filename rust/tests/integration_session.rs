@@ -1,0 +1,184 @@
+//! Integration: the session observer layer — recording, checkpoint
+//! round-trips (including across substrates), CSV tracing, and the
+//! adaptive H policy's bit-for-bit fidelity to the controller.
+
+use sparkbench::config::{Impl, TrainConfig};
+use sparkbench::coordinator::tuner::AdaptiveH;
+use sparkbench::coordinator::{checkpoint::Checkpoint, oracle_objective};
+use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+use sparkbench::data::Dataset;
+use sparkbench::framework::{build_engine, Engine};
+use sparkbench::metrics::TrainReport;
+use sparkbench::session::{CheckpointEvery, CsvTrace, Recording, Session};
+
+fn setup() -> (Dataset, TrainConfig) {
+    let ds = webspam_like(&SyntheticSpec::small());
+    let mut cfg = TrainConfig::default_for(&ds);
+    cfg.workers = 4;
+    cfg.max_rounds = 1200;
+    (ds, cfg)
+}
+
+fn objective_bits(rep: &TrainReport) -> Vec<u64> {
+    rep.logs
+        .iter()
+        .filter_map(|l| l.objective)
+        .map(f64::to_bits)
+        .collect()
+}
+
+#[test]
+fn recording_observer_sees_every_round_exactly_once() {
+    let (ds, cfg) = setup();
+    // Fixed-rounds run: rounds 0..12, each exactly once, one completion.
+    let rec = Recording::new();
+    let report = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg.clone())
+        .fixed_rounds(12)
+        .observe(rec.clone())
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(report.rounds, 12);
+    assert_eq!(rec.rounds(), (0..12).collect::<Vec<_>>());
+    assert_eq!(rec.completions(), 1);
+
+    // Early-stopping run: the observer count tracks the actual rounds.
+    let rec2 = Recording::new();
+    let report2 = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg)
+        .observe(rec2.clone())
+        .build()
+        .unwrap()
+        .run();
+    assert!(report2.time_to_target.is_some());
+    assert_eq!(rec2.rounds(), (0..report2.rounds).collect::<Vec<_>>());
+    assert_eq!(rec2.completions(), 1);
+}
+
+#[test]
+fn checkpoint_via_observer_roundtrips_to_the_same_trajectory() {
+    let (ds, mut cfg) = setup();
+    cfg.eval_every = 1;
+    let fstar = oracle_objective(&ds, &cfg);
+    let path = std::env::temp_dir().join("sparkbench_session_ckpt_test.json");
+
+    // Uninterrupted reference: 10 rounds, objectives logged every round.
+    let uninterrupted = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg.clone())
+        .fixed_rounds(10)
+        .oracle(fstar)
+        .build()
+        .unwrap()
+        .run();
+    let full = objective_bits(&uninterrupted);
+    assert_eq!(full.len(), 10);
+
+    // Interrupted run: 5 rounds, checkpoint written by the observer.
+    let first_half = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg.clone())
+        .fixed_rounds(5)
+        .oracle(fstar)
+        .observe(CheckpointEvery::new(5, &path))
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(objective_bits(&first_half), &full[..5]);
+
+    // Resume from the checkpoint file: rounds 5..10, seeds line up, the
+    // engine's α is restored through DistEngine::load_alpha — the
+    // trajectory continues BIT-identically.
+    let ckpt = Checkpoint::load(&path).unwrap();
+    assert_eq!(ckpt.round, 5);
+    let resumed = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg.clone())
+        .fixed_rounds(5)
+        .oracle(fstar)
+        .resume_from(ckpt)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(resumed.logs.first().unwrap().round, 5);
+    assert_eq!(objective_bits(&resumed), &full[5..]);
+    // The resumed clock continues from the checkpointed time.
+    assert!(resumed.total_time > 0.0);
+
+    // Cross-substrate resume: the same checkpoint restored into the
+    // physically parallel thread engine continues the same trajectory —
+    // the registry invariant survives a save/restore boundary.
+    let ckpt2 = Checkpoint::load(&path).unwrap();
+    let resumed_threads = Session::builder(&ds)
+        .engine(Engine::Threads { k: 0 })
+        .config(cfg)
+        .fixed_rounds(5)
+        .oracle(fstar)
+        .resume_from(ckpt2)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(objective_bits(&resumed_threads), &full[5..]);
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn adaptive_policy_reproduces_controller_sequence_bit_for_bit() {
+    // The session's Adaptive H policy must walk the exact H sequence the
+    // old `tuner::train_adaptive` loop produced: h0 = cfg.h_for(mean),
+    // then one controller observation per completed (non-final) round.
+    let (ds, mut cfg) = setup();
+    cfg.eval_every = 1;
+    let fstar = oracle_objective(&ds, &cfg);
+    let target_fraction = 0.8;
+    let report = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg.clone())
+        .fixed_rounds(25)
+        .oracle(fstar)
+        .adaptive_h(target_fraction)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(report.rounds, 25);
+    assert_eq!(report.impl_name, "E:mpi+adaptiveH");
+
+    // Replay the bare controller over the recorded timings.
+    let n_locals = build_engine(Impl::Mpi, &ds, &cfg).n_locals();
+    let mean_n_local =
+        (n_locals.iter().sum::<usize>() as f64 / n_locals.len() as f64).round() as usize;
+    let mut ctrl = AdaptiveH::new(cfg.h_for(mean_n_local), mean_n_local, target_fraction);
+    let mut h = ctrl.h as usize;
+    for log in &report.logs {
+        assert_eq!(log.h, h, "round {} diverged from the controller", log.round);
+        h = ctrl.observe(log.timing.t_worker, log.timing.t_overhead);
+    }
+    // The controller actually moved H (otherwise this test is vacuous).
+    assert!(report.logs.iter().any(|l| l.h != report.logs[0].h));
+}
+
+#[test]
+fn csv_trace_observer_matches_report_trace() {
+    let (ds, mut cfg) = setup();
+    cfg.eval_every = 2;
+    let fstar = oracle_objective(&ds, &cfg);
+    let path = std::env::temp_dir().join("sparkbench_session_trace_test.csv");
+    let report = Session::builder(&ds)
+        .engine(Impl::SparkC)
+        .config(cfg)
+        .fixed_rounds(6)
+        .oracle(fstar)
+        .observe(CsvTrace::create(&path).unwrap())
+        .build()
+        .unwrap()
+        .run();
+    let streamed = std::fs::read_to_string(&path).unwrap();
+    // The streaming observer and the post-hoc report emit identical CSV.
+    assert_eq!(streamed, report.trace_csv());
+    assert_eq!(streamed.lines().count(), 1 + 6);
+    std::fs::remove_file(&path).ok();
+}
