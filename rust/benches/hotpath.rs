@@ -27,9 +27,11 @@ use sparkbench::framework::serialization::{java_encoded_len, java_sparse_cutover
 use sparkbench::framework::EngineOptions;
 use sparkbench::linalg;
 use sparkbench::linalg::{DeltaReducer, DeltaSlot};
+use sparkbench::problem::Problem;
 use sparkbench::session::Session;
 use sparkbench::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
 use sparkbench::testkit::alloc::{current_thread_allocations, CountingAllocator};
+use sparkbench::testkit::reference::PreRedesignElasticScd;
 use sparkbench::util::json::Json;
 
 /// Count every allocation the bench performs so the pooled-vs-fresh cases
@@ -52,7 +54,7 @@ fn main() {
     let b = Bencher::default();
     let mut results = Vec::new();
     let mut json = Json::obj();
-    json.set("bench", "hotpath").set("schema_version", 3usize);
+    json.set("bench", "hotpath").set("schema_version", 4usize);
 
     // ---- sparse dot / axpy — one call per SCD step, THE hot pair --------
     let ds = webspam_like(&SyntheticSpec::webspam_mini());
@@ -75,12 +77,12 @@ fn main() {
     let alpha = vec![0.0; wd.n_local()];
     let v = vec![0.0; ds.m()];
     let mut solver = NativeScd::new();
+    let ridge = Problem::ridge(1.0);
     let req = SolveRequest {
         v: &v,
         b: &ds.b,
         h: wd.n_local(),
-        lam_n: 1.0,
-        eta: 1.0,
+        problem: &ridge,
         sigma: 8.0,
         seed: 1,
     };
@@ -203,8 +205,7 @@ fn main() {
                 v: &v0,
                 b: &sds.b,
                 h: h_sparse,
-                lam_n: cfg.lam_n,
-                eta: cfg.eta,
+                problem: &cfg.problem,
                 sigma: cfg.sigma(),
                 seed: 1 + w as u64,
             };
@@ -333,14 +334,90 @@ fn main() {
         json.set("sparse_frames", js);
     }
 
-    // ---- dataset objective (suboptimality tracking cost) ----------------
+    // ---- problem dispatch: trait-routed SCD vs the pre-redesign path ----
+    // The SCD loop now routes its coordinate step through the round's
+    // `Problem` (one `match` per solve, monomorphized loops). This case
+    // pins the cost of that indirection against a re-creation of the
+    // pre-redesign hard-coded elastic loop: the ratio MUST be ~1.0 (within
+    // noise) and the dispatched rounds MUST stay 0-alloc — including the
+    // hinge dual, whose update is new.
+    {
+        // The ONE verbatim copy of the pre-problem hard-coded solver
+        // (testkit::reference, shared with tests/integration_problems.rs).
+        // Its solve_into shape (r₀ snapshot + Δ materialization) matches
+        // the dispatched path, so the ratio isolates the dispatch cost.
+        let mut isolver = PreRedesignElasticScd::new();
+        let mut iout = SolveResult::default();
+        // Warmup sizes the scratch.
+        isolver.solve_into(&wd, &alpha, &v, &ds.b, wd.n_local(), 1.0, 1.0, 8.0, 1, &mut iout);
+        let inlined = b.run("scd round (pre-redesign inlined elastic)", || {
+            isolver.solve_into(&wd, &alpha, &v, &ds.b, wd.n_local(), 1.0, 1.0, 8.0, 1, &mut iout)
+        });
+        let mut psolver = NativeScd::new();
+        let mut pout = SolveResult::default();
+        psolver.solve_into(&wd, &alpha, &req, &mut pout); // warmup
+        let dispatched = b.run("scd round (problem-dispatched, ridge)", || {
+            psolver.solve_into(&wd, &alpha, &req, &mut pout)
+        });
+        let dispatch_ratio = dispatched.mean_s / inlined.mean_s.max(1e-12);
+        let a0 = current_thread_allocations();
+        psolver.solve_into(&wd, &alpha, &req, &mut pout);
+        let ridge_allocs = current_thread_allocations() - a0;
+
+        // Hinge-dual round on the same data shape: 0-alloc bar extends to
+        // the new loss family.
+        let svm = Problem::svm(1.0);
+        let hreq = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: wd.n_local(),
+            problem: &svm,
+            sigma: 8.0,
+            seed: 1,
+        };
+        let mut hsolver = NativeScd::new();
+        let mut hout = SolveResult::default();
+        hsolver.solve_into(&wd, &alpha, &hreq, &mut hout); // warmup
+        let hinge = b.run("scd round (problem-dispatched, hinge)", || {
+            hsolver.solve_into(&wd, &alpha, &hreq, &mut hout)
+        });
+        let a0 = current_thread_allocations();
+        hsolver.solve_into(&wd, &alpha, &hreq, &mut hout);
+        let hinge_allocs = current_thread_allocations() - a0;
+        println!(
+            "problem dispatch: inlined {:.3} ms vs dispatched {:.3} ms → {:.3}x (MUST be ~1.0x); \
+             allocs/round ridge = {}, hinge = {} (MUST be 0)",
+            inlined.mean_s * 1e3,
+            dispatched.mean_s * 1e3,
+            dispatch_ratio,
+            ridge_allocs,
+            hinge_allocs
+        );
+        let mut jd = Json::obj();
+        jd.set("inlined_mean_s", inlined.mean_s)
+            .set("dispatched_mean_s", dispatched.mean_s)
+            .set("dispatch_ratio", dispatch_ratio)
+            .set("ridge_allocs_per_round", ridge_allocs)
+            .set("hinge_mean_s", hinge.mean_s)
+            .set("hinge_allocs_per_round", hinge_allocs);
+        json.set("problem_dispatch", jd);
+        results.push(inlined);
+        results.push(dispatched);
+        results.push(hinge);
+    }
+
+    // ---- problem objective (suboptimality tracking cost) ----------------
     let alpha_full = vec![0.01; ds.n()];
+    let p_obj = Problem::ridge(1.0);
     results.push(b.run("objective (O(nnz) matvec)", || {
-        ds.objective(&alpha_full, 1.0, 1.0)
+        p_obj.primal(&ds, &alpha_full)
     }));
     let v_full = ds.shared_vector(&alpha_full);
     results.push(b.run("objective_given_v (O(m+n))", || {
-        ds.objective_given_v(&v_full, &alpha_full, 1.0, 1.0)
+        p_obj.primal_given_v(&v_full, &alpha_full, &ds.b)
+    }));
+    results.push(b.run("duality_gap (O(nnz) certificate)", || {
+        p_obj.duality_gap(&ds, &v_full, &alpha_full)
     }));
 
     // ---- PJRT-executed Pallas kernel round (needs `make artifacts`) -----
@@ -362,12 +439,12 @@ fn main() {
                 let palpha = vec![0.0; pwd.n_local()];
                 let pv = vec![0.0; pds.m()];
                 let mut psolver = PjrtScd::new(exec);
+                let pproblem = Problem::ridge(10.0);
                 let preq = SolveRequest {
                     v: &pv,
                     b: &pds.b,
                     h: pwd.n_local().min(man.h_max),
-                    lam_n: 10.0,
-                    eta: 1.0,
+                    problem: &pproblem,
                     sigma: 4.0,
                     seed: 1,
                 };

@@ -29,7 +29,7 @@ fn main() {
     cfg.workers = 4;
     cfg.max_rounds = 3000;
 
-    println!("dataset: {} | K={} | λn={:.2} | target ε=1e-3\n", ds.name, cfg.workers, cfg.lam_n);
+    println!("dataset: {} | K={} | λn={:.2} | target ε=1e-3\n", ds.name, cfg.workers, cfg.lam_n());
     let fstar = coordinator::oracle_objective(&ds, &cfg);
 
     let mut table = Table::new(&["engine", "rounds", "time (virt s)", "overhead share", "vs MPI"]);

@@ -58,7 +58,7 @@ fn main() {
     let k = 4usize;
     let mut cfg = TrainConfig::default_for(&ds);
     cfg.workers = k;
-    cfg.lam_n = 5e-2 * ds.n() as f64;
+    cfg.problem = sparkbench::problem::Problem::ridge(5e-2 * ds.n() as f64);
     println!("dataset {} ({}x{}, {} nnz), K={}", ds.name, ds.m(), ds.n(), ds.nnz(), k);
 
     // Range partitioning gives exactly nk columns per worker (the
@@ -75,7 +75,7 @@ fn main() {
     }
 
     // ---- Oracle for suboptimality --------------------------------------
-    let (_, fstar) = sparkbench::solver::cg::ridge_optimum(&ds, cfg.lam_n, 1e-12, 20_000);
+    let (_, fstar) = sparkbench::solver::cg::ridge_optimum(&ds, cfg.lam_n(), 1e-12, 20_000);
 
     // ---- L3 training loop: CoCoA rounds over the PJRT local solver -----
     let h = workers[0].n_local(); // H = n_local
@@ -92,8 +92,7 @@ fn main() {
                 v: &v,
                 b: &ds.b,
                 h,
-                lam_n: cfg.lam_n,
-                eta: 1.0,
+                problem: &cfg.problem,
                 sigma: cfg.sigma(),
                 seed: cfg.seed ^ (round as u64 * 1315423911) ^ w as u64,
             };
@@ -119,7 +118,7 @@ fn main() {
                 alpha[g as usize] = a;
             }
         }
-        let f = ds.objective(&alpha, cfg.lam_n, 1.0);
+        let f = cfg.problem.primal(&ds, &alpha);
         let sub = coordinator::suboptimality(f, fstar);
         let wall = t0.elapsed().as_secs_f64();
         csv.push_str(&format!("{},{:.6},{:.9e},{:.6e}\n", round, wall, f, sub));
@@ -140,8 +139,7 @@ fn main() {
         v: &v,
         b: &ds.b,
         h: 128,
-        lam_n: cfg.lam_n,
-        eta: 1.0,
+        problem: &cfg.problem,
         sigma: cfg.sigma(),
         seed: 424242,
     };

@@ -1,7 +1,8 @@
 //! Run configuration: the five paper implementations, solver kinds and the
-//! training hyper-parameters (λ, η, H, K, σ′).
+//! training hyper-parameters (the [`Problem`], H, K, σ′).
 
 use crate::data::{Dataset, Partitioner};
+use crate::problem::Problem;
 
 /// The implementations compared by the paper (§4.1), plus the two optimized
 /// variants of §5.3 and an MLlib-style baseline (§5.4).
@@ -135,10 +136,10 @@ impl SolverKind {
 pub struct TrainConfig {
     /// Number of workers K.
     pub workers: usize,
-    /// Effective regularizer λ·n (DESIGN.md §5 objective).
-    pub lam_n: f64,
-    /// Elastic-net mix η (1 = ridge, the paper's experiment).
-    pub eta: f64,
+    /// The optimization problem: loss family + regularizer (λ·n, η).
+    /// Ridge/lasso/elastic-net, linear SVM and logistic regression all
+    /// train through the same round loop (DESIGN.md §9).
+    pub problem: Problem,
     /// Local steps per round, as a fraction of n_local (the paper sweeps
     /// H relative to n_local; `h_abs` overrides when Some).
     pub h_frac: f64,
@@ -164,8 +165,7 @@ impl TrainConfig {
     pub fn default_for(ds: &Dataset) -> TrainConfig {
         TrainConfig {
             workers: 8,
-            lam_n: 1e-2 * ds.n() as f64,
-            eta: 1.0,
+            problem: Problem::ridge(1e-2 * ds.n() as f64),
             h_frac: 1.0,
             h_abs: None,
             gamma: 1.0,
@@ -182,6 +182,16 @@ impl TrainConfig {
         self.gamma * self.workers as f64
     }
 
+    /// Effective regularizer λ·n (convenience accessor for banners/CSV).
+    pub fn lam_n(&self) -> f64 {
+        self.problem.reg.lam_n
+    }
+
+    /// Elastic-net mix η (meaningful for the squared-loss family).
+    pub fn eta(&self) -> f64 {
+        self.problem.reg.eta
+    }
+
     /// Resolve H for a worker with `n_local` columns.
     pub fn h_for(&self, n_local: usize) -> usize {
         match self.h_abs {
@@ -194,12 +204,7 @@ impl TrainConfig {
         if self.workers == 0 {
             return Err("workers must be >= 1".into());
         }
-        if !(0.0..=1.0).contains(&self.eta) {
-            return Err(format!("eta {} outside [0,1]", self.eta));
-        }
-        if self.lam_n <= 0.0 {
-            return Err("lam_n must be > 0".into());
-        }
+        self.problem.validate()?;
         if self.gamma <= 0.0 || self.gamma > 1.0 {
             return Err(format!("gamma {} outside (0,1]", self.gamma));
         }
@@ -266,9 +271,9 @@ mod tests {
         let ds = webspam_like(&SyntheticSpec::small());
         let mut cfg = TrainConfig::default_for(&ds);
         cfg.validate().unwrap();
-        cfg.eta = 1.5;
+        cfg.problem = Problem::elastic(cfg.lam_n(), 1.5);
         assert!(cfg.validate().is_err());
-        cfg.eta = 1.0;
+        cfg.problem = Problem::ridge(cfg.lam_n());
         cfg.workers = 0;
         assert!(cfg.validate().is_err());
         cfg.workers = 4;

@@ -2,10 +2,14 @@
 //! fingerprint) so long runs survive restarts — standard framework duty.
 //!
 //! Format: versioned JSON envelope with base-16 packed f64 payloads
-//! (exact bit-level round-trip, no float-text precision loss).
+//! (exact bit-level round-trip, no float-text precision loss). Version 2
+//! records the trained [`Problem`]; version-1 envelopes (flat `lam_n`/
+//! `eta` fields, squared loss implied) still decode — as ridge at η = 1,
+//! elastic net otherwise.
 
 use std::path::Path;
 
+use crate::problem::Problem;
 use crate::util::json::Json;
 
 /// A training checkpoint.
@@ -19,13 +23,12 @@ pub struct Checkpoint {
     pub alpha: Vec<f64>,
     /// Shared vector v = Aα.
     pub v: Vec<f64>,
-    /// Config fingerprint (λn, η, K) — restore refuses on mismatch.
-    pub lam_n: f64,
-    pub eta: f64,
+    /// Config fingerprint (problem, K) — restore refuses on mismatch.
+    pub problem: Problem,
     pub workers: usize,
 }
 
-const VERSION: f64 = 1.0;
+const VERSION: f64 = 2.0;
 
 fn pack_f64s(v: &[f64]) -> String {
     let mut s = String::with_capacity(v.len() * 16);
@@ -56,8 +59,7 @@ impl Checkpoint {
         j.set("version", VERSION)
             .set("round", self.round)
             .set("time", self.time)
-            .set("lam_n", self.lam_n)
-            .set("eta", self.eta)
+            .set("problem", self.problem.to_json())
             .set("workers", self.workers)
             .set("alpha_hex", pack_f64s(&self.alpha))
             .set("v_hex", pack_f64s(&self.v));
@@ -66,16 +68,21 @@ impl Checkpoint {
 
     pub fn from_json(j: &Json) -> Result<Checkpoint, String> {
         let ver = j.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0);
-        if ver != VERSION {
-            return Err(format!("unsupported checkpoint version {}", ver));
-        }
         let num =
             |k: &str| -> Result<f64, String> { j.get(k).and_then(|v| v.as_f64()).ok_or(format!("missing {}", k)) };
+        let problem = if ver == VERSION {
+            Problem::from_json(j.get("problem").ok_or("missing problem")?)?
+        } else if ver == 1.0 {
+            // v1 envelopes predate the problem layer: squared loss with the
+            // recorded (λn, η) — ridge at η = 1.
+            Problem::elastic(num("lam_n")?, num("eta")?)
+        } else {
+            return Err(format!("unsupported checkpoint version {}", ver));
+        };
         Ok(Checkpoint {
             round: num("round")? as usize,
             time: num("time")?,
-            lam_n: num("lam_n")?,
-            eta: num("eta")?,
+            problem,
             workers: num("workers")? as usize,
             alpha: unpack_f64s(j.get("alpha_hex").and_then(|v| v.as_str()).ok_or("missing alpha")?)?,
             v: unpack_f64s(j.get("v_hex").and_then(|v| v.as_str()).ok_or("missing v")?)?,
@@ -94,11 +101,22 @@ impl Checkpoint {
 
     /// Verify compatibility with a config before resuming.
     pub fn compatible_with(&self, cfg: &crate::config::TrainConfig) -> Result<(), String> {
-        if (self.lam_n - cfg.lam_n).abs() > 1e-12 * (1.0 + cfg.lam_n.abs()) {
-            return Err(format!("λn mismatch: {} vs {}", self.lam_n, cfg.lam_n));
+        let (mine, theirs) = (self.problem, cfg.problem);
+        if mine.loss != theirs.loss {
+            return Err(format!(
+                "problem mismatch: checkpoint trained {}, config wants {}",
+                mine.kind_name(),
+                theirs.kind_name()
+            ));
         }
-        if (self.eta - cfg.eta).abs() > 1e-12 {
-            return Err(format!("η mismatch: {} vs {}", self.eta, cfg.eta));
+        if (mine.reg.lam_n - theirs.reg.lam_n).abs() > 1e-12 * (1.0 + theirs.reg.lam_n.abs()) {
+            return Err(format!(
+                "λn mismatch: {} vs {}",
+                mine.reg.lam_n, theirs.reg.lam_n
+            ));
+        }
+        if (mine.reg.eta - theirs.reg.eta).abs() > 1e-12 {
+            return Err(format!("η mismatch: {} vs {}", mine.reg.eta, theirs.reg.eta));
         }
         if self.workers != cfg.workers {
             return Err(format!("K mismatch: {} vs {}", self.workers, cfg.workers));
@@ -117,8 +135,7 @@ mod tests {
             time: 1.5,
             alpha: vec![1.0, -2.5, 0.0, f64::MIN_POSITIVE, 1e300],
             v: vec![3.25, -0.0],
-            lam_n: 0.5,
-            eta: 1.0,
+            problem: Problem::ridge(0.5),
             workers: 8,
         }
     }
@@ -155,19 +172,48 @@ mod tests {
     }
 
     #[test]
+    fn v1_envelopes_decode_as_squared_loss() {
+        // A pre-problem (version 1) checkpoint: flat lam_n/eta fields and
+        // no "problem" object. It must decode as ridge/elastic.
+        let mut j = sample().to_json();
+        j.set("version", 1.0)
+            .set("problem", Json::Null)
+            .set("lam_n", 0.5)
+            .set("eta", 1.0);
+        let c = Checkpoint::from_json(&j).unwrap();
+        assert_eq!(c.problem, Problem::ridge(0.5));
+        assert_eq!(c.alpha, sample().alpha);
+        // Elastic η survives too.
+        j.set("eta", 0.25);
+        let c = Checkpoint::from_json(&j).unwrap();
+        assert_eq!(c.problem, Problem::elastic(0.5, 0.25));
+    }
+
+    #[test]
+    fn svm_problem_roundtrips_through_the_envelope() {
+        let mut c = sample();
+        c.problem = Problem::svm(2.0);
+        let back = Checkpoint::from_json(&Json::parse(&c.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back.problem, Problem::svm(2.0));
+    }
+
+    #[test]
     fn compatibility_guard() {
         use crate::config::TrainConfig;
         use crate::data::synthetic::{webspam_like, SyntheticSpec};
         let ds = webspam_like(&SyntheticSpec::small());
         let mut cfg = TrainConfig::default_for(&ds);
         cfg.workers = 8;
-        cfg.lam_n = 0.5;
+        cfg.problem = Problem::ridge(0.5);
         let c = sample();
         c.compatible_with(&cfg).unwrap();
         cfg.workers = 4;
         assert!(c.compatible_with(&cfg).is_err());
         cfg.workers = 8;
-        cfg.eta = 0.5;
+        cfg.problem = Problem::elastic(0.5, 0.5);
+        assert!(c.compatible_with(&cfg).is_err());
+        // Same hyper-parameters, different loss family: refused.
+        cfg.problem = Problem::svm(0.5);
         assert!(c.compatible_with(&cfg).is_err());
     }
 
@@ -194,18 +240,17 @@ mod tests {
             time: engine.clock(),
             alpha: engine.alpha_global(),
             v: v.clone(),
-            lam_n: cfg.lam_n,
-            eta: cfg.eta,
+            problem: cfg.problem,
             workers: cfg.workers,
         };
-        let f_at_ckpt = ds.objective(&ckpt.alpha, cfg.lam_n, cfg.eta);
+        let f_at_ckpt = cfg.problem.primal(&ds, &ckpt.alpha);
         // "Restore": v from checkpoint drives further rounds.
         let mut v2 = ckpt.v.clone();
         for round in 5..10 {
             let (dv, _) = engine.run_round(&v2, 64, round);
             linalg::add_assign(&mut v2, &dv);
         }
-        let f_after = ds.objective(&engine.alpha_global(), cfg.lam_n, cfg.eta);
+        let f_after = cfg.problem.primal(&ds, &engine.alpha_global());
         assert!(f_after < f_at_ckpt, "{} !< {}", f_after, f_at_ckpt);
     }
 }

@@ -16,15 +16,30 @@ use crate::config::TrainConfig;
 use crate::data::Dataset;
 use crate::framework::DistEngine;
 use crate::metrics::TrainReport;
+use crate::problem::{LossKind, Problem};
 use crate::session::{Session, StopPolicy};
 use crate::solver::cg;
 
 /// Compute the optimum objective value f(α*) for suboptimality tracking.
 pub fn oracle_objective(ds: &Dataset, cfg: &TrainConfig) -> f64 {
-    if (cfg.eta - 1.0).abs() < 1e-12 {
-        cg::ridge_optimum(ds, cfg.lam_n, 1e-12, 50_000).1
-    } else {
-        cg::elastic_net_optimum(ds, cfg.lam_n, cfg.eta, 300).1
+    problem_optimum(ds, &cfg.problem)
+}
+
+/// High-precision f(α*) for any [`Problem`]: CG on the normal equations
+/// for ridge (the historical oracle, bit-identical routing), long
+/// single-worker CoCoA with certificate-based early exit otherwise.
+/// Non-quadratic problems usually prefer stopping on the gap certificate
+/// itself ([`StopPolicy::ToGap`]) — no oracle run needed at all.
+pub fn problem_optimum(ds: &Dataset, problem: &Problem) -> f64 {
+    match problem.loss {
+        LossKind::Squared => {
+            if (problem.reg.eta - 1.0).abs() < 1e-12 {
+                cg::ridge_optimum(ds, problem.reg.lam_n, 1e-12, 50_000).1
+            } else {
+                cg::elastic_net_optimum(ds, problem.reg.lam_n, problem.reg.eta, 300).1
+            }
+        }
+        LossKind::Hinge | LossKind::Logistic => cg::problem_optimum(ds, problem, 2000).1,
     }
 }
 

@@ -1,5 +1,7 @@
-//! Model evaluation: prediction and regression quality metrics, plus
-//! train/test splitting — what a downstream user runs after training.
+//! Model evaluation: prediction, regression AND classification quality
+//! metrics, plus train/test splitting — what a downstream user runs after
+//! training. Classification metrics take margin predictions (`x·w`) and
+//! ±1 labels, matching the SVM/logistic problem layer (DESIGN.md §9).
 
 use super::sparse::CscMatrix;
 use super::Dataset;
@@ -39,6 +41,37 @@ pub fn r2(pred: &[f64], labels: &[f64]) -> f64 {
         return if ss_res <= 1e-12 { 1.0 } else { 0.0 };
     }
     1.0 - ss_res / ss_tot
+}
+
+/// Binary classification accuracy: the fraction of margin predictions
+/// whose sign agrees with the ±1 label (a zero margin counts as wrong —
+/// the undecided prediction). Empty input scores 0.
+pub fn accuracy(pred: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let correct = pred
+        .iter()
+        .zip(labels.iter())
+        .filter(|(&p, &y)| p * y > 0.0)
+        .count();
+    correct as f64 / pred.len() as f64
+}
+
+/// Mean hinge loss `mean(max(0, 1 − y·pred))` of margin predictions
+/// against ±1 labels — the downstream-quality number an SVM run reports
+/// next to its dual objective.
+pub fn hinge_loss(pred: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter()
+        .zip(labels.iter())
+        .map(|(&p, &y)| (1.0 - y * p).max(0.0))
+        .sum::<f64>()
+        / pred.len() as f64
 }
 
 /// Split a dataset's *rows* into train/test subsets (features shared).
@@ -117,6 +150,44 @@ mod tests {
         let zero = vec![0.0; ds.m()];
         assert!(rmse(&pred, &ds.b) < 0.3 * rmse(&zero, &ds.b));
         assert!(r2(&pred, &ds.b) > 0.8);
+    }
+
+    #[test]
+    fn accuracy_counts_sign_agreement() {
+        let labels = vec![1.0, -1.0, 1.0, -1.0];
+        // 3 of 4 margins on the right side; the zero margin is wrong.
+        let pred = vec![2.5, -0.1, 0.0, -3.0];
+        assert!((accuracy(&pred, &labels) - 0.75).abs() < 1e-12);
+        assert_eq!(accuracy(&labels, &labels), 1.0);
+        let flipped: Vec<f64> = labels.iter().map(|y| -y).collect();
+        assert_eq!(accuracy(&flipped, &labels), 0.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn hinge_loss_hand_computed() {
+        let labels = vec![1.0, -1.0];
+        // margins y·p: 2.0 → loss 0; -0.5 → loss 1.5; mean 0.75
+        let pred = vec![2.0, 0.5];
+        assert!((hinge_loss(&pred, &labels) - 0.75).abs() < 1e-12);
+        // Perfectly-margined predictions have zero hinge loss.
+        assert_eq!(hinge_loss(&[3.0, -2.0], &labels), 0.0);
+        assert_eq!(hinge_loss(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn trained_svm_scores_high_accuracy() {
+        use crate::data::synthetic::separable_classes;
+        use crate::problem::Problem;
+        let (ds, labels) = separable_classes(20, 64, 0.5, 6);
+        let p = Problem::svm(1.0);
+        let (alpha, _) = crate::solver::cg::problem_optimum(&ds, &p, 600);
+        // Margins in datapoint space: x_j·w = y_j·(q_j·v), v = Aα.
+        let v = ds.shared_vector(&alpha);
+        let qv = ds.a.matvec_t(&v);
+        let pred: Vec<f64> = qv.iter().zip(labels.iter()).map(|(&t, &y)| t * y).collect();
+        assert!(accuracy(&pred, &labels) >= 0.95);
+        assert!(hinge_loss(&pred, &labels) < 1.0);
     }
 
     #[test]

@@ -12,76 +12,148 @@ use std::path::Path;
 use super::sparse::CscMatrix;
 use super::Dataset;
 
-/// Parse LIBSVM text into a [`Dataset`]. `n_hint` (optional) pre-declares
-/// the feature count; otherwise it is inferred from the max index seen.
-pub fn parse_libsvm(text: &str, n_hint: Option<usize>) -> Result<Dataset, String> {
-    let mut labels = Vec::new();
-    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
-    let mut max_col = 0usize;
+/// Incremental row-by-row LIBSVM parser: feed lines, finish into a
+/// [`Dataset`]. Both the in-memory [`parse_libsvm`] and the streaming
+/// [`load_libsvm`] drive this one implementation.
+#[derive(Debug, Default)]
+struct RowParser {
+    labels: Vec<f64>,
+    triplets: Vec<(usize, usize, f64)>,
+    max_col: usize,
+}
 
-    for (lineno, line) in text.lines().enumerate() {
+impl RowParser {
+    /// Parse one text line (1-based `lineno` for error messages). Blank
+    /// lines and `#` comments are skipped.
+    fn push_line(&mut self, line: &str, lineno: usize) -> Result<(), String> {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
-            continue;
+            return Ok(());
         }
         let mut parts = line.split_whitespace();
         let label: f64 = parts
             .next()
-            .ok_or_else(|| format!("line {}: empty", lineno + 1))?
+            .ok_or_else(|| format!("line {}: empty", lineno))?
             .parse()
-            .map_err(|e| format!("line {}: bad label: {}", lineno + 1, e))?;
-        let row = labels.len();
-        labels.push(label);
+            .map_err(|e| format!("line {}: bad label: {}", lineno, e))?;
+        let row = self.labels.len();
+        self.labels.push(label);
         for tok in parts {
             let (is, vs) = tok
                 .split_once(':')
-                .ok_or_else(|| format!("line {}: bad token '{}'", lineno + 1, tok))?;
+                .ok_or_else(|| format!("line {}: bad token '{}'", lineno, tok))?;
             let idx: usize = is
                 .parse()
-                .map_err(|e| format!("line {}: bad index: {}", lineno + 1, e))?;
+                .map_err(|e| format!("line {}: bad index: {}", lineno, e))?;
             if idx == 0 {
-                return Err(format!("line {}: libsvm indices are 1-based", lineno + 1));
+                return Err(format!("line {}: libsvm indices are 1-based", lineno));
             }
             let val: f64 = vs
                 .parse()
-                .map_err(|e| format!("line {}: bad value: {}", lineno + 1, e))?;
-            max_col = max_col.max(idx);
-            triplets.push((row, idx - 1, val));
+                .map_err(|e| format!("line {}: bad value: {}", lineno, e))?;
+            self.max_col = self.max_col.max(idx);
+            self.triplets.push((row, idx - 1, val));
         }
+        Ok(())
     }
 
-    let m = labels.len();
-    let n = n_hint.unwrap_or(max_col).max(max_col);
-    if m == 0 {
-        return Err("no rows".into());
+    fn finish(self, n_hint: Option<usize>) -> Result<Dataset, String> {
+        let m = self.labels.len();
+        let n = n_hint.unwrap_or(self.max_col).max(self.max_col);
+        if m == 0 {
+            return Err("no rows".into());
+        }
+        let a = CscMatrix::from_triplets(m, n, &self.triplets);
+        Ok(Dataset {
+            a,
+            b: self.labels,
+            name: "libsvm".into(),
+        })
     }
-    let a = CscMatrix::from_triplets(m, n, &triplets);
-    Ok(Dataset {
-        a,
-        b: labels,
-        name: "libsvm".into(),
-    })
+}
+
+/// Parse LIBSVM text into a [`Dataset`]. `n_hint` (optional) pre-declares
+/// the feature count; otherwise it is inferred from the max index seen.
+pub fn parse_libsvm(text: &str, n_hint: Option<usize>) -> Result<Dataset, String> {
+    let mut p = RowParser::default();
+    for (lineno, line) in text.lines().enumerate() {
+        p.push_line(line, lineno + 1)?;
+    }
+    p.finish(n_hint)
 }
 
 /// Read a LIBSVM file from disk.
 pub fn read_libsvm(path: &Path, n_hint: Option<usize>) -> Result<Dataset, String> {
     let f = File::open(path).map_err(|e| format!("open {}: {}", path.display(), e))?;
-    let mut text = String::new();
     let mut reader = BufReader::new(f);
+    let mut p = RowParser::default();
+    let mut line = String::new();
+    let mut lineno = 0usize;
     loop {
-        let mut line = String::new();
+        line.clear();
         match reader.read_line(&mut line) {
             Ok(0) => break,
-            Ok(_) => text.push_str(&line),
+            Ok(_) => {
+                lineno += 1;
+                p.push_line(&line, lineno)?;
+            }
             Err(e) => return Err(format!("read {}: {}", path.display(), e)),
         }
     }
-    let mut ds = parse_libsvm(&text, n_hint)?;
+    let mut ds = p.finish(n_hint)?;
     ds.name = path
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "libsvm".into());
     Ok(ds)
+}
+
+/// Load a LIBSVM classification/regression corpus with zero caller
+/// boilerplate: file-streaming (rows parsed as they are read, never the
+/// whole text in memory), feature count inferred. Convenience wrapper
+/// over the streaming [`read_libsvm`] machinery — pair with
+/// [`normalize_labels_pm1`] for binary-classification corpora.
+pub fn load_libsvm(path: impl AsRef<Path>) -> Result<Dataset, String> {
+    read_libsvm(path.as_ref(), None)
+}
+
+/// Map binary class labels to ±1 in place, the convention the SVM/logistic
+/// problems expect: {−1, +1} passes through, {0, 1}-coded maps 0 → −1,
+/// {1, 2}-coded maps 1 → −1 and 2 → +1. Any other label set (including
+/// more than two classes) is an error naming the offending classes.
+pub fn normalize_labels_pm1(labels: &mut [f64]) -> Result<(), String> {
+    let mut classes: Vec<f64> = Vec::new();
+    for &y in labels.iter() {
+        if !classes.iter().any(|&c| c == y) {
+            classes.push(y);
+            if classes.len() > 2 {
+                classes.sort_by(f64::total_cmp);
+                return Err(format!(
+                    "more than 2 classes: {:?}... — not a binary corpus",
+                    classes
+                ));
+            }
+        }
+    }
+    classes.sort_by(f64::total_cmp);
+    let ok = |set: &[f64]| classes.iter().all(|c| set.contains(c));
+    if ok(&[-1.0, 1.0]) {
+        return Ok(()); // already ±1
+    }
+    let map: &dyn Fn(f64) -> f64 = if ok(&[0.0, 1.0]) {
+        &|y| if y == 0.0 { -1.0 } else { 1.0 }
+    } else if ok(&[1.0, 2.0]) {
+        &|y| if y == 1.0 { -1.0 } else { 1.0 }
+    } else {
+        return Err(format!(
+            "unrecognized class coding {:?} (want ±1, {{0,1}} or {{1,2}})",
+            classes
+        ));
+    };
+    for y in labels.iter_mut() {
+        *y = map(*y);
+    }
+    Ok(())
 }
 
 /// Serialize a dataset to LIBSVM text (row-major; requires a CSR pass).
@@ -177,5 +249,46 @@ mod tests {
         let back = read_libsvm(&path, Some(ds.n())).unwrap();
         assert_eq!(back.a.nnz(), ds.a.nnz());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_libsvm_streams_without_caller_boilerplate() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let path = std::env::temp_dir().join("sparkbench_load_libsvm_test.txt");
+        write_libsvm(&ds, &path).unwrap();
+        let back = load_libsvm(&path).unwrap();
+        assert_eq!(back.m(), ds.m());
+        assert_eq!(back.a.nnz(), ds.a.nnz());
+        // Streaming and in-memory parses agree exactly.
+        let text = to_libsvm_string(&ds);
+        let parsed = parse_libsvm(&text, None).unwrap();
+        assert_eq!(back.a, parsed.a);
+        assert_eq!(back.b, parsed.b);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn normalize_labels_pm1_codings() {
+        // ±1 passes through untouched.
+        let mut pm = vec![1.0, -1.0, 1.0];
+        normalize_labels_pm1(&mut pm).unwrap();
+        assert_eq!(pm, vec![1.0, -1.0, 1.0]);
+        // {0,1} coding.
+        let mut zo = vec![0.0, 1.0, 0.0, 1.0];
+        normalize_labels_pm1(&mut zo).unwrap();
+        assert_eq!(zo, vec![-1.0, 1.0, -1.0, 1.0]);
+        // {1,2} coding (webspam-style).
+        let mut ot = vec![1.0, 2.0, 2.0];
+        normalize_labels_pm1(&mut ot).unwrap();
+        assert_eq!(ot, vec![-1.0, 1.0, 1.0]);
+        // Single-class degenerate sets still map consistently.
+        let mut ones = vec![1.0, 1.0];
+        normalize_labels_pm1(&mut ones).unwrap();
+        assert_eq!(ones, vec![1.0, 1.0]);
+        // >2 classes and unknown codings are refused.
+        let mut multi = vec![0.0, 1.0, 2.0];
+        assert!(normalize_labels_pm1(&mut multi).is_err());
+        let mut odd = vec![3.0, 7.0];
+        assert!(normalize_labels_pm1(&mut odd).is_err());
     }
 }

@@ -46,15 +46,13 @@ impl Dataset {
     /// Elastic-net objective
     /// `f(α) = 0.5‖Aα − b‖² + λn(η/2‖α‖² + (1−η)‖α‖₁)`
     /// (DESIGN.md §5; `lam_n` is the *effective* λ·n).
+    ///
+    /// Thin shim over [`Problem::primal`](crate::problem::Problem::primal):
+    /// the squared-loss specialization of the problem layer, kept for the
+    /// pre-problem call sites. Bit-identical to the original inline math.
+    #[deprecated(note = "compose a `problem::Problem` and call `primal` instead")]
     pub fn objective(&self, alpha: &[f64], lam_n: f64, eta: f64) -> f64 {
-        let v = self.a.matvec(alpha);
-        let mut loss = 0.0;
-        for i in 0..self.m() {
-            let r = v[i] - self.b[i];
-            loss += r * r;
-        }
-        0.5 * loss
-            + lam_n * (0.5 * eta * linalg::nrm2_sq(alpha) + (1.0 - eta) * linalg::nrm1(alpha))
+        crate::problem::Problem::elastic(lam_n, eta).primal(self, alpha)
     }
 
     /// Shared vector `v = Aα`.
@@ -65,18 +63,14 @@ impl Dataset {
     /// Objective evaluated from an already-maintained shared vector
     /// `v = Aα`: O(m + n) instead of the O(nnz) matvec in
     /// [`Dataset::objective`].
-    /// The coordinator tracks v exactly (it is the algorithm's state), so
-    /// per-round suboptimality tracking uses this path (§Perf log: ~40×
-    /// faster round evaluation on webspam-mini).
+    ///
+    /// Thin shim over
+    /// [`Problem::primal_given_v`](crate::problem::Problem::primal_given_v)
+    /// — the squared-loss specialization, bit-identical to the original.
+    #[deprecated(note = "compose a `problem::Problem` and call `primal_given_v` instead")]
     pub fn objective_given_v(&self, v: &[f64], alpha: &[f64], lam_n: f64, eta: f64) -> f64 {
         debug_assert_eq!(v.len(), self.m());
-        let mut loss = 0.0;
-        for (vi, bi) in v.iter().zip(self.b.iter()) {
-            let r = vi - bi;
-            loss += r * r;
-        }
-        0.5 * loss
-            + lam_n * (0.5 * eta * linalg::nrm2_sq(alpha) + (1.0 - eta) * linalg::nrm1(alpha))
+        crate::problem::Problem::elastic(lam_n, eta).primal_given_v(v, alpha, &self.b)
     }
 }
 
@@ -170,6 +164,7 @@ impl FeatureRecord {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the objective shims themselves are under test
 mod tests {
     use super::*;
 

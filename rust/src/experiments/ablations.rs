@@ -119,8 +119,7 @@ pub fn minibatch_cd(opts: &ExpOptions) -> String {
                     v: &v,
                     b: &ds.b,
                     h: workers[w].n_local(),
-                    lam_n: cfg.lam_n,
-                    eta: cfg.eta,
+                    problem: &cfg.problem,
                     sigma: cfg.sigma(),
                     seed: round as u64 * 31 + w as u64,
                 };
@@ -136,7 +135,7 @@ pub fn minibatch_cd(opts: &ExpOptions) -> String {
                 }
             }
             subopts.push(coordinator::suboptimality(
-                ds.objective(&alpha, cfg.lam_n, cfg.eta),
+                cfg.problem.primal(&ds, &alpha),
                 fstar,
             ));
         }

@@ -72,7 +72,7 @@ impl ExpOptions {
         let mut cfg = TrainConfig::default_for(ds);
         cfg.workers = self.workers;
         if let Some(l) = self.lam_n {
-            cfg.lam_n = l;
+            cfg.problem = cfg.problem.with_lam_n(l);
         }
         cfg
     }

@@ -18,7 +18,7 @@ pub fn run(opts: &ExpOptions) -> String {
     let mut out = String::new();
     out.push_str(&format!(
         "Figure 2 — suboptimality vs time, {} (K={}, λn={:.3})\n\n",
-        ds.name, cfg.workers, cfg.lam_n
+        ds.name, cfg.workers, cfg.lam_n()
     ));
 
     let markers = ['A', 'B', 'C', 'D', 'E'];

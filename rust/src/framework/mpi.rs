@@ -19,6 +19,7 @@ use super::{DistEngine, EngineOptions, RoundTiming, WorkerSet};
 use crate::config::{Impl, TrainConfig};
 use crate::data::{Dataset, Partitioning};
 use crate::linalg;
+use crate::problem::Problem;
 use crate::simnet::VirtualClock;
 use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
 
@@ -35,8 +36,7 @@ pub struct MpiEngine {
     reducer: linalg::DeltaReducer,
     model: OverheadModel,
     clock: VirtualClock,
-    lam_n: f64,
-    eta: f64,
+    problem: Problem,
     sigma: f64,
     b: Vec<f64>,
     m: usize,
@@ -61,8 +61,7 @@ impl MpiEngine {
             reducer: linalg::DeltaReducer::raw(ds.m()),
             model,
             clock: VirtualClock::new(),
-            lam_n: cfg.lam_n,
-            eta: cfg.eta,
+            problem: cfg.problem,
             sigma: cfg.sigma(),
             b: ds.b.clone(),
             m: ds.m(),
@@ -136,8 +135,7 @@ impl DistEngine for MpiEngine {
                 v,
                 b: &self.b,
                 h,
-                lam_n: self.lam_n,
-                eta: self.eta,
+                problem: &self.problem,
                 sigma: self.sigma,
                 seed: round_seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
             };
@@ -245,12 +243,12 @@ mod tests {
     fn persistent_alpha_state_accumulates() {
         let (ds, mut eng) = engine();
         let mut v = vec![0.0; ds.m()];
-        let lam_n = eng.lam_n;
-        let mut prev = ds.objective(&eng.alpha_global(), lam_n, 1.0);
+        let p = eng.problem;
+        let mut prev = p.primal(&ds, &eng.alpha_global());
         for round in 0..5 {
             let (dv, _) = eng.run_round(&v, 100, round);
             linalg::add_assign(&mut v, &dv);
-            let cur = ds.objective(&eng.alpha_global(), lam_n, 1.0);
+            let cur = p.primal(&ds, &eng.alpha_global());
             assert!(cur <= prev + 1e-9, "round {}: {} -> {}", round, prev, cur);
             prev = cur;
         }
@@ -295,13 +293,13 @@ mod tests {
                 OverheadModel::paper_defaults(crate::simnet::ClusterModel::paper_testbed(1.0));
             let mut eng = MpiEngine::new(&ds, &parts, &cfg, model);
             let mut v = vec![0.0; ds.m()];
-            let f0 = ds.objective(&eng.alpha_global(), cfg.lam_n, 1.0);
+            let f0 = cfg.problem.primal(&ds, &eng.alpha_global());
             for round in 0..20 {
                 let h = eng.n_locals()[0];
                 let (dv, _) = eng.run_round(&v, h, round);
                 linalg::add_assign(&mut v, &dv);
             }
-            let f = ds.objective(&eng.alpha_global(), cfg.lam_n, 1.0);
+            let f = cfg.problem.primal(&ds, &eng.alpha_global());
             assert!(f < 0.6 * f0, "K={}: {} -> {}", k, f0, f);
         }
     }

@@ -30,6 +30,7 @@ use super::{DistEngine, Engine, EngineOptions, RoundTiming, WorkerSet};
 use crate::config::{Impl, TrainConfig};
 use crate::data::{Dataset, Partitioning, WorkerData};
 use crate::linalg::{self, DeltaReducer, DeltaShape, DeltaSlot};
+use crate::problem::Problem;
 use crate::simnet::VirtualClock;
 use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
 
@@ -49,8 +50,7 @@ pub struct ParamServerEngine {
     /// Ring of coordinator views (front = newest); workers read the view
     /// `staleness` rounds old. Buffers recycle — no steady-state allocs.
     history: VecDeque<Vec<f64>>,
-    lam_n: f64,
-    eta: f64,
+    problem: Problem,
     sigma: f64,
     b: Vec<f64>,
     m: usize,
@@ -82,8 +82,7 @@ impl ParamServerEngine {
             staleness,
             damping: 1.0 / (1.0 + staleness as f64),
             history: VecDeque::with_capacity(staleness + 1),
-            lam_n: cfg.lam_n,
-            eta: cfg.eta,
+            problem: cfg.problem,
             sigma: cfg.sigma(),
             b: ds.b.clone(),
             m: ds.m(),
@@ -147,8 +146,7 @@ impl DistEngine for ParamServerEngine {
                 v: view,
                 b: &self.b,
                 h,
-                lam_n: self.lam_n,
-                eta: self.eta,
+                problem: &self.problem,
                 sigma: self.sigma,
                 seed: round_seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
             };
@@ -223,8 +221,7 @@ pub struct ParamServerSim {
     history: VecDeque<Vec<f64>>,
     /// How many epochs old the view a worker computes against is.
     pub staleness: usize,
-    lam_n: f64,
-    eta: f64,
+    problem: Problem,
     sigma: f64,
     b: Vec<f64>,
     epoch: u64,
@@ -265,8 +262,7 @@ impl ParamServerSim {
             v,
             history,
             staleness,
-            lam_n: cfg.lam_n,
-            eta: cfg.eta,
+            problem: cfg.problem,
             sigma: cfg.sigma(),
             b: ds.b.clone(),
             epoch: 0,
@@ -293,8 +289,7 @@ impl ParamServerSim {
                 v: &self.view_buf,
                 b: &self.b,
                 h,
-                lam_n: self.lam_n,
-                eta: self.eta,
+                problem: &self.problem,
                 sigma: self.sigma,
                 seed: seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
             };
@@ -355,7 +350,7 @@ impl ParamServerSim {
         for e in 0..max_epochs {
             self.run_epoch(h, e as u64);
             let alpha = self.alpha_global(ds.n());
-            let f = ds.objective(&alpha, self.lam_n, self.eta);
+            let f = self.problem.primal(ds, &alpha);
             if crate::coordinator::suboptimality(f, fstar) <= target {
                 return Some(e + 1);
             }
@@ -519,8 +514,8 @@ mod tests {
         assert!(stale.history.len() <= 3);
         // Objective still decreases under bounded staleness + damping.
         let zero = vec![0.0; ds.n()];
-        let f0 = ds.objective(&zero, cfg.lam_n, cfg.eta);
-        let f = ds.objective(&stale.alpha_global(), cfg.lam_n, cfg.eta);
+        let f0 = cfg.problem.primal(&ds, &zero);
+        let f = cfg.problem.primal(&ds, &stale.alpha_global());
         assert!(f < f0, "{} !< {}", f, f0);
     }
 

@@ -24,6 +24,7 @@ use super::{DistEngine, EngineOptions, RoundTiming};
 use crate::config::{Impl, TrainConfig};
 use crate::data::{Dataset, Partitioning, WorkerData};
 use crate::linalg::{self, DeltaReducer, DeltaSlot};
+use crate::problem::Problem;
 use crate::simnet::VirtualClock;
 use crate::solver::{managed, scd, LocalSolver, SolveRequest};
 use crate::util::pool::BytePool;
@@ -36,8 +37,7 @@ pub struct PySparkEngine {
     base: Rdd<usize>,
     model: OverheadModel,
     clock: VirtualClock,
-    lam_n: f64,
-    eta: f64,
+    problem: Problem,
     sigma: f64,
     b: Rc<Vec<f64>>,
     n_total: usize,
@@ -123,8 +123,7 @@ impl PySparkEngine {
             base,
             model,
             clock: VirtualClock::new(),
-            lam_n: cfg.lam_n,
-            eta: cfg.eta,
+            problem: cfg.problem,
             sigma: cfg.sigma(),
             b: Rc::new(ds.b.clone()),
             n_total: ds.n(),
@@ -218,7 +217,7 @@ impl DistEngine for PySparkEngine {
         let solvers = Rc::clone(&self.solvers);
         let b = Rc::clone(&self.b);
         let v_shared: Rc<Vec<f64>> = Rc::new(v.to_vec());
-        let (lam_n, eta, sigma) = (self.lam_n, self.eta, self.sigma);
+        let (problem, sigma) = (self.problem, self.sigma);
         let records_per_task = self.records_per_task.clone();
 
         let job = self.base.map_partitions_indexed(move |p, ids, ctx| {
@@ -229,8 +228,7 @@ impl DistEngine for PySparkEngine {
                 v: &v_shared,
                 b: &b,
                 h,
-                lam_n,
-                eta,
+                problem: &problem,
                 sigma,
                 seed: round_seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
             };

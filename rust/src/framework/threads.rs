@@ -145,7 +145,9 @@ impl ThreadedMpiEngine {
         let mut workers = Vec::new();
         let mut global_ids = Vec::new();
         let mut n_locals = Vec::new();
-        let (lam_n, eta, sigma) = (cfg.lam_n, cfg.eta, cfg.sigma());
+        // `Problem` is Copy + Send: each rank owns its copy, exactly like
+        // real MPI ranks own their hyper-parameters.
+        let (problem, sigma) = (cfg.problem, cfg.sigma());
         // One shared label vector for all ranks (the paper's workers each
         // hold b; in shared memory one copy serves everyone).
         let b_shared: Arc<Vec<f64>> = Arc::new(ds.b.clone());
@@ -175,8 +177,7 @@ impl ThreadedMpiEngine {
                                     v: v.as_slice(),
                                     b: &b,
                                     h,
-                                    lam_n,
-                                    eta,
+                                    problem: &problem,
                                     sigma,
                                     seed: seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
                                 };

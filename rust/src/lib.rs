@@ -60,6 +60,24 @@
 //!     .run();
 //! assert!(report.time_to_target.is_some());
 //! ```
+//!
+//! The objective is a first-class [`problem::Problem`] — the paper's
+//! closing workloads (ridge, lasso, linear SVM) plus logistic regression
+//! all run through the same loop, and non-quadratic problems stop on the
+//! oracle-free duality-gap certificate:
+//!
+//! ```no_run
+//! use sparkbench::prelude::*;
+//!
+//! // Columns are label-scaled datapoints; labels come back for eval.
+//! let (ds, labels) = sparkbench::data::synthetic::separable_classes(64, 512, 0.4, 1);
+//! let report = Session::builder(&ds)
+//!     .problem(Problem::svm(1.0))
+//!     .stop(StopPolicy::ToGap { gap: 1e-4 }) // certificate, no CG oracle
+//!     .train();
+//! println!("svm: {} rounds, gap {:?}", report.rounds, report.logs.last().unwrap().gap);
+//! # let _ = labels;
+//! ```
 
 // The codebase favors explicit index loops where they mirror the paper's
 // per-worker/per-coordinate structure; keep clippy's style opinions on
@@ -80,6 +98,7 @@ pub mod experiments;
 pub mod framework;
 pub mod linalg;
 pub mod metrics;
+pub mod problem;
 pub mod runtime;
 pub mod session;
 pub mod simnet;
@@ -103,6 +122,7 @@ pub mod prelude {
     pub use crate::data::{Dataset, Partitioning};
 
     pub use crate::framework::{Engine, EngineOptions};
+    pub use crate::problem::{LossKind, Problem};
     pub use crate::session::{Session, StopPolicy};
 
     pub use crate::solver::LocalSolver;

@@ -20,6 +20,7 @@ use sparkbench::data::{Partitioner, Partitioning};
 use sparkbench::experiments::{run_ablation, run_figure, ExpOptions};
 use sparkbench::framework::Engine;
 use sparkbench::metrics::Table;
+use sparkbench::problem::Problem;
 use sparkbench::session::{CheckpointEvery, CsvTrace, Session, StopPolicy};
 use sparkbench::util::cli::Args;
 
@@ -86,6 +87,17 @@ fn cmd_train(args: &Args) -> i32 {
     if let Some(p) = args.get("partitioner").and_then(Partitioner::parse) {
         cfg.partitioner = p;
     }
+    // --problem opens the full workload family (λ·n still comes from
+    // --lambda-n, already folded into the config's problem).
+    if let Some(spec) = args.get("problem") {
+        match Problem::parse(spec, cfg.lam_n()) {
+            Ok(p) => cfg.problem = p,
+            Err(e) => {
+                eprintln!("{}", e);
+                return 2;
+            }
+        }
+    }
     // `threads:K` overrides the configured worker count inside the builder;
     // report the count the session will actually run with.
     let eff_workers = match engine {
@@ -93,11 +105,11 @@ fn cmd_train(args: &Args) -> i32 {
         _ => cfg.workers,
     };
     println!(
-        "training {} on {} (K={}, λn={:.3}, H={})",
+        "training {} [{}] on {} (K={}, H={})",
         engine.label(),
+        cfg.problem.label(),
         ds.name,
         eff_workers,
-        cfg.lam_n,
         cfg.h_for(ds.n() / eff_workers)
     );
 
@@ -109,6 +121,18 @@ fn cmd_train(args: &Args) -> i32 {
             return 2;
         };
         builder = builder.stop(StopPolicy::FixedRounds { n });
+    }
+    // Certificate-based stopping: no CG oracle, works for every problem.
+    if let Some(s) = args.get("to-gap") {
+        if args.get("fixed-rounds").is_some() {
+            eprintln!("--to-gap and --fixed-rounds are conflicting stop policies; pick one");
+            return 2;
+        }
+        let Ok(gap) = s.parse() else {
+            eprintln!("bad --to-gap '{}' (want a relative gap, e.g. 1e-4)", s);
+            return 2;
+        };
+        builder = builder.stop(StopPolicy::ToGap { gap });
     }
     // §5.5 controller instead of a fixed H.
     if let Some(s) = args.get("adaptive-h") {
@@ -362,12 +386,12 @@ fn cmd_pjrt_smoke(args: &Args) -> i32 {
     let wd = WorkerData::from_columns(&ds.a, &cols);
     let alpha = vec![0.0; wd.n_local()];
     let v = vec![0.0; ds.m()];
+    let problem = Problem::ridge(10.0);
     let req = SolveRequest {
         v: &v,
         b: &ds.b,
         h: 64.min(man.h_max),
-        lam_n: 10.0,
-        eta: 1.0,
+        problem: &problem,
         sigma: 2.0,
         seed: 7,
     };

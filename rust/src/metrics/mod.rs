@@ -19,6 +19,9 @@ pub struct RoundLog {
     pub objective: Option<f64>,
     /// Relative suboptimality (f − f*)/max(1, |f*|).
     pub suboptimality: Option<f64>,
+    /// Relative duality-gap certificate gap/max(1, |f|) (computed for
+    /// `ToGap` stopping or `.track_gap()` sessions; DESIGN.md §9).
+    pub gap: Option<f64>,
     pub timing: RoundTiming,
     /// H used this round (the adaptive tuner may vary it).
     pub h: usize,
@@ -26,15 +29,16 @@ pub struct RoundLog {
 
 /// Header matching [`RoundLog::csv_row`] — the one trace-CSV format,
 /// shared by [`TrainReport::trace_csv`] and the session's streaming
-/// `CsvTrace` observer.
+/// `CsvTrace` observer. The `gap` column is APPENDED (last), so
+/// positional consumers of the pre-gap columns keep working.
 pub const TRACE_CSV_HEADER: &str =
-    "round,time_s,objective,suboptimality,h,t_worker,t_master,t_overhead";
+    "round,time_s,objective,suboptimality,h,t_worker,t_master,t_overhead,gap";
 
 impl RoundLog {
     /// One trace-CSV row (no trailing newline); see [`TRACE_CSV_HEADER`].
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{:.9},{},{},{},{:.9},{:.9},{:.9}",
+            "{},{:.9},{},{},{},{:.9},{:.9},{:.9},{}",
             self.round,
             self.time,
             self.objective
@@ -47,6 +51,7 @@ impl RoundLog {
             self.timing.t_worker,
             self.timing.t_master,
             self.timing.t_overhead,
+            self.gap.map(|g| format!("{:.9e}", g)).unwrap_or_default(),
         )
     }
 }
@@ -287,6 +292,7 @@ mod tests {
                 time: 1.0,
                 objective: Some(2.0),
                 suboptimality: Some(0.1),
+                gap: Some(0.2),
                 timing: RoundTiming::default(),
                 h: 100,
             }],
@@ -306,7 +312,29 @@ mod tests {
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,time_s"));
         assert!(lines[1].starts_with("0,1.0"));
-        assert_eq!(lines[1].split(',').count(), 8);
+        assert_eq!(lines[1].split(',').count(), 9);
+    }
+
+    #[test]
+    fn gap_column_is_appended_last_and_optional() {
+        // Satellite invariant: the gap column rides at the END of the row,
+        // so consumers indexing the pre-gap columns positionally are
+        // unaffected; header and row always agree on the field count.
+        assert!(TRACE_CSV_HEADER.ends_with(",gap"));
+        let mut log = report().logs[0].clone();
+        assert_eq!(
+            log.csv_row().split(',').count(),
+            TRACE_CSV_HEADER.split(',').count()
+        );
+        assert!(log.csv_row().ends_with("2.000000000e-1"));
+        // A round without a gap evaluation leaves the cell empty — same
+        // convention as the objective/suboptimality cells.
+        log.gap = None;
+        assert_eq!(
+            log.csv_row().split(',').count(),
+            TRACE_CSV_HEADER.split(',').count()
+        );
+        assert!(log.csv_row().ends_with(','));
     }
 
     #[test]

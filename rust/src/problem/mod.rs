@@ -1,0 +1,695 @@
+//! First-class optimization problems: loss family × regularizer, with
+//! duality-gap certificates (DESIGN.md §9).
+//!
+//! The paper's closing result applies the Spark/MPI optimizations to three
+//! distributed linear ML workloads — ridge regression, lasso and linear
+//! SVM. All of them are instances of the box-constrained composite
+//! objective this module makes explicit:
+//!
+//! ```text
+//! min over α ∈ R^n     f(α) = g(Aα) + Σ_j φ_j(α_j),    g(v) = ½‖v − b‖²
+//! ```
+//!
+//! * **Squared loss** ([`SquaredLoss`]) — φ is the elastic-net regularizer
+//!   `λn(η/2·α² + (1−η)|α|)`: ridge at η = 1, lasso at η = 0. This is the
+//!   objective the whole pre-problem codebase hard-wired; the math here is
+//!   the *identical* expression sequence, so ridge/lasso trajectories are
+//!   bit-for-bit unchanged (asserted by `tests/integration_problems.rs`).
+//! * **Hinge dual** ([`HingeDual`]) — linear SVM via its box-constrained
+//!   dual: columns are label-scaled datapoints `q_j = y_j·x_j`, φ_j(a) =
+//!   −a on the box `[0, C]`, `C = 1/λn`, and `v = Aα` is the (scaled)
+//!   primal weight vector.
+//! * **Logistic dual** ([`LogisticDual`]) — logistic regression via the
+//!   entropic dual, φ_j(a) = a·ln a + (C−a)·ln(C−a) on `(0, C)`; the
+//!   per-coordinate update is a guarded 1-D Newton iteration
+//!   (allocation-free, deterministic).
+//!
+//! Every loss supplies three pieces through the [`Loss`] trait: the
+//! per-coordinate closed-form/prox **step** the SCD hot loop dispatches
+//! (monomorphized — the solvers `match` on [`LossKind`] once per solve, so
+//! the inner loop pays no dynamic dispatch and performs no allocation),
+//! the **primal value** terms, and the Fenchel **conjugate** that powers
+//! the duality-gap certificate:
+//!
+//! ```text
+//! gap(α) = f(α) + g*(u) + Σ_j φ_j*(−(Aᵀu)_j) ≥ 0,   u = v − b
+//! ```
+//!
+//! which vanishes at the optimum and upper-bounds `f(α) − f*` for any α —
+//! so training can stop on a certificate ([`StopPolicy::ToGap`]) without a
+//! conjugate-gradient oracle, which non-quadratic problems do not have.
+//!
+//! [`StopPolicy::ToGap`]: crate::session::StopPolicy::ToGap
+
+use crate::data::Dataset;
+use crate::linalg;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Regularizer
+// ---------------------------------------------------------------------------
+
+/// Elastic-net regularizer parameters: effective strength λ·n and mix η
+/// (1 = pure L2/ridge, 0 = pure L1/lasso). For the dual losses the same
+/// `lam_n` knob sets the box `C = 1/λn` and η is inert.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Regularizer {
+    /// Effective regularizer λ·n (DESIGN.md §5).
+    pub lam_n: f64,
+    /// Elastic-net mix η ∈ [0, 1].
+    pub eta: f64,
+}
+
+impl Regularizer {
+    /// Pure L2 (ridge).
+    pub fn l2(lam_n: f64) -> Regularizer {
+        Regularizer { lam_n, eta: 1.0 }
+    }
+
+    /// Pure L1 (lasso).
+    pub fn l1(lam_n: f64) -> Regularizer {
+        Regularizer { lam_n, eta: 0.0 }
+    }
+
+    /// Elastic-net mix.
+    pub fn elastic(lam_n: f64, eta: f64) -> Regularizer {
+        Regularizer { lam_n, eta }
+    }
+
+    /// `r(α) = λn(η/2‖α‖² + (1−η)‖α‖₁)` — textually the exact expression
+    /// the pre-problem `Dataset::objective` evaluated, so squared-loss
+    /// objectives stay bit-identical.
+    pub fn value(&self, alpha: &[f64]) -> f64 {
+        self.lam_n
+            * (0.5 * self.eta * linalg::nrm2_sq(alpha) + (1.0 - self.eta) * linalg::nrm1(alpha))
+    }
+
+    /// Box constraint `C = 1/λn` used by the dual losses.
+    pub fn box_c(&self) -> f64 {
+        1.0 / self.lam_n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loss trait + the three shipped losses
+// ---------------------------------------------------------------------------
+
+/// One loss family: the per-coordinate SCD update, the per-coordinate
+/// objective term Σφ_j, and the Fenchel conjugate for the gap certificate.
+///
+/// Hot paths do **not** call through `dyn Loss`: the solvers match on
+/// [`LossKind`] once per solve and call the concrete `step` inside a
+/// monomorphized loop. The trait exists so cold paths (objective, gap)
+/// stay uniform and so new losses implement one surface.
+pub trait Loss {
+    fn name(&self) -> &'static str;
+
+    /// New value of coordinate j minimizing the CoCoA local subproblem
+    /// `½σ′‖c_j‖²(a−α_j)² + (a−α_j)·c_jᵀr + φ_j(a)` where `r = v − b` is
+    /// the solver-maintained residual. `None` skips degenerate coordinates
+    /// (the draw still consumes one of the round's H iterations, exactly
+    /// like the pre-problem `denom ≤ 0` skip).
+    fn step(&self, reg: &Regularizer, sigma: f64, aj: f64, csq: f64, cj_r: f64) -> Option<f64>;
+
+    /// `Σ_j φ_j(α_j)` — everything in f(α) beyond the smooth `½‖v − b‖²`.
+    fn phi_sum(&self, reg: &Regularizer, alpha: &[f64]) -> f64;
+
+    /// `φ*(−t)` for one coordinate — the gap certificate term at
+    /// `t = (Aᵀu)_j` (DESIGN.md §9 derivations).
+    fn phi_conj_neg(&self, reg: &Regularizer, t: f64) -> f64;
+}
+
+/// Squared loss + elastic net — the paper's original workload family.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SquaredLoss;
+
+impl Loss for SquaredLoss {
+    fn name(&self) -> &'static str {
+        "squared"
+    }
+
+    #[inline]
+    fn step(&self, reg: &Regularizer, sigma: f64, aj: f64, csq: f64, cj_r: f64) -> Option<f64> {
+        // Bit-identical to the pre-problem hard-coded SCD update:
+        //   α̃⁺ = (σ‖c_j‖²·α_j − c_jᵀr) / (σ‖c_j‖² + λnη)
+        //   α⁺  = soft_threshold(α̃⁺, λn(1−η) / (σ‖c_j‖² + λnη))
+        let lam_eta = reg.lam_n * reg.eta;
+        let denom = sigma * csq + lam_eta;
+        if denom <= 0.0 {
+            return None;
+        }
+        let tau_num = reg.lam_n * (1.0 - reg.eta);
+        let atilde = (sigma * csq * aj - cj_r) / denom;
+        Some(linalg::soft_threshold(atilde, tau_num / denom))
+    }
+
+    #[inline]
+    fn phi_sum(&self, reg: &Regularizer, alpha: &[f64]) -> f64 {
+        reg.value(alpha)
+    }
+
+    #[inline]
+    fn phi_conj_neg(&self, reg: &Regularizer, t: f64) -> f64 {
+        // φ(a) = λnη/2·a² + λn(1−η)|a|  ⇒  φ*(s) = ((|s| − λn(1−η))₊)²/(2λnη).
+        // φ is symmetric, so φ*(−t) = φ*(t). At η = 0 the conjugate is the
+        // indicator of |s| ≤ λn; `duality_gap` scales u into that ball
+        // first, so the term is 0 there.
+        let excess = (t.abs() - reg.lam_n * (1.0 - reg.eta)).max(0.0);
+        if reg.eta > 0.0 {
+            excess * excess / (2.0 * reg.lam_n * reg.eta)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Linear-SVM dual: box-constrained coordinate ascent (SDCA). Columns must
+/// be label-scaled datapoints `q_j = y_j·x_j`, labels ±1, `b = 0`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HingeDual;
+
+impl Loss for HingeDual {
+    fn name(&self) -> &'static str {
+        "hinge-dual"
+    }
+
+    #[inline]
+    fn step(&self, reg: &Regularizer, sigma: f64, aj: f64, csq: f64, cj_r: f64) -> Option<f64> {
+        // ∂/∂a [½σcsq(a−α_j)² + (a−α_j)c_jᵀr − a] = 0
+        //   ⇒ a = α_j + (1 − c_jᵀr)/(σcsq), clipped to the box — exact for
+        // a 1-D quadratic, so no step size is needed (SDCA's hinge update).
+        let denom = sigma * csq;
+        if denom <= 0.0 {
+            return None;
+        }
+        let a = aj + (1.0 - cj_r) / denom;
+        Some(a.clamp(0.0, reg.box_c()))
+    }
+
+    #[inline]
+    fn phi_sum(&self, _reg: &Regularizer, alpha: &[f64]) -> f64 {
+        // φ_j(a) = −a on [0, C]; engines maintain the box invariant.
+        -alpha.iter().sum::<f64>()
+    }
+
+    #[inline]
+    fn phi_conj_neg(&self, reg: &Regularizer, t: f64) -> f64 {
+        // φ*(−t) = C·max(0, 1 − t): the hinge loss of margin t, weighted by
+        // the box — the primal partner P(w) = ½‖w‖² + C·Σ hinge(1 − q_jᵀw).
+        reg.box_c() * (1.0 - t).max(0.0)
+    }
+}
+
+/// Logistic-regression dual: entropic per-coordinate term, guarded 1-D
+/// Newton update (no closed form). Same data layout as [`HingeDual`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LogisticDual;
+
+/// `x·ln x` with the continuous extension 0 at x = 0.
+#[inline]
+fn xlnx(x: f64) -> f64 {
+    if x <= 0.0 {
+        0.0
+    } else {
+        x * x.ln()
+    }
+}
+
+/// Numerically stable `ln(1 + eˣ)`.
+#[inline]
+fn softplus(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+impl Loss for LogisticDual {
+    fn name(&self) -> &'static str {
+        "logistic-dual"
+    }
+
+    #[inline]
+    fn step(&self, reg: &Regularizer, sigma: f64, aj: f64, csq: f64, cj_r: f64) -> Option<f64> {
+        // Minimize q(a) = ½σcsq(a−α_j)² + (a−α_j)c_jᵀr + a·ln a + (C−a)·ln(C−a)
+        // on (0, C): q′ is strictly increasing, so a projected Newton
+        // iteration converges; all state is scalar (allocation-free) and
+        // the float sequence is deterministic, so every engine produces
+        // the identical update.
+        let denom = sigma * csq;
+        if denom <= 0.0 {
+            return None;
+        }
+        let c = reg.box_c();
+        let lo = c * 1e-12;
+        let hi = c - lo;
+        let mut a = aj.clamp(lo, hi);
+        for _ in 0..20 {
+            let g = denom * (a - aj) + cj_r + (a / (c - a)).ln();
+            let h = denom + c / (a * (c - a));
+            let next = (a - g / h).clamp(lo, hi);
+            let moved = (next - a).abs();
+            a = next;
+            if moved <= 1e-15 * c {
+                break;
+            }
+        }
+        Some(a)
+    }
+
+    #[inline]
+    fn phi_sum(&self, reg: &Regularizer, alpha: &[f64]) -> f64 {
+        let c = reg.box_c();
+        alpha.iter().map(|&a| xlnx(a) + xlnx(c - a)).sum()
+    }
+
+    #[inline]
+    fn phi_conj_neg(&self, reg: &Regularizer, t: f64) -> f64 {
+        // φ*(s) = C·ln(1+eˢ) − C·ln C  ⇒  φ*(−t) = C·softplus(−t) − C·ln C
+        // (the constant keeps the certificate exact: gap → 0 at optimum).
+        let c = reg.box_c();
+        c * softplus(-t) - c * c.ln()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Problem
+// ---------------------------------------------------------------------------
+
+/// Which loss family a [`Problem`] trains — the solvers' one-per-solve
+/// dispatch key (and the checkpoint-envelope tag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LossKind {
+    /// [`SquaredLoss`]: ridge / lasso / elastic net.
+    Squared,
+    /// [`HingeDual`]: linear SVM.
+    Hinge,
+    /// [`LogisticDual`]: logistic regression.
+    Logistic,
+}
+
+/// A trainable problem: a [`LossKind`] composed with a [`Regularizer`].
+/// Small and `Copy` — it travels by value into engine constructors and
+/// worker threads, and by reference inside [`SolveRequest`]s.
+///
+/// [`SolveRequest`]: crate::solver::SolveRequest
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Problem {
+    pub loss: LossKind,
+    pub reg: Regularizer,
+}
+
+impl Problem {
+    /// Ridge regression (squared loss, pure L2).
+    pub fn ridge(lam_n: f64) -> Problem {
+        Problem {
+            loss: LossKind::Squared,
+            reg: Regularizer::l2(lam_n),
+        }
+    }
+
+    /// Lasso (squared loss, pure L1).
+    pub fn lasso(lam_n: f64) -> Problem {
+        Problem {
+            loss: LossKind::Squared,
+            reg: Regularizer::l1(lam_n),
+        }
+    }
+
+    /// Elastic net (squared loss, mixed penalty).
+    pub fn elastic(lam_n: f64, eta: f64) -> Problem {
+        Problem {
+            loss: LossKind::Squared,
+            reg: Regularizer::elastic(lam_n, eta),
+        }
+    }
+
+    /// Linear SVM via the hinge dual; box `C = 1/λn`. Data columns must be
+    /// label-scaled datapoints (see `data::synthetic::separable_classes`).
+    pub fn svm(lam_n: f64) -> Problem {
+        Problem {
+            loss: LossKind::Hinge,
+            reg: Regularizer::l2(lam_n),
+        }
+    }
+
+    /// Logistic regression via the entropic dual; box `C = 1/λn`.
+    pub fn logistic(lam_n: f64) -> Problem {
+        Problem {
+            loss: LossKind::Logistic,
+            reg: Regularizer::l2(lam_n),
+        }
+    }
+
+    /// Same problem at a different regularization strength.
+    pub fn with_lam_n(mut self, lam_n: f64) -> Problem {
+        self.reg.lam_n = lam_n;
+        self
+    }
+
+    /// The loss implementation, for uniform cold-path dispatch.
+    pub fn loss_impl(&self) -> &'static dyn Loss {
+        match self.loss {
+            LossKind::Squared => &SquaredLoss,
+            LossKind::Hinge => &HingeDual,
+            LossKind::Logistic => &LogisticDual,
+        }
+    }
+
+    /// Short family name ("ridge" / "lasso" / "elastic" / "svm" / "logistic").
+    pub fn kind_name(&self) -> &'static str {
+        match self.loss {
+            LossKind::Squared => {
+                if self.reg.eta == 1.0 {
+                    "ridge"
+                } else if self.reg.eta == 0.0 {
+                    "lasso"
+                } else {
+                    "elastic"
+                }
+            }
+            LossKind::Hinge => "svm",
+            LossKind::Logistic => "logistic",
+        }
+    }
+
+    /// Human-readable label for logs and CLI banners.
+    pub fn label(&self) -> String {
+        match self.loss {
+            LossKind::Squared if self.reg.eta > 0.0 && self.reg.eta < 1.0 => {
+                format!("elastic(η={},λn={:.3})", self.reg.eta, self.reg.lam_n)
+            }
+            _ => format!("{}(λn={:.3})", self.kind_name(), self.reg.lam_n),
+        }
+    }
+
+    /// Parse a CLI problem spec: `ridge | lasso | elastic:<eta> | svm |
+    /// logistic` (λ·n supplied separately — it is the `--lambda-n` knob).
+    pub fn parse(spec: &str, lam_n: f64) -> Result<Problem, String> {
+        let lower = spec.to_ascii_lowercase();
+        let (head, arg) = match lower.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (lower.as_str(), None),
+        };
+        match (head, arg) {
+            ("ridge" | "l2", None) => Ok(Problem::ridge(lam_n)),
+            ("lasso" | "l1", None) => Ok(Problem::lasso(lam_n)),
+            ("elastic" | "elastic-net" | "en", Some(eta)) => eta
+                .parse()
+                .map(|e| Problem::elastic(lam_n, e))
+                .map_err(|_| format!("bad elastic mix '{}' (want elastic:<eta>)", eta)),
+            ("elastic" | "elastic-net" | "en", None) => {
+                Err("elastic needs a mix: elastic:<eta>".into())
+            }
+            ("svm" | "hinge", None) => Ok(Problem::svm(lam_n)),
+            ("logistic" | "logreg", None) => Ok(Problem::logistic(lam_n)),
+            _ => Err(format!(
+                "unknown problem '{}' (try: ridge, lasso, elastic:<eta>, svm, logistic)",
+                spec
+            )),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.reg.lam_n <= 0.0 {
+            return Err("lam_n must be > 0".into());
+        }
+        if self.loss == LossKind::Squared && !(0.0..=1.0).contains(&self.reg.eta) {
+            return Err(format!("eta {} outside [0,1]", self.reg.eta));
+        }
+        Ok(())
+    }
+
+    /// Check that a dataset is in the layout this problem trains. The dual
+    /// losses (SVM, logistic) require the dual layout — columns are
+    /// label-scaled datapoints `q_j = y_j·x_j` and `b = 0` — otherwise the
+    /// run would quietly optimize a well-defined but meaningless objective
+    /// against regression targets (see
+    /// `data::synthetic::separable_classes` and DESIGN.md §9). O(m).
+    pub fn check_dataset(&self, ds: &Dataset) -> Result<(), String> {
+        match self.loss {
+            LossKind::Squared => Ok(()),
+            LossKind::Hinge | LossKind::Logistic => {
+                if ds.b.iter().any(|&x| x != 0.0) {
+                    Err(format!(
+                        "{} trains the dual layout: columns must be label-scaled datapoints \
+                         (q_j = y_j·x_j) and b must be all-zero, but '{}' has nonzero b — \
+                         load/generate the classification layout (e.g. \
+                         data::synthetic::separable_classes, or libsvm + normalize_labels_pm1 \
+                         folded into the columns)",
+                        self.kind_name(),
+                        ds.name
+                    ))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Objective `f(α) = ½‖v − b‖² + Σ_j φ_j(α_j)` from an already-
+    /// maintained shared vector `v = Aα` — O(m + n), the per-round
+    /// trajectory number. For [`LossKind::Squared`] this is bit-identical
+    /// to the pre-problem `Dataset::objective_given_v`.
+    pub fn primal_given_v(&self, v: &[f64], alpha: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(v.len(), b.len());
+        let mut loss = 0.0;
+        for (vi, bi) in v.iter().zip(b.iter()) {
+            let r = vi - bi;
+            loss += r * r;
+        }
+        0.5 * loss + self.loss_impl().phi_sum(&self.reg, alpha)
+    }
+
+    /// Objective via the O(nnz) matvec (no maintained v at hand).
+    pub fn primal(&self, ds: &Dataset, alpha: &[f64]) -> f64 {
+        let v = ds.a.matvec(alpha);
+        self.primal_given_v(&v, alpha, &ds.b)
+    }
+
+    /// Duality-gap certificate (module docs; DESIGN.md §9):
+    /// `gap(α) = f(α) + g*(u) + Σ_j φ_j*(−(Aᵀu)_j)` with `u = v − b`, and
+    /// for pure lasso (η = 0) u additionally scaled into the dual-feasible
+    /// ball `‖Aᵀu‖∞ ≤ λn`. Nonnegative for every α, zero exactly at the
+    /// optimum, and an upper bound on `f(α) − f*` — the oracle-free
+    /// stopping certificate. O(nnz + m + n) per evaluation.
+    pub fn duality_gap(&self, ds: &Dataset, v: &[f64], alpha: &[f64]) -> f64 {
+        let f = self.primal_given_v(v, alpha, &ds.b);
+        self.duality_gap_given_primal(ds, v, alpha, f)
+    }
+
+    /// [`duality_gap`](Problem::duality_gap) with the primal value `f(α)`
+    /// already in hand — the session loop evaluates the objective every
+    /// round anyway, so the certificate should not recompute it.
+    pub fn duality_gap_given_primal(&self, ds: &Dataset, v: &[f64], alpha: &[f64], f: f64) -> f64 {
+        let b = &ds.b;
+        debug_assert_eq!(v.len(), b.len());
+        let mut u: Vec<f64> = v.iter().zip(b.iter()).map(|(&vi, &bi)| vi - bi).collect();
+        let mut at_u = ds.a.matvec_t(&u);
+        if self.loss == LossKind::Squared && self.reg.eta == 0.0 {
+            // Lasso: φ* is the indicator of |s| ≤ λn; the standard residual
+            // rescaling keeps the certificate finite and tight.
+            let inf = at_u.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+            if inf > self.reg.lam_n {
+                let s = self.reg.lam_n / inf;
+                for x in u.iter_mut() {
+                    *x *= s;
+                }
+                for x in at_u.iter_mut() {
+                    *x *= s;
+                }
+            }
+        }
+        let gstar = 0.5 * linalg::nrm2_sq(&u) + linalg::dot(b, &u);
+        let l = self.loss_impl();
+        let conj: f64 = at_u.iter().map(|&t| l.phi_conj_neg(&self.reg, t)).sum();
+        f + gstar + conj
+    }
+
+    /// Checkpoint-envelope encoding (versioned by the checkpoint format).
+    pub fn to_json(&self) -> Json {
+        let kind = match self.loss {
+            LossKind::Squared => "squared",
+            LossKind::Hinge => "hinge",
+            LossKind::Logistic => "logistic",
+        };
+        let mut j = Json::obj();
+        j.set("loss", kind)
+            .set("lam_n", self.reg.lam_n)
+            .set("eta", self.reg.eta);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Problem, String> {
+        let loss = match j.get("loss").and_then(|v| v.as_str()) {
+            Some("squared") => LossKind::Squared,
+            Some("hinge") => LossKind::Hinge,
+            Some("logistic") => LossKind::Logistic,
+            Some(other) => return Err(format!("unknown problem loss '{}'", other)),
+            None => return Err("missing problem loss".into()),
+        };
+        let num = |k: &str| -> Result<f64, String> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or(format!("missing problem {}", k))
+        };
+        Ok(Problem {
+            loss,
+            reg: Regularizer {
+                lam_n: num("lam_n")?,
+                eta: num("eta")?,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{dense_gaussian, separable_classes, webspam_like, SyntheticSpec};
+
+    #[test]
+    fn constructors_and_names() {
+        assert_eq!(Problem::ridge(2.0).kind_name(), "ridge");
+        assert_eq!(Problem::lasso(2.0).kind_name(), "lasso");
+        assert_eq!(Problem::elastic(2.0, 0.5).kind_name(), "elastic");
+        assert_eq!(Problem::svm(2.0).kind_name(), "svm");
+        assert_eq!(Problem::logistic(2.0).kind_name(), "logistic");
+        assert_eq!(Problem::svm(2.0).reg.box_c(), 0.5);
+        assert!(Problem::ridge(1.0).label().contains("ridge"));
+    }
+
+    #[test]
+    fn parse_covers_cli_specs() {
+        assert_eq!(Problem::parse("ridge", 2.0).unwrap(), Problem::ridge(2.0));
+        assert_eq!(Problem::parse("lasso", 2.0).unwrap(), Problem::lasso(2.0));
+        assert_eq!(
+            Problem::parse("elastic:0.3", 2.0).unwrap(),
+            Problem::elastic(2.0, 0.3)
+        );
+        assert_eq!(Problem::parse("SVM", 2.0).unwrap(), Problem::svm(2.0));
+        assert_eq!(
+            Problem::parse("logistic", 2.0).unwrap(),
+            Problem::logistic(2.0)
+        );
+        assert!(Problem::parse("elastic", 2.0).is_err());
+        assert!(Problem::parse("elastic:x", 2.0).is_err());
+        assert!(Problem::parse("flink", 2.0).is_err());
+    }
+
+    #[test]
+    fn validation() {
+        assert!(Problem::ridge(1.0).validate().is_ok());
+        assert!(Problem::ridge(0.0).validate().is_err());
+        assert!(Problem::elastic(1.0, 1.5).validate().is_err());
+        // η is inert for the dual losses.
+        let mut p = Problem::svm(1.0);
+        p.reg.eta = 7.0;
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn squared_primal_matches_hand_computation() {
+        // Same fixture as the (deprecated) Dataset::objective test.
+        let ds = crate::data::Dataset {
+            a: crate::data::CscMatrix::from_triplets(
+                3,
+                3,
+                &[(0, 0, 1.0), (2, 0, 4.0), (1, 1, 3.0), (0, 2, 2.0), (2, 2, 5.0)],
+            ),
+            b: vec![1.0, 2.0, 3.0],
+            name: "tiny".into(),
+        };
+        let alpha = vec![1.0, 1.0, 1.0];
+        assert!((Problem::elastic(2.0, 1.0).primal(&ds, &alpha) - 23.5).abs() < 1e-12);
+        assert!((Problem::elastic(2.0, 0.0).primal(&ds, &alpha) - 26.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hinge_step_is_the_clipped_sdca_update() {
+        let p = Problem::svm(2.0); // C = 0.5
+        let h = HingeDual;
+        // Interior: a = aj + (1 − cj_r)/(σ·csq)
+        let a = h.step(&p.reg, 1.0, 0.1, 2.0, 0.4).unwrap();
+        assert!((a - (0.1 + 0.6 / 2.0)).abs() < 1e-15);
+        // Clipped at both ends of [0, C].
+        assert_eq!(h.step(&p.reg, 1.0, 0.0, 1.0, 10.0).unwrap(), 0.0);
+        assert_eq!(h.step(&p.reg, 1.0, 0.0, 1.0, -10.0).unwrap(), 0.5);
+        // Degenerate column is skipped.
+        assert!(h.step(&p.reg, 1.0, 0.0, 0.0, 0.0).is_none());
+    }
+
+    #[test]
+    fn logistic_step_solves_the_scalar_stationarity_condition() {
+        let p = Problem::logistic(1.0); // C = 1
+        let l = LogisticDual;
+        let (sigma, aj, csq, cj_r) = (2.0, 0.3, 1.5, -0.7);
+        let a = l.step(&p.reg, sigma, aj, csq, cj_r).unwrap();
+        let c = p.reg.box_c();
+        assert!(a > 0.0 && a < c);
+        let g = sigma * csq * (a - aj) + cj_r + (a / (c - a)).ln();
+        assert!(g.abs() < 1e-9, "stationarity residual {}", g);
+        // Deterministic.
+        assert_eq!(
+            a.to_bits(),
+            l.step(&p.reg, sigma, aj, csq, cj_r).unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn gap_is_positive_away_from_optimum_for_every_family() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let alpha = vec![0.05; ds.n()];
+        let v = ds.shared_vector(&alpha);
+        for p in [
+            Problem::ridge(3.0),
+            Problem::lasso(3.0),
+            Problem::elastic(3.0, 0.4),
+            Problem::svm(1.0),
+        ] {
+            let gap = p.duality_gap(&ds, &v, &alpha);
+            assert!(gap > 0.0, "{}: gap {}", p.kind_name(), gap);
+        }
+        // Logistic needs α strictly inside (0, C).
+        let (cds, _) = separable_classes(16, 48, 0.3, 3);
+        let p = Problem::logistic(1.0);
+        let a = vec![0.25 * p.reg.box_c(); cds.n()];
+        let v = cds.shared_vector(&a);
+        assert!(p.duality_gap(&cds, &v, &a) > 0.0);
+    }
+
+    #[test]
+    fn ridge_gap_upper_bounds_suboptimality() {
+        let ds = dense_gaussian(24, 10, 5);
+        let lam = 0.8;
+        let p = Problem::ridge(lam);
+        let (_, fstar) = crate::solver::cg::ridge_optimum(&ds, lam, 1e-12, 10_000);
+        for seed in 0..5u64 {
+            let mut rng = crate::linalg::Xorshift128::new(seed + 1);
+            let alpha: Vec<f64> = (0..ds.n()).map(|_| 0.3 * rng.next_gaussian()).collect();
+            let v = ds.shared_vector(&alpha);
+            let f = p.primal_given_v(&v, &alpha, &ds.b);
+            let gap = p.duality_gap(&ds, &v, &alpha);
+            assert!(
+                gap >= f - fstar - 1e-9 * (1.0 + fstar.abs()),
+                "gap {} < subopt {}",
+                gap,
+                f - fstar
+            );
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for p in [
+            Problem::ridge(2.5),
+            Problem::elastic(1.0, 0.25),
+            Problem::svm(0.5),
+            Problem::logistic(4.0),
+        ] {
+            assert_eq!(Problem::from_json(&p.to_json()).unwrap(), p);
+        }
+        assert!(Problem::from_json(&Json::obj()).is_err());
+    }
+}

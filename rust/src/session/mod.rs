@@ -9,7 +9,12 @@
 //!   thread and parameter-server engines — through one constructor path
 //!   that applies every [`EngineOptions`] field identically;
 //! * a **stopping policy** ([`StopPolicy`]): train to a target
-//!   suboptimality, or run a fixed number of rounds as a pure timing run;
+//!   suboptimality, to a duality-gap certificate (oracle-free — what
+//!   SVM/logistic sessions use), or run a fixed number of rounds as a
+//!   pure timing run;
+//! * a **[`Problem`]** selector ([`SessionBuilder::problem`]): ridge,
+//!   lasso, elastic net, linear SVM or logistic regression through the
+//!   same loop on every substrate;
 //! * a pluggable **[`HPolicy`]** ([`policy::Fixed`], [`policy::Adaptive`])
 //!   deciding the local-steps knob every round;
 //! * a streaming **[`RoundObserver`]** fan-out ([`observer::CsvTrace`],
@@ -47,6 +52,7 @@ use crate::data::Dataset;
 use crate::framework::{build_any, DistEngine, Engine, EngineOptions};
 use crate::linalg;
 use crate::metrics::{RoundLog, TrainReport};
+use crate::problem::Problem;
 
 /// When a session stops driving rounds.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -54,6 +60,13 @@ pub enum StopPolicy {
     /// Stop once suboptimality ≤ `subopt` (bounded by `cfg.max_rounds`).
     /// Requires an oracle f* — the builder computes one if none is given.
     ToTarget { subopt: f64 },
+    /// Stop once the problem's duality-gap certificate, normalized as
+    /// `gap / max(1, |f|)`, falls to `gap` (bounded by `cfg.max_rounds`).
+    /// Needs NO oracle: the certificate comes from the problem's Fenchel
+    /// conjugate (DESIGN.md §9), so non-quadratic problems (SVM, logistic)
+    /// stop without a CG solve. Costs one O(nnz) `Aᵀu` per evaluation
+    /// (`cfg.eval_every` cadence).
+    ToGap { gap: f64 },
     /// Run exactly `n` rounds — the Figure 3/4 timing methodology. No
     /// early stop; without an explicit oracle the objective is never
     /// evaluated and the report's `final_*` fields are `None`, not fake
@@ -101,12 +114,14 @@ pub struct SessionBuilder<'a> {
     engine: Engine,
     attached: Option<&'a mut dyn DistEngine>,
     cfg: Option<TrainConfig>,
+    problem: Option<Problem>,
     opts: Option<EngineOptions>,
     stop: Option<StopPolicy>,
     h_policy: Box<dyn HPolicy>,
     observers: Vec<Box<dyn RoundObserver>>,
     oracle: OracleMode,
     resume: Option<Checkpoint>,
+    track_gap: bool,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -130,6 +145,34 @@ impl<'a> SessionBuilder<'a> {
     /// Training configuration (default: `TrainConfig::default_for(ds)`).
     pub fn config(mut self, cfg: TrainConfig) -> Self {
         self.cfg = Some(cfg);
+        self
+    }
+
+    /// Train a specific [`Problem`] (ridge/lasso/elastic, SVM, logistic),
+    /// overriding whatever the config carries (registry-built engines
+    /// only — an attached engine was already built around a problem) —
+    /// the one-liner for opening a new workload on any engine:
+    ///
+    /// ```no_run
+    /// # use sparkbench::data::synthetic::separable_classes;
+    /// # use sparkbench::problem::Problem;
+    /// # use sparkbench::session::{Session, StopPolicy};
+    /// # let (ds, _labels) = separable_classes(32, 128, 0.4, 1);
+    /// let report = Session::builder(&ds)
+    ///     .problem(Problem::svm(1.0))
+    ///     .stop(StopPolicy::ToGap { gap: 1e-4 })
+    ///     .train();
+    /// ```
+    pub fn problem(mut self, p: Problem) -> Self {
+        self.problem = Some(p);
+        self
+    }
+
+    /// Evaluate and log the duality-gap certificate every `eval_every`
+    /// rounds even when the stop policy does not need it (the trace CSV's
+    /// `gap` column). Implied by [`StopPolicy::ToGap`].
+    pub fn track_gap(mut self) -> Self {
+        self.track_gap = true;
         self
     }
 
@@ -157,6 +200,12 @@ impl<'a> SessionBuilder<'a> {
     /// Sugar for `stop(StopPolicy::ToTarget { subopt })`.
     pub fn target(self, subopt: f64) -> Self {
         self.stop(StopPolicy::ToTarget { subopt })
+    }
+
+    /// Sugar for `stop(StopPolicy::ToGap { gap })` — certificate-based
+    /// stopping, no oracle needed.
+    pub fn target_gap(self, gap: f64) -> Self {
+        self.stop(StopPolicy::ToGap { gap })
     }
 
     /// H policy (default: [`policy::Fixed`]).
@@ -206,31 +255,50 @@ impl<'a> SessionBuilder<'a> {
 
     /// Validate and assemble the session (computes the oracle when needed).
     pub fn build(self) -> Result<Session<'a>, String> {
-        let cfg = self
+        let mut cfg = self
             .cfg
             .unwrap_or_else(|| TrainConfig::default_for(self.ds));
+        if let Some(p) = self.problem {
+            cfg.problem = p;
+        }
         cfg.validate()?;
         let stop = self.stop.unwrap_or(StopPolicy::ToTarget {
             subopt: cfg.target_subopt,
         });
+        // Cheap misuse checks BEFORE the (potentially expensive) auto
+        // oracle below — an invalid build must not burn a CG solve first.
+        // Builder-misuse errors come first so e.g. `.attach(..).problem(..)`
+        // reports the real mistake, not a downstream dataset complaint.
+        if self.attached.is_some() && self.opts.is_some() {
+            return Err(
+                ".options(...) cannot apply to an attached engine — it is already \
+                 built; configure it at construction or select via .engine(...)"
+                    .into(),
+            );
+        }
+        if self.attached.is_some() && self.problem.is_some() {
+            return Err(
+                ".problem(...) cannot apply to an attached engine — its workers were \
+                 built around a problem already; set `cfg.problem` before constructing \
+                 the engine, or select via .engine(...)"
+                    .into(),
+            );
+        }
+        // A dual-loss problem on a regression-layout dataset would quietly
+        // optimize something meaningless — refuse before any oracle work.
+        cfg.problem.check_dataset(self.ds)?;
         let fstar = match self.oracle {
             OracleMode::Known(f) => Some(f),
             OracleMode::Off => None,
             OracleMode::Auto => match stop {
                 StopPolicy::ToTarget { .. } => Some(oracle_objective(self.ds, &cfg)),
-                StopPolicy::FixedRounds { .. } => None,
+                // The gap certificate IS the stopping signal — no oracle.
+                StopPolicy::ToGap { .. } | StopPolicy::FixedRounds { .. } => None,
             },
         };
         if fstar.is_none() && matches!(stop, StopPolicy::ToTarget { .. }) {
             return Err(
                 "StopPolicy::ToTarget needs an oracle (drop .no_oracle() or pass .oracle(fstar))"
-                    .into(),
-            );
-        }
-        if self.attached.is_some() && self.opts.is_some() {
-            return Err(
-                ".options(...) cannot apply to an attached engine — it is already \
-                 built; configure it at construction or select via .engine(...)"
                     .into(),
             );
         }
@@ -296,6 +364,7 @@ impl<'a> SessionBuilder<'a> {
             start_round,
             v,
             clock_offset,
+            track_gap: self.track_gap,
         })
     }
 
@@ -317,6 +386,7 @@ pub struct Session<'a> {
     start_round: usize,
     v: Vec<f64>,
     clock_offset: f64,
+    track_gap: bool,
 }
 
 impl<'a> Session<'a> {
@@ -328,12 +398,14 @@ impl<'a> Session<'a> {
             engine: Engine::Impl(crate::config::Impl::Mpi),
             attached: None,
             cfg: None,
+            problem: None,
             opts: None,
             stop: None,
             h_policy: Box::new(policy::Fixed),
             observers: Vec::new(),
             oracle: OracleMode::Auto,
             resume: None,
+            track_gap: false,
         }
     }
 
@@ -352,6 +424,7 @@ impl<'a> Session<'a> {
             start_round,
             mut v,
             clock_offset,
+            track_gap,
         } = self;
 
         let n_locals = engine.get().n_locals();
@@ -361,18 +434,22 @@ impl<'a> Session<'a> {
 
         let budget = match stop {
             StopPolicy::FixedRounds { n } => n,
-            StopPolicy::ToTarget { .. } => cfg.max_rounds,
+            StopPolicy::ToTarget { .. } | StopPolicy::ToGap { .. } => cfg.max_rounds,
         };
         let end_round = start_round + budget;
 
-        // Objective evaluation runs iff an oracle exists; `ToTarget`
-        // guarantees one (builder invariant), `FixedRounds` without one is
-        // a pure timing run.
-        let eval = fstar.is_some();
+        // Objective evaluation runs iff an oracle exists (`ToTarget`
+        // guarantees one — builder invariant) or the gap certificate is
+        // wanted (`ToGap` stopping / `.track_gap()`); `FixedRounds`
+        // without either is a pure timing run.
+        let want_gap = track_gap || matches!(stop, StopPolicy::ToGap { .. });
+        let eval = fstar.is_some() || want_gap;
         let mut final_obj = None;
         let mut final_sub = None;
         if eval {
-            let f = ds.objective_given_v(&v, &engine.get().alpha_global(), cfg.lam_n, cfg.eta);
+            let f = cfg
+                .problem
+                .primal_given_v(&v, &engine.get().alpha_global(), &ds.b);
             final_obj = Some(f);
             final_sub = fstar.map(|fs| suboptimality(f, fs));
         }
@@ -392,16 +469,25 @@ impl<'a> Session<'a> {
             let is_last = round + 1 == end_round;
             // Absolute round index, so a resumed run evaluates at the same
             // rounds the uninterrupted run would have.
-            let (objective, sub) = if eval && (round % cfg.eval_every == 0 || is_last) {
+            let (objective, sub, gap) = if eval && (round % cfg.eval_every == 0 || is_last) {
                 // O(m+n) evaluation from the tracked shared vector (§Perf);
                 // v is exact by construction (pure float additions of Δv).
-                let f = ds.objective_given_v(&v, &engine.get().alpha_global(), cfg.lam_n, cfg.eta);
+                let alpha = engine.get().alpha_global();
+                let f = cfg.problem.primal_given_v(&v, &alpha, &ds.b);
                 final_obj = Some(f);
                 let s = fstar.map(|fs| suboptimality(f, fs));
                 final_sub = s;
-                (Some(f), s)
+                // The certificate costs an O(nnz) Aᵀu on top — computed
+                // only when something consumes it, reusing the f above.
+                let g = if want_gap {
+                    let gap = cfg.problem.duality_gap_given_primal(ds, &v, &alpha, f);
+                    Some(gap / f.abs().max(1.0))
+                } else {
+                    None
+                };
+                (Some(f), s, g)
             } else {
-                (None, None)
+                (None, None, None)
             };
 
             let log = RoundLog {
@@ -409,6 +495,7 @@ impl<'a> Session<'a> {
                 time: engine.get().clock() + clock_offset,
                 objective,
                 suboptimality: sub,
+                gap,
                 timing: timing.clone(),
                 h,
             };
@@ -422,15 +509,28 @@ impl<'a> Session<'a> {
             }
             logs.push(log);
 
-            if let StopPolicy::ToTarget { subopt } = stop {
-                if let Some(s) = sub {
-                    if s <= subopt {
-                        if time_to_target.is_none() {
-                            time_to_target = Some(engine.get().clock() + clock_offset);
+            match stop {
+                StopPolicy::ToTarget { subopt } => {
+                    if let Some(s) = sub {
+                        if s <= subopt {
+                            if time_to_target.is_none() {
+                                time_to_target = Some(engine.get().clock() + clock_offset);
+                            }
+                            break;
                         }
-                        break;
                     }
                 }
+                StopPolicy::ToGap { gap: threshold } => {
+                    if let Some(g) = gap {
+                        if g <= threshold {
+                            if time_to_target.is_none() {
+                                time_to_target = Some(engine.get().clock() + clock_offset);
+                            }
+                            break;
+                        }
+                    }
+                }
+                StopPolicy::FixedRounds { .. } => {}
             }
             h = h_policy.next(&timing, h);
         }
@@ -526,6 +626,127 @@ mod tests {
         assert!(report.final_objective.is_some());
         assert!(report.final_suboptimality.is_some());
         assert_eq!(report.logs.iter().filter(|l| l.objective.is_some()).count(), 5);
+    }
+
+    #[test]
+    fn to_gap_stops_without_an_oracle_and_logs_the_gap_column() {
+        // Certificate-based stopping must not trigger a CG solve: fstar is
+        // absent, suboptimality is absent, yet the session stops early and
+        // every evaluated round carries a gap value.
+        let (ds, mut cfg) = setup();
+        cfg.max_rounds = 6000; // gap 1e-4 is a tighter bar than subopt 1e-3
+        let report = Session::builder(&ds)
+            .engine(Impl::Mpi)
+            .config(cfg)
+            .stop(StopPolicy::ToGap { gap: 1e-4 })
+            .build()
+            .unwrap()
+            .run();
+        assert!(
+            report.time_to_target.is_some(),
+            "gap target missed: {:?}",
+            report.logs.last().and_then(|l| l.gap)
+        );
+        assert!(report.final_suboptimality.is_none());
+        assert!(report.final_objective.is_some());
+        assert!(report.logs.iter().all(|l| l.gap.is_some()));
+        let last = report.logs.last().unwrap().gap.unwrap();
+        assert!(last <= 1e-4, "stopped at gap {}", last);
+        // Monotone-ish certificate: ends far below where it starts.
+        let first = report.logs.first().unwrap().gap.unwrap();
+        assert!(first > last);
+    }
+
+    #[test]
+    fn track_gap_adds_the_column_to_oracle_runs() {
+        let (ds, mut cfg) = setup();
+        cfg.max_rounds = 6;
+        cfg.target_subopt = 0.0;
+        let fstar = oracle_objective(&ds, &cfg);
+        let report = Session::builder(&ds)
+            .engine(Impl::Mpi)
+            .config(cfg)
+            .oracle(fstar)
+            .track_gap()
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.rounds, 6);
+        for l in &report.logs {
+            let (g, f) = (l.gap.unwrap(), l.objective.unwrap());
+            assert!(g >= 0.0 && g.is_finite());
+            // De-normalized, the certificate upper-bounds the true
+            // suboptimality f − f* at every round (weak duality).
+            let gap_abs = g * f.abs().max(1.0);
+            assert!(
+                gap_abs + 1e-9 * (1.0 + f.abs()) >= f - fstar,
+                "gap {} < f - f* = {}",
+                gap_abs,
+                f - fstar
+            );
+        }
+    }
+
+    #[test]
+    fn builder_problem_overrides_the_config() {
+        use crate::data::synthetic::separable_classes;
+        use crate::problem::Problem;
+        let (ds, _) = separable_classes(24, 96, 0.4, 5);
+        let mut cfg = TrainConfig::default_for(&ds); // ridge by default
+        cfg.workers = 3;
+        cfg.max_rounds = 4000;
+        let report = Session::builder(&ds)
+            .engine(Impl::Mpi)
+            .config(cfg)
+            .problem(Problem::svm(1.0))
+            .stop(StopPolicy::ToGap { gap: 1e-3 })
+            .build()
+            .unwrap()
+            .run();
+        assert!(
+            report.time_to_target.is_some(),
+            "svm session missed the gap target: {:?}",
+            report.logs.last().and_then(|l| l.gap)
+        );
+    }
+
+    #[test]
+    fn dual_loss_on_a_regression_layout_dataset_is_rejected() {
+        // SVM/logistic require the dual layout (label-scaled columns,
+        // b = 0); a regression corpus must be refused at build time, not
+        // silently "trained" against its nonzero targets — and refused
+        // BEFORE any oracle work.
+        let (ds, cfg) = setup(); // webspam-like: b != 0
+        for p in [
+            crate::problem::Problem::svm(1.0),
+            crate::problem::Problem::logistic(1.0),
+        ] {
+            let err = Session::builder(&ds)
+                .engine(Impl::Mpi)
+                .config(cfg.clone())
+                .problem(p)
+                .build()
+                .err()
+                .expect("dual loss on regression layout must be rejected");
+            assert!(err.contains("dual layout"), "{}", err);
+        }
+    }
+
+    #[test]
+    fn problem_override_on_attached_engine_is_rejected() {
+        // The engine's workers were built around a problem; silently
+        // evaluating a different one would split solver and session.
+        let (ds, cfg) = setup();
+        let mut eng = crate::framework::build_engine(Impl::Mpi, &ds, &cfg);
+        let err = Session::builder(&ds)
+            .config(cfg)
+            .attach(eng.as_mut())
+            .problem(crate::problem::Problem::lasso(1.0))
+            .fixed_rounds(2)
+            .build()
+            .err()
+            .expect("must reject");
+        assert!(err.contains(".problem("), "{}", err);
     }
 
     #[test]

@@ -98,8 +98,7 @@ impl CheckpointEvery {
             time: ctx.log.time,
             alpha: ctx.engine.alpha_global(),
             v: ctx.v.to_vec(),
-            lam_n: ctx.cfg.lam_n,
-            eta: ctx.cfg.eta,
+            problem: ctx.cfg.problem,
             workers: ctx.engine.num_workers(),
         };
         match ckpt.save(&self.path) {

@@ -25,6 +25,7 @@ use std::rc::Rc;
 use super::{LocalSolver, SolveRequest, SolveResult};
 use crate::data::{FeatureRecord, WorkerData};
 use crate::linalg::{soft_threshold, Xorshift128};
+use crate::problem::{HingeDual, Loss, LogisticDual, LossKind};
 
 // ---------------------------------------------------------------------------
 // Scala-like (JVM / Breeze) solver
@@ -89,18 +90,16 @@ impl LocalSolver for ScalaLikeScd {
         let mut alpha_c = alpha.to_vec();
         let mut rng = Xorshift128::new(req.seed);
         let sigma = req.sigma;
-        let lam_eta = req.lam_n * req.eta;
-        let tau_num = req.lam_n * (1.0 - req.eta);
+        let reg = req.problem.reg;
+        let kind = req.problem.loss;
+        let lam_eta = reg.lam_n * reg.eta;
+        let tau_num = reg.lam_n * (1.0 - reg.eta);
 
         let mut steps = 0usize;
         if nk > 0 {
             for _ in 0..req.h {
                 let j = rng.next_usize(nk);
                 let rec = &records[j];
-                let denom = sigma * rec.col_sq + lam_eta;
-                if denom <= 0.0 {
-                    continue;
-                }
                 // Breeze-style: materialize (index, value) pairs, then fold —
                 // a fresh temporary per step, iterator indirection, bounds
                 // checks on every access.
@@ -116,8 +115,32 @@ impl LocalSolver for ScalaLikeScd {
                     pairs.iter().map(|&(i, v)| Box::new(v * r[i])).collect();
                 let cj_r: f64 = products.iter().fold(0.0, |acc, p| acc + **p);
                 let aj = alpha_c[j];
-                let atilde = (sigma * rec.col_sq * aj - cj_r) / denom;
-                let anew = soft_threshold(atilde, tau_num / denom);
+                // Identical math per loss family as the native solver: the
+                // squared arm keeps the original inline expressions; the
+                // dual arms share the scalar step functions, so managed
+                // and native trajectories agree to the bit.
+                let anew = match kind {
+                    LossKind::Squared => {
+                        let denom = sigma * rec.col_sq + lam_eta;
+                        if denom <= 0.0 {
+                            continue;
+                        }
+                        let atilde = (sigma * rec.col_sq * aj - cj_r) / denom;
+                        soft_threshold(atilde, tau_num / denom)
+                    }
+                    LossKind::Hinge => {
+                        match HingeDual.step(&reg, sigma, aj, rec.col_sq, cj_r) {
+                            Some(a) => a,
+                            None => continue,
+                        }
+                    }
+                    LossKind::Logistic => {
+                        match LogisticDual.step(&reg, sigma, aj, rec.col_sq, cj_r) {
+                            Some(a) => a,
+                            None => continue,
+                        }
+                    }
+                };
                 let delta = anew - aj;
                 if delta != 0.0 {
                     for &(i, v) in pairs.iter() {
@@ -237,9 +260,11 @@ impl LocalSolver for PythonLikeScd {
         let mut alpha_c: Vec<PyObj> = alpha.iter().map(|&a| PyObj::float(a)).collect();
 
         let mut rng = Xorshift128::new(req.seed);
+        let reg = req.problem.reg;
+        let kind = req.problem.loss;
         let sigma = PyObj::float(req.sigma);
-        let lam_eta = PyObj::float(req.lam_n * req.eta);
-        let tau_num = PyObj::float(req.lam_n * (1.0 - req.eta));
+        let lam_eta = PyObj::float(reg.lam_n * reg.eta);
+        let tau_num = PyObj::float(reg.lam_n * (1.0 - reg.eta));
         let zero = PyObj::float(0.0);
 
         let mut steps = 0usize;
@@ -247,10 +272,6 @@ impl LocalSolver for PythonLikeScd {
             for _ in 0..req.h {
                 let j = rng.next_usize(nk);
                 let csq = PyObj::float(data.col_sq[j]);
-                let denom = sigma.binop(&csq, b'*').binop(&lam_eta, b'+');
-                if denom.as_f64() <= 0.0 {
-                    continue;
-                }
                 let (ri, vs) = data.flat.col(j);
                 // dot product, one boxed multiply-add per nonzero
                 let mut acc = zero.clone();
@@ -259,10 +280,46 @@ impl LocalSolver for PythonLikeScd {
                     acc = acc.binop(&term, b'+');
                 }
                 let aj = alpha_c[j].clone();
-                let num = sigma.binop(&csq, b'*').binop(&aj, b'*').binop(&acc, b'-');
-                let atilde = num.binop(&denom, b'/');
-                let tau = tau_num.binop(&denom, b'/');
-                let anew = PyObj::float(soft_threshold(atilde.as_f64(), tau.as_f64()));
+                // Squared loss runs fully on the boxed object model (the
+                // original path, bit for bit); the dual losses box the dot
+                // and share the scalar step functions with the native
+                // solver, keeping trajectories identical across runtimes.
+                let anew = match kind {
+                    LossKind::Squared => {
+                        let denom = sigma.binop(&csq, b'*').binop(&lam_eta, b'+');
+                        if denom.as_f64() <= 0.0 {
+                            continue;
+                        }
+                        let num = sigma.binop(&csq, b'*').binop(&aj, b'*').binop(&acc, b'-');
+                        let atilde = num.binop(&denom, b'/');
+                        let tau = tau_num.binop(&denom, b'/');
+                        PyObj::float(soft_threshold(atilde.as_f64(), tau.as_f64()))
+                    }
+                    LossKind::Hinge => {
+                        match HingeDual.step(
+                            &reg,
+                            req.sigma,
+                            aj.as_f64(),
+                            data.col_sq[j],
+                            acc.as_f64(),
+                        ) {
+                            Some(a) => PyObj::float(a),
+                            None => continue,
+                        }
+                    }
+                    LossKind::Logistic => {
+                        match LogisticDual.step(
+                            &reg,
+                            req.sigma,
+                            aj.as_f64(),
+                            data.col_sq[j],
+                            acc.as_f64(),
+                        ) {
+                            Some(a) => PyObj::float(a),
+                            None => continue,
+                        }
+                    }
+                };
                 let delta = anew.binop(&aj, b'-');
                 if delta.as_f64() != 0.0 {
                     let scale = sigma.binop(&delta, b'*');
@@ -319,12 +376,12 @@ pub fn calibrate(seed: u64) -> Calibration {
     let wd = WorkerData::from_columns(&ds.a, &cols);
     let alpha = vec![0.0; wd.n_local()];
     let v = vec![0.0; ds.m()];
+    let problem = crate::problem::Problem::ridge(1.0);
     let req = SolveRequest {
         v: &v,
         b: &ds.b,
         h: 2 * wd.n_local(),
-        lam_n: 1.0,
-        eta: 1.0,
+        problem: &problem,
         sigma: 1.0,
         seed,
     };
@@ -373,12 +430,12 @@ mod tests {
     #[test]
     fn managed_solvers_match_native_exactly() {
         let (ds, wd, alpha, v) = setup();
+        let problem = crate::problem::Problem::elastic(2.0, 0.8);
         let req = SolveRequest {
             v: &v,
             b: &ds.b,
             h: 200,
-            lam_n: 2.0,
-            eta: 0.8,
+            problem: &problem,
             sigma: 4.0,
             seed: 5,
         };
@@ -396,6 +453,40 @@ mod tests {
         }
         assert_eq!(rn.steps, rs.steps);
         assert_eq!(rn.steps, rp.steps);
+    }
+
+    #[test]
+    fn managed_solvers_match_native_on_the_dual_losses() {
+        // The problem layer must not split the runtimes: hinge and
+        // logistic updates agree across all three solver implementations.
+        let (ds, wd, alpha, v) = setup();
+        for problem in [
+            crate::problem::Problem::svm(1.0),
+            crate::problem::Problem::logistic(1.0),
+        ] {
+            let req = SolveRequest {
+                v: &v,
+                b: &ds.b,
+                h: 120,
+                problem: &problem,
+                sigma: 2.0,
+                seed: 9,
+            };
+            let rn = NativeScd::new().solve(&wd, &alpha, &req);
+            let rs = ScalaLikeScd::new().solve(&wd, &alpha, &req);
+            let rp = PythonLikeScd::new().solve(&wd, &alpha, &req);
+            for ((n, s), p) in rn
+                .delta_alpha
+                .iter()
+                .zip(rs.delta_alpha.iter())
+                .zip(rp.delta_alpha.iter())
+            {
+                assert!((n - s).abs() < 1e-12, "{}: scala {} vs {}", problem.kind_name(), n, s);
+                assert!((n - p).abs() < 1e-12, "{}: python {} vs {}", problem.kind_name(), n, p);
+            }
+            assert_eq!(rn.steps, rs.steps, "{}", problem.kind_name());
+            assert_eq!(rn.steps, rp.steps, "{}", problem.kind_name());
+        }
     }
 
     #[test]

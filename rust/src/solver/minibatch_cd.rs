@@ -11,7 +11,8 @@
 
 use super::{LocalSolver, SolveRequest, SolveResult};
 use crate::data::WorkerData;
-use crate::linalg::{self, soft_threshold, Xorshift128};
+use crate::linalg::{self, Xorshift128};
+use crate::problem::{HingeDual, Loss, LogisticDual, LossKind, SquaredLoss};
 
 /// Mini-batch SCD without immediate local updates.
 #[derive(Debug, Default)]
@@ -40,8 +41,17 @@ impl LocalSolver for MiniBatchCd {
 
         let mut rng = Xorshift128::new(req.seed);
         let sigma = req.sigma;
-        let lam_eta = req.lam_n * req.eta;
-        let tau_num = req.lam_n * (1.0 - req.eta);
+        let reg = req.problem.reg;
+        // One dispatch per solve, shared scalar step functions with the
+        // hot SCD loop — the frozen-residual ablation covers every loss
+        // family the problem layer ships.
+        let step = |aj: f64, csq: f64, cj_r: f64| -> Option<f64> {
+            match req.problem.loss {
+                LossKind::Squared => SquaredLoss.step(&reg, sigma, aj, csq, cj_r),
+                LossKind::Hinge => HingeDual.step(&reg, sigma, aj, csq, cj_r),
+                LossKind::Logistic => LogisticDual.step(&reg, sigma, aj, csq, cj_r),
+            }
+        };
 
         // H must be scaled down relative to CoCoA: updates against a frozen
         // residual conflict, so we cap the batch at n_local (one update per
@@ -56,15 +66,12 @@ impl LocalSolver for MiniBatchCd {
                     continue; // same-coordinate resample is a no-op here
                 }
                 let csq = data.col_sq[j];
-                let denom = sigma * csq + lam_eta;
-                if denom <= 0.0 {
-                    continue;
-                }
                 let (ri, vs) = data.flat.col(j);
                 let cj_r = linalg::dot_indexed(ri, vs, &self.r);
                 let aj = alpha[j];
-                let atilde = (sigma * csq * aj - cj_r) / denom;
-                let anew = soft_threshold(atilde, tau_num / denom);
+                let Some(anew) = step(aj, csq, cj_r) else {
+                    continue;
+                };
                 delta_alpha[j] = anew - aj;
                 touched[j] = true;
                 steps += 1;
@@ -108,12 +115,12 @@ mod tests {
         let (ds, wd) = setup(1);
         let alpha = vec![0.0; 16];
         let v = vec![0.0; 32];
+        let problem = crate::problem::Problem::ridge(0.5);
         let req = SolveRequest {
             v: &v,
             b: &ds.b,
             h: 16,
-            lam_n: 0.5,
-            eta: 1.0,
+            problem: &problem,
             sigma: 2.0,
             seed: 4,
         };
@@ -129,12 +136,12 @@ mod tests {
         let (ds, wd) = setup(2);
         let alpha = vec![0.0; 16];
         let v = vec![0.0; 32];
+        let problem = crate::problem::Problem::ridge(0.5);
         let req = SolveRequest {
             v: &v,
             b: &ds.b,
             h: 1,
-            lam_n: 0.5,
-            eta: 1.0,
+            problem: &problem,
             sigma: 1.0,
             seed: 7,
         };
@@ -148,18 +155,17 @@ mod tests {
     #[test]
     fn converges_with_damping() {
         let (ds, wd) = setup(3);
-        let lam_n = 0.5;
+        let problem = crate::problem::Problem::ridge(0.5);
         let mut alpha = vec![0.0; 16];
         let mut v = vec![0.0; 32];
         let mut s = MiniBatchCd::new();
-        let f0 = ds.objective(&alpha, lam_n, 1.0);
+        let f0 = problem.primal(&ds, &alpha);
         for round in 0..150 {
             let req = SolveRequest {
                 v: &v,
                 b: &ds.b,
                 h: 16,
-                lam_n,
-                eta: 1.0,
+                problem: &problem,
                 sigma: 4.0, // damped aggregation keeps frozen-residual updates safe
                 seed: round,
             };
@@ -171,7 +177,7 @@ mod tests {
                 *vi += d;
             }
         }
-        let f = ds.objective(&alpha, lam_n, 1.0);
+        let f = problem.primal(&ds, &alpha);
         assert!(f < 0.5 * f0, "{} -> {}", f0, f);
     }
 
@@ -180,6 +186,7 @@ mod tests {
         // The §2.1 ablation: immediate local updates compound within a round.
         let (ds, wd) = setup(5);
         let lam_n = 0.5;
+        let problem = crate::problem::Problem::ridge(lam_n);
         let run = |mut solver: Box<dyn LocalSolver>, sigma: f64| -> f64 {
             let mut alpha = vec![0.0; 16];
             let mut v = vec![0.0; 32];
@@ -188,8 +195,7 @@ mod tests {
                     v: &v,
                     b: &ds.b,
                     h: 16,
-                    lam_n,
-                    eta: 1.0,
+                    problem: &problem,
                     sigma,
                     seed: round,
                 };
@@ -201,7 +207,7 @@ mod tests {
                     *vi += d;
                 }
             }
-            ds.objective(&alpha, lam_n, 1.0)
+            problem.primal(&ds, &alpha)
         };
         let f_cocoa = run(Box::new(NativeScd::new()), 1.0);
         let f_mb = run(Box::new(MiniBatchCd::new()), 4.0);

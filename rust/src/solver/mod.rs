@@ -17,6 +17,7 @@ pub mod scd;
 pub mod sgd;
 
 use crate::data::WorkerData;
+use crate::problem::Problem;
 
 /// Immutable per-round inputs shared by every solver.
 #[derive(Debug, Clone)]
@@ -27,10 +28,10 @@ pub struct SolveRequest<'a> {
     pub b: &'a [f64],
     /// Local steps this round (the paper's H).
     pub h: usize,
-    /// Effective regularizer λ·n.
-    pub lam_n: f64,
-    /// Elastic-net mix η.
-    pub eta: f64,
+    /// The objective being optimized: loss family + regularizer. Solvers
+    /// dispatch their coordinate step on `problem.loss` ONCE per solve, so
+    /// the hot loop stays monomorphic and allocation-free.
+    pub problem: &'a Problem,
     /// CoCoA subproblem parameter σ′.
     pub sigma: f64,
     /// Per-round sampling seed (deterministic experiments).
@@ -129,12 +130,12 @@ mod tests {
         let wd = crate::data::WorkerData::from_columns(&ds.a, &parts.parts[0]);
         let alpha = vec![0.0; wd.n_local()];
         let v = vec![0.0; ds.m()];
+        let problem = Problem::ridge(1.0);
         let req = SolveRequest {
             v: &v,
             b: &ds.b,
             h: 50,
-            lam_n: 1.0,
-            eta: 1.0,
+            problem: &problem,
             sigma: 4.0,
             seed: 3,
         };

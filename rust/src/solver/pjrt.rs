@@ -76,6 +76,13 @@ impl LocalSolver for PjrtScd {
     }
 
     fn solve(&mut self, data: &WorkerData, alpha: &[f64], req: &SolveRequest) -> SolveResult {
+        // The AOT-lowered Pallas kernel bakes in the elastic-net update;
+        // the dual losses have no compiled artifact (yet).
+        assert_eq!(
+            req.problem.loss,
+            crate::problem::LossKind::Squared,
+            "the PJRT artifact only implements the squared-loss (elastic net) kernel"
+        );
         self.ensure_cache(data);
         let man = self.exec.manifest.clone();
         let cached = &self.cache.as_ref().unwrap().1;
@@ -107,8 +114,8 @@ impl LocalSolver for PjrtScd {
                 b: &b_pad,
                 idx: &idx,
                 h: if nk_real > 0 { h as i32 } else { 0 },
-                lam_n: req.lam_n as f32,
-                eta: req.eta as f32,
+                lam_n: req.problem.reg.lam_n as f32,
+                eta: req.problem.reg.eta as f32,
                 sigma: req.sigma as f32,
             })
             .expect("pjrt local_solve execution failed");

@@ -5,7 +5,13 @@
 //! [`crate::linalg::dot_indexed`] + one [`crate::linalg::axpy_indexed`] per
 //! coordinate step, no allocation inside the loop.
 //!
-//! Math (paper Appendix A.2, DESIGN.md §5): for sampled coordinate j
+//! The per-coordinate update comes from the round's
+//! [`Problem`](crate::problem::Problem): the solver matches on the loss
+//! kind ONCE per solve and runs a monomorphized loop per family — squared
+//! loss (the math below; bit-identical to the pre-problem hard-coded
+//! path), the hinge dual's clipped SDCA update, or the logistic dual's
+//! 1-D Newton step (DESIGN.md §9). For squared loss (paper Appendix A.2,
+//! DESIGN.md §5), sampled coordinate j updates as
 //!
 //! ```text
 //! α̃⁺ = (σ‖c_j‖²·α_j − c_jᵀ r) / (σ‖c_j‖² + λnη)
@@ -16,6 +22,7 @@
 use super::{LocalSolver, SolveRequest, SolveResult};
 use crate::data::WorkerData;
 use crate::linalg::{self, Xorshift128};
+use crate::problem::{HingeDual, Loss, LogisticDual, LossKind, SquaredLoss};
 
 /// The compiled native local solver.
 ///
@@ -38,6 +45,44 @@ impl NativeScd {
     pub fn new() -> NativeScd {
         NativeScd::default()
     }
+}
+
+/// The shared SCD loop skeleton: sample a coordinate, dot against the
+/// residual, take the loss family's closed-form/prox step, apply it to the
+/// live residual. Generic over the (inlined, monomorphized) step function
+/// so the trait-routed dispatch costs nothing per step and allocates
+/// nothing (asserted by the counting-allocator tests and the hotpath
+/// bench's problem-dispatch case). A `None` step skips the draw without
+/// counting it — exactly the pre-problem `denom ≤ 0` semantics.
+#[inline]
+pub(crate) fn scd_loop<F: FnMut(f64, f64, f64) -> Option<f64>>(
+    data: &WorkerData,
+    h: usize,
+    sigma: f64,
+    rng: &mut Xorshift128,
+    r: &mut [f64],
+    alpha_buf: &mut [f64],
+    mut step: F,
+) -> usize {
+    let nk = data.n_local();
+    let mut steps = 0usize;
+    for _ in 0..h {
+        let j = rng.next_usize(nk);
+        let csq = data.col_sq[j];
+        let (ri, vs) = data.flat.col(j);
+        let cj_r = linalg::dot_indexed(ri, vs, r);
+        let aj = alpha_buf[j];
+        let Some(anew) = step(aj, csq, cj_r) else {
+            continue;
+        };
+        let delta = anew - aj;
+        if delta != 0.0 {
+            linalg::axpy_indexed(sigma * delta, ri, vs, r);
+            alpha_buf[j] = anew;
+        }
+        steps += 1;
+    }
+    steps
 }
 
 impl LocalSolver for NativeScd {
@@ -70,31 +115,43 @@ impl LocalSolver for NativeScd {
 
         let mut rng = Xorshift128::new(req.seed);
         let sigma = req.sigma;
-        let lam_eta = req.lam_n * req.eta;
-        let tau_num = req.lam_n * (1.0 - req.eta);
+        let reg = req.problem.reg;
 
-        let mut steps = 0usize;
-        if nk > 0 {
-            for _ in 0..req.h {
-                let j = rng.next_usize(nk);
-                let csq = data.col_sq[j];
-                let denom = sigma * csq + lam_eta;
-                if denom <= 0.0 {
-                    continue;
-                }
-                let (ri, vs) = data.flat.col(j);
-                let cj_r = linalg::dot_indexed(ri, vs, &self.r);
-                let aj = self.alpha_buf[j];
-                let atilde = (sigma * csq * aj - cj_r) / denom;
-                let anew = linalg::soft_threshold(atilde, tau_num / denom);
-                let delta = anew - aj;
-                if delta != 0.0 {
-                    linalg::axpy_indexed(sigma * delta, ri, vs, &mut self.r);
-                    self.alpha_buf[j] = anew;
-                }
-                steps += 1;
+        // One dispatch per SOLVE, monomorphized loops per loss family —
+        // the inner loop pays no dynamic call and no allocation.
+        let steps = if nk > 0 {
+            match req.problem.loss {
+                LossKind::Squared => scd_loop(
+                    data,
+                    req.h,
+                    sigma,
+                    &mut rng,
+                    &mut self.r,
+                    &mut self.alpha_buf,
+                    |aj, csq, cj_r| SquaredLoss.step(&reg, sigma, aj, csq, cj_r),
+                ),
+                LossKind::Hinge => scd_loop(
+                    data,
+                    req.h,
+                    sigma,
+                    &mut rng,
+                    &mut self.r,
+                    &mut self.alpha_buf,
+                    |aj, csq, cj_r| HingeDual.step(&reg, sigma, aj, csq, cj_r),
+                ),
+                LossKind::Logistic => scd_loop(
+                    data,
+                    req.h,
+                    sigma,
+                    &mut rng,
+                    &mut self.r,
+                    &mut self.alpha_buf,
+                    |aj, csq, cj_r| LogisticDual.step(&reg, sigma, aj, csq, cj_r),
+                ),
             }
-        }
+        } else {
+            0
+        };
 
         out.delta_alpha.clear();
         out.delta_alpha.extend(
@@ -118,8 +175,9 @@ impl LocalSolver for NativeScd {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::synthetic::dense_gaussian;
+    use crate::data::synthetic::{dense_gaussian, separable_classes};
     use crate::data::WorkerData;
+    use crate::problem::Problem;
     use crate::solver::check_result;
 
     fn single_worker(m: usize, n: usize, seed: u64) -> (crate::data::Dataset, WorkerData) {
@@ -134,12 +192,12 @@ mod tests {
         let (ds, wd) = single_worker(32, 16, 1);
         let alpha = vec![0.0; 16];
         let v = vec![0.0; 32];
+        let problem = Problem::ridge(0.5);
         let req = SolveRequest {
             v: &v,
             b: &ds.b,
             h: 64,
-            lam_n: 0.5,
-            eta: 1.0,
+            problem: &problem,
             sigma: 1.0,
             seed: 2,
         };
@@ -151,18 +209,17 @@ mod tests {
     #[test]
     fn objective_decreases_every_round() {
         let (ds, wd) = single_worker(48, 24, 5);
-        let lam_n = 1.0;
+        let problem = Problem::ridge(1.0);
         let mut alpha = vec![0.0; 24];
         let mut v = vec![0.0; 48];
         let mut solver = NativeScd::new();
-        let mut prev = ds.objective(&alpha, lam_n, 1.0);
+        let mut prev = problem.primal(&ds, &alpha);
         for round in 0..10 {
             let req = SolveRequest {
                 v: &v,
                 b: &ds.b,
                 h: 24,
-                lam_n,
-                eta: 1.0,
+                problem: &problem,
                 sigma: 1.0,
                 seed: round,
             };
@@ -173,7 +230,7 @@ mod tests {
             for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
                 *vi += d;
             }
-            let cur = ds.objective(&alpha, lam_n, 1.0);
+            let cur = problem.primal(&ds, &alpha);
             assert!(cur <= prev + 1e-10, "round {}: {} -> {}", round, prev, cur);
             prev = cur;
         }
@@ -182,7 +239,7 @@ mod tests {
     #[test]
     fn converges_to_cg_ridge_optimum() {
         let (ds, wd) = single_worker(40, 12, 9);
-        let lam_n = 0.8;
+        let problem = Problem::ridge(0.8);
         let mut alpha = vec![0.0; 12];
         let mut v = vec![0.0; 40];
         let mut solver = NativeScd::new();
@@ -191,8 +248,7 @@ mod tests {
                 v: &v,
                 b: &ds.b,
                 h: 12,
-                lam_n,
-                eta: 1.0,
+                problem: &problem,
                 sigma: 1.0,
                 seed: round,
             };
@@ -204,8 +260,8 @@ mod tests {
                 *vi += d;
             }
         }
-        let (opt, fstar) = crate::solver::cg::ridge_optimum(&ds, lam_n, 1e-12, 10_000);
-        let f = ds.objective(&alpha, lam_n, 1.0);
+        let (opt, fstar) = crate::solver::cg::ridge_optimum(&ds, 0.8, 1e-12, 10_000);
+        let f = problem.primal(&ds, &alpha);
         assert!(
             (f - fstar) / fstar.abs().max(1.0) < 1e-6,
             "f {} vs f* {}",
@@ -220,7 +276,7 @@ mod tests {
     #[test]
     fn lasso_produces_sparsity() {
         let (ds, wd) = single_worker(32, 16, 11);
-        let lam_n = 60.0;
+        let problem = Problem::lasso(60.0);
         let mut alpha = vec![0.0; 16];
         let mut v = vec![0.0; 32];
         let mut solver = NativeScd::new();
@@ -229,8 +285,7 @@ mod tests {
                 v: &v,
                 b: &ds.b,
                 h: 16,
-                lam_n,
-                eta: 0.0,
+                problem: &problem,
                 sigma: 1.0,
                 seed: round,
             };
@@ -250,12 +305,12 @@ mod tests {
     fn empty_partition_is_noop() {
         let ds = dense_gaussian(8, 4, 1);
         let wd = WorkerData::from_columns(&ds.a, &[]);
+        let problem = Problem::ridge(1.0);
         let req = SolveRequest {
             v: &vec![0.0; 8],
             b: &ds.b,
             h: 10,
-            lam_n: 1.0,
-            eta: 1.0,
+            problem: &problem,
             sigma: 1.0,
             seed: 0,
         };
@@ -271,12 +326,12 @@ mod tests {
         let (ds, wd) = single_worker(64, 32, 21);
         let alpha = vec![0.0; 32];
         let v = vec![0.0; 64];
+        let problem = Problem::elastic(0.5, 0.8);
         let req = SolveRequest {
             v: &v,
             b: &ds.b,
             h: 128,
-            lam_n: 0.5,
-            eta: 0.8,
+            problem: &problem,
             sigma: 2.0,
             seed: 9,
         };
@@ -294,6 +349,124 @@ mod tests {
     }
 
     #[test]
+    fn hinge_and_logistic_steady_state_solves_are_allocation_free() {
+        // The acceptance bar extends the zero-allocation invariant to the
+        // dual losses: the trait-dispatched step (incl. the logistic
+        // Newton iteration) must not touch the allocator either.
+        let (ds, labels) = separable_classes(32, 64, 0.3, 21);
+        assert_eq!(labels.len(), ds.n());
+        let cols: Vec<u32> = (0..ds.n() as u32).collect();
+        let wd = WorkerData::from_columns(&ds.a, &cols);
+        let alpha = vec![0.0; wd.n_local()];
+        let v = vec![0.0; ds.m()];
+        for problem in [Problem::svm(0.5), Problem::logistic(0.5)] {
+            let req = SolveRequest {
+                v: &v,
+                b: &ds.b,
+                h: 128,
+                problem: &problem,
+                sigma: 2.0,
+                seed: 9,
+            };
+            let mut solver = NativeScd::new();
+            let mut out = SolveResult::default();
+            solver.solve_into(&wd, &alpha, &req, &mut out); // warmup
+            let before = crate::testkit::alloc::current_thread_allocations();
+            for round in 0..10u64 {
+                let round_req = SolveRequest { seed: round, ..req.clone() };
+                solver.solve_into(&wd, &alpha, &round_req, &mut out);
+            }
+            let after = crate::testkit::alloc::current_thread_allocations();
+            assert_eq!(
+                after - before,
+                0,
+                "{} round allocated",
+                problem.kind_name()
+            );
+            assert!(out.steps > 0);
+        }
+    }
+
+    #[test]
+    fn hinge_dual_converges_on_separable_data() {
+        let (ds, labels) = separable_classes(24, 96, 0.5, 7);
+        let cols: Vec<u32> = (0..ds.n() as u32).collect();
+        let wd = WorkerData::from_columns(&ds.a, &cols);
+        let problem = Problem::svm(1.0);
+        let c = problem.reg.box_c();
+        let mut alpha = vec![0.0; ds.n()];
+        let mut v = vec![0.0; ds.m()];
+        let mut solver = NativeScd::new();
+        for round in 0..80 {
+            let req = SolveRequest {
+                v: &v,
+                b: &ds.b,
+                h: ds.n(),
+                problem: &problem,
+                sigma: 1.0,
+                seed: round,
+            };
+            let res = solver.solve(&wd, &alpha, &req);
+            check_result(&wd, &res, 1e-9).unwrap();
+            for (a, d) in alpha.iter_mut().zip(res.delta_alpha.iter()) {
+                *a += d;
+            }
+            for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
+                *vi += d;
+            }
+        }
+        // Box invariant held throughout.
+        assert!(alpha.iter().all(|&a| (0.0..=c + 1e-12).contains(&a)));
+        // Near-zero certificate and a separating classifier.
+        let gap = problem.duality_gap(&ds, &v, &alpha);
+        assert!(gap < 1e-3 * ds.n() as f64, "gap {}", gap);
+        let margins = ds.a.matvec_t(&v);
+        let correct = margins.iter().filter(|&&t| t > 0.0).count();
+        assert!(
+            correct as f64 >= 0.95 * ds.n() as f64,
+            "accuracy {}/{}",
+            correct,
+            ds.n()
+        );
+        let _ = labels;
+    }
+
+    #[test]
+    fn logistic_dual_objective_decreases() {
+        let (ds, _) = separable_classes(16, 48, 0.4, 13);
+        let cols: Vec<u32> = (0..ds.n() as u32).collect();
+        let wd = WorkerData::from_columns(&ds.a, &cols);
+        let problem = Problem::logistic(1.0);
+        let mut alpha = vec![0.0; ds.n()];
+        let mut v = vec![0.0; ds.m()];
+        let mut solver = NativeScd::new();
+        let mut prev = problem.primal(&ds, &alpha);
+        for round in 0..40 {
+            let req = SolveRequest {
+                v: &v,
+                b: &ds.b,
+                h: ds.n(),
+                problem: &problem,
+                sigma: 1.0,
+                seed: round,
+            };
+            let res = solver.solve(&wd, &alpha, &req);
+            check_result(&wd, &res, 1e-9).unwrap();
+            for (a, d) in alpha.iter_mut().zip(res.delta_alpha.iter()) {
+                *a += d;
+            }
+            for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
+                *vi += d;
+            }
+            let cur = problem.primal(&ds, &alpha);
+            assert!(cur <= prev + 1e-9, "round {}: {} -> {}", round, prev, cur);
+            prev = cur;
+        }
+        let gap = problem.duality_gap(&ds, &v, &alpha);
+        assert!(gap >= 0.0 && gap < 0.05 * ds.n() as f64, "gap {}", gap);
+    }
+
+    #[test]
     fn solve_into_matches_solve() {
         let (ds, wd) = single_worker(24, 12, 13);
         let alpha = vec![0.05; 12];
@@ -302,12 +475,12 @@ mod tests {
             full.copy_from_slice(&alpha);
             full
         });
+        let problem = Problem::elastic(1.5, 0.6);
         let req = SolveRequest {
             v: &v,
             b: &ds.b,
             h: 48,
-            lam_n: 1.5,
-            eta: 0.6,
+            problem: &problem,
             sigma: 3.0,
             seed: 4,
         };
@@ -328,12 +501,12 @@ mod tests {
         let (ds, wd) = single_worker(16, 8, 3);
         let alpha = vec![0.1; 8];
         let v = ds.shared_vector(&alpha);
+        let problem = Problem::elastic(0.5, 0.7);
         let req = SolveRequest {
             v: &v,
             b: &ds.b,
             h: 32,
-            lam_n: 0.5,
-            eta: 0.7,
+            problem: &problem,
             sigma: 2.0,
             seed: 77,
         };

@@ -14,6 +14,7 @@
 use super::{LocalSolver, SolveRequest, SolveResult};
 use crate::data::WorkerData;
 use crate::linalg::{self, Xorshift128};
+use crate::problem::LossKind;
 
 /// MLlib-style distributed mini-batch SGD.
 pub struct MiniBatchSgd {
@@ -97,7 +98,10 @@ impl LocalSolver for MiniBatchSgd {
         // γ_t = stepSize / √t, normalized by m so the gradient magnitude is
         // scale-free (MLlib normalizes the loss by the datapoint count).
         let gamma = self.step_size / (self.t as f64).sqrt() / m as f64;
-        let lam_eta = req.lam_n * req.eta;
+        let reg = req.problem.reg;
+        let lam_eta = reg.lam_n * reg.eta;
+        let kind = req.problem.loss;
+        let c = reg.box_c();
 
         out.delta_alpha.clear();
         out.delta_alpha.resize(nk, 0.0);
@@ -105,8 +109,23 @@ impl LocalSolver for MiniBatchSgd {
         out.delta_v.resize(m, 0.0);
         for j in 0..nk {
             let (ri, vs) = data.flat.col(j);
-            let g = scale * linalg::dot_indexed(ri, vs, &self.r) + lam_eta * alpha[j];
-            let d = -gamma * g;
+            let smooth = scale * linalg::dot_indexed(ri, vs, &self.r);
+            // Per-problem (sub)gradient of φ_j, with a projection onto the
+            // box for the dual losses — MLlib-style one global step per
+            // round for every problem family.
+            let d = match kind {
+                LossKind::Squared => -gamma * (smooth + lam_eta * alpha[j]),
+                LossKind::Hinge => {
+                    let g = smooth - 1.0;
+                    (alpha[j] - gamma * g).clamp(0.0, c) - alpha[j]
+                }
+                LossKind::Logistic => {
+                    let lo = c * 1e-12;
+                    let a = alpha[j].clamp(lo, c - lo);
+                    let g = smooth + (a / (c - a)).ln();
+                    (a - gamma * g).clamp(lo, c - lo) - alpha[j]
+                }
+            };
             if d != 0.0 {
                 out.delta_alpha[j] = d;
                 linalg::axpy_indexed(d, ri, vs, &mut out.delta_v);
@@ -135,12 +154,12 @@ mod tests {
         let (ds, wd) = setup(1);
         let alpha = vec![0.0; 12];
         let v = vec![0.0; 32];
+        let problem = crate::problem::Problem::ridge(0.5);
         let req = SolveRequest {
             v: &v,
             b: &ds.b,
             h: 0,
-            lam_n: 0.5,
-            eta: 1.0,
+            problem: &problem,
             sigma: 1.0,
             seed: 1,
         };
@@ -156,18 +175,17 @@ mod tests {
     #[test]
     fn full_batch_descends_objective() {
         let (ds, wd) = setup(2);
-        let lam_n = 0.5;
+        let problem = crate::problem::Problem::ridge(0.5);
         let mut alpha = vec![0.0; 12];
         let mut v = vec![0.0; 32];
         let mut sgd = MiniBatchSgd::new(0.3, 1.0);
-        let f0 = ds.objective(&alpha, lam_n, 1.0);
+        let f0 = problem.primal(&ds, &alpha);
         for round in 0..200 {
             let req = SolveRequest {
                 v: &v,
                 b: &ds.b,
                 h: 0,
-                lam_n,
-                eta: 1.0,
+                problem: &problem,
                 sigma: 1.0,
                 seed: round,
             };
@@ -179,25 +197,60 @@ mod tests {
                 *vi += d;
             }
         }
-        let f = ds.objective(&alpha, lam_n, 1.0);
+        let f = problem.primal(&ds, &alpha);
         assert!(f < 0.9 * f0, "no progress: {} -> {}", f0, f);
     }
 
     #[test]
-    fn minibatch_sampling_reduces_work_but_still_descends() {
-        let (ds, wd) = setup(3);
-        let lam_n = 0.5;
-        let mut alpha = vec![0.0; 12];
-        let mut v = vec![0.0; 32];
-        let mut sgd = MiniBatchSgd::new(0.2, 0.5);
-        let f0 = ds.objective(&alpha, lam_n, 1.0);
+    fn projected_sgd_descends_the_hinge_dual() {
+        use crate::data::synthetic::separable_classes;
+        let (ds, _) = separable_classes(16, 40, 0.4, 9);
+        let cols: Vec<u32> = (0..ds.n() as u32).collect();
+        let wd = WorkerData::from_columns(&ds.a, &cols);
+        let problem = crate::problem::Problem::svm(1.0);
+        let c = problem.reg.box_c();
+        let mut alpha = vec![0.0; ds.n()];
+        let mut v = vec![0.0; ds.m()];
+        let mut sgd = MiniBatchSgd::new(2.0, 1.0);
+        let f0 = problem.primal(&ds, &alpha);
         for round in 0..300 {
             let req = SolveRequest {
                 v: &v,
                 b: &ds.b,
                 h: 0,
-                lam_n,
-                eta: 1.0,
+                problem: &problem,
+                sigma: 1.0,
+                seed: round,
+            };
+            let res = sgd.solve(&wd, &alpha, &req);
+            check_result(&wd, &res, 1e-9).unwrap();
+            for (a, d) in alpha.iter_mut().zip(res.delta_alpha.iter()) {
+                *a += d;
+            }
+            for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
+                *vi += d;
+            }
+        }
+        // Projection keeps the box invariant; the dual objective descends.
+        assert!(alpha.iter().all(|&a| (0.0..=c + 1e-12).contains(&a)));
+        let f = problem.primal(&ds, &alpha);
+        assert!(f < f0 - 1e-6, "no progress: {} -> {}", f0, f);
+    }
+
+    #[test]
+    fn minibatch_sampling_reduces_work_but_still_descends() {
+        let (ds, wd) = setup(3);
+        let problem = crate::problem::Problem::ridge(0.5);
+        let mut alpha = vec![0.0; 12];
+        let mut v = vec![0.0; 32];
+        let mut sgd = MiniBatchSgd::new(0.2, 0.5);
+        let f0 = problem.primal(&ds, &alpha);
+        for round in 0..300 {
+            let req = SolveRequest {
+                v: &v,
+                b: &ds.b,
+                h: 0,
+                problem: &problem,
                 sigma: 1.0,
                 seed: round,
             };
@@ -209,7 +262,7 @@ mod tests {
                 *vi += d;
             }
         }
-        assert!(ds.objective(&alpha, lam_n, 1.0) < 0.9 * f0);
+        assert!(problem.primal(&ds, &alpha) < 0.9 * f0);
     }
 
     #[test]
@@ -218,6 +271,7 @@ mod tests {
         // suboptimality is far below SGD's.
         let (ds, wd) = setup(4);
         let lam_n = 0.5;
+        let problem = crate::problem::Problem::ridge(lam_n);
         let run = |mut solver: Box<dyn LocalSolver>, rounds: usize| -> f64 {
             let mut alpha = vec![0.0; 12];
             let mut v = vec![0.0; 32];
@@ -226,8 +280,7 @@ mod tests {
                     v: &v,
                     b: &ds.b,
                     h: 12,
-                    lam_n,
-                    eta: 1.0,
+                    problem: &problem,
                     sigma: 1.0,
                     seed: round as u64,
                 };
@@ -239,7 +292,7 @@ mod tests {
                     *vi += d;
                 }
             }
-            ds.objective(&alpha, lam_n, 1.0)
+            problem.primal(&ds, &alpha)
         };
         let f_cocoa = run(Box::new(crate::solver::scd::NativeScd::new()), 30);
         let f_sgd = run(Box::new(MiniBatchSgd::new(0.5, 1.0)), 30);

@@ -8,6 +8,7 @@
 use crate::linalg::Xorshift128;
 
 pub mod alloc;
+pub mod reference;
 
 /// Random input generator handed to properties.
 pub struct Gen {

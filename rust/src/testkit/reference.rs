@@ -1,0 +1,123 @@
+//! The pre-problem-layer elastic-net SCD solver, preserved VERBATIM as a
+//! reference implementation.
+//!
+//! Before the `Problem` API (DESIGN.md §9) the crate hard-wired this exact
+//! loop: (λn, η) threaded as bare floats, elastic-net update inlined. Two
+//! consumers pin the redesigned hot path against it from the ONE copy
+//! here, so the reference can never silently fork:
+//!
+//! * `tests/integration_problems.rs` — asserts the `SquaredLoss`-routed
+//!   [`NativeScd`](crate::solver::scd::NativeScd) reproduces its Δα/Δv
+//!   BIT for BIT across ridge/elastic/lasso hyper-parameters;
+//! * `benches/hotpath.rs` — times it against the problem-dispatched round
+//!   (the `problem_dispatch.dispatch_ratio` target), with the same
+//!   `solve_into` shape (r₀ snapshot + Δ materialization) so the pair is
+//!   symmetric and the ratio isolates the dispatch cost alone.
+//!
+//! Do NOT modernize this code — its whole value is staying frozen.
+
+use crate::data::WorkerData;
+use crate::linalg::{self, Xorshift128};
+use crate::solver::SolveResult;
+
+/// The pre-redesign hard-coded elastic-net SCD (see module docs). Scratch
+/// buffers persist across solves exactly like the historical `NativeScd`,
+/// so steady-state rounds are allocation-free.
+#[derive(Debug, Default)]
+pub struct PreRedesignElasticScd {
+    r: Vec<f64>,
+    r0: Vec<f64>,
+    alpha_buf: Vec<f64>,
+}
+
+impl PreRedesignElasticScd {
+    pub fn new() -> PreRedesignElasticScd {
+        PreRedesignElasticScd::default()
+    }
+
+    /// One round, verbatim pre-problem `solve_into`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn solve_into(
+        &mut self,
+        data: &WorkerData,
+        alpha: &[f64],
+        v: &[f64],
+        b: &[f64],
+        h: usize,
+        lam_n: f64,
+        eta: f64,
+        sigma: f64,
+        seed: u64,
+        out: &mut SolveResult,
+    ) {
+        let nk = data.n_local();
+        self.r.clear();
+        self.r.extend(v.iter().zip(b.iter()).map(|(&v, &b)| v - b));
+        self.r0.clear();
+        self.r0.extend_from_slice(&self.r);
+        self.alpha_buf.clear();
+        self.alpha_buf.extend_from_slice(alpha);
+
+        let mut rng = Xorshift128::new(seed);
+        let lam_eta = lam_n * eta;
+        let tau_num = lam_n * (1.0 - eta);
+        let mut steps = 0usize;
+        if nk > 0 {
+            for _ in 0..h {
+                let j = rng.next_usize(nk);
+                let csq = data.col_sq[j];
+                let denom = sigma * csq + lam_eta;
+                if denom <= 0.0 {
+                    continue;
+                }
+                let (ri, vs) = data.flat.col(j);
+                let cj_r = linalg::dot_indexed(ri, vs, &self.r);
+                let aj = self.alpha_buf[j];
+                let atilde = (sigma * csq * aj - cj_r) / denom;
+                let anew = linalg::soft_threshold(atilde, tau_num / denom);
+                let delta = anew - aj;
+                if delta != 0.0 {
+                    linalg::axpy_indexed(sigma * delta, ri, vs, &mut self.r);
+                    self.alpha_buf[j] = anew;
+                }
+                steps += 1;
+            }
+        }
+
+        out.delta_alpha.clear();
+        out.delta_alpha.extend(
+            self.alpha_buf
+                .iter()
+                .zip(alpha.iter())
+                .map(|(&a, &a0)| a - a0),
+        );
+        let inv_sigma = 1.0 / sigma;
+        out.delta_v.clear();
+        out.delta_v.extend(
+            self.r
+                .iter()
+                .zip(self.r0.iter())
+                .map(|(&rf, &r0)| (rf - r0) * inv_sigma),
+        );
+        out.steps = steps;
+    }
+
+    /// Allocating convenience wrapper (the test-side shape).
+    #[allow(clippy::too_many_arguments)]
+    pub fn solve(
+        &mut self,
+        data: &WorkerData,
+        alpha: &[f64],
+        v: &[f64],
+        b: &[f64],
+        h: usize,
+        lam_n: f64,
+        eta: f64,
+        sigma: f64,
+        seed: u64,
+    ) -> SolveResult {
+        let mut out = SolveResult::default();
+        self.solve_into(data, alpha, v, b, h, lam_n, eta, sigma, seed, &mut out);
+        out
+    }
+}

@@ -145,8 +145,7 @@ fn eval_every_skips_objective_computation() {
 #[test]
 fn elastic_net_trains_too() {
     let (ds, mut cfg) = setup();
-    cfg.eta = 0.5;
-    cfg.lam_n *= 4.0;
+    cfg.problem = sparkbench::problem::Problem::elastic(cfg.lam_n() * 4.0, 0.5);
     cfg.max_rounds = 600;
     cfg.target_subopt = 1e-2;
     let mut engine = build_engine(Impl::Mpi, &ds, &cfg);

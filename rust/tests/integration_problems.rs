@@ -1,0 +1,333 @@
+//! Integration: the first-class `Problem` API.
+//!
+//! * ridge stays BIT-identical to the pre-redesign hard-coded elastic-net
+//!   path (the verbatim reference lives in `testkit::reference`);
+//! * linear SVM trains end to end on every engine family with identical
+//!   Δv/α trajectories and ≥ 95% accuracy, stopping on the duality-gap
+//!   certificate with no CG oracle;
+//! * `ToGap` stopping is consistent with `ToTarget` stopping on ridge.
+
+use sparkbench::config::TrainConfig;
+use sparkbench::coordinator::oracle_objective;
+use sparkbench::data::synthetic::{separable_classes, webspam_like, SyntheticSpec};
+use sparkbench::data::{eval, Dataset, Partitioner, Partitioning, WorkerData};
+use sparkbench::framework::{build_any, Engine, EngineOptions};
+use sparkbench::linalg;
+use sparkbench::problem::Problem;
+use sparkbench::session::{Session, StopPolicy};
+use sparkbench::solver::{scd::NativeScd, LocalSolver, SolveRequest};
+// The ONE verbatim copy of the pre-problem hard-coded solver (shared with
+// the hotpath bench so the reference can never silently fork).
+use sparkbench::testkit::reference::PreRedesignElasticScd;
+
+#[test]
+fn squared_loss_is_bitwise_equal_to_the_pre_redesign_path() {
+    // Fixture: multi-round, multi-worker solves over ridge, elastic and
+    // lasso hyper-parameters — the full squared-loss family.
+    let ds = webspam_like(&SyntheticSpec::small());
+    let parts = Partitioning::build(Partitioner::BalancedNnz, &ds.a, 3, 0);
+    let workers: Vec<WorkerData> = parts
+        .parts
+        .iter()
+        .map(|cols| WorkerData::from_columns(&ds.a, cols))
+        .collect();
+    for (lam_n, eta) in [(12.8, 1.0), (3.0, 0.5), (60.0, 0.0)] {
+        let problem = Problem::elastic(lam_n, eta);
+        let mut old = PreRedesignElasticScd::default();
+        let mut new = NativeScd::new();
+        let mut alphas: Vec<Vec<f64>> = workers.iter().map(|w| vec![0.0; w.n_local()]).collect();
+        let mut v = vec![0.0; ds.m()];
+        for round in 0..6u64 {
+            let mut agg = vec![0.0; ds.m()];
+            for (w, wd) in workers.iter().enumerate() {
+                let seed = round * 7919 + w as u64;
+                let res_old =
+                    old.solve(wd, &alphas[w], &v, &ds.b, wd.n_local(), lam_n, eta, 3.0, seed);
+                let req = SolveRequest {
+                    v: &v,
+                    b: &ds.b,
+                    h: wd.n_local(),
+                    problem: &problem,
+                    sigma: 3.0,
+                    seed,
+                };
+                let res_new = new.solve(wd, &alphas[w], &req);
+                assert_eq!(res_old.steps, res_new.steps);
+                for (a, b) in res_old.delta_alpha.iter().zip(res_new.delta_alpha.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "Δα bits (λ={}, η={})", lam_n, eta);
+                }
+                for (a, b) in res_old.delta_v.iter().zip(res_new.delta_v.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "Δv bits (λ={}, η={})", lam_n, eta);
+                }
+                linalg::add_assign(&mut alphas[w], &res_new.delta_alpha);
+                linalg::add_assign(&mut agg, &res_new.delta_v);
+            }
+            linalg::add_assign(&mut v, &agg);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SVM end to end
+// ---------------------------------------------------------------------------
+
+fn svm_setup() -> (Dataset, Vec<f64>, TrainConfig) {
+    let (ds, labels) = separable_classes(48, 192, 0.4, 11);
+    let mut cfg = TrainConfig::default_for(&ds);
+    cfg.workers = 4;
+    cfg.problem = Problem::svm(1.0);
+    cfg.max_rounds = 4000;
+    (ds, labels, cfg)
+}
+
+#[test]
+fn svm_converges_on_every_engine_family_with_identical_trajectories() {
+    // The acceptance bar: `.problem(Problem::svm(lam)).stop(ToGap(1e-4))`
+    // converges on a synthetic separable dataset on EVERY engine family,
+    // with identical Δv/α trajectories across engines and ≥ 95% accuracy.
+    let (ds, labels, cfg) = svm_setup();
+    let mut trajectories: Vec<(String, Vec<u64>, Vec<u64>)> = Vec::new();
+    for engine in Engine::FAMILIES {
+        let mut eng = build_any(engine, &ds, &cfg, &EngineOptions::default());
+        let report = Session::builder(&ds)
+            .config(cfg.clone())
+            .attach(eng.as_mut())
+            .stop(StopPolicy::ToGap { gap: 1e-4 })
+            .build()
+            .unwrap()
+            .run();
+        assert!(
+            report.time_to_target.is_some(),
+            "{} never met the gap target (last gap {:?} after {} rounds)",
+            engine.label(),
+            report.logs.last().and_then(|l| l.gap),
+            report.rounds
+        );
+        // Gap column populated at every evaluated round.
+        assert!(report.logs.iter().all(|l| l.gap.is_some()));
+
+        let alpha = eng.alpha_global();
+        // Box feasibility of the trained dual.
+        let c = cfg.problem.reg.box_c();
+        assert!(
+            alpha.iter().all(|&a| (0.0..=c + 1e-12).contains(&a)),
+            "{}: dual iterate escaped the box",
+            engine.label()
+        );
+        // Downstream accuracy from the (scaled) primal w = v = Aα.
+        let v = ds.shared_vector(&alpha);
+        let qv = ds.a.matvec_t(&v);
+        let pred: Vec<f64> = qv.iter().zip(labels.iter()).map(|(&t, &y)| t * y).collect();
+        let acc = eval::accuracy(&pred, &labels);
+        assert!(acc >= 0.95, "{}: accuracy {}", engine.label(), acc);
+
+        let objs: Vec<u64> = report
+            .logs
+            .iter()
+            .filter_map(|l| l.objective)
+            .map(f64::to_bits)
+            .collect();
+        let alpha_bits: Vec<u64> = alpha.iter().map(|a| a.to_bits()).collect();
+        trajectories.push((engine.label(), objs, alpha_bits));
+    }
+    let (ref_label, ref_objs, ref_alpha) = &trajectories[0];
+    for (label, objs, alpha) in &trajectories[1..] {
+        assert_eq!(objs, ref_objs, "{} objective bits diverged from {}", label, ref_label);
+        assert_eq!(alpha, ref_alpha, "{} α bits diverged from {}", label, ref_label);
+    }
+}
+
+#[test]
+fn logistic_trains_to_gap_and_classifies() {
+    let (ds, labels) = separable_classes(32, 128, 0.5, 23);
+    let mut cfg = TrainConfig::default_for(&ds);
+    cfg.workers = 4;
+    cfg.max_rounds = 3000;
+    cfg.problem = Problem::logistic(1.0);
+    let mut eng = build_any(
+        Engine::Impl(sparkbench::config::Impl::Mpi),
+        &ds,
+        &cfg,
+        &EngineOptions::default(),
+    );
+    let report = Session::builder(&ds)
+        .config(cfg)
+        .attach(eng.as_mut())
+        .stop(StopPolicy::ToGap { gap: 1e-3 })
+        .build()
+        .unwrap()
+        .run();
+    assert!(
+        report.time_to_target.is_some(),
+        "logistic session missed the gap target: {:?}",
+        report.logs.last().and_then(|l| l.gap)
+    );
+    let alpha = eng.alpha_global();
+    let v = ds.shared_vector(&alpha);
+    let qv = ds.a.matvec_t(&v);
+    let pred: Vec<f64> = qv.iter().zip(labels.iter()).map(|(&t, &y)| t * y).collect();
+    assert!(eval::accuracy(&pred, &labels) >= 0.9);
+}
+
+// ---------------------------------------------------------------------------
+// Gap certificate vs the CG oracle on ridge
+// ---------------------------------------------------------------------------
+
+fn ridge_setup() -> (Dataset, TrainConfig) {
+    let ds = webspam_like(&SyntheticSpec::small());
+    let mut cfg = TrainConfig::default_for(&ds);
+    cfg.workers = 4;
+    cfg.max_rounds = 6000; // gap 1e-4 is a tighter bar than subopt 1e-3
+    (ds, cfg)
+}
+
+#[test]
+fn ridge_gap_vanishes_at_the_cg_optimum() {
+    let (ds, cfg) = ridge_setup();
+    let p = cfg.problem;
+    let (alpha_star, fstar) =
+        sparkbench::solver::cg::ridge_optimum(&ds, p.reg.lam_n, 1e-12, 50_000);
+    let v = ds.shared_vector(&alpha_star);
+    let gap = p.duality_gap(&ds, &v, &alpha_star);
+    let scale = 1.0 + fstar.abs();
+    assert!(gap >= -1e-9 * scale, "gap {} below numeric zero", gap);
+    assert!(gap <= 1e-6 * scale, "gap {} did not vanish at α*", gap);
+}
+
+#[test]
+fn to_gap_and_to_target_stop_within_one_round_of_each_other_on_ridge() {
+    // Stop a ridge session on the certificate; then ask the oracle-based
+    // policy to stop at the suboptimality the certificate-stopped run
+    // actually reached. The round counts must agree within ±1 — the
+    // certificate is a faithful, tight stand-in for the CG oracle.
+    let (ds, mut cfg) = ridge_setup();
+    cfg.target_subopt = 0.0; // never trigger the default target
+    let fstar = oracle_objective(&ds, &cfg);
+
+    let gap_run = Session::builder(&ds)
+        .config(cfg.clone())
+        .oracle(fstar) // also track suboptimality for the handoff below
+        .stop(StopPolicy::ToGap { gap: 1e-4 })
+        .build()
+        .unwrap()
+        .run();
+    assert!(gap_run.time_to_target.is_some(), "gap target never met");
+    let rounds_gap = gap_run.rounds;
+    let sub_at_stop = gap_run.final_suboptimality.unwrap();
+    assert!(sub_at_stop >= 0.0);
+
+    let target_run = Session::builder(&ds)
+        .config(cfg)
+        .oracle(fstar)
+        .stop(StopPolicy::ToTarget {
+            subopt: sub_at_stop * (1.0 + 1e-12),
+        })
+        .build()
+        .unwrap()
+        .run();
+    assert!(target_run.time_to_target.is_some());
+    let rounds_target = target_run.rounds;
+    let diff = rounds_gap as i64 - rounds_target as i64;
+    assert!(
+        diff.abs() <= 1,
+        "ToGap stopped after {} rounds, ToTarget after {}",
+        rounds_gap,
+        rounds_target
+    );
+}
+
+#[test]
+fn gap_upper_bounds_suboptimality_along_a_trajectory() {
+    let (ds, mut cfg) = ridge_setup();
+    cfg.max_rounds = 12;
+    cfg.target_subopt = 0.0;
+    let fstar = oracle_objective(&ds, &cfg);
+    let report = Session::builder(&ds)
+        .config(cfg)
+        .oracle(fstar)
+        .track_gap()
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(report.rounds, 12);
+    for l in &report.logs {
+        let f = l.objective.unwrap();
+        let gap_abs = l.gap.unwrap() * f.abs().max(1.0);
+        assert!(
+            gap_abs + 1e-9 * (1.0 + f.abs()) >= f - fstar,
+            "round {}: gap {} < f − f* = {}",
+            l.round,
+            gap_abs,
+            f - fstar
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpointing carries the problem
+// ---------------------------------------------------------------------------
+
+#[test]
+fn svm_checkpoint_resumes_bit_exactly_and_refuses_ridge() {
+    use sparkbench::coordinator::checkpoint::Checkpoint;
+    use sparkbench::session::CheckpointEvery;
+
+    let (ds, _labels, cfg) = svm_setup();
+    let path = std::env::temp_dir().join("sparkbench_problems_svm_ckpt.json");
+
+    // Uninterrupted 8-round reference.
+    let full = Session::builder(&ds)
+        .config(cfg.clone())
+        .fixed_rounds(8)
+        .track_gap()
+        .build()
+        .unwrap()
+        .run();
+
+    // 4 rounds with a checkpoint, then resume for the remaining 4.
+    let _ = Session::builder(&ds)
+        .config(cfg.clone())
+        .fixed_rounds(4)
+        .observe(CheckpointEvery::new(4, &path))
+        .build()
+        .unwrap()
+        .run();
+    let ckpt = Checkpoint::load(&path).unwrap();
+    assert_eq!(ckpt.problem, Problem::svm(1.0));
+    assert_eq!(ckpt.round, 4);
+
+    // A ridge config must refuse the SVM envelope.
+    let mut ridge_cfg = cfg.clone();
+    ridge_cfg.problem = Problem::ridge(1.0);
+    let err = Session::builder(&ds)
+        .config(ridge_cfg)
+        .resume_from(ckpt.clone())
+        .fixed_rounds(4)
+        .build()
+        .err()
+        .expect("problem mismatch must be rejected");
+    assert!(err.contains("problem mismatch"), "{}", err);
+
+    // Resuming with the right problem continues the exact trajectory.
+    let resumed = Session::builder(&ds)
+        .config(cfg)
+        .resume_from(ckpt)
+        .fixed_rounds(4)
+        .track_gap()
+        .build()
+        .unwrap()
+        .run();
+    let full_tail: Vec<u64> = full.logs[4..]
+        .iter()
+        .filter_map(|l| l.objective)
+        .map(f64::to_bits)
+        .collect();
+    let resumed_objs: Vec<u64> = resumed
+        .logs
+        .iter()
+        .filter_map(|l| l.objective)
+        .map(f64::to_bits)
+        .collect();
+    assert_eq!(resumed_objs, full_tail, "resumed SVM trajectory diverged");
+    std::fs::remove_file(&path).ok();
+}

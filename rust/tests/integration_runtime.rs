@@ -14,6 +14,7 @@ use std::sync::Arc;
 
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
 use sparkbench::data::WorkerData;
+use sparkbench::problem::Problem;
 use sparkbench::runtime::{Manifest, PjrtRuntime};
 use sparkbench::solver::{pjrt::PjrtScd, scd::NativeScd, LocalSolver, SolveRequest};
 
@@ -58,12 +59,12 @@ fn pjrt_matches_native_full_width() {
     let (ds, wd) = problem(&man, man.nk, 3);
     let alpha = vec![0.0; wd.n_local()];
     let v = vec![0.0; ds.m()];
+    let problem = Problem::ridge(25.0);
     let req = SolveRequest {
         v: &v,
         b: &ds.b,
         h: 200.min(man.h_max),
-        lam_n: 25.0,
-        eta: 1.0,
+        problem: &problem,
         sigma: 4.0,
         seed: 11,
     };
@@ -84,12 +85,12 @@ fn pjrt_handles_padded_partition() {
     let (ds, wd) = problem(&man, man.nk / 3, 5);
     let alpha = vec![0.0; wd.n_local()];
     let v = vec![0.0; ds.m()];
+    let problem = Problem::elastic(10.0, 0.8); // elastic net through the artifact's runtime scalars
     let req = SolveRequest {
         v: &v,
         b: &ds.b,
         h: 100.min(man.h_max),
-        lam_n: 10.0,
-        eta: 0.8, // elastic net through the artifact's runtime scalars
+        problem: &problem,
         sigma: 2.0,
         seed: 17,
     };
@@ -114,12 +115,12 @@ fn pjrt_h_zero_is_noop() {
         full[..wd.n_local()].copy_from_slice(&alpha);
         full
     });
+    let problem = Problem::ridge(1.0);
     let req = SolveRequest {
         v: &v,
         b: &ds.b,
         h: 0,
-        lam_n: 1.0,
-        eta: 1.0,
+        problem: &problem,
         sigma: 1.0,
         seed: 0,
     };
@@ -134,19 +135,18 @@ fn pjrt_multi_round_training_descends() {
     // decrease monotonically (within f32 noise).
     let (man, exec) = load();
     let (ds, wd) = problem(&man, man.nk, 9);
-    let lam_n = 0.05 * ds.n() as f64;
+    let problem = Problem::ridge(0.05 * ds.n() as f64);
     let mut alpha = vec![0.0; wd.n_local()];
     let mut v = vec![0.0; ds.m()];
     let mut solver = PjrtScd::new(exec);
     let mut alpha_full = vec![0.0; ds.n()];
-    let mut prev = ds.objective(&alpha_full, lam_n, 1.0);
+    let mut prev = problem.primal(&ds, &alpha_full);
     for round in 0..5 {
         let req = SolveRequest {
             v: &v,
             b: &ds.b,
             h: wd.n_local().min(man.h_max),
-            lam_n,
-            eta: 1.0,
+            problem: &problem,
             sigma: 1.0,
             seed: round,
         };
@@ -160,7 +160,7 @@ fn pjrt_multi_round_training_descends() {
         for (slot, &a) in alpha_full.iter_mut().zip(alpha.iter()) {
             *slot = a;
         }
-        let cur = ds.objective(&alpha_full, lam_n, 1.0);
+        let cur = problem.primal(&ds, &alpha_full);
         assert!(cur <= prev * (1.0 + 1e-4), "round {}: {} -> {}", round, prev, cur);
         prev = cur;
     }

@@ -8,6 +8,7 @@ use sparkbench::data::{Partitioner, Partitioning, WorkerData};
 use sparkbench::framework::build_engine;
 use sparkbench::framework::serialization::{JavaSer, PickleSer};
 use sparkbench::linalg;
+use sparkbench::problem::Problem;
 use sparkbench::solver::{
     check_result, minibatch_cd::MiniBatchCd, scd::NativeScd, sgd::MiniBatchSgd, LocalSolver,
     SolveRequest,
@@ -47,12 +48,18 @@ fn prop_delta_v_always_equals_a_delta_alpha() {
             full[gid as usize] = a;
         }
         let v = ds.shared_vector(&full);
+        // Any problem family: Δv = A·Δα is a structural invariant of the
+        // round protocol, independent of which loss took the steps.
+        let problem = match g.usize_in(0, 4) {
+            0 => Problem::elastic(g.f64_in(0.01, 20.0), g.f64_in(0.0, 1.0)),
+            1 => Problem::svm(g.f64_in(0.1, 10.0)),
+            _ => Problem::logistic(g.f64_in(0.1, 10.0)),
+        };
         let req = SolveRequest {
             v: &v,
             b: &ds.b,
             h: g.usize_in(0, 80),
-            lam_n: g.f64_in(0.01, 20.0),
-            eta: g.f64_in(0.0, 1.0),
+            problem: &problem,
             sigma: g.f64_in(0.5, 8.0),
             seed: g.seed(),
         };
@@ -107,20 +114,54 @@ fn prop_objective_never_increases_under_cocoa_rounds() {
         let k = g.usize_in(1, 5);
         let mut cfg = TrainConfig::default_for(&ds);
         cfg.workers = k;
-        cfg.lam_n = g.f64_in(0.1, 5.0) * ds.n() as f64 * 0.01;
-        cfg.eta = 1.0;
+        cfg.problem = Problem::ridge(g.f64_in(0.1, 5.0) * ds.n() as f64 * 0.01);
         let mut engine = build_engine(Impl::Mpi, &ds, &cfg);
         let mut v = vec![0.0; ds.m()];
-        let mut prev = ds.objective(&engine.alpha_global(), cfg.lam_n, cfg.eta);
+        let mut prev = cfg.problem.primal(&ds, &engine.alpha_global());
         for round in 0..6 {
             let h = g.usize_in(1, 64);
             let (dv, _) = engine.run_round(&v, h, round);
             linalg::add_assign(&mut v, &dv);
-            let cur = ds.objective(&engine.alpha_global(), cfg.lam_n, cfg.eta);
+            let cur = cfg.problem.primal(&ds, &engine.alpha_global());
             if cur > prev + 1e-7 * (1.0 + prev.abs()) {
                 return Err(format!("round {}: {} -> {}", round, prev, cur));
             }
             prev = cur;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_duality_gap_is_a_nonnegative_certificate() {
+    // DESIGN.md §9: gap(α) = f(α) + g*(u) + Σφ*(−(Aᵀu)_j) ≥ 0 for EVERY α
+    // and every problem family — the property that makes it a stopping
+    // certificate rather than a heuristic.
+    check("duality gap >= 0 for every family and any α", 40, |g| {
+        let ds = random_dataset(g);
+        let problem = match g.usize_in(0, 4) {
+            0 => Problem::elastic(g.f64_in(0.05, 10.0), g.f64_in(0.0, 1.0)),
+            1 => Problem::lasso(g.f64_in(0.05, 10.0)),
+            2 => Problem::svm(g.f64_in(0.1, 10.0)),
+            _ => Problem::logistic(g.f64_in(0.1, 10.0)),
+        };
+        // Feasible α for the family: anything for squared, box-clamped
+        // for the duals ((0, C) strictly for logistic's entropy).
+        let c = problem.reg.box_c();
+        let alpha: Vec<f64> = (0..ds.n())
+            .map(|_| match problem.loss {
+                sparkbench::problem::LossKind::Squared => g.f64_in(-1.0, 1.0),
+                sparkbench::problem::LossKind::Hinge => g.f64_in(0.0, 1.0) * c,
+                sparkbench::problem::LossKind::Logistic => g.f64_in(0.01, 0.99) * c,
+            })
+            .collect();
+        let v = ds.shared_vector(&alpha);
+        let gap = problem.duality_gap(&ds, &v, &alpha);
+        if !gap.is_finite() {
+            return Err(format!("{}: gap not finite: {}", problem.kind_name(), gap));
+        }
+        if gap < 0.0 {
+            return Err(format!("{}: negative gap {}", problem.kind_name(), gap));
         }
         Ok(())
     });
