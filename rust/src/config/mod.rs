@@ -182,6 +182,16 @@ impl TrainConfig {
         self.gamma * self.workers as f64
     }
 
+    /// σ′ for a nested run with `t` local sub-solvers per worker: the
+    /// subproblem count is `K·t`, so σ′ = γ·(K·t) — computed with the
+    /// *flat* engine's exact expression (`γ · (K·t) as f64`), not
+    /// `σ′(K)·t`, so nested and flat σ′ agree to the bit for every γ
+    /// (DESIGN.md §10). `sigma_t(1)` equals [`sigma`](TrainConfig::sigma)
+    /// bitwise.
+    pub fn sigma_t(&self, t: usize) -> f64 {
+        self.gamma * (self.workers * t) as f64
+    }
+
     /// Effective regularizer λ·n (convenience accessor for banners/CSV).
     pub fn lam_n(&self) -> f64 {
         self.problem.reg.lam_n
@@ -288,5 +298,17 @@ mod tests {
         cfg.workers = 8;
         cfg.gamma = 0.5;
         assert_eq!(cfg.sigma(), 4.0);
+    }
+
+    #[test]
+    fn sigma_t_matches_the_flat_ring_bitwise() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut nested = TrainConfig::default_for(&ds);
+        nested.workers = 3;
+        nested.gamma = 0.3; // 0.3·3·2 vs 0.3·6 — must use the flat expression
+        let mut flat = nested.clone();
+        flat.workers = 6;
+        assert_eq!(nested.sigma_t(2).to_bits(), flat.sigma().to_bits());
+        assert_eq!(nested.sigma_t(1).to_bits(), nested.sigma().to_bits());
     }
 }

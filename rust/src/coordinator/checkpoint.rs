@@ -2,10 +2,13 @@
 //! fingerprint) so long runs survive restarts — standard framework duty.
 //!
 //! Format: versioned JSON envelope with base-16 packed f64 payloads
-//! (exact bit-level round-trip, no float-text precision loss). Version 2
-//! records the trained [`Problem`]; version-1 envelopes (flat `lam_n`/
-//! `eta` fields, squared loss implied) still decode — as ridge at η = 1,
-//! elastic net otherwise.
+//! (exact bit-level round-trip, no float-text precision loss). Version 3
+//! adds the nested-parallelism degree `threads_per_worker` (resume
+//! re-shards deterministically: same partitioner, `K·T`, seed ⇒ same
+//! sub-shards — DESIGN.md §10); version-2 envelopes decode with T = 1.
+//! Version 2 records the trained [`Problem`]; version-1 envelopes (flat
+//! `lam_n`/`eta` fields, squared loss implied) still decode — as ridge at
+//! η = 1, elastic net otherwise.
 
 use std::path::Path;
 
@@ -26,9 +29,13 @@ pub struct Checkpoint {
     /// Config fingerprint (problem, K) — restore refuses on mismatch.
     pub problem: Problem,
     pub workers: usize,
+    /// Local sub-solvers per worker the run trained with (nested
+    /// parallelism; 1 = flat). Resume refuses a different T — the flat
+    /// K·T sub-shard layout is part of the trajectory.
+    pub threads_per_worker: usize,
 }
 
-const VERSION: f64 = 2.0;
+const VERSION: f64 = 3.0;
 
 fn pack_f64s(v: &[f64]) -> String {
     let mut s = String::with_capacity(v.len() * 16);
@@ -61,6 +68,7 @@ impl Checkpoint {
             .set("time", self.time)
             .set("problem", self.problem.to_json())
             .set("workers", self.workers)
+            .set("threads_per_worker", self.threads_per_worker)
             .set("alpha_hex", pack_f64s(&self.alpha))
             .set("v_hex", pack_f64s(&self.v));
         j
@@ -70,7 +78,7 @@ impl Checkpoint {
         let ver = j.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0);
         let num =
             |k: &str| -> Result<f64, String> { j.get(k).and_then(|v| v.as_f64()).ok_or(format!("missing {}", k)) };
-        let problem = if ver == VERSION {
+        let problem = if ver == VERSION || ver == 2.0 {
             Problem::from_json(j.get("problem").ok_or("missing problem")?)?
         } else if ver == 1.0 {
             // v1 envelopes predate the problem layer: squared loss with the
@@ -79,11 +87,22 @@ impl Checkpoint {
         } else {
             return Err(format!("unsupported checkpoint version {}", ver));
         };
+        // Pre-v3 envelopes predate nested parallelism: flat layout, T = 1.
+        let threads_per_worker = if ver == VERSION {
+            let t = num("threads_per_worker")? as usize;
+            if t == 0 {
+                return Err("threads_per_worker must be >= 1".into());
+            }
+            t
+        } else {
+            1
+        };
         Ok(Checkpoint {
             round: num("round")? as usize,
             time: num("time")?,
             problem,
             workers: num("workers")? as usize,
+            threads_per_worker,
             alpha: unpack_f64s(j.get("alpha_hex").and_then(|v| v.as_str()).ok_or("missing alpha")?)?,
             v: unpack_f64s(j.get("v_hex").and_then(|v| v.as_str()).ok_or("missing v")?)?,
         })
@@ -137,6 +156,7 @@ mod tests {
             v: vec![3.25, -0.0],
             problem: Problem::ridge(0.5),
             workers: 8,
+            threads_per_worker: 1,
         }
     }
 
@@ -198,6 +218,26 @@ mod tests {
     }
 
     #[test]
+    fn nested_layout_roundtrips_and_v2_implies_flat() {
+        // v3 records T exactly.
+        let mut c = sample();
+        c.threads_per_worker = 4;
+        let back = Checkpoint::from_json(&Json::parse(&c.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back.threads_per_worker, 4);
+        assert_eq!(back, c);
+        // A v2 envelope (no threads_per_worker field) decodes as T = 1.
+        let mut j = sample().to_json();
+        j.set("version", 2.0).set("threads_per_worker", Json::Null);
+        let v2 = Checkpoint::from_json(&j).unwrap();
+        assert_eq!(v2.threads_per_worker, 1);
+        assert_eq!(v2.problem, Problem::ridge(0.5));
+        // T = 0 in a v3 envelope is corrupt.
+        let mut j0 = sample().to_json();
+        j0.set("threads_per_worker", 0usize);
+        assert!(Checkpoint::from_json(&j0).is_err());
+    }
+
+    #[test]
     fn compatibility_guard() {
         use crate::config::TrainConfig;
         use crate::data::synthetic::{webspam_like, SyntheticSpec};
@@ -242,6 +282,7 @@ mod tests {
             v: v.clone(),
             problem: cfg.problem,
             workers: cfg.workers,
+            threads_per_worker: engine.threads_per_worker(),
         };
         let f_at_ckpt = cfg.problem.primal(&ds, &ckpt.alpha);
         // "Restore": v from checkpoint drives further rounds.

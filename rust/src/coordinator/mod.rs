@@ -202,7 +202,7 @@ mod tests {
             Engine::Impl(Impl::PySparkC),
             Engine::Impl(Impl::PySparkCOpt),
             Engine::Impl(Impl::Mpi),
-            Engine::Threads { k: 0 },
+            Engine::threads(0),
             Engine::ParamServer { staleness: 0 },
         ];
         let mut trajectories: Vec<(Engine, Vec<u64>)> = Vec::new();

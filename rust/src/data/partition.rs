@@ -105,6 +105,27 @@ impl Partitioning {
         Partitioning { parts }
     }
 
+    /// Two-level (nested) layout for hierarchical parallelism: build the
+    /// **flat** `k·t` partitioning and view worker rank `w` as owning the
+    /// `t` consecutive sub-shards `[w·t, (w+1)·t)` (see
+    /// [`rank_shards`](Partitioning::rank_shards)). Because the sub-shards
+    /// ARE the flat parts, a nested run's coordinate sets, σ′ and per-shard
+    /// seeds line up with a flat `k·t` ring exactly — that is what makes
+    /// nested trajectories bit-identical to flat ones for every
+    /// partitioner (DESIGN.md §10), and what makes resume re-sharding
+    /// deterministic (same partitioner, `k·t`, seed ⇒ same shards).
+    pub fn build_nested(p: Partitioner, a: &CscMatrix, k: usize, t: usize, seed: u64) -> Partitioning {
+        assert!(t > 0, "need at least one sub-shard per worker");
+        Partitioning::build(p, a, k * t, seed)
+    }
+
+    /// Rank `w`'s sub-shard column sets under a nested view with `t`
+    /// sub-shards per rank (`parts.len()` must be a multiple of `t`).
+    pub fn rank_shards(&self, w: usize, t: usize) -> &[Vec<u32>] {
+        debug_assert_eq!(self.parts.len() % t, 0);
+        &self.parts[w * t..(w + 1) * t]
+    }
+
     pub fn num_workers(&self) -> usize {
         self.parts.len()
     }
@@ -230,6 +251,32 @@ mod tests {
         let p = Partitioning::build(Partitioner::Range, &a, 5, 0);
         p.validate(2).unwrap();
         assert_eq!(p.num_workers(), 5); // some workers simply idle
+    }
+
+    #[test]
+    fn nested_layout_is_the_flat_kt_partitioning() {
+        let a = sample();
+        for p in [Partitioner::Range, Partitioner::BalancedNnz, Partitioner::Random] {
+            let nested = Partitioning::build_nested(p, &a, 3, 2, 9);
+            let flat = Partitioning::build(p, &a, 6, 9);
+            assert_eq!(nested, flat, "{:?}", p);
+            nested.validate(a.n).unwrap();
+            // Rank views tile the flat parts contiguously and completely.
+            let mut seen = 0;
+            for w in 0..3 {
+                let shards = nested.rank_shards(w, 2);
+                assert_eq!(shards.len(), 2);
+                assert_eq!(shards[0], nested.parts[w * 2]);
+                assert_eq!(shards[1], nested.parts[w * 2 + 1]);
+                seen += shards.iter().map(|s| s.len()).sum::<usize>();
+            }
+            assert_eq!(seen, a.n);
+        }
+        // t = 1 degenerates to the ordinary partitioning.
+        assert_eq!(
+            Partitioning::build_nested(Partitioner::Range, &a, 4, 1, 0),
+            Partitioning::build(Partitioner::Range, &a, 4, 0)
+        );
     }
 
     #[test]

@@ -104,28 +104,47 @@ impl CscMatrix {
 
     /// `A @ x` (x over columns) → length-m vector.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// `A @ x` into a caller-owned buffer (cleared, resized to m, then
+    /// accumulated) — the allocation-free form repeated evaluations use
+    /// (`Problem::primal` / gap tracking reuse one buffer per session;
+    /// zero steady-state allocations once capacity is reached).
+    pub fn matvec_into(&self, x: &[f64], out: &mut Vec<f64>) {
         assert_eq!(x.len(), self.n);
-        let mut out = vec![0.0; self.m];
+        out.clear();
+        out.resize(self.m, 0.0);
         for j in 0..self.n {
             let xj = x[j];
             if xj == 0.0 {
                 continue;
             }
             let (ri, vs) = self.col(j);
-            crate::linalg::axpy_indexed(xj, ri, vs, &mut out);
+            crate::linalg::axpy_indexed(xj, ri, vs, out);
         }
-        out
     }
 
     /// `A^T @ y` (y over rows) → length-n vector.
     pub fn matvec_t(&self, y: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.matvec_t_into(y, &mut out);
+        out
+    }
+
+    /// `A^T @ y` into a caller-owned buffer — allocation-free once the
+    /// buffer reached capacity; same per-column `dot_indexed` sequence as
+    /// [`matvec_t`](CscMatrix::matvec_t), so results are bit-identical.
+    pub fn matvec_t_into(&self, y: &[f64], out: &mut Vec<f64>) {
         assert_eq!(y.len(), self.m);
-        (0..self.n)
-            .map(|j| {
-                let (ri, vs) = self.col(j);
-                crate::linalg::dot_indexed(ri, vs, y)
-            })
-            .collect()
+        out.clear();
+        out.reserve(self.n);
+        for j in 0..self.n {
+            let (ri, vs) = self.col(j);
+            out.push(crate::linalg::dot_indexed(ri, vs, y));
+        }
     }
 
     /// Squared norms of all columns.
@@ -227,6 +246,27 @@ mod tests {
         assert_eq!(a.matvec(&[1.0, 1.0, 1.0]), vec![3.0, 3.0, 9.0]);
         assert_eq!(a.matvec(&[0.0, 0.0, 0.0]), vec![0.0, 0.0, 0.0]);
         assert_eq!(a.matvec_t(&[1.0, 1.0, 1.0]), vec![5.0, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn matvec_into_matches_and_is_allocation_free_after_warmup() {
+        let a = sample();
+        let x = [0.5, -1.0, 2.0];
+        let y = [1.0, 0.25, -2.0];
+        let mut mv = Vec::new();
+        let mut mvt = Vec::new();
+        a.matvec_into(&x, &mut mv);
+        a.matvec_t_into(&y, &mut mvt);
+        assert_eq!(mv, a.matvec(&x));
+        assert_eq!(mvt, a.matvec_t(&y));
+        // Steady state: the warmed buffers never touch the allocator.
+        let before = crate::testkit::alloc::current_thread_allocations();
+        for _ in 0..10 {
+            a.matvec_into(&x, &mut mv);
+            a.matvec_t_into(&y, &mut mvt);
+        }
+        let after = crate::testkit::alloc::current_thread_allocations();
+        assert_eq!(after - before, 0, "pooled matvec allocated");
     }
 
     #[test]

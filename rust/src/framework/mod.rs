@@ -73,7 +73,16 @@ pub trait DistEngine {
 
     fn num_workers(&self) -> usize;
 
-    /// Columns per worker.
+    /// Local sub-solvers per worker (nested two-level parallelism;
+    /// DESIGN.md §10). 1 for a classic flat engine.
+    fn threads_per_worker(&self) -> usize {
+        1
+    }
+
+    /// Columns per local solver — one entry per worker for flat engines,
+    /// one per *sub-shard* (`num_workers · threads_per_worker` entries,
+    /// rank-major) for nested engines, so H resolution against the mean
+    /// sub-problem size matches the equivalent flat `K·T` ring.
     fn n_locals(&self) -> Vec<usize>;
 
     /// Execute one round: broadcast shared state, run H local steps per
@@ -106,7 +115,9 @@ pub(crate) fn scatter_alpha(data: &[WorkerData], alpha: &mut [Vec<f64>], alpha_g
     }
 }
 
-/// Shared engine internals: partitioned data + per-worker α state.
+/// Shared engine internals: partitioned data + per-solver α state (one
+/// entry per worker, or per sub-shard in a nested K·T layout — the
+/// gather/scatter by global column ids is layout-agnostic).
 pub(crate) struct WorkerSet {
     pub data: Vec<WorkerData>,
     pub alpha: Vec<Vec<f64>>,
@@ -182,6 +193,19 @@ pub struct EngineOptions {
     /// either way (asserted by `tests/integration_sparse_frames.rs`);
     /// this is the A/B baseline for byte accounting and the H-sweep bench.
     pub dense_frames: bool,
+    /// Local sub-solvers per worker (nested two-level parallelism,
+    /// DESIGN.md §10). Every worker rank sub-partitions its columns into
+    /// this many sub-shards — the sub-shards ARE the parts of the flat
+    /// `K·T` partitioning, σ′ becomes γ·K·T and per-shard seeds use the
+    /// flat rank ids, so trajectories are **bit-identical** to a flat
+    /// `K·T` ring (`tests/integration_nested.rs`). Physically parallel in
+    /// the threads engine (persistent sub-pool per rank); modeled in the
+    /// virtual-clock engines via
+    /// [`OverheadModel::intra_worker_speedup`]. Inert for `mllib-sgd`
+    /// (its solver is one gradient step, not a partitionable CoCoA
+    /// subproblem). An explicit `Engine::Threads { t, .. } > 0` wins over
+    /// this field.
+    pub threads_per_worker: usize,
 }
 
 impl Default for EngineOptions {
@@ -194,6 +218,7 @@ impl Default for EngineOptions {
             force_layout: None,
             torrent_broadcast: false,
             dense_frames: false,
+            threads_per_worker: 1,
         }
     }
 }
@@ -216,8 +241,12 @@ pub enum Engine {
     Impl(Impl),
     /// Physically parallel rank-per-thread engine (wall-clock timing, MPI
     /// semantics). `k = 0` means "use `cfg.workers`"; any other value
-    /// overrides the worker count.
-    Threads { k: usize },
+    /// overrides the worker count. `t` is the number of local sub-solvers
+    /// per rank (nested two-level parallelism, DESIGN.md §10): `t = 0`
+    /// defers to [`EngineOptions::threads_per_worker`], `t >= 1` overrides
+    /// it. Nested trajectories are bit-identical to the flat
+    /// `Threads { k: k·t, t: 1 }` ring.
+    Threads { k: usize, t: usize },
     /// Parameter-server engine. `staleness = 0` is the synchronous mode
     /// (bit-identical trajectories to MPI); larger values let workers
     /// compute against views that many rounds old, damped by 1/(1+s).
@@ -231,39 +260,59 @@ impl From<Impl> for Engine {
 }
 
 impl Engine {
+    /// The thread engine with `k` ranks (0 = `cfg.workers`), one local
+    /// solver each.
+    pub fn threads(k: usize) -> Engine {
+        Engine::Threads { k, t: 0 }
+    }
+
+    /// The thread engine with `k` ranks × `t` local sub-solvers per rank
+    /// (nested two-level parallelism; bit-identical to `threads(k·t)`).
+    pub fn threads_nested(k: usize, t: usize) -> Engine {
+        Engine::Threads { k, t }
+    }
+
     /// Human-readable registry label (CLI tables, reports).
     pub fn label(&self) -> String {
         match self {
             Engine::Impl(imp) => imp.name().to_string(),
-            Engine::Threads { k: 0 } => "threads".to_string(),
-            Engine::Threads { k } => format!("threads:{}", k),
+            Engine::Threads { k: 0, t: 0 | 1 } => "threads".to_string(),
+            Engine::Threads { k, t: 0 | 1 } => format!("threads:{}", k),
+            Engine::Threads { k, t } => format!("threads:{}:{}", k, t),
             Engine::ParamServer { staleness: 0 } => "param-server".to_string(),
             Engine::ParamServer { staleness } => format!("param-server:{}", staleness),
         }
     }
 
     /// Parse CLI aliases: every [`Impl::parse`] alias, plus `threads`
-    /// (optionally `threads:K`) and `ps` / `param-server` (optionally
-    /// `ps:STALENESS`).
+    /// (optionally `threads:K` or `threads:K:T` for K ranks × T local
+    /// sub-solvers) and `ps` / `param-server` (optionally `ps:STALENESS`).
     pub fn parse(s: &str) -> Option<Engine> {
         if let Some(imp) = Impl::parse(s) {
             return Some(Engine::Impl(imp));
         }
         let lower = s.to_ascii_lowercase();
-        let (head, arg) = match lower.split_once(':') {
-            Some((h, a)) => (h, Some(a)),
-            None => (lower.as_str(), None),
-        };
-        let num = |default: usize| -> Option<usize> {
-            match arg {
+        let mut segs = lower.split(':');
+        let head = segs.next()?;
+        let args: Vec<&str> = segs.collect();
+        let num = |i: usize, default: usize| -> Option<usize> {
+            match args.get(i) {
                 None => Some(default),
                 Some(a) => a.parse().ok(),
             }
         };
-        match head {
-            "threads" => Some(Engine::Threads { k: num(0)? }),
-            "ps" | "param-server" | "param_server" => {
-                Some(Engine::ParamServer { staleness: num(0)? })
+        match (head, args.len()) {
+            ("threads", 0 | 1) => Some(Engine::Threads { k: num(0, 0)?, t: 0 }),
+            ("threads", 2) => {
+                let (k, t) = (num(0, 0)?, num(1, 0)?);
+                // threads:K:T needs an explicit sub-solver count >= 1.
+                if t == 0 {
+                    return None;
+                }
+                Some(Engine::Threads { k, t })
+            }
+            ("ps" | "param-server" | "param_server", 0 | 1) => {
+                Some(Engine::ParamServer { staleness: num(0, 0)? })
             }
             _ => None,
         }
@@ -274,7 +323,7 @@ impl Engine {
         Engine::Impl(Impl::SparkCOpt),
         Engine::Impl(Impl::PySparkCOpt),
         Engine::Impl(Impl::Mpi),
-        Engine::Threads { k: 0 },
+        Engine::Threads { k: 0, t: 0 },
         Engine::ParamServer { staleness: 0 },
     ];
 }
@@ -307,6 +356,12 @@ pub fn build_engine_with(
 /// elsewhere, exactly as they always were for the virtual engines.
 /// `time_scale` governs the virtual clock and is inert for the
 /// wall-clock thread engine.
+///
+/// `threads_per_worker` (or an explicit `Engine::Threads { t, .. }`)
+/// switches every family except `mllib-sgd` into the nested two-level
+/// layout: ONE flat `K·T` [`Partitioning`] whose parts become the
+/// sub-shards, grouped `T` per rank — the construction DESIGN.md §10
+/// proves bit-identical to the flat ring.
 pub fn build_any(
     engine: Engine,
     ds: &Dataset,
@@ -316,7 +371,7 @@ pub fn build_any(
     cfg.validate().expect("invalid TrainConfig");
     let cfg_owned;
     let cfg = match engine {
-        Engine::Threads { k } if k > 0 => {
+        Engine::Threads { k, .. } if k > 0 => {
             let mut c = cfg.clone();
             c.workers = k;
             cfg_owned = c;
@@ -324,7 +379,18 @@ pub fn build_any(
         }
         _ => cfg,
     };
-    let parts = Partitioning::build(cfg.partitioner, &ds.a, cfg.workers, cfg.seed);
+    // Resolve the sub-solver count once; engines read it back from the
+    // normalized options. An explicit `threads:K:T` wins over the option;
+    // MLlib's gradient step is not a partitionable CoCoA subproblem.
+    let tpw = match engine {
+        Engine::Threads { t, .. } if t > 0 => t,
+        Engine::Impl(Impl::MllibSgd) => 1,
+        _ => opts.threads_per_worker.max(1),
+    };
+    let mut opts_resolved = opts.clone();
+    opts_resolved.threads_per_worker = tpw;
+    let opts = &opts_resolved;
+    let parts = Partitioning::build_nested(cfg.partitioner, &ds.a, cfg.workers, tpw, cfg.seed);
     let tau = opts.time_scale.unwrap_or_else(|| auto_time_scale(ds.m(), ds.n()));
     let cluster = ClusterModel::paper_testbed(tau);
     let model = OverheadModel::paper_defaults(cluster);
@@ -397,17 +463,31 @@ mod tests {
         use crate::config::Impl;
         assert_eq!(Engine::parse("mpi"), Some(Engine::Impl(Impl::Mpi)));
         assert_eq!(Engine::parse("b*"), Some(Engine::Impl(Impl::SparkCOpt)));
-        assert_eq!(Engine::parse("threads"), Some(Engine::Threads { k: 0 }));
-        assert_eq!(Engine::parse("threads:4"), Some(Engine::Threads { k: 4 }));
+        assert_eq!(Engine::parse("threads"), Some(Engine::threads(0)));
+        assert_eq!(Engine::parse("threads:4"), Some(Engine::threads(4)));
+        assert_eq!(
+            Engine::parse("threads:4:2"),
+            Some(Engine::threads_nested(4, 2))
+        );
+        assert_eq!(
+            Engine::parse("threads:0:8"),
+            Some(Engine::Threads { k: 0, t: 8 })
+        );
         assert_eq!(Engine::parse("ps"), Some(Engine::ParamServer { staleness: 0 }));
         assert_eq!(
             Engine::parse("param-server:2"),
             Some(Engine::ParamServer { staleness: 2 })
         );
         assert!(Engine::parse("threads:x").is_none());
+        assert!(Engine::parse("threads:2:x").is_none());
+        assert!(Engine::parse("threads:2:0").is_none()); // explicit T must be >= 1
+        assert!(Engine::parse("threads:2:2:2").is_none());
         assert!(Engine::parse("flink").is_none());
-        assert_eq!(Engine::parse("THREADS"), Some(Engine::Threads { k: 0 }));
-        assert_eq!(Engine::Threads { k: 4 }.label(), "threads:4");
+        assert_eq!(Engine::parse("THREADS"), Some(Engine::threads(0)));
+        assert_eq!(Engine::threads(4).label(), "threads:4");
+        assert_eq!(Engine::Threads { k: 4, t: 1 }.label(), "threads:4");
+        assert_eq!(Engine::threads_nested(4, 2).label(), "threads:4:2");
+        assert_eq!(Engine::threads(0).label(), "threads");
         assert_eq!(Engine::ParamServer { staleness: 0 }.label(), "param-server");
     }
 
@@ -417,14 +497,15 @@ mod tests {
         let mut cfg = TrainConfig::default_for(&ds);
         cfg.workers = 3;
         for engine in [
-            Engine::Threads { k: 0 },
-            Engine::Threads { k: 2 },
+            Engine::threads(0),
+            Engine::threads(2),
+            Engine::threads_nested(2, 2),
             Engine::ParamServer { staleness: 0 },
             Engine::ParamServer { staleness: 2 },
         ] {
             let mut eng = build_any(engine, &ds, &cfg, &EngineOptions::default());
             let expect_k = match engine {
-                Engine::Threads { k: 2 } => 2,
+                Engine::Threads { k, .. } if k > 0 => k,
                 _ => 3,
             };
             assert_eq!(eng.num_workers(), expect_k, "{}", engine.label());
@@ -434,6 +515,31 @@ mod tests {
             assert!(dv.iter().any(|&x| x != 0.0), "{}", engine.label());
             assert!(timing.bytes_up > 0, "{}", engine.label());
         }
+    }
+
+    #[test]
+    fn nested_options_apply_to_every_family_and_are_inert_for_mllib() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 2;
+        let opts = EngineOptions {
+            threads_per_worker: 2,
+            ..Default::default()
+        };
+        for engine in Engine::FAMILIES {
+            let eng = build_any(engine, &ds, &cfg, &opts);
+            assert_eq!(eng.num_workers(), 2, "{}", engine.label());
+            assert_eq!(eng.threads_per_worker(), 2, "{}", engine.label());
+            // n_locals reports per-sub-shard sizes: K·T rank-major entries
+            // covering every column once.
+            let n_locals = eng.n_locals();
+            assert_eq!(n_locals.len(), 4, "{}", engine.label());
+            assert_eq!(n_locals.iter().sum::<usize>(), ds.n(), "{}", engine.label());
+        }
+        // MLlib's gradient step has no sub-shards: the option is inert.
+        let mllib = build_any(Engine::Impl(Impl::MllibSgd), &ds, &cfg, &opts);
+        assert_eq!(mllib.threads_per_worker(), 1);
+        assert_eq!(mllib.n_locals().len(), 2);
     }
 
     #[test]

@@ -88,6 +88,13 @@ pub struct OverheadModel {
     // --- MPI ---
     /// Synchronization barrier per collective.
     pub mpi_barrier_s: f64,
+
+    // --- multi-core workers (nested parallelism, DESIGN.md §10) ---
+    /// Serial/contention fraction of one worker's compute when `t` local
+    /// sub-solvers share its cores (memory-bandwidth pressure on the
+    /// shared residual reads plus the rank-local combine). Feeds
+    /// [`intra_worker_speedup`](OverheadModel::intra_worker_speedup).
+    pub intra_worker_serial_frac: f64,
 }
 
 impl OverheadModel {
@@ -109,6 +116,7 @@ impl OverheadModel {
             record_iter_python_s: 5e-6,
             pyc_call_s: 100e-6,
             mpi_barrier_s: 30e-6,
+            intra_worker_serial_frac: 0.05,
         }
     }
 
@@ -178,6 +186,29 @@ impl OverheadModel {
     pub fn mpi_barrier(&self) -> f64 {
         self.mpi_barrier_s * self.tau()
     }
+
+    // -- multi-core workers --
+
+    /// Modeled speedup of one worker's local compute when `t` sub-solvers
+    /// run on its cores (nested parallelism, DESIGN.md §10). Amdahl-style
+    /// linear scaling degraded by a serial/contention fraction `c`:
+    ///
+    /// ```text
+    /// speedup(t) = t / (1 + c·(t − 1)),   c = intra_worker_serial_frac
+    /// ```
+    ///
+    /// `speedup(1) = 1` exactly (a t = 1 round divides by 1.0, keeping the
+    /// single-solver virtual clock bit-identical), and `speedup(t) < t`
+    /// for every c > 0 — the paper's one-rank-per-*core* MPI baseline is
+    /// the ceiling this curve approaches. The threads engine does not use
+    /// it: its timing is measured wall clock.
+    pub fn intra_worker_speedup(&self, t: usize) -> f64 {
+        if t <= 1 {
+            return 1.0;
+        }
+        let tf = t as f64;
+        tf / (1.0 + self.intra_worker_serial_frac * (tf - 1.0))
+    }
 }
 
 #[cfg(test)]
@@ -224,6 +255,25 @@ mod tests {
         assert!(m.mpi_barrier() < m.spark_stage() / 100.0);
         // Python-C crossing costs more than JNI
         assert!(m.pyc_call() > m.jni_call());
+    }
+
+    #[test]
+    fn intra_worker_speedup_curve_is_sane() {
+        let m = model(1.0);
+        assert_eq!(m.intra_worker_speedup(1), 1.0); // exact: t=1 is a no-op
+        let s2 = m.intra_worker_speedup(2);
+        let s4 = m.intra_worker_speedup(4);
+        let s8 = m.intra_worker_speedup(8);
+        // Monotone in t, sublinear, and close to linear at small t with
+        // the default 5% serial fraction.
+        assert!(1.0 < s2 && s2 < 2.0);
+        assert!(s2 < s4 && s4 < 4.0);
+        assert!(s4 < s8 && s8 < 8.0);
+        assert!(s4 > 3.0, "speedup(4) {} unexpectedly poor", s4);
+        // A fully serial worker never speeds up.
+        let mut serial = model(1.0);
+        serial.intra_worker_serial_frac = 1.0;
+        assert_eq!(serial.intra_worker_speedup(4), 1.0);
     }
 
     #[test]

@@ -36,11 +36,18 @@ use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
 
 /// First-class parameter-server engine (see module docs).
 pub struct ParamServerEngine {
+    /// One entry per sub-shard (rank-major; `t = 1` = classic flat).
     ws: WorkerSet,
     solvers: Vec<NativeScd>,
     results: Vec<SolveResult>,
     slots: Vec<DeltaSlot>,
     reducer: DeltaReducer,
+    /// Local sub-solvers per worker (nested parallelism; DESIGN.md §10).
+    t: usize,
+    /// Flat K·t tree split into rank-local and cross-rank stages.
+    plan: linalg::NestedTreePlan,
+    /// Modeled intra-worker speedup of t sub-solvers per rank.
+    speedup: f64,
     model: OverheadModel,
     clock: VirtualClock,
     staleness: usize,
@@ -65,25 +72,34 @@ impl ParamServerEngine {
         staleness: usize,
         opts: &EngineOptions,
     ) -> ParamServerEngine {
+        let t = opts.threads_per_worker.max(1);
+        assert_eq!(
+            parts.parts.len(),
+            cfg.workers * t,
+            "nested layout needs the flat K·t partitioning"
+        );
         let ws = WorkerSet::build(ds, parts);
-        let k = ws.data.len();
+        let n_shards = ws.data.len();
         let cutover = if opts.dense_frames {
             0
         } else {
             linalg::raw_sparse_cutover(ds.m())
         };
         ParamServerEngine {
-            solvers: (0..k).map(|_| NativeScd::new()).collect(),
-            results: (0..k).map(|_| SolveResult::default()).collect(),
-            slots: (0..k).map(|_| DeltaSlot::new()).collect(),
+            solvers: (0..n_shards).map(|_| NativeScd::new()).collect(),
+            results: (0..n_shards).map(|_| SolveResult::default()).collect(),
+            slots: (0..n_shards).map(|_| DeltaSlot::new()).collect(),
             reducer: DeltaReducer::new(ds.m(), cutover),
+            t,
+            plan: linalg::NestedTreePlan::new(cfg.workers, t),
+            speedup: model.intra_worker_speedup(t),
             model,
             clock: VirtualClock::new(),
             staleness,
             damping: 1.0 / (1.0 + staleness as f64),
             history: VecDeque::with_capacity(staleness + 1),
             problem: cfg.problem,
-            sigma: cfg.sigma(),
+            sigma: cfg.sigma_t(t),
             b: ds.b.clone(),
             m: ds.m(),
             ws,
@@ -105,7 +121,11 @@ impl DistEngine for ParamServerEngine {
     }
 
     fn num_workers(&self) -> usize {
-        self.ws.data.len()
+        self.ws.data.len() / self.t
+    }
+
+    fn threads_per_worker(&self) -> usize {
+        self.t
     }
 
     fn n_locals(&self) -> Vec<usize> {
@@ -125,7 +145,9 @@ impl DistEngine for ParamServerEngine {
     }
 
     fn run_round(&mut self, v: &[f64], h: usize, round_seed: u64) -> (Vec<f64>, RoundTiming) {
+        let t = self.t;
         let k = self.num_workers();
+        let n_shards = self.ws.data.len();
 
         // Record the fresh coordinator view, then read the one `staleness`
         // rounds old (ring recycles the evicted buffer).
@@ -140,24 +162,30 @@ impl DistEngine for ParamServerEngine {
         let view = &self.history[self.staleness.min(self.history.len() - 1)];
 
         // ---- 1. local solves against the (possibly stale) view ----------
-        let mut computes = vec![0.0; k];
-        for w in 0..k {
+        // Sub-shard g is rank g of the flat K·t ring (seed, σ′, columns).
+        let mut sub_computes = vec![0.0; n_shards];
+        for g in 0..n_shards {
             let req = SolveRequest {
                 v: view,
                 b: &self.b,
                 h,
                 problem: &self.problem,
                 sigma: self.sigma,
-                seed: round_seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                seed: round_seed ^ (g as u64).wrapping_mul(0x9E3779B97F4A7C15),
             };
             let t0 = Instant::now();
-            self.solvers[w].solve_into(
-                &self.ws.data[w],
-                &self.ws.alpha[w],
+            self.solvers[g].solve_into(
+                &self.ws.data[g],
+                &self.ws.alpha[g],
                 &req,
-                &mut self.results[w],
+                &mut self.results[g],
             );
-            computes[w] = t0.elapsed().as_secs_f64();
+            sub_computes[g] = t0.elapsed().as_secs_f64();
+        }
+        // t sub-solvers share the worker's cores (DESIGN.md §10).
+        let mut computes = vec![0.0; k];
+        for w in 0..k {
+            computes[w] = sub_computes[w * t..(w + 1) * t].iter().sum::<f64>() / self.speedup;
         }
         let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
 
@@ -178,12 +206,23 @@ impl DistEngine for ParamServerEngine {
         for (al, res) in self.ws.alpha.iter_mut().zip(self.results.iter()) {
             linalg::add_assign(al, &res.delta_alpha);
         }
-        let mut up_per_worker = vec![0u64; k];
-        for (w, (slot, res)) in self.slots.iter_mut().zip(self.results.iter()).enumerate() {
+        for (slot, res) in self.slots.iter_mut().zip(self.results.iter()) {
             self.reducer.load(slot, &res.delta_v);
-            up_per_worker[w] = slot.raw_bytes(self.m) as u64;
         }
-        let agg = self.reducer.reduce_collect(&mut self.slots);
+        // Rank-local combines of the flat K·t tree run inside the worker;
+        // only the forest roots are pushed to the server (DESIGN.md §10).
+        for w in 0..k {
+            self.reducer
+                .reduce_pairs(&mut self.slots[w * t..(w + 1) * t], self.plan.local_pairs(w));
+        }
+        let mut up_per_worker = vec![0u64; k];
+        for (w, up) in up_per_worker.iter_mut().enumerate() {
+            for &ri in self.plan.roots(w) {
+                *up += self.slots[w * t + ri].raw_bytes(self.m) as u64;
+            }
+        }
+        self.reducer.reduce_pairs(&mut self.slots, self.plan.cross_pairs());
+        let agg = self.slots[0].densify_collect(self.m);
         let t_master = t0.elapsed().as_secs_f64();
 
         // ---- 3. server star topology on the virtual clock ----------------

@@ -31,6 +31,7 @@ use crate::util::pool::BytePool;
 
 pub struct PySparkEngine {
     imp: Impl,
+    /// One entry per sub-shard (rank-major, `K·t`; `t = 1` = flat).
     data: Rc<Vec<WorkerData>>,
     alpha: Rc<RefCell<Vec<Vec<f64>>>>,
     solvers: Rc<RefCell<Vec<Box<dyn LocalSolver>>>>,
@@ -42,7 +43,15 @@ pub struct PySparkEngine {
     b: Rc<Vec<f64>>,
     n_total: usize,
     m: usize,
+    /// Local sub-solvers per task (nested parallelism; DESIGN.md §10).
+    t: usize,
+    /// Flat K·t tree split into task-local and driver stages.
+    plan: linalg::NestedTreePlan,
+    /// Modeled intra-worker speedup of t sub-solvers per executor.
+    speedup: f64,
     records_per_task: Vec<usize>,
+    /// Columns per *rank* (sub-shard sizes summed) — the α-payload model.
+    rank_n_locals: Vec<usize>,
     compute_multiplier: f64,
     /// Pooled pickle frames (driver-side encode reuses one buffer/round).
     frame_pool: BytePool,
@@ -65,20 +74,32 @@ impl PySparkEngine {
             imp,
             Impl::PySpark | Impl::PySparkC | Impl::PySparkCOpt
         ));
+        // Nested layout (DESIGN.md §10): t sub-shards per rank over the
+        // flat K·t partitioning.
+        let t = opts.threads_per_worker.max(1);
+        assert_eq!(
+            parts.parts.len(),
+            cfg.workers * t,
+            "nested layout needs the flat K·t partitioning"
+        );
         let data: Vec<WorkerData> = parts
             .parts
             .iter()
             .map(|cols| WorkerData::from_columns(&ds.a, cols))
             .collect();
-        let k = data.len();
+        let n_shards = data.len();
+        let k = n_shards / t;
         let alpha: Vec<Vec<f64>> = data.iter().map(|d| vec![0.0; d.n_local()]).collect();
+        let rank_n_locals: Vec<usize> = (0..k)
+            .map(|w| data[w * t..(w + 1) * t].iter().map(|d| d.n_local()).sum())
+            .collect();
 
         let cal = super::calibration();
         let (solvers, compute_multiplier): (Vec<Box<dyn LocalSolver>>, f64) = match imp {
             Impl::PySpark => {
                 if opts.real_managed_compute {
                     (
-                        (0..k)
+                        (0..n_shards)
                             .map(|_| {
                                 Box::new(managed::PythonLikeScd::new()) as Box<dyn LocalSolver>
                             })
@@ -87,7 +108,7 @@ impl PySparkEngine {
                     )
                 } else {
                     (
-                        (0..k)
+                        (0..n_shards)
                             .map(|_| Box::new(scd::NativeScd::new()) as Box<dyn LocalSolver>)
                             .collect(),
                         cal.python_multiplier,
@@ -95,17 +116,18 @@ impl PySparkEngine {
                 }
             }
             _ => (
-                (0..k)
+                (0..n_shards)
                     .map(|_| Box::new(scd::NativeScd::new()) as Box<dyn LocalSolver>)
                     .collect(),
                 1.0,
             ),
         };
 
+        // One task per RANK covering its t sub-shards.
         let records_per_task: Vec<usize> = match imp {
             // (C) and (D) both iterate the record layout in python (§4.1-D:
             // flattening made things *worse* in python, so (D) keeps it).
-            Impl::PySpark | Impl::PySparkC => data.iter().map(|d| d.n_local()).collect(),
+            Impl::PySpark | Impl::PySparkC => rank_n_locals.clone(),
             // (D)*: meta-RDD — data lives in native memory.
             Impl::PySparkCOpt => vec![0; k],
             _ => unreachable!(),
@@ -121,17 +143,21 @@ impl PySparkEngine {
             alpha: Rc::new(RefCell::new(alpha)),
             solvers: Rc::new(RefCell::new(solvers)),
             base,
+            speedup: model.intra_worker_speedup(t),
             model,
             clock: VirtualClock::new(),
             problem: cfg.problem,
-            sigma: cfg.sigma(),
+            sigma: cfg.sigma_t(t),
             b: Rc::new(ds.b.clone()),
             n_total: ds.n(),
             m: ds.m(),
+            t,
+            plan: linalg::NestedTreePlan::new(k, t),
             records_per_task,
+            rank_n_locals,
             compute_multiplier,
             frame_pool: BytePool::with_buffers(1, pickle_encoded_len(ds.m())),
-            slots: (0..k).map(|_| DeltaSlot::new()).collect(),
+            slots: (0..n_shards).map(|_| DeltaSlot::new()).collect(),
             reducer: DeltaReducer::new(
                 ds.m(),
                 if opts.dense_frames {
@@ -154,7 +180,11 @@ impl DistEngine for PySparkEngine {
     }
 
     fn num_workers(&self) -> usize {
-        self.data.len()
+        self.data.len() / self.t
+    }
+
+    fn threads_per_worker(&self) -> usize {
+        self.t
     }
 
     fn n_locals(&self) -> Vec<usize> {
@@ -194,9 +224,10 @@ impl DistEngine for PySparkEngine {
         let alpha_down_bytes: Vec<u64> = if self.persistent() {
             vec![0; k]
         } else {
-            self.data
+            // One α payload per task, covering the rank's t sub-shards.
+            self.rank_n_locals
                 .iter()
-                .map(|d| pickle_encoded_len(d.n_local()) as u64)
+                .map(|&nl| pickle_encoded_len(nl) as u64)
                 .collect()
         };
         let down_per_worker: Vec<u64> = alpha_down_bytes
@@ -212,6 +243,8 @@ impl DistEngine for PySparkEngine {
         self.frame_pool.put(v_frame);
 
         // ---- 2. the stage -------------------------------------------------
+        // One task per rank; a nested task runs its t sub-solvers (flat
+        // ranks w·t..(w+1)·t — same seeds/σ′ as the flat K·t ring).
         let data = Rc::clone(&self.data);
         let alpha = Rc::clone(&self.alpha);
         let solvers = Rc::clone(&self.solvers);
@@ -219,29 +252,36 @@ impl DistEngine for PySparkEngine {
         let v_shared: Rc<Vec<f64>> = Rc::new(v.to_vec());
         let (problem, sigma) = (self.problem, self.sigma);
         let records_per_task = self.records_per_task.clone();
+        let t = self.t;
 
         let job = self.base.map_partitions_indexed(move |p, ids, ctx| {
             let w = ids[0];
             debug_assert_eq!(p, w);
             ctx.read_records(records_per_task[w]);
-            let req = SolveRequest {
-                v: &v_shared,
-                b: &b,
-                h,
-                problem: &problem,
-                sigma,
-                seed: round_seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
-            };
-            let alpha_w = alpha.borrow()[w].clone();
-            let t0 = Instant::now();
-            let res = solvers.borrow_mut()[w].solve(&data[w], &alpha_w, &req);
-            let secs = t0.elapsed().as_secs_f64();
-            vec![(w, res, secs)]
+            let mut out = Vec::with_capacity(t);
+            for s in 0..t {
+                let g = w * t + s;
+                let req = SolveRequest {
+                    v: &v_shared,
+                    b: &b,
+                    h,
+                    problem: &problem,
+                    sigma,
+                    seed: round_seed ^ (g as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                };
+                let alpha_g = alpha.borrow()[g].clone();
+                let t0 = Instant::now();
+                let res = solvers.borrow_mut()[g].solve(&data[g], &alpha_g, &req);
+                let secs = t0.elapsed().as_secs_f64();
+                out.push((g, res, secs));
+            }
+            out
         });
         let (mut outs, stats) = job.collect_with_stats();
         debug_assert_eq!(stats.tasks, k);
-        // Rank order for the deterministic reduction tree below.
-        outs.sort_by_key(|(w, _, _)| *w);
+        debug_assert_eq!(outs.len(), k * t);
+        // Flat-rank order for the deterministic reduction tree below.
+        outs.sort_by_key(|(g, _, _)| *g);
 
         // ---- 3. per-task virtual times ------------------------------------
         let native_call = match self.imp {
@@ -251,33 +291,50 @@ impl DistEngine for PySparkEngine {
         let mut task_times = vec![0.0; k];
         let mut computes = vec![0.0; k];
         let mut up_per_worker = vec![0u64; k];
-        // Each python worker pickles its Δv as the cheaper of the
-        // index/value-array (sparse) or flat-list (dense) frames — the
+        for (slot, (_, res, _)) in self.slots.iter_mut().zip(outs.iter()) {
+            self.reducer.load(slot, &res.delta_v);
+        }
+        // Task-local stage of the flat K·t tree (DESIGN.md §10).
+        for w in 0..k {
+            self.reducer
+                .reduce_pairs(&mut self.slots[w * t..(w + 1) * t], self.plan.local_pairs(w));
+        }
+        // Each python worker pickles its forest roots as the cheaper of
+        // the index/value-array (sparse) or flat-list (dense) frames — the
         // codec really runs on a pooled buffer and the model is charged
         // the ACTUAL encoded bytes.
         let mut up_frame = self.frame_pool.take_cleared();
-        for (w, res, secs) in &outs {
-            let compute = secs * self.compute_multiplier;
-            computes[*w] = compute;
-            self.reducer.load(&mut self.slots[*w], &res.delta_v);
-            PickleSer::encode_delta_into(&self.slots[*w], &mut up_frame);
-            debug_assert_eq!(
-                PickleSer::decode_delta_dense(&up_frame).unwrap(),
-                res.delta_v
-            );
-            let dv = up_frame.len() as u64;
+        for w in 0..k {
+            let solve_s: f64 = outs[w * t..(w + 1) * t]
+                .iter()
+                .map(|(_, _, secs)| *secs)
+                .sum();
+            // t sub-solves share the python worker's cores; t = 1 divides
+            // by exactly 1.0.
+            let compute = solve_s * self.compute_multiplier / self.speedup;
+            computes[w] = compute;
+            let mut dv = 0u64;
+            for &ri in self.plan.roots(w) {
+                let slot = &self.slots[w * t + ri];
+                PickleSer::encode_delta_into(slot, &mut up_frame);
+                debug_assert_eq!(
+                    PickleSer::decode_delta_dense(&up_frame).unwrap(),
+                    slot.densify_collect(self.m)
+                );
+                dv += up_frame.len() as u64;
+            }
             let da = if self.persistent() {
                 0
             } else {
-                pickle_encoded_len(res.delta_alpha.len()) as u64
+                pickle_encoded_len(self.rank_n_locals[w]) as u64
             };
             let up = dv + da;
-            up_per_worker[*w] = up;
-            task_times[*w] = self.model.spark_task_launch()
+            up_per_worker[w] = up;
+            task_times[w] = self.model.spark_task_launch()
                 + self.model.python_task()
-                + self.model.numpy_pickle(down_per_worker[*w])
-                + self.model.record_iter_python(self.records_per_task[*w])
-                + native_call
+                + self.model.numpy_pickle(down_per_worker[w])
+                + self.model.record_iter_python(self.records_per_task[w])
+                + native_call * t as f64
                 + compute
                 + self.model.numpy_pickle(up);
         }
@@ -292,17 +349,18 @@ impl DistEngine for PySparkEngine {
             + self.model.py4j_roundtrip()
             + self.model.numpy_pickle(bytes_up);
 
-        // Driver reduce: same sparse-aware pairwise tree as every other
-        // engine, in place (bit-identical Δv across substrates and frame
-        // representations, no zeroed accumulator).
+        // Driver reduce: the cross-rank pairs of the same flat tree every
+        // engine runs, in place (bit-identical Δv across substrates and
+        // frame representations, no zeroed accumulator).
         let t0 = Instant::now();
         {
             let mut alpha = self.alpha.borrow_mut();
-            for (w, res, _) in &outs {
-                linalg::add_assign(&mut alpha[*w], &res.delta_alpha);
+            for (g, res, _) in &outs {
+                linalg::add_assign(&mut alpha[*g], &res.delta_alpha);
             }
         }
-        let agg = self.reducer.reduce_collect(&mut self.slots);
+        self.reducer.reduce_pairs(&mut self.slots, self.plan.cross_pairs());
+        let agg = self.slots[0].densify_collect(self.m);
         debug_assert_eq!(agg.len(), self.m);
         let t_master = t0.elapsed().as_secs_f64();
 

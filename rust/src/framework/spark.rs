@@ -45,8 +45,19 @@ pub struct SparkEngine {
     b: Rc<Vec<f64>>,
     n_total: usize,
     m: usize,
+    /// Local sub-solvers per task (nested parallelism; DESIGN.md §10).
+    /// Always 1 for MLlib — a gradient step has no sub-shards. `data`,
+    /// `alpha`, `solvers` and `slots` then hold one entry per sub-shard
+    /// (rank-major, `K·t`).
+    t: usize,
+    /// Flat K·t tree split into task-local and driver stages.
+    plan: linalg::NestedTreePlan,
+    /// Modeled intra-worker speedup of t sub-solvers per executor.
+    speedup: f64,
     /// Records iterated per task (layout-dependent; see module docs).
     records_per_task: Vec<usize>,
+    /// Columns per *rank* (sub-shard sizes summed) — the α-payload model.
+    rank_n_locals: Vec<usize>,
     /// Virtual-clock multiplier applied to measured solver seconds.
     compute_multiplier: f64,
     /// Extra driver-side cost per round (py4j for the pySpark-driven MLlib).
@@ -75,27 +86,44 @@ impl SparkEngine {
             imp,
             Impl::SparkScala | Impl::SparkC | Impl::SparkCOpt | Impl::MllibSgd
         ));
+        // Nested layout: t sub-shards per rank, the parts being the flat
+        // K·t partitioning (DESIGN.md §10). MLlib's gradient step is not a
+        // partitionable CoCoA subproblem — t is forced to 1 there.
+        let t = if imp == Impl::MllibSgd {
+            1
+        } else {
+            opts.threads_per_worker.max(1)
+        };
+        assert_eq!(
+            parts.parts.len(),
+            cfg.workers * t,
+            "nested layout needs the flat K·t partitioning"
+        );
         let data: Vec<WorkerData> = parts
             .parts
             .iter()
             .map(|cols| WorkerData::from_columns(&ds.a, cols))
             .collect();
-        let k = data.len();
+        let n_shards = data.len();
+        let k = n_shards / t;
         let alpha: Vec<Vec<f64>> = data.iter().map(|d| vec![0.0; d.n_local()]).collect();
+        let rank_n_locals: Vec<usize> = (0..k)
+            .map(|w| data[w * t..(w + 1) * t].iter().map(|d| d.n_local()).sum())
+            .collect();
 
         let cal = super::calibration();
         let (solvers, compute_multiplier): (Vec<Box<dyn LocalSolver>>, f64) = match imp {
             Impl::SparkScala => {
                 if opts.real_managed_compute {
                     (
-                        (0..k)
+                        (0..n_shards)
                             .map(|_| Box::new(managed::ScalaLikeScd::new()) as Box<dyn LocalSolver>)
                             .collect(),
                         1.0,
                     )
                 } else {
                     (
-                        (0..k)
+                        (0..n_shards)
                             .map(|_| Box::new(scd::NativeScd::new()) as Box<dyn LocalSolver>)
                             .collect(),
                         cal.scala_multiplier,
@@ -103,7 +131,7 @@ impl SparkEngine {
                 }
             }
             Impl::MllibSgd => (
-                (0..k)
+                (0..n_shards)
                     .map(|_| {
                         Box::new(sgd::MiniBatchSgd::new(opts.sgd_step, opts.sgd_batch_fraction))
                             as Box<dyn LocalSolver>
@@ -112,7 +140,7 @@ impl SparkEngine {
                 cal.scala_multiplier,
             ),
             _ => (
-                (0..k)
+                (0..n_shards)
                     .map(|_| Box::new(scd::NativeScd::new()) as Box<dyn LocalSolver>)
                     .collect(),
                 1.0,
@@ -128,8 +156,9 @@ impl SparkEngine {
             Impl::SparkCOpt => super::LayoutOverride::Meta,
             _ => unreachable!(),
         });
+        // One task per RANK: its iterator covers the rank's t sub-shards.
         let records_per_task: Vec<usize> = match layout {
-            super::LayoutOverride::Records => data.iter().map(|d| d.n_local()).collect(),
+            super::LayoutOverride::Records => rank_n_locals.clone(),
             super::LayoutOverride::Flat => vec![1; k],
             super::LayoutOverride::Meta => vec![0; k],
         };
@@ -153,19 +182,23 @@ impl SparkEngine {
             solvers: Rc::new(RefCell::new(solvers)),
             base,
             sc,
+            speedup: model.intra_worker_speedup(t),
             model,
             clock: VirtualClock::new(),
             problem: cfg.problem,
-            sigma: cfg.sigma(),
+            sigma: cfg.sigma_t(t),
             b: Rc::new(ds.b.clone()),
             n_total: ds.n(),
             m: ds.m(),
+            t,
+            plan: linalg::NestedTreePlan::new(k, t),
             records_per_task,
+            rank_n_locals,
             compute_multiplier,
             extra_round_fixed,
             torrent: opts.torrent_broadcast,
             frame_pool: BytePool::with_buffers(1, java_encoded_len(ds.m())),
-            slots: (0..k).map(|_| DeltaSlot::new()).collect(),
+            slots: (0..n_shards).map(|_| DeltaSlot::new()).collect(),
             reducer: DeltaReducer::new(
                 ds.m(),
                 if opts.dense_frames {
@@ -188,7 +221,11 @@ impl DistEngine for SparkEngine {
     }
 
     fn num_workers(&self) -> usize {
-        self.data.len()
+        self.data.len() / self.t
+    }
+
+    fn threads_per_worker(&self) -> usize {
+        self.t
     }
 
     fn n_locals(&self) -> Vec<usize> {
@@ -231,9 +268,10 @@ impl DistEngine for SparkEngine {
             // MLlib broadcasts the full n-dim weight vector to every worker.
             vec![java_encoded_len(self.n_total) as u64; k]
         } else {
-            self.data
+            // One α payload per task, covering the rank's t sub-shards.
+            self.rank_n_locals
                 .iter()
-                .map(|d| java_encoded_len(d.n_local()) as u64)
+                .map(|&nl| java_encoded_len(nl) as u64)
                 .collect()
         };
         let down_per_worker: Vec<u64> = alpha_down_bytes
@@ -252,6 +290,8 @@ impl DistEngine for SparkEngine {
         self.frame_pool.put(v_frame);
 
         // ---- 2. The stage: mapPartitions(local solve) over the RDD ------
+        // One task per rank; a nested task runs its t sub-solvers (flat
+        // ranks w·t..(w+1)·t — same seeds/σ′ as the flat K·t ring).
         let data = Rc::clone(&self.data);
         let alpha = Rc::clone(&self.alpha);
         let solvers = Rc::clone(&self.solvers);
@@ -259,33 +299,40 @@ impl DistEngine for SparkEngine {
         let v_shared: Rc<Vec<f64>> = Rc::new(v.to_vec());
         let (problem, sigma) = (self.problem, self.sigma);
         let records_per_task = self.records_per_task.clone();
+        let t = self.t;
 
         let job = self.base.map_partitions_indexed(move |p, ids, ctx| {
             let w = ids[0];
             debug_assert_eq!(p, w);
             ctx.read_records(records_per_task[w]);
-            let req = SolveRequest {
-                v: &v_shared,
-                b: &b,
-                h,
-                problem: &problem,
-                sigma,
-                seed: round_seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
-            };
-            // The per-task α clone and owned result are deliberate: vanilla
-            // Spark has no persistent worker buffers — every task ships its
-            // state (that cost is the paper's point; the zero-alloc path
-            // lives in the MPI/threaded engines).
-            let alpha_w = alpha.borrow()[w].clone();
-            let t0 = Instant::now();
-            let res = solvers.borrow_mut()[w].solve(&data[w], &alpha_w, &req);
-            let secs = t0.elapsed().as_secs_f64();
-            vec![(w, res, secs)]
+            let mut out = Vec::with_capacity(t);
+            for s in 0..t {
+                let g = w * t + s;
+                let req = SolveRequest {
+                    v: &v_shared,
+                    b: &b,
+                    h,
+                    problem: &problem,
+                    sigma,
+                    seed: round_seed ^ (g as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                };
+                // The per-task α clone and owned result are deliberate:
+                // vanilla Spark has no persistent worker buffers — every
+                // task ships its state (that cost is the paper's point;
+                // the zero-alloc path lives in the MPI/threaded engines).
+                let alpha_g = alpha.borrow()[g].clone();
+                let t0 = Instant::now();
+                let res = solvers.borrow_mut()[g].solve(&data[g], &alpha_g, &req);
+                let secs = t0.elapsed().as_secs_f64();
+                out.push((g, res, secs));
+            }
+            out
         });
         let (mut outs, stats) = job.collect_with_stats();
         debug_assert_eq!(stats.tasks, k);
-        // Rank order for the deterministic reduction tree below.
-        outs.sort_by_key(|(w, _, _)| *w);
+        debug_assert_eq!(outs.len(), k * t);
+        // Flat-rank order for the deterministic reduction tree below.
+        outs.sort_by_key(|(g, _, _)| *g);
 
         // ---- 3. Per-task virtual times -----------------------------------
         let native_call = match self.imp {
@@ -295,36 +342,55 @@ impl DistEngine for SparkEngine {
         let mut task_times = vec![0.0; k];
         let mut computes = vec![0.0; k];
         let mut up_per_worker = vec![0u64; k];
-        // Each task emits its Δv as the cheaper of the sparse/dense java
-        // frames (the codec really runs — the pooled buffer below — and
-        // the model is charged the ACTUAL encoded bytes), and the frame
-        // lands in the worker's reduction slot.
+        for (slot, (_, res, _)) in self.slots.iter_mut().zip(outs.iter()) {
+            self.reducer.load(slot, &res.delta_v);
+        }
+        // Task-local stage: the within-block combines of the flat K·t tree
+        // run inside the executor before anything is serialized
+        // (DESIGN.md §10) — a flat round (t = 1) has no such pairs.
+        for w in 0..k {
+            self.reducer
+                .reduce_pairs(&mut self.slots[w * t..(w + 1) * t], self.plan.local_pairs(w));
+        }
+        // Each task emits its forest roots as the cheaper of the
+        // sparse/dense java frames (the codec really runs — the pooled
+        // buffer below — and the model is charged the ACTUAL encoded
+        // bytes).
         let mut up_frame = self.frame_pool.take_cleared();
-        for (w, res, secs) in &outs {
-            let compute = secs * self.compute_multiplier;
-            computes[*w] = compute;
-            self.reducer.load(&mut self.slots[*w], &res.delta_v);
+        for w in 0..k {
+            // t sub-solves share the executor's cores (DESIGN.md §10);
+            // t = 1 divides by exactly 1.0.
+            let solve_s: f64 = outs[w * t..(w + 1) * t]
+                .iter()
+                .map(|(_, _, secs)| *secs)
+                .sum();
+            let compute = solve_s * self.compute_multiplier / self.speedup;
+            computes[w] = compute;
             let up = if mllib {
                 java_encoded_len(self.n_total) as u64
             } else {
-                JavaSer::encode_delta_into(&self.slots[*w], &mut up_frame);
-                debug_assert_eq!(
-                    JavaSer::decode_delta_dense(&up_frame).unwrap(),
-                    res.delta_v
-                );
-                let dv = up_frame.len() as u64;
+                let mut dv = 0u64;
+                for &ri in self.plan.roots(w) {
+                    let slot = &self.slots[w * t + ri];
+                    JavaSer::encode_delta_into(slot, &mut up_frame);
+                    debug_assert_eq!(
+                        JavaSer::decode_delta_dense(&up_frame).unwrap(),
+                        slot.densify_collect(self.m)
+                    );
+                    dv += up_frame.len() as u64;
+                }
                 let da = if self.persistent() {
                     0
                 } else {
-                    java_encoded_len(res.delta_alpha.len()) as u64
+                    java_encoded_len(self.rank_n_locals[w]) as u64
                 };
                 dv + da
             };
-            up_per_worker[*w] = up;
-            task_times[*w] = self.model.spark_task_launch()
-                + self.model.java_deser(down_per_worker[*w])
-                + self.model.record_iter_scala(self.records_per_task[*w])
-                + native_call
+            up_per_worker[w] = up;
+            task_times[w] = self.model.spark_task_launch()
+                + self.model.java_deser(down_per_worker[w])
+                + self.model.record_iter_scala(self.records_per_task[w])
+                + native_call * t as f64
                 + compute
                 + self.model.java_ser(up);
         }
@@ -337,19 +403,20 @@ impl DistEngine for SparkEngine {
         let t_net_up = self.model.cluster.star_varied(&up_per_worker);
         let t_deser_driver = self.model.java_deser(bytes_up);
 
-        // Driver reduce: the same pairwise tree as the MPI engines (Δv
-        // stays bit-identical across substrates whatever mix of frame
-        // representations the tasks emitted), in place — no zeroed
-        // m-vector accumulator; sparse pairs merge, growth past the
+        // Driver reduce: the cross-rank pairs of the same flat tree every
+        // engine runs (Δv stays bit-identical across substrates whatever
+        // mix of frame representations the tasks emitted), in place — no
+        // zeroed m-vector accumulator; sparse pairs merge, growth past the
         // cutover promotes to dense.
         let t0 = Instant::now();
         {
             let mut alpha = self.alpha.borrow_mut();
-            for (w, res, _) in &outs {
-                linalg::add_assign(&mut alpha[*w], &res.delta_alpha);
+            for (g, res, _) in &outs {
+                linalg::add_assign(&mut alpha[*g], &res.delta_alpha);
             }
         }
-        let agg = self.reducer.reduce_collect(&mut self.slots);
+        self.reducer.reduce_pairs(&mut self.slots, self.plan.cross_pairs());
+        let agg = self.slots[0].densify_collect(self.m);
         debug_assert_eq!(agg.len(), self.m);
         let t_master = t0.elapsed().as_secs_f64();
 

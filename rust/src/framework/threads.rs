@@ -8,6 +8,20 @@
 //! virtual-clock trajectories equal physically-parallel trajectories
 //! (same seeds ⇒ same Δv, regardless of execution interleaving).
 //!
+//! ## Nested two-level parallelism (DESIGN.md §10)
+//!
+//! With `threads_per_worker = t > 1` every rank owns a **persistent
+//! sub-pool**: `t − 1` sub-threads plus the rank thread itself, each
+//! driving one monomorphized [`NativeScd`] over its own sub-shard — the
+//! paper's one-rank-per-*core* MPI layout recovered inside a K-wide
+//! communication topology. The sub-shards are the parts of the flat `K·t`
+//! partitioning, σ′ = γ·K·t and sub-shard `g = w·t + s` seeds like flat
+//! rank `g`, so the α/Δv trajectories are **bit-identical** to
+//! `Threads { k: K·t, t: 1 }` (`tests/integration_nested.rs`). The rank
+//! combines its `t` sub-deltas with the within-block pairs of the flat
+//! tree ([`linalg::NestedTreePlan`]) and ships only the forest roots; the
+//! master completes the cross-rank pairs in flat-tree order.
+//!
 //! ## Zero-allocation round protocol
 //!
 //! The original implementation paid, per round: a full clone of the shared
@@ -20,19 +34,23 @@
 //! small timing vectors):
 //!
 //! * `v` is written once into an `Arc<Vec<f64>>` and *shared* with all
-//!   workers (true shared-memory broadcast; `Arc::make_mut` reclaims the
-//!   buffer after the barrier, so no allocation either);
+//!   workers and sub-solvers (true shared-memory broadcast;
+//!   `Arc::make_mut` reclaims the buffer after the barrier, so no
+//!   allocation either);
 //! * labels `b` are a construction-time `Arc` shared by every rank;
-//! * each `Round` message carries a recycled [`linalg::DeltaSlot`]; the
-//!   worker fills it with its Δv — **sparse when the raw frame is cheaper
-//!   than dense** (the DESIGN.md §7 cutover), dense otherwise — and the
-//!   slot comes home with the reply, orbiting master ↔ workers forever;
-//! * the master combines the K deltas with the sparse-aware pairwise
-//!   [`linalg::DeltaReducer`] **in rank order**, making the result
+//! * each `Round` message carries the rank's recycled root
+//!   [`linalg::DeltaSlot`]s (the `Vec` itself orbits too); each sub-solver
+//!   keeps its own slot orbiting rank ↔ sub, fills it with its Δv —
+//!   **sparse when the raw frame is cheaper than dense** (the DESIGN.md §7
+//!   cutover), dense otherwise — and all sub-solver scratch (residuals,
+//!   α, results) lives in persistent per-sub-shard buffers;
+//! * the master scatters returned roots into their flat-tree positions and
+//!   completes the cross-rank pairs with the sparse-aware
+//!   [`linalg::DeltaReducer`] **in flat-tree order**, making the result
 //!   bit-identical to the virtual-clock MPI engine regardless of arrival
 //!   interleaving or frame representation (asserted by
-//!   `tests/integration_allreduce.rs` and
-//!   `tests/integration_sparse_frames.rs`).
+//!   `tests/integration_allreduce.rs`, `tests/integration_sparse_frames.rs`
+//!   and `tests/integration_nested.rs`).
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -42,8 +60,11 @@ use std::time::Instant;
 use super::{DistEngine, EngineOptions, RoundTiming};
 use crate::config::{Impl, TrainConfig};
 use crate::data::{Dataset, Partitioning, WorkerData};
-use crate::linalg::{self, DeltaReducer, DeltaSlot};
+use crate::linalg::{self, DeltaReducer, DeltaSlot, NestedTreePlan};
+use crate::problem::Problem;
 use crate::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
+
+const SEED_GOLDEN: u64 = 0x9E3779B97F4A7C15;
 
 enum ToWorker {
     Round {
@@ -51,13 +72,15 @@ enum ToWorker {
         v: Arc<Vec<f64>>,
         h: usize,
         seed: u64,
-        /// Recycled Δv slot; returns with the reply carrying this round's
-        /// delta in whichever representation the cutover picked.
-        recycle: DeltaSlot,
+        /// Recycled root slots (in `plan.roots(w)` order); they return with
+        /// the reply carrying this round's forest roots. The `Vec` orbits
+        /// master ↔ rank forever — no steady-state allocations.
+        recycle: Vec<DeltaSlot>,
     },
     GetAlpha,
-    /// Replace the rank's local α with this slice (checkpoint resume).
-    /// Channel ordering guarantees it lands before any later `Round`.
+    /// Replace the rank's local α (concatenated over its sub-shards) with
+    /// this slice (checkpoint resume). Channel ordering guarantees it
+    /// lands before any later `Round`.
     SetAlpha(Vec<f64>),
     Shutdown,
 }
@@ -65,7 +88,8 @@ enum ToWorker {
 enum FromWorker {
     RoundDone {
         worker: usize,
-        delta: DeltaSlot,
+        /// The rank's forest roots after its local reduce stage.
+        roots: Vec<DeltaSlot>,
         compute_s: f64,
     },
     Alpha {
@@ -74,27 +98,103 @@ enum FromWorker {
     },
 }
 
+enum ToSub {
+    Solve {
+        v: Arc<Vec<f64>>,
+        h: usize,
+        seed: u64,
+        /// Recycled Δv slot orbiting rank ↔ sub.
+        slot: DeltaSlot,
+    },
+    GetAlpha,
+    SetAlpha(Vec<f64>),
+    Shutdown,
+}
+
+enum FromSub {
+    Solved {
+        sub: usize,
+        slot: DeltaSlot,
+    },
+    Alpha {
+        sub: usize,
+        alpha: Vec<f64>,
+    },
+}
+
+/// One sub-shard's persistent solver state (rank-inline or sub-thread).
+struct SubShard {
+    data: WorkerData,
+    alpha: Vec<f64>,
+    solver: NativeScd,
+    res: SolveResult,
+}
+
+impl SubShard {
+    /// Run one round's H steps and fill `slot` with the cheaper frame.
+    /// All scratch is persistent — steady-state solves never allocate.
+    #[allow(clippy::too_many_arguments)]
+    fn solve_round(
+        &mut self,
+        v: &[f64],
+        b: &[f64],
+        h: usize,
+        problem: &Problem,
+        sigma: f64,
+        seed: u64,
+        flat_rank: usize,
+        cutover_nnz: usize,
+        slot: &mut DeltaSlot,
+    ) {
+        let req = SolveRequest {
+            v,
+            b,
+            h,
+            problem,
+            sigma,
+            // Sub-shard g seeds exactly like rank g of the flat K·t ring.
+            seed: seed ^ (flat_rank as u64).wrapping_mul(SEED_GOLDEN),
+        };
+        self.solver.solve_into(&self.data, &self.alpha, &req, &mut self.res);
+        linalg::add_assign(&mut self.alpha, &self.res.delta_alpha);
+        slot.fill_from_dense(&self.res.delta_v, cutover_nnz);
+    }
+}
+
+struct SubHandle {
+    tx: mpsc::Sender<ToSub>,
+    join: Option<JoinHandle<()>>,
+}
+
 struct WorkerHandle {
     tx: mpsc::Sender<ToWorker>,
     join: Option<JoinHandle<()>>,
 }
 
-/// Physically parallel rank-per-thread engine (MPI semantics).
+/// Physically parallel rank-per-thread engine (MPI semantics), with an
+/// optional persistent sub-pool of `t` local solvers per rank (nested
+/// two-level parallelism — see the module docs).
 pub struct ThreadedMpiEngine {
     workers: Vec<WorkerHandle>,
     rx: mpsc::Receiver<FromWorker>,
+    /// Per-rank global column ids, concatenated over the rank's sub-shards
+    /// in sub order (matches the layout of the rank's α replies).
     global_ids: Vec<Vec<u32>>,
+    /// Per-sub-shard column counts (rank-major, `K·t` entries).
     n_locals: Vec<usize>,
     n_total: usize,
     m: usize,
+    t: usize,
+    /// Flat K·t tree split into rank-local and cross-rank stages.
+    plan: NestedTreePlan,
     wall: f64,
     /// Reused broadcast buffer; refcount returns to 1 at the round barrier.
     v_shared: Arc<Vec<f64>>,
-    /// Spare Δv slots cycling master → worker → master.
-    spare: Vec<DeltaSlot>,
-    /// Per-rank landing slots for this round's deltas (worker order, so the
-    /// reduction tree is deterministic under any arrival interleaving).
+    /// Flat-tree slot array (`K·t` positions; only forest-root positions
+    /// ever hold data between the gather and the cross-rank reduce).
     slots: Vec<DeltaSlot>,
+    /// Per-rank orbiting `Vec`s carrying root slots in Round messages.
+    root_vecs: Vec<Vec<DeltaSlot>>,
     /// Sparse-aware pairwise reducer (same tree as every other engine).
     reducer: DeltaReducer,
 }
@@ -116,8 +216,9 @@ impl ThreadedMpiEngine {
 
     /// Construct from [`EngineOptions`] — the unified-registry path
     /// ([`crate::framework::build_any`]). `dense_frames` maps to a zero
-    /// cutover exactly like the virtual engines; `time_scale` is inert
-    /// here (this engine reports wall-clock time).
+    /// cutover exactly like the virtual engines, `threads_per_worker`
+    /// selects the nested sub-pool layout; `time_scale` is inert here
+    /// (this engine reports wall-clock time).
     pub fn with_options(
         ds: &Dataset,
         parts: &Partitioning,
@@ -129,42 +230,147 @@ impl ThreadedMpiEngine {
         } else {
             linalg::raw_sparse_cutover(ds.m())
         };
-        ThreadedMpiEngine::with_cutover(ds, parts, cfg, cutover)
+        ThreadedMpiEngine::with_cutover_nested(ds, parts, cfg, cutover, opts.threads_per_worker.max(1))
     }
 
     /// Engine with an explicit Δv frame cutover (nnz threshold; 0 = dense
-    /// always). Workers copy the threshold and make the sparse/dense call
-    /// locally — the master never inspects the dense Δv.
+    /// always) and one solver per rank.
     pub fn with_cutover(
         ds: &Dataset,
         parts: &Partitioning,
         cfg: &TrainConfig,
         cutover_nnz: usize,
     ) -> ThreadedMpiEngine {
+        ThreadedMpiEngine::with_cutover_nested(ds, parts, cfg, cutover_nnz, 1)
+    }
+
+    /// The full constructor: explicit cutover and `t` sub-solvers per rank
+    /// over the flat `K·t` partitioning ([`Partitioning::build_nested`]).
+    /// Workers copy the cutover threshold and make the sparse/dense call
+    /// locally — the master never inspects the dense Δv.
+    pub fn with_cutover_nested(
+        ds: &Dataset,
+        parts: &Partitioning,
+        cfg: &TrainConfig,
+        cutover_nnz: usize,
+        t: usize,
+    ) -> ThreadedMpiEngine {
+        assert!(t >= 1, "need at least one sub-solver per rank");
+        assert_eq!(
+            parts.parts.len(),
+            cfg.workers * t,
+            "nested layout needs the flat K·t partitioning"
+        );
+        let k = cfg.workers;
+        let plan = NestedTreePlan::new(k, t);
         let (result_tx, rx) = mpsc::channel::<FromWorker>();
         let mut workers = Vec::new();
         let mut global_ids = Vec::new();
         let mut n_locals = Vec::new();
         // `Problem` is Copy + Send: each rank owns its copy, exactly like
-        // real MPI ranks own their hyper-parameters.
-        let (problem, sigma) = (cfg.problem, cfg.sigma());
+        // real MPI ranks own their hyper-parameters. σ′ = γ·K·t — the flat
+        // ring's value, to the bit.
+        let (problem, sigma) = (cfg.problem, cfg.sigma_t(t));
         // One shared label vector for all ranks (the paper's workers each
         // hold b; in shared memory one copy serves everyone).
         let b_shared: Arc<Vec<f64>> = Arc::new(ds.b.clone());
 
-        for (w, cols) in parts.parts.iter().enumerate() {
-            let data = WorkerData::from_columns(&ds.a, cols);
-            global_ids.push(data.global_ids.clone());
-            n_locals.push(data.n_local());
+        for w in 0..k {
+            let mut shards: Vec<SubShard> = parts
+                .rank_shards(w, t)
+                .iter()
+                .map(|cols| {
+                    let data = WorkerData::from_columns(&ds.a, cols);
+                    SubShard {
+                        alpha: vec![0.0; data.n_local()],
+                        data,
+                        solver: NativeScd::new(),
+                        res: SolveResult::default(),
+                    }
+                })
+                .collect();
+            let mut rank_ids = Vec::new();
+            let mut sub_lens = Vec::with_capacity(t);
+            for s in &shards {
+                rank_ids.extend_from_slice(&s.data.global_ids);
+                sub_lens.push(s.data.n_local());
+                n_locals.push(s.data.n_local());
+            }
+            global_ids.push(rank_ids);
+
             let (tx, worker_rx) = mpsc::channel::<ToWorker>();
             let result_tx = result_tx.clone();
             let b = Arc::clone(&b_shared);
+            let local_pairs: Vec<(usize, usize)> = plan.local_pairs(w).to_vec();
+            let roots: Vec<usize> = plan.roots(w).to_vec();
+            let m = ds.m();
             let join = std::thread::Builder::new()
                 .name(format!("rank-{}", w))
                 .spawn(move || {
-                    let mut alpha = vec![0.0; data.n_local()];
-                    let mut solver = NativeScd::new();
-                    let mut res = SolveResult::default();
+                    // ---- persistent sub-pool: shard 0 runs inline on the
+                    // rank thread, shards 1..t on their own threads -------
+                    let mut shard0 = shards.remove(0);
+                    let (sub_tx, sub_rx) = mpsc::channel::<FromSub>();
+                    let subs: Vec<SubHandle> = shards
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, mut shard)| {
+                            let sub = i + 1; // sub index within the rank
+                            let g = w * t + sub; // flat rank id
+                            let (stx, srx) = mpsc::channel::<ToSub>();
+                            let reply = sub_tx.clone();
+                            let b = Arc::clone(&b);
+                            let join = std::thread::Builder::new()
+                                .name(format!("rank-{}-sub-{}", w, sub))
+                                .spawn(move || {
+                                    while let Ok(msg) = srx.recv() {
+                                        match msg {
+                                            ToSub::Solve { v, h, seed, mut slot } => {
+                                                shard.solve_round(
+                                                    &v, &b, h, &problem, sigma, seed, g,
+                                                    cutover_nnz, &mut slot,
+                                                );
+                                                // Drop the broadcast ref
+                                                // BEFORE replying so the
+                                                // master can reclaim the
+                                                // buffer after the barrier.
+                                                drop(v);
+                                                let _ = reply
+                                                    .send(FromSub::Solved { sub, slot });
+                                            }
+                                            ToSub::GetAlpha => {
+                                                let _ = reply.send(FromSub::Alpha {
+                                                    sub,
+                                                    alpha: shard.alpha.clone(),
+                                                });
+                                            }
+                                            ToSub::SetAlpha(a) => {
+                                                debug_assert_eq!(a.len(), shard.alpha.len());
+                                                shard.alpha = a;
+                                            }
+                                            ToSub::Shutdown => break,
+                                        }
+                                    }
+                                })
+                                .expect("spawn sub-solver thread");
+                            SubHandle {
+                                tx: stx,
+                                join: Some(join),
+                            }
+                        })
+                        .collect();
+                    // Drop the rank's own reply-sender: once the sub
+                    // threads' clones are gone (a sub panicked/died), the
+                    // recv()s below return Err and the engine fails loudly
+                    // instead of blocking forever on a reply that cannot
+                    // come.
+                    drop(sub_tx);
+
+                    // Per-sub Δv slots; root positions are refreshed from
+                    // each Round's recycled vec.
+                    let mut slots: Vec<DeltaSlot> = (0..t).map(|_| DeltaSlot::new()).collect();
+                    let mut reducer = DeltaReducer::new(m, cutover_nnz);
+
                     while let Ok(msg) = worker_rx.recv() {
                         match msg {
                             ToWorker::Round {
@@ -173,44 +379,110 @@ impl ThreadedMpiEngine {
                                 seed,
                                 mut recycle,
                             } => {
-                                let req = SolveRequest {
-                                    v: v.as_slice(),
-                                    b: &b,
-                                    h,
-                                    problem: &problem,
-                                    sigma,
-                                    seed: seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
-                                };
+                                // Root slots come home from the master in
+                                // plan-roots order.
+                                debug_assert_eq!(recycle.len(), roots.len());
+                                for (&ri, slot) in roots.iter().zip(recycle.drain(..)) {
+                                    slots[ri] = slot;
+                                }
                                 let t0 = Instant::now();
-                                solver.solve_into(&data, &alpha, &req, &mut res);
+                                // Fan out to the sub-pool, then solve
+                                // shard 0 on this thread — physical
+                                // parallelism across the rank's cores.
+                                for (i, sub) in subs.iter().enumerate() {
+                                    let _ = sub.tx.send(ToSub::Solve {
+                                        v: Arc::clone(&v),
+                                        h,
+                                        seed,
+                                        slot: std::mem::take(&mut slots[i + 1]),
+                                    });
+                                }
+                                shard0.solve_round(
+                                    &v, &b, h, &problem, sigma, seed, w * t, cutover_nnz,
+                                    &mut slots[0],
+                                );
+                                for _ in 0..subs.len() {
+                                    match sub_rx.recv().expect("sub-solver died") {
+                                        FromSub::Solved { sub, slot } => slots[sub] = slot,
+                                        FromSub::Alpha { .. } => {
+                                            unreachable!("unexpected alpha reply")
+                                        }
+                                    }
+                                }
+                                // Rank-local stage: the within-block pairs
+                                // of the flat K·t tree (DESIGN.md §10).
+                                reducer.reduce_pairs(&mut slots, &local_pairs);
                                 let compute_s = t0.elapsed().as_secs_f64();
-                                linalg::add_assign(&mut alpha, &res.delta_alpha);
-                                // Emit whichever frame is cheaper into the
-                                // recycled slot (its arenas keep capacity
-                                // across orbits — no steady-state allocs).
-                                recycle.fill_from_dense(&res.delta_v, cutover_nnz);
                                 // Drop our v reference BEFORE the reply so
                                 // the master (which proceeds only after all
                                 // replies) sees refcount 1 and reuses the
                                 // broadcast buffer without cloning.
                                 drop(v);
+                                // Ship the forest roots in the recycled vec.
+                                let mut out = recycle;
+                                for &ri in &roots {
+                                    out.push(std::mem::take(&mut slots[ri]));
+                                }
                                 let _ = result_tx.send(FromWorker::RoundDone {
                                     worker: w,
-                                    delta: recycle,
+                                    roots: out,
                                     compute_s,
                                 });
                             }
                             ToWorker::GetAlpha => {
-                                let _ = result_tx.send(FromWorker::Alpha {
-                                    worker: w,
-                                    alpha: alpha.clone(),
-                                });
+                                let mut alpha = shard0.alpha.clone();
+                                for sub in &subs {
+                                    let _ = sub.tx.send(ToSub::GetAlpha);
+                                }
+                                // Sub replies can interleave: stage them by
+                                // sub index, then concatenate in order. A
+                                // dead sub or a stray reply must fail
+                                // loudly (like the Round path) — a silent
+                                // hole would shift later shards' α onto
+                                // earlier shards' column ids.
+                                let mut parts: Vec<Option<Vec<f64>>> = vec![None; subs.len()];
+                                for _ in 0..subs.len() {
+                                    match sub_rx.recv().expect("sub-solver died") {
+                                        FromSub::Alpha { sub, alpha: a } => {
+                                            parts[sub - 1] = Some(a)
+                                        }
+                                        FromSub::Solved { .. } => {
+                                            unreachable!("unexpected solve reply")
+                                        }
+                                    }
+                                }
+                                for p in parts.into_iter() {
+                                    alpha.extend_from_slice(&p.expect("missing sub α reply"));
+                                }
+                                let _ = result_tx.send(FromWorker::Alpha { worker: w, alpha });
                             }
                             ToWorker::SetAlpha(new_alpha) => {
-                                debug_assert_eq!(new_alpha.len(), alpha.len());
-                                alpha = new_alpha;
+                                debug_assert_eq!(
+                                    new_alpha.len(),
+                                    sub_lens.iter().sum::<usize>()
+                                );
+                                let mut off = sub_lens[0];
+                                shard0.alpha.clear();
+                                shard0.alpha.extend_from_slice(&new_alpha[..off]);
+                                for (i, sub) in subs.iter().enumerate() {
+                                    let len = sub_lens[i + 1];
+                                    let _ = sub.tx.send(ToSub::SetAlpha(
+                                        new_alpha[off..off + len].to_vec(),
+                                    ));
+                                    off += len;
+                                }
                             }
-                            ToWorker::Shutdown => break,
+                            ToWorker::Shutdown => {
+                                for sub in &subs {
+                                    let _ = sub.tx.send(ToSub::Shutdown);
+                                }
+                                for mut sub in subs {
+                                    if let Some(j) = sub.join.take() {
+                                        let _ = j.join();
+                                    }
+                                }
+                                break;
+                            }
                         }
                     }
                 })
@@ -221,7 +493,12 @@ impl ThreadedMpiEngine {
             });
         }
 
-        let k = workers.len();
+        // Empty carrier vecs (capacity only): the root slots themselves
+        // live in `slots` between rounds and are moved into the carrier
+        // per Round message.
+        let root_vecs = (0..k)
+            .map(|w| Vec::with_capacity(plan.roots(w).len()))
+            .collect();
         ThreadedMpiEngine {
             workers,
             rx,
@@ -229,10 +506,12 @@ impl ThreadedMpiEngine {
             n_locals,
             n_total: ds.n(),
             m: ds.m(),
+            t,
             wall: 0.0,
             v_shared: Arc::new(Vec::with_capacity(ds.m())),
-            spare: (0..k).map(|_| DeltaSlot::new()).collect(),
-            slots: (0..k).map(|_| DeltaSlot::new()).collect(),
+            slots: (0..k * t).map(|_| DeltaSlot::new()).collect(),
+            root_vecs,
+            plan,
             reducer: DeltaReducer::new(ds.m(), cutover_nnz),
         }
     }
@@ -246,11 +525,16 @@ impl DistEngine for ThreadedMpiEngine {
     fn engine(&self) -> super::Engine {
         super::Engine::Threads {
             k: self.workers.len(),
+            t: self.t,
         }
     }
 
     fn num_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    fn threads_per_worker(&self) -> usize {
+        self.t
     }
 
     fn n_locals(&self) -> Vec<usize> {
@@ -288,6 +572,7 @@ impl DistEngine for ThreadedMpiEngine {
 
     fn run_round(&mut self, v: &[f64], h: usize, round_seed: u64) -> (Vec<f64>, RoundTiming) {
         let k = self.workers.len();
+        let t = self.t;
         let t0 = Instant::now();
 
         // Broadcast: one copy of v into the shared buffer, then an Arc
@@ -300,43 +585,52 @@ impl DistEngine for ThreadedMpiEngine {
             buf.clear();
             buf.extend_from_slice(v);
         }
-        for wk in self.workers.iter() {
+        for (w, wk) in self.workers.iter().enumerate() {
+            // Hand each rank back its root slots (plan-roots order); the
+            // Vec itself orbits master ↔ rank.
+            let mut recycle = std::mem::take(&mut self.root_vecs[w]);
+            for &ri in self.plan.roots(w) {
+                recycle.push(std::mem::take(&mut self.slots[w * t + ri]));
+            }
             let _ = wk.tx.send(ToWorker::Round {
                 v: Arc::clone(&self.v_shared),
                 h,
                 seed: round_seed,
-                recycle: self.spare.pop().unwrap_or_default(),
+                recycle,
             });
         }
 
-        // Gather into rank-ordered slots (replies arrive in any order).
+        // Gather the forest roots into their flat-tree positions (replies
+        // arrive in any order; positions are fixed, so the reduction tree
+        // is deterministic under any interleaving).
         let mut computes = vec![0.0; k];
         let mut bytes_up = 0u64;
         for _ in 0..k {
             match self.rx.recv().expect("worker died") {
                 FromWorker::RoundDone {
                     worker,
-                    delta,
+                    mut roots,
                     compute_s,
                 } => {
-                    bytes_up += delta.raw_bytes(self.m) as u64;
-                    self.slots[worker] = delta;
+                    for (&ri, slot) in self.plan.roots(worker).iter().zip(roots.drain(..)) {
+                        bytes_up += slot.raw_bytes(self.m) as u64;
+                        self.slots[worker * t + ri] = slot;
+                    }
+                    self.root_vecs[worker] = roots;
                     computes[worker] = compute_s;
                 }
                 FromWorker::Alpha { .. } => unreachable!("unexpected alpha reply"),
             }
         }
 
-        // Sparse-aware pairwise tree reduce in rank order — same tree as
-        // the virtual-clock MPI engine, hence bit-identical Δv whatever
-        // mix of representations the workers chose.
+        // Cross-rank stage: the remaining pairs of the flat K·t tree in
+        // enumeration order — same combines as the virtual-clock engines,
+        // hence bit-identical Δv whatever mix of representations and
+        // arrival order the workers produced.
         let rt0 = Instant::now();
-        let agg = self.reducer.reduce_collect(&mut self.slots);
+        self.reducer.reduce_pairs(&mut self.slots, self.plan.cross_pairs());
+        let agg = self.slots[0].densify_collect(self.m);
         let t_master = rt0.elapsed().as_secs_f64();
-        // All K slots go back to the spare orbit for the next round.
-        for slot in self.slots.iter_mut() {
-            self.spare.push(std::mem::take(slot));
-        }
 
         let wall = t0.elapsed().as_secs_f64();
         self.wall += wall;
@@ -346,7 +640,8 @@ impl DistEngine for ThreadedMpiEngine {
             t_master,
             t_overhead: (wall - t_worker - t_master).max(0.0),
             worker_compute: computes,
-            // Actual emitted frame bytes (sparse where cheaper).
+            // Actual emitted frame bytes (sparse where cheaper); only the
+            // forest roots cross rank boundaries.
             bytes_up,
             // Shared-memory broadcast moves one m-vector, not K.
             bytes_down: (self.m * 8) as u64,
@@ -424,6 +719,69 @@ mod tests {
     }
 
     #[test]
+    fn nested_subpool_matches_flat_ring_bitwise() {
+        // The tentpole acceptance on the physical engine: K ranks × t
+        // sub-threads ≡ flat K·t ranks, to the bit, for power-of-two AND
+        // non-power-of-two shapes.
+        let ds = webspam_like(&SyntheticSpec::small());
+        for (k, t) in [(2usize, 2usize), (3, 2), (2, 3), (4, 4)] {
+            let mut cfg_nested = TrainConfig::default_for(&ds);
+            cfg_nested.workers = k;
+            let nparts = Partitioning::build_nested(
+                Partitioner::Range,
+                &ds.a,
+                k,
+                t,
+                cfg_nested.seed,
+            );
+            let cutover = linalg::raw_sparse_cutover(ds.m());
+            let mut nested =
+                ThreadedMpiEngine::with_cutover_nested(&ds, &nparts, &cfg_nested, cutover, t);
+            assert_eq!(nested.num_workers(), k);
+            assert_eq!(nested.threads_per_worker(), t);
+            assert_eq!(
+                nested.engine(),
+                crate::framework::Engine::Threads { k, t }
+            );
+
+            let mut cfg_flat = cfg_nested.clone();
+            cfg_flat.workers = k * t;
+            let fparts = Partitioning::build(Partitioner::Range, &ds.a, k * t, cfg_flat.seed);
+            let mut flat = ThreadedMpiEngine::new(&ds, &fparts, &cfg_flat);
+
+            let mut v1 = vec![0.0; ds.m()];
+            let mut v2 = vec![0.0; ds.m()];
+            for round in 0..3 {
+                let (dv1, _) = nested.run_round(&v1, 12, round);
+                let (dv2, _) = flat.run_round(&v2, 12, round);
+                for (a, b) in dv1.iter().zip(dv2.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "k={} t={} round {}", k, t, round);
+                }
+                linalg::add_assign(&mut v1, &dv1);
+                linalg::add_assign(&mut v2, &dv2);
+            }
+            let a1 = nested.alpha_global();
+            let a2 = flat.alpha_global();
+            for (x, y) in a1.iter().zip(a2.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "k={} t={}", k, t);
+            }
+        }
+    }
+
+    #[test]
+    fn nested_load_alpha_roundtrips_through_the_subpool() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 2;
+        let parts = Partitioning::build_nested(Partitioner::Range, &ds.a, 2, 3, cfg.seed);
+        let cutover = linalg::raw_sparse_cutover(ds.m());
+        let mut eng = ThreadedMpiEngine::with_cutover_nested(&ds, &parts, &cfg, cutover, 3);
+        let snapshot: Vec<f64> = (0..ds.n()).map(|i| (i as f64).cos()).collect();
+        eng.load_alpha(&snapshot);
+        assert_eq!(eng.alpha_global(), snapshot);
+    }
+
+    #[test]
     fn sparse_and_dense_frame_engines_agree_bitwise() {
         // Small H → sparse frames on the adaptive engine; the dense-forced
         // engine must see the exact same Δv bits and strictly more bytes.
@@ -474,6 +832,17 @@ mod tests {
             let v = vec![0.0; ds.m()];
             let _ = eng.run_round(&v, 10, 0);
             // eng dropped here — must join all threads without hanging
+        }
+        // Nested engines must also join their sub-pools.
+        let ds2 = webspam_like(&SyntheticSpec::small());
+        let mut cfg2 = TrainConfig::default_for(&ds2);
+        cfg2.workers = 2;
+        let nparts = Partitioning::build_nested(Partitioner::Range, &ds2.a, 2, 2, cfg2.seed);
+        {
+            let cutover = linalg::raw_sparse_cutover(ds2.m());
+            let mut eng = ThreadedMpiEngine::with_cutover_nested(&ds2, &nparts, &cfg2, cutover, 2);
+            let v = vec![0.0; ds2.m()];
+            let _ = eng.run_round(&v, 10, 0);
         }
     }
 

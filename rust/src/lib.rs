@@ -35,7 +35,7 @@
 //!
 //! let ds = sparkbench::data::synthetic::webspam_like(&SyntheticSpec::small());
 //! let report = Session::builder(&ds)
-//!     .engine(Impl::Mpi) // or Engine::Threads { k: 8 }, Engine::ParamServer { .. }
+//!     .engine(Impl::Mpi) // or Engine::threads(8), Engine::ParamServer { .. }
 //!     .config(TrainConfig::default_for(&ds))
 //!     .build()
 //!     .unwrap()
@@ -52,7 +52,7 @@
 //!
 //! let ds = sparkbench::data::synthetic::webspam_like(&SyntheticSpec::small());
 //! let report = Session::builder(&ds)
-//!     .engine(Engine::Threads { k: 4 })
+//!     .engine(Engine::threads(4)) // Engine::threads_nested(4, 2) = 4 ranks × 2 sub-solvers
 //!     .adaptive_h(0.9) // §5.5 controller instead of a fixed H
 //!     .observe(CsvTrace::create("results/trace.csv").unwrap())
 //!     .build()

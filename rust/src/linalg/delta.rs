@@ -354,6 +354,23 @@ impl DeltaReducer {
         });
     }
 
+    /// Apply an explicit `(dst, src)` combine list in order
+    /// (`slots[dst] += slots[src]`, `dst < src`). This is how the nested
+    /// two-level engines drive the [`NestedTreePlan`] split of the flat
+    /// tree: each rank runs its `local_pairs` over its own slot block,
+    /// the master runs `cross_pairs` over the forest roots — the same
+    /// combines as [`reduce`](DeltaReducer::reduce) over the flat slot
+    /// array, hence a bit-identical aggregate.
+    ///
+    /// [`NestedTreePlan`]: super::tree_reduce::NestedTreePlan
+    pub fn reduce_pairs(&mut self, slots: &mut [DeltaSlot], pairs: &[(usize, usize)]) {
+        for &(dst, src) in pairs {
+            debug_assert!(dst < src && src < slots.len());
+            let (left, right) = slots.split_at_mut(src);
+            self.combine(&mut left[dst], &right[0]);
+        }
+    }
+
     /// Reduce and densify the aggregate (the one per-round allocation the
     /// `run_round` API imposes — the caller owns the result).
     pub fn reduce_collect(&mut self, slots: &mut [DeltaSlot]) -> Vec<f64> {
@@ -572,6 +589,65 @@ mod tests {
                         i,
                         g,
                         w
+                    );
+                }
+            }
+        }
+    }
+
+    /// The nested split (rank-local pairs, then cross-rank pairs) must
+    /// produce the exact bits of the flat pairwise tree for every (k, t),
+    /// across sparse/dense/mixed slot representations.
+    #[test]
+    fn nested_reduce_pairs_match_flat_reduce_bitwise() {
+        use crate::linalg::tree_reduce::NestedTreePlan;
+        for (k, t) in [(2usize, 2usize), (3, 2), (2, 3), (4, 4), (3, 5)] {
+            for cutover_frac in [0.0, 0.1, 1.0] {
+                let m = 61;
+                let n = k * t;
+                let mut rng = crate::linalg::Xorshift128::new(7 + (k * 17 + t) as u64);
+                let deltas: Vec<Vec<f64>> = (0..n)
+                    .map(|_| {
+                        (0..m)
+                            .map(|_| {
+                                if rng.next_f64() < 0.2 {
+                                    rng.next_gaussian()
+                                } else {
+                                    0.0
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let cutover = (m as f64 * cutover_frac) as usize;
+
+                let mut flat_red = DeltaReducer::new(m, cutover);
+                let mut flat_slots: Vec<DeltaSlot> = (0..n).map(|_| DeltaSlot::new()).collect();
+                for (slot, d) in flat_slots.iter_mut().zip(deltas.iter()) {
+                    flat_red.load(slot, d);
+                }
+                let want = flat_red.reduce_collect(&mut flat_slots);
+
+                let plan = NestedTreePlan::new(k, t);
+                let mut red = DeltaReducer::new(m, cutover);
+                let mut slots: Vec<DeltaSlot> = (0..n).map(|_| DeltaSlot::new()).collect();
+                for (slot, d) in slots.iter_mut().zip(deltas.iter()) {
+                    red.load(slot, d);
+                }
+                for w in 0..k {
+                    red.reduce_pairs(&mut slots[w * t..(w + 1) * t], plan.local_pairs(w));
+                }
+                red.reduce_pairs(&mut slots, plan.cross_pairs());
+                let got = slots[0].densify_collect(m);
+                for (i, (g, wv)) in got.iter().zip(want.iter()).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        wv.to_bits(),
+                        "k={} t={} cutover={} [{}]",
+                        k,
+                        t,
+                        cutover,
+                        i
                     );
                 }
             }

@@ -17,7 +17,9 @@ pub use delta::{
     DeltaShape, DeltaSlot, SparseVec,
 };
 pub use rng::Xorshift128;
-pub use tree_reduce::{tree_reduce, tree_reduce_collect, tree_reduce_seq, tree_reduce_vecs};
+pub use tree_reduce::{
+    tree_reduce, tree_reduce_collect, tree_reduce_seq, tree_reduce_vecs, NestedTreePlan,
+};
 
 /// `y += x`, the AllReduce aggregation kernel.
 ///
@@ -133,15 +135,47 @@ pub fn axpy_indexed(a: f64, idx: &[u32], vals: &[f64], dense: &mut [f64]) {
 
 /// Fused sparse dot + squared-norm accumulation used by the optimized SCD
 /// inner loop (single pass over the column instead of two).
+///
+/// Unrolled ×4 with independent accumulators, exactly like [`dot_indexed`]
+/// — the dot component follows the identical chunking and final
+/// `(a0+a1)+(a2+a3)` pairing, so `dot_indexed_fused(..).0` is bit-equal to
+/// `dot_indexed(..)` at every length (asserted below). The previous naive
+/// serial loop paired differently; its only caller (the hotpath bench)
+/// compares timings, not bits.
 #[inline]
 pub fn dot_indexed_fused(idx: &[u32], vals: &[f64], dense: &[f64]) -> (f64, f64) {
-    let mut acc = 0.0;
-    let mut nrm = 0.0;
-    for (&i, &v) in idx.iter().zip(vals.iter()) {
-        acc += v * unsafe { *dense.get_unchecked(i as usize) };
-        nrm += v * v;
+    debug_assert_eq!(idx.len(), vals.len());
+    // min() preserves the pre-unroll zip truncation on mismatched inputs
+    // (the unchecked reads below must never run past either slice).
+    let n = idx.len().min(vals.len());
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    let (mut n0, mut n1, mut n2, mut n3) = (0.0f64, 0.0, 0.0, 0.0);
+    unsafe {
+        for c in 0..chunks {
+            let base = c * 4;
+            let (v0, v1, v2, v3) = (
+                *vals.get_unchecked(base),
+                *vals.get_unchecked(base + 1),
+                *vals.get_unchecked(base + 2),
+                *vals.get_unchecked(base + 3),
+            );
+            a0 += v0 * *dense.get_unchecked(*idx.get_unchecked(base) as usize);
+            a1 += v1 * *dense.get_unchecked(*idx.get_unchecked(base + 1) as usize);
+            a2 += v2 * *dense.get_unchecked(*idx.get_unchecked(base + 2) as usize);
+            a3 += v3 * *dense.get_unchecked(*idx.get_unchecked(base + 3) as usize);
+            n0 += v0 * v0;
+            n1 += v1 * v1;
+            n2 += v2 * v2;
+            n3 += v3 * v3;
+        }
+        for i in chunks * 4..n {
+            let v = *vals.get_unchecked(i);
+            a0 += v * *dense.get_unchecked(*idx.get_unchecked(i) as usize);
+            n0 += v * v;
+        }
     }
-    (acc, nrm)
+    ((a0 + a1) + (a2 + a3), (n0 + n1) + (n2 + n3))
 }
 
 /// Euclidean norm squared.
@@ -238,6 +272,37 @@ mod tests {
         let mut dense2 = dense.clone();
         axpy_indexed(0.5, &idx, &vals, &mut dense2);
         assert_eq!(dense2, vec![6.0, 2.0, 13.0, 4.0, 20.0]);
+    }
+
+    #[test]
+    fn fused_dot_matches_dot_indexed_bitwise_at_every_length() {
+        // The unrolled fused kernel shares dot_indexed's chunking and final
+        // pairing, so the dot component must be BIT-equal at every length
+        // around the unroll width, and the norm component must equal the
+        // same 4-accumulator pairing over v·v.
+        let mut rng = Xorshift128::new(11);
+        for n in 0..21usize {
+            let dense: Vec<f64> = (0..64).map(|_| rng.next_gaussian()).collect();
+            let idx: Vec<u32> = (0..n).map(|_| rng.next_usize(64) as u32).collect();
+            let vals: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let (d, nrm) = dot_indexed_fused(&idx, &vals, &dense);
+            assert_eq!(
+                d.to_bits(),
+                dot_indexed(&idx, &vals, &dense).to_bits(),
+                "n={}",
+                n
+            );
+            let ones = vec![1.0; 64];
+            let sq: Vec<f64> = vals.iter().map(|v| v * v).collect();
+            let self_idx: Vec<u32> = (0..n as u32).collect();
+            // v·v through the same 4-acc pairing = dot_indexed(sq, ones).
+            assert_eq!(
+                nrm.to_bits(),
+                dot_indexed(&self_idx, &sq, &ones).to_bits(),
+                "n={}",
+                n
+            );
+        }
     }
 
     #[test]

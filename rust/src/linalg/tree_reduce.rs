@@ -45,6 +45,115 @@ pub fn for_each_tree_pair(k: usize, mut f: impl FnMut(usize, usize)) {
     }
 }
 
+/// The nested two-level split of the flat `k·t`-leaf binomial tree
+/// (hierarchical parallelism: `k` worker ranks × `t` local sub-solvers).
+///
+/// Rank `w` owns the contiguous leaf block `[w·t, (w+1)·t)`. Every pair of
+/// [`for_each_tree_pair`]`(k·t)` is classified by where the combined
+/// subtree lives:
+///
+/// * **rank-local** — both operands' leaf ranges lie inside one block, so
+///   the combine can run on the rank before anything crosses the network;
+/// * **cross-rank** — the combined range spans blocks; these run at the
+///   master, in the flat tree's enumeration order.
+///
+/// A local pair's operands were only ever produced by earlier local pairs
+/// of the same block (subtree ranges nest), so executing *all* local pairs
+/// per rank and then the cross pairs in order performs exactly the flat
+/// tree's combines with every data dependency respected — the aggregate is
+/// **bit-identical to the flat `k·t` reduction for any (k, t)**, including
+/// non-power-of-two shapes (asserted below and by
+/// `tests/integration_nested.rs`).
+///
+/// After the local stage a rank holds a small *forest*: the maximal
+/// subtrees of the flat tree contained in its block ([`roots`]). When `t`
+/// is a power of two each block is one complete subtree and the forest is
+/// a single root; otherwise a few partials ship (≤ ⌈log₂ t⌉ + 1). Only
+/// those roots cross the network — the nested engines charge exactly
+/// their bytes.
+///
+/// [`roots`]: NestedTreePlan::roots
+#[derive(Debug, Clone)]
+pub struct NestedTreePlan {
+    k: usize,
+    t: usize,
+    /// Per-rank within-block pairs in flat-tree order, as *local*
+    /// sub-shard indices `(dst, src)` with `dst < src < t`.
+    local_pairs: Vec<Vec<(usize, usize)>>,
+    /// Per-rank local indices still holding live partials after the local
+    /// stage (increasing order) — what the rank ships.
+    roots: Vec<Vec<usize>>,
+    /// Remaining pairs in *global* leaf indices, flat-tree order.
+    cross_pairs: Vec<(usize, usize)>,
+}
+
+impl NestedTreePlan {
+    pub fn new(k: usize, t: usize) -> NestedTreePlan {
+        assert!(k > 0 && t > 0, "need k >= 1 and t >= 1");
+        let n = k * t;
+        // end[i] = one past the last leaf of the subtree currently rooted
+        // at slot i (leaves start as [i, i+1)).
+        let mut end: Vec<usize> = (1..=n).collect();
+        let mut local_pairs = vec![Vec::new(); k];
+        let mut consumed = vec![false; n];
+        let mut cross_pairs = Vec::new();
+        for_each_tree_pair(n, |dst, src| {
+            let e = end[src];
+            let block = dst / t;
+            // dst >= block·t by construction; the pair is block-local iff
+            // the merged range also ends inside the block.
+            if e <= (block + 1) * t {
+                local_pairs[block].push((dst - block * t, src - block * t));
+                consumed[src] = true;
+            } else {
+                cross_pairs.push((dst, src));
+            }
+            end[dst] = e;
+        });
+        let mut roots: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (g, &gone) in consumed.iter().enumerate() {
+            if !gone {
+                roots[g / t].push(g % t);
+            }
+        }
+        NestedTreePlan {
+            k,
+            t,
+            local_pairs,
+            roots,
+            cross_pairs,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Total leaves `k·t` (= the flat ring this plan is equivalent to).
+    pub fn n(&self) -> usize {
+        self.k * self.t
+    }
+
+    /// Rank `w`'s within-block combines (local sub-shard indices).
+    pub fn local_pairs(&self, w: usize) -> &[(usize, usize)] {
+        &self.local_pairs[w]
+    }
+
+    /// Rank `w`'s forest roots after the local stage (local indices).
+    pub fn roots(&self, w: usize) -> &[usize] {
+        &self.roots[w]
+    }
+
+    /// The master's remaining combines (global leaf indices, in order).
+    pub fn cross_pairs(&self) -> &[(usize, usize)] {
+        &self.cross_pairs
+    }
+}
+
 /// Reduce `bufs[1..]` into `bufs[0]` pairwise, sequentially.
 ///
 /// Every buffer must have the same length; `bufs[1..]` are left holding
@@ -241,6 +350,94 @@ mod tests {
         let mut one = vec![vec![1.0, 2.0]];
         tree_reduce_vecs(&mut one);
         assert_eq!(one[0], vec![1.0, 2.0]);
+    }
+
+    /// Execute a nested plan with plain adds and compare bitwise against
+    /// the flat tree — the invariant every nested engine rests on.
+    fn run_nested_plan(k: usize, t: usize, leaves: &[Vec<f64>]) -> Vec<f64> {
+        let plan = NestedTreePlan::new(k, t);
+        let mut slots: Vec<Vec<f64>> = leaves.to_vec();
+        for w in 0..k {
+            let block = &mut slots[w * t..(w + 1) * t];
+            for &(dst, src) in plan.local_pairs(w) {
+                let (l, r) = block.split_at_mut(src);
+                add_assign(&mut l[dst], &r[0]);
+            }
+        }
+        for &(dst, src) in plan.cross_pairs() {
+            let (l, r) = slots.split_at_mut(src);
+            add_assign(&mut l[dst], &r[0]);
+        }
+        slots.swap_remove(0)
+    }
+
+    #[test]
+    fn nested_plan_is_bit_identical_to_flat_tree() {
+        // Values chosen so float rounding distinguishes every grouping —
+        // any deviation from the flat tree's combine order changes bits.
+        for (k, t) in [(1, 1), (2, 2), (3, 2), (2, 3), (4, 4), (3, 5), (5, 3), (1, 7), (7, 1)] {
+            let n = k * t;
+            let leaves: Vec<Vec<f64>> = (0..n)
+                .map(|g| {
+                    vec![
+                        if g % 2 == 0 { 1e16 } else { 1.0 } * if g % 3 == 0 { -1.0 } else { 1.0 },
+                        g as f64 * 0.1 + 1e-3,
+                    ]
+                })
+                .collect();
+            let mut flat = leaves.clone();
+            tree_reduce_vecs(&mut flat);
+            let nested = run_nested_plan(k, t, &leaves);
+            assert_eq!(
+                nested
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect::<Vec<_>>(),
+                flat[0].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "k={} t={} diverged from the flat tree",
+                k,
+                t
+            );
+        }
+    }
+
+    #[test]
+    fn nested_plan_structure_is_sound() {
+        for (k, t) in [(2usize, 2usize), (3, 2), (2, 3), (4, 4), (5, 3)] {
+            let plan = NestedTreePlan::new(k, t);
+            assert_eq!(plan.n(), k * t);
+            let mut combines = 0;
+            for w in 0..k {
+                // Power-of-two t ⇒ each block is one complete subtree.
+                if t.is_power_of_two() {
+                    assert_eq!(plan.roots(w), &[0], "k={} t={} w={}", k, t, w);
+                }
+                // Local indices stay inside the block; result lands at a root.
+                for &(dst, src) in plan.local_pairs(w) {
+                    assert!(dst < src && src < t);
+                }
+                assert!(!plan.roots(w).is_empty());
+                assert!(plan.roots(w)[0] == 0 || w > 0);
+                combines += plan.local_pairs(w).len();
+            }
+            // Every flat pair shows up exactly once across the two stages.
+            combines += plan.cross_pairs().len();
+            let mut flat_pairs = 0;
+            for_each_tree_pair(k * t, |_, _| flat_pairs += 1);
+            assert_eq!(combines, flat_pairs, "k={} t={}", k, t);
+            // Cross pairs only touch forest-root positions.
+            let mut is_root = vec![false; k * t];
+            for w in 0..k {
+                for &r in plan.roots(w) {
+                    is_root[w * t + r] = true;
+                }
+            }
+            for &(dst, src) in plan.cross_pairs() {
+                assert!(is_root[dst] && is_root[src], "k={} t={} ({},{})", k, t, dst, src);
+            }
+            // The final aggregate lives at global slot 0.
+            assert!(is_root[0]);
+        }
     }
 
     #[test]

@@ -98,22 +98,44 @@ fn cmd_train(args: &Args) -> i32 {
             }
         }
     }
+    // --threads-per-worker T: nested two-level parallelism — T local
+    // sub-solvers per worker, bit-identical to a flat K·T ring (an
+    // explicit `--impl threads:K:T` wins over the flag).
+    let tpw_flag = match args.get("threads-per-worker") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(t) if t >= 1 => Some(t),
+            _ => {
+                eprintln!("bad --threads-per-worker '{}' (want an integer >= 1)", s);
+                return 2;
+            }
+        },
+        None => None,
+    };
     // `threads:K` overrides the configured worker count inside the builder;
-    // report the count the session will actually run with.
+    // report the counts the session will actually run with.
     let eff_workers = match engine {
-        Engine::Threads { k } if k > 0 => k,
+        Engine::Threads { k, .. } if k > 0 => k,
         _ => cfg.workers,
     };
+    let eff_t = match engine {
+        Engine::Threads { t, .. } if t > 0 => t,
+        Engine::Impl(Impl::MllibSgd) => 1,
+        _ => tpw_flag.unwrap_or(1),
+    };
     println!(
-        "training {} [{}] on {} (K={}, H={})",
+        "training {} [{}] on {} (K={}, T={}, H={})",
         engine.label(),
         cfg.problem.label(),
         ds.name,
         eff_workers,
-        cfg.h_for(ds.n() / eff_workers)
+        eff_t,
+        cfg.h_for(ds.n() / (eff_workers * eff_t))
     );
 
     let mut builder = Session::builder(&ds).engine(engine).config(cfg.clone());
+    if let Some(t) = tpw_flag {
+        builder = builder.threads_per_worker(t);
+    }
     // Fixed-rounds timing runs (Figure 3/4 methodology) skip the oracle.
     if let Some(s) = args.get("fixed-rounds") {
         let Ok(n) = s.parse() else {

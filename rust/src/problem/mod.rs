@@ -277,6 +277,17 @@ impl Loss for LogisticDual {
 // Problem
 // ---------------------------------------------------------------------------
 
+/// Reusable evaluation buffers for repeated duality-gap certificates:
+/// `u = v − b` and `Aᵀu`. A tracking session owns one and threads it
+/// through [`Problem::duality_gap_scratch`], so steady-state evaluations
+/// perform zero heap allocations (the buffers reach capacity on the first
+/// eval and are reused).
+#[derive(Debug, Default)]
+pub struct GapScratch {
+    u: Vec<f64>,
+    at_u: Vec<f64>,
+}
+
 /// Which loss family a [`Problem`] trains — the solvers' one-per-solve
 /// dispatch key (and the checkpoint-envelope tag).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -481,12 +492,39 @@ impl Problem {
 
     /// [`duality_gap`](Problem::duality_gap) with the primal value `f(α)`
     /// already in hand — the session loop evaluates the objective every
-    /// round anyway, so the certificate should not recompute it.
+    /// round anyway, so the certificate should not recompute it. One-shot
+    /// form; repeated evaluators (the session loop) go through
+    /// [`duality_gap_scratch`](Problem::duality_gap_scratch).
     pub fn duality_gap_given_primal(&self, ds: &Dataset, v: &[f64], alpha: &[f64], f: f64) -> f64 {
+        let mut scratch = GapScratch::default();
+        self.duality_gap_scratch(ds, v, alpha, f, &mut scratch)
+    }
+
+    /// The certificate through caller-owned scratch: `u` and `Aᵀu` land in
+    /// the [`GapScratch`] buffers (via [`CscMatrix::matvec_t_into`]), so a
+    /// tracking session's per-eval `Vec` allocations disappear — after the
+    /// first evaluation the certificate is allocation-free (asserted by
+    /// the counting-allocator test below and the hotpath bench). Values
+    /// are bit-identical to the one-shot form.
+    ///
+    /// [`CscMatrix::matvec_t_into`]: crate::data::CscMatrix::matvec_t_into
+    pub fn duality_gap_scratch(
+        &self,
+        ds: &Dataset,
+        v: &[f64],
+        alpha: &[f64],
+        f: f64,
+        scratch: &mut GapScratch,
+    ) -> f64 {
+        debug_assert_eq!(alpha.len(), ds.n());
         let b = &ds.b;
         debug_assert_eq!(v.len(), b.len());
-        let mut u: Vec<f64> = v.iter().zip(b.iter()).map(|(&vi, &bi)| vi - bi).collect();
-        let mut at_u = ds.a.matvec_t(&u);
+        scratch.u.clear();
+        scratch
+            .u
+            .extend(v.iter().zip(b.iter()).map(|(&vi, &bi)| vi - bi));
+        ds.a.matvec_t_into(&scratch.u, &mut scratch.at_u);
+        let (u, at_u) = (&mut scratch.u, &mut scratch.at_u);
         if self.loss == LossKind::Squared && self.reg.eta == 0.0 {
             // Lasso: φ* is the indicator of |s| ≤ λn; the standard residual
             // rescaling keeps the certificate finite and tight.
@@ -501,7 +539,7 @@ impl Problem {
                 }
             }
         }
-        let gstar = 0.5 * linalg::nrm2_sq(&u) + linalg::dot(b, &u);
+        let gstar = 0.5 * linalg::nrm2_sq(u) + linalg::dot(b, u);
         let l = self.loss_impl();
         let conj: f64 = at_u.iter().map(|&t| l.phi_conj_neg(&self.reg, t)).sum();
         f + gstar + conj
@@ -657,6 +695,39 @@ mod tests {
         let a = vec![0.25 * p.reg.box_c(); cds.n()];
         let v = cds.shared_vector(&a);
         assert!(p.duality_gap(&cds, &v, &a) > 0.0);
+    }
+
+    #[test]
+    fn gap_scratch_matches_one_shot_and_is_allocation_free() {
+        // The satellite bar: an eval step through the session's reused
+        // scratch is bit-identical to the one-shot form and, once warm,
+        // performs zero heap allocations (counting allocator).
+        let ds = webspam_like(&SyntheticSpec::small());
+        let alpha = vec![0.03; ds.n()];
+        let v = ds.shared_vector(&alpha);
+        for p in [
+            Problem::ridge(2.0),
+            Problem::lasso(5.0),
+            Problem::elastic(2.0, 0.4),
+        ] {
+            let f = p.primal_given_v(&v, &alpha, &ds.b);
+            let mut scratch = GapScratch::default();
+            let warm = p.duality_gap_scratch(&ds, &v, &alpha, f, &mut scratch);
+            assert_eq!(
+                warm.to_bits(),
+                p.duality_gap_given_primal(&ds, &v, &alpha, f).to_bits(),
+                "{}",
+                p.kind_name()
+            );
+            let before = crate::testkit::alloc::current_thread_allocations();
+            let mut acc = 0.0;
+            for _ in 0..10 {
+                acc += p.duality_gap_scratch(&ds, &v, &alpha, f, &mut scratch);
+            }
+            let after = crate::testkit::alloc::current_thread_allocations();
+            assert_eq!(after - before, 0, "{} eval step allocated", p.kind_name());
+            assert!(acc.is_finite() && acc >= 0.0);
+        }
     }
 
     #[test]

@@ -122,6 +122,7 @@ pub struct SessionBuilder<'a> {
     oracle: OracleMode,
     resume: Option<Checkpoint>,
     track_gap: bool,
+    threads_per_worker: Option<usize>,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -185,6 +186,34 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Run `t` local sub-solvers inside every worker — nested two-level
+    /// parallelism (DESIGN.md §10). The sub-shards are the parts of the
+    /// flat `K·t` partitioning, σ′ becomes γ·K·t and per-shard seeds use
+    /// the flat rank ids, so the trajectory is **bit-identical** to a flat
+    /// `K·t` ring while the communication topology stays K-wide:
+    ///
+    /// ```no_run
+    /// # use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+    /// # use sparkbench::session::Session;
+    /// # let ds = webspam_like(&SyntheticSpec::small());
+    /// // 4 ranks × 2 sub-solvers each ≡ an 8-worker flat ring.
+    /// let report = Session::builder(&ds)
+    ///     .engine(sparkbench::framework::Engine::threads(4))
+    ///     .threads_per_worker(2)
+    ///     .train();
+    /// # let _ = report;
+    /// ```
+    ///
+    /// Shorthand for setting [`EngineOptions::threads_per_worker`]
+    /// (overriding whatever [`options`](Self::options) carried); an
+    /// explicit `Engine::Threads { t, .. } > 0` still wins. Registry-built
+    /// engines only — combining with [`attach`](Self::attach) is a
+    /// build-time error.
+    pub fn threads_per_worker(mut self, t: usize) -> Self {
+        self.threads_per_worker = Some(t);
+        self
+    }
+
     /// Stopping policy (default: `ToTarget` at the config's
     /// `target_subopt`).
     pub fn stop(mut self, stop: StopPolicy) -> Self {
@@ -243,11 +272,13 @@ impl<'a> SessionBuilder<'a> {
     /// Resume from a checkpoint: restores α into the engine, v, the round
     /// counter (round seeds line up) and the clock offset.
     ///
-    /// The checkpoint fingerprint covers λn, η, K and the vector sizes
-    /// only. `seed`, `partitioner`, the H settings (`h_frac`/`h_abs`) and
-    /// `gamma` are NOT recorded in the (v1) format and are not checked —
-    /// bit-exact continuation requires resuming with the same values for
-    /// all of them as the original run.
+    /// The checkpoint fingerprint covers λn, η, K, `threads_per_worker`
+    /// (v3 envelopes; earlier versions imply T = 1) and the vector sizes.
+    /// `seed`, `partitioner`, the H settings (`h_frac`/`h_abs`) and
+    /// `gamma` are NOT recorded and are not checked — bit-exact
+    /// continuation requires resuming with the same values for all of
+    /// them as the original run (re-sharding is then deterministic, even
+    /// for nested K×T layouts).
     pub fn resume_from(mut self, ckpt: Checkpoint) -> Self {
         self.resume = Some(ckpt);
         self
@@ -276,6 +307,17 @@ impl<'a> SessionBuilder<'a> {
                     .into(),
             );
         }
+        if self.attached.is_some() && self.threads_per_worker.is_some() {
+            return Err(
+                ".threads_per_worker(...) cannot apply to an attached engine — its \
+                 sub-shard layout was fixed at construction; build nested engines \
+                 via .engine(...) or framework::build_any"
+                    .into(),
+            );
+        }
+        if self.threads_per_worker == Some(0) {
+            return Err("threads_per_worker must be >= 1".into());
+        }
         if self.attached.is_some() && self.problem.is_some() {
             return Err(
                 ".problem(...) cannot apply to an attached engine — its workers were \
@@ -302,7 +344,10 @@ impl<'a> SessionBuilder<'a> {
                     .into(),
             );
         }
-        let opts = self.opts.unwrap_or_default();
+        let mut opts = self.opts.unwrap_or_default();
+        if let Some(t) = self.threads_per_worker {
+            opts.threads_per_worker = t;
+        }
         let mut engine = match self.attached {
             Some(e) => EngineRef::Attached(e),
             None => EngineRef::Owned(build_any(self.engine, self.ds, &cfg, &opts)),
@@ -315,6 +360,17 @@ impl<'a> SessionBuilder<'a> {
                 let mut fingerprint = cfg.clone();
                 fingerprint.workers = engine.get().num_workers();
                 ckpt.compatible_with(&fingerprint)?;
+                // The nested layout is part of the trajectory: a K×T run
+                // re-shards deterministically (same partitioner, K·T,
+                // seed), so T must match the engine driving the resume.
+                let engine_t = engine.get().threads_per_worker();
+                if ckpt.threads_per_worker != engine_t {
+                    return Err(format!(
+                        "threads-per-worker mismatch: checkpoint trained with T={}, \
+                         resuming engine has T={}",
+                        ckpt.threads_per_worker, engine_t
+                    ));
+                }
                 if ckpt.v.len() != self.ds.m() {
                     return Err(format!(
                         "checkpoint v has {} entries, dataset m = {}",
@@ -406,6 +462,7 @@ impl<'a> Session<'a> {
             oracle: OracleMode::Auto,
             resume: None,
             track_gap: false,
+            threads_per_worker: None,
         }
     }
 
@@ -444,6 +501,9 @@ impl<'a> Session<'a> {
         // without either is a pure timing run.
         let want_gap = track_gap || matches!(stop, StopPolicy::ToGap { .. });
         let eval = fstar.is_some() || want_gap;
+        // Reused certificate buffers: gap evaluations stop allocating
+        // after the first one (Problem::duality_gap_scratch).
+        let mut gap_scratch = crate::problem::GapScratch::default();
         let mut final_obj = None;
         let mut final_sub = None;
         if eval {
@@ -480,7 +540,9 @@ impl<'a> Session<'a> {
                 // The certificate costs an O(nnz) Aᵀu on top — computed
                 // only when something consumes it, reusing the f above.
                 let g = if want_gap {
-                    let gap = cfg.problem.duality_gap_given_primal(ds, &v, &alpha, f);
+                    let gap = cfg
+                        .problem
+                        .duality_gap_scratch(ds, &v, &alpha, f, &mut gap_scratch);
                     Some(gap / f.abs().max(1.0))
                 } else {
                     None
@@ -837,7 +899,7 @@ mod tests {
         for engine in [
             Engine::Impl(Impl::Mpi),
             Engine::Impl(Impl::SparkCOpt),
-            Engine::Threads { k: 0 },
+            Engine::threads(0),
             Engine::ParamServer { staleness: 0 },
         ] {
             let report = Session::builder(&ds)

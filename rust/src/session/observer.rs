@@ -100,6 +100,7 @@ impl CheckpointEvery {
             v: ctx.v.to_vec(),
             problem: ctx.cfg.problem,
             workers: ctx.engine.num_workers(),
+            threads_per_worker: ctx.engine.threads_per_worker(),
         };
         match ckpt.save(&self.path) {
             Ok(()) => self.saves += 1,

@@ -42,7 +42,7 @@ fn every_engine_reaches_target() {
         .filter(|&&imp| imp != Impl::MllibSgd) // needs far more rounds; covered below
         .map(|&imp| Engine::Impl(imp))
         .collect();
-    engines.push(Engine::Threads { k: 0 });
+    engines.push(Engine::threads(0));
     engines.push(Engine::ParamServer { staleness: 0 });
     for engine in engines {
         let rep = run_to_target(engine, &ds, &cfg, fstar);

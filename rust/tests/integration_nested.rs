@@ -1,0 +1,258 @@
+//! Integration: nested two-level parallelism (`threads_per_worker`) —
+//! DESIGN.md §10.
+//!
+//! The load-bearing acceptance: a K-rank engine running T local
+//! sub-solvers per rank produces **bit-identical** Δv, α and objective
+//! trajectories to the flat K·T ring — for every engine family, for
+//! power-of-two and non-power-of-two (K, T), through the Session API, and
+//! with strictly fewer cross-rank frames on the wire.
+
+use sparkbench::config::{Impl, TrainConfig};
+use sparkbench::testkit::alloc::CountingAllocator;
+
+/// Install the counting allocator for THIS test binary so the 0-alloc
+/// assertion below measures reality (the counter never moves otherwise).
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+use sparkbench::data::{Dataset, Partitioner, Partitioning, WorkerData};
+use sparkbench::framework::{build_any, DistEngine, Engine, EngineOptions};
+use sparkbench::linalg::{self, DeltaReducer, DeltaSlot, NestedTreePlan};
+use sparkbench::problem::Problem;
+use sparkbench::session::Session;
+use sparkbench::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
+
+fn dataset() -> Dataset {
+    webspam_like(&SyntheticSpec::small())
+}
+
+fn cfg_for(ds: &Dataset, workers: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default_for(ds);
+    cfg.workers = workers;
+    cfg
+}
+
+/// Drive an engine manually and collect the bit patterns of every round's
+/// Δv plus the final α.
+fn trajectory(
+    eng: &mut Box<dyn DistEngine>,
+    m: usize,
+    rounds: usize,
+    h: usize,
+) -> (Vec<Vec<u64>>, Vec<u64>) {
+    let mut v = vec![0.0; m];
+    let mut dvs = Vec::new();
+    for round in 0..rounds {
+        let (dv, _) = eng.run_round(&v, h, round as u64);
+        dvs.push(dv.iter().map(|x| x.to_bits()).collect());
+        linalg::add_assign(&mut v, &dv);
+    }
+    let alpha = eng.alpha_global().iter().map(|x| x.to_bits()).collect();
+    (dvs, alpha)
+}
+
+#[test]
+fn nested_threads_engine_is_bitwise_identical_to_flat_ring() {
+    // THE acceptance test: nested (K, T) ≡ flat K·T on the physically
+    // parallel engine, for every required shape including
+    // non-power-of-two.
+    let ds = dataset();
+    for (k, t) in [(2usize, 2usize), (3, 2), (2, 3), (4, 4)] {
+        let cfg = cfg_for(&ds, k);
+        let mut nested = build_any(
+            Engine::threads_nested(k, t),
+            &ds,
+            &cfg,
+            &EngineOptions::default(),
+        );
+        assert_eq!(nested.num_workers(), k, "k={} t={}", k, t);
+        assert_eq!(nested.threads_per_worker(), t);
+        assert_eq!(nested.engine().label(), format!("threads:{}:{}", k, t));
+
+        let mut flat = build_any(
+            Engine::threads(k * t),
+            &ds,
+            &cfg,
+            &EngineOptions::default(),
+        );
+        assert_eq!(flat.num_workers(), k * t);
+
+        let (ndvs, nalpha) = trajectory(&mut nested, ds.m(), 4, 12);
+        let (fdvs, falpha) = trajectory(&mut flat, ds.m(), 4, 12);
+        assert_eq!(ndvs, fdvs, "Δv diverged for k={} t={}", k, t);
+        assert_eq!(nalpha, falpha, "α diverged for k={} t={}", k, t);
+    }
+}
+
+#[test]
+fn nested_is_bitwise_identical_to_flat_for_every_family() {
+    // The same invariant across all five engine families, with a
+    // non-power-of-two T so the forest (multi-root) path is exercised on
+    // every substrate.
+    let ds = dataset();
+    let (k, t) = (2usize, 3usize);
+    let nested_opts = EngineOptions {
+        threads_per_worker: t,
+        ..Default::default()
+    };
+    for family in Engine::FAMILIES {
+        let cfg_nested = cfg_for(&ds, k);
+        let mut nested = build_any(family, &ds, &cfg_nested, &nested_opts);
+        assert_eq!(nested.threads_per_worker(), t, "{}", family.label());
+        let cfg_flat = cfg_for(&ds, k * t);
+        let mut flat = build_any(family, &ds, &cfg_flat, &EngineOptions::default());
+
+        let (ndvs, nalpha) = trajectory(&mut nested, ds.m(), 3, 8);
+        let (fdvs, falpha) = trajectory(&mut flat, ds.m(), 3, 8);
+        assert_eq!(ndvs, fdvs, "Δv diverged for {}", family.label());
+        assert_eq!(nalpha, falpha, "α diverged for {}", family.label());
+    }
+}
+
+#[test]
+fn nested_session_matches_flat_session_end_to_end() {
+    // Session-level equivalence: same H resolution (n_locals reports
+    // sub-shard sizes), same round count, same objective bits — the
+    // builder's threads_per_worker is the only difference.
+    let ds = dataset();
+    let mut cfg = cfg_for(&ds, 2);
+    cfg.max_rounds = 1500;
+    cfg.eval_every = 1;
+    let fstar = sparkbench::coordinator::oracle_objective(&ds, &cfg);
+
+    let nested = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .threads_per_worker(2)
+        .config(cfg.clone())
+        .oracle(fstar)
+        .build()
+        .unwrap()
+        .run();
+    let mut cfg_flat = cfg.clone();
+    cfg_flat.workers = 4;
+    let flat = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg_flat)
+        .oracle(fstar)
+        .build()
+        .unwrap()
+        .run();
+    assert!(nested.time_to_target.is_some(), "nested session missed target");
+    assert_eq!(nested.rounds, flat.rounds);
+    let bits = |r: &sparkbench::metrics::TrainReport| -> Vec<u64> {
+        r.logs
+            .iter()
+            .filter_map(|l| l.objective)
+            .map(f64::to_bits)
+            .collect()
+    };
+    assert_eq!(bits(&nested), bits(&flat));
+}
+
+#[test]
+fn nested_cuts_cross_rank_bytes() {
+    // The point of reducing locally first: only K forest-root frames
+    // cross rank boundaries instead of K·T. Forced-dense frames make the
+    // byte counts deterministic (T = 4 is a power of two → one root).
+    let ds = dataset();
+    let dense = EngineOptions {
+        dense_frames: true,
+        ..Default::default()
+    };
+    let nested_dense = EngineOptions {
+        dense_frames: true,
+        threads_per_worker: 4,
+        ..Default::default()
+    };
+    let cfg = cfg_for(&ds, 2);
+    let mut nested = build_any(Engine::Impl(Impl::Mpi), &ds, &cfg, &nested_dense);
+    let cfg_flat = cfg_for(&ds, 8);
+    let mut flat = build_any(Engine::Impl(Impl::Mpi), &ds, &cfg_flat, &dense);
+    let v = vec![0.0; ds.m()];
+    let (dv1, tn) = nested.run_round(&v, 8, 1);
+    let (dv2, tf) = flat.run_round(&v, 8, 1);
+    for (a, b) in dv1.iter().zip(dv2.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // 2 dense root frames vs 8 dense rank frames.
+    assert_eq!(tn.bytes_up * 4, tf.bytes_up);
+    assert!(tn.worker_compute.len() == 2 && tf.worker_compute.len() == 8);
+}
+
+#[test]
+fn nested_sub_solve_pipeline_is_allocation_free() {
+    // The tentpole's 0-alloc bar: T sub-solves into persistent results +
+    // slot loads + the two-stage reduce — after one warmup round, nothing
+    // touches the allocator (aside from the caller-owned aggregate, which
+    // this harness keeps out of the loop).
+    let ds = dataset();
+    let (k, t) = (2usize, 2usize);
+    let cfg = cfg_for(&ds, k);
+    let parts = Partitioning::build_nested(Partitioner::Range, &ds.a, k, t, cfg.seed);
+    let shards: Vec<WorkerData> = parts
+        .parts
+        .iter()
+        .map(|cols| WorkerData::from_columns(&ds.a, cols))
+        .collect();
+    let alphas: Vec<Vec<f64>> = shards.iter().map(|s| vec![0.0; s.n_local()]).collect();
+    let mut solvers: Vec<NativeScd> = (0..k * t).map(|_| NativeScd::new()).collect();
+    let mut results: Vec<SolveResult> = (0..k * t).map(|_| SolveResult::default()).collect();
+    let mut slots: Vec<DeltaSlot> = (0..k * t).map(|_| DeltaSlot::new()).collect();
+    let plan = NestedTreePlan::new(k, t);
+    let mut reducer = DeltaReducer::raw(ds.m());
+    let problem = Problem::ridge(1.0);
+    let sigma = cfg.sigma_t(t);
+    let v = vec![0.0; ds.m()];
+
+    let mut round = |seed: u64, slots: &mut Vec<DeltaSlot>| {
+        for g in 0..k * t {
+            let req = SolveRequest {
+                v: &v,
+                b: &ds.b,
+                h: 16,
+                problem: &problem,
+                sigma,
+                seed: seed ^ (g as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            };
+            solvers[g].solve_into(&shards[g], &alphas[g], &req, &mut results[g]);
+            reducer.load(&mut slots[g], &results[g].delta_v);
+        }
+        for w in 0..k {
+            reducer.reduce_pairs(&mut slots[w * t..(w + 1) * t], plan.local_pairs(w));
+        }
+        reducer.reduce_pairs(slots, plan.cross_pairs());
+    };
+    round(0, &mut slots); // warmup sizes every persistent buffer
+    let before = sparkbench::testkit::alloc::current_thread_allocations();
+    for seed in 1..6u64 {
+        round(seed, &mut slots);
+    }
+    let after = sparkbench::testkit::alloc::current_thread_allocations();
+    assert_eq!(after - before, 0, "nested round pipeline allocated");
+}
+
+#[test]
+fn builder_rejects_bad_threads_per_worker() {
+    let ds = dataset();
+    let cfg = cfg_for(&ds, 2);
+    let err = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg.clone())
+        .threads_per_worker(0)
+        .fixed_rounds(1)
+        .build()
+        .err()
+        .expect("T = 0 must be rejected");
+    assert!(err.contains("threads_per_worker"), "{}", err);
+
+    let mut eng = sparkbench::framework::build_engine(Impl::Mpi, &ds, &cfg);
+    let err = Session::builder(&ds)
+        .config(cfg)
+        .attach(eng.as_mut())
+        .threads_per_worker(2)
+        .fixed_rounds(1)
+        .build()
+        .err()
+        .expect("threads_per_worker on an attached engine must be rejected");
+    assert!(err.contains("attached"), "{}", err);
+}

@@ -113,7 +113,7 @@ fn checkpoint_via_observer_roundtrips_to_the_same_trajectory() {
     // the registry invariant survives a save/restore boundary.
     let ckpt2 = Checkpoint::load(&path).unwrap();
     let resumed_threads = Session::builder(&ds)
-        .engine(Engine::Threads { k: 0 })
+        .engine(Engine::threads(0))
         .config(cfg)
         .fixed_rounds(5)
         .oracle(fstar)
@@ -122,6 +122,89 @@ fn checkpoint_via_observer_roundtrips_to_the_same_trajectory() {
         .unwrap()
         .run();
     assert_eq!(objective_bits(&resumed_threads), &full[5..]);
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn nested_checkpoint_resume_is_bit_exact_across_substrates() {
+    // Satellite: deterministic re-sharding on resume. A T = 4 nested
+    // session checkpoints; resuming on BOTH the nested threads engine and
+    // the virtual MPI engine with the same T re-shards deterministically
+    // (same partitioner, K·T, seed) and continues BIT-exactly. A
+    // mismatched T is refused.
+    let (ds, mut cfg) = setup();
+    cfg.workers = 2;
+    cfg.eval_every = 1;
+    let fstar = oracle_objective(&ds, &cfg);
+    let path = std::env::temp_dir().join("sparkbench_nested_ckpt_test.json");
+
+    // Uninterrupted reference on threads:2:4.
+    let reference = Session::builder(&ds)
+        .engine(Engine::threads_nested(2, 4))
+        .config(cfg.clone())
+        .fixed_rounds(8)
+        .oracle(fstar)
+        .build()
+        .unwrap()
+        .run();
+    let full = objective_bits(&reference);
+    assert_eq!(full.len(), 8);
+
+    // Interrupted: 4 rounds, checkpoint written by the observer.
+    let first_half = Session::builder(&ds)
+        .engine(Engine::threads_nested(2, 4))
+        .config(cfg.clone())
+        .fixed_rounds(4)
+        .oracle(fstar)
+        .observe(CheckpointEvery::new(4, &path))
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(objective_bits(&first_half), &full[..4]);
+
+    let ckpt = Checkpoint::load(&path).unwrap();
+    assert_eq!(ckpt.round, 4);
+    assert_eq!(ckpt.workers, 2);
+    assert_eq!(ckpt.threads_per_worker, 4);
+
+    // Resume on the nested threads engine.
+    let resumed_threads = Session::builder(&ds)
+        .engine(Engine::threads_nested(2, 4))
+        .config(cfg.clone())
+        .fixed_rounds(4)
+        .oracle(fstar)
+        .resume_from(Checkpoint::load(&path).unwrap())
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(objective_bits(&resumed_threads), &full[4..]);
+
+    // Resume the SAME checkpoint on the virtual MPI engine with the same
+    // T — cross-substrate, bit-exact.
+    let resumed_mpi = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .threads_per_worker(4)
+        .config(cfg.clone())
+        .fixed_rounds(4)
+        .oracle(fstar)
+        .resume_from(Checkpoint::load(&path).unwrap())
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(objective_bits(&resumed_mpi), &full[4..]);
+
+    // Mismatched T: the sub-shard layout is part of the trajectory.
+    let err = Session::builder(&ds)
+        .engine(Engine::threads_nested(2, 2))
+        .config(cfg)
+        .fixed_rounds(1)
+        .oracle(fstar)
+        .resume_from(Checkpoint::load(&path).unwrap())
+        .build()
+        .err()
+        .expect("resume with a different threads_per_worker must be refused");
+    assert!(err.contains("threads-per-worker"), "{}", err);
 
     std::fs::remove_file(&path).ok();
 }
