@@ -20,10 +20,19 @@
 //! * **nested two-level parallelism** (DESIGN.md §10): threads-engine
 //!   wall-clock K×T sweep at a fixed K·H work budget — bar:
 //!   `nested_speedup_t4 ≥ 2.0` on ≥ 4 cores — plus the 0-alloc assertion
-//!   on the nested sub-solve → two-stage-reduce pipeline.
+//!   on the nested sub-solve → two-stage-reduce pipeline;
+//! * **kernel backends** (DESIGN.md §11): forced-scalar vs dispatched
+//!   (AVX2 under `--features simd`) ns/element for `dot` / `axpy` /
+//!   `dot_indexed` / `axpy_indexed` at m ∈ {2¹², 2¹⁶, 2²⁰}, plus the
+//!   cache-blocked vs flat CSC traversal of a full SCD round — bar:
+//!   dispatched ≥ 1.3× scalar on `dot` at m = 2²⁰ when the avx2 backend
+//!   is active (identical bits either way; the ratio is pure speed);
+//! * **mixed precision** (DESIGN.md §11): f64 vs mixed-f32 ns/step on the
+//!   same round, and the final-objective delta of a 120-round single-shard
+//!   trajectory (expected ≤ 1e-3 relative — mixed-f32 is NOT bit-stable).
 
 use sparkbench::bench::{render_results, Bencher};
-use sparkbench::config::{Impl, TrainConfig};
+use sparkbench::config::{Impl, Precision, TrainConfig};
 use sparkbench::coordinator;
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
 use sparkbench::data::{Partitioner, Partitioning, WorkerData};
@@ -58,7 +67,7 @@ fn main() {
     let b = Bencher::default();
     let mut results = Vec::new();
     let mut json = Json::obj();
-    json.set("bench", "hotpath").set("schema_version", 5usize);
+    json.set("bench", "hotpath").set("schema_version", 6usize);
 
     // ---- sparse dot / axpy — one call per SCD step, THE hot pair --------
     let ds = webspam_like(&SyntheticSpec::webspam_mini());
@@ -74,6 +83,72 @@ fn main() {
     results.push(b.run("dot_indexed_fused (1 col)", || {
         linalg::dot_indexed_fused(ri, vs, &dense)
     }));
+
+    // ---- kernel backends: forced-scalar vs dispatched (DESIGN.md §11) ---
+    // The dispatcher routes to AVX2 only under `--features simd` on an
+    // x86-64 with the feature bit set; elsewhere both rows time the same
+    // scalar code and the ratio reads ~1.0. Either way the bits are
+    // identical (tests/integration_kernels.rs), so this table is the only
+    // place the backend choice is visible.
+    {
+        use sparkbench::linalg::kernels;
+        let mut jk = Json::obj();
+        jk.set("backend", kernels::backend());
+        for &m in &[1usize << 12, 1 << 16, 1 << 20] {
+            let lg = m.trailing_zeros();
+            let x: Vec<f64> = (0..m).map(|i| ((i * 31) % 97) as f64 * 0.125 - 6.0).collect();
+            let y: Vec<f64> = (0..m).map(|i| ((i * 17) % 89) as f64 * 0.25 - 11.0).collect();
+            let mut acc = vec![0.0; m];
+            // Synthetic column touching every 3rd row — the gather-bound
+            // indexed pair at a controlled density.
+            let idx: Vec<u32> = (0..(m as u32) / 3).map(|i| i * 3).collect();
+            let vals: Vec<f64> = idx.iter().map(|&i| (i % 13) as f64 * 0.5 - 3.0).collect();
+            let mut jm = Json::obj();
+            let mut dot_ns = [0.0f64; 2];
+            for (slot, forced) in [(0usize, true), (1usize, false)] {
+                kernels::force_scalar(forced);
+                let tag = if forced { "scalar" } else { "dispatch" };
+                let d = b.run(&format!("dot m=2^{} ({})", lg, tag), || linalg::dot(&x, &y));
+                let a = b.run(&format!("axpy m=2^{} ({})", lg, tag), || {
+                    linalg::axpy(0.5, &x, &mut acc)
+                });
+                let di = b.run(&format!("dot_indexed m=2^{} ({})", lg, tag), || {
+                    linalg::dot_indexed(&idx, &vals, &x)
+                });
+                let ai = b.run(&format!("axpy_indexed m=2^{} ({})", lg, tag), || {
+                    linalg::axpy_indexed(0.5, &idx, &vals, &mut acc)
+                });
+                dot_ns[slot] = d.mean_s * 1e9 / m as f64;
+                jm.set(&format!("dot_ns_per_elem_{}", tag), d.mean_s * 1e9 / m as f64)
+                    .set(&format!("axpy_ns_per_elem_{}", tag), a.mean_s * 1e9 / m as f64)
+                    .set(
+                        &format!("dot_indexed_ns_per_elem_{}", tag),
+                        di.mean_s * 1e9 / idx.len().max(1) as f64,
+                    )
+                    .set(
+                        &format!("axpy_indexed_ns_per_elem_{}", tag),
+                        ai.mean_s * 1e9 / idx.len().max(1) as f64,
+                    );
+                results.push(d);
+                results.push(a);
+                results.push(di);
+                results.push(ai);
+            }
+            kernels::force_scalar(false);
+            let speedup = dot_ns[0] / dot_ns[1].max(1e-12);
+            println!(
+                "kernels m=2^{:2} [{}]: dot {:.3} ns/elem scalar vs {:.3} dispatched → {:.2}x",
+                lg,
+                kernels::backend(),
+                dot_ns[0],
+                dot_ns[1],
+                speedup
+            );
+            jm.set("dot_speedup", speedup);
+            jk.set(&format!("m{}", m), jm);
+        }
+        json.set("kernels", jk);
+    }
 
     // ---- full local solve: fresh-alloc vs pooled ------------------------
     let cols: Vec<u32> = (0..(ds.n() as u32 / 8)).collect();
@@ -517,6 +592,104 @@ fn main() {
         results.push(inlined);
         results.push(dispatched);
         results.push(hinge);
+    }
+
+    // ---- cache-blocked CSC traversal + mixed precision (DESIGN.md §11) --
+    // Same round, three numeric paths: flat f64 (the default at this m),
+    // cache-blocked f64 (forced by lowering the row-block threshold), and
+    // mixed-f32 (f32 storage mirrors, f64 accumulation). Blocked and mixed
+    // must both stay 0-alloc in steady state; mixed additionally reports
+    // the final-objective drift of a 120-round trajectory vs f64.
+    {
+        let mut jkp = Json::obj();
+        let mut flat_solver = NativeScd::new();
+        let mut flat_out = SolveResult::default();
+        flat_solver.solve_into(&wd, &alpha, &req, &mut flat_out); // warmup
+        let flat = b.run("scd round (flat f64)", || {
+            flat_solver.solve_into(&wd, &alpha, &req, &mut flat_out)
+        });
+        let mut blk_solver = NativeScd::new().with_block_rows(512);
+        let mut blk_out = SolveResult::default();
+        blk_solver.solve_into(&wd, &alpha, &req, &mut blk_out); // warmup builds the plan
+        let blocked = b.run("scd round (blocked f64, 512-row blocks)", || {
+            blk_solver.solve_into(&wd, &alpha, &req, &mut blk_out)
+        });
+        let a0 = current_thread_allocations();
+        blk_solver.solve_into(&wd, &alpha, &req, &mut blk_out);
+        let blocked_allocs = current_thread_allocations() - a0;
+
+        let mut mx_solver = NativeScd::with_precision(Precision::MixedF32);
+        let mut mx_out = SolveResult::default();
+        mx_solver.solve_into(&wd, &alpha, &req, &mut mx_out); // warmup builds mirrors
+        let mixed = b.run("scd round (mixed-f32)", || {
+            mx_solver.solve_into(&wd, &alpha, &req, &mut mx_out)
+        });
+        let a0 = current_thread_allocations();
+        mx_solver.solve_into(&wd, &alpha, &req, &mut mx_out);
+        let mixed_allocs = current_thread_allocations() - a0;
+        println!(
+            "blocked vs flat SCD: {:.3} ms vs {:.3} ms; mixed-f32 {:.3} ms; \
+             allocs/round blocked = {}, mixed = {} (MUST be 0)",
+            blocked.mean_s * 1e3,
+            flat.mean_s * 1e3,
+            mixed.mean_s * 1e3,
+            blocked_allocs,
+            mixed_allocs
+        );
+
+        // Final-objective drift: 120 accumulated single-shard rounds per
+        // precision (the scd.rs unit test pins this at ≤ 1e-3 relative).
+        let drift = {
+            let run = |prec: Precision| -> f64 {
+                let mut s = NativeScd::with_precision(prec);
+                let mut a = vec![0.0; wd.n_local()];
+                let mut vv = vec![0.0; ds.m()];
+                let mut o = SolveResult::default();
+                for round in 0..120u64 {
+                    let r = SolveRequest {
+                        v: &vv,
+                        b: &ds.b,
+                        h: wd.n_local(),
+                        problem: &ridge,
+                        sigma: 1.0,
+                        seed: round,
+                    };
+                    s.solve_into(&wd, &a, &r, &mut o);
+                    for (ai, d) in a.iter_mut().zip(o.delta_alpha.iter()) {
+                        *ai += d;
+                    }
+                    linalg::add_assign(&mut vv, &o.delta_v);
+                }
+                let mut full = vec![0.0; ds.n()];
+                for (j, &c) in wd.global_ids.iter().enumerate() {
+                    full[c as usize] = a[j];
+                }
+                ridge.primal(&ds, &full)
+            };
+            let f64_obj = run(Precision::F64);
+            let mx_obj = run(Precision::MixedF32);
+            (mx_obj - f64_obj).abs() / f64_obj.abs().max(1e-12)
+        };
+        println!("mixed-f32 final-objective drift after 120 rounds: {:.2e} relative", drift);
+
+        let mut jb = Json::obj();
+        jb.set("flat_mean_s", flat.mean_s)
+            .set("blocked_mean_s", blocked.mean_s)
+            .set("blocked_speedup", flat.mean_s / blocked.mean_s.max(1e-12))
+            .set("block_rows", 512usize)
+            .set("allocs_per_round", blocked_allocs);
+        jkp.set("blocked_traversal", jb);
+        let mut jm = Json::obj();
+        jm.set("f64_mean_s", flat.mean_s)
+            .set("mixed_mean_s", mixed.mean_s)
+            .set("step_speedup", flat.mean_s / mixed.mean_s.max(1e-12))
+            .set("allocs_per_round", mixed_allocs)
+            .set("final_objective_drift_rel", drift);
+        jkp.set("solver", jm);
+        json.set("mixed_precision", jkp);
+        results.push(flat);
+        results.push(blocked);
+        results.push(mixed);
     }
 
     // ---- problem objective (suboptimality tracking cost) ----------------

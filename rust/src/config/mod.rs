@@ -131,6 +131,40 @@ impl SolverKind {
     }
 }
 
+/// Numeric mode of the native local solver's inner loop (DESIGN.md §11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full f64 everywhere — the default, and the bit-stability baseline
+    /// every trajectory pin compares against.
+    #[default]
+    F64,
+    /// Opt-in mixed precision: the native SCD loop reads f32 column and
+    /// residual mirrors (half the hot-loop memory traffic) but accumulates
+    /// dots in f64 and keeps the α update, coordinate step and returned Δv
+    /// in full f64. Deliberately NOT bit-stable against [`Precision::F64`];
+    /// only implementations running the native solver support it, and
+    /// checkpoints record it (resuming across precisions is rejected).
+    MixedF32,
+}
+
+impl Precision {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::MixedF32 => "mixed-f32",
+        }
+    }
+
+    /// Parse the CLI/checkpoint spelling.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "double" => Some(Precision::F64),
+            "mixed-f32" | "mixed" | "f32" => Some(Precision::MixedF32),
+            _ => None,
+        }
+    }
+}
+
 /// Training hyper-parameters and run controls.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -157,6 +191,10 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Evaluate the objective every so many rounds (1 = every round).
     pub eval_every: usize,
+    /// Numeric mode of the native solver's inner loop (f64 default;
+    /// `MixedF32` is opt-in and rejected for implementations that do not
+    /// run the native solver).
+    pub precision: Precision,
 }
 
 impl TrainConfig {
@@ -174,6 +212,7 @@ impl TrainConfig {
             partitioner: Partitioner::BalancedNnz,
             seed: 42,
             eval_every: 1,
+            precision: Precision::F64,
         }
     }
 
@@ -289,6 +328,17 @@ mod tests {
         cfg.workers = 4;
         cfg.gamma = 0.0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn precision_parse_and_label_roundtrip() {
+        for p in [Precision::F64, Precision::MixedF32] {
+            assert_eq!(Precision::parse(p.label()), Some(p));
+        }
+        assert_eq!(Precision::parse("MIXED"), Some(Precision::MixedF32));
+        assert_eq!(Precision::parse("double"), Some(Precision::F64));
+        assert!(Precision::parse("bf16").is_none());
+        assert_eq!(Precision::default(), Precision::F64);
     }
 
     #[test]

@@ -2,16 +2,20 @@
 //! fingerprint) so long runs survive restarts — standard framework duty.
 //!
 //! Format: versioned JSON envelope with base-16 packed f64 payloads
-//! (exact bit-level round-trip, no float-text precision loss). Version 3
-//! adds the nested-parallelism degree `threads_per_worker` (resume
-//! re-shards deterministically: same partitioner, `K·T`, seed ⇒ same
-//! sub-shards — DESIGN.md §10); version-2 envelopes decode with T = 1.
-//! Version 2 records the trained [`Problem`]; version-1 envelopes (flat
-//! `lam_n`/`eta` fields, squared loss implied) still decode — as ridge at
-//! η = 1, elastic net otherwise.
+//! (exact bit-level round-trip, no float-text precision loss). Version 4
+//! records the numeric [`Precision`] the run trained with — a MixedF32
+//! trajectory is not bit-continuable in f64 (or vice versa), so resume
+//! refuses a precision mismatch; pre-v4 envelopes decode as `f64`.
+//! Version 3 adds the nested-parallelism degree `threads_per_worker`
+//! (resume re-shards deterministically: same partitioner, `K·T`, seed ⇒
+//! same sub-shards — DESIGN.md §10); version-2 envelopes decode with
+//! T = 1. Version 2 records the trained [`Problem`]; version-1 envelopes
+//! (flat `lam_n`/`eta` fields, squared loss implied) still decode — as
+//! ridge at η = 1, elastic net otherwise.
 
 use std::path::Path;
 
+use crate::config::Precision;
 use crate::problem::Problem;
 use crate::util::json::Json;
 
@@ -33,9 +37,13 @@ pub struct Checkpoint {
     /// parallelism; 1 = flat). Resume refuses a different T — the flat
     /// K·T sub-shard layout is part of the trajectory.
     pub threads_per_worker: usize,
+    /// Numeric mode the run trained with. Part of the trajectory the same
+    /// way T is: a MixedF32 residual history cannot be continued bit-true
+    /// in f64, so resume refuses a mismatch. Pre-v4 envelopes are f64.
+    pub precision: Precision,
 }
 
-const VERSION: f64 = 3.0;
+const VERSION: f64 = 4.0;
 
 fn pack_f64s(v: &[f64]) -> String {
     let mut s = String::with_capacity(v.len() * 16);
@@ -69,6 +77,7 @@ impl Checkpoint {
             .set("problem", self.problem.to_json())
             .set("workers", self.workers)
             .set("threads_per_worker", self.threads_per_worker)
+            .set("precision", self.precision.label())
             .set("alpha_hex", pack_f64s(&self.alpha))
             .set("v_hex", pack_f64s(&self.v));
         j
@@ -78,7 +87,7 @@ impl Checkpoint {
         let ver = j.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0);
         let num =
             |k: &str| -> Result<f64, String> { j.get(k).and_then(|v| v.as_f64()).ok_or(format!("missing {}", k)) };
-        let problem = if ver == VERSION || ver == 2.0 {
+        let problem = if ver == VERSION || ver == 3.0 || ver == 2.0 {
             Problem::from_json(j.get("problem").ok_or("missing problem")?)?
         } else if ver == 1.0 {
             // v1 envelopes predate the problem layer: squared loss with the
@@ -88,7 +97,7 @@ impl Checkpoint {
             return Err(format!("unsupported checkpoint version {}", ver));
         };
         // Pre-v3 envelopes predate nested parallelism: flat layout, T = 1.
-        let threads_per_worker = if ver == VERSION {
+        let threads_per_worker = if ver >= 3.0 {
             let t = num("threads_per_worker")? as usize;
             if t == 0 {
                 return Err("threads_per_worker must be >= 1".into());
@@ -97,7 +106,18 @@ impl Checkpoint {
         } else {
             1
         };
+        // Pre-v4 envelopes predate mixed precision: always f64.
+        let precision = if ver >= 4.0 {
+            let s = j
+                .get("precision")
+                .and_then(|v| v.as_str())
+                .ok_or("missing precision")?;
+            Precision::parse(s).ok_or_else(|| format!("unknown precision {:?}", s))?
+        } else {
+            Precision::F64
+        };
         Ok(Checkpoint {
+            precision,
             round: num("round")? as usize,
             time: num("time")?,
             problem,
@@ -140,6 +160,13 @@ impl Checkpoint {
         if self.workers != cfg.workers {
             return Err(format!("K mismatch: {} vs {}", self.workers, cfg.workers));
         }
+        if self.precision != cfg.precision {
+            return Err(format!(
+                "precision mismatch: checkpoint trained {}, config wants {}",
+                self.precision.label(),
+                cfg.precision.label()
+            ));
+        }
         Ok(())
     }
 }
@@ -157,6 +184,7 @@ mod tests {
             problem: Problem::ridge(0.5),
             workers: 8,
             threads_per_worker: 1,
+            precision: Precision::F64,
         }
     }
 
@@ -238,6 +266,46 @@ mod tests {
     }
 
     #[test]
+    fn precision_roundtrips_and_pre_v4_implies_f64() {
+        // v4 records the numeric mode exactly.
+        let mut c = sample();
+        c.precision = Precision::MixedF32;
+        let back = Checkpoint::from_json(&Json::parse(&c.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back.precision, Precision::MixedF32);
+        assert_eq!(back, c);
+        // A v3 envelope (no precision field) decodes as f64 — and still
+        // reads its threads_per_worker field.
+        let mut j = sample().to_json();
+        j.set("version", 3.0).set("precision", Json::Null);
+        let v3 = Checkpoint::from_json(&j).unwrap();
+        assert_eq!(v3.precision, Precision::F64);
+        assert_eq!(v3.threads_per_worker, 1);
+        // An unknown precision string in a v4 envelope is corrupt.
+        let mut jbad = sample().to_json();
+        jbad.set("precision", "bf16");
+        assert!(Checkpoint::from_json(&jbad).is_err());
+    }
+
+    #[test]
+    fn compatibility_refuses_cross_precision_resume() {
+        use crate::config::TrainConfig;
+        use crate::data::synthetic::{webspam_like, SyntheticSpec};
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 8;
+        cfg.problem = Problem::ridge(0.5);
+        let mut c = sample();
+        c.compatible_with(&cfg).unwrap();
+        // f64 checkpoint, mixed config: refused — and the reverse too.
+        cfg.precision = Precision::MixedF32;
+        assert!(c.compatible_with(&cfg).is_err());
+        c.precision = Precision::MixedF32;
+        c.compatible_with(&cfg).unwrap();
+        cfg.precision = Precision::F64;
+        assert!(c.compatible_with(&cfg).is_err());
+    }
+
+    #[test]
     fn compatibility_guard() {
         use crate::config::TrainConfig;
         use crate::data::synthetic::{webspam_like, SyntheticSpec};
@@ -283,6 +351,7 @@ mod tests {
             problem: cfg.problem,
             workers: cfg.workers,
             threads_per_worker: engine.threads_per_worker(),
+            precision: cfg.precision,
         };
         let f_at_ckpt = cfg.problem.primal(&ds, &ckpt.alpha);
         // "Restore": v from checkpoint drives further rounds.

@@ -78,7 +78,9 @@ impl MpiEngine {
             "nested layout needs the flat K·t partitioning"
         );
         let ws = WorkerSet::build(ds, parts);
-        let solvers = (0..ws.data.len()).map(|_| NativeScd::new()).collect();
+        let solvers = (0..ws.data.len())
+            .map(|_| NativeScd::with_precision(cfg.precision))
+            .collect();
         let results = (0..ws.data.len()).map(|_| SolveResult::default()).collect();
         let slots = (0..ws.data.len()).map(|_| linalg::DeltaSlot::new()).collect();
         let speedup = model.intra_worker_speedup(t);

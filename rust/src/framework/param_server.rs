@@ -86,7 +86,9 @@ impl ParamServerEngine {
             linalg::raw_sparse_cutover(ds.m())
         };
         ParamServerEngine {
-            solvers: (0..n_shards).map(|_| NativeScd::new()).collect(),
+            solvers: (0..n_shards)
+                .map(|_| NativeScd::with_precision(cfg.precision))
+                .collect(),
             results: (0..n_shards).map(|_| SolveResult::default()).collect(),
             slots: (0..n_shards).map(|_| DeltaSlot::new()).collect(),
             reducer: DeltaReducer::new(ds.m(), cutover),
@@ -289,7 +291,9 @@ impl ParamServerSim {
             .map(|cols| WorkerData::from_columns(&ds.a, cols))
             .collect();
         let alphas = workers.iter().map(|w| vec![0.0; w.n_local()]).collect();
-        let solvers = (0..workers.len()).map(|_| NativeScd::new()).collect();
+        let solvers = (0..workers.len())
+            .map(|_| NativeScd::with_precision(cfg.precision))
+            .collect();
         let v = vec![0.0; ds.m()];
         let mut history = VecDeque::with_capacity(staleness + 1);
         history.push_front(v.clone());

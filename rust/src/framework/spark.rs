@@ -141,7 +141,10 @@ impl SparkEngine {
             ),
             _ => (
                 (0..n_shards)
-                    .map(|_| Box::new(scd::NativeScd::new()) as Box<dyn LocalSolver>)
+                    .map(|_| {
+                        Box::new(scd::NativeScd::with_precision(cfg.precision))
+                            as Box<dyn LocalSolver>
+                    })
                     .collect(),
                 1.0,
             ),

@@ -284,7 +284,7 @@ impl ThreadedMpiEngine {
                     SubShard {
                         alpha: vec![0.0; data.n_local()],
                         data,
-                        solver: NativeScd::new(),
+                        solver: NativeScd::with_precision(cfg.precision),
                         res: SolveResult::default(),
                     }
                 })

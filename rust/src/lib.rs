@@ -116,7 +116,7 @@ static TEST_ALLOCATOR: testkit::alloc::CountingAllocator = testkit::alloc::Count
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::config::{Impl, SolverKind, TrainConfig};
+    pub use crate::config::{Impl, Precision, SolverKind, TrainConfig};
 
     pub use crate::data::synthetic::SyntheticSpec;
     pub use crate::data::{Dataset, Partitioning};

@@ -1,0 +1,251 @@
+//! Cache-blocked CSC column traversal for the SCD inner loop.
+//!
+//! On tall datasets the residual `r` (m doubles) outgrows L2, and each
+//! column dot/axpy walks it end to end — every SCD step streams the
+//! residual through the cache hierarchy. [`BlockPlan`] precomputes, per
+//! column, where its row-index run crosses L2-sized row-block boundaries
+//! (`block_rows` rows ≙ `block_rows × 8` bytes of residual), so the
+//! blocked kernels traverse one residual block's worth of a column at a
+//! time — keeping the dot's gathers and the following axpy's scatters
+//! inside the same cache footprint.
+//!
+//! **Bit-exactness boundary (DESIGN.md §11).** The blocked dot sums one
+//! ×4-convention partial dot per segment and adds the partials serially —
+//! a DIFFERENT summation tree than the single whole-column ×4 pass, so
+//! blocked results are deliberately NOT bit-equal to unblocked ones.
+//! Consequently the solver only engages the plan above a row threshold
+//! (`m > block_rows`, default 2¹⁵ — far above every bit-pinned test
+//! fixture), and the blocking decision depends ONLY on the data shape —
+//! never on the `simd` feature — so scalar-blocked remains the bitwise
+//! oracle for SIMD-blocked and flat-vs-nested engine equalities are
+//! untouched (both sides see the same plan). The blocked *axpy* is
+//! element-wise and therefore bit-equal to the unblocked scatter; it is
+//! segmented purely for locality symmetry with the dot.
+//!
+//! The plan lives in solver scratch, keyed by data identity: steady-state
+//! solves never rebuild it and never allocate (counting-allocator tests
+//! in `solver::scd`).
+
+use crate::data::CscMatrix;
+
+/// Default row-block height: 2¹⁵ rows ≙ 256 KiB of f64 residual — sized
+/// to sit inside a typical per-core L2 with room for the column stream.
+pub const DEFAULT_BLOCK_ROWS: usize = 1 << 15;
+
+/// Precomputed per-shard blocking plan: for every column, the offsets
+/// (within the column's `(row_idx, vals)` slices) where a new
+/// `block_rows`-high row block begins.
+#[derive(Debug, Clone)]
+pub struct BlockPlan {
+    /// Identity of the matrix this plan was built for (pointer + shape) —
+    /// the same cheap cache key the managed solvers use for their record
+    /// layouts. Rebuilt automatically when the solver sees other data.
+    key: (usize, usize, usize),
+    block_rows: usize,
+    /// Per-column range into `seg_end`: column `j`'s segment ends are
+    /// `seg_end[seg_ptr[j]..seg_ptr[j + 1]]`. Length `n + 1`.
+    seg_ptr: Vec<u32>,
+    /// Flat array of segment END offsets, relative to the column start;
+    /// each column's final entry equals its nnz.
+    seg_end: Vec<u32>,
+}
+
+impl BlockPlan {
+    fn key_of(mat: &CscMatrix) -> (usize, usize, usize) {
+        (mat as *const CscMatrix as usize, mat.m, mat.n)
+    }
+
+    /// Build the plan for `mat` with `block_rows`-high row blocks.
+    pub fn build(mat: &CscMatrix, block_rows: usize) -> BlockPlan {
+        assert!(block_rows > 0, "block_rows must be positive");
+        let mut seg_ptr = Vec::with_capacity(mat.n + 1);
+        let mut seg_end = Vec::new();
+        seg_ptr.push(0u32);
+        for j in 0..mat.n {
+            let (lo, hi) = (mat.col_ptr[j], mat.col_ptr[j + 1]);
+            let rows = &mat.row_idx[lo..hi];
+            let mut cur_block = usize::MAX;
+            for (off, &ri) in rows.iter().enumerate() {
+                let blk = ri as usize / block_rows;
+                if blk != cur_block {
+                    if off > 0 {
+                        seg_end.push(off as u32);
+                    }
+                    cur_block = blk;
+                }
+            }
+            if !rows.is_empty() {
+                seg_end.push(rows.len() as u32);
+            }
+            seg_ptr.push(seg_end.len() as u32);
+        }
+        BlockPlan {
+            key: BlockPlan::key_of(mat),
+            block_rows,
+            seg_ptr,
+            seg_end,
+        }
+    }
+
+    /// Whether this plan was built for exactly this matrix and block size
+    /// (solver scratch uses this to skip steady-state rebuilds).
+    pub fn matches(&self, mat: &CscMatrix, block_rows: usize) -> bool {
+        self.key == BlockPlan::key_of(mat) && self.block_rows == block_rows
+    }
+
+    /// The row-block height this plan was built with.
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
+    }
+
+    /// Column `j`'s segment end offsets (relative to the column start).
+    #[inline]
+    fn segments(&self, j: usize) -> &[u32] {
+        &self.seg_end[self.seg_ptr[j] as usize..self.seg_ptr[j + 1] as usize]
+    }
+
+    /// Blocked sparse dot over column `j`: one ×4-convention partial dot
+    /// per residual block, partials summed serially (NOT bit-equal to the
+    /// unblocked whole-column dot — module docs).
+    #[inline]
+    pub fn dot_indexed(&self, j: usize, idx: &[u32], vals: &[f64], dense: &[f64]) -> f64 {
+        let mut acc = 0.0f64;
+        let mut start = 0usize;
+        for &e in self.segments(j) {
+            let end = e as usize;
+            acc += super::dot_indexed(&idx[start..end], &vals[start..end], dense);
+            start = end;
+        }
+        acc
+    }
+
+    /// Blocked scatter update over column `j` — element-wise, hence
+    /// bit-equal to the unblocked [`super::axpy_indexed`]; segmented so
+    /// the scatters revisit the residual blocks the dot just touched.
+    #[inline]
+    pub fn axpy_indexed(&self, j: usize, a: f64, idx: &[u32], vals: &[f64], dense: &mut [f64]) {
+        let mut start = 0usize;
+        for &e in self.segments(j) {
+            let end = e as usize;
+            super::axpy_indexed(a, &idx[start..end], &vals[start..end], dense);
+            start = end;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{self, Xorshift128};
+
+    fn random_csc(m: usize, n: usize, avg_nnz: usize, seed: u64) -> CscMatrix {
+        let mut rng = Xorshift128::new(seed);
+        let mut t = Vec::new();
+        for c in 0..n {
+            let nnz = 1 + rng.next_usize(2 * avg_nnz);
+            for _ in 0..nnz {
+                t.push((rng.next_usize(m), c, rng.next_gaussian()));
+            }
+        }
+        CscMatrix::from_triplets(m, n, &t)
+    }
+
+    #[test]
+    fn segments_partition_every_column() {
+        let mat = random_csc(100, 20, 8, 7);
+        let plan = BlockPlan::build(&mat, 16);
+        for j in 0..mat.n {
+            let (ri, _) = mat.col(j);
+            let segs = plan.segments(j);
+            // Ends strictly increase and the last one covers the column.
+            let mut prev = 0u32;
+            for &e in segs {
+                assert!(e > prev || (e == 0 && prev == 0), "col {}", j);
+                prev = e;
+            }
+            assert_eq!(segs.last().copied().unwrap_or(0) as usize, ri.len());
+            // Within one segment, all rows share a block.
+            let mut start = 0usize;
+            for &e in segs {
+                let blk = ri[start] as usize / 16;
+                for &r in &ri[start..e as usize] {
+                    assert_eq!(r as usize / 16, blk);
+                }
+                start = e as usize;
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_dot_matches_unblocked_numerically() {
+        // Not bit-equal (different summation tree) — but within float
+        // tolerance at realistic magnitudes, and exactly equal when a
+        // column fits one block.
+        let mat = random_csc(256, 30, 12, 3);
+        let plan = BlockPlan::build(&mat, 64);
+        let mut rng = Xorshift128::new(5);
+        let dense: Vec<f64> = (0..256).map(|_| rng.next_gaussian()).collect();
+        for j in 0..mat.n {
+            let (ri, vs) = mat.col(j);
+            let blocked = plan.dot_indexed(j, ri, vs, &dense);
+            let flat = linalg::dot_indexed(ri, vs, &dense);
+            assert!(
+                (blocked - flat).abs() <= 1e-12 * (1.0 + flat.abs()),
+                "col {}: {} vs {}",
+                j,
+                blocked,
+                flat
+            );
+        }
+        // One-block plan ⇒ the exact same single ×4 pass ⇒ same bits.
+        let one = BlockPlan::build(&mat, 1 << 20);
+        for j in 0..mat.n {
+            let (ri, vs) = mat.col(j);
+            assert_eq!(
+                one.dot_indexed(j, ri, vs, &dense).to_bits(),
+                linalg::dot_indexed(ri, vs, &dense).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_axpy_is_bit_equal_to_unblocked() {
+        let mat = random_csc(200, 25, 10, 11);
+        let plan = BlockPlan::build(&mat, 32);
+        let mut rng = Xorshift128::new(13);
+        let base: Vec<f64> = (0..200).map(|_| rng.next_gaussian()).collect();
+        for j in 0..mat.n {
+            let (ri, vs) = mat.col(j);
+            let mut blocked = base.clone();
+            let mut flat = base.clone();
+            plan.axpy_indexed(j, 0.37, ri, vs, &mut blocked);
+            linalg::axpy_indexed(0.37, ri, vs, &mut flat);
+            for (a, b) in blocked.iter().zip(flat.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "col {}", j);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_cache_key_tracks_identity_and_block_size() {
+        let mat = random_csc(64, 8, 4, 1);
+        let plan = BlockPlan::build(&mat, 16);
+        assert!(plan.matches(&mat, 16));
+        assert!(!plan.matches(&mat, 32));
+        let other = mat.clone();
+        assert!(!plan.matches(&other, 16));
+        assert_eq!(plan.block_rows(), 16);
+    }
+
+    #[test]
+    fn empty_columns_produce_empty_segment_lists() {
+        let mat = CscMatrix::zeros(50, 4);
+        let plan = BlockPlan::build(&mat, 8);
+        let dense = vec![1.0; 50];
+        for j in 0..4 {
+            assert_eq!(plan.segments(j).len(), 0);
+            let (ri, vs) = mat.col(j);
+            assert_eq!(plan.dot_indexed(j, ri, vs, &dense), 0.0);
+        }
+    }
+}

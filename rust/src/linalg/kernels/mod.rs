@@ -1,0 +1,401 @@
+//! The hot-path kernel layer: one scalar reference, one optional SIMD
+//! backend, one dispatch point (DESIGN.md §11).
+//!
+//! * [`scalar`] — the bit-exactness ORACLE. Every kernel in the ×4
+//!   independent-accumulator convention; always compiled, always the
+//!   default.
+//! * [`simd`] (feature `simd`, x86-64 only) — explicit 4-lane AVX2 with
+//!   runtime feature detection. The lane layout mirrors the scalar
+//!   convention exactly, so results are bit-equal at every length; on
+//!   non-x86 targets the `simd` feature falls back to the scalar kernels,
+//!   whose ×4 chunking IS the portable-chunk form.
+//! * [`block`] — the cache-blocked CSC traversal plan for the SCD inner
+//!   loop (orthogonal to the backend choice: blocking decisions depend
+//!   only on data shape, never on the `simd` feature).
+//!
+//! The free functions below are the dispatchers `linalg` re-exports; all
+//! call sites (solvers, matvecs, reducers) route through them. A runtime
+//! switch ([`force_scalar`]) pins the scalar reference even when AVX2 is
+//! compiled in and detected, so ONE binary can compare both backends —
+//! the trajectory bit-equality tests and the `kernels` bench section use
+//! it. Dispatch costs one relaxed atomic load + a cached CPUID flag per
+//! call; the `simd`-less build compiles to direct scalar calls.
+
+pub mod block;
+pub mod scalar;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub mod simd;
+
+pub use block::{BlockPlan, DEFAULT_BLOCK_ROWS};
+pub use scalar::{axpy_indexed_f32, dot_indexed_f32};
+
+#[cfg(feature = "simd")]
+mod switch {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// Runtime backend pin: `true` forces the scalar reference.
+    static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+    pub(super) fn set(on: bool) {
+        FORCE_SCALAR.store(on, Ordering::SeqCst);
+    }
+
+    #[inline]
+    pub(super) fn forced() -> bool {
+        FORCE_SCALAR.load(Ordering::Relaxed)
+    }
+}
+
+/// Pin the scalar reference at runtime even when the `simd` feature is
+/// compiled in and AVX2 is detected (no-op otherwise). Process-global:
+/// tests and benches that toggle it run their comparisons sequentially.
+#[cfg(feature = "simd")]
+pub fn force_scalar(on: bool) {
+    switch::set(on);
+}
+
+/// No-op without the `simd` feature — the scalar reference is all there is.
+#[cfg(not(feature = "simd"))]
+pub fn force_scalar(_on: bool) {}
+
+/// Name of the backend the dispatchers select right now:
+/// `"avx2"`, `"scalar"` (default build, undetected, or forced via
+/// [`force_scalar`]), or `"portable"` (`simd` feature on a non-x86
+/// target — the scalar ×4 chunked form).
+pub fn backend() -> &'static str {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if switch::forced() {
+            return "scalar";
+        }
+        if std::is_x86_feature_detected!("avx2") {
+            return "avx2";
+        }
+        return "scalar";
+    }
+    #[cfg(all(feature = "simd", not(target_arch = "x86_64")))]
+    {
+        return "portable";
+    }
+    #[allow(unreachable_code)]
+    "scalar"
+}
+
+/// Whether the AVX2 backend will execute the next kernel call.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn simd_active() -> bool {
+    !switch::forced() && std::is_x86_feature_detected!("avx2")
+}
+
+/// Gathers sign-extend i32 indices: the AVX2 indexed kernels only engage
+/// when the dense operand is addressable by non-negative i32.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+const I32_INDEXABLE: usize = i32::MAX as usize;
+
+/// `y += x` (AllReduce aggregation). See [`scalar::add_assign`] for the
+/// contract.
+#[inline]
+pub fn add_assign(y: &mut [f64], x: &[f64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence just checked.
+        return unsafe { simd::add_assign(y, x) };
+    }
+    scalar::add_assign(y, x)
+}
+
+/// `y -= x` (cold path; scalar on every backend).
+#[inline]
+pub fn sub_assign(y: &mut [f64], x: &[f64]) {
+    scalar::sub_assign(y, x)
+}
+
+/// Dense `y += a * x`. See [`scalar::axpy`] for the contract.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence just checked.
+        return unsafe { simd::axpy(a, x, y) };
+    }
+    scalar::axpy(a, x, y)
+}
+
+/// Dense dot product. See [`scalar::dot`] for the contract.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence just checked.
+        return unsafe { simd::dot(x, y) };
+    }
+    scalar::dot(x, y)
+}
+
+/// Sparse-column dot (the hottest kernel). See [`scalar::dot_indexed`]
+/// for the contract.
+#[inline]
+pub fn dot_indexed(idx: &[u32], vals: &[f64], dense: &[f64]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() && dense.len() <= I32_INDEXABLE {
+        // SAFETY: AVX2 presence checked; index bounds are the shared
+        // solver-boundary contract; dense is i32-indexable for the gather.
+        return unsafe { simd::dot_indexed(idx, vals, dense) };
+    }
+    scalar::dot_indexed(idx, vals, dense)
+}
+
+/// Sparse scatter `dense[idx[i]] += a * vals[i]`. See
+/// [`scalar::axpy_indexed`] for the contract.
+#[inline]
+pub fn axpy_indexed(a: f64, idx: &[u32], vals: &[f64], dense: &mut [f64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence checked; index bounds are the shared
+        // solver-boundary contract (no gather — no i32 bound).
+        return unsafe { simd::axpy_indexed(a, idx, vals, dense) };
+    }
+    scalar::axpy_indexed(a, idx, vals, dense)
+}
+
+/// Fused sparse dot + squared norm. See [`scalar::dot_indexed_fused`]
+/// for the contract.
+#[inline]
+pub fn dot_indexed_fused(idx: &[u32], vals: &[f64], dense: &[f64]) -> (f64, f64) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() && dense.len() <= I32_INDEXABLE {
+        // SAFETY: as `dot_indexed`.
+        return unsafe { simd::dot_indexed_fused(idx, vals, dense) };
+    }
+    scalar::dot_indexed_fused(idx, vals, dense)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Xorshift128;
+
+    /// Lengths the property sweeps cover: everything around the unroll
+    /// width plus large sizes that stress many full chunks.
+    fn sweep_lengths() -> Vec<usize> {
+        let mut v: Vec<usize> = (0..=64).collect();
+        v.extend([127, 1000, 4093]);
+        v
+    }
+
+    /// Random payload with NaN and ±0.0 planted — the bit-equality
+    /// assertions must hold for non-finite payloads too (x86 NaN
+    /// propagation picks the same operand for scalar and packed ops).
+    fn payload(rng: &mut Xorshift128, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|i| match i % 17 {
+                7 => f64::NAN,
+                11 => -0.0,
+                13 => 0.0,
+                _ => rng.next_gaussian(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dispatched_kernels_bit_equal_scalar_reference() {
+        // The dispatcher (whatever backend it picks on this machine) must
+        // agree with the scalar oracle to the bit, at every length, with
+        // unaligned slice starts, and with NaN/±0.0 payloads. In the
+        // default build this pins dispatch == scalar; with `--features
+        // simd` on an AVX2 core it is the tentpole bit-equality proof.
+        let mut rng = Xorshift128::new(42);
+        let dense_len = 4096usize;
+        for n in sweep_lengths() {
+            for offset in [0usize, 1, 3] {
+                let dense = payload(&mut rng, dense_len + offset);
+                let dense = &dense[offset..];
+                let idx: Vec<u32> = (0..n).map(|_| rng.next_usize(dense_len) as u32).collect();
+                let vals = payload(&mut rng, n + offset);
+                let vals = &vals[offset..];
+                let x = payload(&mut rng, n + offset);
+                let x = &x[offset..];
+
+                assert_eq!(
+                    dot(x, vals).to_bits(),
+                    scalar::dot(x, vals).to_bits(),
+                    "dot n={} off={}",
+                    n,
+                    offset
+                );
+                assert_eq!(
+                    dot_indexed(&idx, vals, dense).to_bits(),
+                    scalar::dot_indexed(&idx, vals, dense).to_bits(),
+                    "dot_indexed n={} off={}",
+                    n,
+                    offset
+                );
+                let (fd, fn_) = dot_indexed_fused(&idx, vals, dense);
+                let (sd, sn) = scalar::dot_indexed_fused(&idx, vals, dense);
+                assert_eq!(fd.to_bits(), sd.to_bits(), "fused dot n={}", n);
+                assert_eq!(fn_.to_bits(), sn.to_bits(), "fused norm n={}", n);
+
+                let mut y1: Vec<f64> = vals.to_vec();
+                let mut y2 = y1.clone();
+                axpy(0.75, x, &mut y1);
+                scalar::axpy(0.75, x, &mut y2);
+                assert_eq!(
+                    y1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    y2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "axpy n={}",
+                    n
+                );
+
+                add_assign(&mut y1, x);
+                scalar::add_assign(&mut y2, x);
+                assert_eq!(
+                    y1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    y2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "add_assign n={}",
+                    n
+                );
+
+                // Scatter: unique targets (CSC contract) — sample without
+                // replacement by striding.
+                let uniq: Vec<u32> = (0..n.min(dense_len))
+                    .map(|i| ((i * 37) % dense_len) as u32)
+                    .collect();
+                let uvals = &vals[..uniq.len()];
+                let mut d1 = dense.to_vec();
+                let mut d2 = d1.clone();
+                axpy_indexed(-1.25, &uniq, uvals, &mut d1);
+                scalar::axpy_indexed(-1.25, &uniq, uvals, &mut d2);
+                assert_eq!(
+                    d1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    d2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "axpy_indexed n={}",
+                    n
+                );
+            }
+        }
+    }
+
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[test]
+    fn avx2_backend_bit_equal_scalar_directly() {
+        // Bypass the dispatcher and pin the AVX2 functions themselves
+        // (the dispatcher test above could silently route scalar-scalar
+        // if detection failed). Skips on cores without AVX2.
+        if !std::is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let mut rng = Xorshift128::new(7);
+        let dense = payload(&mut rng, 2048);
+        for n in sweep_lengths() {
+            let idx: Vec<u32> = (0..n).map(|_| rng.next_usize(2048) as u32).collect();
+            let vals = payload(&mut rng, n);
+            unsafe {
+                assert_eq!(
+                    simd::dot(&vals, &vals).to_bits(),
+                    scalar::dot(&vals, &vals).to_bits(),
+                    "n={}",
+                    n
+                );
+                assert_eq!(
+                    simd::dot_indexed(&idx, &vals, &dense).to_bits(),
+                    scalar::dot_indexed(&idx, &vals, &dense).to_bits(),
+                    "n={}",
+                    n
+                );
+                let (ad, an) = simd::dot_indexed_fused(&idx, &vals, &dense);
+                let (sd, sn) = scalar::dot_indexed_fused(&idx, &vals, &dense);
+                assert_eq!(ad.to_bits(), sd.to_bits(), "n={}", n);
+                assert_eq!(an.to_bits(), sn.to_bits(), "n={}", n);
+                let mut y1 = dense[..n].to_vec();
+                let mut y2 = y1.clone();
+                simd::axpy(1.5, &vals, &mut y1);
+                scalar::axpy(1.5, &vals, &mut y2);
+                for (a, b) in y1.iter().zip(y2.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={}", n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_norm_bit_equal_dense_self_dot() {
+        // THE invariant satellite 1 rests on: the fused kernel's norm half
+        // equals dot(vals, vals) — hence nrm2_sq, hence the col_sq table —
+        // to the bit at every length. This is what makes switching the SCD
+        // loop from the table to the fused kernel a pure refactor.
+        let mut rng = Xorshift128::new(99);
+        let dense = payload(&mut rng, 512);
+        for n in sweep_lengths() {
+            let idx: Vec<u32> = (0..n).map(|_| rng.next_usize(512) as u32).collect();
+            let vals: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let (_, nrm) = dot_indexed_fused(&idx, &vals, &dense);
+            assert_eq!(nrm.to_bits(), dot(&vals, &vals).to_bits(), "n={}", n);
+            assert_eq!(
+                nrm.to_bits(),
+                crate::linalg::nrm2_sq(&vals).to_bits(),
+                "n={}",
+                n
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_columns() {
+        let dense = vec![2.0, 3.0, 5.0];
+        assert_eq!(dot_indexed(&[], &[], &dense), 0.0);
+        assert_eq!(dot_indexed_fused(&[], &[], &dense), (0.0, 0.0));
+        assert_eq!(dot_indexed(&[2], &[4.0], &dense), 20.0);
+        assert_eq!(dot_indexed_fused(&[1], &[4.0], &dense), (12.0, 16.0));
+        let mut d = dense.clone();
+        axpy_indexed(2.0, &[0], &[0.5], &mut d);
+        assert_eq!(d, vec![3.0, 3.0, 5.0]);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn backend_reports_a_known_name() {
+        let b = backend();
+        assert!(
+            b == "avx2" || b == "scalar" || b == "portable",
+            "unexpected backend {}",
+            b
+        );
+        // force_scalar is callable in every build (no-op without `simd`).
+        force_scalar(true);
+        #[cfg(feature = "simd")]
+        assert_ne!(backend(), "avx2");
+        force_scalar(false);
+    }
+
+    #[cfg(debug_assertions)]
+    mod contract {
+        use super::super::scalar;
+
+        #[test]
+        #[should_panic(expected = "dot: length mismatch")]
+        fn dot_rejects_mismatched_lengths_in_debug() {
+            scalar::dot(&[1.0, 2.0], &[1.0]);
+        }
+
+        #[test]
+        #[should_panic(expected = "axpy: length mismatch")]
+        fn axpy_rejects_mismatched_lengths_in_debug() {
+            let mut y = [0.0];
+            scalar::axpy(1.0, &[1.0, 2.0], &mut y);
+        }
+
+        #[test]
+        #[should_panic(expected = "add_assign: length mismatch")]
+        fn add_assign_rejects_mismatched_lengths_in_debug() {
+            let mut y = [0.0];
+            scalar::add_assign(&mut y, &[1.0, 2.0]);
+        }
+
+        #[test]
+        #[should_panic(expected = "dot_indexed: length mismatch")]
+        fn dot_indexed_rejects_mismatched_lengths_in_debug() {
+            scalar::dot_indexed(&[0, 1], &[1.0], &[1.0, 2.0]);
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! The scalar reference kernels — the bit-exactness ORACLE.
+//!
+//! Every kernel here is written in the unrolled-×4 independent-accumulator
+//! convention (DESIGN.md §11):
+//!
+//! * reductions run 4 stride-4 accumulators `a0..a3` over `n/4` chunks
+//!   (`a_i` owns elements `4c + i`), the remainder folds into `a0`, and the
+//!   final reduce is the fixed pairing `(a0 + a1) + (a2 + a3)`;
+//! * every per-element operation is a bare multiply followed by a bare add
+//!   (two roundings — never a fused multiply-add, which rounds once and
+//!   would change bits);
+//! * element-wise kernels (`axpy`, `add_assign`, the scatters) carry no
+//!   cross-lane dependency at all, so any chunking is bit-neutral.
+//!
+//! This layout is exactly a 4-lane AVX2 register: lane *i* of the SIMD
+//! accumulator performs the same adds in the same order as scalar `a_i`,
+//! so the `simd` backend ([`super::simd`]) is bit-equal BY CONSTRUCTION,
+//! not by tolerance — asserted exhaustively by the property tests in
+//! [`super`] and end-to-end by `tests/integration_kernels.rs`.
+//!
+//! ## Length contracts (the audited rule)
+//!
+//! All kernels take equal-length primary slices and document that contract
+//! with `debug_assert!`; release builds clamp to the common prefix
+//! (`min()`) ONLY where unchecked reads need the clamp for memory safety —
+//! the clamp is a safety net, not semantics. Indexed kernels additionally
+//! require every `idx[i] < dense.len()`; that is enforced once per solve
+//! at the solver boundary (release-mode `assert!` in `solve_into` — the
+//! CSC validator guarantees `row_idx < m` and the solver checks
+//! `v.len() == m`), so the per-element reads stay unchecked.
+
+/// `y += x`, the AllReduce aggregation kernel. Element-wise (no reduction
+/// order to preserve); chunked ×8 purely so packed adds survive across
+/// rustc versions. Contract: `y.len() == x.len()` (debug-asserted;
+/// release operates on the common prefix via the zip).
+#[inline]
+pub fn add_assign(y: &mut [f64], x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len(), "add_assign: length mismatch");
+    let mut yc = y.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (a, b) in yc.by_ref().zip(xc.by_ref()) {
+        a[0] += b[0];
+        a[1] += b[1];
+        a[2] += b[2];
+        a[3] += b[3];
+        a[4] += b[4];
+        a[5] += b[5];
+        a[6] += b[6];
+        a[7] += b[7];
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder().iter()) {
+        *yi += *xi;
+    }
+}
+
+/// `y -= x`. Contract: `y.len() == x.len()` (debug-asserted).
+#[inline]
+pub fn sub_assign(y: &mut [f64], x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len(), "sub_assign: length mismatch");
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi -= *xi;
+    }
+}
+
+/// `y += a * x` over dense slices. Element-wise: each element is one
+/// multiply + one add, so chunking cannot change bits. Contract:
+/// `y.len() == x.len()` (debug-asserted).
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(y.len(), x.len(), "axpy: length mismatch");
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// Dense dot product in the ×4 accumulator convention (module docs).
+///
+/// The pairing is what makes `nrm2_sq(x) = dot(x, x)` bit-equal to the
+/// norm half of [`dot_indexed_fused`] — which is what lets the SCD loop
+/// take its column norm from the fused kernel instead of the precomputed
+/// `col_sq` table without moving a single bit (see `solver::scd`).
+/// Contract: `x.len() == y.len()` (debug-asserted; release clamps to the
+/// common prefix for the unchecked reads).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len(), "dot: length mismatch");
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    unsafe {
+        for c in 0..chunks {
+            let base = c * 4;
+            a0 += *x.get_unchecked(base) * *y.get_unchecked(base);
+            a1 += *x.get_unchecked(base + 1) * *y.get_unchecked(base + 1);
+            a2 += *x.get_unchecked(base + 2) * *y.get_unchecked(base + 2);
+            a3 += *x.get_unchecked(base + 3) * *y.get_unchecked(base + 3);
+        }
+        for i in chunks * 4..n {
+            a0 += *x.get_unchecked(i) * *y.get_unchecked(i);
+        }
+    }
+    (a0 + a1) + (a2 + a3)
+}
+
+/// Sparse-column dot: `sum_i vals[i] * dense[idx[i]]`.
+///
+/// The single hottest operation of the whole system (one call per SCD
+/// step). Unrolled ×4 with independent accumulators to break the serial
+/// floating-point add dependency chain (≈1.5× on this core; §Perf log).
+/// Contract: `idx.len() == vals.len()` (debug-asserted; release clamps)
+/// and every `idx[i] < dense.len()` (checked at the solver boundary).
+#[inline]
+pub fn dot_indexed(idx: &[u32], vals: &[f64], dense: &[f64]) -> f64 {
+    debug_assert_eq!(idx.len(), vals.len(), "dot_indexed: length mismatch");
+    let n = idx.len().min(vals.len());
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    unsafe {
+        for c in 0..chunks {
+            let base = c * 4;
+            a0 += *vals.get_unchecked(base)
+                * *dense.get_unchecked(*idx.get_unchecked(base) as usize);
+            a1 += *vals.get_unchecked(base + 1)
+                * *dense.get_unchecked(*idx.get_unchecked(base + 1) as usize);
+            a2 += *vals.get_unchecked(base + 2)
+                * *dense.get_unchecked(*idx.get_unchecked(base + 2) as usize);
+            a3 += *vals.get_unchecked(base + 3)
+                * *dense.get_unchecked(*idx.get_unchecked(base + 3) as usize);
+        }
+        for i in chunks * 4..n {
+            a0 += *vals.get_unchecked(i) * *dense.get_unchecked(*idx.get_unchecked(i) as usize);
+        }
+    }
+    (a0 + a1) + (a2 + a3)
+}
+
+/// Sparse-column axpy: `dense[idx[i]] += a * vals[i]` (the rank-1 residual
+/// update of the SCD step). Unrolled ×4 — safe because CSC columns carry
+/// strictly increasing (hence unique) row indices, so the scattered writes
+/// never alias within a chunk. Element-wise per target slot (one multiply
+/// + one add), so traversal order cannot change bits. Contract as
+/// [`dot_indexed`].
+#[inline]
+pub fn axpy_indexed(a: f64, idx: &[u32], vals: &[f64], dense: &mut [f64]) {
+    debug_assert_eq!(idx.len(), vals.len(), "axpy_indexed: length mismatch");
+    let n = idx.len().min(vals.len());
+    let chunks = n / 4;
+    unsafe {
+        for c in 0..chunks {
+            let base = c * 4;
+            *dense.get_unchecked_mut(*idx.get_unchecked(base) as usize) +=
+                a * *vals.get_unchecked(base);
+            *dense.get_unchecked_mut(*idx.get_unchecked(base + 1) as usize) +=
+                a * *vals.get_unchecked(base + 1);
+            *dense.get_unchecked_mut(*idx.get_unchecked(base + 2) as usize) +=
+                a * *vals.get_unchecked(base + 2);
+            *dense.get_unchecked_mut(*idx.get_unchecked(base + 3) as usize) +=
+                a * *vals.get_unchecked(base + 3);
+        }
+        for i in chunks * 4..n {
+            *dense.get_unchecked_mut(*idx.get_unchecked(i) as usize) += a * *vals.get_unchecked(i);
+        }
+    }
+}
+
+/// Fused sparse dot + squared-norm accumulation used by the SCD inner
+/// loop (single pass over the column instead of two).
+///
+/// Unrolled ×4 with independent accumulators, exactly like [`dot_indexed`]
+/// — the dot component follows the identical chunking and final
+/// `(a0+a1)+(a2+a3)` pairing, so `dot_indexed_fused(..).0` is bit-equal to
+/// `dot_indexed(..)` at every length, and the norm component is bit-equal
+/// to `dot(vals, vals)` (both asserted in [`super`]'s tests). Contract as
+/// [`dot_indexed`].
+#[inline]
+pub fn dot_indexed_fused(idx: &[u32], vals: &[f64], dense: &[f64]) -> (f64, f64) {
+    debug_assert_eq!(idx.len(), vals.len(), "dot_indexed_fused: length mismatch");
+    // min() preserves the pre-unroll zip truncation on mismatched inputs
+    // (the unchecked reads below must never run past either slice).
+    let n = idx.len().min(vals.len());
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    let (mut n0, mut n1, mut n2, mut n3) = (0.0f64, 0.0, 0.0, 0.0);
+    unsafe {
+        for c in 0..chunks {
+            let base = c * 4;
+            let (v0, v1, v2, v3) = (
+                *vals.get_unchecked(base),
+                *vals.get_unchecked(base + 1),
+                *vals.get_unchecked(base + 2),
+                *vals.get_unchecked(base + 3),
+            );
+            a0 += v0 * *dense.get_unchecked(*idx.get_unchecked(base) as usize);
+            a1 += v1 * *dense.get_unchecked(*idx.get_unchecked(base + 1) as usize);
+            a2 += v2 * *dense.get_unchecked(*idx.get_unchecked(base + 2) as usize);
+            a3 += v3 * *dense.get_unchecked(*idx.get_unchecked(base + 3) as usize);
+            n0 += v0 * v0;
+            n1 += v1 * v1;
+            n2 += v2 * v2;
+            n3 += v3 * v3;
+        }
+        for i in chunks * 4..n {
+            let v = *vals.get_unchecked(i);
+            a0 += v * *dense.get_unchecked(*idx.get_unchecked(i) as usize);
+            n0 += v * v;
+        }
+    }
+    ((a0 + a1) + (a2 + a3), (n0 + n1) + (n2 + n3))
+}
+
+// ---------------------------------------------------------------------------
+// Mixed-precision (f32-storage) helpers — solver::scd's MixedF32 path.
+// f32 column/residual mirrors halve the hot loop's memory traffic; each
+// product rounds once in f32 and ACCUMULATES in f64 (the ×4 convention),
+// so the coordinate step, α update and Δv stay f64. Deliberately NOT
+// bit-stable against the f64 path (DESIGN.md §11).
+// ---------------------------------------------------------------------------
+
+/// Mixed-precision sparse dot: f32 storage reads, f64 ×4 accumulation.
+/// Contract as [`dot_indexed`].
+#[inline]
+pub fn dot_indexed_f32(idx: &[u32], vals: &[f32], dense: &[f32]) -> f64 {
+    debug_assert_eq!(idx.len(), vals.len(), "dot_indexed_f32: length mismatch");
+    let n = idx.len().min(vals.len());
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    unsafe {
+        for c in 0..chunks {
+            let base = c * 4;
+            a0 += (*vals.get_unchecked(base)
+                * *dense.get_unchecked(*idx.get_unchecked(base) as usize))
+                as f64;
+            a1 += (*vals.get_unchecked(base + 1)
+                * *dense.get_unchecked(*idx.get_unchecked(base + 1) as usize))
+                as f64;
+            a2 += (*vals.get_unchecked(base + 2)
+                * *dense.get_unchecked(*idx.get_unchecked(base + 2) as usize))
+                as f64;
+            a3 += (*vals.get_unchecked(base + 3)
+                * *dense.get_unchecked(*idx.get_unchecked(base + 3) as usize))
+                as f64;
+        }
+        for i in chunks * 4..n {
+            a0 += (*vals.get_unchecked(i) * *dense.get_unchecked(*idx.get_unchecked(i) as usize))
+                as f64;
+        }
+    }
+    (a0 + a1) + (a2 + a3)
+}
+
+/// Mixed-precision scatter update: `dense[idx[i]] += a * vals[i]` in f32
+/// (the residual mirror update). Contract as [`axpy_indexed`].
+#[inline]
+pub fn axpy_indexed_f32(a: f32, idx: &[u32], vals: &[f32], dense: &mut [f32]) {
+    debug_assert_eq!(idx.len(), vals.len(), "axpy_indexed_f32: length mismatch");
+    let n = idx.len().min(vals.len());
+    unsafe {
+        for i in 0..n {
+            *dense.get_unchecked_mut(*idx.get_unchecked(i) as usize) += a * *vals.get_unchecked(i);
+        }
+    }
+}

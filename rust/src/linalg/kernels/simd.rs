@@ -1,0 +1,190 @@
+//! AVX2 backend: 4-lane f64 vectorization of the hot kernels, bit-equal
+//! to the scalar reference BY CONSTRUCTION.
+//!
+//! The scalar kernels ([`super::scalar`]) already run four independent
+//! stride-4 accumulators — that IS a 4-lane AVX2 register laid on its
+//! side. Lane *i* of the vector accumulator performs exactly the adds of
+//! scalar accumulator `a_i`, in the same chunk order:
+//!
+//! * products use `_mm256_mul_pd` followed by `_mm256_add_pd` — two
+//!   roundings per element, never `_mm256_fmadd_pd` (FMA rounds once and
+//!   would change bits vs the scalar multiply-then-add);
+//! * the remainder (`n % 4` tail elements) folds into extracted lane 0
+//!   with scalar ops, exactly like the scalar kernels fold into `a0`;
+//! * the final reduce extracts the four lanes and applies the same fixed
+//!   `(a0 + a1) + (a2 + a3)` pairing in scalar arithmetic (no `hadd`,
+//!   whose lane order differs).
+//!
+//! Gathers (`_mm256_i32gather_pd`) sign-extend 32-bit indices, so the
+//! dispatcher ([`super`]) only routes here when `dense.len() <=
+//! i32::MAX` — row counts beyond 2³¹ fall back to scalar (and every
+//! `idx[i] < dense.len()` is the same solver-boundary contract the scalar
+//! kernels rely on for their unchecked reads).
+//!
+//! Every function is `#[target_feature(enable = "avx2")]` and only
+//! reachable through the runtime-detected dispatcher; calling them on a
+//! non-AVX2 core is undefined behavior, hence `unsafe`.
+#![cfg(all(feature = "simd", target_arch = "x86_64"))]
+
+use core::arch::x86_64::{
+    __m128i, _mm256_add_pd, _mm256_i32gather_pd, _mm256_loadu_pd, _mm256_mul_pd,
+    _mm256_set1_pd, _mm256_setzero_pd, _mm256_storeu_pd, _mm_loadu_si128,
+};
+
+/// Dense dot, AVX2 lanes ≡ scalar `a0..a3`.
+///
+/// # Safety
+/// Requires AVX2 (dispatcher-checked).
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len(), "dot: length mismatch");
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let base = c * 4;
+        let xv = _mm256_loadu_pd(x.as_ptr().add(base));
+        let yv = _mm256_loadu_pd(y.as_ptr().add(base));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(xv, yv));
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let (mut a0, a1, a2, a3) = (lanes[0], lanes[1], lanes[2], lanes[3]);
+    for i in chunks * 4..n {
+        a0 += *x.get_unchecked(i) * *y.get_unchecked(i);
+    }
+    (a0 + a1) + (a2 + a3)
+}
+
+/// Dense `y += a * x`. Element-wise (one mul + one add per element), so
+/// packed execution is bit-neutral.
+///
+/// # Safety
+/// Requires AVX2 (dispatcher-checked).
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(y.len(), x.len(), "axpy: length mismatch");
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let va = _mm256_set1_pd(a);
+    for c in 0..chunks {
+        let base = c * 4;
+        let xv = _mm256_loadu_pd(x.as_ptr().add(base));
+        let yv = _mm256_loadu_pd(y.as_ptr().add(base));
+        _mm256_storeu_pd(
+            y.as_mut_ptr().add(base),
+            _mm256_add_pd(yv, _mm256_mul_pd(va, xv)),
+        );
+    }
+    for i in chunks * 4..n {
+        *y.get_unchecked_mut(i) += a * *x.get_unchecked(i);
+    }
+}
+
+/// `y += x`, packed. Element-wise → bit-neutral.
+///
+/// # Safety
+/// Requires AVX2 (dispatcher-checked).
+#[target_feature(enable = "avx2")]
+pub unsafe fn add_assign(y: &mut [f64], x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len(), "add_assign: length mismatch");
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let base = c * 4;
+        let xv = _mm256_loadu_pd(x.as_ptr().add(base));
+        let yv = _mm256_loadu_pd(y.as_ptr().add(base));
+        _mm256_storeu_pd(y.as_mut_ptr().add(base), _mm256_add_pd(yv, xv));
+    }
+    for i in chunks * 4..n {
+        *y.get_unchecked_mut(i) += *x.get_unchecked(i);
+    }
+}
+
+/// Sparse-column dot via 4-wide index gathers; lanes ≡ scalar `a0..a3`.
+///
+/// # Safety
+/// Requires AVX2, `dense.len() <= i32::MAX` and every `idx[i] <
+/// dense.len()` (dispatcher + solver-boundary contract).
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_indexed(idx: &[u32], vals: &[f64], dense: &[f64]) -> f64 {
+    debug_assert_eq!(idx.len(), vals.len(), "dot_indexed: length mismatch");
+    let n = idx.len().min(vals.len());
+    let chunks = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let base = c * 4;
+        let i4 = _mm_loadu_si128(idx.as_ptr().add(base) as *const __m128i);
+        let g = _mm256_i32gather_pd::<8>(dense.as_ptr(), i4);
+        let v = _mm256_loadu_pd(vals.as_ptr().add(base));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(v, g));
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let (mut a0, a1, a2, a3) = (lanes[0], lanes[1], lanes[2], lanes[3]);
+    for i in chunks * 4..n {
+        a0 += *vals.get_unchecked(i) * *dense.get_unchecked(*idx.get_unchecked(i) as usize);
+    }
+    (a0 + a1) + (a2 + a3)
+}
+
+/// Sparse scatter `dense[idx[i]] += a * vals[i]`: products computed
+/// 4-wide, scattered with scalar adds (AVX2 has gathers but no scatters).
+/// Each target slot still sees exactly one mul + one add → bit-neutral.
+///
+/// # Safety
+/// As [`dot_indexed`] (without the i32 bound — no gather here).
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_indexed(a: f64, idx: &[u32], vals: &[f64], dense: &mut [f64]) {
+    debug_assert_eq!(idx.len(), vals.len(), "axpy_indexed: length mismatch");
+    let n = idx.len().min(vals.len());
+    let chunks = n / 4;
+    let va = _mm256_set1_pd(a);
+    let mut lanes = [0.0f64; 4];
+    for c in 0..chunks {
+        let base = c * 4;
+        let v = _mm256_loadu_pd(vals.as_ptr().add(base));
+        _mm256_storeu_pd(lanes.as_mut_ptr(), _mm256_mul_pd(va, v));
+        *dense.get_unchecked_mut(*idx.get_unchecked(base) as usize) += lanes[0];
+        *dense.get_unchecked_mut(*idx.get_unchecked(base + 1) as usize) += lanes[1];
+        *dense.get_unchecked_mut(*idx.get_unchecked(base + 2) as usize) += lanes[2];
+        *dense.get_unchecked_mut(*idx.get_unchecked(base + 3) as usize) += lanes[3];
+    }
+    for i in chunks * 4..n {
+        *dense.get_unchecked_mut(*idx.get_unchecked(i) as usize) += a * *vals.get_unchecked(i);
+    }
+}
+
+/// Fused sparse dot + squared norm, both accumulators 4-wide; lanes ≡
+/// the scalar kernel's `a0..a3` / `n0..n3`.
+///
+/// # Safety
+/// As [`dot_indexed`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_indexed_fused(idx: &[u32], vals: &[f64], dense: &[f64]) -> (f64, f64) {
+    debug_assert_eq!(idx.len(), vals.len(), "dot_indexed_fused: length mismatch");
+    let n = idx.len().min(vals.len());
+    let chunks = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    let mut nrm = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let base = c * 4;
+        let i4 = _mm_loadu_si128(idx.as_ptr().add(base) as *const __m128i);
+        let g = _mm256_i32gather_pd::<8>(dense.as_ptr(), i4);
+        let v = _mm256_loadu_pd(vals.as_ptr().add(base));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(v, g));
+        nrm = _mm256_add_pd(nrm, _mm256_mul_pd(v, v));
+    }
+    let mut alanes = [0.0f64; 4];
+    let mut nlanes = [0.0f64; 4];
+    _mm256_storeu_pd(alanes.as_mut_ptr(), acc);
+    _mm256_storeu_pd(nlanes.as_mut_ptr(), nrm);
+    let (mut a0, a1, a2, a3) = (alanes[0], alanes[1], alanes[2], alanes[3]);
+    let (mut n0, n1, n2, n3) = (nlanes[0], nlanes[1], nlanes[2], nlanes[3]);
+    for i in chunks * 4..n {
+        let v = *vals.get_unchecked(i);
+        a0 += v * *dense.get_unchecked(*idx.get_unchecked(i) as usize);
+        n0 += v * v;
+    }
+    ((a0 + a1) + (a2 + a3), (n0 + n1) + (n2 + n3))
+}

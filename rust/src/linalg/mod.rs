@@ -2,13 +2,19 @@
 //!
 //! These are the L3 hot-path primitives: the native SCD solver spends its
 //! time in [`dot_indexed`]/[`axpy_indexed`] (sparse column · dense residual),
-//! the MPI/Spark engines in [`add_assign`] (AllReduce aggregation). They are
-//! written as straight loops the compiler auto-vectorizes; the `hotpath`
+//! the MPI/Spark engines in [`add_assign`] (AllReduce aggregation). The
+//! kernels themselves live in [`kernels`]: a scalar reference in the
+//! unrolled-×4 accumulator convention ([`kernels::scalar`], always the
+//! oracle and the default), an optional bit-equal AVX2 backend behind the
+//! `simd` feature, and the cache-blocked CSC traversal plan
+//! ([`kernels::BlockPlan`]). The free functions re-exported here are the
+//! runtime dispatchers — call sites never name a backend. The `hotpath`
 //! bench tracks their throughput. The [`delta`] module holds the
 //! nnz-adaptive Δv representation and its sparse-aware reduction tree
 //! (DESIGN.md §7).
 
 pub mod delta;
+pub mod kernels;
 pub mod rng;
 pub mod tree_reduce;
 
@@ -16,172 +22,24 @@ pub use delta::{
     raw_dense_bytes, raw_sparse_bytes, raw_sparse_cutover, sparse_cutover, DeltaReducer,
     DeltaShape, DeltaSlot, SparseVec,
 };
+pub use kernels::{
+    add_assign, axpy, axpy_indexed, dot, dot_indexed, dot_indexed_fused, sub_assign, BlockPlan,
+    DEFAULT_BLOCK_ROWS,
+};
 pub use rng::Xorshift128;
 pub use tree_reduce::{
     tree_reduce, tree_reduce_collect, tree_reduce_seq, tree_reduce_vecs, NestedTreePlan,
 };
 
-/// `y += x`, the AllReduce aggregation kernel.
-///
-/// Processed in fixed-width chunks of 8 through `chunks_exact`, which hands
-/// the compiler bounds-check-free lanes it reliably turns into packed adds
-/// (`y += x` carries no cross-lane dependency, so the chunking exists purely
-/// to guarantee vectorization survives across rustc versions; §Perf log).
-#[inline]
-pub fn add_assign(y: &mut [f64], x: &[f64]) {
-    debug_assert_eq!(y.len(), x.len());
-    let mut yc = y.chunks_exact_mut(8);
-    let mut xc = x.chunks_exact(8);
-    for (a, b) in yc.by_ref().zip(xc.by_ref()) {
-        a[0] += b[0];
-        a[1] += b[1];
-        a[2] += b[2];
-        a[3] += b[3];
-        a[4] += b[4];
-        a[5] += b[5];
-        a[6] += b[6];
-        a[7] += b[7];
-    }
-    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder().iter()) {
-        *yi += *xi;
-    }
-}
-
-/// `y -= x`.
-#[inline]
-pub fn sub_assign(y: &mut [f64], x: &[f64]) {
-    debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi -= *xi;
-    }
-}
-
-/// `y += a * x` over dense slices.
-#[inline]
-pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += a * *xi;
-    }
-}
-
-/// Dense dot product.
-#[inline]
-pub fn dot(x: &[f64], y: &[f64]) -> f64 {
-    debug_assert_eq!(x.len(), y.len());
-    let mut acc = 0.0;
-    for (xi, yi) in x.iter().zip(y.iter()) {
-        acc += xi * yi;
-    }
-    acc
-}
-
-/// Sparse-column dot: `sum_i vals[i] * dense[idx[i]]`.
-///
-/// The single hottest operation of the whole system (one call per SCD
-/// step). Unrolled ×4 with independent accumulators to break the serial
-/// floating-point add dependency chain (≈1.5× on this core; §Perf log).
-#[inline]
-pub fn dot_indexed(idx: &[u32], vals: &[f64], dense: &[f64]) -> f64 {
-    debug_assert_eq!(idx.len(), vals.len());
-    let n = idx.len();
-    let chunks = n / 4;
-    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
-    unsafe {
-        for c in 0..chunks {
-            let base = c * 4;
-            a0 += *vals.get_unchecked(base)
-                * *dense.get_unchecked(*idx.get_unchecked(base) as usize);
-            a1 += *vals.get_unchecked(base + 1)
-                * *dense.get_unchecked(*idx.get_unchecked(base + 1) as usize);
-            a2 += *vals.get_unchecked(base + 2)
-                * *dense.get_unchecked(*idx.get_unchecked(base + 2) as usize);
-            a3 += *vals.get_unchecked(base + 3)
-                * *dense.get_unchecked(*idx.get_unchecked(base + 3) as usize);
-        }
-        for i in chunks * 4..n {
-            a0 += *vals.get_unchecked(i) * *dense.get_unchecked(*idx.get_unchecked(i) as usize);
-        }
-    }
-    (a0 + a1) + (a2 + a3)
-}
-
-/// Sparse-column axpy: `dense[idx[i]] += a * vals[i]` (the rank-1 residual
-/// update of the SCD step). Unrolled ×4 — safe because CSC columns carry
-/// strictly increasing (hence unique) row indices, so the scattered writes
-/// never alias within a chunk.
-#[inline]
-pub fn axpy_indexed(a: f64, idx: &[u32], vals: &[f64], dense: &mut [f64]) {
-    debug_assert_eq!(idx.len(), vals.len());
-    let n = idx.len();
-    let chunks = n / 4;
-    unsafe {
-        for c in 0..chunks {
-            let base = c * 4;
-            *dense.get_unchecked_mut(*idx.get_unchecked(base) as usize) +=
-                a * *vals.get_unchecked(base);
-            *dense.get_unchecked_mut(*idx.get_unchecked(base + 1) as usize) +=
-                a * *vals.get_unchecked(base + 1);
-            *dense.get_unchecked_mut(*idx.get_unchecked(base + 2) as usize) +=
-                a * *vals.get_unchecked(base + 2);
-            *dense.get_unchecked_mut(*idx.get_unchecked(base + 3) as usize) +=
-                a * *vals.get_unchecked(base + 3);
-        }
-        for i in chunks * 4..n {
-            *dense.get_unchecked_mut(*idx.get_unchecked(i) as usize) += a * *vals.get_unchecked(i);
-        }
-    }
-}
-
-/// Fused sparse dot + squared-norm accumulation used by the optimized SCD
-/// inner loop (single pass over the column instead of two).
-///
-/// Unrolled ×4 with independent accumulators, exactly like [`dot_indexed`]
-/// — the dot component follows the identical chunking and final
-/// `(a0+a1)+(a2+a3)` pairing, so `dot_indexed_fused(..).0` is bit-equal to
-/// `dot_indexed(..)` at every length (asserted below). The previous naive
-/// serial loop paired differently; its only caller (the hotpath bench)
-/// compares timings, not bits.
-#[inline]
-pub fn dot_indexed_fused(idx: &[u32], vals: &[f64], dense: &[f64]) -> (f64, f64) {
-    debug_assert_eq!(idx.len(), vals.len());
-    // min() preserves the pre-unroll zip truncation on mismatched inputs
-    // (the unchecked reads below must never run past either slice).
-    let n = idx.len().min(vals.len());
-    let chunks = n / 4;
-    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
-    let (mut n0, mut n1, mut n2, mut n3) = (0.0f64, 0.0, 0.0, 0.0);
-    unsafe {
-        for c in 0..chunks {
-            let base = c * 4;
-            let (v0, v1, v2, v3) = (
-                *vals.get_unchecked(base),
-                *vals.get_unchecked(base + 1),
-                *vals.get_unchecked(base + 2),
-                *vals.get_unchecked(base + 3),
-            );
-            a0 += v0 * *dense.get_unchecked(*idx.get_unchecked(base) as usize);
-            a1 += v1 * *dense.get_unchecked(*idx.get_unchecked(base + 1) as usize);
-            a2 += v2 * *dense.get_unchecked(*idx.get_unchecked(base + 2) as usize);
-            a3 += v3 * *dense.get_unchecked(*idx.get_unchecked(base + 3) as usize);
-            n0 += v0 * v0;
-            n1 += v1 * v1;
-            n2 += v2 * v2;
-            n3 += v3 * v3;
-        }
-        for i in chunks * 4..n {
-            let v = *vals.get_unchecked(i);
-            a0 += v * *dense.get_unchecked(*idx.get_unchecked(i) as usize);
-            n0 += v * v;
-        }
-    }
-    ((a0 + a1) + (a2 + a3), (n0 + n1) + (n2 + n3))
-}
-
-/// Euclidean norm squared.
+/// Euclidean norm squared — `dot(x, x)` through the scalar ×4 convention,
+/// which makes it bit-equal to the norm half of [`dot_indexed_fused`]
+/// (that identity is what lets the SCD loop drop the `col_sq` table
+/// lookup; see `solver::scd`). Always the scalar reference: callers build
+/// tables that bit-pinned trajectories compare against, so the value must
+/// not depend on the selected backend.
 #[inline]
 pub fn nrm2_sq(x: &[f64]) -> f64 {
-    dot(x, x)
+    kernels::scalar::dot(x, x)
 }
 
 /// L1 norm.
@@ -279,7 +137,8 @@ mod tests {
         // The unrolled fused kernel shares dot_indexed's chunking and final
         // pairing, so the dot component must be BIT-equal at every length
         // around the unroll width, and the norm component must equal the
-        // same 4-accumulator pairing over v·v.
+        // same 4-accumulator pairing over v·v — which since the ×4 rewrite
+        // of `dot` is exactly nrm2_sq.
         let mut rng = Xorshift128::new(11);
         for n in 0..21usize {
             let dense: Vec<f64> = (0..64).map(|_| rng.next_gaussian()).collect();
@@ -292,16 +151,7 @@ mod tests {
                 "n={}",
                 n
             );
-            let ones = vec![1.0; 64];
-            let sq: Vec<f64> = vals.iter().map(|v| v * v).collect();
-            let self_idx: Vec<u32> = (0..n as u32).collect();
-            // v·v through the same 4-acc pairing = dot_indexed(sq, ones).
-            assert_eq!(
-                nrm.to_bits(),
-                dot_indexed(&self_idx, &sq, &ones).to_bits(),
-                "n={}",
-                n
-            );
+            assert_eq!(nrm.to_bits(), nrm2_sq(&vals).to_bits(), "n={}", n);
         }
     }
 
@@ -356,6 +206,24 @@ mod tests {
             }
             add_assign(&mut y, &x);
             assert_eq!(y, want, "n={}", n);
+        }
+    }
+
+    #[test]
+    fn dot_matches_serial_sum_numerically() {
+        // The ×4 rewrite of `dot` changes the summation tree vs the old
+        // serial loop — exact small-value tests above stay exact, and
+        // random data must agree to float tolerance with the naive sum.
+        let mut rng = Xorshift128::new(23);
+        for n in [0usize, 1, 3, 4, 5, 8, 17, 100, 1001] {
+            let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let naive: f64 = x.iter().zip(y.iter()).map(|(a, b)| a * b).sum();
+            assert!(
+                (dot(&x, &y) - naive).abs() <= 1e-12 * (1.0 + naive.abs()),
+                "n={}",
+                n
+            );
         }
     }
 }

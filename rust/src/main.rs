@@ -98,6 +98,18 @@ fn cmd_train(args: &Args) -> i32 {
             }
         }
     }
+    // --precision f64|mixed-f32: numeric mode of the native solver's
+    // inner loop (mixed-f32 = f32 storage mirrors, f64 accumulation; the
+    // session rejects it for impls without the native solver).
+    if let Some(s) = args.get("precision") {
+        match sparkbench::config::Precision::parse(s) {
+            Some(p) => cfg.precision = p,
+            None => {
+                eprintln!("bad --precision '{}' (want f64 or mixed-f32)", s);
+                return 2;
+            }
+        }
+    }
     // --threads-per-worker T: nested two-level parallelism — T local
     // sub-solvers per worker, bit-identical to a flat K·T ring (an
     // explicit `--impl threads:K:T` wins over the flag).

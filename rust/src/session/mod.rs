@@ -45,7 +45,7 @@ pub mod policy;
 pub use observer::{CheckpointEvery, CsvTrace, Recording, RoundCtx, RoundObserver};
 pub use policy::HPolicy;
 
-use crate::config::TrainConfig;
+use crate::config::{Impl, Precision, SolverKind, TrainConfig};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::{oracle_objective, suboptimality};
 use crate::data::Dataset;
@@ -329,6 +329,22 @@ impl<'a> SessionBuilder<'a> {
         // A dual-loss problem on a regression-layout dataset would quietly
         // optimize something meaningless — refuse before any oracle work.
         cfg.problem.check_dataset(self.ds)?;
+        // MixedF32 lives in the native solver's inner loop. Engines whose
+        // local solvers are managed stand-ins (A, C) or mini-batch SGD
+        // have no mixed path — refuse rather than silently train in a
+        // different numeric mode than requested. (Attached engines fixed
+        // their solvers at construction; their builder did this check.)
+        if cfg.precision == Precision::MixedF32 && self.attached.is_none() {
+            if let Engine::Impl(imp) = self.engine {
+                if !imp.uses_native_solver() || imp == Impl::MllibSgd {
+                    return Err(format!(
+                        "precision mixed-f32 requires the native local solver; {} runs {}",
+                        imp.name(),
+                        SolverKind::for_impl(imp).name()
+                    ));
+                }
+            }
+        }
         let fstar = match self.oracle {
             OracleMode::Known(f) => Some(f),
             OracleMode::Off => None,
@@ -912,6 +928,47 @@ mod tests {
             assert!(
                 report.time_to_target.is_some(),
                 "{} missed target: {:?}",
+                engine.label(),
+                report.final_suboptimality
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_precision_rejects_non_native_solvers() {
+        // The f32 mirrors live inside NativeScd; a managed stand-in or the
+        // MLlib SGD path would silently ignore the flag, so build() refuses.
+        let (ds, mut cfg) = setup();
+        cfg.precision = Precision::MixedF32;
+        for imp in [Impl::SparkScala, Impl::PySpark, Impl::MllibSgd] {
+            let err = Session::builder(&ds)
+                .engine(imp)
+                .config(cfg.clone())
+                .build()
+                .err()
+                .expect("mixed-f32 on a non-native solver must be rejected");
+            assert!(err.contains("mixed-f32"), "{}", err);
+            assert!(err.contains(imp.name()), "{}", err);
+        }
+    }
+
+    #[test]
+    fn mixed_precision_trains_on_native_solver_engines() {
+        let (ds, mut cfg) = setup();
+        cfg.precision = Precision::MixedF32;
+        cfg.max_rounds = 1500;
+        for engine in [Engine::Impl(Impl::Mpi), Engine::threads(3)] {
+            let report = Session::builder(&ds)
+                .engine(engine)
+                .config(cfg.clone())
+                .build()
+                .unwrap()
+                .run();
+            // f32 storage with f64 accumulation still clears the 1e-3
+            // suboptimality bar on the small corpus.
+            assert!(
+                report.time_to_target.is_some(),
+                "{} mixed-f32 missed target: {:?}",
                 engine.label(),
                 report.final_suboptimality
             );

@@ -101,6 +101,7 @@ impl CheckpointEvery {
             problem: ctx.cfg.problem,
             workers: ctx.engine.num_workers(),
             threads_per_worker: ctx.engine.threads_per_worker(),
+            precision: ctx.cfg.precision,
         };
         match ckpt.save(&self.path) {
             Ok(()) => self.saves += 1,

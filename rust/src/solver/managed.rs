@@ -78,8 +78,13 @@ impl LocalSolver for ScalaLikeScd {
     }
 
     fn solve(&mut self, data: &WorkerData, alpha: &[f64], req: &SolveRequest) -> SolveResult {
-        let _m = data.flat.m;
+        let m = data.flat.m;
         let nk = data.n_local();
+        // Solver-boundary length contract (release-mode; see
+        // linalg::kernels::scalar docs).
+        assert_eq!(alpha.len(), nk, "ScalaLikeScd: alpha length != local columns");
+        assert_eq!(req.v.len(), m, "ScalaLikeScd: shared vector length != m");
+        assert_eq!(req.b.len(), m, "ScalaLikeScd: label vector length != m");
         // Clone records view (cheap refs into cache would be nicer, but the
         // borrow of self conflicts with the loop below; the clone itself is
         // JVM-realistic — Breeze copies sparse vector views liberally).
@@ -248,6 +253,11 @@ impl LocalSolver for PythonLikeScd {
 
     fn solve(&mut self, data: &WorkerData, alpha: &[f64], req: &SolveRequest) -> SolveResult {
         let nk = data.n_local();
+        // Solver-boundary length contract (release-mode; see
+        // linalg::kernels::scalar docs).
+        assert_eq!(alpha.len(), nk, "PythonLikeScd: alpha length != local columns");
+        assert_eq!(req.v.len(), data.flat.m, "PythonLikeScd: shared vector length != m");
+        assert_eq!(req.b.len(), data.flat.m, "PythonLikeScd: label vector length != m");
 
         // "Lists of boxed floats" — the interpreter's working state.
         let mut r: Vec<PyObj> = req

@@ -34,6 +34,11 @@ impl LocalSolver for MiniBatchCd {
     fn solve(&mut self, data: &WorkerData, alpha: &[f64], req: &SolveRequest) -> SolveResult {
         let m = data.flat.m;
         let nk = data.n_local();
+        // Solver-boundary length contract (release-mode; see
+        // linalg::kernels::scalar docs).
+        assert_eq!(alpha.len(), nk, "MiniBatchCd: alpha length != local columns");
+        assert_eq!(req.v.len(), m, "MiniBatchCd: shared vector length != m");
+        assert_eq!(req.b.len(), m, "MiniBatchCd: label vector length != m");
 
         // Frozen residual: computed once, never updated inside the round.
         self.r.clear();

@@ -2,8 +2,9 @@
 //!
 //! Implementations (B), (D) and (E) call *identical* native code; here that
 //! code is this solver. It is the hot path of the entire system: one
-//! [`crate::linalg::dot_indexed`] + one [`crate::linalg::axpy_indexed`] per
-//! coordinate step, no allocation inside the loop.
+//! [`crate::linalg::dot_indexed_fused`] + one
+//! [`crate::linalg::axpy_indexed`] per coordinate step, no allocation
+//! inside the loop.
 //!
 //! The per-coordinate update comes from the round's
 //! [`Problem`](crate::problem::Problem): the solver matches on the loss
@@ -18,20 +19,43 @@
 //! α⁺  = sign(α̃⁺) · max(|α̃⁺| − τ, 0),   τ = λn(1−η) / (σ‖c_j‖² + λnη)
 //! r  += σ · (α⁺ − α_j) · c_j
 //! ```
+//!
+//! ## Kernel variants (DESIGN.md §11)
+//!
+//! Three inner-loop shapes, selected once per solve:
+//!
+//! * **Flat** (default): `dot_indexed_fused` reads `c_jᵀr` and `‖c_j‖²` in
+//!   one pass over the column. The fused norm is bit-equal to the
+//!   precomputed `col_sq` table entry (both are the ×4-convention
+//!   self-dot), so dropping the table lookup moved no bits — asserted by
+//!   `fused_loop_is_bit_identical_to_two_call_loop` below.
+//! * **Cache-blocked** (`m > block_rows`, default 2¹⁵): a
+//!   [`BlockPlan`] walks each column one L2-sized residual block at a
+//!   time. Blocked dots sum per-segment partials serially, so this path
+//!   is deliberately NOT bit-equal to the flat one — hence the row
+//!   threshold, far above every bit-pinned fixture. The blocked loop
+//!   reads `col_sq` from the table (a fused norm cannot span segments).
+//! * **Mixed precision** (`Precision::MixedF32`, opt-in): f32 column and
+//!   residual mirrors halve hot-loop memory traffic; dots accumulate in
+//!   f64, and the returned Δv is recomputed as A·Δα in full f64 so the
+//!   shared vector the driver integrates never inherits f32 rounding.
+//!   Explicitly not bit-stable against the f64 path.
 
 use super::{LocalSolver, SolveRequest, SolveResult};
-use crate::data::WorkerData;
-use crate::linalg::{self, Xorshift128};
+use crate::config::Precision;
+use crate::data::{CscMatrix, WorkerData};
+use crate::linalg::{self, BlockPlan, Xorshift128};
 use crate::problem::{HingeDual, Loss, LogisticDual, LossKind, SquaredLoss};
 
 /// The compiled native local solver.
 ///
-/// All scratch state (residual, round-start residual, local α copy) lives
-/// in reused members, and results are written through
-/// [`LocalSolver::solve_into`] into caller-owned buffers — after the first
-/// round a solve performs **zero** heap allocations (asserted by the
-/// counting-allocator test below and tracked by the hotpath bench).
-#[derive(Debug, Default)]
+/// All scratch state (residual, round-start residual, local α copy, the
+/// blocking plan and the f32 mirrors) lives in reused members, and results
+/// are written through [`LocalSolver::solve_into`] into caller-owned
+/// buffers — after the first round a solve performs **zero** heap
+/// allocations on every path (flat, blocked, mixed; asserted by the
+/// counting-allocator tests below and tracked by the hotpath bench).
+#[derive(Debug)]
 pub struct NativeScd {
     /// Reused residual buffer (avoids an m-sized allocation per round).
     r: Vec<f64>,
@@ -39,70 +63,104 @@ pub struct NativeScd {
     r0: Vec<f64>,
     /// Reused local-alpha scratch.
     alpha_buf: Vec<f64>,
+    /// Numeric mode for the inner loop (f64 default; f32 mirrors opt-in).
+    precision: Precision,
+    /// Row-block height for the cache-blocked traversal; the plan only
+    /// engages when `m > block_rows` (bit-exactness boundary — see
+    /// `linalg::kernels::block`).
+    block_rows: usize,
+    /// Cached blocking plan, keyed by data identity; rebuilt only when the
+    /// solver sees different data or a different block size.
+    plan: Option<BlockPlan>,
+    /// f32 mirror of the shard's column values (MixedF32 only), keyed by
+    /// `mirror_key`.
+    vals32: Vec<f32>,
+    /// f32 residual mirror (MixedF32 only).
+    r32: Vec<f32>,
+    /// Identity of the matrix `vals32` mirrors (pointer + shape).
+    mirror_key: (usize, usize, usize),
+}
+
+impl Default for NativeScd {
+    fn default() -> NativeScd {
+        NativeScd::new()
+    }
+}
+
+fn data_key(mat: &CscMatrix) -> (usize, usize, usize) {
+    (mat as *const CscMatrix as usize, mat.m, mat.n)
 }
 
 impl NativeScd {
     pub fn new() -> NativeScd {
-        NativeScd::default()
+        NativeScd::with_precision(Precision::F64)
     }
-}
 
-/// The shared SCD loop skeleton: sample a coordinate, dot against the
-/// residual, take the loss family's closed-form/prox step, apply it to the
-/// live residual. Generic over the (inlined, monomorphized) step function
-/// so the trait-routed dispatch costs nothing per step and allocates
-/// nothing (asserted by the counting-allocator tests and the hotpath
-/// bench's problem-dispatch case). A `None` step skips the draw without
-/// counting it — exactly the pre-problem `denom ≤ 0` semantics.
-#[inline]
-pub(crate) fn scd_loop<F: FnMut(f64, f64, f64) -> Option<f64>>(
-    data: &WorkerData,
-    h: usize,
-    sigma: f64,
-    rng: &mut Xorshift128,
-    r: &mut [f64],
-    alpha_buf: &mut [f64],
-    mut step: F,
-) -> usize {
-    let nk = data.n_local();
-    let mut steps = 0usize;
-    for _ in 0..h {
-        let j = rng.next_usize(nk);
-        let csq = data.col_sq[j];
-        let (ri, vs) = data.flat.col(j);
-        let cj_r = linalg::dot_indexed(ri, vs, r);
-        let aj = alpha_buf[j];
-        let Some(anew) = step(aj, csq, cj_r) else {
-            continue;
-        };
-        let delta = anew - aj;
-        if delta != 0.0 {
-            linalg::axpy_indexed(sigma * delta, ri, vs, r);
-            alpha_buf[j] = anew;
+    /// A solver running the given numeric mode (every engine passes
+    /// `cfg.precision` through here).
+    pub fn with_precision(precision: Precision) -> NativeScd {
+        NativeScd {
+            r: Vec::new(),
+            r0: Vec::new(),
+            alpha_buf: Vec::new(),
+            precision,
+            block_rows: linalg::DEFAULT_BLOCK_ROWS,
+            plan: None,
+            vals32: Vec::new(),
+            r32: Vec::new(),
+            mirror_key: (0, 0, 0),
         }
-        steps += 1;
-    }
-    steps
-}
-
-impl LocalSolver for NativeScd {
-    fn name(&self) -> &'static str {
-        "native-scd"
     }
 
-    fn solve_into(
+    /// Override the cache-blocking threshold/height (tests and the hotpath
+    /// bench use small values to exercise the blocked path on small data).
+    pub fn with_block_rows(mut self, block_rows: usize) -> NativeScd {
+        assert!(block_rows > 0, "block_rows must be positive");
+        self.block_rows = block_rows;
+        self.plan = None;
+        self
+    }
+
+    /// The numeric mode this solver runs.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Build/refresh the blocking plan iff this shard is tall enough to
+    /// benefit (`m > block_rows`). Steady state: a key match, no work.
+    fn ensure_plan(&mut self, data: &WorkerData) {
+        if data.flat.m > self.block_rows {
+            let stale = match &self.plan {
+                Some(p) => !p.matches(&data.flat, self.block_rows),
+                None => true,
+            };
+            if stale {
+                self.plan = Some(BlockPlan::build(&data.flat, self.block_rows));
+            }
+        } else if self.plan.is_some() {
+            self.plan = None;
+        }
+    }
+
+    /// Build/refresh the f32 value mirror (MixedF32 only). Steady state: a
+    /// key match, no work.
+    fn ensure_f32_mirror(&mut self, data: &WorkerData) {
+        let key = data_key(&data.flat);
+        if self.mirror_key != key || self.vals32.len() != data.flat.vals.len() {
+            self.vals32.clear();
+            self.vals32.extend(data.flat.vals.iter().map(|&v| v as f32));
+            self.mirror_key = key;
+        }
+    }
+
+    fn solve_f64(
         &mut self,
         data: &WorkerData,
         alpha: &[f64],
         req: &SolveRequest,
         out: &mut SolveResult,
     ) {
-        let m = data.flat.m;
         let nk = data.n_local();
-        debug_assert_eq!(alpha.len(), nk);
-        debug_assert_eq!(req.v.len(), m);
-        debug_assert_eq!(req.b.len(), m);
-
         // r = v - b (the paper initializes the local residual from the
         // shared vector each round).
         self.r.clear();
@@ -113,6 +171,8 @@ impl LocalSolver for NativeScd {
         self.alpha_buf.clear();
         self.alpha_buf.extend_from_slice(alpha);
 
+        self.ensure_plan(data);
+
         let mut rng = Xorshift128::new(req.seed);
         let sigma = req.sigma;
         let reg = req.problem.reg;
@@ -120,8 +180,10 @@ impl LocalSolver for NativeScd {
         // One dispatch per SOLVE, monomorphized loops per loss family —
         // the inner loop pays no dynamic call and no allocation.
         let steps = if nk > 0 {
+            let plan = self.plan.as_ref();
             match req.problem.loss {
-                LossKind::Squared => scd_loop(
+                LossKind::Squared => run_loop(
+                    plan,
                     data,
                     req.h,
                     sigma,
@@ -130,7 +192,8 @@ impl LocalSolver for NativeScd {
                     &mut self.alpha_buf,
                     |aj, csq, cj_r| SquaredLoss.step(&reg, sigma, aj, csq, cj_r),
                 ),
-                LossKind::Hinge => scd_loop(
+                LossKind::Hinge => run_loop(
+                    plan,
                     data,
                     req.h,
                     sigma,
@@ -139,7 +202,8 @@ impl LocalSolver for NativeScd {
                     &mut self.alpha_buf,
                     |aj, csq, cj_r| HingeDual.step(&reg, sigma, aj, csq, cj_r),
                 ),
-                LossKind::Logistic => scd_loop(
+                LossKind::Logistic => run_loop(
+                    plan,
                     data,
                     req.h,
                     sigma,
@@ -169,6 +233,268 @@ impl LocalSolver for NativeScd {
                 .map(|(&rf, &r0)| (rf - r0) * inv_sigma),
         );
         out.steps = steps;
+    }
+
+    fn solve_mixed(
+        &mut self,
+        data: &WorkerData,
+        alpha: &[f64],
+        req: &SolveRequest,
+        out: &mut SolveResult,
+    ) {
+        let m = data.flat.m;
+        let nk = data.n_local();
+        self.ensure_f32_mirror(data);
+
+        // f32 residual mirror of v - b.
+        self.r32.clear();
+        self.r32.extend(
+            req.v
+                .iter()
+                .zip(req.b.iter())
+                .map(|(&v, &b)| (v - b) as f32),
+        );
+
+        self.alpha_buf.clear();
+        self.alpha_buf.extend_from_slice(alpha);
+
+        let mut rng = Xorshift128::new(req.seed);
+        let sigma = req.sigma;
+        let reg = req.problem.reg;
+
+        let steps = if nk > 0 {
+            match req.problem.loss {
+                LossKind::Squared => scd_loop_mixed(
+                    data,
+                    &self.vals32,
+                    req.h,
+                    sigma,
+                    &mut rng,
+                    &mut self.r32,
+                    &mut self.alpha_buf,
+                    |aj, csq, cj_r| SquaredLoss.step(&reg, sigma, aj, csq, cj_r),
+                ),
+                LossKind::Hinge => scd_loop_mixed(
+                    data,
+                    &self.vals32,
+                    req.h,
+                    sigma,
+                    &mut rng,
+                    &mut self.r32,
+                    &mut self.alpha_buf,
+                    |aj, csq, cj_r| HingeDual.step(&reg, sigma, aj, csq, cj_r),
+                ),
+                LossKind::Logistic => scd_loop_mixed(
+                    data,
+                    &self.vals32,
+                    req.h,
+                    sigma,
+                    &mut rng,
+                    &mut self.r32,
+                    &mut self.alpha_buf,
+                    |aj, csq, cj_r| LogisticDual.step(&reg, sigma, aj, csq, cj_r),
+                ),
+            }
+        } else {
+            0
+        };
+
+        out.delta_alpha.clear();
+        out.delta_alpha.extend(
+            self.alpha_buf
+                .iter()
+                .zip(alpha.iter())
+                .map(|(&a, &a0)| a - a0),
+        );
+        // Δv = A·Δα recomputed in FULL f64 over the columns that moved —
+        // the f32 residual mirror steered the coordinate steps, but the
+        // update the driver integrates into the shared vector carries no
+        // f32 rounding (and automatically satisfies check_result's
+        // Δv ≡ A·Δα consistency test).
+        out.delta_v.clear();
+        out.delta_v.resize(m, 0.0);
+        for j in 0..nk {
+            let d = self.alpha_buf[j] - alpha[j];
+            if d != 0.0 {
+                let (ri, vs) = data.flat.col(j);
+                linalg::axpy_indexed(d, ri, vs, &mut out.delta_v);
+            }
+        }
+        out.steps = steps;
+    }
+}
+
+/// The shared SCD loop skeleton (flat path): sample a coordinate, fused
+/// dot+norm against the residual, take the loss family's closed-form/prox
+/// step, apply it to the live residual. Generic over the (inlined,
+/// monomorphized) step function so the trait-routed dispatch costs nothing
+/// per step and allocates nothing (asserted by the counting-allocator
+/// tests and the hotpath bench's problem-dispatch case). A `None` step
+/// skips the draw without counting it — exactly the pre-problem
+/// `denom ≤ 0` semantics.
+///
+/// The fused kernel's norm half is bit-equal to `data.col_sq[j]` (both are
+/// the ×4-convention self-dot — `linalg::kernels::scalar` docs), so this
+/// single-pass form is bit-identical to the historical two-call loop; the
+/// debug assert below pins that invariant on every step of every debug
+/// run.
+#[inline]
+pub(crate) fn scd_loop<F: FnMut(f64, f64, f64) -> Option<f64>>(
+    data: &WorkerData,
+    h: usize,
+    sigma: f64,
+    rng: &mut Xorshift128,
+    r: &mut [f64],
+    alpha_buf: &mut [f64],
+    mut step: F,
+) -> usize {
+    let nk = data.n_local();
+    let mut steps = 0usize;
+    for _ in 0..h {
+        let j = rng.next_usize(nk);
+        let (ri, vs) = data.flat.col(j);
+        let (cj_r, csq) = linalg::dot_indexed_fused(ri, vs, r);
+        debug_assert_eq!(
+            csq.to_bits(),
+            data.col_sq[j].to_bits(),
+            "fused norm drifted from the col_sq table"
+        );
+        let aj = alpha_buf[j];
+        let Some(anew) = step(aj, csq, cj_r) else {
+            continue;
+        };
+        let delta = anew - aj;
+        if delta != 0.0 {
+            linalg::axpy_indexed(sigma * delta, ri, vs, r);
+            alpha_buf[j] = anew;
+        }
+        steps += 1;
+    }
+    steps
+}
+
+/// Cache-blocked SCD loop: identical skeleton, but dots and scatters walk
+/// the column one residual block at a time through the [`BlockPlan`], and
+/// `‖c_j‖²` comes from the precomputed table (a fused accumulation cannot
+/// span segments). NOT bit-equal to [`scd_loop`] — see the module docs.
+#[inline]
+pub(crate) fn scd_loop_blocked<F: FnMut(f64, f64, f64) -> Option<f64>>(
+    plan: &BlockPlan,
+    data: &WorkerData,
+    h: usize,
+    sigma: f64,
+    rng: &mut Xorshift128,
+    r: &mut [f64],
+    alpha_buf: &mut [f64],
+    mut step: F,
+) -> usize {
+    let nk = data.n_local();
+    let mut steps = 0usize;
+    for _ in 0..h {
+        let j = rng.next_usize(nk);
+        let csq = data.col_sq[j];
+        let (ri, vs) = data.flat.col(j);
+        let cj_r = plan.dot_indexed(j, ri, vs, r);
+        let aj = alpha_buf[j];
+        let Some(anew) = step(aj, csq, cj_r) else {
+            continue;
+        };
+        let delta = anew - aj;
+        if delta != 0.0 {
+            plan.axpy_indexed(j, sigma * delta, ri, vs, r);
+            alpha_buf[j] = anew;
+        }
+        steps += 1;
+    }
+    steps
+}
+
+/// Route one solve's loop through the blocked or flat skeleton. The match
+/// sits OUTSIDE the loops, so both stay monomorphic.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn run_loop<F: FnMut(f64, f64, f64) -> Option<f64>>(
+    plan: Option<&BlockPlan>,
+    data: &WorkerData,
+    h: usize,
+    sigma: f64,
+    rng: &mut Xorshift128,
+    r: &mut [f64],
+    alpha_buf: &mut [f64],
+    step: F,
+) -> usize {
+    match plan {
+        Some(p) => scd_loop_blocked(p, data, h, sigma, rng, r, alpha_buf, step),
+        None => scd_loop(data, h, sigma, rng, r, alpha_buf, step),
+    }
+}
+
+/// Mixed-precision SCD loop: f32 column/residual storage, f64 step math.
+/// Dots accumulate in f64 ([`linalg::kernels::dot_indexed_f32`]); `‖c_j‖²`
+/// and the α update stay f64, so only storage rounds down.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn scd_loop_mixed<F: FnMut(f64, f64, f64) -> Option<f64>>(
+    data: &WorkerData,
+    vals32: &[f32],
+    h: usize,
+    sigma: f64,
+    rng: &mut Xorshift128,
+    r32: &mut [f32],
+    alpha_buf: &mut [f64],
+    mut step: F,
+) -> usize {
+    let nk = data.n_local();
+    let mut steps = 0usize;
+    for _ in 0..h {
+        let j = rng.next_usize(nk);
+        let csq = data.col_sq[j];
+        let lo = data.flat.col_ptr[j];
+        let hi = data.flat.col_ptr[j + 1];
+        let ri = &data.flat.row_idx[lo..hi];
+        let vs32 = &vals32[lo..hi];
+        let cj_r = linalg::kernels::dot_indexed_f32(ri, vs32, r32);
+        let aj = alpha_buf[j];
+        let Some(anew) = step(aj, csq, cj_r) else {
+            continue;
+        };
+        let delta = anew - aj;
+        if delta != 0.0 {
+            linalg::kernels::axpy_indexed_f32((sigma * delta) as f32, ri, vs32, r32);
+            alpha_buf[j] = anew;
+        }
+        steps += 1;
+    }
+    steps
+}
+
+impl LocalSolver for NativeScd {
+    fn name(&self) -> &'static str {
+        "native-scd"
+    }
+
+    fn solve_into(
+        &mut self,
+        data: &WorkerData,
+        alpha: &[f64],
+        req: &SolveRequest,
+        out: &mut SolveResult,
+    ) {
+        let m = data.flat.m;
+        let nk = data.n_local();
+        // THE release-mode length check of the kernel stack (audited
+        // contract — linalg::kernels::scalar docs): one assert per solve
+        // here guarantees every idx the unchecked kernels read is in
+        // bounds (CSC validation gives row_idx < m) and every slice pair
+        // they zip has equal length.
+        assert_eq!(alpha.len(), nk, "NativeScd: alpha length != local columns");
+        assert_eq!(req.v.len(), m, "NativeScd: shared vector length != m");
+        assert_eq!(req.b.len(), m, "NativeScd: label vector length != m");
+
+        match self.precision {
+            Precision::F64 => self.solve_f64(data, alpha, req, out),
+            Precision::MixedF32 => self.solve_mixed(data, alpha, req, out),
+        }
     }
 }
 
@@ -320,6 +646,138 @@ mod tests {
     }
 
     #[test]
+    fn fused_loop_is_bit_identical_to_two_call_loop() {
+        // Satellite regression: the production loop reads (c_jᵀr, ‖c_j‖²)
+        // from ONE fused kernel call; the historical loop read the dot
+        // alone and the norm from the col_sq table. The fused norm is
+        // bit-equal to the table entry (same ×4 self-dot), so the two
+        // loops must produce bit-identical trajectories. This reimplements
+        // the historical two-call loop verbatim and compares bits.
+        let (ds, wd) = single_worker(48, 20, 17);
+        let alpha = vec![0.02; 20];
+        let v = ds.shared_vector(&alpha);
+        let problem = Problem::elastic(0.7, 0.6);
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: 160,
+            problem: &problem,
+            sigma: 2.0,
+            seed: 31,
+        };
+        let res = NativeScd::new().solve(&wd, &alpha, &req);
+
+        // Historical two-call loop.
+        let reg = problem.reg;
+        let mut r: Vec<f64> = v.iter().zip(ds.b.iter()).map(|(&v, &b)| v - b).collect();
+        let r0 = r.clone();
+        let mut ab = alpha.clone();
+        let mut rng = Xorshift128::new(req.seed);
+        for _ in 0..req.h {
+            let j = rng.next_usize(wd.n_local());
+            let csq = wd.col_sq[j];
+            let (ri, vs) = wd.flat.col(j);
+            let cj_r = linalg::dot_indexed(ri, vs, &r);
+            let aj = ab[j];
+            let Some(anew) = SquaredLoss.step(&reg, req.sigma, aj, csq, cj_r) else {
+                continue;
+            };
+            let delta = anew - aj;
+            if delta != 0.0 {
+                linalg::axpy_indexed(req.sigma * delta, ri, vs, &mut r);
+                ab[j] = anew;
+            }
+        }
+        let inv_sigma = 1.0 / req.sigma;
+        for (j, (&a, &a0)) in ab.iter().zip(alpha.iter()).enumerate() {
+            assert_eq!(
+                res.delta_alpha[j].to_bits(),
+                (a - a0).to_bits(),
+                "delta_alpha[{}]",
+                j
+            );
+        }
+        for (i, (&rf, &ri0)) in r.iter().zip(r0.iter()).enumerate() {
+            assert_eq!(
+                res.delta_v[i].to_bits(),
+                ((rf - ri0) * inv_sigma).to_bits(),
+                "delta_v[{}]",
+                i
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_solve_is_consistent_and_converges() {
+        // Force the blocked path on small data (block_rows = 8 << m = 40).
+        // Blocked trajectories are NOT bit-equal to flat ones (different
+        // dot summation tree), but every round must stay internally
+        // consistent (Δv ≡ A·Δα) and the solver must still reach the CG
+        // optimum.
+        let (ds, wd) = single_worker(40, 12, 9);
+        let problem = Problem::ridge(0.8);
+        let mut alpha = vec![0.0; 12];
+        let mut v = vec![0.0; 40];
+        let mut solver = NativeScd::new().with_block_rows(8);
+        for round in 0..300 {
+            let req = SolveRequest {
+                v: &v,
+                b: &ds.b,
+                h: 12,
+                problem: &problem,
+                sigma: 1.0,
+                seed: round,
+            };
+            let res = solver.solve(&wd, &alpha, &req);
+            check_result(&wd, &res, 1e-9).unwrap();
+            for (a, d) in alpha.iter_mut().zip(res.delta_alpha.iter()) {
+                *a += d;
+            }
+            for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
+                *vi += d;
+            }
+        }
+        let (_, fstar) = crate::solver::cg::ridge_optimum(&ds, 0.8, 1e-12, 10_000);
+        let f = problem.primal(&ds, &alpha);
+        assert!(
+            (f - fstar) / fstar.abs().max(1.0) < 1e-6,
+            "f {} vs f* {}",
+            f,
+            fstar
+        );
+    }
+
+    #[test]
+    fn blocked_path_only_engages_above_threshold() {
+        // Default threshold (2¹⁵ rows) means small fixtures NEVER take the
+        // blocked path — that is what keeps the historical bit-pins valid.
+        let (ds, wd) = single_worker(32, 8, 3);
+        let alpha = vec![0.0; 8];
+        let v = vec![0.0; 32];
+        let problem = Problem::ridge(1.0);
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: 64,
+            problem: &problem,
+            sigma: 1.0,
+            seed: 5,
+        };
+        let default_solver_res = NativeScd::new().solve(&wd, &alpha, &req);
+        // Forcing the blocked path on the same data must stay numerically
+        // close even though its summation tree differs.
+        let blocked_res = NativeScd::new().with_block_rows(8).solve(&wd, &alpha, &req);
+        assert_eq!(default_solver_res.steps, blocked_res.steps);
+        for (a, b) in default_solver_res
+            .delta_alpha
+            .iter()
+            .zip(blocked_res.delta_alpha.iter())
+        {
+            assert!((a - b).abs() <= 1e-9 * (1.0 + a.abs()), "{} vs {}", a, b);
+        }
+    }
+
+    #[test]
     fn steady_state_solve_is_allocation_free() {
         // The tentpole invariant: after one warmup round, `solve_into` with
         // persistent result buffers never touches the allocator.
@@ -346,6 +804,41 @@ mod tests {
         let after = crate::testkit::alloc::current_thread_allocations();
         assert_eq!(after - before, 0, "pooled SCD round allocated");
         assert!(out.steps > 0);
+    }
+
+    #[test]
+    fn blocked_and_mixed_steady_state_solves_are_allocation_free() {
+        // The zero-alloc invariant extends to BOTH new paths: the blocked
+        // plan and the f32 mirrors are built during warmup and only
+        // re-validated (pointer-key compare) afterwards.
+        let (ds, wd) = single_worker(64, 32, 23);
+        let alpha = vec![0.0; 32];
+        let v = vec![0.0; 64];
+        let problem = Problem::ridge(0.5);
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: 128,
+            problem: &problem,
+            sigma: 2.0,
+            seed: 9,
+        };
+        let solvers: Vec<(&str, NativeScd)> = vec![
+            ("blocked", NativeScd::new().with_block_rows(8)),
+            ("mixed", NativeScd::with_precision(Precision::MixedF32)),
+        ];
+        for (label, mut solver) in solvers {
+            let mut out = SolveResult::default();
+            solver.solve_into(&wd, &alpha, &req, &mut out); // warmup
+            let before = crate::testkit::alloc::current_thread_allocations();
+            for round in 0..10u64 {
+                let round_req = SolveRequest { seed: round, ..req.clone() };
+                solver.solve_into(&wd, &alpha, &round_req, &mut out);
+            }
+            let after = crate::testkit::alloc::current_thread_allocations();
+            assert_eq!(after - before, 0, "{} SCD round allocated", label);
+            assert!(out.steps > 0, "{}", label);
+        }
     }
 
     #[test]
@@ -388,82 +881,66 @@ mod tests {
     }
 
     #[test]
-    fn hinge_dual_converges_on_separable_data() {
-        let (ds, labels) = separable_classes(24, 96, 0.5, 7);
-        let cols: Vec<u32> = (0..ds.n() as u32).collect();
-        let wd = WorkerData::from_columns(&ds.a, &cols);
-        let problem = Problem::svm(1.0);
-        let c = problem.reg.box_c();
-        let mut alpha = vec![0.0; ds.n()];
-        let mut v = vec![0.0; ds.m()];
-        let mut solver = NativeScd::new();
-        for round in 0..80 {
-            let req = SolveRequest {
-                v: &v,
-                b: &ds.b,
-                h: ds.n(),
-                problem: &problem,
-                sigma: 1.0,
-                seed: round,
-            };
-            let res = solver.solve(&wd, &alpha, &req);
-            check_result(&wd, &res, 1e-9).unwrap();
-            for (a, d) in alpha.iter_mut().zip(res.delta_alpha.iter()) {
-                *a += d;
+    fn mixed_precision_tracks_f64_convergence() {
+        // MixedF32 is NOT bit-stable against f64 (by design), but on a
+        // well-conditioned ridge problem it must land within f32-rounding
+        // distance of the f64 objective, and every round must satisfy the
+        // Δv ≡ A·Δα consistency check (Δv is recomputed in f64).
+        let (ds, wd) = single_worker(48, 16, 29);
+        let problem = Problem::ridge(1.0);
+        let mut run = |precision: Precision| -> f64 {
+            let mut alpha = vec![0.0; 16];
+            let mut v = vec![0.0; 48];
+            let mut solver = NativeScd::with_precision(precision);
+            for round in 0..120 {
+                let req = SolveRequest {
+                    v: &v,
+                    b: &ds.b,
+                    h: 16,
+                    problem: &problem,
+                    sigma: 1.0,
+                    seed: round,
+                };
+                let res = solver.solve(&wd, &alpha, &req);
+                check_result(&wd, &res, 1e-9).unwrap();
+                for (a, d) in alpha.iter_mut().zip(res.delta_alpha.iter()) {
+                    *a += d;
+                }
+                for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
+                    *vi += d;
+                }
             }
-            for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
-                *vi += d;
-            }
-        }
-        // Box invariant held throughout.
-        assert!(alpha.iter().all(|&a| (0.0..=c + 1e-12).contains(&a)));
-        // Near-zero certificate and a separating classifier.
-        let gap = problem.duality_gap(&ds, &v, &alpha);
-        assert!(gap < 1e-3 * ds.n() as f64, "gap {}", gap);
-        let margins = ds.a.matvec_t(&v);
-        let correct = margins.iter().filter(|&&t| t > 0.0).count();
+            problem.primal(&ds, &alpha)
+        };
+        let f64_obj = run(Precision::F64);
+        let mixed_obj = run(Precision::MixedF32);
         assert!(
-            correct as f64 >= 0.95 * ds.n() as f64,
-            "accuracy {}/{}",
-            correct,
-            ds.n()
+            (mixed_obj - f64_obj).abs() <= 1e-3 * (1.0 + f64_obj.abs()),
+            "mixed {} vs f64 {}",
+            mixed_obj,
+            f64_obj
         );
-        let _ = labels;
     }
 
     #[test]
-    fn logistic_dual_objective_decreases() {
-        let (ds, _) = separable_classes(16, 48, 0.4, 13);
-        let cols: Vec<u32> = (0..ds.n() as u32).collect();
-        let wd = WorkerData::from_columns(&ds.a, &cols);
-        let problem = Problem::logistic(1.0);
-        let mut alpha = vec![0.0; ds.n()];
-        let mut v = vec![0.0; ds.m()];
-        let mut solver = NativeScd::new();
-        let mut prev = problem.primal(&ds, &alpha);
-        for round in 0..40 {
-            let req = SolveRequest {
-                v: &v,
-                b: &ds.b,
-                h: ds.n(),
-                problem: &problem,
-                sigma: 1.0,
-                seed: round,
-            };
-            let res = solver.solve(&wd, &alpha, &req);
-            check_result(&wd, &res, 1e-9).unwrap();
-            for (a, d) in alpha.iter_mut().zip(res.delta_alpha.iter()) {
-                *a += d;
-            }
-            for (vi, d) in v.iter_mut().zip(res.delta_v.iter()) {
-                *vi += d;
-            }
-            let cur = problem.primal(&ds, &alpha);
-            assert!(cur <= prev + 1e-9, "round {}: {} -> {}", round, prev, cur);
-            prev = cur;
-        }
-        let gap = problem.duality_gap(&ds, &v, &alpha);
-        assert!(gap >= 0.0 && gap < 0.05 * ds.n() as f64, "gap {}", gap);
+    fn mixed_precision_is_deterministic() {
+        let (ds, wd) = single_worker(16, 8, 3);
+        let alpha = vec![0.1; 8];
+        let v = ds.shared_vector(&alpha);
+        let problem = Problem::ridge(0.5);
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: 32,
+            problem: &problem,
+            sigma: 2.0,
+            seed: 77,
+        };
+        let r1 = NativeScd::with_precision(Precision::MixedF32).solve(&wd, &alpha, &req);
+        let r2 = NativeScd::with_precision(Precision::MixedF32).solve(&wd, &alpha, &req);
+        assert_eq!(r1.delta_alpha, r2.delta_alpha);
+        assert_eq!(r1.delta_v, r2.delta_v);
+        assert_eq!(r1.steps, r2.steps);
     }
 
     #[test]
@@ -514,5 +991,43 @@ mod tests {
         let r2 = NativeScd::new().solve(&wd, &alpha, &req);
         assert_eq!(r1.delta_alpha, r2.delta_alpha);
         assert_eq!(r1.delta_v, r2.delta_v);
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha length")]
+    fn rejects_mismatched_alpha_length_in_release_too() {
+        // The audited solver-boundary contract: length checks here are
+        // release-mode asserts (the kernels below do unchecked reads).
+        let (ds, wd) = single_worker(16, 8, 3);
+        let v = vec![0.0; 16];
+        let problem = Problem::ridge(1.0);
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: 4,
+            problem: &problem,
+            sigma: 1.0,
+            seed: 0,
+        };
+        let mut out = SolveResult::default();
+        NativeScd::new().solve_into(&wd, &[0.0; 3], &req, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "shared vector length")]
+    fn rejects_mismatched_v_length_in_release_too() {
+        let (ds, wd) = single_worker(16, 8, 3);
+        let v = vec![0.0; 9];
+        let problem = Problem::ridge(1.0);
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: 4,
+            problem: &problem,
+            sigma: 1.0,
+            seed: 0,
+        };
+        let mut out = SolveResult::default();
+        NativeScd::new().solve_into(&wd, &[0.0; 8], &req, &mut out);
     }
 }

@@ -62,6 +62,11 @@ impl LocalSolver for MiniBatchSgd {
     ) {
         let m = data.flat.m;
         let nk = data.n_local();
+        // Solver-boundary length contract (release-mode; the indexed
+        // kernels below do unchecked reads — see linalg::kernels::scalar).
+        assert_eq!(alpha.len(), nk, "MiniBatchSgd: alpha length != local columns");
+        assert_eq!(req.v.len(), m, "MiniBatchSgd: shared vector length != m");
+        assert_eq!(req.b.len(), m, "MiniBatchSgd: label vector length != m");
         self.t += 1;
 
         // Residual on the sampled row subset (same sample on every worker —
@@ -170,6 +175,25 @@ mod tests {
         for (d, g) in res.delta_alpha.iter().zip(atb.iter()) {
             assert!(d * g >= 0.0, "step not descent-aligned: {} {}", d, g);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha length")]
+    fn rejects_mismatched_alpha_length_in_release_too() {
+        // Solver-boundary length contract: a release-mode assert, not a
+        // debug_assert (the kernels below do unchecked reads).
+        let (ds, wd) = setup(2);
+        let v = vec![0.0; 32];
+        let problem = crate::problem::Problem::ridge(0.5);
+        let req = SolveRequest {
+            v: &v,
+            b: &ds.b,
+            h: 0,
+            problem: &problem,
+            sigma: 1.0,
+            seed: 1,
+        };
+        let _ = MiniBatchSgd::new(0.5, 1.0).solve(&wd, &[0.0; 5], &req);
     }
 
     #[test]

@@ -1,0 +1,101 @@
+//! Integration: kernel-backend bit-identity (DESIGN.md §11).
+//!
+//! The tentpole invariant of the SIMD work: the dispatched backend (AVX2
+//! under `--features simd`, scalar otherwise) is a pure speed change —
+//! full training trajectories are **bit-identical** with the vector units
+//! on or off. This binary holds the ONE test that toggles the global
+//! `force_scalar` switch, so the toggle is never raced by a parallel test
+//! thread. Under a default (non-simd) build the switch is a no-op and the
+//! test degenerates to a determinism pin — it must pass in every cell of
+//! the CI feature matrix.
+
+use sparkbench::config::{Impl, TrainConfig};
+use sparkbench::data::synthetic::{separable_classes, webspam_like, SyntheticSpec};
+use sparkbench::framework::{build_any, DistEngine, Engine, EngineOptions};
+use sparkbench::linalg::{self, kernels};
+use sparkbench::problem::Problem;
+use sparkbench::session::{Session, StopPolicy};
+
+/// Drive an engine manually and collect the bit patterns of every round's
+/// Δv plus the final α and shared vector.
+fn trajectory(
+    eng: &mut Box<dyn DistEngine>,
+    m: usize,
+    rounds: usize,
+    h: usize,
+) -> (Vec<Vec<u64>>, Vec<u64>, Vec<u64>) {
+    let mut v = vec![0.0; m];
+    let mut dvs = Vec::new();
+    for round in 0..rounds {
+        let (dv, _) = eng.run_round(&v, h, round as u64);
+        dvs.push(dv.iter().map(|x| x.to_bits()).collect());
+        linalg::add_assign(&mut v, &dv);
+    }
+    let alpha = eng.alpha_global().iter().map(|x| x.to_bits()).collect();
+    let vbits = v.iter().map(|x| x.to_bits()).collect();
+    (dvs, alpha, vbits)
+}
+
+#[test]
+fn backend_switch_never_changes_a_single_bit() {
+    // --- engine level: ridge, 20 rounds, two engine families ------------
+    // Δv every round + final α + final v, all compared by bits.
+    let ds = webspam_like(&SyntheticSpec::small());
+    for engine in [Engine::Impl(Impl::Mpi), Engine::threads(3)] {
+        let mut run = |forced: bool| {
+            kernels::force_scalar(forced);
+            let mut cfg = TrainConfig::default_for(&ds);
+            cfg.workers = 3;
+            let mut eng = build_any(engine, &ds, &cfg, &EngineOptions::default());
+            let out = trajectory(&mut eng, ds.m(), 20, 16);
+            kernels::force_scalar(false);
+            out
+        };
+        let scalar = run(true);
+        let dispatched = run(false);
+        assert_eq!(
+            scalar,
+            dispatched,
+            "ridge trajectory diverged between backends on {} [{}]",
+            engine.label(),
+            kernels::backend()
+        );
+    }
+
+    // --- session level: hinge dual to the gap certificate ----------------
+    // The certificate path exercises the matvec gap evaluation on top of
+    // the SCD hot pair; identical backends ⇒ identical round count, gap
+    // column and final objective, bit for bit.
+    let (cds, _) = separable_classes(24, 96, 0.4, 5);
+    let mut run_svm = |forced: bool| {
+        kernels::force_scalar(forced);
+        let mut cfg = TrainConfig::default_for(&cds);
+        cfg.workers = 3;
+        cfg.max_rounds = 4000;
+        let report = Session::builder(&cds)
+            .engine(Impl::Mpi)
+            .config(cfg)
+            .problem(Problem::svm(1.0))
+            .stop(StopPolicy::ToGap { gap: 1e-3 })
+            .build()
+            .unwrap()
+            .run();
+        kernels::force_scalar(false);
+        let gaps: Vec<u64> = report
+            .logs
+            .iter()
+            .filter_map(|l| l.gap)
+            .map(f64::to_bits)
+            .collect();
+        (report.rounds, gaps, report.final_objective.map(f64::to_bits))
+    };
+    let scalar = run_svm(true);
+    let dispatched = run_svm(false);
+    assert!(scalar.0 > 0 && !scalar.1.is_empty(), "svm session did no work");
+    assert_eq!(
+        scalar,
+        dispatched,
+        "hinge session diverged between backends [{}]",
+        kernels::backend()
+    );
+}
