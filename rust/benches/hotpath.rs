@@ -29,7 +29,11 @@
 //!   is active (identical bits either way; the ratio is pure speed);
 //! * **mixed precision** (DESIGN.md §11): f64 vs mixed-f32 ns/step on the
 //!   same round, and the final-objective delta of a 120-round single-shard
-//!   trajectory (expected ≤ 1e-3 relative — mixed-f32 is NOT bit-stable).
+//!   trajectory (expected ≤ 1e-3 relative — mixed-f32 is NOT bit-stable);
+//! * **chaos layer** (DESIGN.md §12): homogeneous vs heterogeneous
+//!   round-time distribution on the virtual clock (round time = max over
+//!   seeded per-worker speeds + latency jitter), with speculation off and
+//!   on — same bits all three ways, only the clock moves.
 
 use sparkbench::bench::{render_results, Bencher};
 use sparkbench::config::{Impl, Precision, TrainConfig};
@@ -67,7 +71,7 @@ fn main() {
     let b = Bencher::default();
     let mut results = Vec::new();
     let mut json = Json::obj();
-    json.set("bench", "hotpath").set("schema_version", 6usize);
+    json.set("bench", "hotpath").set("schema_version", 7usize);
 
     // ---- sparse dot / axpy — one call per SCD step, THE hot pair --------
     let ds = webspam_like(&SyntheticSpec::webspam_mini());
@@ -520,6 +524,66 @@ fn main() {
             .set("rounds_per_point", NESTED_ROUNDS)
             .set("allocs_per_round", nested_allocs);
         json.set("nested_parallel", jn);
+    }
+
+    // ---- chaos layer: heterogeneous round times + speculation -----------
+    // DESIGN.md §12: same trajectory bits in all three runs (asserted by
+    // tests/integration_chaos.rs); this case tracks what chaos does to the
+    // virtual clock. Round time is max over the seeded per-worker speed
+    // factors (drawn from [1, 1+4] here) times jittered collectives;
+    // speculation caps every dragged rank at detect + base, which is the
+    // Spark mitigation's modeled win.
+    {
+        use sparkbench::framework::chaos::ChaosSpec;
+        let ccfg = TrainConfig::default_for(&ds);
+        const CHAOS_ROUNDS: usize = 20;
+        let chaos_run = |spec: &str| -> (f64, f64) {
+            let mut builder = Session::builder(&ds)
+                .engine(Impl::Mpi)
+                .config(ccfg.clone())
+                .fixed_rounds(CHAOS_ROUNDS);
+            if !spec.is_empty() {
+                builder =
+                    builder.chaos(ChaosSpec::parse(spec).expect("valid bench chaos spec"));
+            }
+            let rep = builder.build().expect("valid bench session").run();
+            let mut prev = 0.0;
+            let mut max_round: f64 = 0.0;
+            for l in &rep.logs {
+                max_round = max_round.max(l.time - prev);
+                prev = l.time;
+            }
+            (rep.total_time / CHAOS_ROUNDS as f64, max_round)
+        };
+        let (homog_mean, homog_max) = chaos_run("");
+        let (het_mean, het_max) = chaos_run("het=4.0,jitter=0.2");
+        let (spec_mean, spec_max) = chaos_run("het=4.0,jitter=0.2,spec");
+        let het_slowdown = het_mean / homog_mean.max(1e-12);
+        let speculation_speedup = het_mean / spec_mean.max(1e-12);
+        println!(
+            "chaos rounds (virtual, K=8): homogeneous {:.3} ms mean / {:.3} ms max; \
+             het=4+jitter {:.3} / {:.3} ms ({:.2}x slower); +speculation {:.3} / {:.3} ms \
+             ({:.2}x back)",
+            homog_mean * 1e3,
+            homog_max * 1e3,
+            het_mean * 1e3,
+            het_max * 1e3,
+            het_slowdown,
+            spec_mean * 1e3,
+            spec_max * 1e3,
+            speculation_speedup
+        );
+        let mut jc = Json::obj();
+        jc.set("rounds", CHAOS_ROUNDS)
+            .set("homogeneous_round_mean_s", homog_mean)
+            .set("homogeneous_round_max_s", homog_max)
+            .set("het_round_mean_s", het_mean)
+            .set("het_round_max_s", het_max)
+            .set("het_slowdown", het_slowdown)
+            .set("spec_round_mean_s", spec_mean)
+            .set("spec_round_max_s", spec_max)
+            .set("speculation_speedup", speculation_speedup);
+        json.set("chaos", jc);
     }
 
     // ---- problem dispatch: trait-routed SCD vs the pre-redesign path ----

@@ -2,7 +2,10 @@
 //! fingerprint) so long runs survive restarts — standard framework duty.
 //!
 //! Format: versioned JSON envelope with base-16 packed f64 payloads
-//! (exact bit-level round-trip, no float-text precision loss). Version 4
+//! (exact bit-level round-trip, no float-text precision loss). Version 5
+//! records the chaos fault-plan cursor (events already consumed) so a
+//! resumed chaos session does not re-fire deaths that already happened;
+//! pre-v5 envelopes decode with cursor 0. Version 4
 //! records the numeric [`Precision`] the run trained with — a MixedF32
 //! trajectory is not bit-continuable in f64 (or vice versa), so resume
 //! refuses a precision mismatch; pre-v4 envelopes decode as `f64`.
@@ -41,9 +44,14 @@ pub struct Checkpoint {
     /// way T is: a MixedF32 residual history cannot be continued bit-true
     /// in f64, so resume refuses a mismatch. Pre-v4 envelopes are f64.
     pub precision: Precision,
+    /// Chaos fault-plan events already consumed when this checkpoint was
+    /// taken (DESIGN.md §12). Resume hands it to the session's fault
+    /// schedule so recovered deaths stay recovered. 0 for chaos-free runs
+    /// and pre-v5 envelopes.
+    pub fault_cursor: usize,
 }
 
-const VERSION: f64 = 4.0;
+const VERSION: f64 = 5.0;
 
 fn pack_f64s(v: &[f64]) -> String {
     let mut s = String::with_capacity(v.len() * 16);
@@ -78,6 +86,7 @@ impl Checkpoint {
             .set("workers", self.workers)
             .set("threads_per_worker", self.threads_per_worker)
             .set("precision", self.precision.label())
+            .set("fault_cursor", self.fault_cursor)
             .set("alpha_hex", pack_f64s(&self.alpha))
             .set("v_hex", pack_f64s(&self.v));
         j
@@ -87,7 +96,7 @@ impl Checkpoint {
         let ver = j.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0);
         let num =
             |k: &str| -> Result<f64, String> { j.get(k).and_then(|v| v.as_f64()).ok_or(format!("missing {}", k)) };
-        let problem = if ver == VERSION || ver == 3.0 || ver == 2.0 {
+        let problem = if ver == VERSION || ver == 4.0 || ver == 3.0 || ver == 2.0 {
             Problem::from_json(j.get("problem").ok_or("missing problem")?)?
         } else if ver == 1.0 {
             // v1 envelopes predate the problem layer: squared loss with the
@@ -116,8 +125,15 @@ impl Checkpoint {
         } else {
             Precision::F64
         };
+        // Pre-v5 envelopes predate the chaos layer: no faults consumed.
+        let fault_cursor = if ver >= 5.0 {
+            num("fault_cursor")? as usize
+        } else {
+            0
+        };
         Ok(Checkpoint {
             precision,
+            fault_cursor,
             round: num("round")? as usize,
             time: num("time")?,
             problem,
@@ -185,6 +201,7 @@ mod tests {
             workers: 8,
             threads_per_worker: 1,
             precision: Precision::F64,
+            fault_cursor: 0,
         }
     }
 
@@ -287,6 +304,25 @@ mod tests {
     }
 
     #[test]
+    fn fault_cursor_roundtrips_and_pre_v5_implies_zero() {
+        // v5 records the consumed fault-plan prefix exactly.
+        let mut c = sample();
+        c.fault_cursor = 3;
+        let back = Checkpoint::from_json(&Json::parse(&c.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back.fault_cursor, 3);
+        assert_eq!(back, c);
+        // A v4 envelope (no fault_cursor field) decodes with cursor 0 —
+        // and still reads its precision and threads_per_worker fields.
+        let mut j = sample().to_json();
+        j.set("version", 4.0).set("fault_cursor", Json::Null);
+        let v4 = Checkpoint::from_json(&j).unwrap();
+        assert_eq!(v4.fault_cursor, 0);
+        assert_eq!(v4.precision, Precision::F64);
+        assert_eq!(v4.threads_per_worker, 1);
+        assert_eq!(v4.problem, Problem::ridge(0.5));
+    }
+
+    #[test]
     fn compatibility_refuses_cross_precision_resume() {
         use crate::config::TrainConfig;
         use crate::data::synthetic::{webspam_like, SyntheticSpec};
@@ -352,6 +388,7 @@ mod tests {
             workers: cfg.workers,
             threads_per_worker: engine.threads_per_worker(),
             precision: cfg.precision,
+            fault_cursor: 0,
         };
         let f_at_ckpt = cfg.problem.primal(&ds, &ckpt.alpha);
         // "Restore": v from checkpoint drives further rounds.

@@ -22,6 +22,12 @@ pub enum Partitioner {
     BalancedNnz,
     /// Uniformly random assignment (ablation baseline).
     Random,
+    /// Deliberately imbalanced contiguous split (chaos layer, DESIGN.md
+    /// §12): worker 0 gets ~half the columns, worker 1 half the rest, and
+    /// so on geometrically (each worker at least one column while any
+    /// remain). The adversarial baseline the skew experiments measure
+    /// `BalancedNnz` against.
+    Skewed,
 }
 
 impl Partitioner {
@@ -31,6 +37,7 @@ impl Partitioner {
             "round-robin" | "roundrobin" => Some(Partitioner::RoundRobin),
             "balanced-nnz" | "balanced" => Some(Partitioner::BalancedNnz),
             "random" => Some(Partitioner::Random),
+            "skewed" => Some(Partitioner::Skewed),
             _ => None,
         }
     }
@@ -41,6 +48,7 @@ impl Partitioner {
             Partitioner::RoundRobin => "round-robin",
             Partitioner::BalancedNnz => "balanced-nnz",
             Partitioner::Random => "random",
+            Partitioner::Skewed => "skewed",
         }
     }
 }
@@ -98,6 +106,27 @@ impl Partitioning {
                 let mut out = vec![Vec::new(); k];
                 for c in 0..n as u32 {
                     out[rng.next_usize(k)].push(c);
+                }
+                out
+            }
+            Partitioner::Skewed => {
+                // Geometric halving: worker w takes half of what is left
+                // (at least one column while any remain); the last worker
+                // sweeps the remainder. Max/min column-count ratio grows
+                // like 2^(k-1) — the straggler regime by construction.
+                let mut out = Vec::with_capacity(k);
+                let mut start = 0usize;
+                for w in 0..k {
+                    let remaining = n - start;
+                    let len = if w + 1 == k {
+                        remaining
+                    } else if remaining > 0 {
+                        (remaining / 2).max(1)
+                    } else {
+                        0
+                    };
+                    out.push((start as u32..(start + len) as u32).collect());
+                    start += len;
                 }
                 out
             }
@@ -283,6 +312,39 @@ mod tests {
     fn parse_names() {
         assert_eq!(Partitioner::parse("balanced-nnz"), Some(Partitioner::BalancedNnz));
         assert_eq!(Partitioner::parse("range").unwrap().name(), "range");
+        assert_eq!(Partitioner::parse("skewed"), Some(Partitioner::Skewed));
+        assert_eq!(Partitioner::Skewed.name(), "skewed");
         assert!(Partitioner::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn skewed_is_complete_and_geometric() {
+        let a = sample();
+        let p = Partitioning::build(Partitioner::Skewed, &a, 4, 0);
+        p.validate(a.n).unwrap();
+        let sizes: Vec<usize> = p.parts.iter().map(|p| p.len()).collect();
+        // Geometric halving: strictly decreasing until the tail remainder.
+        assert_eq!(sizes[0], a.n / 2);
+        assert!(sizes[0] > 2 * sizes[2], "sizes {:?}", sizes);
+        // Far more imbalanced than range by construction: worker 0 holds
+        // ~half the columns, so max/mean ≈ 2 (imbalance ≈ 1) while range
+        // stays near 0.
+        let range = Partitioning::build(Partitioner::Range, &a, 4, 0);
+        assert!(p.imbalance(&a) > 0.5, "skewed imbalance {}", p.imbalance(&a));
+        assert!(p.imbalance(&a) > 2.0 * range.imbalance(&a));
+    }
+
+    #[test]
+    fn skewed_degenerate_shapes() {
+        let a = sample();
+        let solo = Partitioning::build(Partitioner::Skewed, &a, 1, 0);
+        assert_eq!(solo.parts[0].len(), a.n);
+        solo.validate(a.n).unwrap();
+        // More workers than columns: early workers get >= 1 column while
+        // any remain; the rest idle.
+        let tiny = CscMatrix::from_triplets(4, 2, &[(0, 0, 1.0), (1, 1, 1.0)]);
+        let p = Partitioning::build(Partitioner::Skewed, &tiny, 5, 0);
+        p.validate(2).unwrap();
+        assert_eq!(p.num_workers(), 5);
     }
 }

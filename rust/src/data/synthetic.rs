@@ -127,6 +127,70 @@ pub fn webspam_like(spec: &SyntheticSpec) -> Dataset {
     }
 }
 
+/// Generate a dataset whose **column mass** is Zipfian (chaos layer,
+/// DESIGN.md §12): column `j` targets `nnz ∝ 1/(j+1)^s` with
+/// `s = spec.powerlaw_s`, normalized so the mean column nnz stays
+/// `spec.avg_col_nnz`. Where [`webspam_like`] skews *row* popularity
+/// (head documents) with near-uniform column mass, this generator front-
+/// loads the columns themselves — so contiguous partitionings (range,
+/// skewed) produce heavy head shards and a straggler regime, while
+/// `balanced-nnz` flattens it back out. Rows are drawn uniformly; labels
+/// come from a sparse ground-truth model plus noise, as in
+/// [`webspam_like`].
+pub fn zipf_columns(spec: &SyntheticSpec) -> Dataset {
+    let mut rng = Xorshift128::new(spec.seed ^ 0x21BF);
+    let m = spec.m;
+    let n = spec.n;
+    let s = spec.powerlaw_s;
+
+    // Sparse ground-truth model.
+    let mut alpha_true = vec![0.0; n];
+    for a in alpha_true.iter_mut() {
+        if rng.next_f64() < spec.model_density {
+            *a = rng.next_gaussian();
+        }
+    }
+
+    // Normalize the Zipf mass so Σ target_j = n · avg_col_nnz:
+    // target_j = c0 / (j+1)^s with c0 = n·avg / H_{n,s}.
+    let harmonic: f64 = (0..n).map(|j| 1.0 / ((j + 1) as f64).powf(s)).sum();
+    let c0 = (n * spec.avg_col_nnz) as f64 / harmonic;
+
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::with_capacity(n * spec.avg_col_nnz);
+    let mut seen = vec![u32::MAX; m];
+    for c in 0..n {
+        let target = (c0 / ((c + 1) as f64).powf(s)).round().max(1.0) as usize;
+        let target = target.min(m);
+        let mut placed = 0usize;
+        let mut attempts = 0usize;
+        while placed < target && attempts < 8 * target {
+            let r = rng.next_usize(m);
+            attempts += 1;
+            if seen[r] == c as u32 {
+                continue; // already placed in this column
+            }
+            seen[r] = c as u32;
+            let v = rng.next_gaussian().abs() + 0.1;
+            triplets.push((r, c, v));
+            placed += 1;
+        }
+    }
+
+    let a = CscMatrix::from_triplets(m, n, &triplets);
+
+    // Labels b = A α* + ε.
+    let mut b = a.matvec(&alpha_true);
+    for bi in b.iter_mut() {
+        *bi += spec.noise * rng.next_gaussian();
+    }
+
+    Dataset {
+        a,
+        b,
+        name: format!("zipf-columns(m={},n={},s={})", m, n, s),
+    }
+}
+
 /// Linearly separable ±1 classification corpus in the **dual layout** the
 /// SVM/logistic problems train on (DESIGN.md §9): the matrix is d × n with
 /// one COLUMN per datapoint, already label-scaled (`q_j = y_j·x_j`, so the
@@ -237,6 +301,35 @@ mod tests {
             head,
             total
         );
+    }
+
+    #[test]
+    fn zipf_columns_mass_is_front_loaded_and_deterministic() {
+        let s = SyntheticSpec::small();
+        let d1 = zipf_columns(&s);
+        let d2 = zipf_columns(&s);
+        assert_eq!(d1.a, d2.a);
+        assert_eq!(d1.b, d2.b);
+        d1.a.validate().unwrap();
+        assert_eq!(d1.m(), s.m);
+        assert_eq!(d1.n(), s.n);
+        // Head columns carry a disproportionate share of the nnz mass:
+        // the first 10% of columns should own well over 10% of entries.
+        let head_cols = s.n / 10;
+        let head: usize = (0..head_cols).map(|c| d1.a.col_nnz(c)).sum();
+        let total = d1.nnz();
+        assert!(
+            head as f64 > 0.3 * total as f64,
+            "head column mass {}/{}",
+            head,
+            total
+        );
+        // Mean column nnz stays in a sane band around the target (the m
+        // clamp and dedup trim the head, so allow a wide band).
+        let avg = total as f64 / d1.n() as f64;
+        assert!(avg > 2.0 && avg < 3.0 * s.avg_col_nnz as f64, "avg {}", avg);
+        // Every column is nonempty (target is clamped at >= 1).
+        assert!((0..d1.n()).all(|c| d1.a.col_nnz(c) >= 1));
     }
 
     #[test]

@@ -1,0 +1,648 @@
+//! Chaos layer: seeded worker heterogeneity, latency jitter, and fault
+//! injection (worker deaths and slowdowns) with the two mitigations of
+//! DESIGN.md §12 — speculative re-execution and checkpoint-based
+//! mid-round recovery.
+//!
+//! Everything here is **deterministic**: a [`ChaosSpec`] is a pure
+//! function of its seed, so any chaos session can be replayed bit-for-bit.
+//! The spec only ever perturbs *timing* (virtual or physical) and *which
+//! round attempts commit* — never the numerics of a committed round. A
+//! sub-solve is a pure function of `(v, α, h, seed, shard)`, which is why
+//! speculative duplicates and post-recovery replays produce bit-identical
+//! Δv (the invariant `tests/integration_chaos.rs` pins).
+//!
+//! The flow per round: the [`Session`](crate::session::Session) asks its
+//! [`ChaosSpec`]-derived schedule what fires this attempt, packages it as
+//! a [`RoundChaos`] and hands it to the engine via
+//! [`DistEngine::arm_chaos`](super::DistEngine::arm_chaos). The threads
+//! engine honors it *physically* (dragged ranks really sleep, dead ranks
+//! really have their thread shut down and respawned); the virtual-clock
+//! engines honor it on the model (multiplied compute, aborted rounds
+//! charged detect + respawn).
+
+use super::EngineOptions;
+use crate::linalg::Xorshift128;
+
+/// Golden-ratio mixing constant — the same one the per-shard seed
+/// derivation uses (`threads::SEED_GOLDEN`).
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// What a single fault does to its target rank.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The worker dies mid-round: nothing it computed commits, the round
+    /// aborts, and the session recovers from its last-round snapshot.
+    Death,
+    /// The worker runs `factor >= 1` times slower for that round.
+    Slow(f64),
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Round index (0-based) the fault arms at.
+    pub round: usize,
+    /// Target rank; `None` = pick one deterministically from the spec
+    /// seed at [`ChaosSpec::bind`] time (when K is known).
+    pub worker: Option<usize>,
+    pub kind: FaultKind,
+}
+
+/// A seeded schedule of deaths and slowdowns.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Schedule a death of `worker` at `round`.
+    pub fn death_at(mut self, round: usize, worker: usize) -> FaultPlan {
+        self.events.push(FaultEvent {
+            round,
+            worker: Some(worker),
+            kind: FaultKind::Death,
+        });
+        self
+    }
+
+    /// Schedule a `factor`× slowdown of `worker` at `round`.
+    pub fn slow_at(mut self, round: usize, worker: usize, factor: f64) -> FaultPlan {
+        self.events.push(FaultEvent {
+            round,
+            worker: Some(worker),
+            kind: FaultKind::Slow(factor),
+        });
+        self
+    }
+
+    /// Resolve unbound targets and validate against a cluster of `k`
+    /// ranks. Rejects out-of-range targets, sub-1 slowdown factors, and —
+    /// the build-time guard the chaos tests pin — any round whose deaths
+    /// would kill **all** `k` workers at once, leaving no survivor to
+    /// recover alongside.
+    fn bind(&self, seed: u64, k: usize) -> Result<FaultPlan, String> {
+        let mut events = self.events.clone();
+        for ev in events.iter_mut() {
+            if ev.worker.is_none() {
+                // Seeded pick, stable across replays of the same spec.
+                let mix = seed ^ (ev.round as u64).wrapping_mul(GOLDEN);
+                ev.worker = Some(Xorshift128::new(mix).next_usize(k));
+            }
+            let w = ev.worker.unwrap();
+            if w >= k {
+                return Err(format!(
+                    "fault at round {} targets worker {} but K = {}",
+                    ev.round, w, k
+                ));
+            }
+            if let FaultKind::Slow(f) = ev.kind {
+                if !f.is_finite() || f < 1.0 {
+                    return Err(format!("slowdown factor {} must be >= 1", f));
+                }
+            }
+        }
+        // Deaths fire one per attempt in schedule order; keep that order
+        // stable by round.
+        events.sort_by_key(|e| e.round);
+        for ev in &events {
+            if ev.kind != FaultKind::Death {
+                continue;
+            }
+            let mut dead: Vec<usize> = events
+                .iter()
+                .filter(|e| e.round == ev.round && e.kind == FaultKind::Death)
+                .map(|e| e.worker.unwrap())
+                .collect();
+            dead.sort_unstable();
+            dead.dedup();
+            if dead.len() >= k {
+                return Err(format!(
+                    "fault plan kills all {} workers at round {}; no survivor to recover with",
+                    k, ev.round
+                ));
+            }
+        }
+        Ok(FaultPlan { events })
+    }
+}
+
+/// Full chaos specification: heterogeneity, jitter, speculation, and the
+/// fault schedule. Parsed from the CLI `--chaos` grammar or built
+/// programmatically; [`bind`](ChaosSpec::bind) must run (with the worker
+/// count) before a session will accept it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosSpec {
+    /// Seed for every chaos draw (worker picks, speed table, jitter).
+    pub seed: u64,
+    /// Heterogeneity spread: static per-worker speed multipliers drawn
+    /// uniformly from `[1, 1 + het]`. 0 = homogeneous cluster.
+    pub het: f64,
+    /// Latency jitter fraction: fixed/network round costs multiplied by a
+    /// per-round factor in `[1, 1 + jitter]`. 0 = no jitter.
+    pub jitter: f64,
+    /// Speculative re-execution of the straggler rank's sub-solve: a
+    /// backup copy races the original, first result wins. Bit-identical
+    /// to no-speculation because both run the same deterministic solve.
+    pub speculation: bool,
+    pub plan: FaultPlan,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> ChaosSpec {
+        ChaosSpec {
+            seed: 0xC4A05,
+            het: 0.0,
+            jitter: 0.0,
+            speculation: false,
+            plan: FaultPlan::default(),
+        }
+    }
+}
+
+impl ChaosSpec {
+    /// Parse the CLI spec grammar: comma-separated directives
+    ///
+    /// ```text
+    /// seed=N        chaos seed (default 0xC4A05)
+    /// het=F         heterogeneity spread (speed multipliers in [1, 1+F])
+    /// jitter=F      per-round latency jitter fraction
+    /// spec          enable speculative re-execution
+    /// death@R       kill a seeded-pick worker at round R
+    /// death@R:W     kill worker W at round R
+    /// slow@R:F      slow a seeded-pick worker by F× at round R
+    /// slow@R:W:F    slow worker W by F× at round R
+    /// ```
+    pub fn parse(s: &str) -> Result<ChaosSpec, String> {
+        let mut spec = ChaosSpec::default();
+        for raw in s.split(',') {
+            let d = raw.trim();
+            if d.is_empty() {
+                continue;
+            }
+            let bad = |what: &str| format!("bad chaos directive '{}': {}", d, what);
+            if d == "spec" {
+                spec.speculation = true;
+            } else if let Some(v) = d.strip_prefix("seed=") {
+                spec.seed = v.parse().map_err(|_| bad("seed must be an integer"))?;
+            } else if let Some(v) = d.strip_prefix("het=") {
+                spec.het = v.parse().map_err(|_| bad("het must be a number"))?;
+            } else if let Some(v) = d.strip_prefix("jitter=") {
+                spec.jitter = v.parse().map_err(|_| bad("jitter must be a number"))?;
+            } else if let Some(v) = d.strip_prefix("death@") {
+                let parts: Vec<&str> = v.split(':').collect();
+                let round = parts[0].parse().map_err(|_| bad("round must be an integer"))?;
+                let worker = match parts.len() {
+                    1 => None,
+                    2 => Some(parts[1].parse().map_err(|_| bad("worker must be an integer"))?),
+                    _ => return Err(bad("expected death@R or death@R:W")),
+                };
+                spec.plan.events.push(FaultEvent {
+                    round,
+                    worker,
+                    kind: FaultKind::Death,
+                });
+            } else if let Some(v) = d.strip_prefix("slow@") {
+                let parts: Vec<&str> = v.split(':').collect();
+                let round = parts[0].parse().map_err(|_| bad("round must be an integer"))?;
+                let (worker, factor) = match parts.len() {
+                    2 => (
+                        None,
+                        parts[1].parse().map_err(|_| bad("factor must be a number"))?,
+                    ),
+                    3 => (
+                        Some(parts[1].parse().map_err(|_| bad("worker must be an integer"))?),
+                        parts[2].parse().map_err(|_| bad("factor must be a number"))?,
+                    ),
+                    _ => return Err(bad("expected slow@R:F or slow@R:W:F")),
+                };
+                spec.plan.events.push(FaultEvent {
+                    round,
+                    worker,
+                    kind: FaultKind::Slow(factor),
+                });
+            } else {
+                return Err(bad(
+                    "known directives: seed=N, het=F, jitter=F, spec, death@R[:W], slow@R[:W]:F",
+                ));
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Resolve seeded worker picks and validate the spec against `k`
+    /// ranks. Sessions call this at build time — a plan that kills every
+    /// worker in one round is rejected here, not mid-run.
+    pub fn bind(&self, k: usize) -> Result<ChaosSpec, String> {
+        if k == 0 {
+            return Err("chaos needs at least one worker".into());
+        }
+        if !self.het.is_finite() || self.het < 0.0 {
+            return Err(format!("het {} must be >= 0", self.het));
+        }
+        if !self.jitter.is_finite() || self.jitter < 0.0 {
+            return Err(format!("jitter {} must be >= 0", self.jitter));
+        }
+        Ok(ChaosSpec {
+            plan: self.plan.bind(self.seed, k)?,
+            ..self.clone()
+        })
+    }
+
+    /// True when the spec perturbs nothing at all.
+    pub fn is_quiet(&self) -> bool {
+        self.het == 0.0
+            && self.jitter == 0.0
+            && !self.speculation
+            && self.plan.events.is_empty()
+    }
+}
+
+/// Static per-worker speed multipliers in `[1, 1 + spread]`, seeded.
+pub fn speed_table(seed: u64, spread: f64, k: usize) -> Vec<f64> {
+    if spread <= 0.0 {
+        return vec![1.0; k];
+    }
+    let mut rng = Xorshift128::new(seed ^ 0x5EED_7AB1E);
+    (0..k).map(|_| 1.0 + spread * rng.next_f64()).collect()
+}
+
+/// Deterministic per-round latency-jitter multiplier in `[1, 1 + frac]`.
+pub fn jitter_mult(seed: u64, round_seed: u64, frac: f64) -> f64 {
+    if frac <= 0.0 {
+        return 1.0;
+    }
+    let mut rng = Xorshift128::new(seed ^ round_seed.wrapping_mul(GOLDEN) ^ 0x717_7E4);
+    1.0 + frac * rng.next_f64()
+}
+
+/// The chaos armed for ONE round attempt: at most one death (the session
+/// fires pending deaths one per attempt, so recovery itself can be hit by
+/// the next death) plus any number of slowdowns.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RoundChaos {
+    /// Rank that dies this attempt, if any.
+    pub death: Option<usize>,
+    /// `(rank, factor)` slowdowns in effect this attempt.
+    pub slowdowns: Vec<(usize, f64)>,
+}
+
+impl RoundChaos {
+    pub fn is_quiet(&self) -> bool {
+        self.death.is_none() && self.slowdowns.is_empty()
+    }
+}
+
+/// Engine-side chaos state, shared by all five engines: the bound spec,
+/// the static speed table, and the [`RoundChaos`] armed for the next
+/// `run_round` call.
+#[derive(Debug, Clone)]
+pub struct ChaosRuntime {
+    pub spec: ChaosSpec,
+    /// Static heterogeneity multipliers, one per rank.
+    pub speed: Vec<f64>,
+    pending: RoundChaos,
+}
+
+impl ChaosRuntime {
+    pub fn new(spec: ChaosSpec, k: usize) -> ChaosRuntime {
+        let speed = speed_table(spec.seed, spec.het, k);
+        ChaosRuntime {
+            spec,
+            speed,
+            pending: RoundChaos::default(),
+        }
+    }
+
+    /// Build from engine options when a bound spec is present.
+    pub fn from_opts(opts: &EngineOptions, k: usize) -> Option<ChaosRuntime> {
+        opts.chaos.as_ref().map(|spec| ChaosRuntime::new(spec.clone(), k))
+    }
+
+    /// Store the chaos for the next round attempt.
+    pub fn arm(&mut self, rc: RoundChaos) {
+        self.pending = rc;
+    }
+
+    /// Take (and clear) the armed chaos.
+    pub fn take(&mut self) -> RoundChaos {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Combined compute multiplier for rank `w` this attempt: static
+    /// heterogeneity × any armed slowdown.
+    pub fn factor(&self, rc: &RoundChaos, w: usize) -> f64 {
+        let mut f = self.speed[w];
+        for &(sw, m) in &rc.slowdowns {
+            if sw == w {
+                f *= m;
+            }
+        }
+        f
+    }
+
+    /// Modeled speculation on a straggler: a clean backup copy launches
+    /// after `detect` seconds and races the dragged original; the round
+    /// pays whichever finishes first. `factor = 1` (no straggle) always
+    /// returns `base` — speculation never slows a healthy rank.
+    pub fn speculate(&self, base: f64, factor: f64, detect: f64) -> f64 {
+        let dragged = base * factor;
+        if self.spec.speculation {
+            dragged.min(detect + base)
+        } else {
+            dragged
+        }
+    }
+
+    /// Per-round latency-jitter multiplier for fixed/network costs.
+    pub fn jitter(&self, round_seed: u64) -> f64 {
+        jitter_mult(self.spec.seed, round_seed, self.spec.jitter)
+    }
+
+    /// The rank whose sub-solve a physical shadow replica covers: the
+    /// first scheduled slowdown's target if any, else the statically
+    /// slowest rank, else the last rank.
+    pub fn speculation_target(&self, k: usize) -> usize {
+        for ev in &self.spec.plan.events {
+            if let FaultKind::Slow(_) = ev.kind {
+                if let Some(w) = ev.worker {
+                    return w;
+                }
+            }
+        }
+        let mut worst = k - 1;
+        let mut worst_speed = 0.0;
+        for (w, &s) in self.speed.iter().enumerate() {
+            if s > worst_speed {
+                worst_speed = s;
+                worst = w;
+            }
+        }
+        worst
+    }
+}
+
+/// Session-side fault schedule: pending deaths fire one per attempt
+/// (cursor-ordered, so a replayed round can itself be killed — "death
+/// during recovery"); slowdowns re-apply on every attempt of their round.
+#[derive(Debug, Clone)]
+pub struct FaultSchedule {
+    deaths: Vec<(usize, usize)>,
+    slows: Vec<(usize, usize, f64)>,
+    /// Deaths fired so far; persisted in checkpoint envelope v5 so a
+    /// resume does not re-fire already-survived faults.
+    pub cursor: usize,
+}
+
+impl FaultSchedule {
+    /// Build from a **bound** plan (every target resolved).
+    pub fn new(plan: &FaultPlan) -> FaultSchedule {
+        let mut deaths = Vec::new();
+        let mut slows = Vec::new();
+        for ev in &plan.events {
+            let w = ev.worker.expect("FaultSchedule needs a bound plan");
+            match ev.kind {
+                FaultKind::Death => deaths.push((ev.round, w)),
+                FaultKind::Slow(f) => slows.push((ev.round, w, f)),
+            }
+        }
+        deaths.sort_by_key(|&(r, _)| r);
+        FaultSchedule {
+            deaths,
+            slows,
+            cursor: 0,
+        }
+    }
+
+    /// The chaos for the next attempt of `round`: the first unfired death
+    /// due at or before this round (deaths scheduled during an earlier
+    /// round's recovery fire on the replay attempt), plus this round's
+    /// slowdowns.
+    pub fn arm(&self, round: usize) -> RoundChaos {
+        let death = self
+            .deaths
+            .get(self.cursor)
+            .filter(|&&(r, _)| r <= round)
+            .map(|&(_, w)| w);
+        let slowdowns = self
+            .slows
+            .iter()
+            .filter(|&&(r, _, _)| r == round)
+            .map(|&(_, w, f)| (w, f))
+            .collect();
+        RoundChaos { death, slowdowns }
+    }
+
+    /// Record that the armed death fired (the attempt was aborted).
+    pub fn fired(&mut self) {
+        self.cursor += 1;
+    }
+
+    /// Number of deaths in the plan — resume clamps its restored cursor
+    /// here so a corrupt checkpoint cannot index past the schedule.
+    pub fn deaths_total(&self) -> usize {
+        self.deaths.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let spec =
+            ChaosSpec::parse("seed=7,het=0.5,jitter=0.1,spec,death@5:1,slow@3:0:10").unwrap();
+        assert_eq!(spec.seed, 7);
+        assert!((spec.het - 0.5).abs() < 1e-15);
+        assert!((spec.jitter - 0.1).abs() < 1e-15);
+        assert!(spec.speculation);
+        assert_eq!(spec.plan.events.len(), 2);
+        assert_eq!(
+            spec.plan.events[0],
+            FaultEvent {
+                round: 5,
+                worker: Some(1),
+                kind: FaultKind::Death
+            }
+        );
+        assert_eq!(
+            spec.plan.events[1],
+            FaultEvent {
+                round: 3,
+                worker: Some(0),
+                kind: FaultKind::Slow(10.0)
+            }
+        );
+    }
+
+    #[test]
+    fn parse_seeded_picks_resolve_at_bind() {
+        let spec = ChaosSpec::parse("death@5,slow@2:4").unwrap();
+        assert_eq!(spec.plan.events[0].worker, None);
+        assert_eq!(spec.plan.events[1].worker, None);
+        let bound = spec.bind(4).unwrap();
+        for ev in &bound.plan.events {
+            assert!(ev.worker.unwrap() < 4);
+        }
+        // Deterministic: binding twice resolves identically.
+        assert_eq!(bound, spec.bind(4).unwrap());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(ChaosSpec::parse("bogus=1").is_err());
+        assert!(ChaosSpec::parse("death@x").is_err());
+        assert!(ChaosSpec::parse("slow@3").is_err());
+        assert!(ChaosSpec::parse("slow@3:1:2:9").is_err());
+        assert!(ChaosSpec::parse("het=fast").is_err());
+    }
+
+    #[test]
+    fn bind_rejects_kill_all_plans() {
+        // Killing all K workers in one round leaves nobody to recover
+        // with — rejected at build time, the chaos-suite edge case.
+        let spec = ChaosSpec::parse("death@2:0,death@2:1").unwrap();
+        let err = spec.bind(2).unwrap_err();
+        assert!(err.contains("kills all"), "{}", err);
+        // The same deaths against a bigger cluster are fine.
+        assert!(spec.bind(3).is_ok());
+        // Duplicate deaths of the SAME rank at one round are not kill-all.
+        let dup = ChaosSpec::parse("death@2:0,death@2:0").unwrap();
+        assert!(dup.bind(2).is_ok());
+    }
+
+    #[test]
+    fn bind_rejects_out_of_range_and_bad_factors() {
+        assert!(ChaosSpec::parse("death@1:5").unwrap().bind(4).is_err());
+        assert!(ChaosSpec::parse("slow@1:0:0.5").unwrap().bind(4).is_err());
+        let mut spec = ChaosSpec::default();
+        spec.het = -1.0;
+        assert!(spec.bind(4).is_err());
+    }
+
+    #[test]
+    fn speed_table_is_seeded_and_bounded() {
+        let a = speed_table(42, 0.5, 8);
+        let b = speed_table(42, 0.5, 8);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&s| (1.0..=1.5).contains(&s)));
+        // Heterogeneous: not all equal.
+        assert!(a.iter().any(|&s| (s - a[0]).abs() > 1e-12));
+        assert_eq!(speed_table(42, 0.0, 8), vec![1.0; 8]);
+        assert_ne!(speed_table(43, 0.5, 8), a);
+    }
+
+    #[test]
+    fn jitter_is_seeded_and_bounded() {
+        let j = jitter_mult(7, 1234, 0.25);
+        assert_eq!(j, jitter_mult(7, 1234, 0.25));
+        assert!((1.0..=1.25).contains(&j));
+        assert_ne!(j, jitter_mult(7, 1235, 0.25));
+        assert_eq!(jitter_mult(7, 1234, 0.0), 1.0);
+    }
+
+    #[test]
+    fn runtime_factors_combine_het_and_slowdowns() {
+        let spec = ChaosSpec::parse("het=0.5,slow@3:1:10").unwrap().bind(4).unwrap();
+        let mut rt = ChaosRuntime::new(spec, 4);
+        let rc = RoundChaos {
+            death: None,
+            slowdowns: vec![(1, 10.0)],
+        };
+        let f1 = rt.factor(&rc, 1);
+        assert!((f1 / rt.speed[1] - 10.0).abs() < 1e-12);
+        assert_eq!(rt.factor(&rc, 0), rt.speed[0]);
+        // arm/take round-trips and clears.
+        rt.arm(rc.clone());
+        assert_eq!(rt.take(), rc);
+        assert!(rt.take().is_quiet());
+    }
+
+    #[test]
+    fn speculation_wins_races_and_never_hurts() {
+        let spec = ChaosSpec::parse("spec").unwrap().bind(2).unwrap();
+        let rt = ChaosRuntime::new(spec, 2);
+        // Straggler: backup (detect + clean) beats the 10x drag.
+        assert!((rt.speculate(1.0, 10.0, 0.1) - 1.1).abs() < 1e-12);
+        // Mild drag: original wins the race.
+        assert!((rt.speculate(1.0, 1.05, 0.5) - 1.05).abs() < 1e-12);
+        // Healthy rank: exactly base.
+        assert_eq!(rt.speculate(1.0, 1.0, 0.1), 1.0);
+        // Speculation off: full drag.
+        let off = ChaosRuntime::new(ChaosSpec::default().bind(2).unwrap(), 2);
+        assert_eq!(off.speculate(1.0, 10.0, 0.1), 10.0);
+    }
+
+    #[test]
+    fn schedule_fires_deaths_one_per_attempt() {
+        // Two deaths at the same round on different ranks: the first
+        // fires on attempt one, the second on the recovery replay —
+        // "death during recovery".
+        let spec = ChaosSpec::parse("death@2:0,death@2:1,slow@2:2:3")
+            .unwrap()
+            .bind(4)
+            .unwrap();
+        let mut sched = FaultSchedule::new(&spec.plan);
+        assert!(sched.arm(0).is_quiet());
+        assert!(sched.arm(1).is_quiet());
+        let a1 = sched.arm(2);
+        assert_eq!(a1.death, Some(0));
+        assert_eq!(a1.slowdowns, vec![(2, 3.0)]);
+        sched.fired();
+        let a2 = sched.arm(2);
+        assert_eq!(a2.death, Some(1));
+        assert_eq!(a2.slowdowns, vec![(2, 3.0)]);
+        sched.fired();
+        let a3 = sched.arm(2);
+        assert_eq!(a3.death, None);
+        assert_eq!(a3.slowdowns, vec![(2, 3.0)]);
+        assert!(sched.arm(3).is_quiet());
+    }
+
+    #[test]
+    fn schedule_death_at_round_zero() {
+        let spec = ChaosSpec::parse("death@0:1").unwrap().bind(2).unwrap();
+        let mut sched = FaultSchedule::new(&spec.plan);
+        assert_eq!(sched.arm(0).death, Some(1));
+        sched.fired();
+        assert!(sched.arm(0).is_quiet());
+    }
+
+    #[test]
+    fn schedule_cursor_resumes_past_fired_deaths() {
+        let spec = ChaosSpec::parse("death@1:0,death@4:1").unwrap().bind(2).unwrap();
+        let mut sched = FaultSchedule::new(&spec.plan);
+        sched.cursor = 1; // checkpoint recorded the round-1 death as fired
+        assert!(sched.arm(1).is_quiet());
+        assert_eq!(sched.arm(4).death, Some(1));
+    }
+
+    #[test]
+    fn simultaneous_death_and_slowdown_on_same_rank() {
+        let spec = ChaosSpec::parse("death@3:1,slow@3:1:5").unwrap().bind(4).unwrap();
+        let sched = FaultSchedule::new(&spec.plan);
+        let rc = sched.arm(3);
+        assert_eq!(rc.death, Some(1));
+        assert_eq!(rc.slowdowns, vec![(1, 5.0)]);
+    }
+
+    #[test]
+    fn speculation_target_prefers_scheduled_straggler() {
+        let spec = ChaosSpec::parse("spec,slow@4:2:10").unwrap().bind(4).unwrap();
+        assert_eq!(ChaosRuntime::new(spec, 4).speculation_target(4), 2);
+        // No slow event: the statically slowest rank.
+        let het = ChaosSpec::parse("spec,het=0.5").unwrap().bind(4).unwrap();
+        let rt = ChaosRuntime::new(het, 4);
+        let target = rt.speculation_target(4);
+        for &s in &rt.speed {
+            assert!(rt.speed[target] >= s);
+        }
+    }
+
+    #[test]
+    fn quiet_spec_detection() {
+        assert!(ChaosSpec::default().is_quiet());
+        assert!(!ChaosSpec::parse("het=0.1").unwrap().is_quiet());
+        assert!(!ChaosSpec::parse("death@1").unwrap().is_quiet());
+    }
+}

@@ -17,6 +17,7 @@
 //! byte-cost cutover rule of DESIGN.md §7, and the overhead model is
 //! charged the actual encoded bytes.
 
+pub mod chaos;
 pub mod mpi;
 pub mod param_server;
 pub mod overhead;
@@ -102,6 +103,13 @@ pub trait DistEngine {
 
     /// Virtual time consumed so far.
     fn clock(&self) -> f64;
+
+    /// Arm the chaos for the next `run_round` attempt (DESIGN.md §12):
+    /// the session-side fault schedule decides *what* fires each attempt;
+    /// the engine decides *how* — physically (threads) or on the cost
+    /// model (virtual engines). Default: ignore chaos entirely, so
+    /// engines without a chaos path stay untouched.
+    fn arm_chaos(&mut self, _rc: chaos::RoundChaos) {}
 }
 
 /// Scatter a global α into per-worker vectors by their global column ids
@@ -206,6 +214,12 @@ pub struct EngineOptions {
     /// subproblem). An explicit `Engine::Threads { t, .. } > 0` wins over
     /// this field.
     pub threads_per_worker: usize,
+    /// Bound chaos spec (DESIGN.md §12): per-worker heterogeneity,
+    /// latency jitter, speculation, and the fault schedule. Set by the
+    /// session builder (which binds and validates the spec against the
+    /// worker count); engines build their [`chaos::ChaosRuntime`] from
+    /// it. `None` = the chaos layer is entirely inert.
+    pub chaos: Option<chaos::ChaosSpec>,
 }
 
 impl Default for EngineOptions {
@@ -219,6 +233,7 @@ impl Default for EngineOptions {
             torrent_broadcast: false,
             dense_frames: false,
             threads_per_worker: 1,
+            chaos: None,
         }
     }
 }

@@ -14,6 +14,7 @@
 
 use std::time::Instant;
 
+use super::chaos::{ChaosRuntime, RoundChaos};
 use super::overhead::OverheadModel;
 use super::{DistEngine, EngineOptions, RoundTiming, WorkerSet};
 use crate::config::{Impl, TrainConfig};
@@ -48,6 +49,9 @@ pub struct MpiEngine {
     sigma: f64,
     b: Vec<f64>,
     m: usize,
+    /// Chaos layer (DESIGN.md §12): heterogeneity/jitter/faults on the
+    /// modeled costs. `None` = inert.
+    chaos: Option<ChaosRuntime>,
 }
 
 impl MpiEngine {
@@ -99,6 +103,7 @@ impl MpiEngine {
             sigma: cfg.sigma_t(t),
             b: ds.b.clone(),
             m: ds.m(),
+            chaos: None,
         }
     }
 
@@ -119,6 +124,7 @@ impl MpiEngine {
         if opts.dense_frames {
             eng.force_dense_frames();
         }
+        eng.chaos = ChaosRuntime::from_opts(opts, cfg.workers);
         eng
     }
 
@@ -165,16 +171,31 @@ impl DistEngine for MpiEngine {
         self.clock.now()
     }
 
+    fn arm_chaos(&mut self, rc: RoundChaos) {
+        if let Some(c) = self.chaos.as_mut() {
+            c.arm(rc);
+        }
+    }
+
     fn run_round(&mut self, v: &[f64], h: usize, round_seed: u64) -> (Vec<f64>, RoundTiming) {
         let t = self.t;
         let k = self.num_workers();
         let n_shards = self.ws.data.len();
+        let rc = match self.chaos.as_mut() {
+            Some(c) => c.take(),
+            None => RoundChaos::default(),
+        };
 
         // ---- 1. local solves (each rank runs t sub-solvers; measured) ----
         // Sub-shard g of the nested layout is rank g of the flat K·t ring:
         // same seed, same σ′ (= γ·K·t), same columns ⇒ same bits.
         let mut sub_computes = vec![0.0; n_shards];
         for g in 0..n_shards {
+            // An armed death: the doomed rank's sub-solves never complete
+            // and nothing of this attempt commits — skip them entirely.
+            if rc.death == Some(g / t) {
+                continue;
+            }
             let req = SolveRequest {
                 v,
                 b: &self.b,
@@ -199,7 +220,35 @@ impl DistEngine for MpiEngine {
         for w in 0..k {
             computes[w] = sub_computes[w * t..(w + 1) * t].iter().sum::<f64>() / self.speedup;
         }
+        // Chaos (DESIGN.md §12): static heterogeneity × armed slowdowns on
+        // each rank's compute; with speculation a clean backup copy races
+        // the straggler (min rule). Timing only — the bits are untouched.
+        if let Some(cr) = &self.chaos {
+            let detect = self.model.fault_detect();
+            for (w, c) in computes.iter_mut().enumerate() {
+                *c = cr.speculate(*c, cr.factor(&rc, w), detect);
+            }
+        }
         let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
+
+        // Armed death: the round aborts with nothing committed — no α
+        // update, no reduce. Survivors' compute is spent, the coordinator
+        // pays detection + respawn, and the session replays the round from
+        // its recovery snapshot.
+        if rc.death.is_some() {
+            let t_fault = self.model.fault_detect() + self.model.respawn();
+            let wall = t_worker + t_fault;
+            self.clock.advance(wall);
+            let timing = RoundTiming {
+                t_worker,
+                t_master: 0.0,
+                t_overhead: t_fault,
+                worker_compute: computes,
+                bytes_up: 0,
+                bytes_down: 0,
+            };
+            return (vec![0.0; self.m], timing);
+        }
 
         // ---- 2. AllReduce of Δv (tree) + barrier --------------------------
         // Real aggregation: the log₂(K) pairwise tree the cost model below
@@ -243,8 +292,11 @@ impl DistEngine for MpiEngine {
         // at most max(rank frames, merged frame), the broadcast waves the
         // merged frame — charge the tree with the larger (conservative).
         let payload = rank_payload_max.max(down_payload);
-        let t_allreduce = self.model.cluster.tree_allreduce(payload, k);
-        let t_barrier = self.model.mpi_barrier();
+        // Per-round latency jitter (chaos layer) on the collective's
+        // latency terms; exactly 1.0 without chaos.
+        let jm = self.chaos.as_ref().map(|c| c.jitter(round_seed)).unwrap_or(1.0);
+        let t_allreduce = self.model.cluster.jittered(jm).tree_allreduce(payload, k);
+        let t_barrier = self.model.mpi_barrier() * jm;
 
         let wall = t_worker + t_allreduce + t_barrier + t_master;
         self.clock.advance(wall);
@@ -390,6 +442,105 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "k={} t={}", k, t);
             }
         }
+    }
+
+    fn chaos_engine(spec: &str) -> MpiEngine {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 4;
+        let parts = Partitioning::build(Partitioner::BalancedNnz, &ds.a, 4, 0);
+        let tau = super::super::overhead::auto_time_scale(ds.m(), ds.n());
+        let model = OverheadModel::paper_defaults(crate::simnet::ClusterModel::paper_testbed(tau));
+        let opts = EngineOptions {
+            chaos: Some(
+                crate::framework::chaos::ChaosSpec::parse(spec)
+                    .unwrap()
+                    .bind(4)
+                    .unwrap(),
+            ),
+            ..Default::default()
+        };
+        MpiEngine::new_with(&ds, &parts, &cfg, model, &opts)
+    }
+
+    #[test]
+    fn chaos_perturbs_time_never_bits() {
+        // Heterogeneity, jitter, and slowdowns only touch the virtual
+        // clock: Δv stays bit-identical to the chaos-free engine.
+        let (ds, mut clean) = engine();
+        let mut chaotic = chaos_engine("het=0.5,jitter=0.3");
+        let mut v1 = vec![0.0; ds.m()];
+        let mut v2 = vec![0.0; ds.m()];
+        for round in 0..3 {
+            chaotic.arm_chaos(RoundChaos {
+                death: None,
+                slowdowns: vec![(1, 8.0)],
+            });
+            let (dv1, _) = clean.run_round(&v1, 16, round);
+            let (dv2, t2) = chaotic.run_round(&v2, 16, round);
+            for (a, b) in dv1.iter().zip(dv2.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "round {}", round);
+            }
+            assert!(t2.wall() > 0.0);
+            linalg::add_assign(&mut v1, &dv1);
+            linalg::add_assign(&mut v2, &dv2);
+        }
+        assert_eq!(clean.alpha_global(), chaotic.alpha_global());
+    }
+
+    #[test]
+    fn chaos_slowdown_drags_the_armed_rank() {
+        // A 1000x slowdown on rank 1 must dominate its quiet-round compute
+        // (same engine, so measured base times are comparable; the wide
+        // margin absorbs measurement noise).
+        let mut eng = chaos_engine("");
+        let v0 = vec![0.0; eng.m];
+        let (_, quiet) = eng.run_round(&v0, 16, 0);
+        eng.arm_chaos(RoundChaos {
+            death: None,
+            slowdowns: vec![(1, 1000.0)],
+        });
+        let (_, dragged) = eng.run_round(&v0, 16, 1);
+        assert!(
+            dragged.worker_compute[1] > 30.0 * quiet.worker_compute[1],
+            "dragged {} !>> quiet {}",
+            dragged.worker_compute[1],
+            quiet.worker_compute[1]
+        );
+    }
+
+    #[test]
+    fn chaos_death_aborts_commit_and_replay_matches_clean() {
+        let (ds, mut clean) = engine();
+        let mut chaotic = chaos_engine("het=0.2");
+        let mut v1 = vec![0.0; ds.m()];
+        let mut v2 = vec![0.0; ds.m()];
+        // Round 0 completes on both.
+        let (dv1, _) = clean.run_round(&v1, 16, 0);
+        let (dv2, _) = chaotic.run_round(&v2, 16, 0);
+        linalg::add_assign(&mut v1, &dv1);
+        linalg::add_assign(&mut v2, &dv2);
+        let alpha_before = chaotic.alpha_global();
+        // Round 1 attempt: rank 2 dies — zeros back, nothing committed,
+        // the coordinator is charged detect + respawn.
+        chaotic.arm_chaos(RoundChaos {
+            death: Some(2),
+            slowdowns: vec![],
+        });
+        let clock_before = chaotic.clock();
+        let (dv_dead, t_dead) = chaotic.run_round(&v2, 16, 1);
+        assert!(dv_dead.iter().all(|&x| x == 0.0));
+        assert_eq!(chaotic.alpha_global(), alpha_before);
+        assert!(t_dead.t_overhead > 0.0);
+        assert!(chaotic.clock() > clock_before);
+        // Replay of round 1 (same seed, restored state) matches the
+        // uninterrupted engine bit-for-bit.
+        let (dv1b, _) = clean.run_round(&v1, 16, 1);
+        let (dv2b, _) = chaotic.run_round(&v2, 16, 1);
+        for (a, b) in dv1b.iter().zip(dv2b.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(clean.alpha_global(), chaotic.alpha_global());
     }
 
     #[test]

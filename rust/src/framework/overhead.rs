@@ -89,6 +89,14 @@ pub struct OverheadModel {
     /// Synchronization barrier per collective.
     pub mpi_barrier_s: f64,
 
+    // --- fault handling (chaos layer, DESIGN.md §12) ---
+    /// Time for the coordinator to notice a dead worker (missed heartbeat
+    /// / broken connection). Also the launch delay of a speculative
+    /// backup copy.
+    pub fault_detect_s: f64,
+    /// Time to respawn a worker process and reload its shards.
+    pub respawn_s: f64,
+
     // --- multi-core workers (nested parallelism, DESIGN.md §10) ---
     /// Serial/contention fraction of one worker's compute when `t` local
     /// sub-solvers share its cores (memory-bandwidth pressure on the
@@ -116,6 +124,8 @@ impl OverheadModel {
             record_iter_python_s: 5e-6,
             pyc_call_s: 100e-6,
             mpi_barrier_s: 30e-6,
+            fault_detect_s: 100e-3,
+            respawn_s: 1.0,
             intra_worker_serial_frac: 0.05,
         }
     }
@@ -187,6 +197,18 @@ impl OverheadModel {
         self.mpi_barrier_s * self.tau()
     }
 
+    // -- fault handling (chaos layer, DESIGN.md §12) --
+
+    /// Detection delay for a dead or straggling worker (fixed cost, τ-scaled).
+    pub fn fault_detect(&self) -> f64 {
+        self.fault_detect_s * self.tau()
+    }
+
+    /// Worker respawn + shard reload (fixed cost, τ-scaled).
+    pub fn respawn(&self) -> f64 {
+        self.respawn_s * self.tau()
+    }
+
     // -- multi-core workers --
 
     /// Modeled speedup of one worker's local compute when `t` sub-solvers
@@ -255,6 +277,17 @@ mod tests {
         assert!(m.mpi_barrier() < m.spark_stage() / 100.0);
         // Python-C crossing costs more than JNI
         assert!(m.pyc_call() > m.jni_call());
+    }
+
+    #[test]
+    fn fault_costs_scale_with_tau_and_dominate_a_round() {
+        let m1 = model(1.0);
+        let m2 = model(0.5);
+        assert!((m2.fault_detect() - 0.5 * m1.fault_detect()).abs() < 1e-12);
+        assert!((m2.respawn() - 0.5 * m1.respawn()).abs() < 1e-12);
+        // Losing a worker costs far more than a round's fixed overhead —
+        // the reason mid-round recovery is worth modeling at all.
+        assert!(m1.fault_detect() + m1.respawn() > 10.0 * m1.spark_stage());
     }
 
     #[test]

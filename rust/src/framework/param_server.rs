@@ -25,6 +25,7 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use super::chaos::{ChaosRuntime, RoundChaos};
 use super::overhead::OverheadModel;
 use super::{DistEngine, Engine, EngineOptions, RoundTiming, WorkerSet};
 use crate::config::{Impl, TrainConfig};
@@ -61,6 +62,8 @@ pub struct ParamServerEngine {
     sigma: f64,
     b: Vec<f64>,
     m: usize,
+    /// Chaos layer (DESIGN.md §12): heterogeneity, jitter, faults.
+    chaos: Option<ChaosRuntime>,
 }
 
 impl ParamServerEngine {
@@ -104,6 +107,7 @@ impl ParamServerEngine {
             sigma: cfg.sigma_t(t),
             b: ds.b.clone(),
             m: ds.m(),
+            chaos: ChaosRuntime::from_opts(opts, cfg.workers),
             ws,
         }
     }
@@ -146,27 +150,42 @@ impl DistEngine for ParamServerEngine {
         self.clock.now()
     }
 
+    fn arm_chaos(&mut self, rc: RoundChaos) {
+        if let Some(c) = self.chaos.as_mut() {
+            c.arm(rc);
+        }
+    }
+
     fn run_round(&mut self, v: &[f64], h: usize, round_seed: u64) -> (Vec<f64>, RoundTiming) {
         let t = self.t;
         let k = self.num_workers();
         let n_shards = self.ws.data.len();
-
-        // Record the fresh coordinator view, then read the one `staleness`
-        // rounds old (ring recycles the evicted buffer).
-        let mut snap = if self.history.len() > self.staleness {
-            self.history.pop_back().unwrap()
-        } else {
-            Vec::with_capacity(self.m)
+        let rc = match self.chaos.as_mut() {
+            Some(c) => c.take(),
+            None => RoundChaos::default(),
         };
-        snap.clear();
-        snap.extend_from_slice(v);
-        self.history.push_front(snap);
-        let view = &self.history[self.staleness.min(self.history.len() - 1)];
+        let jm = self.chaos.as_ref().map(|c| c.jitter(round_seed)).unwrap_or(1.0);
+
+        // Read the view `staleness` rounds old. The fresh view is recorded
+        // into the ring only when the round COMMITS (below), so a chaos-
+        // aborted attempt leaves the ring exactly as it found it and the
+        // replay sees the same stale views as an uninterrupted run. The
+        // indexing is equivalent to pushing v first and reading entry
+        // `staleness` of the grown ring.
+        let view: &[f64] = if self.staleness == 0 || self.history.is_empty() {
+            v
+        } else {
+            &self.history[(self.staleness - 1).min(self.history.len() - 1)]
+        };
 
         // ---- 1. local solves against the (possibly stale) view ----------
         // Sub-shard g is rank g of the flat K·t ring (seed, σ′, columns).
+        // A dead rank's sub-solves never happen.
         let mut sub_computes = vec![0.0; n_shards];
         for g in 0..n_shards {
+            if rc.death == Some(g / t) {
+                continue;
+            }
             let req = SolveRequest {
                 v: view,
                 b: &self.b,
@@ -189,7 +208,44 @@ impl DistEngine for ParamServerEngine {
         for w in 0..k {
             computes[w] = sub_computes[w * t..(w + 1) * t].iter().sum::<f64>() / self.speedup;
         }
+        // Chaos (DESIGN.md §12): heterogeneity / armed slowdowns drag each
+        // rank's push; speculation races a clean backup against the drag.
+        if let Some(cr) = &self.chaos {
+            let detect = self.model.fault_detect();
+            for (w, c) in computes.iter_mut().enumerate() {
+                *c = cr.speculate(*c, cr.factor(&rc, w), detect);
+            }
+        }
         let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
+        // Armed death: the server times out waiting on the dead worker's
+        // push and the round aborts with nothing committed — no damping,
+        // no α update, no ring push. The session replays from its
+        // snapshot; the replay reads the same stale views as a clean run.
+        if rc.death.is_some() {
+            let t_fault = self.model.fault_detect() + self.model.respawn();
+            let wall = t_worker + t_fault;
+            self.clock.advance(wall);
+            let timing = RoundTiming {
+                t_worker,
+                t_master: 0.0,
+                t_overhead: t_fault,
+                worker_compute: computes,
+                bytes_up: 0,
+                bytes_down: 0,
+            };
+            return (vec![0.0; self.m], timing);
+        }
+
+        // Commit path: record the fresh coordinator view (ring recycles
+        // the evicted buffer).
+        let mut snap = if self.history.len() > self.staleness {
+            self.history.pop_back().unwrap()
+        } else {
+            Vec::with_capacity(self.m)
+        };
+        snap.clear();
+        snap.extend_from_slice(v);
+        self.history.push_front(snap);
 
         // ---- 2. damped pushes + server-side tree reduce ------------------
         // Damping is skipped entirely at staleness 0 so the synchronous
@@ -233,8 +289,9 @@ impl DistEngine for ParamServerEngine {
         // its entire pitch (§1) — so overhead is pure transfer.
         let bytes_up: u64 = up_per_worker.iter().sum();
         let bytes_down = (self.m * 8 * k) as u64;
-        let t_push = self.model.cluster.star_varied(&up_per_worker);
-        let t_pull = self.model.cluster.star_broadcast((self.m * 8) as u64, k);
+        let net = self.model.cluster.jittered(jm);
+        let t_push = net.star_varied(&up_per_worker);
+        let t_pull = net.star_broadcast((self.m * 8) as u64, k);
 
         let wall = t_worker + t_master + t_push + t_pull;
         self.clock.advance(wall);
@@ -560,6 +617,56 @@ mod tests {
         let f0 = cfg.problem.primal(&ds, &zero);
         let f = cfg.problem.primal(&ds, &stale.alpha_global());
         assert!(f < f0, "{} !< {}", f, f0);
+    }
+
+    #[test]
+    fn chaos_death_leaves_stale_ring_consistent() {
+        // The hard case: staleness > 0. A death-aborted attempt must leave
+        // the view ring untouched, so the replayed trajectory stays
+        // bit-identical to an uninterrupted stale run.
+        let (ds, cfg, parts) = setup();
+        let opts = EngineOptions {
+            chaos: Some(
+                crate::framework::chaos::ChaosSpec::parse("het=0.4,jitter=0.2")
+                    .unwrap()
+                    .bind(4)
+                    .unwrap(),
+            ),
+            ..Default::default()
+        };
+        let mut clean =
+            ParamServerEngine::new(&ds, &parts, &cfg, default_model(), 2, &EngineOptions::default());
+        let mut chaotic = ParamServerEngine::new(&ds, &parts, &cfg, default_model(), 2, &opts);
+        let mut v1 = vec![0.0; ds.m()];
+        let mut v2 = vec![0.0; ds.m()];
+        for round in 0..4 {
+            if round == 2 {
+                // Failed attempt first: worker 1 dies, nothing commits.
+                let alpha_before = chaotic.alpha_global();
+                let ring_before = chaotic.history.clone();
+                chaotic.arm_chaos(RoundChaos {
+                    death: Some(1),
+                    slowdowns: vec![(3, 7.0)],
+                });
+                let (dvd, td) = chaotic.run_round(&v2, 30, round);
+                assert!(dvd.iter().all(|&x| x == 0.0));
+                assert_eq!(chaotic.alpha_global(), alpha_before);
+                assert_eq!(chaotic.history, ring_before);
+                assert_eq!(td.bytes_up, 0);
+            }
+            let (dv1, _) = clean.run_round(&v1, 30, round);
+            let (dv2, _) = chaotic.run_round(&v2, 30, round);
+            for (a, b) in dv1.iter().zip(dv2.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "round {}", round);
+            }
+            linalg::add_assign(&mut v1, &dv1);
+            linalg::add_assign(&mut v2, &dv2);
+        }
+        let a1 = clean.alpha_global();
+        let a2 = chaotic.alpha_global();
+        for (x, y) in a1.iter().zip(a2.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

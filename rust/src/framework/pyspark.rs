@@ -17,6 +17,7 @@ use std::cell::RefCell;
 use std::rc::Rc;
 use std::time::Instant;
 
+use super::chaos::{ChaosRuntime, RoundChaos};
 use super::overhead::OverheadModel;
 use super::rdd::{Rdd, SparkContext};
 use super::serialization::{pickle_encoded_len, pickle_sparse_cutover, PickleSer};
@@ -59,6 +60,8 @@ pub struct PySparkEngine {
     /// feeding the sparse-aware reduction tree; arenas persist.
     slots: Vec<DeltaSlot>,
     reducer: DeltaReducer,
+    /// Chaos layer (DESIGN.md §12): heterogeneity, jitter, faults.
+    chaos: Option<ChaosRuntime>,
 }
 
 impl PySparkEngine {
@@ -169,6 +172,7 @@ impl PySparkEngine {
                     pickle_sparse_cutover(ds.m())
                 },
             ),
+            chaos: ChaosRuntime::from_opts(&opts, k),
         }
     }
 
@@ -213,8 +217,21 @@ impl DistEngine for PySparkEngine {
         self.clock.now()
     }
 
+    fn arm_chaos(&mut self, rc: RoundChaos) {
+        if let Some(c) = self.chaos.as_mut() {
+            c.arm(rc);
+        }
+    }
+
     fn run_round(&mut self, v: &[f64], h: usize, round_seed: u64) -> (Vec<f64>, RoundTiming) {
         let k = self.num_workers();
+        let rc = match self.chaos.as_mut() {
+            Some(c) => c.take(),
+            None => RoundChaos::default(),
+        };
+        // Per-round latency jitter on fixed/network costs; exactly 1.0
+        // without chaos.
+        let jm = self.chaos.as_ref().map(|c| c.jitter(round_seed)).unwrap_or(1.0);
 
         // ---- 1. python driver → JVM → workers ---------------------------
         // The shared vector is pickled by the python driver, crosses py4j,
@@ -242,7 +259,7 @@ impl DistEngine for PySparkEngine {
         let t_driver_down = self.model.numpy_pickle(bytes_down)
             + self.model.py4j_roundtrip()
             + self.model.java_ser(bytes_down);
-        let t_net_down = self.model.cluster.star_varied(&down_per_worker);
+        let t_net_down = self.model.cluster.jittered(jm).star_varied(&down_per_worker);
         self.frame_pool.put(v_frame);
 
         // ---- 2. the stage -------------------------------------------------
@@ -342,12 +359,47 @@ impl DistEngine for PySparkEngine {
                 + self.model.numpy_pickle(up);
         }
         self.frame_pool.put(up_frame);
+
+        // Chaos (DESIGN.md §12): heterogeneity / armed slowdowns drag each
+        // rank's compute component; speculation races a clean backup
+        // against the dragged original and pays the winner.
+        if let Some(cr) = &self.chaos {
+            let detect = self.model.fault_detect();
+            for w in 0..k {
+                let sped = cr.speculate(computes[w], cr.factor(&rc, w), detect);
+                task_times[w] += sped - computes[w];
+                computes[w] = sped;
+            }
+        }
+        // Armed death: the dead rank's task never reports. The stage
+        // aborts after the surviving tasks plus failure detection and
+        // executor respawn — *nothing* reaches the α commit below, so the
+        // session replays this round from its snapshot bit-exactly.
+        if let Some(dead) = rc.death {
+            computes[dead] = 0.0;
+            task_times[dead] = 0.0;
+            let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
+            let t_tasks = task_times.iter().cloned().fold(0.0f64, f64::max);
+            let t_fault = self.model.fault_detect() + self.model.respawn();
+            let wall =
+                self.model.spark_stage() * jm + t_driver_down + t_net_down + t_tasks + t_fault;
+            self.clock.advance(wall);
+            let timing = RoundTiming {
+                t_worker,
+                t_master: 0.0,
+                t_overhead: (wall - t_worker).max(0.0),
+                worker_compute: computes,
+                bytes_up: 0,
+                bytes_down,
+            };
+            return (vec![0.0; self.m], timing);
+        }
         let bytes_up: u64 = up_per_worker.iter().sum();
         let t_tasks_max = task_times.iter().cloned().fold(0.0f64, f64::max);
         let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
 
         // ---- 4. gather + python-driver aggregate --------------------------
-        let t_net_up = self.model.cluster.star_varied(&up_per_worker);
+        let t_net_up = self.model.cluster.jittered(jm).star_varied(&up_per_worker);
         let t_driver_up = self.model.java_deser(bytes_up)
             + self.model.py4j_roundtrip()
             + self.model.numpy_pickle(bytes_up);
@@ -368,7 +420,7 @@ impl DistEngine for PySparkEngine {
         let t_master = t0.elapsed().as_secs_f64();
 
         // ---- 5. compose ----------------------------------------------------
-        let wall = self.model.spark_stage()
+        let wall = self.model.spark_stage() * jm
             + t_driver_down
             + t_net_down
             + t_tasks_max
@@ -418,6 +470,47 @@ mod tests {
             assert!((a - b).abs() < 1e-9);
         }
         assert!(timing.t_overhead > 0.0);
+    }
+
+    #[test]
+    fn chaos_death_discards_round_and_replay_matches_clean() {
+        let (ds, mut clean) = engine(Impl::PySparkCOpt);
+        let ds2 = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds2);
+        cfg.workers = 4;
+        let parts = Partitioning::build(Partitioner::Range, &ds2.a, 4, 0);
+        let tau = crate::framework::overhead::auto_time_scale(ds2.m(), ds2.n());
+        let model = OverheadModel::paper_defaults(crate::simnet::ClusterModel::paper_testbed(tau));
+        let opts = EngineOptions {
+            chaos: Some(
+                crate::framework::chaos::ChaosSpec::parse("het=0.3,jitter=0.2")
+                    .unwrap()
+                    .bind(4)
+                    .unwrap(),
+            ),
+            ..Default::default()
+        };
+        let mut chaotic = PySparkEngine::new(Impl::PySparkCOpt, &ds2, &parts, &cfg, model, opts);
+        let v0 = vec![0.0; ds.m()];
+        // Attempt with a death: zeros back, α untouched, clock charged.
+        let alpha_before = chaotic.alpha_global();
+        chaotic.arm_chaos(RoundChaos {
+            death: Some(3),
+            slowdowns: vec![(1, 6.0)],
+        });
+        let (dv_dead, t_dead) = chaotic.run_round(&v0, 40, 1);
+        assert!(dv_dead.iter().all(|&x| x == 0.0));
+        assert_eq!(chaotic.alpha_global(), alpha_before);
+        assert_eq!(t_dead.bytes_up, 0);
+        assert!(t_dead.worker_compute[3] == 0.0);
+        assert!(chaotic.clock() > 0.0);
+        // Replay (quiet attempt) matches the chaos-free engine bit-exactly.
+        let (dv1, _) = clean.run_round(&v0, 40, 1);
+        let (dv2, _) = chaotic.run_round(&v0, 40, 1);
+        for (a, b) in dv1.iter().zip(dv2.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(clean.alpha_global(), chaotic.alpha_global());
     }
 
     #[test]

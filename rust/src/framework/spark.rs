@@ -18,6 +18,7 @@ use std::cell::RefCell;
 use std::rc::Rc;
 use std::time::Instant;
 
+use super::chaos::{ChaosRuntime, RoundChaos};
 use super::overhead::OverheadModel;
 use super::rdd::{Rdd, SparkContext};
 use super::serialization::{java_encoded_len, java_sparse_cutover, JavaSer};
@@ -71,6 +72,8 @@ pub struct SparkEngine {
     /// feeding the sparse-aware reduction tree; arenas persist.
     slots: Vec<DeltaSlot>,
     reducer: DeltaReducer,
+    /// Chaos layer (DESIGN.md §12): heterogeneity, jitter, faults.
+    chaos: Option<ChaosRuntime>,
 }
 
 impl SparkEngine {
@@ -210,6 +213,7 @@ impl SparkEngine {
                     java_sparse_cutover(ds.m())
                 },
             ),
+            chaos: ChaosRuntime::from_opts(&opts, k),
         }
     }
 
@@ -254,9 +258,22 @@ impl DistEngine for SparkEngine {
         self.clock.now()
     }
 
+    fn arm_chaos(&mut self, rc: RoundChaos) {
+        if let Some(c) = self.chaos.as_mut() {
+            c.arm(rc);
+        }
+    }
+
     fn run_round(&mut self, v: &[f64], h: usize, round_seed: u64) -> (Vec<f64>, RoundTiming) {
         let k = self.num_workers();
         let mllib = self.imp == Impl::MllibSgd;
+        let rc = match self.chaos.as_mut() {
+            Some(c) => c.take(),
+            None => RoundChaos::default(),
+        };
+        // Per-round latency jitter on fixed/network costs; exactly 1.0
+        // without chaos.
+        let jm = self.chaos.as_ref().map(|c| c.jitter(round_seed)).unwrap_or(1.0);
 
         // ---- 1. Driver: serialize + broadcast shared state --------------
         // Real encode (byte counts + integrity), modeled time. The frame
@@ -286,9 +303,9 @@ impl DistEngine for SparkEngine {
         let t_net_down = if self.torrent {
             // Torrent: one (max-size) payload spreads peer-to-peer.
             let max_bytes = down_per_worker.iter().copied().max().unwrap_or(0);
-            self.model.cluster.torrent_broadcast(max_bytes, k)
+            self.model.cluster.jittered(jm).torrent_broadcast(max_bytes, k)
         } else {
-            self.model.cluster.star_varied(&down_per_worker)
+            self.model.cluster.jittered(jm).star_varied(&down_per_worker)
         };
         self.frame_pool.put(v_frame);
 
@@ -398,12 +415,51 @@ impl DistEngine for SparkEngine {
                 + self.model.java_ser(up);
         }
         self.frame_pool.put(up_frame);
+
+        // Chaos (DESIGN.md §12): heterogeneity / armed slowdowns drag each
+        // rank's compute component; speculation races a clean backup
+        // against the dragged original and pays the winner.
+        if let Some(cr) = &self.chaos {
+            let detect = self.model.fault_detect();
+            for w in 0..k {
+                let sped = cr.speculate(computes[w], cr.factor(&rc, w), detect);
+                task_times[w] += sped - computes[w];
+                computes[w] = sped;
+            }
+        }
+        // Armed death: the dead rank's task never reports. The stage
+        // aborts after the surviving tasks plus failure detection and
+        // executor respawn — *nothing* reaches the α commit below, so the
+        // session replays this round from its snapshot bit-exactly.
+        if let Some(dead) = rc.death {
+            computes[dead] = 0.0;
+            task_times[dead] = 0.0;
+            let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
+            let t_tasks = task_times.iter().cloned().fold(0.0f64, f64::max);
+            let t_fault = self.model.fault_detect() + self.model.respawn();
+            let wall = self.model.spark_stage() * jm
+                + self.extra_round_fixed
+                + t_ser_driver
+                + t_net_down
+                + t_tasks
+                + t_fault;
+            self.clock.advance(wall);
+            let timing = RoundTiming {
+                t_worker,
+                t_master: 0.0,
+                t_overhead: (wall - t_worker).max(0.0),
+                worker_compute: computes,
+                bytes_up: 0,
+                bytes_down,
+            };
+            return (vec![0.0; self.m], timing);
+        }
         let bytes_up: u64 = up_per_worker.iter().sum();
         let t_tasks_max = task_times.iter().cloned().fold(0.0f64, f64::max);
         let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
 
         // ---- 4. Gather + driver aggregate --------------------------------
-        let t_net_up = self.model.cluster.star_varied(&up_per_worker);
+        let t_net_up = self.model.cluster.jittered(jm).star_varied(&up_per_worker);
         let t_deser_driver = self.model.java_deser(bytes_up);
 
         // Driver reduce: the cross-rank pairs of the same flat tree every
@@ -424,7 +480,7 @@ impl DistEngine for SparkEngine {
         let t_master = t0.elapsed().as_secs_f64();
 
         // ---- 5. Compose the round on the virtual clock -------------------
-        let wall = self.model.spark_stage()
+        let wall = self.model.spark_stage() * jm
             + self.extra_round_fixed
             + t_ser_driver
             + t_net_down
@@ -571,6 +627,65 @@ mod tests {
             t1.bytes_up,
             t2.bytes_up
         );
+    }
+
+    fn chaos_engine(spec: &str) -> SparkEngine {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.workers = 4;
+        let parts = Partitioning::build(Partitioner::Range, &ds.a, 4, 0);
+        let model = OverheadModel::paper_defaults(crate::simnet::ClusterModel::paper_testbed(1.0));
+        let opts = EngineOptions {
+            chaos: Some(
+                crate::framework::chaos::ChaosSpec::parse(spec)
+                    .unwrap()
+                    .bind(4)
+                    .unwrap(),
+            ),
+            ..Default::default()
+        };
+        SparkEngine::new(Impl::SparkC, &ds, &parts, &cfg, model, opts)
+    }
+
+    #[test]
+    fn chaos_speculation_caps_straggler_and_keeps_bits() {
+        let (ds, mut clean) = engine(Impl::SparkC);
+        let mut dragged = chaos_engine("");
+        let mut backed = chaos_engine("spec");
+        let v0 = vec![0.0; ds.m()];
+        // The factor must dwarf detect/base so the backup copy certainly
+        // wins the race whatever the measured sub-ms solve time is.
+        let slow = RoundChaos {
+            death: None,
+            slowdowns: vec![(2, 1e8)],
+        };
+        dragged.arm_chaos(slow.clone());
+        backed.arm_chaos(slow);
+        let (dv0, _) = clean.run_round(&v0, 50, 1);
+        let (dv1, t1) = dragged.run_round(&v0, 50, 1);
+        let (dv2, t2) = backed.run_round(&v0, 50, 1);
+        // Speculation never changes the math — only who finishes first.
+        for ((a, b), c) in dv0.iter().zip(dv1.iter()).zip(dv2.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+            assert_eq!(b.to_bits(), c.to_bits());
+        }
+        // The backup copy beats a 50× straggler by a wide margin.
+        assert!(
+            t2.worker_compute[2] < 0.5 * t1.worker_compute[2],
+            "speculated {} !< dragged {}",
+            t2.worker_compute[2],
+            t1.worker_compute[2]
+        );
+        // A death on the same engines aborts with nothing committed.
+        let alpha_before = backed.alpha_global();
+        backed.arm_chaos(RoundChaos {
+            death: Some(0),
+            slowdowns: vec![],
+        });
+        let (dvd, td) = backed.run_round(&v0, 50, 2);
+        assert!(dvd.iter().all(|&x| x == 0.0));
+        assert_eq!(backed.alpha_global(), alpha_before);
+        assert_eq!(td.bytes_up, 0);
     }
 
     #[test]

@@ -57,8 +57,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use super::chaos::{ChaosRuntime, RoundChaos};
 use super::{DistEngine, EngineOptions, RoundTiming};
-use crate::config::{Impl, TrainConfig};
+use crate::config::{Impl, Precision, TrainConfig};
 use crate::data::{Dataset, Partitioning, WorkerData};
 use crate::linalg::{self, DeltaReducer, DeltaSlot, NestedTreePlan};
 use crate::problem::Problem;
@@ -72,6 +73,10 @@ enum ToWorker {
         v: Arc<Vec<f64>>,
         h: usize,
         seed: u64,
+        /// Physical straggler injection (chaos layer, DESIGN.md §12): the
+        /// rank really sleeps `(drag − 1)×` its busy time before replying.
+        /// Exactly 1.0 without chaos — the clean path never sleeps.
+        drag: f64,
         /// Recycled root slots (in `plan.roots(w)` order); they return with
         /// the reply carrying this round's forest roots. The `Vec` orbits
         /// master ↔ rank forever — no steady-state allocations.
@@ -91,6 +96,11 @@ enum FromWorker {
         /// The rank's forest roots after its local reduce stage.
         roots: Vec<DeltaSlot>,
         compute_s: f64,
+        /// The round seed this reply answers. Under speculation the master
+        /// races two replies per target rank; the seed tag lets it accept
+        /// the first fresh one and bank the loser's containers even when
+        /// the loser drifts in during a later round's gather.
+        seed: u64,
     },
     Alpha {
         worker: usize,
@@ -123,8 +133,11 @@ enum FromSub {
 }
 
 /// One sub-shard's persistent solver state (rank-inline or sub-thread).
+/// The column data sits behind an `Arc` so a chaos respawn (and the
+/// speculation shadow) can rebuild a rank's shards without re-slicing the
+/// dataset.
 struct SubShard {
-    data: WorkerData,
+    data: Arc<WorkerData>,
     alpha: Vec<f64>,
     solver: NativeScd,
     res: SolveResult,
@@ -197,6 +210,15 @@ pub struct ThreadedMpiEngine {
     root_vecs: Vec<Vec<DeltaSlot>>,
     /// Sparse-aware pairwise reducer (same tree as every other engine).
     reducer: DeltaReducer,
+    /// Chaos runtime (drag factors, armed fault, speculation) — `None` on
+    /// the clean path, which then behaves exactly as before the chaos
+    /// layer existed.
+    chaos: Option<ChaosRuntime>,
+    /// Respawn context for physical worker deaths (retained only under
+    /// chaos).
+    spawn_ctx: Option<SpawnCtx>,
+    /// Speculative re-execution replica of the designated straggler rank.
+    shadow: Option<ShadowState>,
 }
 
 impl ThreadedMpiEngine {
@@ -230,7 +252,14 @@ impl ThreadedMpiEngine {
         } else {
             linalg::raw_sparse_cutover(ds.m())
         };
-        ThreadedMpiEngine::with_cutover_nested(ds, parts, cfg, cutover, opts.threads_per_worker.max(1))
+        ThreadedMpiEngine::new_full(
+            ds,
+            parts,
+            cfg,
+            cutover,
+            opts.threads_per_worker.max(1),
+            ChaosRuntime::from_opts(opts, cfg.workers),
+        )
     }
 
     /// Engine with an explicit Δv frame cutover (nnz threshold; 0 = dense
@@ -255,6 +284,20 @@ impl ThreadedMpiEngine {
         cutover_nnz: usize,
         t: usize,
     ) -> ThreadedMpiEngine {
+        ThreadedMpiEngine::new_full(ds, parts, cfg, cutover_nnz, t, None)
+    }
+
+    /// Innermost constructor: everything above plus the optional chaos
+    /// runtime (per-rank drag factors, fault plan, speculation shadow —
+    /// DESIGN.md §12).
+    fn new_full(
+        ds: &Dataset,
+        parts: &Partitioning,
+        cfg: &TrainConfig,
+        cutover_nnz: usize,
+        t: usize,
+        chaos: Option<ChaosRuntime>,
+    ) -> ThreadedMpiEngine {
         assert!(t >= 1, "need at least one sub-solver per rank");
         assert_eq!(
             parts.parts.len(),
@@ -264,9 +307,6 @@ impl ThreadedMpiEngine {
         let k = cfg.workers;
         let plan = NestedTreePlan::new(k, t);
         let (result_tx, rx) = mpsc::channel::<FromWorker>();
-        let mut workers = Vec::new();
-        let mut global_ids = Vec::new();
-        let mut n_locals = Vec::new();
         // `Problem` is Copy + Send: each rank owns its copy, exactly like
         // real MPI ranks own their hyper-parameters. σ′ = γ·K·t — the flat
         // ring's value, to the bit.
@@ -275,223 +315,92 @@ impl ThreadedMpiEngine {
         // hold b; in shared memory one copy serves everyone).
         let b_shared: Arc<Vec<f64>> = Arc::new(ds.b.clone());
 
-        for w in 0..k {
-            let mut shards: Vec<SubShard> = parts
-                .rank_shards(w, t)
-                .iter()
-                .map(|cols| {
-                    let data = WorkerData::from_columns(&ds.a, cols);
-                    SubShard {
-                        alpha: vec![0.0; data.n_local()],
-                        data,
-                        solver: NativeScd::with_precision(cfg.precision),
-                        res: SolveResult::default(),
-                    }
-                })
-                .collect();
+        // Column data per sub-shard behind `Arc`s so a chaos respawn (and
+        // the speculation shadow) can rebuild a rank's solver state
+        // without re-slicing the dataset.
+        let shard_data: Vec<Vec<Arc<WorkerData>>> = (0..k)
+            .map(|w| {
+                parts
+                    .rank_shards(w, t)
+                    .iter()
+                    .map(|cols| Arc::new(WorkerData::from_columns(&ds.a, cols)))
+                    .collect()
+            })
+            .collect();
+        let mut global_ids = Vec::new();
+        let mut n_locals = Vec::new();
+        for rank in &shard_data {
             let mut rank_ids = Vec::new();
-            let mut sub_lens = Vec::with_capacity(t);
-            for s in &shards {
-                rank_ids.extend_from_slice(&s.data.global_ids);
-                sub_lens.push(s.data.n_local());
-                n_locals.push(s.data.n_local());
+            for d in rank {
+                rank_ids.extend_from_slice(&d.global_ids);
+                n_locals.push(d.n_local());
             }
             global_ids.push(rank_ids);
-
-            let (tx, worker_rx) = mpsc::channel::<ToWorker>();
-            let result_tx = result_tx.clone();
-            let b = Arc::clone(&b_shared);
-            let local_pairs: Vec<(usize, usize)> = plan.local_pairs(w).to_vec();
-            let roots: Vec<usize> = plan.roots(w).to_vec();
-            let m = ds.m();
-            let join = std::thread::Builder::new()
-                .name(format!("rank-{}", w))
-                .spawn(move || {
-                    // ---- persistent sub-pool: shard 0 runs inline on the
-                    // rank thread, shards 1..t on their own threads -------
-                    let mut shard0 = shards.remove(0);
-                    let (sub_tx, sub_rx) = mpsc::channel::<FromSub>();
-                    let subs: Vec<SubHandle> = shards
-                        .into_iter()
-                        .enumerate()
-                        .map(|(i, mut shard)| {
-                            let sub = i + 1; // sub index within the rank
-                            let g = w * t + sub; // flat rank id
-                            let (stx, srx) = mpsc::channel::<ToSub>();
-                            let reply = sub_tx.clone();
-                            let b = Arc::clone(&b);
-                            let join = std::thread::Builder::new()
-                                .name(format!("rank-{}-sub-{}", w, sub))
-                                .spawn(move || {
-                                    while let Ok(msg) = srx.recv() {
-                                        match msg {
-                                            ToSub::Solve { v, h, seed, mut slot } => {
-                                                shard.solve_round(
-                                                    &v, &b, h, &problem, sigma, seed, g,
-                                                    cutover_nnz, &mut slot,
-                                                );
-                                                // Drop the broadcast ref
-                                                // BEFORE replying so the
-                                                // master can reclaim the
-                                                // buffer after the barrier.
-                                                drop(v);
-                                                let _ = reply
-                                                    .send(FromSub::Solved { sub, slot });
-                                            }
-                                            ToSub::GetAlpha => {
-                                                let _ = reply.send(FromSub::Alpha {
-                                                    sub,
-                                                    alpha: shard.alpha.clone(),
-                                                });
-                                            }
-                                            ToSub::SetAlpha(a) => {
-                                                debug_assert_eq!(a.len(), shard.alpha.len());
-                                                shard.alpha = a;
-                                            }
-                                            ToSub::Shutdown => break,
-                                        }
-                                    }
-                                })
-                                .expect("spawn sub-solver thread");
-                            SubHandle {
-                                tx: stx,
-                                join: Some(join),
-                            }
-                        })
-                        .collect();
-                    // Drop the rank's own reply-sender: once the sub
-                    // threads' clones are gone (a sub panicked/died), the
-                    // recv()s below return Err and the engine fails loudly
-                    // instead of blocking forever on a reply that cannot
-                    // come.
-                    drop(sub_tx);
-
-                    // Per-sub Δv slots; root positions are refreshed from
-                    // each Round's recycled vec.
-                    let mut slots: Vec<DeltaSlot> = (0..t).map(|_| DeltaSlot::new()).collect();
-                    let mut reducer = DeltaReducer::new(m, cutover_nnz);
-
-                    while let Ok(msg) = worker_rx.recv() {
-                        match msg {
-                            ToWorker::Round {
-                                v,
-                                h,
-                                seed,
-                                mut recycle,
-                            } => {
-                                // Root slots come home from the master in
-                                // plan-roots order.
-                                debug_assert_eq!(recycle.len(), roots.len());
-                                for (&ri, slot) in roots.iter().zip(recycle.drain(..)) {
-                                    slots[ri] = slot;
-                                }
-                                let t0 = Instant::now();
-                                // Fan out to the sub-pool, then solve
-                                // shard 0 on this thread — physical
-                                // parallelism across the rank's cores.
-                                for (i, sub) in subs.iter().enumerate() {
-                                    let _ = sub.tx.send(ToSub::Solve {
-                                        v: Arc::clone(&v),
-                                        h,
-                                        seed,
-                                        slot: std::mem::take(&mut slots[i + 1]),
-                                    });
-                                }
-                                shard0.solve_round(
-                                    &v, &b, h, &problem, sigma, seed, w * t, cutover_nnz,
-                                    &mut slots[0],
-                                );
-                                for _ in 0..subs.len() {
-                                    match sub_rx.recv().expect("sub-solver died") {
-                                        FromSub::Solved { sub, slot } => slots[sub] = slot,
-                                        FromSub::Alpha { .. } => {
-                                            unreachable!("unexpected alpha reply")
-                                        }
-                                    }
-                                }
-                                // Rank-local stage: the within-block pairs
-                                // of the flat K·t tree (DESIGN.md §10).
-                                reducer.reduce_pairs(&mut slots, &local_pairs);
-                                let compute_s = t0.elapsed().as_secs_f64();
-                                // Drop our v reference BEFORE the reply so
-                                // the master (which proceeds only after all
-                                // replies) sees refcount 1 and reuses the
-                                // broadcast buffer without cloning.
-                                drop(v);
-                                // Ship the forest roots in the recycled vec.
-                                let mut out = recycle;
-                                for &ri in &roots {
-                                    out.push(std::mem::take(&mut slots[ri]));
-                                }
-                                let _ = result_tx.send(FromWorker::RoundDone {
-                                    worker: w,
-                                    roots: out,
-                                    compute_s,
-                                });
-                            }
-                            ToWorker::GetAlpha => {
-                                let mut alpha = shard0.alpha.clone();
-                                for sub in &subs {
-                                    let _ = sub.tx.send(ToSub::GetAlpha);
-                                }
-                                // Sub replies can interleave: stage them by
-                                // sub index, then concatenate in order. A
-                                // dead sub or a stray reply must fail
-                                // loudly (like the Round path) — a silent
-                                // hole would shift later shards' α onto
-                                // earlier shards' column ids.
-                                let mut parts: Vec<Option<Vec<f64>>> = vec![None; subs.len()];
-                                for _ in 0..subs.len() {
-                                    match sub_rx.recv().expect("sub-solver died") {
-                                        FromSub::Alpha { sub, alpha: a } => {
-                                            parts[sub - 1] = Some(a)
-                                        }
-                                        FromSub::Solved { .. } => {
-                                            unreachable!("unexpected solve reply")
-                                        }
-                                    }
-                                }
-                                for p in parts.into_iter() {
-                                    alpha.extend_from_slice(&p.expect("missing sub α reply"));
-                                }
-                                let _ = result_tx.send(FromWorker::Alpha { worker: w, alpha });
-                            }
-                            ToWorker::SetAlpha(new_alpha) => {
-                                debug_assert_eq!(
-                                    new_alpha.len(),
-                                    sub_lens.iter().sum::<usize>()
-                                );
-                                let mut off = sub_lens[0];
-                                shard0.alpha.clear();
-                                shard0.alpha.extend_from_slice(&new_alpha[..off]);
-                                for (i, sub) in subs.iter().enumerate() {
-                                    let len = sub_lens[i + 1];
-                                    let _ = sub.tx.send(ToSub::SetAlpha(
-                                        new_alpha[off..off + len].to_vec(),
-                                    ));
-                                    off += len;
-                                }
-                            }
-                            ToWorker::Shutdown => {
-                                for sub in &subs {
-                                    let _ = sub.tx.send(ToSub::Shutdown);
-                                }
-                                for mut sub in subs {
-                                    if let Some(j) = sub.join.take() {
-                                        let _ = j.join();
-                                    }
-                                }
-                                break;
-                            }
-                        }
-                    }
-                })
-                .expect("spawn worker thread");
-            workers.push(WorkerHandle {
-                tx,
-                join: Some(join),
-            });
         }
+
+        let workers: Vec<WorkerHandle> = (0..k)
+            .map(|w| {
+                spawn_worker(
+                    w,
+                    w,
+                    build_shards(&shard_data[w], cfg.precision),
+                    t,
+                    &plan,
+                    Arc::clone(&b_shared),
+                    problem,
+                    sigma,
+                    cutover_nnz,
+                    ds.m(),
+                    result_tx.clone(),
+                )
+            })
+            .collect();
+
+        // Chaos state. The respawn context is retained ONLY under chaos —
+        // the clean path keeps its fail-loud recv semantics (all senders
+        // dropped ⇒ recv errors instead of hanging). The shadow replica
+        // mirrors the designated straggler rank and races it every round
+        // with identical seeds; the first fresh reply wins (DESIGN.md §12).
+        let (spawn_ctx, shadow) = match &chaos {
+            Some(c) => {
+                let ctx = SpawnCtx {
+                    shard_data,
+                    b: Arc::clone(&b_shared),
+                    problem,
+                    sigma,
+                    precision: cfg.precision,
+                    cutover_nnz,
+                    m: ds.m(),
+                    result_tx: result_tx.clone(),
+                };
+                let shadow = if c.spec.speculation {
+                    let r = c.speculation_target(k);
+                    let handle = spawn_worker(
+                        r,
+                        k,
+                        build_shards(&ctx.shard_data[r], ctx.precision),
+                        t,
+                        &plan,
+                        Arc::clone(&ctx.b),
+                        problem,
+                        sigma,
+                        cutover_nnz,
+                        ctx.m,
+                        ctx.result_tx.clone(),
+                    );
+                    Some(ShadowState {
+                        rank: r,
+                        handle,
+                        slots: (0..plan.roots(r).len()).map(|_| DeltaSlot::new()).collect(),
+                        carrier: Vec::with_capacity(plan.roots(r).len()),
+                    })
+                } else {
+                    None
+                };
+                (Some(ctx), shadow)
+            }
+            None => (None, None),
+        };
 
         // Empty carrier vecs (capacity only): the root slots themselves
         // live in `slots` between rounds and are moved into the carrier
@@ -513,7 +422,264 @@ impl ThreadedMpiEngine {
             root_vecs,
             plan,
             reducer: DeltaReducer::new(ds.m(), cutover_nnz),
+            chaos,
+            spawn_ctx,
+            shadow,
         }
+    }
+}
+
+/// Everything needed to respawn a dead rank's worker thread mid-run.
+/// Held only when chaos is enabled.
+struct SpawnCtx {
+    shard_data: Vec<Vec<Arc<WorkerData>>>,
+    b: Arc<Vec<f64>>,
+    problem: Problem,
+    sigma: f64,
+    precision: Precision,
+    cutover_nnz: usize,
+    m: usize,
+    result_tx: mpsc::Sender<FromWorker>,
+}
+
+/// The speculation shadow: a full replica of one rank's worker (same
+/// shards, same seeds ⇒ bit-identical solves) racing the original every
+/// round. `slots`/`carrier` are its private containers so banked loser
+/// replies never alias the accepted winner's slots.
+struct ShadowState {
+    rank: usize,
+    handle: WorkerHandle,
+    slots: Vec<DeltaSlot>,
+    carrier: Vec<DeltaSlot>,
+}
+
+/// Fresh solver state over a rank's (shared, immutable) column data.
+fn build_shards(data: &[Arc<WorkerData>], precision: Precision) -> Vec<SubShard> {
+    data.iter()
+        .map(|d| SubShard {
+            alpha: vec![0.0; d.n_local()],
+            data: Arc::clone(d),
+            solver: NativeScd::with_precision(precision),
+            res: SolveResult::default(),
+        })
+        .collect()
+}
+
+/// Spawn one rank's worker thread (plus its `t−1` sub-solver threads).
+///
+/// `rank` fixes the flat-ring seed block (`g = rank·t + sub`) and the
+/// reduction-tree role; `reply_as` stamps outgoing messages. The
+/// speculation shadow runs with `reply_as = K` so the master can tell
+/// replica replies from real ones while both compute bit-identical
+/// results.
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker(
+    rank: usize,
+    reply_as: usize,
+    mut shards: Vec<SubShard>,
+    t: usize,
+    plan: &NestedTreePlan,
+    b: Arc<Vec<f64>>,
+    problem: Problem,
+    sigma: f64,
+    cutover_nnz: usize,
+    m: usize,
+    result_tx: mpsc::Sender<FromWorker>,
+) -> WorkerHandle {
+    let local_pairs: Vec<(usize, usize)> = plan.local_pairs(rank).to_vec();
+    let roots: Vec<usize> = plan.roots(rank).to_vec();
+    let sub_lens: Vec<usize> = shards.iter().map(|s| s.data.n_local()).collect();
+    let (tx, worker_rx) = mpsc::channel::<ToWorker>();
+    let join = std::thread::Builder::new()
+        .name(format!("rank-{}", reply_as))
+        .spawn(move || {
+            // ---- persistent sub-pool: shard 0 runs inline on the
+            // rank thread, shards 1..t on their own threads -------------
+            let mut shard0 = shards.remove(0);
+            let (sub_tx, sub_rx) = mpsc::channel::<FromSub>();
+            let subs: Vec<SubHandle> = shards
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut shard)| {
+                    let sub = i + 1; // sub index within the rank
+                    let g = rank * t + sub; // flat rank id
+                    let (stx, srx) = mpsc::channel::<ToSub>();
+                    let reply = sub_tx.clone();
+                    let b = Arc::clone(&b);
+                    let join = std::thread::Builder::new()
+                        .name(format!("rank-{}-sub-{}", reply_as, sub))
+                        .spawn(move || {
+                            while let Ok(msg) = srx.recv() {
+                                match msg {
+                                    ToSub::Solve { v, h, seed, mut slot } => {
+                                        shard.solve_round(
+                                            &v, &b, h, &problem, sigma, seed, g, cutover_nnz,
+                                            &mut slot,
+                                        );
+                                        // Drop the broadcast ref BEFORE
+                                        // replying so the master can
+                                        // reclaim the buffer after the
+                                        // barrier.
+                                        drop(v);
+                                        let _ = reply.send(FromSub::Solved { sub, slot });
+                                    }
+                                    ToSub::GetAlpha => {
+                                        let _ = reply.send(FromSub::Alpha {
+                                            sub,
+                                            alpha: shard.alpha.clone(),
+                                        });
+                                    }
+                                    ToSub::SetAlpha(a) => {
+                                        debug_assert_eq!(a.len(), shard.alpha.len());
+                                        shard.alpha = a;
+                                    }
+                                    ToSub::Shutdown => break,
+                                }
+                            }
+                        })
+                        .expect("spawn sub-solver thread");
+                    SubHandle {
+                        tx: stx,
+                        join: Some(join),
+                    }
+                })
+                .collect();
+            // Drop the rank's own reply-sender: once the sub threads'
+            // clones are gone (a sub panicked/died), the recv()s below
+            // return Err and the engine fails loudly instead of blocking
+            // forever on a reply that cannot come.
+            drop(sub_tx);
+
+            // Per-sub Δv slots; root positions are refreshed from each
+            // Round's recycled vec.
+            let mut slots: Vec<DeltaSlot> = (0..t).map(|_| DeltaSlot::new()).collect();
+            let mut reducer = DeltaReducer::new(m, cutover_nnz);
+
+            while let Ok(msg) = worker_rx.recv() {
+                match msg {
+                    ToWorker::Round {
+                        v,
+                        h,
+                        seed,
+                        drag,
+                        mut recycle,
+                    } => {
+                        // Root slots come home from the master in
+                        // plan-roots order.
+                        debug_assert_eq!(recycle.len(), roots.len());
+                        for (&ri, slot) in roots.iter().zip(recycle.drain(..)) {
+                            slots[ri] = slot;
+                        }
+                        let t0 = Instant::now();
+                        // Fan out to the sub-pool, then solve shard 0 on
+                        // this thread — physical parallelism across the
+                        // rank's cores.
+                        for (i, sub) in subs.iter().enumerate() {
+                            let _ = sub.tx.send(ToSub::Solve {
+                                v: Arc::clone(&v),
+                                h,
+                                seed,
+                                slot: std::mem::take(&mut slots[i + 1]),
+                            });
+                        }
+                        shard0.solve_round(
+                            &v, &b, h, &problem, sigma, seed, rank * t, cutover_nnz,
+                            &mut slots[0],
+                        );
+                        for _ in 0..subs.len() {
+                            match sub_rx.recv().expect("sub-solver died") {
+                                FromSub::Solved { sub, slot } => slots[sub] = slot,
+                                FromSub::Alpha { .. } => {
+                                    unreachable!("unexpected alpha reply")
+                                }
+                            }
+                        }
+                        // Rank-local stage: the within-block pairs of the
+                        // flat K·t tree (DESIGN.md §10).
+                        reducer.reduce_pairs(&mut slots, &local_pairs);
+                        // Chaos straggler: physically sleep off the extra
+                        // (drag − 1)× of the measured busy time. Exactly
+                        // 1.0 on the clean path — no sleep, no branch
+                        // cost worth measuring.
+                        if drag > 1.0 {
+                            std::thread::sleep(t0.elapsed().mul_f64(drag - 1.0));
+                        }
+                        let compute_s = t0.elapsed().as_secs_f64();
+                        // Drop our v reference BEFORE the reply so the
+                        // master (which proceeds only after all replies)
+                        // sees refcount 1 and reuses the broadcast buffer
+                        // without cloning.
+                        drop(v);
+                        // Ship the forest roots in the recycled vec.
+                        let mut out = recycle;
+                        for &ri in &roots {
+                            out.push(std::mem::take(&mut slots[ri]));
+                        }
+                        let _ = result_tx.send(FromWorker::RoundDone {
+                            worker: reply_as,
+                            roots: out,
+                            compute_s,
+                            seed,
+                        });
+                    }
+                    ToWorker::GetAlpha => {
+                        let mut alpha = shard0.alpha.clone();
+                        for sub in &subs {
+                            let _ = sub.tx.send(ToSub::GetAlpha);
+                        }
+                        // Sub replies can interleave: stage them by sub
+                        // index, then concatenate in order. A dead sub or
+                        // a stray reply must fail loudly (like the Round
+                        // path) — a silent hole would shift later shards'
+                        // α onto earlier shards' column ids.
+                        let mut parts: Vec<Option<Vec<f64>>> = vec![None; subs.len()];
+                        for _ in 0..subs.len() {
+                            match sub_rx.recv().expect("sub-solver died") {
+                                FromSub::Alpha { sub, alpha: a } => parts[sub - 1] = Some(a),
+                                FromSub::Solved { .. } => {
+                                    unreachable!("unexpected solve reply")
+                                }
+                            }
+                        }
+                        for p in parts.into_iter() {
+                            alpha.extend_from_slice(&p.expect("missing sub α reply"));
+                        }
+                        let _ = result_tx.send(FromWorker::Alpha {
+                            worker: reply_as,
+                            alpha,
+                        });
+                    }
+                    ToWorker::SetAlpha(new_alpha) => {
+                        debug_assert_eq!(new_alpha.len(), sub_lens.iter().sum::<usize>());
+                        let mut off = sub_lens[0];
+                        shard0.alpha.clear();
+                        shard0.alpha.extend_from_slice(&new_alpha[..off]);
+                        for (i, sub) in subs.iter().enumerate() {
+                            let len = sub_lens[i + 1];
+                            let _ = sub
+                                .tx
+                                .send(ToSub::SetAlpha(new_alpha[off..off + len].to_vec()));
+                            off += len;
+                        }
+                    }
+                    ToWorker::Shutdown => {
+                        for sub in &subs {
+                            let _ = sub.tx.send(ToSub::Shutdown);
+                        }
+                        for mut sub in subs {
+                            if let Some(j) = sub.join.take() {
+                                let _ = j.join();
+                            }
+                        }
+                        break;
+                    }
+                }
+            }
+        })
+        .expect("spawn worker thread");
+    WorkerHandle {
+        tx,
+        join: Some(join),
     }
 }
 
@@ -546,11 +712,23 @@ impl DistEngine for ThreadedMpiEngine {
             let _ = w.tx.send(ToWorker::GetAlpha);
         }
         let mut out = vec![0.0; self.n_total];
-        for _ in 0..self.workers.len() {
-            if let Ok(FromWorker::Alpha { worker, alpha }) = self.rx.recv() {
-                for (&gid, &a) in self.global_ids[worker].iter().zip(alpha.iter()) {
-                    out[gid as usize] = a;
+        let mut got = 0;
+        while got < self.workers.len() {
+            match self.rx.recv().expect("worker died") {
+                FromWorker::Alpha { worker, alpha } => {
+                    // The shadow is never polled for α: its state is
+                    // implied by its target's (same seeds ⇒ same updates).
+                    debug_assert!(worker < self.workers.len());
+                    for (&gid, &a) in self.global_ids[worker].iter().zip(alpha.iter()) {
+                        out[gid as usize] = a;
+                    }
+                    got += 1;
                 }
+                // A speculation loser's stale RoundDone can still be in
+                // flight; drop it. Its containers are lost, but the next
+                // banking replaces them — reachable only under chaos
+                // (clean runs never see a stray reply here).
+                FromWorker::RoundDone { .. } => {}
             }
         }
         out
@@ -564,63 +742,184 @@ impl DistEngine for ThreadedMpiEngine {
                 .collect();
             let _ = wk.tx.send(ToWorker::SetAlpha(local));
         }
+        // Keep the speculation replica in lockstep with its target — this
+        // is also how a replica whose target died is resynchronized (the
+        // session reloads the recovery snapshot into every rank).
+        if let Some(sh) = &self.shadow {
+            let local: Vec<f64> = self.global_ids[sh.rank]
+                .iter()
+                .map(|&gid| alpha_global[gid as usize])
+                .collect();
+            let _ = sh.handle.tx.send(ToWorker::SetAlpha(local));
+        }
     }
 
     fn clock(&self) -> f64 {
         self.wall
     }
 
+    fn arm_chaos(&mut self, rc: RoundChaos) {
+        if let Some(c) = self.chaos.as_mut() {
+            c.arm(rc);
+        }
+    }
+
     fn run_round(&mut self, v: &[f64], h: usize, round_seed: u64) -> (Vec<f64>, RoundTiming) {
         let k = self.workers.len();
         let t = self.t;
+        let rc = match self.chaos.as_mut() {
+            Some(c) => c.take(),
+            None => RoundChaos::default(),
+        };
+        let dead = rc.death;
         let t0 = Instant::now();
 
         // Broadcast: one copy of v into the shared buffer, then an Arc
         // clone per worker (pointer bump — the shared-memory equivalent of
         // MPI_Bcast over ranks on one node). All worker references were
         // dropped before last round's replies, so make_mut reclaims the
-        // existing buffer without cloning or allocating.
+        // existing buffer without cloning or allocating. (Under chaos a
+        // lagging speculation loser may still hold last round's ref, in
+        // which case make_mut clones — an allocation unreachable on the
+        // clean path.)
         {
             let buf = Arc::make_mut(&mut self.v_shared);
             buf.clear();
             buf.extend_from_slice(v);
         }
         for (w, wk) in self.workers.iter().enumerate() {
+            if dead == Some(w) {
+                // The dying rank gets no work; its root containers were
+                // consumed by its last completed round and the replay's
+                // broadcast hands it fresh `Default` slots instead.
+                continue;
+            }
             // Hand each rank back its root slots (plan-roots order); the
             // Vec itself orbits master ↔ rank.
             let mut recycle = std::mem::take(&mut self.root_vecs[w]);
             for &ri in self.plan.roots(w) {
                 recycle.push(std::mem::take(&mut self.slots[w * t + ri]));
             }
+            let drag = self.chaos.as_ref().map_or(1.0, |c| c.factor(&rc, w));
             let _ = wk.tx.send(ToWorker::Round {
                 v: Arc::clone(&self.v_shared),
                 h,
                 seed: round_seed,
+                drag,
                 recycle,
             });
+        }
+        // The shadow races its target with the same v/h/seed but no drag:
+        // bit-identical math, faster wall-clock when the target is the
+        // straggler. It sits out death rounds — nothing commits on those,
+        // and the session's recovery SetAlpha resynchronizes everyone.
+        if dead.is_none() {
+            if let Some(sh) = self.shadow.as_mut() {
+                let mut recycle = std::mem::take(&mut sh.carrier);
+                recycle.clear();
+                recycle.extend(sh.slots.drain(..));
+                // If the previous loser reply has not drifted in yet the
+                // pool is short — pad with fresh containers.
+                let need = self.plan.roots(sh.rank).len();
+                while recycle.len() < need {
+                    recycle.push(DeltaSlot::new());
+                }
+                let _ = sh.handle.tx.send(ToWorker::Round {
+                    v: Arc::clone(&self.v_shared),
+                    h,
+                    seed: round_seed,
+                    drag: 1.0,
+                    recycle,
+                });
+            }
         }
 
         // Gather the forest roots into their flat-tree positions (replies
         // arrive in any order; positions are fixed, so the reduction tree
-        // is deterministic under any interleaving).
+        // is deterministic under any interleaving). Under speculation the
+        // first reply carrying this round's seed wins a rank's slot; the
+        // loser (and any stale laggard) is banked into the shadow pool.
         let mut computes = vec![0.0; k];
         let mut bytes_up = 0u64;
-        for _ in 0..k {
+        let mut need: Vec<bool> = (0..k).map(|w| dead != Some(w)).collect();
+        let want = k - usize::from(dead.is_some());
+        let mut got = 0;
+        let target = self.shadow.as_ref().map(|s| s.rank);
+        while got < want {
             match self.rx.recv().expect("worker died") {
                 FromWorker::RoundDone {
                     worker,
                     mut roots,
                     compute_s,
+                    seed,
                 } => {
-                    for (&ri, slot) in self.plan.roots(worker).iter().zip(roots.drain(..)) {
-                        bytes_up += slot.raw_bytes(self.m) as u64;
-                        self.slots[worker * t + ri] = slot;
+                    let rank = if worker == k {
+                        target.expect("shadow reply without a shadow")
+                    } else {
+                        worker
+                    };
+                    if seed == round_seed && need[rank] {
+                        need[rank] = false;
+                        got += 1;
+                        for (&ri, slot) in self.plan.roots(rank).iter().zip(roots.drain(..)) {
+                            bytes_up += slot.raw_bytes(self.m) as u64;
+                            self.slots[rank * t + ri] = slot;
+                        }
+                        self.root_vecs[rank] = roots;
+                        computes[rank] = compute_s;
+                    } else if let Some(sh) = self.shadow.as_mut() {
+                        sh.slots.clear();
+                        sh.slots.extend(roots.drain(..));
+                        sh.carrier = roots;
                     }
-                    self.root_vecs[worker] = roots;
-                    computes[worker] = compute_s;
                 }
                 FromWorker::Alpha { .. } => unreachable!("unexpected alpha reply"),
             }
+        }
+
+        if let Some(d) = dead {
+            // Physical kill + respawn: tear the rank down for real and
+            // rebuild it from the retained spawn context. Nothing from
+            // this attempt commits — the Δv is zeroed and the caller
+            // (session recovery, DESIGN.md §12) reloads the α snapshot
+            // into every rank before replaying the round, which also
+            // resets the survivors whose local α advanced in the aborted
+            // attempt.
+            let ctx = self
+                .spawn_ctx
+                .as_ref()
+                .expect("death armed without a chaos runtime");
+            let _ = self.workers[d].tx.send(ToWorker::Shutdown);
+            if let Some(j) = self.workers[d].join.take() {
+                let _ = j.join();
+            }
+            self.workers[d] = spawn_worker(
+                d,
+                d,
+                build_shards(&ctx.shard_data[d], ctx.precision),
+                t,
+                &self.plan,
+                Arc::clone(&ctx.b),
+                ctx.problem,
+                ctx.sigma,
+                ctx.cutover_nnz,
+                ctx.m,
+                ctx.result_tx.clone(),
+            );
+            let wall = t0.elapsed().as_secs_f64();
+            self.wall += wall;
+            let t_worker = computes.iter().cloned().fold(0.0f64, f64::max);
+            let timing = RoundTiming {
+                t_worker,
+                t_master: 0.0,
+                // Detection + join + respawn are physically real here —
+                // the whole abort shows up as overhead.
+                t_overhead: (wall - t_worker).max(0.0),
+                worker_compute: computes,
+                bytes_up: 0,
+                bytes_down: (self.m * 8) as u64,
+            };
+            return (vec![0.0; self.m], timing);
         }
 
         // Cross-rank stage: the remaining pairs of the flat K·t tree in
@@ -655,8 +954,16 @@ impl Drop for ThreadedMpiEngine {
         for w in &self.workers {
             let _ = w.tx.send(ToWorker::Shutdown);
         }
+        if let Some(sh) = &self.shadow {
+            let _ = sh.handle.tx.send(ToWorker::Shutdown);
+        }
         for w in self.workers.iter_mut() {
             if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+        if let Some(sh) = self.shadow.as_mut() {
+            if let Some(j) = sh.handle.join.take() {
                 let _ = j.join();
             }
         }
@@ -853,5 +1160,126 @@ mod tests {
         let v = vec![0.0; ds.m()];
         let (dv, _) = eng.run_round(&v, 30, 0);
         assert!(dv.iter().any(|&x| x != 0.0));
+    }
+
+    // ---- chaos layer (DESIGN.md §12) --------------------------------
+
+    fn chaos_opts(k: usize, spec: &str) -> EngineOptions {
+        let mut opts = EngineOptions::default();
+        opts.chaos = Some(
+            crate::framework::chaos::ChaosSpec::parse(spec)
+                .unwrap()
+                .bind(k)
+                .unwrap(),
+        );
+        opts
+    }
+
+    #[test]
+    fn chaos_drag_physically_slows_the_armed_rank() {
+        let (ds, cfg, parts) = setup(2);
+        let mut eng = ThreadedMpiEngine::with_options(&ds, &parts, &cfg, &chaos_opts(2, ""));
+        let v = vec![0.0; ds.m()];
+        let (_, quiet) = eng.run_round(&v, 40, 1);
+        eng.arm_chaos(RoundChaos {
+            death: None,
+            slowdowns: vec![(1, 50.0)],
+        });
+        let (_, dragged) = eng.run_round(&v, 40, 2);
+        // A 50× drag really sleeps off 49× the measured busy time — even
+        // with µs-scale solves and timer noise, 3× over the quiet round's
+        // compute is a conservative floor.
+        assert!(
+            dragged.worker_compute[1] > 3.0 * quiet.worker_compute[1],
+            "drag did not slow rank 1: quiet {} vs dragged {}",
+            quiet.worker_compute[1],
+            dragged.worker_compute[1]
+        );
+    }
+
+    #[test]
+    fn chaos_death_respawns_and_replay_matches_clean() {
+        let (ds, cfg, parts) = setup(3);
+        let mut clean = ThreadedMpiEngine::new(&ds, &parts, &cfg);
+        let mut chaotic = ThreadedMpiEngine::with_options(&ds, &parts, &cfg, &chaos_opts(3, ""));
+
+        // A clean round on both engines, then snapshot α (the session's
+        // recovery state).
+        let v0 = vec![0.0; ds.m()];
+        let (dc, _) = clean.run_round(&v0, 25, 7);
+        let (dx, _) = chaotic.run_round(&v0, 25, 7);
+        assert_eq!(dc, dx);
+        let snapshot = clean.alpha_global();
+        assert_eq!(snapshot, chaotic.alpha_global());
+        let mut v1 = v0.clone();
+        linalg::add_assign(&mut v1, &dc);
+
+        // Kill rank 1 mid-round: the attempt commits nothing, the clock
+        // still advances (the abort is physically real), and the worker
+        // is respawned in place.
+        let clock_before = chaotic.clock();
+        chaotic.arm_chaos(RoundChaos {
+            death: Some(1),
+            slowdowns: vec![],
+        });
+        let (dz, tz) = chaotic.run_round(&v1, 25, 8);
+        assert!(dz.iter().all(|x| *x == 0.0));
+        assert_eq!(tz.bytes_up, 0);
+        assert!(chaotic.clock() > clock_before);
+
+        // Recovery (the session's job): reload the snapshot into every
+        // rank, replay the same round — bit-identical to the engine that
+        // never saw the fault.
+        chaotic.load_alpha(&snapshot);
+        let (d1c, _) = clean.run_round(&v1, 25, 8);
+        let (d1x, _) = chaotic.run_round(&v1, 25, 8);
+        assert_eq!(d1c, d1x);
+        assert_eq!(clean.alpha_global(), chaotic.alpha_global());
+    }
+
+    #[test]
+    fn chaos_speculation_shadow_wins_race_and_keeps_bits() {
+        let (ds, cfg, parts) = setup(3);
+        let mut clean = ThreadedMpiEngine::new(&ds, &parts, &cfg);
+        // The slow@ event binds the speculation target to rank 2; the
+        // shadow replica races it every round. The scheduled round itself
+        // is irrelevant here — drags are armed manually below.
+        let mut dragged =
+            ThreadedMpiEngine::with_options(&ds, &parts, &cfg, &chaos_opts(3, "slow@0:2:1000"));
+        let mut backed =
+            ThreadedMpiEngine::with_options(&ds, &parts, &cfg, &chaos_opts(3, "spec,slow@0:2:1000"));
+
+        let mut vc = vec![0.0; ds.m()];
+        let mut vd = vec![0.0; ds.m()];
+        let mut vb = vec![0.0; ds.m()];
+        for round in 0..3u64 {
+            dragged.arm_chaos(RoundChaos {
+                death: None,
+                slowdowns: vec![(2, 1000.0)],
+            });
+            backed.arm_chaos(RoundChaos {
+                death: None,
+                slowdowns: vec![(2, 1000.0)],
+            });
+            let (a, _) = clean.run_round(&vc, 25, round);
+            let (b, td) = dragged.run_round(&vd, 25, round);
+            let (c, tb) = backed.run_round(&vb, 25, round);
+            // Chaos perturbs time, never bits: all three agree exactly.
+            assert_eq!(a, b, "round {}", round);
+            assert_eq!(a, c, "round {}", round);
+            // The undragged shadow beats a 1000× straggler by a wide
+            // margin, so speculation caps the rank's effective compute.
+            assert!(
+                tb.worker_compute[2] < 0.1 * td.worker_compute[2],
+                "round {}: speculation did not win ({} vs {})",
+                round,
+                tb.worker_compute[2],
+                td.worker_compute[2]
+            );
+            linalg::add_assign(&mut vc, &a);
+            linalg::add_assign(&mut vd, &b);
+            linalg::add_assign(&mut vb, &c);
+        }
+        assert_eq!(clean.alpha_global(), backed.alpha_global());
     }
 }

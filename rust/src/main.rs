@@ -148,6 +148,18 @@ fn cmd_train(args: &Args) -> i32 {
     if let Some(t) = tpw_flag {
         builder = builder.threads_per_worker(t);
     }
+    // --chaos SPEC: seeded stragglers, skew and failure injection with
+    // speculative recovery (DESIGN.md §12). Grammar: comma-separated
+    // seed=N, het=F, jitter=F, spec, death@R[:W], slow@R[:W]:F.
+    if let Some(s) = args.get("chaos") {
+        match sparkbench::framework::chaos::ChaosSpec::parse(s) {
+            Ok(spec) => builder = builder.chaos(spec),
+            Err(e) => {
+                eprintln!("{}", e);
+                return 2;
+            }
+        }
+    }
     // Fixed-rounds timing runs (Figure 3/4 methodology) skip the oracle.
     if let Some(s) = args.get("fixed-rounds") {
         let Ok(n) = s.parse() else {

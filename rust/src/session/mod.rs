@@ -49,6 +49,7 @@ use crate::config::{Impl, Precision, SolverKind, TrainConfig};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::{oracle_objective, suboptimality};
 use crate::data::Dataset;
+use crate::framework::chaos::{ChaosSpec, FaultSchedule};
 use crate::framework::{build_any, DistEngine, Engine, EngineOptions};
 use crate::linalg;
 use crate::metrics::{RoundLog, TrainReport};
@@ -123,6 +124,7 @@ pub struct SessionBuilder<'a> {
     resume: Option<Checkpoint>,
     track_gap: bool,
     threads_per_worker: Option<usize>,
+    chaos: Option<ChaosSpec>,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -269,6 +271,21 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Inject chaos (DESIGN.md §12): per-worker heterogeneity, latency
+    /// jitter, a seeded [`FaultPlan`](crate::framework::chaos::FaultPlan)
+    /// of worker deaths and slowdowns, and optional speculative
+    /// re-execution. The spec binds against the engine's worker count at
+    /// build time (a plan that kills every worker in one round is a build
+    /// error). A death aborts the round attempt with nothing committed;
+    /// the session reloads its α snapshot and replays the same round —
+    /// same seed, so the post-recovery trajectory is bit-identical to an
+    /// uninterrupted run (`tests/integration_chaos.rs`). Registry-built
+    /// engines only.
+    pub fn chaos(mut self, spec: ChaosSpec) -> Self {
+        self.chaos = Some(spec);
+        self
+    }
+
     /// Resume from a checkpoint: restores α into the engine, v, the round
     /// counter (round seeds line up) and the clock offset.
     ///
@@ -318,6 +335,13 @@ impl<'a> SessionBuilder<'a> {
         if self.threads_per_worker == Some(0) {
             return Err("threads_per_worker must be >= 1".into());
         }
+        if self.attached.is_some() && self.chaos.is_some() {
+            return Err(
+                ".chaos(...) cannot apply to an attached engine — the chaos runtime \
+                 is part of engine construction; select via .engine(...)"
+                    .into(),
+            );
+        }
         if self.attached.is_some() && self.problem.is_some() {
             return Err(
                 ".problem(...) cannot apply to an attached engine — its workers were \
@@ -364,6 +388,23 @@ impl<'a> SessionBuilder<'a> {
         if let Some(t) = self.threads_per_worker {
             opts.threads_per_worker = t;
         }
+        // Bind the chaos spec against the worker count the engine will
+        // actually run with (`Engine::Threads { k > 0 }` overrides
+        // `cfg.workers`). Binding resolves seeded worker picks and rejects
+        // unsatisfiable plans — kill-all rounds fail HERE, not mid-run.
+        let bound_chaos = match &self.chaos {
+            Some(spec) => {
+                let eff_k = match self.engine {
+                    Engine::Threads { k, .. } if k > 0 => k,
+                    _ => cfg.workers,
+                };
+                Some(spec.bind(eff_k)?)
+            }
+            None => None,
+        };
+        let mut fault_sched = bound_chaos.as_ref().map(|s| FaultSchedule::new(&s.plan));
+        opts.chaos = bound_chaos;
+        let resume_fault_cursor = self.resume.as_ref().map(|c| c.fault_cursor);
         let mut engine = match self.attached {
             Some(e) => EngineRef::Attached(e),
             None => EngineRef::Owned(build_any(self.engine, self.ds, &cfg, &opts)),
@@ -425,6 +466,11 @@ impl<'a> SessionBuilder<'a> {
                 (0, vec![0.0; self.ds.m()], 0.0)
             }
         };
+        // A resumed chaos run skips the fault-plan prefix it already
+        // survived (checkpoint envelope v5; pre-v5 implies cursor 0).
+        if let (Some(sched), Some(cursor)) = (fault_sched.as_mut(), resume_fault_cursor) {
+            sched.cursor = cursor.min(sched.deaths_total());
+        }
         Ok(Session {
             ds: self.ds,
             engine,
@@ -437,6 +483,7 @@ impl<'a> SessionBuilder<'a> {
             v,
             clock_offset,
             track_gap: self.track_gap,
+            fault_sched,
         })
     }
 
@@ -459,6 +506,9 @@ pub struct Session<'a> {
     v: Vec<f64>,
     clock_offset: f64,
     track_gap: bool,
+    /// Fault-plan schedule (chaos sessions only): which deaths/slowdowns
+    /// hit which round attempts, and how many deaths already fired.
+    fault_sched: Option<FaultSchedule>,
 }
 
 impl<'a> Session<'a> {
@@ -479,6 +529,7 @@ impl<'a> Session<'a> {
             resume: None,
             track_gap: false,
             threads_per_worker: None,
+            chaos: None,
         }
     }
 
@@ -498,6 +549,7 @@ impl<'a> Session<'a> {
             mut v,
             clock_offset,
             track_gap,
+            mut fault_sched,
         } = self;
 
         let n_locals = engine.get().n_locals();
@@ -534,10 +586,52 @@ impl<'a> Session<'a> {
         let mut time_to_target = None;
         let (mut tot_worker, mut tot_master, mut tot_overhead) = (0.0, 0.0, 0.0);
 
+        // Chaos recovery snapshot: the global α after the last COMPLETED
+        // round. A death aborts the attempt with nothing committed to v,
+        // but worker-local α may have advanced — reloading this snapshot
+        // plus replaying with the same round seed makes the recovered
+        // trajectory bit-identical to an uninterrupted run. Chaos-free
+        // sessions never take it (no per-round alpha_global cost).
+        let mut snapshot: Option<Vec<f64>> =
+            fault_sched.as_ref().map(|_| engine.get().alpha_global());
+
         for round in start_round..end_round {
             let seed = cfg.seed ^ (round as u64).wrapping_mul(0xA24BAED4963EE407);
-            let (dv, timing) = engine.get_mut().run_round(&v, h, seed);
+            // Attempt loop: each armed death aborts one attempt (clock
+            // still advances — failure costs real time), then the SAME
+            // round replays. The schedule fires deaths one per attempt,
+            // so a death scheduled during recovery hits the replay too.
+            // It terminates: every abort consumes one of finitely many
+            // plan deaths.
+            let (dv, timing) = loop {
+                let rc = match fault_sched.as_ref() {
+                    Some(s) => s.arm(round),
+                    None => Default::default(),
+                };
+                let fault = rc.death;
+                if !rc.is_quiet() {
+                    engine.get_mut().arm_chaos(rc);
+                }
+                let out = engine.get_mut().run_round(&v, h, seed);
+                match fault {
+                    Some(w) => {
+                        fault_sched
+                            .as_mut()
+                            .expect("armed death without a schedule")
+                            .fired();
+                        let snap = snapshot.as_ref().expect("chaos session without snapshot");
+                        engine.get_mut().load_alpha(snap);
+                        for obs in observers.iter_mut() {
+                            obs.on_fault(round, w, engine.get().clock() + clock_offset);
+                        }
+                    }
+                    None => break out,
+                }
+            };
             linalg::add_assign(&mut v, &dv);
+            if let Some(sn) = snapshot.as_mut() {
+                *sn = engine.get().alpha_global();
+            }
             tot_worker += timing.t_worker;
             tot_master += timing.t_master;
             tot_overhead += timing.t_overhead;
@@ -583,6 +677,7 @@ impl<'a> Session<'a> {
                     v: &v,
                     engine: engine.get(),
                     cfg: &cfg,
+                    fault_cursor: fault_sched.as_ref().map_or(0, |s| s.cursor),
                 });
             }
             logs.push(log);
@@ -932,6 +1027,70 @@ mod tests {
                 report.final_suboptimality
             );
         }
+    }
+
+    #[test]
+    fn chaos_kill_all_plan_is_rejected_at_build() {
+        let (ds, cfg) = setup(); // workers = 4
+        let spec = ChaosSpec::parse("death@3:0,death@3:1,death@3:2,death@3:3").unwrap();
+        let err = Session::builder(&ds)
+            .engine(Impl::Mpi)
+            .config(cfg)
+            .chaos(spec)
+            .fixed_rounds(5)
+            .build()
+            .err()
+            .expect("kill-all plan must be rejected at build time");
+        assert!(err.contains("kills all"), "{}", err);
+    }
+
+    #[test]
+    fn chaos_on_attached_engine_is_rejected() {
+        let (ds, cfg) = setup();
+        let mut eng = crate::framework::build_engine(Impl::Mpi, &ds, &cfg);
+        let err = Session::builder(&ds)
+            .config(cfg)
+            .attach(eng.as_mut())
+            .chaos(ChaosSpec::parse("death@2").unwrap())
+            .fixed_rounds(3)
+            .build()
+            .err()
+            .expect("chaos on an attached engine must be rejected");
+        assert!(err.contains(".chaos("), "{}", err);
+    }
+
+    #[test]
+    fn chaos_session_survives_death_and_records_the_fault() {
+        let (ds, mut cfg) = setup();
+        cfg.eval_every = 1;
+        let rec = Recording::new();
+        let report = Session::builder(&ds)
+            .engine(Impl::Mpi)
+            .config(cfg.clone())
+            .chaos(ChaosSpec::parse("death@2:1").unwrap())
+            .fixed_rounds(6)
+            .oracle(oracle_objective(&ds, &cfg))
+            .observe(rec.clone())
+            .build()
+            .unwrap()
+            .run();
+        // All six rounds complete despite the mid-run death...
+        assert_eq!(report.rounds, 6);
+        assert_eq!(rec.faults(), vec![(2, 1)]);
+        // ...and the trajectory is bit-identical to the chaos-free run
+        // (only the clock differs: the aborted attempt cost real time).
+        let clean = Session::builder(&ds)
+            .engine(Impl::Mpi)
+            .config(cfg.clone())
+            .fixed_rounds(6)
+            .oracle(oracle_objective(&ds, &cfg))
+            .build()
+            .unwrap()
+            .run();
+        for (a, b) in report.logs.iter().zip(clean.logs.iter()) {
+            assert_eq!(a.objective, b.objective, "round {}", a.round);
+        }
+        assert!(report.total_time > clean.total_time);
     }
 
     #[test]

@@ -27,12 +27,21 @@ pub struct RoundCtx<'a> {
     /// The engine, read-only (`alpha_global()` for model snapshots).
     pub engine: &'a dyn DistEngine,
     pub cfg: &'a TrainConfig,
+    /// Fault-plan events consumed so far (chaos sessions; 0 otherwise).
+    /// Checkpoints record it so a resumed run does not re-fire deaths
+    /// that already happened.
+    pub fault_cursor: usize,
 }
 
 /// Per-round callback stream. `on_round` fires exactly once per completed
 /// round, in round order; `on_complete` fires once when the session ends.
 pub trait RoundObserver {
     fn on_round(&mut self, ctx: &RoundCtx<'_>);
+
+    /// A chaos fault aborted a round attempt: `worker` died at `round`
+    /// (virtual or physical depending on the engine) and the session is
+    /// about to recover and replay. Default: ignore.
+    fn on_fault(&mut self, _round: usize, _worker: usize, _clock: f64) {}
 
     fn on_complete(&mut self, _report: &TrainReport) {}
 }
@@ -102,6 +111,7 @@ impl CheckpointEvery {
             workers: ctx.engine.num_workers(),
             threads_per_worker: ctx.engine.threads_per_worker(),
             precision: ctx.cfg.precision,
+            fault_cursor: ctx.fault_cursor,
         };
         match ckpt.save(&self.path) {
             Ok(()) => self.saves += 1,
@@ -135,6 +145,8 @@ pub struct RecordingInner {
     pub rounds: Vec<usize>,
     pub hs: Vec<usize>,
     pub times: Vec<f64>,
+    /// `(round, worker)` of every fault the session recovered from.
+    pub faults: Vec<(usize, usize)>,
     pub completions: usize,
 }
 
@@ -165,6 +177,10 @@ impl Recording {
     pub fn completions(&self) -> usize {
         self.inner.borrow().completions
     }
+
+    pub fn faults(&self) -> Vec<(usize, usize)> {
+        self.inner.borrow().faults.clone()
+    }
 }
 
 impl RoundObserver for Recording {
@@ -173,6 +189,10 @@ impl RoundObserver for Recording {
         inner.rounds.push(ctx.log.round);
         inner.hs.push(ctx.log.h);
         inner.times.push(ctx.log.time);
+    }
+
+    fn on_fault(&mut self, round: usize, worker: usize, _clock: f64) {
+        self.inner.borrow_mut().faults.push((round, worker));
     }
 
     fn on_complete(&mut self, _report: &TrainReport) {

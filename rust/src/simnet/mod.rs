@@ -177,6 +177,16 @@ impl ClusterModel {
     pub fn scaled(&self, seconds: f64) -> f64 {
         seconds * self.time_scale
     }
+
+    /// Latency-jittered copy of the model (chaos layer, DESIGN.md §12):
+    /// one-way link latency multiplied by `mult` — the per-round draw of
+    /// `framework::chaos::jitter_mult` — while bandwidth stays physical
+    /// (congestion jitter hits the latency floor, not the wire rate).
+    pub fn jittered(&self, mult: f64) -> ClusterModel {
+        let mut c = self.clone();
+        c.link.latency_s *= mult;
+        c
+    }
 }
 
 #[cfg(test)]
@@ -251,6 +261,21 @@ mod tests {
         // At k=1 star wins (driver→colocated worker is a local copy), but
         // torrent stays within a constant factor (two block transfers).
         assert!(c.torrent_broadcast(bytes, 1) < 25.0 * c.star_broadcast(bytes, 1));
+    }
+
+    #[test]
+    fn jitter_scales_latency_not_bandwidth() {
+        let c = ClusterModel::paper_testbed(1.0);
+        let j = c.jittered(2.0);
+        // Tiny message: latency-dominated → doubles.
+        let r_small = j.star_broadcast(1, 4) / c.star_broadcast(1, 4);
+        assert!((r_small - 2.0).abs() < 1e-9, "ratio {}", r_small);
+        // Huge message: bandwidth-dominated → barely moves.
+        let big = 1_000_000_000u64;
+        let r_big = j.star_broadcast(big, 4) / c.star_broadcast(big, 4);
+        assert!(r_big < 1.01, "bandwidth must not jitter: ratio {}", r_big);
+        // mult = 1 is exactly the identity.
+        assert_eq!(c.jittered(1.0).tree_allreduce(1000, 4), c.tree_allreduce(1000, 4));
     }
 
     #[test]

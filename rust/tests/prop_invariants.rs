@@ -351,6 +351,120 @@ fn prop_sparse_codec_roundtrip_bit_identical() {
     });
 }
 
+/// Zipfian column-mass dataset (chaos layer, DESIGN.md §12): almost all
+/// of the nnz sits in the first few columns. Ranges are sized so the
+/// heaviest single column (≤ m nnz) stays small against the per-worker
+/// mean (≈ n·16/k nnz) — that is what makes the greedy-LPT balance bound
+/// below provable rather than probabilistic.
+fn zipf_dataset(g: &mut Gen) -> sparkbench::data::Dataset {
+    let spec = SyntheticSpec {
+        m: g.usize_in(32, 65),
+        n: g.usize_in(256, 513),
+        avg_col_nnz: 16,
+        powerlaw_s: g.f64_in(1.3, 1.7),
+        model_density: g.f64_in(0.1, 0.9),
+        noise: g.f64_in(0.0, 0.2),
+        seed: g.seed(),
+    };
+    sparkbench::data::synthetic::zipf_columns(&spec)
+}
+
+#[test]
+fn prop_skewed_zipf_partitioning_is_still_an_exact_cover() {
+    // Chaos satellite: however adversarial the column-mass distribution
+    // and however deliberately imbalanced the partitioner, every column
+    // is assigned to exactly one shard — skew breaks balance, never
+    // correctness.
+    check("zipf data + every partitioner = exact cover", 20, |g| {
+        let ds = zipf_dataset(g);
+        let k = g.usize_in(1, 9);
+        for p in [
+            Partitioner::Range,
+            Partitioner::RoundRobin,
+            Partitioner::BalancedNnz,
+            Partitioner::Random,
+            Partitioner::Skewed,
+        ] {
+            Partitioning::build(p, &ds.a, k, g.seed())
+                .validate(ds.n())
+                .map_err(|e| format!("{:?}: {}", p, e))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_balanced_nnz_bounds_the_shard_ratio_where_range_blows_up() {
+    // On Zipfian mass the contiguous Range split hands the heavy head
+    // columns to worker 0 and near-empty tails to the last worker, so its
+    // max/min shard-nnz ratio explodes. Greedy LPT (`BalancedNnz`) keeps
+    // max−min within one column's nnz (≤ m), which the generator sizes
+    // well under the per-worker mean — the mitigation the chaos skew
+    // experiments measure against.
+    check("balanced-nnz bounds shard ratio; range does not", 20, |g| {
+        let ds = zipf_dataset(g);
+        let k = g.usize_in(2, 6);
+        let ratio = |p: Partitioner| -> Result<f64, String> {
+            let loads = Partitioning::build(p, &ds.a, k, 7).loads(&ds.a);
+            let max = *loads.iter().max().unwrap() as f64;
+            let min = *loads.iter().min().unwrap() as f64;
+            if min == 0.0 {
+                return Err(format!("{:?}: empty shard", p));
+            }
+            Ok(max / min)
+        };
+        let balanced = ratio(Partitioner::BalancedNnz)?;
+        let range = ratio(Partitioner::Range)?;
+        if balanced > 1.5 {
+            return Err(format!("balanced-nnz ratio {} > 1.5", balanced));
+        }
+        if range <= 2.0 * balanced {
+            return Err(format!(
+                "range ratio {} did not blow up vs balanced {}",
+                range, balanced
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nested_ring_is_bit_identical_to_flat_on_skewed_shards() {
+    // DESIGN.md §10's nested ≡ flat identity must survive the chaos
+    // layer's worst-case layout: Zipfian data under the deliberately
+    // imbalanced Skewed partitioner. K workers × T sub-solvers and a flat
+    // K·T ring share the partitioning, σ′ and per-shard seeds, so the
+    // round's Δv agrees to the bit.
+    check("nested K×T == flat K·T on skewed zipf shards", 8, |g| {
+        let ds = zipf_dataset(g);
+        let k = g.usize_in(2, 5);
+        let t = g.usize_in(2, 5);
+        let mut cfg = TrainConfig::default_for(&ds);
+        cfg.partitioner = Partitioner::Skewed;
+        cfg.seed = g.seed();
+
+        cfg.workers = k;
+        let mut opts = sparkbench::framework::EngineOptions::default();
+        opts.threads_per_worker = t;
+        let mut nested = sparkbench::framework::build_engine_with(Impl::Mpi, &ds, &cfg, &opts);
+
+        cfg.workers = k * t;
+        let mut flat = build_engine(Impl::Mpi, &ds, &cfg);
+
+        let v = vec![0.0; ds.m()];
+        let h = g.usize_in(1, 40);
+        let seed = g.seed();
+        let (dv_n, _) = nested.run_round(&v, h, seed);
+        let (dv_f, _) = flat.run_round(&v, h, seed);
+        for (i, (a, b)) in dv_n.iter().zip(dv_f.iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("dv[{}]: {} vs {} (k={}, t={})", i, a, b, k, t));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_delta_reducer_matches_dense_tree_bitwise() {
     // Random worker deltas at random densities and a random cutover must
