@@ -93,11 +93,18 @@ bar("gap_eval_allocs", lambda v: v == 0, "== 0")
 bar("mixed_precision.blocked_traversal.allocs_per_round", lambda v: v == 0, "== 0")
 bar("mixed_precision.solver.allocs_per_round", lambda v: v == 0, "== 0")
 bar("mixed_precision.solver.final_objective_drift_rel", lambda v: v <= 1e-3, "<= 1e-3")
+bar("serving.allocs_per_batch", lambda v: v == 0, "== 0 (zero-alloc steady-state batched predict)")
+bar("serving.preds_per_sec_1core", lambda v: v >= 2e5, ">= 2e5 predictions/sec on one core")
+bar("serving.size_regime.size_flushes", lambda v: v >= 1, ">= 1 size flush above the cutover rate")
+bar("serving.deadline_regime.deadline_flushes", lambda v: v >= 1, ">= 1 deadline flush below the cutover rate")
 
 # Core-count- and backend-conditional bars.
 cores = get(doc, "nested_parallel.cores")
 if cores is not None and cores >= 4:
     bar("nested_parallel.nested_speedup_t4", lambda v: v >= 2.0, ">= 2.0 on >= 4 cores")
+serve_cores = get(doc, "serving.cores")
+if serve_cores is not None and serve_cores >= 4:
+    bar("serving.shard_speedup_t4", lambda v: v >= 2.0, ">= 2.0 on >= 4 cores")
 if get(doc, "kernels.backend") == "avx2":
     bar("kernels.m1048576.dot_speedup", lambda v: v >= 1.3, ">= 1.3 with the avx2 backend")
 

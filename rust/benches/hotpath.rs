@@ -33,18 +33,24 @@
 //! * **chaos layer** (DESIGN.md §12): homogeneous vs heterogeneous
 //!   round-time distribution on the virtual clock (round time = max over
 //!   seeded per-worker speeds + latency jitter), with speculation off and
-//!   on — same bits all three ways, only the clock moves.
+//!   on — same bits all three ways, only the clock moves;
+//! * **serving** (DESIGN.md §13): steady-state batched predict over the
+//!   CSR request mirror — bar: 0 allocations/batch once warm — with 1-core
+//!   predictions/sec, sharded speedup at T ∈ {2, 4}, and the batching
+//!   front end replayed above and below the cutover rate
+//!   λ* = max_batch/max_delay (queue-wait and latency p50/p99 per regime).
 
 use sparkbench::bench::{render_results, Bencher};
 use sparkbench::config::{Impl, Precision, TrainConfig};
 use sparkbench::coordinator;
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
-use sparkbench::data::{Partitioner, Partitioning, WorkerData};
+use sparkbench::data::{CsrMatrix, Partitioner, Partitioning, WorkerData};
 use sparkbench::framework::serialization::{java_encoded_len, java_sparse_cutover, JavaSer, PickleSer};
 use sparkbench::framework::{build_any, Engine, EngineOptions};
 use sparkbench::linalg;
 use sparkbench::linalg::{DeltaReducer, DeltaSlot, NestedTreePlan};
 use sparkbench::problem::{GapScratch, Problem};
+use sparkbench::serve::{replay, BatchPolicy, Predictor};
 use sparkbench::session::Session;
 use sparkbench::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
 use sparkbench::testkit::alloc::{current_thread_allocations, CountingAllocator};
@@ -71,7 +77,7 @@ fn main() {
     let b = Bencher::default();
     let mut results = Vec::new();
     let mut json = Json::obj();
-    json.set("bench", "hotpath").set("schema_version", 7usize);
+    json.set("bench", "hotpath").set("schema_version", 8usize);
 
     // ---- sparse dot / axpy — one call per SCD step, THE hot pair --------
     let ds = webspam_like(&SyntheticSpec::webspam_mini());
@@ -782,6 +788,81 @@ fn main() {
     let gap_allocs = current_thread_allocations() - a0;
     println!("duality-gap eval allocations (pooled scratch): {} (MUST be 0)", gap_allocs);
     json.set("gap_eval_allocs", gap_allocs);
+
+    // ---- serving: zero-alloc batched inference (DESIGN.md §13) ----------
+    // Train→serve handoff measured end to end: a short fixed-round ridge
+    // session stands in for any converged model (serving cost depends only
+    // on the request rows, not on how good the weights are), and the full
+    // corpus replayed row-major is the steady-state batch.
+    {
+        let (_, model) = Session::builder(&ds)
+            .engine(Impl::Mpi)
+            .fixed_rounds(10)
+            .build()
+            .expect("serving bench session")
+            .run_extract();
+        let rows = CsrMatrix::from_csc(&ds.a);
+        let predictor = Predictor::new(model);
+        let mut out = Vec::new();
+        predictor.predict_into(&rows, &mut out); // warm the output buffer
+
+        let seq = b.run("serve batch predict (1 core)", || {
+            predictor.predict_into(&rows, &mut out)
+        });
+        let a0 = current_thread_allocations();
+        predictor.predict_into(&rows, &mut out);
+        let serve_allocs = current_thread_allocations() - a0;
+        let preds_per_sec_1core = rows.m as f64 / seq.mean_s.max(1e-12);
+        println!(
+            "serving: {} rows/batch, {:.3e} preds/s on 1 core; allocations/batch = {} (MUST be 0)",
+            rows.m, preds_per_sec_1core, serve_allocs
+        );
+
+        let cores = std::thread::available_parallelism().map_or(1, |c| c.get());
+        let mut js = Json::obj();
+        js.set("batch_rows", rows.m)
+            .set("allocs_per_batch", serve_allocs)
+            .set("preds_per_sec_1core", preds_per_sec_1core)
+            .set("cores", cores);
+        for shards in [2usize, 4] {
+            let sh = b.run(&format!("serve batch predict ({} shards)", shards), || {
+                predictor.predict_sharded_into(&rows, shards, &mut out)
+            });
+            js.set(
+                &format!("shard_speedup_t{}", shards),
+                seq.mean_s / sh.mean_s.max(1e-12),
+            );
+            results.push(sh);
+        }
+
+        // Batching front end in both regimes of the cutover rule
+        // λ* = max_batch / max_delay (arrivals on the virtual clock, only
+        // batch compute wall-timed): at 4λ* every flush is a size flush;
+        // at λ*/4 the deadline timer always wins and the wait tail is
+        // pinned near max_delay.
+        let policy = BatchPolicy::new(64, 1e-3);
+        let cutover = policy.cutover_rate();
+        js.set("cutover_rate", cutover);
+        for (tag, rate) in [("size_regime", 4.0 * cutover), ("deadline_regime", 0.25 * cutover)] {
+            let mut preds = Vec::new();
+            let stats = replay(&predictor, &rows, Some(&ds.b), policy, rate, 1, &mut preds);
+            println!("serving replay [{}] @ {:.0} req/s:\n{}", tag, rate, stats.render());
+            let mut jr = Json::obj();
+            jr.set("rate", rate)
+                .set("batches", stats.batches)
+                .set("mean_batch", stats.mean_batch)
+                .set("size_flushes", stats.size_flushes)
+                .set("deadline_flushes", stats.deadline_flushes)
+                .set("wait_p50_s", stats.wait_p50_s)
+                .set("wait_p99_s", stats.wait_p99_s)
+                .set("latency_p50_s", stats.latency_p50_s)
+                .set("latency_p99_s", stats.latency_p99_s)
+                .set("preds_per_sec", stats.preds_per_sec);
+            js.set(tag, jr);
+        }
+        json.set("serving", js);
+        results.push(seq);
+    }
 
     // ---- PJRT-executed Pallas kernel round (needs `make artifacts`) -----
     #[cfg(feature = "pjrt")]

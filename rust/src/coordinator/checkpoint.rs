@@ -53,6 +53,55 @@ pub struct Checkpoint {
 
 const VERSION: f64 = 5.0;
 
+/// Engine-free, read-only view of a checkpoint envelope on disk: the
+/// serving path's entry point (DESIGN.md §13). [`Envelope::peek`] decodes
+/// `(α, v, problem, precision)` from **any** v1–v5 envelope without
+/// constructing a `DistEngine`, refusing gracefully on truncated JSON,
+/// corrupt hex payloads, unknown versions or empty model vectors — a
+/// server must fail at load time, not mid-request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    /// Envelope schema version as written on disk (1..=5).
+    pub version: u32,
+    /// The decoded checkpoint (pre-v5 fields defaulted as documented in
+    /// the module header).
+    pub ckpt: Checkpoint,
+}
+
+impl Envelope {
+    /// Read and decode a checkpoint envelope without touching any engine
+    /// machinery. Every failure mode is a `String` error naming what is
+    /// wrong with the file — never a panic.
+    pub fn peek(path: &Path) -> Result<Envelope, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read checkpoint {}: {}", path.display(), e))?;
+        let j = Json::parse(&text)
+            .map_err(|e| format!("corrupt checkpoint envelope {}: {}", path.display(), e))?;
+        let version = j.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0) as u32;
+        let ckpt = Checkpoint::from_json(&j)
+            .map_err(|e| format!("corrupt checkpoint envelope {}: {}", path.display(), e))?;
+        if ckpt.alpha.is_empty() || ckpt.v.is_empty() {
+            return Err(format!(
+                "checkpoint {} has empty model vectors (α: {}, v: {}) — nothing to serve",
+                path.display(),
+                ckpt.alpha.len(),
+                ckpt.v.len()
+            ));
+        }
+        Ok(Envelope { version, ckpt })
+    }
+
+    /// Feature-space dimension (length of α — columns of the training A).
+    pub fn n(&self) -> usize {
+        self.ckpt.alpha.len()
+    }
+
+    /// Row-space dimension (length of v = Aα — rows of the training A).
+    pub fn m(&self) -> usize {
+        self.ckpt.v.len()
+    }
+}
+
 fn pack_f64s(v: &[f64]) -> String {
     let mut s = String::with_capacity(v.len() * 16);
     for x in v {
@@ -359,6 +408,75 @@ mod tests {
         // Same hyper-parameters, different loss family: refused.
         cfg.problem = Problem::svm(0.5);
         assert!(c.compatible_with(&cfg).is_err());
+    }
+
+    #[test]
+    fn envelope_peek_reads_without_an_engine() {
+        let c = sample();
+        let path = std::env::temp_dir().join("sparkbench_envelope_peek_test.json");
+        c.save(&path).unwrap();
+        let env = Envelope::peek(&path).unwrap();
+        assert_eq!(env.version, 5);
+        assert_eq!(env.ckpt, c);
+        assert_eq!(env.n(), c.alpha.len());
+        assert_eq!(env.m(), c.v.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn envelope_peek_decodes_v1_envelopes() {
+        // A pre-problem envelope (flat lam_n/eta) peeks fine: serving only
+        // needs (α, v, problem, precision), all derivable from v1.
+        let mut j = sample().to_json();
+        j.set("version", 1.0)
+            .set("problem", Json::Null)
+            .set("lam_n", 0.5)
+            .set("eta", 1.0);
+        let path = std::env::temp_dir().join("sparkbench_envelope_v1_test.json");
+        crate::metrics::write_file(&path, &j.pretty()).unwrap();
+        let env = Envelope::peek(&path).unwrap();
+        assert_eq!(env.version, 1);
+        assert_eq!(env.ckpt.problem, Problem::ridge(0.5));
+        assert_eq!(env.ckpt.precision, Precision::F64);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn envelope_peek_refuses_corrupt_and_truncated_files() {
+        let tmp = std::env::temp_dir();
+        // Missing file.
+        assert!(Envelope::peek(&tmp.join("sparkbench_no_such_ckpt.json")).is_err());
+        // Truncated mid-payload: the JSON parser must reject it, and peek
+        // must surface that as an error, not a panic.
+        let full = sample().to_json().pretty();
+        let cut = tmp.join("sparkbench_envelope_truncated_test.json");
+        crate::metrics::write_file(&cut, &full[..full.len() / 2]).unwrap();
+        let err = Envelope::peek(&cut).unwrap_err();
+        assert!(err.contains("corrupt"), "{}", err);
+        // Valid JSON, corrupt hex payload.
+        let mut j = sample().to_json();
+        j.set("v_hex", "nothex!nothex!nothex!nothex!nothe");
+        let bad = tmp.join("sparkbench_envelope_badhex_test.json");
+        crate::metrics::write_file(&bad, &j.pretty()).unwrap();
+        assert!(Envelope::peek(&bad).is_err());
+        // Unknown version.
+        let mut j2 = sample().to_json();
+        j2.set("version", 99.0);
+        let v99 = tmp.join("sparkbench_envelope_v99_test.json");
+        crate::metrics::write_file(&v99, &j2.pretty()).unwrap();
+        let err = Envelope::peek(&v99).unwrap_err();
+        assert!(err.contains("version"), "{}", err);
+        // Structurally valid but empty model vectors: nothing to serve.
+        let mut empty = sample();
+        empty.alpha.clear();
+        empty.v.clear();
+        let e = tmp.join("sparkbench_envelope_empty_test.json");
+        empty.save(&e).unwrap();
+        let err = Envelope::peek(&e).unwrap_err();
+        assert!(err.contains("empty"), "{}", err);
+        for p in [cut, bad, v99, e] {
+            std::fs::remove_file(&p).ok();
+        }
     }
 
     #[test]

@@ -1,0 +1,371 @@
+//! Compressed sparse row matrix — the serving-side mirror of [`CscMatrix`].
+//!
+//! Training is column-oriented (every SCD step touches one feature column,
+//! hence CSC), but inference is row-oriented: one request = one datapoint
+//! = one sparse row dotted against the weight vector. [`CsrMatrix`] stores
+//! the same numbers row-major so a batch predict is a run of contiguous
+//! `linalg::dot_indexed` calls — the identical kernel (and SIMD dispatch)
+//! the training hot path uses (DESIGN.md §13).
+//!
+//! Two conversion paths exist:
+//!
+//! * [`CsrMatrix::from_csc`] — a counting-sort transposition of the index
+//!   structure with **bit-preserved** value copies ([`CsrMatrix::to_csc`]
+//!   inverts it exactly, see `prop_invariants.rs`);
+//! * [`CsrMatrix::transpose_of`] — a pure relabeling: a CSC matrix read
+//!   row-major IS its transpose. Zero arithmetic, so serving dual-layout
+//!   datapoints (stored as columns) reproduces the training-side
+//!   `matvec_t` sequence to the bit.
+//!
+//! The struct doubles as the request-batching **arena**: [`push_row`]
+//! appends a request, [`clear_rows`] recycles the storage with capacity
+//! retained, so a warmed batcher never touches the allocator
+//! (`testkit::alloc` asserts this).
+//!
+//! [`push_row`]: CsrMatrix::push_row
+//! [`clear_rows`]: CsrMatrix::clear_rows
+
+use super::sparse::CscMatrix;
+
+/// CSR matrix with u32 column indices (n < 2^32 always holds here).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    /// Rows (datapoints / requests).
+    pub m: usize,
+    /// Columns (features — the weight-vector dimension).
+    pub n: usize,
+    /// Row pointers, length m+1.
+    pub row_ptr: Vec<usize>,
+    /// Column indices, length nnz.
+    pub col_idx: Vec<u32>,
+    /// Values, length nnz.
+    pub vals: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Empty matrix of given shape.
+    pub fn zeros(m: usize, n: usize) -> CsrMatrix {
+        CsrMatrix {
+            m,
+            n,
+            row_ptr: vec![0; m + 1],
+            col_idx: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Empty arena over an `n`-dimensional feature space with storage
+    /// preallocated for `rows_cap` rows of ~`nnz_cap` total nonzeros —
+    /// the batching front end's request buffer.
+    pub fn arena(n: usize, rows_cap: usize, nnz_cap: usize) -> CsrMatrix {
+        let mut row_ptr = Vec::with_capacity(rows_cap + 1);
+        row_ptr.push(0);
+        CsrMatrix {
+            m: 0,
+            n,
+            row_ptr,
+            col_idx: Vec::with_capacity(nnz_cap),
+            vals: Vec::with_capacity(nnz_cap),
+        }
+    }
+
+    /// Row-major mirror of a CSC matrix: counting-sort transposition of
+    /// the index structure, values copied bit-exactly. Within each row the
+    /// column indices come out strictly ascending (columns are visited in
+    /// order), so [`validate`](CsrMatrix::validate) holds by construction.
+    pub fn from_csc(a: &CscMatrix) -> CsrMatrix {
+        assert!(a.n <= u32::MAX as usize, "n {} overflows u32 col_idx", a.n);
+        let nnz = a.nnz();
+        let mut row_ptr = vec![0usize; a.m + 1];
+        for &r in &a.row_idx {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..a.m {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut next = row_ptr[..a.m].to_vec();
+        let mut col_idx = vec![0u32; nnz];
+        let mut vals = vec![0.0f64; nnz];
+        for j in 0..a.n {
+            let (ri, vs) = a.col(j);
+            for (&r, &v) in ri.iter().zip(vs.iter()) {
+                let slot = next[r as usize];
+                next[r as usize] += 1;
+                col_idx[slot] = j as u32;
+                vals[slot] = v;
+            }
+        }
+        CsrMatrix {
+            m: a.m,
+            n: a.n,
+            row_ptr,
+            col_idx,
+            vals,
+        }
+    }
+
+    /// The transpose of a CSC matrix, by relabeling: CSC column-major
+    /// storage of `A` read row-major IS `Aᵀ`. No arithmetic, no index
+    /// work — rows of the result are exactly the columns of `a`, so a
+    /// per-row `dot_indexed` sweep reproduces `a.matvec_t` **bit for
+    /// bit**. This is how dual-layout datapoints (stored as label-scaled
+    /// columns) become servable rows.
+    pub fn transpose_of(a: &CscMatrix) -> CsrMatrix {
+        assert!(a.m <= u32::MAX as usize, "m {} overflows u32 col_idx", a.m);
+        CsrMatrix {
+            m: a.n,
+            n: a.m,
+            row_ptr: a.col_ptr.clone(),
+            col_idx: a.row_idx.clone(),
+            vals: a.vals.clone(),
+        }
+    }
+
+    /// Convert back to CSC — the exact inverse of
+    /// [`from_csc`](CsrMatrix::from_csc): same counting sort on the other
+    /// axis, values copied bit-exactly (`prop_invariants.rs` pins the
+    /// round trip both ways).
+    pub fn to_csc(&self) -> CscMatrix {
+        assert!(self.m <= u32::MAX as usize, "m {} overflows u32 row_idx", self.m);
+        let nnz = self.nnz();
+        let mut col_ptr = vec![0usize; self.n + 1];
+        for &c in &self.col_idx {
+            col_ptr[c as usize + 1] += 1;
+        }
+        for j in 0..self.n {
+            col_ptr[j + 1] += col_ptr[j];
+        }
+        let mut next = col_ptr[..self.n].to_vec();
+        let mut row_idx = vec![0u32; nnz];
+        let mut vals = vec![0.0f64; nnz];
+        for i in 0..self.m {
+            let (ci, vs) = self.row(i);
+            for (&c, &v) in ci.iter().zip(vs.iter()) {
+                let slot = next[c as usize];
+                next[c as usize] += 1;
+                row_idx[slot] = i as u32;
+                vals[slot] = v;
+            }
+        }
+        CscMatrix {
+            m: self.m,
+            n: self.n,
+            col_ptr,
+            row_idx,
+            vals,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Row i as (column indices, values) slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// nnz of row i.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// Append one sparse row (a request) to the arena. Column indices
+    /// must be strictly ascending and in bounds — the same invariant
+    /// [`validate`](CsrMatrix::validate) checks. Amortized allocation-free
+    /// once the arena's capacity has warmed up.
+    pub fn push_row(&mut self, idx: &[u32], vals: &[f64]) {
+        assert_eq!(idx.len(), vals.len(), "row idx/vals length mismatch");
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "row not strictly sorted");
+        if let Some(&last) = idx.last() {
+            assert!((last as usize) < self.n, "col {} out of bounds (n = {})", last, self.n);
+        }
+        self.col_idx.extend_from_slice(idx);
+        self.vals.extend_from_slice(vals);
+        self.row_ptr.push(self.col_idx.len());
+        self.m += 1;
+    }
+
+    /// Recycle the arena: drop all rows, keep every allocation (the
+    /// steady-state batching path reuses one arena forever).
+    pub fn clear_rows(&mut self) {
+        self.m = 0;
+        self.row_ptr.truncate(1);
+        self.col_idx.clear();
+        self.vals.clear();
+    }
+
+    /// `A @ x` (x over columns) → length-m vector of per-row dots.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// `A @ x` into a caller-owned buffer — allocation-free once the
+    /// buffer reached capacity. One `linalg::dot_indexed` per row (the
+    /// dispatched scalar/SIMD kernel), in row order; this sequence is the
+    /// serving hot path and the thing the sharded predict path must match
+    /// bit for bit.
+    pub fn matvec_into(&self, x: &[f64], out: &mut Vec<f64>) {
+        assert_eq!(x.len(), self.n);
+        out.clear();
+        out.reserve(self.m);
+        for i in 0..self.m {
+            let (ci, vs) = self.row(i);
+            out.push(crate::linalg::dot_indexed(ci, vs, x));
+        }
+    }
+
+    /// Structural validation (mirror of `CscMatrix::validate`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.m + 1 {
+            return Err(format!("row_ptr len {} != m+1", self.row_ptr.len()));
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() != self.nnz() {
+            return Err("row_ptr endpoints wrong".into());
+        }
+        if self.col_idx.len() != self.vals.len() {
+            return Err("col_idx/vals length mismatch".into());
+        }
+        for i in 0..self.m {
+            if self.row_ptr[i] > self.row_ptr[i + 1] {
+                return Err(format!("row_ptr not monotone at {}", i));
+            }
+            let (ci, _) = self.row(i);
+            for w in ci.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("cols not strictly sorted in row {}", i));
+                }
+            }
+            if let Some(&last) = ci.last() {
+                if last as usize >= self.n {
+                    return Err(format!("col {} out of bounds in row {}", last, i));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_csc() -> CscMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        CscMatrix::from_triplets(
+            3,
+            3,
+            &[(0, 0, 1.0), (2, 0, 4.0), (1, 1, 3.0), (0, 2, 2.0), (2, 2, 5.0)],
+        )
+    }
+
+    #[test]
+    fn from_csc_mirrors_rows() {
+        let r = CsrMatrix::from_csc(&sample_csc());
+        r.validate().unwrap();
+        assert_eq!(r.nnz(), 5);
+        assert_eq!(r.row(0), (&[0u32, 2][..], &[1.0, 2.0][..]));
+        assert_eq!(r.row(1), (&[1u32][..], &[3.0][..]));
+        assert_eq!(r.row(2), (&[0u32, 2][..], &[4.0, 5.0][..]));
+        assert_eq!(r.row_nnz(2), 2);
+    }
+
+    #[test]
+    fn csc_roundtrip_is_exact() {
+        let a = sample_csc();
+        assert_eq!(CsrMatrix::from_csc(&a).to_csc(), a);
+    }
+
+    #[test]
+    fn transpose_of_reads_columns_as_rows() {
+        let a = sample_csc();
+        let t = CsrMatrix::transpose_of(&a);
+        t.validate().unwrap();
+        assert_eq!((t.m, t.n), (3, 3));
+        for j in 0..a.n {
+            assert_eq!(t.row(j), a.col(j), "row {} of Aᵀ != col {} of A", j, j);
+        }
+        // Per-row dots over Aᵀ are the matvec_t sequence — bit-identical.
+        let y = [1.0, 0.25, -2.0];
+        let via_rows = t.matvec(&y);
+        let via_cols = a.matvec_t(&y);
+        for (r, c) in via_rows.iter().zip(via_cols.iter()) {
+            assert_eq!(r.to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn matvec_matches_csc() {
+        let a = sample_csc();
+        let r = CsrMatrix::from_csc(&a);
+        let x = [0.5, -1.0, 2.0];
+        let want = a.matvec(&x);
+        let got = r.matvec(&x);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-12, "{} vs {}", g, w);
+        }
+    }
+
+    #[test]
+    fn arena_push_and_clear_retain_capacity() {
+        let mut arena = CsrMatrix::arena(8, 4, 16);
+        arena.push_row(&[0, 3], &[1.0, -2.0]);
+        arena.push_row(&[], &[]);
+        arena.push_row(&[7], &[0.5]);
+        arena.validate().unwrap();
+        assert_eq!(arena.m, 3);
+        assert_eq!(arena.row(1), (&[][..], &[][..]));
+        assert_eq!(arena.row(2), (&[7u32][..], &[0.5][..]));
+        arena.clear_rows();
+        assert_eq!(arena.m, 0);
+        assert_eq!(arena.nnz(), 0);
+        // Steady state: refilling a warmed arena never allocates.
+        let before = crate::testkit::alloc::current_thread_allocations();
+        for _ in 0..10 {
+            arena.push_row(&[0, 3], &[1.0, -2.0]);
+            arena.push_row(&[], &[]);
+            arena.push_row(&[7], &[0.5]);
+            arena.clear_rows();
+        }
+        let after = crate::testkit::alloc::current_thread_allocations();
+        assert_eq!(after - before, 0, "warmed arena allocated");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn push_row_checks_bounds() {
+        let mut arena = CsrMatrix::arena(4, 1, 4);
+        arena.push_row(&[4], &[1.0]);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut r = CsrMatrix::from_csc(&sample_csc());
+        r.col_idx[0] = 99;
+        assert!(r.validate().is_err());
+        let mut r2 = CsrMatrix::from_csc(&sample_csc());
+        r2.row_ptr[1] = 5;
+        assert!(r2.validate().is_err());
+    }
+
+    #[test]
+    fn zeros_and_empty_rows() {
+        let r = CsrMatrix::zeros(3, 2);
+        r.validate().unwrap();
+        assert_eq!(r.matvec(&[1.0, 1.0]), vec![0.0; 3]);
+        // A matrix with an all-zero row and an all-zero column survives
+        // the round trip.
+        let a = CscMatrix::from_triplets(3, 3, &[(0, 0, 1.0), (2, 0, 2.0)]);
+        let rt = CsrMatrix::from_csc(&a);
+        assert_eq!(rt.row_nnz(1), 0);
+        assert_eq!(rt.to_csc(), a);
+    }
+}

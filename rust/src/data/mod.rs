@@ -4,8 +4,11 @@
 //! The paper distributes the data matrix `A ∈ R^{m×n}` **column-wise**:
 //! worker `k` owns columns `{c_i : i ∈ P_k}` and updates the corresponding
 //! coordinates `α_[k]`. Everything here is oriented around cheap column
-//! access, hence CSC storage.
+//! access, hence CSC storage. Serving inverts the access pattern — one
+//! request = one row — so [`csr`] carries a row-major mirror for the
+//! inference path (DESIGN.md §13).
 
+pub mod csr;
 pub mod dense;
 pub mod eval;
 pub mod libsvm;
@@ -13,7 +16,9 @@ pub mod partition;
 pub mod sparse;
 pub mod synthetic;
 
+pub use csr::CsrMatrix;
 pub use dense::DenseMatrix;
+pub use eval::{rmse, train_test_split};
 pub use partition::{Partitioner, Partitioning};
 pub use sparse::CscMatrix;
 

@@ -15,7 +15,8 @@
 //!   discrete-event cluster simulator ([`simnet`]), the CoCoA round
 //!   coordinator ([`coordinator`]), local solvers ([`solver`]) and the
 //!   experiment harness regenerating every figure of the paper
-//!   ([`experiments`]).
+//!   ([`experiments`]), and the train→serve handoff: zero-alloc batched
+//!   inference with a request-batching front end ([`serve`]).
 //! * **L2/L1 (build time, `python/compile`)** — the CoCoA local subproblem
 //!   as a JAX graph calling a Pallas SCD kernel, AOT-lowered to HLO text
 //!   and executed from rust through [`runtime`] (PJRT CPU client).
@@ -100,6 +101,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod problem;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod simnet;
 pub mod solver;
@@ -123,6 +125,7 @@ pub mod prelude {
 
     pub use crate::framework::{Engine, EngineOptions};
     pub use crate::problem::{LossKind, Problem};
+    pub use crate::serve::{BatchPolicy, Predictor, PrimalModel};
     pub use crate::session::{Session, StopPolicy};
 
     pub use crate::solver::LocalSolver;

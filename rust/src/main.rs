@@ -10,6 +10,8 @@
 //! sparkbench partition-stats [--workers 8]
 //! sparkbench list-artifacts
 //! sparkbench pjrt-smoke   # load + run the AOT artifact end to end
+//! sparkbench predict --ckpt FILE [--scale S] [--shards N]
+//! sparkbench serve   --ckpt FILE [--rate R] [--max-batch B] [--deadline-us D]
 //! ```
 
 use std::path::PathBuf;
@@ -36,6 +38,8 @@ fn main() {
         Some("partition-stats") => cmd_partition_stats(&args),
         Some("list-artifacts") => cmd_list_artifacts(),
         Some("pjrt-smoke") => cmd_pjrt_smoke(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("serve") => cmd_serve(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{}'\n", other);
             usage();
@@ -375,6 +379,183 @@ fn cmd_list_artifacts() -> i32 {
             1
         }
     }
+}
+
+/// Load a servable model from a checkpoint envelope — engine-free: no
+/// dataset, no session, just the envelope bytes (DESIGN.md §13).
+fn load_model(path: &str) -> Result<(u32, sparkbench::serve::PrimalModel), String> {
+    let env = sparkbench::coordinator::checkpoint::Envelope::peek(std::path::Path::new(path))?;
+    let model = sparkbench::serve::PrimalModel::from_checkpoint(&env.ckpt)?;
+    Ok((env.version, model))
+}
+
+/// Rebuild a request set matching the model's dimension. Squared-loss
+/// models predict the TEST split of the regenerated `--scale` corpus
+/// (seeded `train_test_split`, labels = targets); dual-loss models score
+/// a fresh separable corpus of matching dimension, whose label-scaled
+/// columns carry `+1` q-space labels (a positive score = correct — see
+/// `serve::OnlineEval::update`).
+fn build_requests(
+    args: &Args,
+    model: &sparkbench::serve::PrimalModel,
+) -> Result<(sparkbench::data::CsrMatrix, Vec<f64>), String> {
+    use sparkbench::data::CsrMatrix;
+    use sparkbench::problem::LossKind;
+    match model.problem().loss {
+        LossKind::Squared => {
+            let opts = exp_options(args);
+            let ds = opts.dataset();
+            if ds.n() != model.dim() {
+                return Err(format!(
+                    "--scale {} regenerates a {}-feature corpus but the checkpoint trained \
+                     {} features; pass the scale the model was trained on",
+                    opts.scale,
+                    ds.n(),
+                    model.dim()
+                ));
+            }
+            let (_, test) = sparkbench::data::train_test_split(&ds, 0.25, 42);
+            Ok((CsrMatrix::from_csc(&test.a), test.b))
+        }
+        LossKind::Hinge | LossKind::Logistic => {
+            let requests = args.get_usize("requests", 1024);
+            let (ds, _) =
+                sparkbench::data::synthetic::separable_classes(model.dim(), requests, 0.4, 42);
+            // Columns are the datapoints; the transpose's rows are the
+            // requests (a pure relabel of the CSC storage — zero copies
+            // of matrix structure beyond the buffers).
+            Ok((CsrMatrix::transpose_of(&ds.a), vec![1.0; requests]))
+        }
+    }
+}
+
+fn cmd_predict(args: &Args) -> i32 {
+    let Some(path) = args.get("ckpt") else {
+        eprintln!("usage: sparkbench predict --ckpt FILE [--scale S] [--shards N] [--requests N]");
+        return 2;
+    };
+    let (version, model) = match load_model(path) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{}", e);
+            return 1;
+        }
+    };
+    println!(
+        "loaded [{}] from {} (envelope v{}, dim {}, {} rounds, output: {})",
+        model.problem().label(),
+        path,
+        version,
+        model.dim(),
+        model.rounds(),
+        model.output().name()
+    );
+    let (rows, labels) = match build_requests(args, &model) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{}", e);
+            return 1;
+        }
+    };
+    let output = model.output();
+    let predictor = sparkbench::serve::Predictor::new(model);
+    let shards = args.get_usize("shards", 1);
+    let mut preds = Vec::with_capacity(rows.m);
+    let t0 = std::time::Instant::now();
+    predictor.predict_sharded_into(&rows, shards, &mut preds);
+    let dt = t0.elapsed().as_secs_f64();
+    use sparkbench::serve::Output;
+    match output {
+        Output::Value => println!(
+            "rmse={:.6} r2={:.4} over {} held-out rows",
+            sparkbench::data::rmse(&preds, &labels),
+            sparkbench::data::eval::r2(&preds, &labels),
+            preds.len()
+        ),
+        Output::Score | Output::Probability => {
+            let mut ev = sparkbench::serve::OnlineEval::new(output);
+            ev.update(&preds, &labels);
+            println!("{} over {} fresh datapoints", ev.summary(), preds.len());
+        }
+    }
+    println!(
+        "{} predictions in {:.6}s ({:.0} preds/s, {} shard(s))",
+        preds.len(),
+        dt,
+        preds.len() as f64 / dt.max(1e-12),
+        shards.max(1)
+    );
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let Some(path) = args.get("ckpt") else {
+        eprintln!(
+            "usage: sparkbench serve --ckpt FILE [--rate R] [--max-batch B] \
+             [--deadline-us D] [--shards N] [--requests N]"
+        );
+        return 2;
+    };
+    let (version, model) = match load_model(path) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{}", e);
+            return 1;
+        }
+    };
+    println!(
+        "serving [{}] from {} (envelope v{}, dim {}, {} rounds, output: {})",
+        model.problem().label(),
+        path,
+        version,
+        model.dim(),
+        model.rounds(),
+        model.output().name()
+    );
+    let (rows, labels) = match build_requests(args, &model) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{}", e);
+            return 1;
+        }
+    };
+    let max_batch = args.get_usize("max-batch", 64);
+    let deadline_us = args.get_f64("deadline-us", 1000.0);
+    if max_batch < 1 || !deadline_us.is_finite() || deadline_us <= 0.0 {
+        eprintln!("--max-batch must be >= 1 and --deadline-us > 0");
+        return 2;
+    }
+    let policy = sparkbench::serve::BatchPolicy::new(max_batch, deadline_us * 1e-6);
+    // Default arrival rate: 4× the cutover — the size-bound regime.
+    let rate = args.get_f64("rate", 4.0 * policy.cutover_rate());
+    if !rate.is_finite() || rate <= 0.0 {
+        eprintln!("--rate must be > 0 requests/sec");
+        return 2;
+    }
+    let shards = args.get_usize("shards", 1);
+    println!(
+        "policy: max_batch={} deadline={:.0}µs (cutover λ*={:.0}/s); \
+         replaying {} requests at {:.0}/s, {} shard(s)",
+        max_batch,
+        deadline_us,
+        policy.cutover_rate(),
+        rows.m,
+        rate,
+        shards.max(1)
+    );
+    let predictor = sparkbench::serve::Predictor::new(model);
+    let mut preds = Vec::new();
+    let stats = sparkbench::serve::replay(
+        &predictor,
+        &rows,
+        Some(&labels),
+        policy,
+        rate,
+        shards,
+        &mut preds,
+    );
+    println!("{}", stats.render());
+    0
 }
 
 pub(crate) fn fmt_b(b: u64) -> String {

@@ -1,0 +1,205 @@
+//! The request-batching front end: a size/deadline cutover rule.
+//!
+//! Requests queue in a reusable [`CsrMatrix`] arena and flush as one
+//! batch when either trigger fires:
+//!
+//! * **size** — the batch reached `max_batch` rows (throughput regime:
+//!   amortize per-batch overhead, keep the SIMD sweep long);
+//! * **deadline** — the *oldest* queued request has waited `max_delay`
+//!   seconds (latency regime: an idle trickle must not strand requests).
+//!
+//! The two regimes meet at the cutover arrival rate
+//! `λ* = max_batch / max_delay`: above λ* batches fill before the timer
+//! fires (every flush is a size flush, mean batch ≈ `max_batch`); below
+//! λ* the timer always wins (every flush is a deadline flush, mean batch
+//! ≈ λ·max_delay, and no request waits longer than `max_delay` plus one
+//! batch's compute). Same flavor as the sparse-frame byte-cost cutover of
+//! DESIGN.md §7: a closed-form knee that the stream replay measures
+//! instead of hard-coding a batch size.
+
+use crate::data::csr::CsrMatrix;
+
+/// Why a batch left the queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The batch filled to `max_batch` rows.
+    Size,
+    /// The oldest request's wait reached `max_delay`.
+    Deadline,
+    /// End of stream: whatever remained was flushed.
+    Drain,
+}
+
+/// The batching knobs. Immutable over a serve session.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush once the oldest queued request has waited this long (seconds).
+    pub max_delay: f64,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_delay: f64) -> BatchPolicy {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        assert!(max_delay > 0.0, "max_delay must be > 0");
+        BatchPolicy {
+            max_batch,
+            max_delay,
+        }
+    }
+
+    /// The arrival rate (requests/sec) separating the deadline-bound
+    /// regime (below) from the size-bound regime (above).
+    pub fn cutover_rate(&self) -> f64 {
+        self.max_batch as f64 / self.max_delay
+    }
+}
+
+/// Accumulates requests into a zero-alloc arena until a flush trigger
+/// fires. The caller owns the clock (times are plain `f64` seconds), so
+/// the policy is exactly testable with a virtual clock and reusable
+/// against a wall clock in the CLI.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: CsrMatrix,
+    arrivals: Vec<f64>,
+}
+
+impl Batcher {
+    /// A batcher over `dim`-dimensional requests. The arena preallocates
+    /// for `max_batch` rows so the steady state never allocates.
+    pub fn new(policy: BatchPolicy, dim: usize) -> Batcher {
+        Batcher {
+            pending: CsrMatrix::arena(dim, policy.max_batch, policy.max_batch * 8),
+            arrivals: Vec::with_capacity(policy.max_batch),
+            policy,
+        }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.m
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.m == 0
+    }
+
+    /// Queue one request arriving at time `now`. Returns `true` when the
+    /// push filled the batch to `max_batch` — the caller must flush
+    /// before pushing again.
+    pub fn push(&mut self, now: f64, idx: &[u32], vals: &[f64]) -> bool {
+        debug_assert!(
+            self.pending.m < self.policy.max_batch,
+            "pushed into a full batch — flush first"
+        );
+        self.pending.push_row(idx, vals);
+        self.arrivals.push(now);
+        self.pending.m >= self.policy.max_batch
+    }
+
+    /// The instant the deadline trigger fires: oldest arrival +
+    /// `max_delay`. `None` while the queue is empty.
+    pub fn deadline(&self) -> Option<f64> {
+        self.arrivals.first().map(|&t| t + self.policy.max_delay)
+    }
+
+    /// Which trigger (if any) has fired by time `now`.
+    pub fn due(&self, now: f64) -> Option<FlushReason> {
+        if self.pending.m >= self.policy.max_batch {
+            Some(FlushReason::Size)
+        } else {
+            match self.deadline() {
+                Some(d) if now >= d => Some(FlushReason::Deadline),
+                _ => None,
+            }
+        }
+    }
+
+    /// The queued batch: request rows plus their arrival times, in
+    /// arrival order.
+    pub fn batch(&self) -> (&CsrMatrix, &[f64]) {
+        (&self.pending, &self.arrivals)
+    }
+
+    /// Recycle after processing a flush — capacity retained, so a warmed
+    /// batcher's push/clear cycle is allocation-free.
+    pub fn clear(&mut self) {
+        self.pending.clear_rows();
+        self.arrivals.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cutover_rate_is_closed_form() {
+        let p = BatchPolicy::new(64, 0.002);
+        assert_eq!(p.cutover_rate(), 32_000.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_batch")]
+    fn zero_batch_rejected() {
+        BatchPolicy::new(0, 1.0);
+    }
+
+    #[test]
+    fn size_trigger_fires_at_max_batch() {
+        let mut b = Batcher::new(BatchPolicy::new(3, 1.0), 4);
+        assert!(b.is_empty());
+        assert!(!b.push(0.0, &[0], &[1.0]));
+        assert!(!b.push(0.1, &[1], &[1.0]));
+        assert_eq!(b.due(0.1), None);
+        assert!(b.push(0.2, &[2], &[1.0]));
+        assert_eq!(b.due(0.2), Some(FlushReason::Size));
+        let (rows, arrivals) = b.batch();
+        assert_eq!(rows.m, 3);
+        assert_eq!(arrivals, &[0.0, 0.1, 0.2]);
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.deadline(), None);
+    }
+
+    #[test]
+    fn deadline_trigger_tracks_the_oldest_request() {
+        let mut b = Batcher::new(BatchPolicy::new(100, 0.5), 4);
+        b.push(1.0, &[0], &[1.0]);
+        b.push(1.4, &[1], &[1.0]);
+        assert_eq!(b.deadline(), Some(1.5)); // oldest + max_delay
+        assert_eq!(b.due(1.49), None);
+        assert_eq!(b.due(1.5), Some(FlushReason::Deadline));
+        b.clear();
+        // After a flush the next request restarts the timer.
+        b.push(9.0, &[0], &[1.0]);
+        assert_eq!(b.deadline(), Some(9.5));
+    }
+
+    #[test]
+    fn warmed_batcher_cycle_never_allocates() {
+        let mut b = Batcher::new(BatchPolicy::new(4, 1.0), 8);
+        let idx = [0u32, 5];
+        let vals = [1.0, -1.0];
+        // Warm one full cycle, then the steady state must be silent.
+        for _ in 0..4 {
+            b.push(0.0, &idx, &vals);
+        }
+        b.clear();
+        let before = crate::testkit::alloc::current_thread_allocations();
+        for cycle in 0..10 {
+            for k in 0..4 {
+                b.push(cycle as f64 + 0.1 * k as f64, &idx, &vals);
+            }
+            b.clear();
+        }
+        let after = crate::testkit::alloc::current_thread_allocations();
+        assert_eq!(after - before, 0, "warmed batcher allocated");
+    }
+}

@@ -1,0 +1,42 @@
+//! Zero-alloc batched inference: the train→serve half of the system
+//! (DESIGN.md §13).
+//!
+//! The paper's north star is a production system serving heavy traffic
+//! from the models it trains; seven PRs built the training side of that
+//! story and this module closes the loop. Four pieces:
+//!
+//! * [`PrimalModel`] ([`model`]) — the servable artifact, extracted from a
+//!   finished [`Session`](crate::session::Session) (`run_extract`) or an
+//!   on-disk checkpoint envelope
+//!   ([`Envelope::peek`](crate::coordinator::checkpoint::Envelope::peek) —
+//!   engine-free, any v1–v5 envelope). All four `Problem` families map to
+//!   one representation: a dense weight vector dotted against sparse
+//!   request rows, plus a per-family output transform (regression value,
+//!   SVM decision score, logistic probability).
+//! * [`Predictor`] ([`predict`]) — the hot path: one
+//!   `linalg::dot_indexed` per request row over a
+//!   [`CsrMatrix`](crate::data::CsrMatrix) batch (the same dispatched
+//!   scalar/SIMD kernel training uses), zero steady-state allocations,
+//!   and a sharded multi-core variant that is **bit-identical** to the
+//!   sequential sweep (disjoint row ranges, identical per-row kernel
+//!   calls — order of independent writes cannot change any bit).
+//! * [`Batcher`] + [`BatchPolicy`] ([`batch`]) — the request-batching
+//!   front end: flush when the batch fills (`max_batch`) or when the
+//!   oldest request's wait hits the deadline (`max_delay`). The cutover
+//!   arrival rate λ* = max_batch/max_delay separates the two regimes the
+//!   same way PR 2's byte-cost cutover separates sparse from dense
+//!   frames: a measurable knee, not a hard-coded choice.
+//! * [`OnlineEval`] + [`replay`] ([`stream`]) — held-out stream replay:
+//!   online RMSE/accuracy, queue-wait and end-to-end latency percentiles
+//!   (p50/p99), and predictions/sec — the numbers
+//!   `BENCH_hotpath.json`'s `serving` section records.
+
+pub mod batch;
+pub mod model;
+pub mod predict;
+pub mod stream;
+
+pub use batch::{BatchPolicy, Batcher, FlushReason};
+pub use model::{Output, PrimalModel};
+pub use predict::Predictor;
+pub use stream::{replay, OnlineEval, ServeStats};

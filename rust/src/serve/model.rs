@@ -1,0 +1,245 @@
+//! The servable artifact: a primal weight vector extracted from training
+//! state, with the per-family output transform.
+//!
+//! ## Why one dense vector covers all four families
+//!
+//! Training maintains `(α, v = Aα)`. The serving-side weight vector
+//! depends on the layout the family trains (DESIGN.md §9, §13):
+//!
+//! * **Squared loss** (ridge / lasso / elastic): `A` is datapoints ×
+//!   features and α *is* the feature-space model — a request row `x`
+//!   predicts `ŷ = x·α`. Predicting the training rows themselves computes
+//!   `Aα`, i.e. exactly the training-side `v` (same sum, row-major
+//!   order, so equal to floating-point tolerance rather than bitwise).
+//! * **Dual losses** (SVM hinge, logistic): `A` is features × datapoints
+//!   with label-scaled columns `q_j = y_j·x_j`, and the trained primal
+//!   weight vector is `w = v = Aα` itself. A datapoint's decision score
+//!   is `x·v`; scoring the training columns computes `Aᵀv` through the
+//!   very same per-column `dot_indexed` calls training's `matvec_t`
+//!   issues — **bit-identical** to the training-side quantity
+//!   (`tests/integration_serve.rs` pins this).
+//!
+//! Checkpoint envelopes hex-pack both vectors bit-exactly, so a model
+//! extracted from disk is indistinguishable — to the bit — from one
+//! extracted from the live `Session` that wrote the checkpoint.
+
+use crate::config::Precision;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::problem::{LossKind, Problem};
+
+/// What a finalized prediction means, per problem family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Output {
+    /// Regression value `x·α` (ridge / lasso / elastic).
+    Value,
+    /// SVM decision score `x·v` (sign = class, magnitude = margin).
+    Score,
+    /// Logistic probability `σ(x·v)` of the positive class.
+    Probability,
+}
+
+impl Output {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Output::Value => "value",
+            Output::Score => "score",
+            Output::Probability => "probability",
+        }
+    }
+}
+
+/// A trained model in serving form: dense weights + output transform.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrimalModel {
+    problem: Problem,
+    precision: Precision,
+    rounds: usize,
+    weights: Vec<f64>,
+}
+
+impl PrimalModel {
+    /// Extract the serving weights from raw training state. For squared
+    /// loss the weights are α (feature space, length n); for the dual
+    /// losses they are `v = Aα` (feature space of the dual layout,
+    /// length m). The copied weights preserve every bit.
+    pub fn from_parts(
+        problem: Problem,
+        alpha: &[f64],
+        v: &[f64],
+        precision: Precision,
+        rounds: usize,
+    ) -> PrimalModel {
+        let weights = match problem.loss {
+            LossKind::Squared => alpha.to_vec(),
+            LossKind::Hinge | LossKind::Logistic => v.to_vec(),
+        };
+        PrimalModel {
+            problem,
+            precision,
+            rounds,
+            weights,
+        }
+    }
+
+    /// Extract from a decoded checkpoint (any envelope version — see
+    /// [`Envelope::peek`](crate::coordinator::checkpoint::Envelope::peek)
+    /// for the engine-free disk path). Errors if the checkpoint carries
+    /// no servable weights.
+    pub fn from_checkpoint(c: &Checkpoint) -> Result<PrimalModel, String> {
+        let model = PrimalModel::from_parts(c.problem, &c.alpha, &c.v, c.precision, c.round);
+        if model.weights.is_empty() {
+            return Err("checkpoint has an empty weight vector — nothing to serve".into());
+        }
+        Ok(model)
+    }
+
+    /// Request-row dimension: the length a request's dense index space
+    /// must match.
+    pub fn dim(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    pub fn problem(&self) -> &Problem {
+        &self.problem
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Training rounds behind these weights (provenance for logs).
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// The output transform this family's predictions go through.
+    pub fn output(&self) -> Output {
+        match self.problem.loss {
+            LossKind::Squared => Output::Value,
+            LossKind::Hinge => Output::Score,
+            LossKind::Logistic => Output::Probability,
+        }
+    }
+
+    /// Raw linear score of one sparse request row — ONE dispatched
+    /// `dot_indexed` kernel call, the entire per-request hot path.
+    #[inline]
+    pub fn raw_score(&self, idx: &[u32], vals: &[f64]) -> f64 {
+        crate::linalg::dot_indexed(idx, vals, &self.weights)
+    }
+
+    /// Apply the family's output transform to a raw score. `Value` and
+    /// `Score` are the identity — for those families every "finalized"
+    /// prediction is bit-identical to its raw score.
+    #[inline]
+    pub fn finalize(&self, raw: f64) -> f64 {
+        match self.output() {
+            Output::Value | Output::Score => raw,
+            Output::Probability => sigmoid(raw),
+        }
+    }
+
+    /// Finalized prediction for one sparse request row.
+    #[inline]
+    pub fn predict_one(&self, idx: &[u32], vals: &[f64]) -> f64 {
+        self.finalize(self.raw_score(idx, vals))
+    }
+}
+
+/// Numerically stable logistic sigmoid: never exponentiates a positive
+/// argument, so no overflow for any finite score.
+#[inline]
+pub fn sigmoid(s: f64) -> f64 {
+    if s >= 0.0 {
+        1.0 / (1.0 + (-s).exp())
+    } else {
+        let e = s.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_selects_weights_and_output() {
+        let alpha = vec![1.0, -2.0, 3.0];
+        let v = vec![0.5, 0.25];
+        let m = PrimalModel::from_parts(Problem::ridge(1.0), &alpha, &v, Precision::F64, 7);
+        assert_eq!(m.weights(), &alpha[..]);
+        assert_eq!(m.dim(), 3);
+        assert_eq!(m.output(), Output::Value);
+        assert_eq!(m.rounds(), 7);
+        let m = PrimalModel::from_parts(Problem::lasso(1.0), &alpha, &v, Precision::F64, 0);
+        assert_eq!(m.output(), Output::Value);
+        let m = PrimalModel::from_parts(Problem::svm(1.0), &alpha, &v, Precision::F64, 0);
+        assert_eq!(m.weights(), &v[..]);
+        assert_eq!(m.output(), Output::Score);
+        let m = PrimalModel::from_parts(Problem::logistic(1.0), &alpha, &v, Precision::F64, 0);
+        assert_eq!(m.weights(), &v[..]);
+        assert_eq!(m.output(), Output::Probability);
+        assert_eq!(m.output().name(), "probability");
+    }
+
+    #[test]
+    fn predict_one_is_a_sparse_dot() {
+        let m = PrimalModel::from_parts(
+            Problem::ridge(1.0),
+            &[1.0, 10.0, 100.0, 1000.0],
+            &[],
+            Precision::F64,
+            1,
+        );
+        // row = {0: 2, 3: 0.5} → 2·1 + 0.5·1000 = 502
+        assert_eq!(m.predict_one(&[0, 3], &[2.0, 0.5]), 502.0);
+        assert_eq!(m.predict_one(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn sigmoid_is_stable_and_symmetric() {
+        assert_eq!(sigmoid(0.0), 0.5);
+        assert!(sigmoid(40.0) > 0.999999);
+        assert!(sigmoid(-40.0) < 1e-6);
+        // No overflow at extreme scores.
+        assert_eq!(sigmoid(1e308), 1.0);
+        assert_eq!(sigmoid(-1e308), 0.0);
+        for s in [0.1, 1.5, 7.0] {
+            assert!((sigmoid(s) + sigmoid(-s) - 1.0).abs() < 1e-15);
+        }
+        // Logistic model finalizes through it.
+        let m = PrimalModel::from_parts(Problem::logistic(1.0), &[], &[2.0], Precision::F64, 1);
+        let p = m.predict_one(&[0], &[1.0]);
+        assert!((p - sigmoid(2.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn checkpoint_extraction_matches_parts_bitwise() {
+        let c = Checkpoint {
+            round: 12,
+            time: 1.0,
+            alpha: vec![1.0, f64::MIN_POSITIVE, -0.0, 1e300],
+            v: vec![3.25, -2.5],
+            problem: Problem::svm(2.0),
+            workers: 4,
+            threads_per_worker: 1,
+            precision: Precision::F64,
+            fault_cursor: 0,
+        };
+        let from_ckpt = PrimalModel::from_checkpoint(&c).unwrap();
+        let from_parts =
+            PrimalModel::from_parts(c.problem, &c.alpha, &c.v, c.precision, c.round);
+        assert_eq!(from_ckpt, from_parts);
+        for (a, b) in from_ckpt.weights().iter().zip(c.v.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Empty weights refuse.
+        let mut empty = c.clone();
+        empty.v.clear();
+        assert!(PrimalModel::from_checkpoint(&empty).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! The serving hot path: batch predict over a CSR request block.
+//!
+//! One dispatched `dot_indexed` per row (scalar or AVX2 — whatever
+//! `linalg::kernels` selected at startup), writing into a caller-owned
+//! buffer: **zero steady-state allocations** once the buffer has warmed
+//! up, asserted by the counting allocator in tests and the hotpath bench.
+//!
+//! The sharded variant fans the SAME per-row kernel calls across OS
+//! threads over disjoint, contiguous row ranges (`split_at_mut`, like the
+//! physical tree-reduce). Each prediction depends only on its own row and
+//! the shared read-only weights, so the sharded output is **bit-identical**
+//! to the sequential sweep — parallelism changes wall-clock, never a bit
+//! (`tests/integration_serve.rs` pins all four families).
+
+use crate::data::csr::CsrMatrix;
+
+use super::model::PrimalModel;
+
+/// A model wrapped for batch serving.
+#[derive(Debug, Clone)]
+pub struct Predictor {
+    model: PrimalModel,
+}
+
+impl Predictor {
+    pub fn new(model: PrimalModel) -> Predictor {
+        Predictor { model }
+    }
+
+    pub fn model(&self) -> &PrimalModel {
+        &self.model
+    }
+
+    /// Finalized predictions for every row of `rows`, into a caller-owned
+    /// buffer (cleared, then filled in row order). Allocation-free once
+    /// `out` has capacity for `rows.m` — THE steady-state serving path.
+    pub fn predict_into(&self, rows: &CsrMatrix, out: &mut Vec<f64>) {
+        assert_eq!(
+            rows.n,
+            self.model.dim(),
+            "request dimension {} != model dimension {}",
+            rows.n,
+            self.model.dim()
+        );
+        out.clear();
+        out.reserve(rows.m);
+        for i in 0..rows.m {
+            let (ci, vs) = rows.row(i);
+            out.push(self.model.predict_one(ci, vs));
+        }
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`predict_into`](Predictor::predict_into).
+    pub fn predict(&self, rows: &CsrMatrix) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.predict_into(rows, &mut out);
+        out
+    }
+
+    /// Multi-core batch predict: split the rows into `shards` contiguous
+    /// ranges and sweep them on OS threads, each writing its own disjoint
+    /// slice of `out`. Per-row work is the identical `predict_one` call
+    /// the sequential path makes, so the result is bit-identical to
+    /// [`predict_into`](Predictor::predict_into) for any shard count.
+    /// Thread spawns allocate — this path trades the zero-alloc guarantee
+    /// for wall-clock on large batches; `shards <= 1` falls back to the
+    /// sequential sweep.
+    pub fn predict_sharded_into(&self, rows: &CsrMatrix, shards: usize, out: &mut Vec<f64>) {
+        if shards <= 1 || rows.m <= 1 {
+            self.predict_into(rows, out);
+            return;
+        }
+        assert_eq!(
+            rows.n,
+            self.model.dim(),
+            "request dimension {} != model dimension {}",
+            rows.n,
+            self.model.dim()
+        );
+        let shards = shards.min(rows.m);
+        out.clear();
+        out.resize(rows.m, 0.0);
+        // Balanced contiguous ranges: the first `rem` shards get one extra
+        // row. Range boundaries cannot affect bits — rows are independent.
+        let base = rows.m / shards;
+        let rem = rows.m % shards;
+        std::thread::scope(|scope| {
+            let mut rest = &mut out[..];
+            let mut lo = 0usize;
+            for s in 0..shards {
+                let len = base + usize::from(s < rem);
+                let (chunk, tail) = rest.split_at_mut(len);
+                rest = tail;
+                let start = lo;
+                lo += len;
+                scope.spawn(move || {
+                    for (k, slot) in chunk.iter_mut().enumerate() {
+                        let (ci, vs) = rows.row(start + k);
+                        *slot = self.model.predict_one(ci, vs);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+    use crate::data::synthetic::{webspam_like, SyntheticSpec};
+    use crate::problem::Problem;
+
+    fn ridge_predictor(n: usize) -> Predictor {
+        let alpha: Vec<f64> = (0..n).map(|j| (j as f64 * 0.37).sin()).collect();
+        Predictor::new(PrimalModel::from_parts(
+            Problem::ridge(1.0),
+            &alpha,
+            &[],
+            Precision::F64,
+            1,
+        ))
+    }
+
+    #[test]
+    fn batched_predict_matches_per_row_calls() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let rows = CsrMatrix::from_csc(&ds.a);
+        let p = ridge_predictor(ds.n());
+        let got = p.predict(&rows);
+        assert_eq!(got.len(), rows.m);
+        for i in 0..rows.m {
+            let (ci, vs) = rows.row(i);
+            assert_eq!(got[i].to_bits(), p.model().predict_one(ci, vs).to_bits());
+        }
+    }
+
+    #[test]
+    fn warmed_batch_predict_never_allocates() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let rows = CsrMatrix::from_csc(&ds.a);
+        let p = ridge_predictor(ds.n());
+        let mut out = Vec::new();
+        p.predict_into(&rows, &mut out); // warm the buffer
+        let before = crate::testkit::alloc::current_thread_allocations();
+        for _ in 0..20 {
+            p.predict_into(&rows, &mut out);
+        }
+        let after = crate::testkit::alloc::current_thread_allocations();
+        assert_eq!(after - before, 0, "steady-state batched predict allocated");
+    }
+
+    #[test]
+    fn sharded_is_bit_identical_for_any_shard_count() {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let rows = CsrMatrix::from_csc(&ds.a);
+        let p = ridge_predictor(ds.n());
+        let seq = p.predict(&rows);
+        let mut out = Vec::new();
+        for shards in [1, 2, 3, 7, rows.m, rows.m + 5] {
+            p.predict_sharded_into(&rows, shards, &mut out);
+            assert_eq!(out.len(), seq.len());
+            for (i, (a, b)) in out.iter().zip(seq.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {} differs at {} shards", i, shards);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let p = ridge_predictor(16);
+        let arena = CsrMatrix::arena(16, 4, 8);
+        let mut out = vec![1.0; 3];
+        p.predict_into(&arena, &mut out);
+        assert!(out.is_empty());
+        p.predict_sharded_into(&arena, 4, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "request dimension")]
+    fn dimension_mismatch_panics() {
+        let p = ridge_predictor(8);
+        let rows = CsrMatrix::zeros(2, 9);
+        p.predict_into(&rows, &mut Vec::new());
+    }
+}

@@ -1,0 +1,441 @@
+//! Held-out stream replay: online quality metrics plus latency and
+//! throughput measurement for the batching front end.
+//!
+//! [`replay`] drives a request stream (rows of a
+//! [`CsrMatrix`](crate::data::CsrMatrix), in arrival order) through a
+//! [`Batcher`] at a given arrival rate on a **virtual clock** — arrival
+//! `i` lands at `i/rate` seconds — so queueing behavior (flush reasons,
+//! batch sizes, per-request waits) is exactly reproducible. Only batch
+//! *compute* is measured on the wall clock; end-to-end latency is
+//! virtual wait + measured compute. The predictions that come out are
+//! bit-identical to one sequential sweep over the whole stream
+//! (batching slices the row sweep, it never reorders or re-associates a
+//! single dot product).
+
+use std::time::Instant;
+
+use crate::data::csr::CsrMatrix;
+use crate::util::pool::F64Pool;
+
+use super::batch::{BatchPolicy, Batcher, FlushReason};
+use super::model::Output;
+use super::predict::Predictor;
+
+/// Running quality metrics over a served stream, per output family:
+/// RMSE for regression values, accuracy for classification. Accumulates
+/// in stream order, so the final RMSE is bit-identical to
+/// `data::eval::rmse` over the concatenated stream.
+#[derive(Debug, Clone)]
+pub struct OnlineEval {
+    output: Output,
+    count: usize,
+    sq_err: f64,
+    correct: usize,
+}
+
+impl OnlineEval {
+    pub fn new(output: Output) -> OnlineEval {
+        OnlineEval {
+            output,
+            count: 0,
+            sq_err: 0.0,
+            correct: 0,
+        }
+    }
+
+    /// Fold one batch of finalized predictions against its labels.
+    /// Regression labels are target values; classification labels are ±1
+    /// **in the same space as the predictions** — for dual-layout rows
+    /// (label-scaled `q_j = y_j·x_j`), a score `q_j·v > 0` means correct,
+    /// so pass `+1` labels there.
+    pub fn update(&mut self, preds: &[f64], labels: &[f64]) {
+        assert_eq!(preds.len(), labels.len());
+        self.count += preds.len();
+        match self.output {
+            Output::Value => {
+                for (p, y) in preds.iter().zip(labels.iter()) {
+                    self.sq_err += (p - y) * (p - y);
+                }
+            }
+            Output::Score => {
+                self.correct += preds
+                    .iter()
+                    .zip(labels.iter())
+                    .filter(|(&p, &y)| p * y > 0.0)
+                    .count();
+            }
+            Output::Probability => {
+                // p > ½ predicts the positive class.
+                self.correct += preds
+                    .iter()
+                    .zip(labels.iter())
+                    .filter(|(&p, &y)| (p - 0.5) * y > 0.0)
+                    .count();
+            }
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Running RMSE (regression streams; `None` for classifiers).
+    pub fn rmse(&self) -> Option<f64> {
+        match self.output {
+            Output::Value if self.count > 0 => Some((self.sq_err / self.count as f64).sqrt()),
+            Output::Value => Some(0.0),
+            _ => None,
+        }
+    }
+
+    /// Running accuracy (classification streams; `None` for regression).
+    pub fn accuracy(&self) -> Option<f64> {
+        match self.output {
+            Output::Score | Output::Probability if self.count > 0 => {
+                Some(self.correct as f64 / self.count as f64)
+            }
+            Output::Score | Output::Probability => Some(0.0),
+            _ => None,
+        }
+    }
+
+    /// One-line metric for logs: `rmse=…` or `accuracy=…`.
+    pub fn summary(&self) -> String {
+        match (self.rmse(), self.accuracy()) {
+            (Some(r), _) => format!("rmse={:.6}", r),
+            (_, Some(a)) => format!("accuracy={:.4}", a),
+            _ => "n/a".into(),
+        }
+    }
+}
+
+/// What a stream replay measured.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub size_flushes: usize,
+    pub deadline_flushes: usize,
+    pub drain_flushes: usize,
+    /// Mean rows per batch.
+    pub mean_batch: f64,
+    pub max_batch_seen: usize,
+    /// Virtual queue wait percentiles (seconds) — deterministic.
+    pub wait_p50_s: f64,
+    pub wait_p99_s: f64,
+    /// End-to-end latency percentiles: virtual wait + measured compute.
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+    /// Total wall-clock compute across all batches (seconds).
+    pub compute_s: f64,
+    /// Requests / compute_s — the raw serving throughput.
+    pub preds_per_sec: f64,
+    /// Online quality over the stream.
+    pub eval: OnlineEval,
+}
+
+impl ServeStats {
+    /// Multi-line human summary for the CLI.
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} batches={} (size {} / deadline {} / drain {}) mean_batch={:.1} max={}\n\
+             wait    p50={:.1}µs p99={:.1}µs (virtual queueing)\n\
+             latency p50={:.1}µs p99={:.1}µs (wait + measured compute)\n\
+             throughput {:.0} preds/s over {:.4}s compute; {}",
+            self.requests,
+            self.batches,
+            self.size_flushes,
+            self.deadline_flushes,
+            self.drain_flushes,
+            self.mean_batch,
+            self.max_batch_seen,
+            self.wait_p50_s * 1e6,
+            self.wait_p99_s * 1e6,
+            self.latency_p50_s * 1e6,
+            self.latency_p99_s * 1e6,
+            self.preds_per_sec,
+            self.compute_s,
+            self.eval.summary()
+        )
+    }
+}
+
+/// Nearest-rank percentile of an unsorted sample (sorts a copy — cold
+/// path, runs once per replay).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((s.len() as f64 - 1.0) * p).round() as usize;
+    s[idx.min(s.len() - 1)]
+}
+
+struct ReplayState<'a> {
+    predictor: &'a Predictor,
+    batcher: Batcher,
+    shards: usize,
+    pool: F64Pool,
+    labels: Option<&'a [f64]>,
+    served: usize,
+    preds_out: &'a mut Vec<f64>,
+    eval: OnlineEval,
+    waits: Vec<f64>,
+    lats: Vec<f64>,
+    compute_s: f64,
+    batches: usize,
+    size_flushes: usize,
+    deadline_flushes: usize,
+    drain_flushes: usize,
+    max_batch_seen: usize,
+}
+
+impl ReplayState<'_> {
+    fn flush(&mut self, t_flush: f64, reason: FlushReason) {
+        let (rows, arrivals) = self.batcher.batch();
+        let b = rows.m;
+        debug_assert!(b > 0, "flushed an empty batch");
+        let mut scores = self.pool.take_cleared();
+        let t0 = Instant::now();
+        if self.shards > 1 {
+            self.predictor.predict_sharded_into(rows, self.shards, &mut scores);
+        } else {
+            self.predictor.predict_into(rows, &mut scores);
+        }
+        let batch_compute = t0.elapsed().as_secs_f64();
+        self.compute_s += batch_compute;
+        for &arr in arrivals {
+            let wait = t_flush - arr;
+            self.waits.push(wait);
+            self.lats.push(wait + batch_compute);
+        }
+        if let Some(labels) = self.labels {
+            self.eval
+                .update(&scores, &labels[self.served..self.served + b]);
+        }
+        self.preds_out.extend_from_slice(&scores);
+        self.pool.put(scores);
+        self.served += b;
+        self.batches += 1;
+        self.max_batch_seen = self.max_batch_seen.max(b);
+        match reason {
+            FlushReason::Size => self.size_flushes += 1,
+            FlushReason::Deadline => self.deadline_flushes += 1,
+            FlushReason::Drain => self.drain_flushes += 1,
+        }
+        self.batcher.clear();
+    }
+}
+
+/// Replay `rows` as a request stream arriving at `rate` requests/sec
+/// through the batching front end, predicting each flushed batch
+/// (sharded across `shards` threads when > 1). Predictions land in
+/// `preds_out` in request order, bit-identical to one sequential
+/// `predict_into` over the whole stream. `labels`, when given, must
+/// align with `rows` (see [`OnlineEval::update`] for the classification
+/// label convention).
+pub fn replay(
+    predictor: &Predictor,
+    rows: &CsrMatrix,
+    labels: Option<&[f64]>,
+    policy: BatchPolicy,
+    rate: f64,
+    shards: usize,
+    preds_out: &mut Vec<f64>,
+) -> ServeStats {
+    assert!(rate > 0.0, "arrival rate must be > 0");
+    if let Some(l) = labels {
+        assert_eq!(l.len(), rows.m, "labels must align with request rows");
+    }
+    preds_out.clear();
+    preds_out.reserve(rows.m);
+    let mut st = ReplayState {
+        predictor,
+        batcher: Batcher::new(policy, rows.n),
+        shards,
+        pool: F64Pool::with_buffers(1, policy.max_batch),
+        labels,
+        served: 0,
+        preds_out,
+        eval: OnlineEval::new(predictor.model().output()),
+        waits: Vec::with_capacity(rows.m),
+        lats: Vec::with_capacity(rows.m),
+        compute_s: 0.0,
+        batches: 0,
+        size_flushes: 0,
+        deadline_flushes: 0,
+        drain_flushes: 0,
+        max_batch_seen: 0,
+    };
+    for i in 0..rows.m {
+        let t_arr = i as f64 / rate;
+        // The deadline timer may fire before this arrival: flush at the
+        // timer instant, not at the arrival that observed it.
+        if let Some(d) = st.batcher.deadline() {
+            if d <= t_arr {
+                st.flush(d, FlushReason::Deadline);
+            }
+        }
+        let (ci, vs) = rows.row(i);
+        if st.batcher.push(t_arr, ci, vs) {
+            st.flush(t_arr, FlushReason::Size);
+        }
+    }
+    if !st.batcher.is_empty() {
+        // End of stream: the pending tail flushes when its timer fires.
+        let d = st.batcher.deadline().expect("non-empty batcher has a deadline");
+        st.flush(d, FlushReason::Drain);
+    }
+    debug_assert_eq!(st.served, rows.m);
+    let requests = rows.m;
+    ServeStats {
+        requests,
+        batches: st.batches,
+        size_flushes: st.size_flushes,
+        deadline_flushes: st.deadline_flushes,
+        drain_flushes: st.drain_flushes,
+        mean_batch: if st.batches > 0 {
+            requests as f64 / st.batches as f64
+        } else {
+            0.0
+        },
+        max_batch_seen: st.max_batch_seen,
+        wait_p50_s: percentile(&st.waits, 0.50),
+        wait_p99_s: percentile(&st.waits, 0.99),
+        latency_p50_s: percentile(&st.lats, 0.50),
+        latency_p99_s: percentile(&st.lats, 0.99),
+        compute_s: st.compute_s,
+        preds_per_sec: requests as f64 / st.compute_s.max(1e-12),
+        eval: st.eval,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+    use crate::data::synthetic::{webspam_like, SyntheticSpec};
+    use crate::problem::Problem;
+    use crate::serve::model::PrimalModel;
+
+    fn setup() -> (CsrMatrix, Vec<f64>, Predictor) {
+        let ds = webspam_like(&SyntheticSpec::small());
+        let rows = CsrMatrix::from_csc(&ds.a);
+        let alpha: Vec<f64> = (0..ds.n()).map(|j| (j as f64 * 0.11).cos() * 0.1).collect();
+        let p = Predictor::new(PrimalModel::from_parts(
+            Problem::ridge(1.0),
+            &alpha,
+            &[],
+            Precision::F64,
+            1,
+        ));
+        (rows, ds.b.clone(), p)
+    }
+
+    #[test]
+    fn online_rmse_matches_batch_rmse_bitwise() {
+        let mut ev = OnlineEval::new(Output::Value);
+        let preds = [1.0, 2.5, -0.5, 4.0, 0.0];
+        let labels = [1.5, 2.0, 0.0, 3.0, 1.0];
+        // Fold in two uneven batches — same left-to-right order.
+        ev.update(&preds[..2], &labels[..2]);
+        ev.update(&preds[2..], &labels[2..]);
+        assert_eq!(ev.count(), 5);
+        assert_eq!(
+            ev.rmse().unwrap().to_bits(),
+            crate::data::eval::rmse(&preds, &labels).to_bits()
+        );
+        assert!(ev.accuracy().is_none());
+    }
+
+    #[test]
+    fn online_accuracy_handles_scores_and_probabilities() {
+        let mut score = OnlineEval::new(Output::Score);
+        score.update(&[2.0, -1.0, 0.5], &[1.0, 1.0, 1.0]);
+        assert!((score.accuracy().unwrap() - 2.0 / 3.0).abs() < 1e-12);
+        assert!(score.rmse().is_none());
+        let mut prob = OnlineEval::new(Output::Probability);
+        prob.update(&[0.9, 0.4, 0.6, 0.5], &[1.0, -1.0, -1.0, 1.0]);
+        // 0.9→+ ✓, 0.4→− ✓, 0.6→+ ✗, 0.5 undecided ✗
+        assert!((prob.accuracy().unwrap() - 0.5).abs() < 1e-12);
+        assert!(prob.summary().starts_with("accuracy="));
+    }
+
+    #[test]
+    fn replay_preds_are_bit_identical_to_one_sequential_sweep() {
+        let (rows, labels, p) = setup();
+        let seq = p.predict(&rows);
+        for (rate, shards) in [(1e5, 1), (300.0, 1), (1e5, 4)] {
+            let mut preds = Vec::new();
+            let stats = replay(
+                &p,
+                &rows,
+                Some(&labels),
+                BatchPolicy::new(16, 0.01),
+                rate,
+                shards,
+                &mut preds,
+            );
+            assert_eq!(stats.requests, rows.m);
+            assert_eq!(preds.len(), seq.len());
+            for (i, (a, b)) in preds.iter().zip(seq.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {} (rate {})", i, rate);
+            }
+            assert_eq!(stats.eval.count(), rows.m);
+        }
+    }
+
+    #[test]
+    fn fast_arrivals_land_in_the_size_regime() {
+        let (rows, _, p) = setup();
+        let policy = BatchPolicy::new(8, 0.01); // cutover at 800/s
+        let mut preds = Vec::new();
+        let stats = replay(&p, &rows, None, policy, 100_000.0, 1, &mut preds);
+        // Far above cutover: every non-drain flush is a size flush of
+        // exactly max_batch rows.
+        assert_eq!(stats.deadline_flushes, 0);
+        assert_eq!(stats.size_flushes, rows.m / 8);
+        assert_eq!(stats.max_batch_seen, 8);
+        assert!(stats.drain_flushes <= 1);
+        // Queue waits are bounded by the fill time, way under the deadline.
+        assert!(stats.wait_p99_s < 8.0 / 100_000.0 + 1e-12);
+    }
+
+    #[test]
+    fn slow_arrivals_land_in_the_deadline_regime() {
+        let (rows, _, p) = setup();
+        let policy = BatchPolicy::new(8, 0.01); // cutover at 800/s
+        let mut preds = Vec::new();
+        // Inter-arrival (0.1s) ≫ max_delay so every timer fires long
+        // before the next arrival — regime membership is fp-robust.
+        let stats = replay(&p, &rows, None, policy, 10.0, 1, &mut preds);
+        // Far below cutover: the timer always wins — no size flush, and
+        // no request ever waits past the deadline.
+        assert_eq!(stats.size_flushes, 0);
+        assert!(stats.deadline_flushes > 0);
+        assert!(stats.mean_batch < 2.0);
+        assert!(stats.wait_p99_s <= policy.max_delay + 1e-12);
+        // Deadline flushes wait exactly max_delay (virtual clock).
+        assert!((stats.wait_p50_s - policy.max_delay).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replay_evaluates_the_stream() {
+        let (rows, labels, p) = setup();
+        let mut preds = Vec::new();
+        let stats = replay(
+            &p,
+            &rows,
+            Some(&labels),
+            BatchPolicy::new(32, 0.001),
+            1e6,
+            1,
+            &mut preds,
+        );
+        let want = crate::data::eval::rmse(&preds, &labels);
+        assert_eq!(stats.eval.rmse().unwrap().to_bits(), want.to_bits());
+        assert!(stats.preds_per_sec > 0.0);
+        assert!(stats.render().contains("rmse="));
+    }
+}

@@ -537,6 +537,17 @@ impl<'a> Session<'a> {
     /// other driver in the crate (the deprecated `coordinator` shims, the
     /// tuner's grid search, the experiments, the CLI) delegates here.
     pub fn run(self) -> TrainReport {
+        self.run_extract().0
+    }
+
+    /// [`run`](Session::run), plus extraction of the servable
+    /// [`PrimalModel`](crate::serve::PrimalModel) from the final training
+    /// state — the live-session half of the train→serve handoff
+    /// (DESIGN.md §13). The weights copy α (squared loss) or `v = Aα`
+    /// (dual losses) bit-exactly, so a model extracted here is
+    /// bit-identical to one decoded from a checkpoint the same session
+    /// wrote at its final round.
+    pub fn run_extract(self) -> (TrainReport, crate::serve::PrimalModel) {
         let Session {
             ds,
             mut engine,
@@ -727,7 +738,14 @@ impl<'a> Session<'a> {
         for obs in observers.iter_mut() {
             obs.on_complete(&report);
         }
-        report
+        let model = crate::serve::PrimalModel::from_parts(
+            cfg.problem,
+            &engine.get().alpha_global(),
+            &v,
+            cfg.precision,
+            start_round + report.rounds,
+        );
+        (report, model)
     }
 }
 

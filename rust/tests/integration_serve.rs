@@ -1,0 +1,282 @@
+//! End-to-end serving invariants (DESIGN.md §13): model extraction from
+//! live sessions and checkpoint envelopes, bit-identity of the batched /
+//! sharded / replayed prediction paths, consistency of served predictions
+//! with training-side quantities for all four problem families, and the
+//! zero-allocation discipline of the steady-state hot path.
+
+use sparkbench::config::Impl;
+use sparkbench::coordinator::checkpoint::Envelope;
+use sparkbench::data::synthetic::{separable_classes, webspam_like, SyntheticSpec};
+use sparkbench::data::{train_test_split, CsrMatrix, Dataset};
+use sparkbench::problem::Problem;
+use sparkbench::serve::{replay, BatchPolicy, OnlineEval, Output, Predictor, PrimalModel};
+use sparkbench::session::{CheckpointEvery, Session, StopPolicy};
+use sparkbench::testkit::alloc::{current_thread_allocations, CountingAllocator};
+
+// Counting allocator for this binary, so the zero-alloc assertions below
+// measure the real serving path (uninstalled, the counter never moves).
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn small() -> Dataset {
+    webspam_like(&SyntheticSpec::small())
+}
+
+/// Train a squared-loss model for `rounds` and extract it from the live
+/// session.
+fn squared_model(ds: &Dataset, problem: Problem, rounds: usize) -> PrimalModel {
+    let (report, model) = Session::builder(ds)
+        .engine(Impl::Mpi)
+        .problem(problem)
+        .fixed_rounds(rounds)
+        .build()
+        .unwrap()
+        .run_extract();
+    assert_eq!(report.rounds, rounds);
+    model
+}
+
+/// Train a dual-loss (SVM / logistic) model to the duality-gap
+/// certificate and extract it from the live session.
+fn dual_model(ds: &Dataset, problem: Problem) -> PrimalModel {
+    let mut cfg = sparkbench::config::TrainConfig::default_for(ds);
+    cfg.workers = 3;
+    cfg.max_rounds = 4000;
+    let (report, model) = Session::builder(ds)
+        .engine(Impl::Mpi)
+        .config(cfg)
+        .problem(problem)
+        .stop(StopPolicy::ToGap { gap: 1e-3 })
+        .build()
+        .unwrap()
+        .run_extract();
+    assert!(
+        report.time_to_target.is_some(),
+        "{} missed the gap target",
+        problem.kind_name()
+    );
+    model
+}
+
+#[test]
+fn extracted_squared_model_is_consistent_with_training_v() {
+    // For squared loss the served weights are α, and predicting the
+    // training rows computes Aα — the very quantity training maintains as
+    // v. Row-major summation order differs from the CSC column sweep, so
+    // the match is to fp tolerance (the bit-exact claims live in the
+    // dual-family and path-identity tests).
+    let ds = small();
+    let model = squared_model(&ds, Problem::ridge(1.0), 25);
+    assert_eq!(model.output(), Output::Value);
+    assert_eq!(model.dim(), ds.n());
+    assert_eq!(model.rounds(), 25);
+    let v_ref = ds.shared_vector(model.weights());
+    let rows = CsrMatrix::from_csc(&ds.a);
+    let preds = Predictor::new(model).predict(&rows);
+    for (i, (p, v)) in preds.iter().zip(v_ref.iter()).enumerate() {
+        let tol = 1e-10 * (1.0 + v.abs());
+        assert!((p - v).abs() <= tol, "row {}: {} vs v {}", i, p, v);
+    }
+}
+
+#[test]
+fn dual_models_serve_bit_identically_to_training_side_matvec_t() {
+    // For the dual families the served weights are v = Aα and a request
+    // row of Aᵀ aliases a column of A, so per-row serving dots issue the
+    // SAME dot_indexed calls as training's matvec_t — bit-identical raw
+    // scores, and (for logistic) bit-identical probabilities through the
+    // same sigmoid.
+    let (ds, _labels) = separable_classes(32, 128, 0.5, 23);
+    for problem in [Problem::svm(1.0), Problem::logistic(1.0)] {
+        let model = dual_model(&ds, problem);
+        assert_eq!(model.dim(), ds.m());
+        let want_raw = ds.a.matvec_t(model.weights());
+        let output = model.output();
+        let rows = CsrMatrix::transpose_of(&ds.a);
+        let predictor = Predictor::new(model);
+        let preds = predictor.predict(&rows);
+        assert_eq!(preds.len(), want_raw.len());
+        for (i, (p, raw)) in preds.iter().zip(want_raw.iter()).enumerate() {
+            let want = match output {
+                Output::Score => *raw,
+                Output::Probability => sparkbench::serve::model::sigmoid(*raw),
+                Output::Value => unreachable!("dual family produced a Value output"),
+            };
+            assert_eq!(
+                p.to_bits(),
+                want.to_bits(),
+                "{} row {}: {} vs {}",
+                problem.kind_name(),
+                i,
+                p,
+                want
+            );
+        }
+        // Converged separable models classify their q-space datapoints
+        // (+1 labels: a positive score means correct) nearly perfectly.
+        let ones = vec![1.0; preds.len()];
+        let mut ev = OnlineEval::new(output);
+        ev.update(&preds, &ones);
+        assert!(
+            ev.accuracy().unwrap() >= 0.8,
+            "{} accuracy {}",
+            problem.kind_name(),
+            ev.accuracy().unwrap()
+        );
+    }
+}
+
+#[test]
+fn checkpoint_extracted_model_matches_the_live_session_bitwise() {
+    // A session that checkpoints at its final round and the model
+    // extracted from that session must be indistinguishable: the envelope
+    // hex-packs every f64 bit-exactly, and Envelope::peek needs no
+    // engine, dataset or session to get them back.
+    let ds = small();
+    let path = std::env::temp_dir().join("sparkbench_serve_ckpt_roundtrip.json");
+    let (report, live) = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .fixed_rounds(20)
+        .observe(CheckpointEvery::new(5, &path))
+        .build()
+        .unwrap()
+        .run_extract();
+    assert_eq!(report.rounds, 20);
+    let env = Envelope::peek(&path).unwrap();
+    assert_eq!(env.version, 5);
+    assert_eq!(env.ckpt.round, 20);
+    let from_disk = PrimalModel::from_checkpoint(&env.ckpt).unwrap();
+    assert_eq!(from_disk.dim(), live.dim());
+    assert_eq!(from_disk.rounds(), live.rounds());
+    for (a, b) in from_disk.weights().iter().zip(live.weights().iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // Identical weights ⇒ identical predictions, to the bit.
+    let (_, test) = train_test_split(&ds, 0.25, 42);
+    let rows = CsrMatrix::from_csc(&test.a);
+    let p_live = Predictor::new(live).predict(&rows);
+    let p_disk = Predictor::new(from_disk).predict(&rows);
+    for (a, b) in p_live.iter().zip(p_disk.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn batched_sharded_and_replayed_paths_agree_bitwise_for_all_families() {
+    // Every serving path — one sequential sweep, the sharded multi-core
+    // sweep, and the batching front end at any arrival rate — slices the
+    // same per-row kernel calls, so all of them produce the same bits.
+    let reg_ds = small();
+    let (dual_ds, _) = separable_classes(32, 128, 0.5, 23);
+    let cases: Vec<(CsrMatrix, PrimalModel)> = vec![
+        (
+            CsrMatrix::from_csc(&reg_ds.a),
+            squared_model(&reg_ds, Problem::ridge(1.0), 10),
+        ),
+        (
+            CsrMatrix::from_csc(&reg_ds.a),
+            squared_model(&reg_ds, Problem::lasso(1.0), 10),
+        ),
+        (
+            CsrMatrix::transpose_of(&dual_ds.a),
+            dual_model(&dual_ds, Problem::svm(1.0)),
+        ),
+        (
+            CsrMatrix::transpose_of(&dual_ds.a),
+            dual_model(&dual_ds, Problem::logistic(1.0)),
+        ),
+    ];
+    for (rows, model) in cases {
+        let name = model.problem().kind_name();
+        let predictor = Predictor::new(model);
+        let seq = predictor.predict(&rows);
+        let mut out = Vec::new();
+        for shards in [2, 3, rows.m] {
+            predictor.predict_sharded_into(&rows, shards, &mut out);
+            for (i, (a, b)) in out.iter().zip(seq.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} row {} ({} shards)", name, i, shards);
+            }
+        }
+        // Size-bound and deadline-bound replay regimes alike.
+        for (rate, shards) in [(1e6, 1), (50.0, 2)] {
+            let mut preds = Vec::new();
+            let stats = replay(
+                &predictor,
+                &rows,
+                None,
+                BatchPolicy::new(16, 0.01),
+                rate,
+                shards,
+                &mut preds,
+            );
+            assert_eq!(stats.requests, rows.m);
+            for (i, (a, b)) in preds.iter().zip(seq.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} row {} (rate {})", name, i, rate);
+            }
+        }
+    }
+}
+
+#[test]
+fn steady_state_batched_predict_never_allocates() {
+    // THE acceptance bar: once the output buffer has warmed, batched
+    // predict performs zero heap allocations per batch — measured by the
+    // counting allocator installed for this binary.
+    let ds = small();
+    let rows = CsrMatrix::from_csc(&ds.a);
+    let alpha: Vec<f64> = (0..ds.n()).map(|j| (j as f64 * 0.29).sin()).collect();
+    let model = PrimalModel::from_parts(
+        Problem::ridge(1.0),
+        &alpha,
+        &[],
+        sparkbench::config::Precision::F64,
+        1,
+    );
+    let predictor = Predictor::new(model);
+    let mut out = Vec::new();
+    predictor.predict_into(&rows, &mut out); // warm the buffer
+    let before = current_thread_allocations();
+    for _ in 0..50 {
+        predictor.predict_into(&rows, &mut out);
+    }
+    let after = current_thread_allocations();
+    assert_eq!(after - before, 0, "steady-state batched predict allocated");
+}
+
+#[test]
+fn held_out_replay_reports_the_offline_rmse_bitwise() {
+    // Train on the train split, replay the held-out split through the
+    // batching front end: the online RMSE folds in stream order, so it
+    // equals the offline data::eval::rmse over the same predictions to
+    // the bit — and a trained model beats the zero predictor.
+    let ds = small();
+    let (train, test) = train_test_split(&ds, 0.3, 1);
+    let (report, model) = Session::builder(&train)
+        .engine(Impl::Mpi)
+        .build()
+        .unwrap()
+        .run_extract();
+    assert!(report.time_to_target.is_some());
+    let rows = CsrMatrix::from_csc(&test.a);
+    let predictor = Predictor::new(model);
+    let mut preds = Vec::new();
+    let stats = replay(
+        &predictor,
+        &rows,
+        Some(&test.b),
+        BatchPolicy::new(32, 0.001),
+        1e5,
+        1,
+        &mut preds,
+    );
+    assert_eq!(stats.eval.count(), test.m());
+    let offline = sparkbench::data::rmse(&preds, &test.b);
+    assert_eq!(stats.eval.rmse().unwrap().to_bits(), offline.to_bits());
+    let zero = vec![0.0; test.m()];
+    assert!(
+        offline < sparkbench::data::rmse(&zero, &test.b),
+        "held-out rmse {} not better than the zero model",
+        offline
+    );
+}

@@ -466,6 +466,110 @@ fn prop_nested_ring_is_bit_identical_to_flat_on_skewed_shards() {
 }
 
 #[test]
+fn prop_csr_csc_roundtrip_is_bit_exact() {
+    use sparkbench::data::CsrMatrix;
+    // The serving mirror (DESIGN.md §13): CSC→CSR→CSC must reproduce the
+    // exact storage — same pointers, same indices, same value BITS — for
+    // random triplet matrices and the degenerate shapes the request arena
+    // meets (all-zero, single-nnz, fully dense). Both conversions are
+    // counting sorts that only move values, never combine them.
+    check("CSR<->CSC round-trips bit-exactly", 40, |g| {
+        let m = g.usize_in(1, 40);
+        let n = g.usize_in(1, 40);
+        let a = match g.usize_in(0, 10) {
+            // Empty: every row and column has zero nnz.
+            0 => CscMatrix::zeros(m, n),
+            // Single nnz in a random cell.
+            1 => CscMatrix::from_triplets(
+                m,
+                n,
+                &[(g.usize_in(0, m), g.usize_in(0, n), g.f64_in(-3.0, 3.0))],
+            ),
+            // Dense block: every cell occupied.
+            2 => {
+                let mut t = Vec::with_capacity(m * n);
+                for r in 0..m {
+                    for c in 0..n {
+                        t.push((r, c, g.f64_in(-2.0, 2.0)));
+                    }
+                }
+                CscMatrix::from_triplets(m, n, &t)
+            }
+            // Random sparsity, including subnormal/huge magnitudes so a
+            // value-mangling conversion cannot hide behind tolerance.
+            _ => {
+                let mut t = Vec::new();
+                for _ in 0..g.usize_in(0, 250) {
+                    let v = match g.usize_in(0, 4) {
+                        0 => g.f64_in(-1.0, 1.0) * 1e-300,
+                        1 => g.f64_in(-1.0, 1.0) * 1e300,
+                        _ => g.f64_in(-5.0, 5.0),
+                    };
+                    t.push((g.usize_in(0, m), g.usize_in(0, n), v));
+                }
+                CscMatrix::from_triplets(m, n, &t)
+            }
+        };
+        a.validate()?;
+        let csr = CsrMatrix::from_csc(&a);
+        csr.validate()?;
+        if csr.nnz() != a.nnz() {
+            return Err(format!("nnz changed: {} -> {}", a.nnz(), csr.nnz()));
+        }
+        let back = csr.to_csc();
+        back.validate()?;
+        if back.m != a.m || back.n != a.n || back.col_ptr != a.col_ptr || back.row_idx != a.row_idx
+        {
+            return Err("round-trip changed the structure".into());
+        }
+        for (x, y) in back.vals.iter().zip(a.vals.iter()) {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("round-trip changed value bits: {} vs {}", x, y));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_transpose_rows_are_csc_columns() {
+    use sparkbench::data::CsrMatrix;
+    // transpose_of is a pure relabel of the CSC buffers, so row i of Aᵀ
+    // must alias column i of A exactly, and a per-row dot against y must
+    // reproduce `a.matvec_t(&y)` to the bit — the identity that makes
+    // dual-family serving bit-consistent with training-side quantities.
+    check("CSR transpose rows == CSC columns (bitwise)", 40, |g| {
+        let ds = random_dataset(g);
+        let t = CsrMatrix::transpose_of(&ds.a);
+        if t.m != ds.n() || t.n != ds.m() {
+            return Err(format!("transpose shape {}x{}", t.m, t.n));
+        }
+        t.validate()?;
+        for j in 0..ds.n() {
+            let (ri, vs) = ds.a.col(j);
+            let (ci, ws) = t.row(j);
+            if ri != ci {
+                return Err(format!("index mismatch in col {}", j));
+            }
+            for (x, y) in vs.iter().zip(ws.iter()) {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("value bits differ in col {}", j));
+                }
+            }
+        }
+        let y = g.gaussian_vec(ds.m());
+        let want = ds.a.matvec_t(&y);
+        let got = t.matvec(&y);
+        for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("row {} dot differs: {} vs {}", i, a, b));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_delta_reducer_matches_dense_tree_bitwise() {
     // Random worker deltas at random densities and a random cutover must
     // reduce to the exact bits of the all-dense pairwise tree, through
