@@ -1,0 +1,34 @@
+#!/bin/sh
+# Invariant gate: build pallas-lint (tools/lint) and run it twice —
+# once in `--fix-list` fixture mode (the corpus must fire exactly on its
+# `//~ <rule>` markers, proving the rules still detect what they claim
+# to detect) and once over the repo tree (which must be clean).
+#
+# Mirrors ci/check_bench.sh's honesty policy: where cargo is absent the
+# gate cannot run, and it SAYS so instead of silently passing.
+#
+# Rules enforced (DESIGN.md §14): bitexact, alloc, safety, doc-cite,
+# clock. Everything here is POSIX sh; pallas-lint itself has zero
+# dependencies beyond the standard library.
+
+set -eu
+
+REPO_ROOT=$(CDPATH= cd -- "$(dirname -- "$0")/.." && pwd)
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "check_lints: cargo not found — pallas-lint NOT run (honest skip)"
+    exit 0
+fi
+
+echo "check_lints: building pallas-lint"
+cargo build --release -p pallas-lint --manifest-path "$REPO_ROOT/Cargo.toml"
+
+BIN="$REPO_ROOT/target/release/pallas-lint"
+
+echo "check_lints: fixture corpus (rules fire exactly on their markers)"
+"$BIN" --root "$REPO_ROOT" --fix-list "$REPO_ROOT/tools/lint/fixtures"
+
+echo "check_lints: repo tree (rust/src, rust/tests, rust/benches)"
+"$BIN" --root "$REPO_ROOT"
+
+echo "check_lints: clean"

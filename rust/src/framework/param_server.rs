@@ -194,6 +194,8 @@ impl DistEngine for ParamServerEngine {
                 sigma: self.sigma,
                 seed: round_seed ^ (g as u64).wrapping_mul(0x9E3779B97F4A7C15),
             };
+            #[allow(clippy::disallowed_methods)]
+            // lint: allow(clock) -- real solve wall time feeds the cost model
             let t0 = Instant::now();
             self.solvers[g].solve_into(
                 &self.ws.data[g],
@@ -206,6 +208,7 @@ impl DistEngine for ParamServerEngine {
         // t sub-solvers share the worker's cores (DESIGN.md §10).
         let mut computes = vec![0.0; k];
         for w in 0..k {
+            // lint: allow(bitexact) -- sums simulated seconds for the cost model, not solver state
             computes[w] = sub_computes[w * t..(w + 1) * t].iter().sum::<f64>() / self.speedup;
         }
         // Chaos (DESIGN.md §12): heterogeneity / armed slowdowns drag each
@@ -250,6 +253,8 @@ impl DistEngine for ParamServerEngine {
         // ---- 2. damped pushes + server-side tree reduce ------------------
         // Damping is skipped entirely at staleness 0 so the synchronous
         // mode stays bit-identical to the MPI engine's round.
+        #[allow(clippy::disallowed_methods)]
+        // lint: allow(clock) -- real solve wall time feeds the cost model
         let t0 = Instant::now();
         if self.damping != 1.0 {
             for res in self.results.iter_mut() {

@@ -570,6 +570,8 @@ fn spawn_worker(
                         for (&ri, slot) in roots.iter().zip(recycle.drain(..)) {
                             slots[ri] = slot;
                         }
+                        #[allow(clippy::disallowed_methods)]
+                        // lint: allow(clock) -- worker timers feed the cost model
                         let t0 = Instant::now();
                         // Fan out to the sub-pool, then solve shard 0 on
                         // this thread — physical parallelism across the
@@ -772,6 +774,8 @@ impl DistEngine for ThreadedMpiEngine {
             None => RoundChaos::default(),
         };
         let dead = rc.death;
+        #[allow(clippy::disallowed_methods)]
+        // lint: allow(clock) -- real solve wall time feeds the cost model
         let t0 = Instant::now();
 
         // Broadcast: one copy of v into the shared buffer, then an Arc
@@ -926,6 +930,8 @@ impl DistEngine for ThreadedMpiEngine {
         // enumeration order — same combines as the virtual-clock engines,
         // hence bit-identical Δv whatever mix of representations and
         // arrival order the workers produced.
+        #[allow(clippy::disallowed_methods)]
+        // lint: allow(clock) -- real reduce wall time feeds the cost model
         let rt0 = Instant::now();
         self.reducer.reduce_pairs(&mut self.slots, self.plan.cross_pairs());
         let agg = self.slots[0].densify_collect(self.m);

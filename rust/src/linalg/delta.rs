@@ -347,6 +347,7 @@ impl DeltaReducer {
     /// the very loop [`super::tree_reduce_seq`] drives — and per-index
     /// addition order matches the dense path, so the result is
     /// bit-identical to the all-dense reduction by construction.
+    // lint: alloc-free (reduce runs once per round on every engine)
     pub fn reduce(&mut self, slots: &mut [DeltaSlot]) {
         super::tree_reduce::for_each_tree_pair(slots.len(), |dst, src| {
             let (left, right) = slots.split_at_mut(src);
@@ -363,6 +364,7 @@ impl DeltaReducer {
     /// array, hence a bit-identical aggregate.
     ///
     /// [`NestedTreePlan`]: super::tree_reduce::NestedTreePlan
+    // lint: alloc-free (nested-tree variant of reduce)
     pub fn reduce_pairs(&mut self, slots: &mut [DeltaSlot], pairs: &[(usize, usize)]) {
         for &(dst, src) in pairs {
             debug_assert!(dst < src && src < slots.len());
@@ -382,6 +384,7 @@ impl DeltaReducer {
     }
 
     /// `left += right` in whichever representations the pair holds.
+    // lint: alloc-free (per-pair combine inside the reduce tree)
     fn combine(&mut self, left: &mut DeltaSlot, right: &DeltaSlot) {
         match (left.shape, right.shape) {
             (DeltaShape::Dense, DeltaShape::Dense) => {
@@ -421,6 +424,7 @@ fn promote(m: usize, slot: &mut DeltaSlot) {
 /// Exact cancellations (`a + b == 0.0`) are kept as explicit `+0.0`
 /// entries — dropping them would also densify to `+0.0`, but keeping them
 /// avoids a re-filter pass (the promotion rule bounds growth anyway).
+// lint: alloc-free (two-pointer merge into a reused output)
 fn merge_sparse(a: &SparseVec, b: &SparseVec, out: &mut SparseVec) {
     debug_assert_eq!(a.dim, b.dim);
     out.clear(a.dim);

@@ -87,6 +87,8 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     let n = x.len().min(y.len());
     let chunks = n / 4;
     let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    // SAFETY: every index is < n = min(x.len(), y.len()) — `base + 3 < 4 * chunks <= n`
+    // for the unrolled body, `i < n` for the tail.
     unsafe {
         for c in 0..chunks {
             let base = c * 4;
@@ -115,6 +117,9 @@ pub fn dot_indexed(idx: &[u32], vals: &[f64], dense: &[f64]) -> f64 {
     let n = idx.len().min(vals.len());
     let chunks = n / 4;
     let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    // SAFETY: `idx`/`vals` reads are < n = min(len, len); `dense` reads rely on
+    // the documented contract `idx[i] < dense.len()`, asserted at the solver
+    // boundary when columns are ingested.
     unsafe {
         for c in 0..chunks {
             let base = c * 4;
@@ -145,6 +150,9 @@ pub fn axpy_indexed(a: f64, idx: &[u32], vals: &[f64], dense: &mut [f64]) {
     debug_assert_eq!(idx.len(), vals.len(), "axpy_indexed: length mismatch");
     let n = idx.len().min(vals.len());
     let chunks = n / 4;
+    // SAFETY: `idx`/`vals` reads are < n = min(len, len); the scatter writes
+    // `dense[idx[i]]` under the contract `idx[i] < dense.len()` (asserted at
+    // the solver boundary).
     unsafe {
         for c in 0..chunks {
             let base = c * 4;
@@ -181,6 +189,8 @@ pub fn dot_indexed_fused(idx: &[u32], vals: &[f64], dense: &[f64]) -> (f64, f64)
     let chunks = n / 4;
     let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
     let (mut n0, mut n1, mut n2, mut n3) = (0.0f64, 0.0, 0.0, 0.0);
+    // SAFETY: identical access pattern to `dot_indexed` — reads clamped by n,
+    // `dense` indexed under the solver-boundary contract `idx[i] < dense.len()`.
     unsafe {
         for c in 0..chunks {
             let base = c * 4;
@@ -224,6 +234,8 @@ pub fn dot_indexed_f32(idx: &[u32], vals: &[f32], dense: &[f32]) -> f64 {
     let n = idx.len().min(vals.len());
     let chunks = n / 4;
     let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    // SAFETY: as `dot_indexed` (f32 storage, same clamped indices and the same
+    // solver-boundary contract on `idx`).
     unsafe {
         for c in 0..chunks {
             let base = c * 4;
@@ -254,6 +266,8 @@ pub fn dot_indexed_f32(idx: &[u32], vals: &[f32], dense: &[f32]) -> f64 {
 pub fn axpy_indexed_f32(a: f32, idx: &[u32], vals: &[f32], dense: &mut [f32]) {
     debug_assert_eq!(idx.len(), vals.len(), "axpy_indexed_f32: length mismatch");
     let n = idx.len().min(vals.len());
+    // SAFETY: as `axpy_indexed` (f32 storage, same clamped indices and the same
+    // solver-boundary contract on `idx`).
     unsafe {
         for i in 0..n {
             *dense.get_unchecked_mut(*idx.get_unchecked(i) as usize) += a * *vals.get_unchecked(i);

@@ -35,6 +35,9 @@ use core::arch::x86_64::{
 ///
 /// # Safety
 /// Requires AVX2 (dispatcher-checked).
+// SAFETY: all loads go through `_mm256_loadu_pd` on offsets bounded by
+// `n = min(len, len)` chunk math; the tail uses checked indexing. The only
+// caller obligation is AVX2 presence, verified by the dispatcher.
 #[target_feature(enable = "avx2")]
 pub unsafe fn dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len(), "dot: length mismatch");
@@ -61,6 +64,8 @@ pub unsafe fn dot(x: &[f64], y: &[f64]) -> f64 {
 ///
 /// # Safety
 /// Requires AVX2 (dispatcher-checked).
+// SAFETY: packed loads/stores and the `get_unchecked` tail are bounded by
+// `n = min(x.len(), y.len())`; AVX2 presence is the dispatcher's check.
 #[target_feature(enable = "avx2")]
 pub unsafe fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(y.len(), x.len(), "axpy: length mismatch");
@@ -85,6 +90,8 @@ pub unsafe fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
 ///
 /// # Safety
 /// Requires AVX2 (dispatcher-checked).
+// SAFETY: same bounds argument as `axpy` — every access is clamped by
+// `n = min(x.len(), y.len())`; AVX2 presence is the dispatcher's check.
 #[target_feature(enable = "avx2")]
 pub unsafe fn add_assign(y: &mut [f64], x: &[f64]) {
     debug_assert_eq!(y.len(), x.len(), "add_assign: length mismatch");
@@ -106,6 +113,9 @@ pub unsafe fn add_assign(y: &mut [f64], x: &[f64]) {
 /// # Safety
 /// Requires AVX2, `dense.len() <= i32::MAX` and every `idx[i] <
 /// dense.len()` (dispatcher + solver-boundary contract).
+// SAFETY: the gather reads `dense[idx[c*4..c*4+4]]` — in-bounds iff the
+// caller upholds `idx[i] < dense.len()` (asserted at the solver boundary);
+// `idx`/`vals` accesses are clamped by `n = min(len, len)`.
 #[target_feature(enable = "avx2")]
 pub unsafe fn dot_indexed(idx: &[u32], vals: &[f64], dense: &[f64]) -> f64 {
     debug_assert_eq!(idx.len(), vals.len(), "dot_indexed: length mismatch");
@@ -134,6 +144,9 @@ pub unsafe fn dot_indexed(idx: &[u32], vals: &[f64], dense: &[f64]) -> f64 {
 ///
 /// # Safety
 /// As [`dot_indexed`] (without the i32 bound — no gather here).
+// SAFETY: scalar scatters write `dense[idx[i]]` via `get_unchecked_mut` —
+// in-bounds iff the caller upholds `idx[i] < dense.len()` (asserted at the
+// solver boundary); `idx`/`vals` accesses are clamped by `n`.
 #[target_feature(enable = "avx2")]
 pub unsafe fn axpy_indexed(a: f64, idx: &[u32], vals: &[f64], dense: &mut [f64]) {
     debug_assert_eq!(idx.len(), vals.len(), "axpy_indexed: length mismatch");
@@ -160,6 +173,8 @@ pub unsafe fn axpy_indexed(a: f64, idx: &[u32], vals: &[f64], dense: &mut [f64])
 ///
 /// # Safety
 /// As [`dot_indexed`].
+// SAFETY: identical access pattern to `dot_indexed` (one extra register
+// accumulator, no extra memory traffic) — same bounds argument.
 #[target_feature(enable = "avx2")]
 pub unsafe fn dot_indexed_fused(idx: &[u32], vals: &[f64], dense: &[f64]) -> (f64, f64) {
     debug_assert_eq!(idx.len(), vals.len(), "dot_indexed_fused: length mismatch");

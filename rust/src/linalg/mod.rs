@@ -42,10 +42,15 @@ pub fn nrm2_sq(x: &[f64]) -> f64 {
     kernels::scalar::dot(x, x)
 }
 
-/// L1 norm.
+/// L1 norm. Explicit sequential accumulation: association order is part
+/// of the reduce contract (DESIGN.md §11), so no iterator `.sum()` here.
 #[inline]
 pub fn nrm1(x: &[f64]) -> f64 {
-    x.iter().map(|v| v.abs()).sum()
+    let mut acc = 0.0;
+    for v in x {
+        acc += v.abs();
+    }
+    acc
 }
 
 /// Soft-threshold operator `sign(v) * max(|v| - tau, 0)` (elastic-net prox).
@@ -65,7 +70,11 @@ pub fn mean(x: &[f64]) -> f64 {
     if x.is_empty() {
         0.0
     } else {
-        x.iter().sum::<f64>() / x.len() as f64
+        let mut acc = 0.0;
+        for v in x {
+            acc += v;
+        }
+        acc / x.len() as f64
     }
 }
 
@@ -75,7 +84,11 @@ pub fn stddev(x: &[f64]) -> f64 {
         return 0.0;
     }
     let m = mean(x);
-    (x.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (x.len() - 1) as f64).sqrt()
+    let mut acc = 0.0;
+    for v in x {
+        acc += (v - m) * (v - m);
+    }
+    (acc / (x.len() - 1) as f64).sqrt()
 }
 
 /// Median of the *finite-comparable* samples (of a copy; input untouched).
@@ -218,6 +231,7 @@ mod tests {
         for n in [0usize, 1, 3, 4, 5, 8, 17, 100, 1001] {
             let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
             let y: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            // lint: allow(bitexact) -- naive float-tolerance oracle, not a trajectory input
             let naive: f64 = x.iter().zip(y.iter()).map(|(a, b)| a * b).sum();
             assert!(
                 (dot(&x, &y) - naive).abs() <= 1e-12 * (1.0 + naive.abs()),

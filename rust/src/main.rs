@@ -461,6 +461,8 @@ fn cmd_predict(args: &Args) -> i32 {
     let predictor = sparkbench::serve::Predictor::new(model);
     let shards = args.get_usize("shards", 1);
     let mut preds = Vec::with_capacity(rows.m);
+    #[allow(clippy::disallowed_methods)]
+    // lint: allow(clock) -- CLI reports end-to-end serving wall time
     let t0 = std::time::Instant::now();
     predictor.predict_sharded_into(&rows, shards, &mut preds);
     let dt = t0.elapsed().as_secs_f64();

@@ -189,7 +189,12 @@ impl Loss for HingeDual {
     #[inline]
     fn phi_sum(&self, _reg: &Regularizer, alpha: &[f64]) -> f64 {
         // φ_j(a) = −a on [0, C]; engines maintain the box invariant.
-        -alpha.iter().sum::<f64>()
+        // Sequential accumulation — certificate sums are replayed bit-for-bit.
+        let mut acc = 0.0;
+        for &a in alpha {
+            acc += a;
+        }
+        -acc
     }
 
     #[inline]
@@ -261,7 +266,12 @@ impl Loss for LogisticDual {
     #[inline]
     fn phi_sum(&self, reg: &Regularizer, alpha: &[f64]) -> f64 {
         let c = reg.box_c();
-        alpha.iter().map(|&a| xlnx(a) + xlnx(c - a)).sum()
+        // Sequential accumulation — certificate sums are replayed bit-for-bit.
+        let mut acc = 0.0;
+        for &a in alpha {
+            acc += xlnx(a) + xlnx(c - a);
+        }
+        acc
     }
 
     #[inline]
@@ -541,7 +551,10 @@ impl Problem {
         }
         let gstar = 0.5 * linalg::nrm2_sq(u) + linalg::dot(b, u);
         let l = self.loss_impl();
-        let conj: f64 = at_u.iter().map(|&t| l.phi_conj_neg(&self.reg, t)).sum();
+        let mut conj = 0.0;
+        for &t in at_u.iter() {
+            conj += l.phi_conj_neg(&self.reg, t);
+        }
         f + gstar + conj
     }
 

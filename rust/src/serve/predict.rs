@@ -34,6 +34,7 @@ impl Predictor {
     /// Finalized predictions for every row of `rows`, into a caller-owned
     /// buffer (cleared, then filled in row order). Allocation-free once
     /// `out` has capacity for `rows.m` — THE steady-state serving path.
+    // lint: alloc-free (THE steady-state serving path once `out` is warm)
     pub fn predict_into(&self, rows: &CsrMatrix, out: &mut Vec<f64>) {
         assert_eq!(
             rows.n,
@@ -66,6 +67,7 @@ impl Predictor {
     /// Thread spawns allocate — this path trades the zero-alloc guarantee
     /// for wall-clock on large batches; `shards <= 1` falls back to the
     /// sequential sweep.
+    // lint: alloc-free (thread spawns aside, per-row work must stay alloc-free)
     pub fn predict_sharded_into(&self, rows: &CsrMatrix, shards: usize, out: &mut Vec<f64>) {
         if shards <= 1 || rows.m <= 1 {
             self.predict_into(rows, out);

@@ -192,11 +192,14 @@ struct ReplayState<'a> {
 }
 
 impl ReplayState<'_> {
+    // lint: alloc-free (batcher flush reuses pooled score buffers)
     fn flush(&mut self, t_flush: f64, reason: FlushReason) {
         let (rows, arrivals) = self.batcher.batch();
         let b = rows.m;
         debug_assert!(b > 0, "flushed an empty batch");
         let mut scores = self.pool.take_cleared();
+        // real wall time is the measurement (serve allowlist)
+        #[allow(clippy::disallowed_methods)]
         let t0 = Instant::now();
         if self.shards > 1 {
             self.predictor.predict_sharded_into(rows, self.shards, &mut scores);

@@ -399,6 +399,8 @@ pub fn calibrate(seed: u64) -> Calibration {
     let time_of = |solver: &mut dyn LocalSolver, reps: usize| -> f64 {
         // warmup
         let _ = solver.solve(&wd, &alpha, &req);
+        #[allow(clippy::disallowed_methods)]
+        // lint: allow(clock) -- calibration times real solves to pick a backend
         let t = Instant::now();
         for _ in 0..reps {
             std::hint::black_box(solver.solve(&wd, &alpha, &req));

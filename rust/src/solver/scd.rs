@@ -153,6 +153,7 @@ impl NativeScd {
         }
     }
 
+    // lint: alloc-free (steady-state rounds reuse warmed buffers)
     fn solve_f64(
         &mut self,
         data: &WorkerData,
@@ -235,6 +236,7 @@ impl NativeScd {
         out.steps = steps;
     }
 
+    // lint: alloc-free (mixed-precision path shares the warmed buffers)
     fn solve_mixed(
         &mut self,
         data: &WorkerData,
@@ -339,6 +341,7 @@ impl NativeScd {
 /// debug assert below pins that invariant on every step of every debug
 /// run.
 #[inline]
+// lint: alloc-free (the inner SCD loop is THE hot path)
 pub(crate) fn scd_loop<F: FnMut(f64, f64, f64) -> Option<f64>>(
     data: &WorkerData,
     h: usize,
@@ -378,6 +381,7 @@ pub(crate) fn scd_loop<F: FnMut(f64, f64, f64) -> Option<f64>>(
 /// `‖c_j‖²` comes from the precomputed table (a fused accumulation cannot
 /// span segments). NOT bit-equal to [`scd_loop`] — see the module docs.
 #[inline]
+// lint: alloc-free (blocked traversal must not touch the allocator either)
 pub(crate) fn scd_loop_blocked<F: FnMut(f64, f64, f64) -> Option<f64>>(
     plan: &BlockPlan,
     data: &WorkerData,
@@ -434,6 +438,7 @@ fn run_loop<F: FnMut(f64, f64, f64) -> Option<f64>>(
 /// and the α update stay f64, so only storage rounds down.
 #[inline]
 #[allow(clippy::too_many_arguments)]
+// lint: alloc-free (f32-storage loop, same zero-alloc contract)
 fn scd_loop_mixed<F: FnMut(f64, f64, f64) -> Option<f64>>(
     data: &WorkerData,
     vals32: &[f32],
@@ -473,6 +478,7 @@ impl LocalSolver for NativeScd {
         "native-scd"
     }
 
+    // lint: alloc-free (dispatch shim over the warmed solve_* paths)
     fn solve_into(
         &mut self,
         data: &WorkerData,

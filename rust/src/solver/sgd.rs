@@ -53,6 +53,7 @@ impl LocalSolver for MiniBatchSgd {
         "minibatch-sgd"
     }
 
+    // lint: alloc-free (mask/residual buffers are reused across rounds)
     fn solve_into(
         &mut self,
         data: &WorkerData,

@@ -41,20 +41,26 @@ fn bump() {
 // SAFETY: defers all allocation to `System`; only adds side-effect-free
 // counter bumps on the calling thread.
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: forwards the caller's layout to `System.alloc` unchanged.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         bump();
         System.alloc(layout)
     }
 
+    // SAFETY: `ptr`/`layout` came from `alloc`/`realloc` above, which
+    // delegate to `System` — freeing through `System` matches.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: forwards the caller's layout to `System.alloc_zeroed`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         bump();
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: `ptr` originates from this allocator's `System` delegation;
+    // layout and size are the caller's obligations, passed through.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         bump();
         System.realloc(ptr, layout, new_size)

@@ -8,6 +8,8 @@
 //! — not merely close. K covers powers of two and the non-power-of-two
 //! binomial-tree edge cases.
 
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
 use sparkbench::config::TrainConfig;
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
 use sparkbench::data::{Dataset, Partitioner, Partitioning};

@@ -9,6 +9,8 @@
 //! whole stack (fault schedule, jitter, speculation, recovery) is
 //! deterministic.
 
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
 use sparkbench::config::{Impl, TrainConfig};
 use sparkbench::coordinator::{checkpoint::Checkpoint, oracle_objective};
 use sparkbench::data::synthetic::{webspam_like, zipf_columns, SyntheticSpec};

@@ -1,6 +1,8 @@
 //! Integration: the session-driven CoCoA loop over every framework
 //! substrate in the registry.
 
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
 use sparkbench::config::{Impl, TrainConfig};
 use sparkbench::coordinator::{self, tuner};
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};

@@ -1,6 +1,8 @@
 //! Integration: the experiment harness — every figure and ablation runs at
 //! reduced scale and emits the expected series/markers.
 
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
 use sparkbench::experiments::{run_ablation, run_figure, ExpOptions};
 
 fn fast_opts() -> ExpOptions {

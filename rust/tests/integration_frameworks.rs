@@ -1,6 +1,8 @@
 //! Integration: framework substrates — byte accounting, overhead ordering,
 //! layout effects, RDD semantics under engine use.
 
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
 use sparkbench::config::{Impl, TrainConfig};
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
 use sparkbench::data::Dataset;

@@ -9,6 +9,8 @@
 //! test degenerates to a determinism pin — it must pass in every cell of
 //! the CI feature matrix.
 
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
 use sparkbench::config::{Impl, TrainConfig};
 use sparkbench::data::synthetic::{separable_classes, webspam_like, SyntheticSpec};
 use sparkbench::framework::{build_any, DistEngine, Engine, EngineOptions};

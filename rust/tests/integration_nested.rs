@@ -7,6 +7,8 @@
 //! power-of-two and non-power-of-two (K, T), through the Session API, and
 //! with strictly fewer cross-rank frames on the wire.
 
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
 use sparkbench::config::{Impl, TrainConfig};
 use sparkbench::testkit::alloc::CountingAllocator;
 

@@ -7,6 +7,8 @@
 //!   certificate with no CG oracle;
 //! * `ToGap` stopping is consistent with `ToTarget` stopping on ridge.
 
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
 use sparkbench::config::TrainConfig;
 use sparkbench::coordinator::oracle_objective;
 use sparkbench::data::synthetic::{separable_classes, webspam_like, SyntheticSpec};

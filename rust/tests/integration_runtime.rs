@@ -7,6 +7,8 @@
 //! These tests prove the L1 Pallas kernel ≡ L3 native solver equivalence
 //! across the actual serialized HLO boundary — the end-to-end correctness
 //! claim of the three-layer architecture.
+
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
 #![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;

@@ -4,6 +4,8 @@
 //! with training-side quantities for all four problem families, and the
 //! zero-allocation discipline of the steady-state hot path.
 
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
 use sparkbench::config::Impl;
 use sparkbench::coordinator::checkpoint::Envelope;
 use sparkbench::data::synthetic::{separable_classes, webspam_like, SyntheticSpec};

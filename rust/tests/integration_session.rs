@@ -2,6 +2,8 @@
 //! round-trips (including across substrates), CSV tracing, and the
 //! adaptive H policy's bit-for-bit fidelity to the controller.
 
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
 use sparkbench::config::{Impl, TrainConfig};
 use sparkbench::coordinator::tuner::AdaptiveH;
 use sparkbench::coordinator::{checkpoint::Checkpoint, oracle_objective};

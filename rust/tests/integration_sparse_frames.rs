@@ -7,6 +7,8 @@
 //! never an arithmetic one (DESIGN.md §7). The byte accounting, by
 //! contrast, must differ: that is the whole point of the layer.
 
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
 use sparkbench::config::{Impl, TrainConfig};
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
 use sparkbench::data::{Dataset, Partitioner, Partitioning};

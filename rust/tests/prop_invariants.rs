@@ -1,6 +1,8 @@
 //! Property-based tests over the system invariants (testkit driver;
 //! proptest is unavailable offline — DESIGN.md).
 
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
 use sparkbench::config::{Impl, TrainConfig};
 use sparkbench::data::sparse::CscMatrix;
 use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};

@@ -1,0 +1,32 @@
+// lint-fixture: as=rust/src/linalg/fixture.rs
+// R1 `bitexact`: FMA, horizontal adds, float `.sum()`, and hash-order
+// iteration are banned in files that feed reduce trees or kernels.
+// Tagged lines must fire; everything else must not.
+
+use std::collections::HashMap; //~ bitexact
+
+pub fn bad_fma(x: f64, y: f64, z: f64) -> f64 {
+    x.mul_add(y, z) //~ bitexact
+}
+
+pub fn bad_intrinsic(a: __m256d, b: __m256d) -> __m256d {
+    _mm256_hadd_pd(a, b) //~ bitexact
+}
+
+pub fn bad_float_sum(xs: &[f64]) -> f64 {
+    xs.iter().sum() //~ bitexact
+}
+
+pub fn bad_turbofish(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>() //~ bitexact
+}
+
+pub fn integer_sums_are_fine(xs: &[usize]) -> usize {
+    let direct = xs.iter().sum::<usize>();
+    let annotated: usize = xs.iter().sum();
+    direct + annotated
+}
+
+pub fn escaped_reference_oracle(xs: &[f64]) -> f64 {
+    xs.iter().sum() // lint: allow(bitexact) -- naive oracle; order-independence asserted by caller
+}

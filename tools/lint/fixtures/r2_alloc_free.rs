@@ -1,0 +1,41 @@
+// lint-fixture: as=rust/src/util/fixture.rs
+// R2 `alloc`: allocating constructs are banned inside a function marked
+// `// lint: alloc-free`. Unmarked functions may allocate freely.
+
+// lint: alloc-free
+pub fn hot_path(xs: &[f64], out: &mut Vec<f64>) {
+    out.clear();
+    let scratch = Vec::new(); //~ alloc
+    let grown = Vec::with_capacity(xs.len()); //~ alloc
+    let copied = xs.to_vec(); //~ alloc
+    let cloned = copied.clone(); //~ alloc
+    let doubled: Vec<f64> = xs.iter().map(|x| x * 2.0).collect(); //~ alloc
+    let boxed = Box::new(0.0); //~ alloc
+    let label = format!("len={}", xs.len()); //~ alloc
+    let literal = vec![0.0; 4]; //~ alloc
+    drop((scratch, grown, cloned, doubled, boxed, label, literal));
+}
+
+pub fn cold_path_may_allocate(xs: &[f64]) -> Vec<f64> {
+    let mut v = Vec::new();
+    v.extend_from_slice(xs);
+    v
+}
+
+// lint: alloc-free
+pub fn clean_hot_path(out: &mut [f64]) {
+    for slot in out.iter_mut() {
+        *slot = 0.0;
+    }
+}
+
+// lint: alloc-free
+pub fn escaped_cold_branch(xs: &[f64], out: &mut Vec<f64>) {
+    out.clear();
+    if out.capacity() < xs.len() {
+        out.reserve(xs.len()); // warm-up only; reserve is not in the ban list
+    }
+    let diag = format!("{}", xs.len()); // lint: allow(alloc) -- cold diagnostics branch only
+    drop(diag);
+    out.extend_from_slice(xs);
+}

@@ -1,0 +1,37 @@
+// lint-fixture: as=rust/src/linalg/kernels/fixture.rs
+// R3 `safety`: every `unsafe` needs a `// SAFETY:` comment on the same
+// line or on the preceding lines (doc comments, attributes, and blank
+// lines may sit in between; real code may not).
+
+pub fn bad_block(p: *const f64) -> f64 {
+    unsafe { *p } //~ safety
+}
+
+/// Doc comments alone are not an audit trail — `# Safety` sections
+/// document the caller contract; the audit comment records why THIS
+/// body upholds it.
+pub unsafe fn bad_fn(p: *const f64) -> f64 { //~ safety
+    *p
+}
+
+pub fn good_block(p: *const f64) -> f64 {
+    // SAFETY: fixture contract — `p` is valid for reads by construction.
+    unsafe { *p }
+}
+
+/// Delegation with the callee contract restated.
+// SAFETY: bounds re-checked by the caller; the pointer is derived from a
+// live slice and never outlives it.
+#[inline]
+pub unsafe fn good_fn_over_attr(p: *const f64) -> f64 {
+    *p
+}
+
+pub fn good_trailing(p: *const f64) -> f64 {
+    unsafe { *p } // SAFETY: trailing form — same-line audit is accepted.
+}
+
+// lint: allow(safety) -- audited in the module header; fixture for the escape hatch
+pub unsafe fn escaped_fn(p: *const f64) -> f64 {
+    *p
+}

@@ -1,0 +1,12 @@
+// lint-fixture: as=rust/src/util/fixture_docs.rs
+// R4 `doc-cite`: every numeric `DESIGN.md §N` citation must resolve to a
+// real section header in DESIGN.md.
+
+//! Reduce order is pinned by the kernel contract (DESIGN.md §11), and the
+//! serving handoff is DESIGN.md §13 — both resolve today.
+//! But DESIGN.md §99 was never written. //~ doc-cite
+
+// lint: allow(doc-cite) -- forward reference; the section lands with the IO-layer PR
+// Planned: DESIGN.md §15 will cover columnar on-disk ingest.
+
+pub fn cited() {}

@@ -1,0 +1,24 @@
+// lint-fixture: as=rust/src/framework/fixture.rs
+// R5 `clock`: wall-clock reads are banned outside the measurement
+// allowlist (benches, bench module, serve, testkit) — engine time is
+// virtual so simnet runs and chaos replays stay deterministic.
+
+use std::time::Instant;
+
+pub fn bad_instant() -> Instant {
+    Instant::now() //~ clock
+}
+
+pub fn bad_system_time() -> u64 {
+    let _ = std::time::SystemTime::now(); //~ clock
+    0
+}
+
+pub fn virtual_time_is_fine(clock_s: f64, step_s: f64) -> f64 {
+    clock_s + step_s
+}
+
+pub fn escaped_jitter_probe() -> Instant {
+    // lint: allow(clock) -- measures host scheduler jitter, not simulated time
+    Instant::now()
+}

@@ -1,0 +1,291 @@
+//! A minimal byte-wise Rust "lexer" that splits a source file into two
+//! parallel views of identical length and identical newline positions:
+//!
+//! * **code view** — comment text and string/char-literal contents are
+//!   blanked to spaces, everything else is kept. Rule scans that look for
+//!   tokens (`mul_add`, `Vec::new`, `Instant::now`, …) run here, so a
+//!   banned name inside a doc comment or a log string never fires.
+//! * **comment view** — only comment text is kept (including the `//` /
+//!   `/*` markers), everything else is blanked. `// SAFETY:` audits and
+//!   `// lint:` directives are parsed here, so a string literal that
+//!   happens to contain `lint:` is never mistaken for a directive.
+//!
+//! Newlines are pre-filled into both views before the state machine runs,
+//! which makes escape skips (`\"` inside a string may hop over a `\n`)
+//! unable to corrupt line structure: line `k` of the raw text, the code
+//! view, and the comment view always describe the same physical line.
+//!
+//! Handled syntax: line comments, nested block comments, string and byte
+//! string literals with escapes, raw (byte) strings `r#"…"#` with any
+//! number of hashes, char and byte-char literals, and the char-vs-lifetime
+//! ambiguity (`'a'` vs `&'a str`). This is the entire surface the rules
+//! need; anything else passes through as code bytes.
+
+/// Parallel views of one source file; see the module docs.
+pub struct Views {
+    /// Comment text and literal contents blanked to spaces.
+    pub code: String,
+    /// Everything except comment text blanked to spaces.
+    pub comments: String,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    /// `//` comment until end of line.
+    Line,
+    /// `/* … */` comment with nesting depth.
+    Block(u32),
+    /// `"…"` or `b"…"` with backslash escapes.
+    Str,
+    /// `r"…"`, `r#"…"#`, `br##"…"##` — closed by `"` plus N hashes.
+    RawStr(usize),
+    /// `'…'` or `b'…'` char literal (entered only when disambiguated).
+    Char,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+fn prev_is_ident(bytes: &[u8], i: usize) -> bool {
+    i > 0 && is_ident_byte(bytes[i - 1])
+}
+
+/// Try to recognize a raw-string opener whose hashes start at `j`
+/// (just past `r` / `br`). Returns the hash count if `#…#"` follows.
+fn raw_open(bytes: &[u8], j: usize) -> Option<usize> {
+    let mut h = 0;
+    while j + h < bytes.len() && bytes[j + h] == b'#' {
+        h += 1;
+    }
+    if j + h < bytes.len() && bytes[j + h] == b'"' {
+        Some(h)
+    } else {
+        None
+    }
+}
+
+/// Split `src` into code and comment views. Total length and newline
+/// positions are preserved exactly.
+pub fn split_views(src: &str) -> Views {
+    let bytes = src.as_bytes();
+    let n = bytes.len();
+    let mut code = vec![b' '; n];
+    let mut comments = vec![b' '; n];
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'\n' {
+            code[i] = b'\n';
+            comments[i] = b'\n';
+        }
+    }
+
+    let mut st = State::Code;
+    let mut i = 0;
+    while i < n {
+        let b = bytes[i];
+        match st {
+            State::Code => {
+                if b == b'/' && i + 1 < n && bytes[i + 1] == b'/' {
+                    comments[i] = b'/';
+                    comments[i + 1] = b'/';
+                    st = State::Line;
+                    i += 2;
+                } else if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                    comments[i] = b'/';
+                    comments[i + 1] = b'*';
+                    st = State::Block(1);
+                    i += 2;
+                } else if b == b'"' {
+                    st = State::Str;
+                    i += 1;
+                } else if b == b'r' && !prev_is_ident(bytes, i) {
+                    if let Some(h) = raw_open(bytes, i + 1) {
+                        st = State::RawStr(h);
+                        i += 1 + h + 1;
+                    } else {
+                        code[i] = b;
+                        i += 1;
+                    }
+                } else if b == b'b' && !prev_is_ident(bytes, i) && i + 1 < n {
+                    match bytes[i + 1] {
+                        b'"' => {
+                            st = State::Str;
+                            i += 2;
+                        }
+                        b'\'' => {
+                            st = State::Char;
+                            i += 2;
+                        }
+                        b'r' => {
+                            if let Some(h) = raw_open(bytes, i + 2) {
+                                st = State::RawStr(h);
+                                i += 2 + h + 1;
+                            } else {
+                                code[i] = b;
+                                i += 1;
+                            }
+                        }
+                        _ => {
+                            code[i] = b;
+                            i += 1;
+                        }
+                    }
+                } else if b == b'\'' {
+                    // Char literal or lifetime? A char literal is `'x'`,
+                    // `'\…'`, or a multibyte scalar; a lifetime/label is
+                    // `'ident` with no closing quote right after.
+                    if i + 1 < n && bytes[i + 1] == b'\\' {
+                        st = State::Char;
+                        i += 1;
+                    } else if i + 1 < n && bytes[i + 1] >= 0x80 {
+                        st = State::Char;
+                        i += 1;
+                    } else if i + 2 < n && bytes[i + 2] == b'\'' {
+                        // `'x'` — consume all three, stay in Code.
+                        i += 3;
+                    } else {
+                        // Lifetime: keep the quote as code punctuation.
+                        code[i] = b;
+                        i += 1;
+                    }
+                } else {
+                    if b != b'\n' {
+                        code[i] = b;
+                    }
+                    i += 1;
+                }
+            }
+            State::Line => {
+                if b == b'\n' {
+                    st = State::Code;
+                } else {
+                    comments[i] = b;
+                }
+                i += 1;
+            }
+            State::Block(depth) => {
+                if b == b'*' && i + 1 < n && bytes[i + 1] == b'/' {
+                    st = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::Block(depth - 1)
+                    };
+                    i += 2;
+                } else if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                    st = State::Block(depth + 1);
+                    i += 2;
+                } else {
+                    if b != b'\n' {
+                        comments[i] = b;
+                    }
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if b == b'\\' {
+                    i += 2;
+                } else if b == b'"' {
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(h) => {
+                let closes = b == b'"'
+                    && i + h < n
+                    && bytes[i + 1..i + 1 + h].iter().all(|&c| c == b'#');
+                if closes {
+                    st = State::Code;
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+            }
+            State::Char => {
+                if b == b'\\' {
+                    i += 2;
+                } else if b == b'\'' {
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    Views {
+        code: String::from_utf8(code).expect("code view: blanking non-ASCII kept newlines only"),
+        comments: String::from_utf8(comments)
+            .expect("comment view: blanking non-ASCII kept newlines only"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_blanked_from_code_view() {
+        let v = split_views("let x = 1; // mul_add here\nlet y = 2;\n");
+        assert!(!v.code.contains("mul_add"));
+        assert!(v.comments.contains("mul_add"));
+        assert!(v.code.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let v = split_views("let s = \"Instant::now\"; let t = s;\n");
+        assert!(!v.code.contains("Instant::now"));
+        assert!(!v.comments.contains("Instant::now"));
+        assert!(v.code.contains("let t = s;"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_are_blanked() {
+        let src = "let s = r#\"a \"quoted\" HashMap\"#; let u = 1;\n";
+        let v = split_views(src);
+        assert!(!v.code.contains("HashMap"));
+        assert!(v.code.contains("let u = 1;"));
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        let v = split_views("let s = \"a\\\"b vec! c\"; let k = 3;\n");
+        assert!(!v.code.contains("vec!"));
+        assert!(v.code.contains("let k = 3;"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let v = split_views("fn f<'a>(x: &'a str) -> &'a str { x } // tail\n");
+        assert!(v.code.contains("fn f<'a>(x: &'a str) -> &'a str { x }"));
+        assert!(v.comments.contains("tail"));
+    }
+
+    #[test]
+    fn char_literals_are_blanked() {
+        let v = split_views("let c = '\\''; let q = 'x'; let z = 0;\n");
+        assert!(v.code.contains("let z = 0;"));
+        assert!(!v.code.contains('x'));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let v = split_views("/* outer /* inner Box::new */ still */ let a = 1;\n");
+        assert!(!v.code.contains("Box::new"));
+        assert!(v.code.contains("let a = 1;"));
+    }
+
+    #[test]
+    fn newline_positions_survive_everything() {
+        let src = "let a = \"x\\\n y\";\n/* b\nc */\nlet d = 1; // e\n";
+        let v = split_views(src);
+        let raw_lines = src.lines().count();
+        assert_eq!(v.code.lines().count(), raw_lines);
+        assert_eq!(v.comments.lines().count(), raw_lines);
+        assert_eq!(v.code.len(), src.len());
+    }
+}

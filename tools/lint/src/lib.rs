@@ -1,0 +1,162 @@
+//! `pallas-lint`: a zero-dependency static invariant checker for the
+//! sparkbench tree (DESIGN.md §14).
+//!
+//! Eight PRs of conventions — SIMD bit-equal to scalar by accumulator
+//! layout, zero-alloc steady-state rounds, virtual time everywhere the
+//! simnet reaches — are enforced here as machine-checked rules over raw
+//! source text. No `syn`, no proc-macro machinery, no dependencies at
+//! all: the linter must run on any host with a Rust toolchain and keep
+//! working when the rest of the workspace does not even compile (that is
+//! the moment a reviewer needs it most).
+//!
+//! Layout:
+//! * [`lexer`] — comment/string-aware code and comment views of a file.
+//! * [`rules`] — the five rules (R1–R5) plus the directive grammar.
+//! * this module — DESIGN.md section parsing, the repo walk, and the
+//!   `--fix-list` fixture-corpus checker used by the self-tests.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub use rules::{lint_source, Diagnostic, Rule};
+
+/// Result of linting a tree: how many files were walked, and every
+/// diagnostic found (empty means the tree is clean).
+pub struct RepoLint {
+    pub files: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+/// The §N section numbers declared by DESIGN.md headers: any line whose
+/// first non-space character is `#` and which contains `§<digits>`.
+pub fn load_sections(design: &str) -> BTreeSet<u32> {
+    let mut out = BTreeSet::new();
+    for line in design.lines() {
+        let t = line.trim_start();
+        if !t.starts_with('#') {
+            continue;
+        }
+        if let Some(p) = t.find('§') {
+            let digits: String =
+                t[p + '§'.len_utf8()..].chars().take_while(char::is_ascii_digit).collect();
+            if let Ok(n) = digits.parse::<u32>() {
+                out.insert(n);
+            }
+        }
+    }
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("cannot read directory {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("while walking {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the repo rooted at `root`: loads `DESIGN.md` for citation
+/// resolution, then walks `rust/src`, `rust/tests`, and `rust/benches`.
+pub fn lint_repo(root: &Path) -> Result<RepoLint, String> {
+    let design_path = root.join("DESIGN.md");
+    let design = fs::read_to_string(&design_path)
+        .map_err(|e| format!("cannot read {}: {e}", design_path.display()))?;
+    let sections = load_sections(&design);
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in ["rust/src", "rust/tests", "rust/benches"] {
+        collect_rs(&root.join(sub), &mut files)?;
+    }
+    files.sort();
+
+    let mut diagnostics = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let rel = path.strip_prefix(root).unwrap_or(path);
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        diagnostics.extend(lint_source(&rel, &src, &sections));
+    }
+    diagnostics.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(RepoLint { files: files.len(), diagnostics })
+}
+
+/// Check the fixture corpus (`--fix-list`): every fixture declares the
+/// path it pretends to live at on line 1 (`// lint-fixture: as=<path>`)
+/// and marks each line that must fire with a trailing `//~ <rule>`.
+/// The produced diagnostics must match the markers exactly — a rule that
+/// fails to fire on its known-bad snippet is as much a bug as a false
+/// positive on an allow-escaped one. Returns the list of mismatches.
+pub fn check_fixtures(dir: &Path, sections: &BTreeSet<u32>) -> Result<Vec<String>, String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(dir, &mut files)?;
+    files.sort();
+    if files.is_empty() {
+        return Err(format!("no fixtures found under {}", dir.display()));
+    }
+
+    let mut mismatches = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let name = path.file_name().map(|n| n.to_string_lossy().to_string()).unwrap_or_default();
+
+        let first = src.lines().next().unwrap_or("");
+        let Some(as_path) = first.strip_prefix("// lint-fixture: as=") else {
+            mismatches.push(format!("{name}: missing `// lint-fixture: as=<path>` on line 1"));
+            continue;
+        };
+        let as_path = as_path.trim();
+
+        // Expected (line, rule) pairs from `//~ <rule> [<rule>…]` markers.
+        let mut expected: BTreeSet<(usize, &'static str)> = BTreeSet::new();
+        for (idx, line) in src.lines().enumerate() {
+            let Some(p) = line.find("//~") else { continue };
+            for word in line[p + 3..].split_whitespace() {
+                if let Some(rule) = Rule::from_name(word) {
+                    expected.insert((idx + 1, rule.name()));
+                } else {
+                    mismatches.push(format!("{name}:{}: unknown rule `{word}`", idx + 1));
+                }
+            }
+        }
+
+        let got: BTreeSet<(usize, &'static str)> = lint_source(as_path, &src, sections)
+            .into_iter()
+            .map(|d| (d.line, d.rule.name()))
+            .collect();
+
+        for (line, rule) in expected.difference(&got) {
+            mismatches.push(format!("{name}:{line}: expected `{rule}` to fire, it did not"));
+        }
+        for (line, rule) in got.difference(&expected) {
+            mismatches.push(format!("{name}:{line}: unexpected `{rule}` diagnostic"));
+        }
+    }
+    Ok(mismatches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn section_headers_parse() {
+        let md = "# Title\n## §1 One\ntext §9 not a header\n  ## §12 Twelve\n";
+        let s = load_sections(md);
+        assert!(s.contains(&1));
+        assert!(s.contains(&12));
+        assert!(!s.contains(&9));
+    }
+}

@@ -1,0 +1,93 @@
+//! CLI for the invariant linter (DESIGN.md §14).
+//!
+//! ```text
+//! pallas-lint [--root <repo-root>]            lint the tree, exit 1 on findings
+//! pallas-lint --root <r> --fix-list <dir>     run the fixture corpus instead
+//! ```
+//!
+//! Exit codes: 0 clean, 1 diagnostics (or fixture mismatches), 2 usage/IO.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: pallas-lint [--root <repo-root>] [--fix-list <fixtures-dir>]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut fixtures: Option<PathBuf> = None;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage(),
+            },
+            "--fix-list" => match args.next() {
+                Some(v) => fixtures = Some(PathBuf::from(v)),
+                None => return usage(),
+            },
+            "--help" | "-h" => {
+                println!("pallas-lint: static invariant checker (DESIGN.md §14)");
+                println!("usage: pallas-lint [--root <repo-root>] [--fix-list <fixtures-dir>]");
+                return ExitCode::SUCCESS;
+            }
+            _ => return usage(),
+        }
+    }
+
+    if let Some(dir) = fixtures {
+        // Fixture mode: citations resolve against the real DESIGN.md so
+        // the corpus exercises the same section set the repo lint uses.
+        let design = match std::fs::read_to_string(root.join("DESIGN.md")) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("pallas-lint: cannot read DESIGN.md under --root: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        let sections = pallas_lint::load_sections(&design);
+        return match pallas_lint::check_fixtures(&dir, &sections) {
+            Ok(mismatches) if mismatches.is_empty() => {
+                println!("pallas-lint: fixture corpus OK ({})", dir.display());
+                ExitCode::SUCCESS
+            }
+            Ok(mismatches) => {
+                for m in &mismatches {
+                    println!("{m}");
+                }
+                println!("pallas-lint: {} fixture mismatch(es)", mismatches.len());
+                ExitCode::FAILURE
+            }
+            Err(e) => {
+                eprintln!("pallas-lint: {e}");
+                ExitCode::from(2)
+            }
+        };
+    }
+
+    match pallas_lint::lint_repo(&root) {
+        Ok(lint) if lint.diagnostics.is_empty() => {
+            println!("pallas-lint: clean ({} files)", lint.files);
+            ExitCode::SUCCESS
+        }
+        Ok(lint) => {
+            for d in &lint.diagnostics {
+                println!("{d}");
+            }
+            println!(
+                "pallas-lint: {} diagnostic(s) across {} files",
+                lint.diagnostics.len(),
+                lint.files
+            );
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,531 @@
+//! The five invariant rules (DESIGN.md §14), run over the lexer's
+//! code/comment views of a single file.
+//!
+//! | rule name  | contract it enforces                                      |
+//! |------------|-----------------------------------------------------------|
+//! | `bitexact` | no FMA / horizontal adds / float `.sum()` / hash-order    |
+//! |            | iteration in files that feed reduce trees or kernels      |
+//! | `alloc`    | no allocating calls inside `// lint: alloc-free` regions  |
+//! | `safety`   | every `unsafe` carries a `// SAFETY:` comment             |
+//! | `doc-cite` | every `DESIGN.md §N` citation resolves to a real header   |
+//! | `clock`    | no wall-clock reads outside the measurement allowlist     |
+//!
+//! Escape hatch: `// lint: allow(<rule>) -- <reason>` suppresses matching
+//! diagnostics on its own line and the next line. The reason is mandatory;
+//! a directive without one is itself a (non-suppressible) `directive`
+//! diagnostic, so the audit trail cannot silently decay.
+
+use std::collections::BTreeSet;
+
+use crate::lexer::split_views;
+
+/// Identity of a lint rule; `name()` is the spelling used both in
+/// diagnostics and inside `allow(...)` directives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    BitExact,
+    Alloc,
+    Safety,
+    DocCite,
+    Clock,
+    /// Malformed or dangling `// lint:` directives; never suppressible.
+    Directive,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::BitExact => "bitexact",
+            Rule::Alloc => "alloc",
+            Rule::Safety => "safety",
+            Rule::DocCite => "doc-cite",
+            Rule::Clock => "clock",
+            Rule::Directive => "directive",
+        }
+    }
+
+    /// Parse a rule name as used in `allow(...)` and fixture markers.
+    /// `directive` is deliberately not parseable: it polices the escape
+    /// hatch itself and must never be escapable.
+    pub fn from_name(s: &str) -> Option<Rule> {
+        match s {
+            "bitexact" => Some(Rule::BitExact),
+            "alloc" => Some(Rule::Alloc),
+            "safety" => Some(Rule::Safety),
+            "doc-cite" => Some(Rule::DocCite),
+            "clock" => Some(Rule::Clock),
+            _ => None,
+        }
+    }
+}
+
+/// One finding: `file:line: rule — message`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub file: String,
+    /// 1-based physical line.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {} — {}", self.file, self.line, self.rule.name(), self.message)
+    }
+}
+
+/// Files that feed reduce trees or kernels: the bit-exactness bans (R1)
+/// apply under these prefixes (forward-slash relative paths).
+const BITEXACT_SCOPE: &[&str] = &[
+    "rust/src/linalg/",
+    "rust/src/solver/",
+    "rust/src/problem/",
+    "rust/src/framework/",
+    "rust/src/serve/",
+];
+
+/// Wall-clock reads are legitimate here (R5): benches, the bench module's
+/// wall-clock compute, serve latency measurement, and the testkit.
+const CLOCK_ALLOWLIST: &[&str] =
+    &["rust/benches/", "rust/src/bench/", "rust/src/testkit/", "rust/src/serve/"];
+
+/// Allocating constructs banned inside `// lint: alloc-free` regions (R2).
+/// Token-level on the code view: method-call tokens are anchored on `.`,
+/// path tokens are word-bounded. Deliberately includes the cheap-looking
+/// ones (`with_capacity`, `to_owned`) — a "small" allocation in a
+/// steady-state round is still the regression the paper's profile blames.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "String::new",
+    "Box::new",
+    "Rc::new",
+    "Arc::new",
+    "vec!",
+    "format!",
+    "with_capacity(",
+    ".to_vec(",
+    ".to_string(",
+    ".to_owned(",
+    ".clone(",
+    ".collect(",
+    ".collect::<",
+];
+
+/// Integer element types: a `.sum()` whose statement mentions one of these
+/// is order-insensitive and exempt from R1.
+const INT_TYPES: &[&str] = &[
+    "usize", "isize", "u8", "u16", "u32", "u64", "u128", "i8", "i16", "i32", "i64", "i128",
+];
+
+fn is_ident_char(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+/// Find `needle` in `hay` with word boundaries on whichever ends of the
+/// needle are identifier characters. Returns the byte offset.
+fn find_token(hay: &str, needle: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find(needle) {
+        let at = from + rel;
+        let pre_ok = !needle.starts_with(is_ident_char)
+            || !hay[..at].chars().next_back().is_some_and(is_ident_char);
+        let post_ok = !needle.ends_with(is_ident_char)
+            || !hay[at + needle.len()..].chars().next().is_some_and(is_ident_char);
+        if pre_ok && post_ok {
+            return Some(at);
+        }
+        from = at + needle.len();
+    }
+    None
+}
+
+/// A parsed `// lint:` directive.
+enum Directive {
+    /// `allow(rule) -- reason`: suppress `rule` on this line and the next.
+    Allow(Rule),
+    /// `alloc-free`: the next `fn` body is an R2 region.
+    AllocFree,
+}
+
+/// Parse the directive on one comment-view line, if any. `Err` carries the
+/// message for a `directive` diagnostic.
+fn parse_directive(comment_line: &str) -> Option<Result<Directive, String>> {
+    let at = comment_line.find("lint:")?;
+    // Only comment markers and whitespace may precede `lint:` — this is
+    // what distinguishes a directive from prose that mentions one.
+    let lead_ok = comment_line[..at].chars().all(|c| matches!(c, '/' | '!' | '*' | ' ' | '\t'));
+    if !lead_ok {
+        return None;
+    }
+    let rest = comment_line[at + "lint:".len()..].trim_start();
+    if let Some(args) = rest.strip_prefix("allow(") {
+        let Some(close) = args.find(')') else {
+            return Some(Err("unclosed `allow(` in lint directive".to_string()));
+        };
+        let name = args[..close].trim();
+        let Some(rule) = Rule::from_name(name) else {
+            return Some(Err(format!("unknown rule `{name}` in `lint: allow(...)`")));
+        };
+        let tail = args[close + 1..].trim_start();
+        let reason_ok = tail.strip_prefix("--").is_some_and(|r| !r.trim().is_empty());
+        if !reason_ok {
+            return Some(Err(format!("`lint: allow({name})` needs `-- <reason>`")));
+        }
+        return Some(Ok(Directive::Allow(rule)));
+    }
+    if rest == "alloc-free" || rest.starts_with("alloc-free ") || rest.starts_with("alloc-free(") {
+        return Some(Ok(Directive::AllocFree));
+    }
+    Some(Err(format!("unrecognized lint directive `{rest}`")))
+}
+
+/// Prefix of the statement containing position (`line_idx`, `col`) in the
+/// code view: the text from the previous `;`/`{`/`}` (looking back at most
+/// six lines) up to `col`. Used by the `.sum()` integer-element heuristic.
+fn statement_prefix(code_lines: &[&str], line_idx: usize, col: usize) -> String {
+    let mut parts: Vec<&str> = vec![&code_lines[line_idx][..col]];
+    let mut k = line_idx;
+    for _ in 0..6 {
+        if k == 0 {
+            break;
+        }
+        k -= 1;
+        let l = code_lines[k];
+        if let Some(p) = l.rfind([';', '{', '}']) {
+            parts.push(&l[p + 1..]);
+            break;
+        }
+        parts.push(l);
+    }
+    parts.reverse();
+    parts.join(" ")
+}
+
+/// Does the `unsafe` on line `idx` have a `// SAFETY:` comment? Accepted:
+/// a trailing comment on the same line, or a comment found scanning
+/// upward over doc comments, attributes, and blank lines (stopping at the
+/// first real code line).
+fn unsafe_is_audited(idx: usize, code_lines: &[&str], comment_lines: &[&str]) -> bool {
+    if comment_lines[idx].contains("SAFETY:") {
+        return true;
+    }
+    let mut k = idx;
+    for _ in 0..40 {
+        if k == 0 {
+            return false;
+        }
+        k -= 1;
+        if comment_lines[k].contains("SAFETY:") {
+            return true;
+        }
+        let code = code_lines[k].trim();
+        if code.is_empty() || code.starts_with("#[") || code.starts_with("#!") {
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// Lint one file. `file` is the repo-relative forward-slash path (it
+/// selects rule scopes), `sections` the set of §N headers in DESIGN.md.
+pub fn lint_source(file: &str, src: &str, sections: &BTreeSet<u32>) -> Vec<Diagnostic> {
+    let views = split_views(src);
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let code_lines: Vec<&str> = views.code.lines().collect();
+    let comment_lines: Vec<&str> = views.comments.lines().collect();
+    let n_lines = raw_lines.len();
+
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let push = |diags: &mut Vec<Diagnostic>, line: usize, rule: Rule, msg: &str| {
+        diags.push(Diagnostic { file: file.to_string(), line, rule, message: msg.to_string() });
+    };
+
+    // Pass 1: directives.
+    let mut allows: Vec<(usize, Rule)> = Vec::new(); // (1-based line, rule)
+    let mut alloc_free_markers: Vec<usize> = Vec::new(); // 0-based line index
+    for (idx, cl) in comment_lines.iter().enumerate() {
+        match parse_directive(cl) {
+            None => {}
+            Some(Ok(Directive::Allow(rule))) => allows.push((idx + 1, rule)),
+            Some(Ok(Directive::AllocFree)) => alloc_free_markers.push(idx),
+            Some(Err(msg)) => push(&mut diags, idx + 1, Rule::Directive, &msg),
+        }
+    }
+
+    // R1: bit-exactness bans, only in reduce-tree/kernel scope.
+    if BITEXACT_SCOPE.iter().any(|p| file.starts_with(p)) {
+        for (idx, l) in code_lines.iter().enumerate() {
+            if find_token(l, "mul_add").is_some() {
+                let m = "FMA rounds once where mul+add rounds twice; reduce trees stay bit-exact";
+                push(&mut diags, idx + 1, Rule::BitExact, m);
+            }
+            if l.contains("hadd") || l.contains("fmadd") {
+                let m = "horizontal-add / FMA intrinsics change accumulation layout or rounding";
+                push(&mut diags, idx + 1, Rule::BitExact, m);
+            }
+            for set in ["HashMap", "HashSet"] {
+                if find_token(l, set).is_some() {
+                    let m = format!("{set} iteration order is unspecified in a reduce-tree file");
+                    push(&mut diags, idx + 1, Rule::BitExact, &m);
+                }
+            }
+            // `.sum()` over floats: turbofish decides directly; otherwise a
+            // backward statement scan looks for an integer element type.
+            let mut from = 0;
+            while let Some(rel) = l[from..].find(".sum") {
+                let at = from + rel;
+                let after = &l[at + ".sum".len()..];
+                let float_sum = if let Some(ty) = after.strip_prefix("::<") {
+                    ty.starts_with("f64") || ty.starts_with("f32")
+                } else if after.starts_with('(') {
+                    let stmt = statement_prefix(&code_lines, idx, at);
+                    !INT_TYPES.iter().any(|t| find_token(&stmt, t).is_some())
+                } else {
+                    false
+                };
+                if float_sum {
+                    let m = "`.sum()` over floats leaves association order to the iterator; \
+                             use a pinned reduce helper or an explicit sequential loop";
+                    push(&mut diags, idx + 1, Rule::BitExact, m);
+                }
+                from = at + ".sum".len();
+            }
+        }
+    }
+
+    // R2: alloc-free regions.
+    let line_starts: Vec<usize> = {
+        let mut v = vec![0usize];
+        for (i, b) in views.code.bytes().enumerate() {
+            if b == b'\n' {
+                v.push(i + 1);
+            }
+        }
+        v
+    };
+    let line_of = |pos: usize| -> usize {
+        match line_starts.binary_search(&pos) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    };
+    for &marker in &alloc_free_markers {
+        let fn_line = (marker + 1..n_lines.min(marker + 16))
+            .find(|&k| find_token(code_lines[k], "fn").is_some());
+        let Some(fn_line) = fn_line else {
+            let m = "`lint: alloc-free` has no `fn` within the next 15 lines";
+            push(&mut diags, marker + 1, Rule::Directive, m);
+            continue;
+        };
+        let Some(rel_open) = views.code[line_starts[fn_line]..].find('{') else {
+            let m = "`lint: alloc-free` target has no function body";
+            push(&mut diags, marker + 1, Rule::Directive, m);
+            continue;
+        };
+        let open = line_starts[fn_line] + rel_open;
+        let mut depth = 0usize;
+        let mut close = views.code.len();
+        for (off, b) in views.code[open..].bytes().enumerate() {
+            if b == b'{' {
+                depth += 1;
+            } else if b == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    close = open + off;
+                    break;
+                }
+            }
+        }
+        let body = &views.code[open..close];
+        for token in ALLOC_TOKENS {
+            let mut from = 0;
+            while let Some(rel) = find_token(&body[from..], token) {
+                let at = from + rel;
+                let m = format!("`{token}` allocates inside a `lint: alloc-free` region");
+                push(&mut diags, line_of(open + at), Rule::Alloc, &m);
+                from = at + token.len();
+            }
+        }
+    }
+
+    // R3: unsafe audit.
+    for (idx, l) in code_lines.iter().enumerate() {
+        if find_token(l, "unsafe").is_none() {
+            continue;
+        }
+        if unsafe_is_audited(idx, &code_lines, &comment_lines) {
+            continue;
+        }
+        let m = "`unsafe` without a `// SAFETY:` comment on the preceding lines";
+        push(&mut diags, idx + 1, Rule::Safety, m);
+    }
+
+    // R4: doc-citation resolution (raw lines — citations live in comments,
+    // but a stray one in a string should resolve too). Only numeric
+    // citations are checked; named ones (`§Offline-toolchain`) are prose.
+    for (idx, l) in raw_lines.iter().enumerate() {
+        let mut from = 0;
+        while let Some(rel) = l[from..].find("DESIGN.md §") {
+            let at = from + rel;
+            let after = &l[at + "DESIGN.md §".len()..];
+            let digits: String = after.chars().take_while(char::is_ascii_digit).collect();
+            let resolved = match digits.parse::<u32>() {
+                Ok(num) => sections.contains(&num),
+                Err(_) => true, // non-numeric citation: not checked
+            };
+            if !resolved {
+                let m = format!("citation `DESIGN.md §{digits}` has no matching section header");
+                push(&mut diags, idx + 1, Rule::DocCite, &m);
+            }
+            from = at + "DESIGN.md §".len();
+        }
+    }
+
+    // R5: virtual-clock purity outside the measurement allowlist.
+    if !CLOCK_ALLOWLIST.iter().any(|p| file.starts_with(p)) {
+        for (idx, l) in code_lines.iter().enumerate() {
+            if l.contains("Instant::now") || find_token(l, "SystemTime").is_some() {
+                let m = "wall-clock read outside the allowlist — simnet time must stay virtual";
+                push(&mut diags, idx + 1, Rule::Clock, m);
+            }
+        }
+    }
+
+    // Suppression: an allow(rule) covers its own line and the next one.
+    // `directive` diagnostics are never suppressible.
+    diags.retain(|d| {
+        d.rule == Rule::Directive
+            || !allows.iter().any(|&(al, ar)| ar == d.rule && (al == d.line || al + 1 == d.line))
+    });
+
+    diags.sort_by_key(|d| (d.line, d.rule));
+    diags.dedup_by_key(|d| (d.line, d.rule));
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sections() -> BTreeSet<u32> {
+        (1..=14).collect()
+    }
+
+    fn lint_at(path: &str, src: &str) -> Vec<Diagnostic> {
+        lint_source(path, src, &sections())
+    }
+
+    const IN_SCOPE: &str = "rust/src/linalg/x.rs";
+
+    #[test]
+    fn r1_flags_mul_add_and_float_sum() {
+        let src = "fn f(x: f64, y: f64, z: f64, v: &[f64]) -> f64 {\n\
+                   let a = x.mul_add(y, z);\n\
+                   let s: f64 = v.iter().sum();\n\
+                   a + s\n}\n";
+        let d = lint_at(IN_SCOPE, src);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().all(|x| x.rule == Rule::BitExact));
+        assert_eq!(d[0].line, 2);
+        assert_eq!(d[1].line, 3);
+    }
+
+    #[test]
+    fn r1_integer_sums_are_exempt() {
+        let src = "fn f(v: &[usize]) -> usize {\n\
+                   let total: usize = v.iter().sum();\n\
+                   let t2 = v.iter().sum::<usize>();\n\
+                   total + t2\n}\n";
+        assert!(lint_at(IN_SCOPE, src).is_empty());
+    }
+
+    #[test]
+    fn r1_is_scope_gated_and_comment_blind() {
+        let src = "// mul_add is discussed here, not used\nfn f() {}\n";
+        assert!(lint_at(IN_SCOPE, src).is_empty());
+        let used = "fn f(x: f64) -> f64 { x.mul_add(x, x) }\n";
+        assert!(lint_at("rust/src/session/x.rs", used).is_empty());
+        assert_eq!(lint_at(IN_SCOPE, used).len(), 1);
+    }
+
+    #[test]
+    fn r2_fires_only_inside_marked_region() {
+        let src = "// lint: alloc-free\n\
+                   fn hot(out: &mut Vec<f64>) {\n\
+                   out.clear();\n\
+                   let v = Vec::new();\n\
+                   drop(v);\n}\n\
+                   fn cold() -> Vec<f64> { Vec::new() }\n";
+        let d = lint_at("rust/src/util/x.rs", src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!((d[0].line, d[0].rule), (4, Rule::Alloc));
+    }
+
+    #[test]
+    fn r3_accepts_safety_over_attributes_and_rejects_bare() {
+        let good = "// SAFETY: contract restated.\n\
+                    #[inline]\n\
+                    pub unsafe fn g(p: *const f64) -> f64 { *p }\n";
+        assert!(lint_at("rust/src/util/x.rs", good).is_empty());
+        let bad = "fn f(p: *const f64) -> f64 {\nunsafe { *p }\n}\n";
+        let d = lint_at("rust/src/util/x.rs", bad);
+        assert_eq!(d.len(), 1);
+        assert_eq!((d[0].line, d[0].rule), (2, Rule::Safety));
+    }
+
+    #[test]
+    fn r4_unresolved_citation_fires() {
+        let src = "//! See DESIGN.md §11 and DESIGN.md §99.\n";
+        let d = lint_at("rust/src/util/x.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!((d[0].line, d[0].rule), (1, Rule::DocCite));
+    }
+
+    #[test]
+    fn r5_allowlist_paths_are_exempt() {
+        let src = "fn t() { let t0 = std::time::Instant::now(); drop(t0); }\n";
+        assert_eq!(lint_at("rust/src/framework/x.rs", src).len(), 1);
+        assert!(lint_at("rust/src/bench/x.rs", src).is_empty());
+        assert!(lint_at("rust/benches/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_covers_own_and_next_line_with_reason() {
+        let src = "// lint: allow(clock) -- measures host jitter\n\
+                   fn t() { let t0 = std::time::Instant::now(); drop(t0); }\n";
+        assert!(lint_at("rust/src/framework/x.rs", src).is_empty());
+        let trailing = "fn f(v: &[f64]) -> f64 {\n\
+                        v.iter().sum() // lint: allow(bitexact) -- reference oracle\n\
+                        }\n";
+        assert!(lint_at(IN_SCOPE, trailing).is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_directive_diagnostic() {
+        let src = "// lint: allow(clock)\n\
+                   fn t() { let t0 = std::time::Instant::now(); drop(t0); }\n";
+        let d = lint_at("rust/src/framework/x.rs", src);
+        // The malformed directive does not suppress, so both fire.
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert_eq!(d[0].rule, Rule::Directive);
+        assert_eq!(d[1].rule, Rule::Clock);
+    }
+
+    #[test]
+    fn unknown_rule_and_unknown_directive_fire() {
+        let d = lint_at("rust/src/util/x.rs", "// lint: allow(speed) -- go fast\n");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, Rule::Directive);
+        let d2 = lint_at("rust/src/util/x.rs", "// lint: frobnicate\n");
+        assert_eq!(d2.len(), 1);
+        assert_eq!(d2[0].rule, Rule::Directive);
+    }
+
+    #[test]
+    fn banned_tokens_in_strings_do_not_fire() {
+        let src = "fn f() -> &'static str { \"Instant::now mul_add HashMap\" }\n";
+        assert!(lint_at(IN_SCOPE, src).is_empty());
+    }
+}

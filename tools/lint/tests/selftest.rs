@@ -1,0 +1,77 @@
+//! Self-tests for `pallas-lint` (DESIGN.md §14).
+//!
+//! Two invariants about the invariant checker itself:
+//!  1. the fixture corpus fires exactly where its `//~ <rule>` markers
+//!     say (one known-bad and one allow-escaped snippet per rule), and
+//!  2. the repo tree at HEAD is clean — shipping a violation and
+//!     shipping a linter that misses it are the same failure.
+
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    // tools/lint/ -> repo root.
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+fn sections() -> std::collections::BTreeSet<u32> {
+    let design = std::fs::read_to_string(repo_root().join("DESIGN.md")).expect("read DESIGN.md");
+    pallas_lint::load_sections(&design)
+}
+
+#[test]
+fn design_md_declares_the_expected_sections() {
+    let s = sections();
+    for n in 1..=14 {
+        assert!(s.contains(&n), "DESIGN.md is missing a §{n} header");
+    }
+}
+
+#[test]
+fn fixture_corpus_fires_exactly_on_its_markers() {
+    let dir = repo_root().join("tools/lint/fixtures");
+    let mismatches = pallas_lint::check_fixtures(&dir, &sections()).expect("fixture walk");
+    assert!(mismatches.is_empty(), "fixture corpus mismatches:\n{}", mismatches.join("\n"));
+}
+
+#[test]
+fn every_rule_has_a_firing_fixture() {
+    // Guards the corpus against decay: each of the five rules must have at
+    // least one known-bad snippet that actually fires.
+    let dir = repo_root().join("tools/lint/fixtures");
+    let sections = sections();
+    let mut fired: std::collections::BTreeSet<&'static str> = std::collections::BTreeSet::new();
+    for entry in std::fs::read_dir(&dir).expect("read fixtures dir") {
+        let path = entry.expect("dir entry").path();
+        if !path.extension().is_some_and(|e| e == "rs") {
+            continue;
+        }
+        let src = std::fs::read_to_string(&path).expect("read fixture");
+        let as_path = src
+            .lines()
+            .next()
+            .and_then(|l| l.strip_prefix("// lint-fixture: as="))
+            .expect("fixture header")
+            .trim()
+            .to_string();
+        for d in pallas_lint::lint_source(&as_path, &src, &sections) {
+            fired.insert(d.rule.name());
+        }
+    }
+    for rule in ["bitexact", "alloc", "safety", "doc-cite", "clock"] {
+        assert!(fired.contains(rule), "no fixture fires `{rule}`");
+    }
+}
+
+#[test]
+fn repo_tree_is_clean_at_head() {
+    let lint = pallas_lint::lint_repo(&repo_root()).expect("lint repo");
+    // Sanity: the walk really covered the tree, not an empty directory.
+    assert!(lint.files >= 50, "suspiciously few files walked: {}", lint.files);
+    let rendered: Vec<String> = lint.diagnostics.iter().map(|d| d.to_string()).collect();
+    assert!(
+        rendered.is_empty(),
+        "pallas-lint found {} violation(s) at HEAD:\n{}",
+        rendered.len(),
+        rendered.join("\n")
+    );
+}
