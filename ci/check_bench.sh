@@ -97,6 +97,17 @@ bar("serving.allocs_per_batch", lambda v: v == 0, "== 0 (zero-alloc steady-state
 bar("serving.preds_per_sec_1core", lambda v: v >= 2e5, ">= 2e5 predictions/sec on one core")
 bar("serving.size_regime.size_flushes", lambda v: v >= 1, ">= 1 size flush above the cutover rate")
 bar("serving.deadline_regime.deadline_flushes", lambda v: v >= 1, ">= 1 deadline flush below the cutover rate")
+# Overload harness (schema v9, DESIGN.md sec. 15): a 4x-sustainable storm
+# must shed, the bounded queue must hold its cap, and the latency tail of
+# admitted requests must be measured (virtual clock — deterministic).
+bar("serving.overload.shed_rate", lambda v: v > 0.0, "> 0 (a 4x storm must load-shed)")
+bar("serving.overload.queue_cap", lambda v: v >= 1, ">= 1")
+bar("serving.overload.max_depth",
+    lambda v: v <= (get(doc, "serving.overload.queue_cap") or v),
+    "<= serving.overload.queue_cap (shedding keeps the bound)")
+bar("serving.overload.p99_latency_s", lambda v: v > 0.0, "> 0 (admitted-request tail measured)")
+bar("serving.overload.degraded_occupancy", lambda v: 0.0 < v <= 1.0,
+    "in (0, 1] (the degraded deadline engages under overload)")
 
 # Core-count- and backend-conditional bars.
 cores = get(doc, "nested_parallel.cores")

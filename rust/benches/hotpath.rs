@@ -50,7 +50,9 @@ use sparkbench::framework::{build_any, Engine, EngineOptions};
 use sparkbench::linalg;
 use sparkbench::linalg::{DeltaReducer, DeltaSlot, NestedTreePlan};
 use sparkbench::problem::{GapScratch, Problem};
-use sparkbench::serve::{replay, BatchPolicy, Predictor};
+use sparkbench::serve::{
+    overload_replay, replay, ArrivalPattern, BatchPolicy, OverloadConfig, Predictor, ServiceModel,
+};
 use sparkbench::session::Session;
 use sparkbench::solver::{scd::NativeScd, LocalSolver, SolveRequest, SolveResult};
 use sparkbench::testkit::alloc::{current_thread_allocations, CountingAllocator};
@@ -77,7 +79,7 @@ fn main() {
     let b = Bencher::default();
     let mut results = Vec::new();
     let mut json = Json::obj();
-    json.set("bench", "hotpath").set("schema_version", 8usize);
+    json.set("bench", "hotpath").set("schema_version", 9usize);
 
     // ---- sparse dot / axpy — one call per SCD step, THE hot pair --------
     let ds = webspam_like(&SyntheticSpec::webspam_mini());
@@ -862,6 +864,60 @@ fn main() {
                 .set("preds_per_sec", stats.preds_per_sec);
             js.set(tag, jr);
         }
+
+        // Overload regime (DESIGN.md §15): a seeded storm at 4× the
+        // sustainable service rate through the admission-controlled
+        // harness — entirely on the virtual clock, so these numbers are
+        // a deterministic property of the seed, not of this host. The
+        // service model pins a full batch to one deadline (μ = λ*).
+        let service = ServiceModel {
+            overhead_s: 0.5 * policy.max_delay,
+            per_row_s: 0.5 * policy.max_delay / policy.max_batch as f64,
+        };
+        let ocfg = OverloadConfig {
+            queue_cap: 4 * policy.max_batch,
+            service,
+            malformed_every: 0,
+            swap_at_batch: None,
+            seed: 42,
+        };
+        let storm_rate = 4.0 * service.sustainable_rate(policy.max_batch);
+        let pattern = ArrivalPattern::Storm { rate: storm_rate };
+        let mut opreds = Vec::new();
+        let ostats = overload_replay(
+            predictor.model(),
+            None,
+            &rows,
+            &policy,
+            &pattern,
+            &ocfg,
+            &mut opreds,
+        );
+        println!(
+            "serving overload [storm @ {:.0} req/s, cap {}]: shed {}/{} ({:.1}%), \
+             degraded occupancy {:.1}%, p99 {:.0}µs",
+            storm_rate,
+            ocfg.queue_cap,
+            ostats.shed,
+            ostats.offered,
+            100.0 * ostats.shed_rate,
+            100.0 * ostats.degraded_occupancy,
+            ostats.p99_latency_s * 1e6
+        );
+        let mut jo = Json::obj();
+        jo.set("storm_rate", storm_rate)
+            .set("queue_cap", ocfg.queue_cap)
+            .set("offered", ostats.offered)
+            .set("admitted", ostats.admitted)
+            .set("shed", ostats.shed)
+            .set("shed_rate", ostats.shed_rate)
+            .set("batches", ostats.batches)
+            .set("degraded_occupancy", ostats.degraded_occupancy)
+            .set("max_depth", ostats.max_depth)
+            .set("p50_latency_s", ostats.p50_latency_s)
+            .set("p99_latency_s", ostats.p99_latency_s);
+        js.set("overload", jo);
+
         json.set("serving", js);
         results.push(seq);
     }

@@ -2,7 +2,15 @@
 //! fingerprint) so long runs survive restarts — standard framework duty.
 //!
 //! Format: versioned JSON envelope with base-16 packed f64 payloads
-//! (exact bit-level round-trip, no float-text precision loss). Version 5
+//! (exact bit-level round-trip, no float-text precision loss). Version 6
+//! adds a CRC32 footer over the packed payload (hand-rolled table, zero
+//! deps — DESIGN.md §15): a single flipped bit anywhere in the α/v hex
+//! is refused at decode time instead of silently serving a corrupted
+//! model. Saves go write-temp → fsync → atomic rename, so a crash mid-
+//! write never leaves a half-written envelope under the final name; the
+//! [`CheckpointStore`] retains the last N envelopes and
+//! [`CheckpointStore::latest_valid`] walks backward past damaged files
+//! to the newest good one. Version 5
 //! records the chaos fault-plan cursor (events already consumed) so a
 //! resumed chaos session does not re-fire deaths that already happened;
 //! pre-v5 envelopes decode with cursor 0. Version 4
@@ -16,11 +24,54 @@
 //! (flat `lam_n`/`eta` fields, squared loss implied) still decode — as
 //! ridge at η = 1, elastic net otherwise.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::config::Precision;
 use crate::problem::Problem;
 use crate::util::json::Json;
+
+/// CRC32 (IEEE, reflected polynomial 0xEDB88320) lookup table, computed
+/// at compile time — no dependency, no runtime init.
+const CRC32_TABLE: [u32; 256] = crc32_table();
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+fn crc32_update(state: u32, bytes: &[u8]) -> u32 {
+    let mut crc = state;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC32_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    crc
+}
+
+/// CRC32 of a byte slice (standard init/final-xor convention).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    !crc32_update(0xFFFF_FFFF, bytes)
+}
+
+/// The v6 payload checksum: one CRC over `alpha_hex` followed by `v_hex`,
+/// exactly as they appear in the envelope. Any bit flip in either packed
+/// vector — or a swap of bytes between them — changes the footer.
+fn payload_crc(alpha_hex: &str, v_hex: &str) -> u32 {
+    !crc32_update(
+        crc32_update(0xFFFF_FFFF, alpha_hex.as_bytes()),
+        v_hex.as_bytes(),
+    )
+}
 
 /// A training checkpoint.
 #[derive(Debug, Clone, PartialEq)]
@@ -51,17 +102,17 @@ pub struct Checkpoint {
     pub fault_cursor: usize,
 }
 
-const VERSION: f64 = 5.0;
+const VERSION: f64 = 6.0;
 
 /// Engine-free, read-only view of a checkpoint envelope on disk: the
 /// serving path's entry point (DESIGN.md §13). [`Envelope::peek`] decodes
-/// `(α, v, problem, precision)` from **any** v1–v5 envelope without
+/// `(α, v, problem, precision)` from **any** v1–v6 envelope without
 /// constructing a `DistEngine`, refusing gracefully on truncated JSON,
-/// corrupt hex payloads, unknown versions or empty model vectors — a
-/// server must fail at load time, not mid-request.
+/// corrupt hex payloads, failed CRC footers, unknown versions or empty
+/// model vectors — a server must fail at load time, not mid-request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Envelope {
-    /// Envelope schema version as written on disk (1..=5).
+    /// Envelope schema version as written on disk (1..=6).
     pub version: u32,
     /// The decoded checkpoint (pre-v5 fields defaulted as documented in
     /// the module header).
@@ -127,6 +178,9 @@ fn unpack_f64s(s: &str) -> Result<Vec<f64>, String> {
 
 impl Checkpoint {
     pub fn to_json(&self) -> Json {
+        let alpha_hex = pack_f64s(&self.alpha);
+        let v_hex = pack_f64s(&self.v);
+        let crc = payload_crc(&alpha_hex, &v_hex);
         let mut j = Json::obj();
         j.set("version", VERSION)
             .set("round", self.round)
@@ -136,8 +190,9 @@ impl Checkpoint {
             .set("threads_per_worker", self.threads_per_worker)
             .set("precision", self.precision.label())
             .set("fault_cursor", self.fault_cursor)
-            .set("alpha_hex", pack_f64s(&self.alpha))
-            .set("v_hex", pack_f64s(&self.v));
+            .set("alpha_hex", alpha_hex)
+            .set("v_hex", v_hex)
+            .set("payload_crc32", crc as usize);
         j
     }
 
@@ -145,7 +200,7 @@ impl Checkpoint {
         let ver = j.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0);
         let num =
             |k: &str| -> Result<f64, String> { j.get(k).and_then(|v| v.as_f64()).ok_or(format!("missing {}", k)) };
-        let problem = if ver == VERSION || ver == 4.0 || ver == 3.0 || ver == 2.0 {
+        let problem = if ver == VERSION || ver == 5.0 || ver == 4.0 || ver == 3.0 || ver == 2.0 {
             Problem::from_json(j.get("problem").ok_or("missing problem")?)?
         } else if ver == 1.0 {
             // v1 envelopes predate the problem layer: squared loss with the
@@ -180,6 +235,25 @@ impl Checkpoint {
         } else {
             0
         };
+        let alpha_hex = j
+            .get("alpha_hex")
+            .and_then(|v| v.as_str())
+            .ok_or("missing alpha")?;
+        let v_hex = j.get("v_hex").and_then(|v| v.as_str()).ok_or("missing v")?;
+        // Pre-v6 envelopes predate the CRC footer: no checksum to verify.
+        // A v6 envelope whose footer does not match its payload is corrupt
+        // — a flipped bit anywhere in the hex is caught here, before the
+        // payload is unpacked into a model.
+        if ver >= 6.0 {
+            let want = num("payload_crc32")? as u32;
+            let got = payload_crc(alpha_hex, v_hex);
+            if want != got {
+                return Err(format!(
+                    "payload CRC mismatch: footer {:#010x}, payload hashes to {:#010x}",
+                    want, got
+                ));
+            }
+        }
         Ok(Checkpoint {
             precision,
             fault_cursor,
@@ -188,13 +262,17 @@ impl Checkpoint {
             problem,
             workers: num("workers")? as usize,
             threads_per_worker,
-            alpha: unpack_f64s(j.get("alpha_hex").and_then(|v| v.as_str()).ok_or("missing alpha")?)?,
-            v: unpack_f64s(j.get("v_hex").and_then(|v| v.as_str()).ok_or("missing v")?)?,
+            alpha: unpack_f64s(alpha_hex)?,
+            v: unpack_f64s(v_hex)?,
         })
     }
 
+    /// Durable save: write-temp → fsync → atomic rename. A reader (or a
+    /// crash-restarted session) never observes a half-written envelope
+    /// under `path` — it sees either the previous complete file or the new
+    /// one (DESIGN.md §15).
     pub fn save(&self, path: &Path) -> Result<(), String> {
-        crate::metrics::write_file(path, &self.to_json().pretty()).map_err(|e| e.to_string())
+        write_atomic(path, &self.to_json().pretty())
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint, String> {
@@ -233,6 +311,226 @@ impl Checkpoint {
             ));
         }
         Ok(())
+    }
+}
+
+/// Write `contents` to `path` durably: temp file in the same directory,
+/// `fsync`, then atomic `rename`. Every failure mode is a `String` error
+/// naming the file — never a panic, never a partial file under `path`.
+fn write_atomic(path: &Path, contents: &str) -> Result<(), String> {
+    use std::io::Write;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| format!("cannot create {}: {}", parent.display(), e))?;
+        }
+    }
+    // Same-directory temp name so the rename is a metadata-only move on
+    // every POSIX filesystem (cross-device renames are not atomic).
+    let tmp = path.with_extension("tmp");
+    let mut f = std::fs::File::create(&tmp)
+        .map_err(|e| format!("cannot create {}: {}", tmp.display(), e))?;
+    f.write_all(contents.as_bytes())
+        .map_err(|e| format!("cannot write {}: {}", tmp.display(), e))?;
+    f.sync_all()
+        .map_err(|e| format!("cannot fsync {}: {}", tmp.display(), e))?;
+    drop(f);
+    std::fs::rename(&tmp, path).map_err(|e| {
+        format!(
+            "cannot rename {} -> {}: {}",
+            tmp.display(),
+            path.display(),
+            e
+        )
+    })
+}
+
+/// One durability event, as surfaced to
+/// [`RoundObserver::on_durability`](crate::session::observer::RoundObserver::on_durability):
+/// the full life of a checkpoint save — success, a retried transient
+/// failure, or the bounded-backoff budget running out. Sessions degrade
+/// gracefully on `GaveUp` (training continues, durability is lost until
+/// the next save succeeds) — they never panic and never go silent.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DurabilityEvent {
+    /// A checkpoint reached disk (atomically) on attempt `attempts`.
+    Saved {
+        round: usize,
+        path: PathBuf,
+        attempts: usize,
+    },
+    /// Attempt `attempt` failed; the save will be retried.
+    Retry {
+        round: usize,
+        attempt: usize,
+        error: String,
+    },
+    /// All `attempts` tries failed; this round's checkpoint is lost.
+    GaveUp {
+        round: usize,
+        attempts: usize,
+        error: String,
+    },
+}
+
+/// Bounded retry budget for checkpoint saves. Backoff is attempt-counted,
+/// not wall-timed: the virtual-clock invariant (DESIGN.md §6) bans wall
+/// reads from session scope, and a deterministic retry ladder keeps chaos
+/// replays bit-exact. Transient filesystem errors (NFS blips, ENOSPC
+/// races) get `SAVE_ATTEMPTS` immediate retries; a persistently failing
+/// target (read-only dir) degrades to `GaveUp` instead of panicking.
+pub const SAVE_ATTEMPTS: usize = 3;
+
+/// Save `ckpt` to `path` with bounded retry, reporting every attempt
+/// through `emit`. Returns `Ok` on any successful attempt.
+pub fn save_with_retry(
+    ckpt: &Checkpoint,
+    path: &Path,
+    emit: &mut dyn FnMut(DurabilityEvent),
+) -> Result<(), String> {
+    let mut last = String::new();
+    for attempt in 1..=SAVE_ATTEMPTS {
+        match ckpt.save(path) {
+            Ok(()) => {
+                emit(DurabilityEvent::Saved {
+                    round: ckpt.round,
+                    path: path.to_path_buf(),
+                    attempts: attempt,
+                });
+                return Ok(());
+            }
+            Err(e) => {
+                if attempt < SAVE_ATTEMPTS {
+                    emit(DurabilityEvent::Retry {
+                        round: ckpt.round,
+                        attempt,
+                        error: e.clone(),
+                    });
+                }
+                last = e;
+            }
+        }
+    }
+    emit(DurabilityEvent::GaveUp {
+        round: ckpt.round,
+        attempts: SAVE_ATTEMPTS,
+        error: last.clone(),
+    });
+    Err(last)
+}
+
+/// A directory of versioned checkpoint envelopes (`ckpt.NNNNNN.pallas`,
+/// N = completed rounds) with bounded retention and crash-safe recovery:
+/// every save is atomic ([`Checkpoint::save`]), the newest `keep` files
+/// are retained, and [`CheckpointStore::latest_valid`] walks backward
+/// past corrupt/truncated/checksum-failing envelopes to the newest one
+/// that decodes clean (DESIGN.md §15).
+#[derive(Debug, Clone)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl CheckpointStore {
+    /// Default retention depth: enough history to survive a corrupted
+    /// tail plus a crash mid-write, small enough not to hoard disk.
+    pub const DEFAULT_KEEP: usize = 3;
+
+    /// Open (or designate — the directory is created on first save) a
+    /// store at `dir`, retaining the newest `keep` envelopes (min 1).
+    pub fn new(dir: impl AsRef<Path>, keep: usize) -> CheckpointStore {
+        CheckpointStore {
+            dir: dir.as_ref().to_path_buf(),
+            keep: keep.max(1),
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn keep(&self) -> usize {
+        self.keep
+    }
+
+    /// The on-disk name for a checkpoint taken after `round` completed
+    /// rounds: `ckpt.000042.pallas`. Zero-padding keeps lexicographic
+    /// and numeric order identical for any run under a million rounds.
+    pub fn file_name(round: usize) -> String {
+        format!("ckpt.{:06}.pallas", round)
+    }
+
+    /// Full path for a given completed-round count.
+    pub fn path_for(&self, round: usize) -> PathBuf {
+        self.dir.join(Self::file_name(round))
+    }
+
+    /// Parse `ckpt.NNNNNN.pallas` back to N; anything else (temp files,
+    /// stray content) is not a store member.
+    fn round_of(name: &str) -> Option<usize> {
+        let digits = name.strip_prefix("ckpt.")?.strip_suffix(".pallas")?;
+        if digits.len() != 6 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+            return None;
+        }
+        digits.parse().ok()
+    }
+
+    /// Completed-round counts of every envelope present, ascending. An
+    /// unreadable or absent directory is an empty store, not an error.
+    pub fn rounds(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for entry in rd.flatten() {
+                if let Some(name) = entry.file_name().to_str() {
+                    if let Some(r) = Self::round_of(name) {
+                        out.push(r);
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Atomic save with bounded retry ([`save_with_retry`]) and retention
+    /// pruning. Events stream through `emit`; the returned path names the
+    /// envelope written.
+    pub fn save(
+        &self,
+        ckpt: &Checkpoint,
+        emit: &mut dyn FnMut(DurabilityEvent),
+    ) -> Result<PathBuf, String> {
+        let path = self.path_for(ckpt.round);
+        save_with_retry(ckpt, &path, emit)?;
+        self.prune();
+        Ok(path)
+    }
+
+    /// Drop all but the newest `keep` envelopes. Best-effort: a file that
+    /// refuses deletion is left for the next prune.
+    fn prune(&self) {
+        let rounds = self.rounds();
+        if rounds.len() > self.keep {
+            for r in &rounds[..rounds.len() - self.keep] {
+                std::fs::remove_file(self.path_for(*r)).ok();
+            }
+        }
+    }
+
+    /// The newest envelope that decodes clean — structure, version, CRC
+    /// footer, non-empty model vectors — walking backward past any
+    /// damaged tail. `None` means no valid checkpoint exists (fresh
+    /// start). This is the crash-recovery entry point: a restart resumes
+    /// from here and re-runs at most `every − 1` rounds, which the round
+    /// seeds make bit-exact (DESIGN.md §15).
+    pub fn latest_valid(&self) -> Option<(PathBuf, Envelope)> {
+        for r in self.rounds().into_iter().rev() {
+            let p = self.path_for(r);
+            if let Ok(env) = Envelope::peek(&p) {
+                return Some((p, env));
+            }
+        }
+        None
     }
 }
 
@@ -416,7 +714,7 @@ mod tests {
         let path = std::env::temp_dir().join("sparkbench_envelope_peek_test.json");
         c.save(&path).unwrap();
         let env = Envelope::peek(&path).unwrap();
-        assert_eq!(env.version, 5);
+        assert_eq!(env.version, 6);
         assert_eq!(env.ckpt, c);
         assert_eq!(env.n(), c.alpha.len());
         assert_eq!(env.m(), c.v.len());
@@ -517,5 +815,191 @@ mod tests {
         }
         let f_after = cfg.problem.primal(&ds, &engine.alpha_global());
         assert!(f_after < f_at_ckpt, "{} !< {}", f_after, f_at_ckpt);
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // The classic IEEE test vector, plus edge cases pinning the table.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn v6_footer_catches_every_single_bit_flip_in_the_payload() {
+        // Property: flip any single bit of either hex payload and the
+        // decode must refuse with a CRC error. The hex alphabet means a
+        // flipped bit can also produce a non-hex char — either way the
+        // envelope must not decode to a model.
+        let c = sample();
+        let j = c.to_json();
+        let alpha_hex = j.get("alpha_hex").and_then(|v| v.as_str()).unwrap().to_string();
+        let v_hex = j.get("v_hex").and_then(|v| v.as_str()).unwrap().to_string();
+        for (key, hex) in [("alpha_hex", &alpha_hex), ("v_hex", &v_hex)] {
+            for byte in 0..hex.len() {
+                for bit in 0..7 {
+                    let mut bytes = hex.as_bytes().to_vec();
+                    bytes[byte] ^= 1 << bit;
+                    let Ok(flipped) = String::from_utf8(bytes) else {
+                        continue;
+                    };
+                    if flipped == *hex {
+                        continue;
+                    }
+                    let mut jm = c.to_json();
+                    jm.set(key, flipped);
+                    assert!(
+                        Checkpoint::from_json(&jm).is_err(),
+                        "bit {} of byte {} in {} survived decode",
+                        bit,
+                        byte,
+                        key
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn v6_footer_mismatch_is_reported_as_a_crc_error() {
+        let mut j = sample().to_json();
+        let crc = j.get("payload_crc32").and_then(|v| v.as_f64()).unwrap() as u32;
+        j.set("payload_crc32", (crc ^ 1) as usize);
+        let err = Checkpoint::from_json(&j).unwrap_err();
+        assert!(err.contains("CRC"), "{}", err);
+    }
+
+    #[test]
+    fn v5_envelopes_without_a_footer_still_decode() {
+        // Pre-v6 envelopes have no CRC field; they must keep decoding
+        // (with their own version ladder defaults) — durability is new,
+        // old checkpoints are not invalidated.
+        let mut j = sample().to_json();
+        j.set("version", 5.0).set("payload_crc32", Json::Null);
+        let v5 = Checkpoint::from_json(&j).unwrap();
+        assert_eq!(v5.alpha, sample().alpha);
+        assert_eq!(v5.fault_cursor, sample().fault_cursor);
+        assert_eq!(v5.problem, Problem::ridge(0.5));
+    }
+
+    #[test]
+    fn truncation_at_every_byte_boundary_is_refused() {
+        // Property: cut the serialized envelope at any byte boundary and
+        // peek must refuse — truncated JSON, a short hex payload, or a
+        // missing footer, never a silently shorter model.
+        let full = sample().to_json().pretty();
+        let path = std::env::temp_dir().join("sparkbench_trunc_sweep_test.json");
+        for cut in 0..full.len() {
+            crate::metrics::write_file(&path, &full[..cut]).unwrap();
+            assert!(
+                Envelope::peek(&path).is_err(),
+                "truncation at byte {} of {} decoded",
+                cut,
+                full.len()
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn atomic_save_leaves_no_temp_file_and_replaces_in_place() {
+        let dir = std::env::temp_dir().join("sparkbench_atomic_save_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("ckpt.json");
+        let mut c = sample();
+        c.save(&path).unwrap();
+        c.round = 43;
+        c.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().round, 43);
+        // No .tmp residue after a successful rename.
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["ckpt.json".to_string()], "{:?}", names);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_with_retry_reports_each_attempt_then_gives_up() {
+        // A directory path used as a file target fails every attempt:
+        // expect SAVE_ATTEMPTS-1 Retry events, one GaveUp, and an Err —
+        // never a panic.
+        let dir = std::env::temp_dir().join("sparkbench_retry_target_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let c = sample();
+        let mut events = Vec::new();
+        let res = save_with_retry(&c, &dir, &mut |e| events.push(e));
+        assert!(res.is_err());
+        assert_eq!(events.len(), SAVE_ATTEMPTS);
+        for (i, ev) in events.iter().take(SAVE_ATTEMPTS - 1).enumerate() {
+            match ev {
+                DurabilityEvent::Retry { round, attempt, .. } => {
+                    assert_eq!(*round, c.round);
+                    assert_eq!(*attempt, i + 1);
+                }
+                other => panic!("expected Retry, got {:?}", other),
+            }
+        }
+        match events.last().unwrap() {
+            DurabilityEvent::GaveUp { attempts, .. } => assert_eq!(*attempts, SAVE_ATTEMPTS),
+            other => panic!("expected GaveUp, got {:?}", other),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_names_saves_prunes_and_recovers() {
+        let dir = std::env::temp_dir().join("sparkbench_store_basic_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::new(&dir, 2);
+        assert_eq!(CheckpointStore::file_name(42), "ckpt.000042.pallas");
+        assert!(store.latest_valid().is_none());
+        let mut c = sample();
+        let mut sink = |_e: DurabilityEvent| {};
+        for round in [4usize, 8, 12] {
+            c.round = round;
+            store.save(&c, &mut sink).unwrap();
+        }
+        // Retention: keep = 2 ⇒ round 4 pruned, 8 and 12 remain.
+        assert_eq!(store.rounds(), vec![8, 12]);
+        let (path, env) = store.latest_valid().unwrap();
+        assert_eq!(env.ckpt.round, 12);
+        assert_eq!(path, store.path_for(12));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_valid_skips_a_damaged_tail_to_the_previous_good_file() {
+        let dir = std::env::temp_dir().join("sparkbench_store_damaged_tail_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::new(&dir, 3);
+        let mut c = sample();
+        let mut sink = |_e: DurabilityEvent| {};
+        for round in [4usize, 8, 12] {
+            c.round = round;
+            store.save(&c, &mut sink).unwrap();
+        }
+        // Corrupt the newest envelope: flip one payload bit on disk.
+        let newest = store.path_for(12);
+        let text = std::fs::read_to_string(&newest).unwrap();
+        let pos = text.find("alpha_hex").unwrap() + 14;
+        let mut bytes = text.into_bytes();
+        bytes[pos] ^= 1;
+        std::fs::write(&newest, &bytes).unwrap();
+        // Recovery walks back to round 8.
+        let (_, env) = store.latest_valid().unwrap();
+        assert_eq!(env.ckpt.round, 8);
+        // Truncate round 8 too: recovery walks back to round 4.
+        let mid = store.path_for(8);
+        let half = std::fs::read_to_string(&mid).unwrap();
+        std::fs::write(&mid, &half[..half.len() / 3]).unwrap();
+        let (_, env) = store.latest_valid().unwrap();
+        assert_eq!(env.ckpt.round, 4);
+        // Damage everything: no valid checkpoint, not a panic.
+        std::fs::write(store.path_for(4), "{}").unwrap();
+        assert!(store.latest_valid().is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -144,6 +144,13 @@ pub struct ChaosSpec {
     /// backup copy races the original, first result wins. Bit-identical
     /// to no-speculation because both run the same deterministic solve.
     pub speculation: bool,
+    /// Coordinator crash rounds (`crash@R`): the session is killed after
+    /// round R completes — *after* the checkpoint-store write race — and
+    /// must be restarted via `resume_from_store` (DESIGN.md §15). Unlike
+    /// worker deaths this is not a round-attempt fault: nothing replays
+    /// in-process, the proof obligation is that restart + resume lands on
+    /// the uninterrupted trajectory bit-for-bit.
+    pub crashes: Vec<usize>,
     pub plan: FaultPlan,
 }
 
@@ -154,6 +161,7 @@ impl Default for ChaosSpec {
             het: 0.0,
             jitter: 0.0,
             speculation: false,
+            crashes: Vec::new(),
             plan: FaultPlan::default(),
         }
     }
@@ -171,6 +179,9 @@ impl ChaosSpec {
     /// death@R:W     kill worker W at round R
     /// slow@R:F      slow a seeded-pick worker by F× at round R
     /// slow@R:W:F    slow worker W by F× at round R
+    /// crash@R       kill the whole session after round R (after the
+    ///               checkpoint-store write); restart resumes from the
+    ///               store's newest valid envelope
     /// ```
     pub fn parse(s: &str) -> Result<ChaosSpec, String> {
         let mut spec = ChaosSpec::default();
@@ -201,6 +212,12 @@ impl ChaosSpec {
                     worker,
                     kind: FaultKind::Death,
                 });
+            } else if let Some(v) = d.strip_prefix("crash@") {
+                if v.contains(':') {
+                    return Err(bad("expected crash@R (a crash kills every rank)"));
+                }
+                let round = v.parse().map_err(|_| bad("round must be an integer"))?;
+                spec.crashes.push(round);
             } else if let Some(v) = d.strip_prefix("slow@") {
                 let parts: Vec<&str> = v.split(':').collect();
                 let round = parts[0].parse().map_err(|_| bad("round must be an integer"))?;
@@ -222,7 +239,7 @@ impl ChaosSpec {
                 });
             } else {
                 return Err(bad(
-                    "known directives: seed=N, het=F, jitter=F, spec, death@R[:W], slow@R[:W]:F",
+                    "known directives: seed=N, het=F, jitter=F, spec, death@R[:W], slow@R[:W]:F, crash@R",
                 ));
             }
         }
@@ -242,13 +259,19 @@ impl ChaosSpec {
         if !self.jitter.is_finite() || self.jitter < 0.0 {
             return Err(format!("jitter {} must be >= 0", self.jitter));
         }
+        let mut crashes = self.crashes.clone();
+        crashes.sort_unstable();
+        crashes.dedup();
         Ok(ChaosSpec {
             plan: self.plan.bind(self.seed, k)?,
+            crashes,
             ..self.clone()
         })
     }
 
-    /// True when the spec perturbs nothing at all.
+    /// True when the spec perturbs nothing *inside* the engine — crash
+    /// rounds kill the coordinator between rounds, the engine itself
+    /// never arms chaos for them.
     pub fn is_quiet(&self) -> bool {
         self.het == 0.0
             && self.jitter == 0.0
@@ -495,6 +518,20 @@ mod tests {
         assert!(ChaosSpec::parse("slow@3").is_err());
         assert!(ChaosSpec::parse("slow@3:1:2:9").is_err());
         assert!(ChaosSpec::parse("het=fast").is_err());
+        assert!(ChaosSpec::parse("crash@x").is_err());
+        assert!(ChaosSpec::parse("crash@5:1").is_err());
+    }
+
+    #[test]
+    fn parse_crash_rounds_and_bind_normalizes_them() {
+        let spec = ChaosSpec::parse("crash@5,death@2:0,crash@5,crash@3").unwrap();
+        assert_eq!(spec.crashes, vec![5, 5, 3]);
+        // A crash-only spec is engine-quiet: nothing to arm per round.
+        assert!(ChaosSpec::parse("crash@5").unwrap().is_quiet());
+        // bind sorts + dedups crash rounds, and still binds the plan.
+        let bound = spec.bind(4).unwrap();
+        assert_eq!(bound.crashes, vec![3, 5]);
+        assert_eq!(bound.plan.events.len(), 1);
     }
 
     #[test]

@@ -12,7 +12,12 @@
 //! sparkbench pjrt-smoke   # load + run the AOT artifact end to end
 //! sparkbench predict --ckpt FILE [--scale S] [--shards N]
 //! sparkbench serve   --ckpt FILE [--rate R] [--max-batch B] [--deadline-us D]
+//!                    [--queue-cap N --shed]
 //! ```
+//!
+//! `train --ckpt-dir DIR` keeps a durable checkpoint store and resumes
+//! from it automatically on rerun; `serve --shed` replays through the
+//! admission-controlled overload harness (DESIGN.md §15).
 
 use std::path::PathBuf;
 
@@ -154,7 +159,8 @@ fn cmd_train(args: &Args) -> i32 {
     }
     // --chaos SPEC: seeded stragglers, skew and failure injection with
     // speculative recovery (DESIGN.md §12). Grammar: comma-separated
-    // seed=N, het=F, jitter=F, spec, death@R[:W], slow@R[:W]:F.
+    // seed=N, het=F, jitter=F, spec, death@R[:W], slow@R[:W]:F, crash@R
+    // (crash kills the coordinator after the round-R store write).
     if let Some(s) = args.get("chaos") {
         match sparkbench::framework::chaos::ChaosSpec::parse(s) {
             Ok(spec) => builder = builder.chaos(spec),
@@ -205,6 +211,26 @@ fn cmd_train(args: &Args) -> i32 {
     if let Some(path) = args.get("ckpt") {
         let every = args.get_usize("ckpt-every", 50);
         builder = builder.observe(CheckpointEvery::new(every, path));
+    }
+    // --ckpt-dir DIR: the durable checkpoint store (DESIGN.md §15) — v6
+    // CRC-footed envelopes written atomically every --ckpt-every rounds,
+    // newest --ckpt-keep retained. Rerunning the SAME command after a
+    // crash (or `--chaos crash@R`) resumes from the newest envelope that
+    // decodes clean; corrupt or truncated tail files are skipped.
+    if let Some(dir) = args.get("ckpt-dir") {
+        let every = args.get_usize("ckpt-every", 50);
+        let keep = args.get_usize("ckpt-keep", 3);
+        let store = sparkbench::coordinator::checkpoint::CheckpointStore::new(dir, keep);
+        if let Some((path, env)) = store.latest_valid() {
+            println!(
+                "resuming from {} (round {}, envelope v{})",
+                path.display(),
+                env.ckpt.round,
+                env.version
+            );
+            builder = builder.resume_from(env.ckpt);
+        }
+        builder = builder.checkpoint_store(dir, every, keep);
     }
     let session = match builder.build() {
         Ok(s) => s,
@@ -494,7 +520,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let Some(path) = args.get("ckpt") else {
         eprintln!(
             "usage: sparkbench serve --ckpt FILE [--rate R] [--max-batch B] \
-             [--deadline-us D] [--shards N] [--requests N]"
+             [--deadline-us D] [--shards N] [--requests N] [--queue-cap N --shed]"
         );
         return 2;
     };
@@ -545,6 +571,61 @@ fn cmd_serve(args: &Args) -> i32 {
         rate,
         shards.max(1)
     );
+    // --shed: route the replay through admission control instead
+    // (DESIGN.md §15) — bounded --queue-cap queue, typed load shedding,
+    // degraded deadlines — under a seeded storm at --rate. The virtual
+    // service model is pinned to the policy (a full batch costs exactly
+    // one deadline), so the sustainable rate equals λ* and the default
+    // 4λ* arrival rate is overload by construction.
+    if args.flag("shed") {
+        let queue_cap = args.get_usize("queue-cap", 4 * max_batch);
+        if queue_cap < max_batch {
+            eprintln!("--queue-cap must be >= --max-batch");
+            return 2;
+        }
+        let deadline_s = deadline_us * 1e-6;
+        let ocfg = sparkbench::serve::OverloadConfig {
+            queue_cap,
+            service: sparkbench::serve::ServiceModel {
+                overhead_s: 0.5 * deadline_s,
+                per_row_s: 0.5 * deadline_s / max_batch as f64,
+            },
+            malformed_every: args.get_usize("malformed-every", 0),
+            swap_at_batch: None,
+            seed: args.get_usize("seed", 42) as u64,
+        };
+        let pattern = sparkbench::serve::ArrivalPattern::Storm { rate };
+        let mut preds = Vec::new();
+        let st = sparkbench::serve::overload_replay(
+            &model,
+            None,
+            &rows,
+            &policy,
+            &pattern,
+            &ocfg,
+            &mut preds,
+        );
+        println!(
+            "overload: offered={} admitted={} shed={} ({:.1}% shed) malformed={}",
+            st.offered,
+            st.admitted,
+            st.shed,
+            100.0 * st.shed_rate,
+            st.malformed
+        );
+        println!(
+            "  batches={} degraded={} ({:.1}% occupancy) max_depth={}/{} \
+             p50={:.0}µs p99={:.0}µs",
+            st.batches,
+            st.degraded_batches,
+            100.0 * st.degraded_occupancy,
+            st.max_depth,
+            queue_cap,
+            st.p50_latency_s * 1e6,
+            st.p99_latency_s * 1e6
+        );
+        return 0;
+    }
     let predictor = sparkbench::serve::Predictor::new(model);
     let mut preds = Vec::new();
     let stats = sparkbench::serve::replay(

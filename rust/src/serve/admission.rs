@@ -1,0 +1,611 @@
+//! Admission control for the serving front end: bounded queueing,
+//! load-shedding, graceful deadline degradation, and model hot-swap —
+//! the overload half of the durability story (DESIGN.md §15).
+//!
+//! The batching front end (`serve::batch`) trades latency for
+//! throughput below its cutover rate λ* = `max_batch / max_delay`; above
+//! λ* an unbounded queue grows without limit and every latency target is
+//! eventually lost. The [`AdmissionController`] closes that hole with
+//! three mechanisms, all closed-form and virtual-clocked (no wall reads
+//! — this module is *outside* the clock-rule allowlist on purpose):
+//!
+//! 1. **Bounded queue with load-shedding.** Arrivals beyond `queue_cap`
+//!    pending requests are rejected with a typed [`Admission::Overload`]
+//!    outcome — the queue never grows past its high-water mark, so the
+//!    latency of every *admitted* request stays bounded.
+//! 2. **Graceful degradation.** The effective batching deadline shrinks
+//!    linearly from `max_delay` at the low-water mark to zero at the
+//!    high-water mark ([`AdmissionController::degraded_delay`]):
+//!    `d(q) = max_delay · (cap − q)/(cap − low)` for `low < q < cap`.
+//!    Under pressure the server stops waiting for fuller batches and
+//!    burns queue depth instead; when pressure drops, the deadline
+//!    recovers automatically (it is a pure function of depth).
+//! 3. **Hot-swap at a batch boundary.** A new model (e.g. decoded from a
+//!    fresher [`CheckpointStore`](crate::coordinator::checkpoint::CheckpointStore)
+//!    envelope) replaces the serving model between batches — a pointer
+//!    flip, no queue drain; the in-flight batch finishes on the old
+//!    model, every later batch scores with the new one.
+//!
+//! [`overload_replay`] is the deterministic fault harness around those
+//! pieces: seeded burst/storm arrival patterns, malformed request rows
+//! (validated and refused *before* they can poison the batch arena), and
+//! mid-stream swaps, all on a virtual clock with a closed-form service
+//! model — so every overload experiment replays bit-exactly from its
+//! seed, the same property training chaos has (DESIGN.md §12).
+
+use crate::data::CsrMatrix;
+use crate::linalg::Xorshift128;
+use crate::serve::batch::BatchPolicy;
+use crate::serve::model::PrimalModel;
+
+/// Typed outcome of offering one request to the admission controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Enqueued; the request will be batched and served.
+    Accepted,
+    /// Load-shed: the queue is at its high-water mark. The caller gets
+    /// an immediate typed rejection instead of unbounded queueing.
+    Overload,
+    /// Refused before the queue: the request row failed validation
+    /// (length mismatch or out-of-range column index).
+    Malformed,
+}
+
+/// Validate a sparse request row against the model dimension before it
+/// touches a batch arena. `CsrMatrix::push_row` hard-asserts these
+/// invariants — a malformed row must be refused *here*, as a typed
+/// serving outcome, never as a server panic.
+pub fn validate_request(dim: usize, idx: &[u32], vals: &[f64]) -> Result<(), String> {
+    if idx.len() != vals.len() {
+        return Err(format!(
+            "request has {} indices but {} values",
+            idx.len(),
+            vals.len()
+        ));
+    }
+    for &c in idx {
+        if c as usize >= dim {
+            return Err(format!("column {} out of range (dim {})", c, dim));
+        }
+    }
+    Ok(())
+}
+
+/// Bounded-queue admission policy + counters. The controller decides —
+/// the caller owns the actual queue; depth is passed in at each offer so
+/// the decision logic stays a pure function of observable state.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    /// High-water mark: offers at depth ≥ cap are shed.
+    queue_cap: usize,
+    /// Low-water mark: below this depth the full `max_delay` applies.
+    low_water: usize,
+    /// The undegraded batching deadline (the policy's `max_delay`).
+    base_delay: f64,
+    /// Requests admitted.
+    pub admitted: usize,
+    /// Requests shed with [`Admission::Overload`].
+    pub shed: usize,
+    /// Requests refused with [`Admission::Malformed`].
+    pub malformed: usize,
+}
+
+impl AdmissionController {
+    /// Build a controller for a batching policy and queue bound.
+    /// `queue_cap` must admit at least one full batch, or the server
+    /// could never reach a size flush.
+    pub fn new(policy: &BatchPolicy, queue_cap: usize) -> AdmissionController {
+        assert!(
+            queue_cap >= policy.max_batch,
+            "queue_cap {} must be >= max_batch {}",
+            queue_cap,
+            policy.max_batch
+        );
+        AdmissionController {
+            queue_cap,
+            low_water: queue_cap / 4,
+            base_delay: policy.max_delay,
+            admitted: 0,
+            shed: 0,
+            malformed: 0,
+        }
+    }
+
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    pub fn low_water(&self) -> usize {
+        self.low_water
+    }
+
+    /// The degraded batching deadline at queue depth `q` — closed form,
+    /// monotone non-increasing in depth, and self-recovering (a pure
+    /// function of depth: when pressure drops, the full delay returns):
+    ///
+    /// ```text
+    /// d(q) = max_delay                          q ≤ low
+    /// d(q) = max_delay · (cap − q)/(cap − low)  low < q < cap
+    /// d(q) = 0                                  q ≥ cap
+    /// ```
+    ///
+    /// Read alongside λ* = `max_batch / max_delay`: shrinking the
+    /// deadline raises the flush rate toward one-batch-per-service-slot,
+    /// spending latency headroom to drain depth.
+    pub fn degraded_delay(&self, q: usize) -> f64 {
+        if q <= self.low_water {
+            self.base_delay
+        } else if q >= self.queue_cap {
+            0.0
+        } else {
+            self.base_delay * ((self.queue_cap - q) as f64)
+                / ((self.queue_cap - self.low_water) as f64)
+        }
+    }
+
+    /// Offer one (already validated) request at current queue depth `q`.
+    pub fn offer(&mut self, q: usize) -> Admission {
+        if q >= self.queue_cap {
+            self.shed += 1;
+            Admission::Overload
+        } else {
+            self.admitted += 1;
+            Admission::Accepted
+        }
+    }
+
+    /// Record a validation refusal (kept here so shed-rate accounting
+    /// lives in one place).
+    pub fn refuse_malformed(&mut self) -> Admission {
+        self.malformed += 1;
+        Admission::Malformed
+    }
+}
+
+/// Deterministic arrival-time generator for the overload harness. All
+/// patterns produce a non-decreasing virtual-time sequence from a seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// Constant spacing `1/rate` — the baseline open-loop load.
+    Uniform { rate: f64 },
+    /// `burst` back-to-back arrivals spaced `within` seconds, then a
+    /// `gap`-second pause: the classic thundering-herd shape.
+    Burst { burst: usize, within: f64, gap: f64 },
+    /// Seeded storm: mean spacing `1/rate`, per-arrival multiplier drawn
+    /// uniformly from `[0.1, 1.9]` — bursty but bit-replayable.
+    Storm { rate: f64 },
+}
+
+impl ArrivalPattern {
+    fn next_gap(&self, i: usize, rng: &mut Xorshift128) -> f64 {
+        match *self {
+            ArrivalPattern::Uniform { rate } => 1.0 / rate,
+            ArrivalPattern::Burst { burst, within, gap } => {
+                let b = burst.max(1);
+                if i % b == 0 && i > 0 {
+                    gap
+                } else {
+                    within
+                }
+            }
+            ArrivalPattern::Storm { rate } => (0.1 + 1.8 * rng.next_f64()) / rate,
+        }
+    }
+}
+
+/// Closed-form virtual service model: a batch of `b` rows occupies the
+/// server `overhead_s + per_row_s · b` seconds. The sustainable service
+/// rate is `μ(b) = b / (overhead_s + per_row_s · b)`, maximized at
+/// `b = max_batch` — arrivals beyond `μ(max_batch)` are overload by
+/// construction, which is exactly what the harness provokes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceModel {
+    pub overhead_s: f64,
+    pub per_row_s: f64,
+}
+
+impl ServiceModel {
+    pub fn batch_cost(&self, b: usize) -> f64 {
+        self.overhead_s + self.per_row_s * b as f64
+    }
+
+    /// The maximum arrival rate the server can sustain (full batches).
+    pub fn sustainable_rate(&self, max_batch: usize) -> f64 {
+        max_batch as f64 / self.batch_cost(max_batch)
+    }
+}
+
+/// Harness knobs for [`overload_replay`].
+#[derive(Debug, Clone)]
+pub struct OverloadConfig {
+    /// Bounded-queue capacity (high-water mark).
+    pub queue_cap: usize,
+    /// Virtual service-time model.
+    pub service: ServiceModel,
+    /// Present every `n`-th arrival malformed (one column pushed out of
+    /// range). 0 = no malformed traffic.
+    pub malformed_every: usize,
+    /// Hot-swap to the standby model once this many batches completed
+    /// (pointer flip at the batch boundary). `None` = never swap.
+    pub swap_at_batch: Option<usize>,
+    /// Seed for the arrival pattern's stochastic draws.
+    pub seed: u64,
+}
+
+/// What the overload harness measured. Latencies are virtual seconds
+/// (completion − arrival) over admitted-and-served requests.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OverloadStats {
+    /// Requests presented (admitted + shed + malformed).
+    pub offered: usize,
+    pub admitted: usize,
+    pub shed: usize,
+    pub malformed: usize,
+    /// `shed / offered` — the load-shedding rate under this pattern.
+    pub shed_rate: f64,
+    /// Batches served.
+    pub batches: usize,
+    /// Batches formed while the deadline was degraded below `max_delay`.
+    pub degraded_batches: usize,
+    /// `degraded_batches / batches` — degraded-delay occupancy.
+    pub degraded_occupancy: f64,
+    /// Largest queue depth observed at any admission decision.
+    pub max_depth: usize,
+    /// Virtual latency percentiles over served requests.
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Batches served by the standby model after the hot-swap boundary.
+    pub swapped_batches: usize,
+}
+
+/// Nearest-rank percentile over unsorted samples (p in [0, 100]).
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(f64::total_cmp);
+    let rank = ((p / 100.0) * s.len() as f64).ceil() as usize;
+    s[rank.saturating_sub(1).min(s.len() - 1)]
+}
+
+/// Drive `rows` through admission control, degraded batching, and a
+/// virtual-clock service loop — the serve-side fault harness.
+///
+/// Requests arrive at pattern-generated virtual times; each is validated
+/// ([`validate_request`]) and offered to the controller. Admitted
+/// requests queue; the server forms a batch whenever `max_batch` are
+/// pending (size flush) or the oldest waiter's *degraded* deadline
+/// passes, then scores it with the active model at the closed-form
+/// service cost. A configured hot-swap flips to `standby` at a batch
+/// boundary without draining the queue. `preds_out` receives
+/// `(row index, prediction)` in service order — bit-comparable across
+/// runs and against a drained-then-swapped baseline.
+pub fn overload_replay(
+    primary: &PrimalModel,
+    standby: Option<&PrimalModel>,
+    rows: &CsrMatrix,
+    policy: &BatchPolicy,
+    pattern: &ArrivalPattern,
+    cfg: &OverloadConfig,
+    preds_out: &mut Vec<(usize, f64)>,
+) -> OverloadStats {
+    assert_eq!(rows.n, primary.dim(), "request dim != model dim");
+    if let Some(sb) = standby {
+        assert_eq!(sb.dim(), primary.dim(), "standby model dim mismatch");
+    }
+    let mut ctrl = AdmissionController::new(policy, cfg.queue_cap);
+    let mut rng = Xorshift128::new(cfg.seed ^ 0x0AD_317);
+    let mut st = OverloadStats::default();
+    let mut latencies: Vec<f64> = Vec::new();
+    // FIFO of admitted requests: (row id, arrival time); head advances as
+    // batches form (no reallocation churn, stable iteration order).
+    let mut queue: Vec<(usize, f64)> = Vec::new();
+    let mut head = 0usize;
+    let mut server_free = 0.0f64;
+    let mut active_standby = false;
+
+    // One corrupted-index scratch per malformed presentation.
+    let mut bad_idx: Vec<u32> = Vec::new();
+
+    let serve_until = |t_limit: f64,
+                       queue: &[(usize, f64)],
+                       head: &mut usize,
+                       server_free: &mut f64,
+                       st: &mut OverloadStats,
+                       latencies: &mut Vec<f64>,
+                       preds_out: &mut Vec<(usize, f64)>,
+                       ctrl: &AdmissionController,
+                       active_standby: &mut bool| {
+        loop {
+            let pending = queue.len() - *head;
+            if pending == 0 {
+                break;
+            }
+            let t_first = queue[*head].1;
+            let t_ready = if *server_free > t_first {
+                *server_free
+            } else {
+                t_first
+            };
+            let delay = ctrl.degraded_delay(pending);
+            let t_form = if pending >= policy.max_batch {
+                t_ready
+            } else {
+                let t_deadline = t_first + delay;
+                if t_deadline > t_ready {
+                    t_deadline
+                } else {
+                    t_ready
+                }
+            };
+            // The next arrival lands before this batch would form: let it
+            // join the queue first (it may complete a size flush earlier).
+            if t_form > t_limit {
+                break;
+            }
+            // Pointer flip at the batch boundary: in-flight batches (all
+            // earlier ones) finished on the old model; this one and every
+            // later one score with the standby.
+            if let Some(sw) = cfg.swap_at_batch {
+                if st.batches >= sw {
+                    *active_standby = standby.is_some();
+                }
+            }
+            let k = pending.min(policy.max_batch);
+            let t_done = t_form + cfg.service.batch_cost(k);
+            let model = if *active_standby {
+                standby.expect("active_standby without a standby model")
+            } else {
+                primary
+            };
+            for &(rid, t_arr) in &queue[*head..*head + k] {
+                let (idx, vals) = rows.row(rid);
+                preds_out.push((rid, model.predict_one(idx, vals)));
+                latencies.push(t_done - t_arr);
+            }
+            *head += k;
+            *server_free = t_done;
+            st.batches += 1;
+            if delay < ctrl.base_delay {
+                st.degraded_batches += 1;
+            }
+            if *active_standby {
+                st.swapped_batches += 1;
+            }
+        }
+    };
+
+    let mut t_arr = 0.0f64;
+    for i in 0..rows.m {
+        t_arr += pattern.next_gap(i, &mut rng);
+        // Serve every batch that forms strictly before this arrival.
+        serve_until(
+            t_arr,
+            &queue,
+            &mut head,
+            &mut server_free,
+            &mut st,
+            &mut latencies,
+            preds_out,
+            &ctrl,
+            &mut active_standby,
+        );
+        st.offered += 1;
+        let (idx, vals) = rows.row(i);
+        // Malformed presentation: one column index pushed past the model
+        // dimension — must be refused before any arena push.
+        let malformed = cfg.malformed_every > 0 && (i + 1) % cfg.malformed_every == 0;
+        let verdict = if malformed && !idx.is_empty() {
+            bad_idx.clear();
+            bad_idx.extend_from_slice(idx);
+            bad_idx[0] = rows.n as u32 + 7;
+            validate_request(rows.n, &bad_idx, vals)
+        } else {
+            validate_request(rows.n, idx, vals)
+        };
+        if verdict.is_err() {
+            ctrl.refuse_malformed();
+            continue;
+        }
+        let depth = queue.len() - head;
+        if depth > st.max_depth {
+            st.max_depth = depth;
+        }
+        match ctrl.offer(depth) {
+            Admission::Accepted => queue.push((i, t_arr)),
+            Admission::Overload => {}
+            Admission::Malformed => unreachable!("offer never reports malformed"),
+        }
+    }
+    // Drain: no more arrivals, serve everything still queued.
+    serve_until(
+        f64::INFINITY,
+        &queue,
+        &mut head,
+        &mut server_free,
+        &mut st,
+        &mut latencies,
+        preds_out,
+        &ctrl,
+        &mut active_standby,
+    );
+
+    st.admitted = ctrl.admitted;
+    st.shed = ctrl.shed;
+    st.malformed = ctrl.malformed;
+    st.shed_rate = if st.offered > 0 {
+        st.shed as f64 / st.offered as f64
+    } else {
+        0.0
+    };
+    st.degraded_occupancy = if st.batches > 0 {
+        st.degraded_batches as f64 / st.batches as f64
+    } else {
+        0.0
+    };
+    st.p50_latency_s = percentile(&latencies, 50.0);
+    st.p99_latency_s = percentile(&latencies, 99.0);
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+    use crate::problem::Problem;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(8, 0.010)
+    }
+
+    fn model(n: usize, phase: f64) -> PrimalModel {
+        let alpha: Vec<f64> = (0..n).map(|j| (j as f64 * 0.37 + phase).sin()).collect();
+        PrimalModel::from_parts(Problem::ridge(1.0), &alpha, &[], Precision::F64, 1)
+    }
+
+    fn rows(m: usize, n: usize) -> CsrMatrix {
+        let mut a = CsrMatrix::arena(n, m, 3 * m);
+        for i in 0..m {
+            let c0 = (i % n) as u32;
+            let c1 = ((i + 3) % n) as u32;
+            let (idx, vals) = if c0 < c1 {
+                ([c0, c1], [1.0 + i as f64 * 0.01, -0.5])
+            } else {
+                ([c1, c0], [-0.5, 1.0 + i as f64 * 0.01])
+            };
+            a.push_row(&idx, &vals);
+        }
+        a
+    }
+
+    #[test]
+    fn degraded_delay_is_monotone_and_recovers() {
+        let ctrl = AdmissionController::new(&policy(), 64);
+        assert_eq!(ctrl.low_water(), 16);
+        // Full delay at and below the low-water mark.
+        assert_eq!(ctrl.degraded_delay(0).to_bits(), 0.010f64.to_bits());
+        assert_eq!(ctrl.degraded_delay(16).to_bits(), 0.010f64.to_bits());
+        // Monotone non-increasing across the whole depth range.
+        for q in 0..80 {
+            assert!(
+                ctrl.degraded_delay(q + 1) <= ctrl.degraded_delay(q),
+                "delay increased between depth {} and {}",
+                q,
+                q + 1
+            );
+        }
+        // Zero at and past the high-water mark; closed-form midpoint pin.
+        assert_eq!(ctrl.degraded_delay(64), 0.0);
+        assert_eq!(ctrl.degraded_delay(100), 0.0);
+        let mid = ctrl.degraded_delay(40); // (64-40)/(64-16) = 1/2
+        assert_eq!(mid.to_bits(), (0.010f64 * 0.5).to_bits());
+        // Recovery is structural: the delay is a pure function of depth,
+        // so after any excursion to depth 63 the shallow answer is back.
+        let _ = ctrl.degraded_delay(63);
+        assert_eq!(ctrl.degraded_delay(2).to_bits(), 0.010f64.to_bits());
+    }
+
+    #[test]
+    fn offer_sheds_only_at_the_high_water_mark() {
+        let mut ctrl = AdmissionController::new(&policy(), 16);
+        assert_eq!(ctrl.offer(0), Admission::Accepted);
+        assert_eq!(ctrl.offer(15), Admission::Accepted);
+        assert_eq!(ctrl.offer(16), Admission::Overload);
+        assert_eq!(ctrl.offer(40), Admission::Overload);
+        assert_eq!(ctrl.refuse_malformed(), Admission::Malformed);
+        assert_eq!(ctrl.admitted, 2);
+        assert_eq!(ctrl.shed, 2);
+        assert_eq!(ctrl.malformed, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "queue_cap")]
+    fn queue_cap_must_admit_a_full_batch() {
+        let _ = AdmissionController::new(&policy(), 7);
+    }
+
+    #[test]
+    fn validate_request_refuses_malformed_shapes() {
+        assert!(validate_request(8, &[0, 3], &[1.0, 2.0]).is_ok());
+        assert!(validate_request(8, &[], &[]).is_ok());
+        let err = validate_request(8, &[0, 3], &[1.0]).unwrap_err();
+        assert!(err.contains("indices"), "{}", err);
+        let err = validate_request(8, &[0, 8], &[1.0, 2.0]).unwrap_err();
+        assert!(err.contains("out of range"), "{}", err);
+    }
+
+    #[test]
+    fn service_model_closed_forms_pin_the_overload_threshold() {
+        // Dyadic constants so the closed forms are exact in binary fp.
+        let svc = ServiceModel { overhead_s: 0.25, per_row_s: 0.03125 };
+        assert_eq!(svc.batch_cost(8).to_bits(), 0.5f64.to_bits());
+        assert_eq!(svc.sustainable_rate(8).to_bits(), 16.0f64.to_bits());
+        // Larger batches amortize the overhead: μ(b) grows with b.
+        assert!(svc.sustainable_rate(16) > svc.sustainable_rate(8));
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let s: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile(&s, 50.0), 5.0);
+        assert_eq!(percentile(&s, 99.0), 10.0);
+        assert_eq!(percentile(&s, 10.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        // Unsorted input sorts internally.
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 100.0), 3.0);
+    }
+
+    #[test]
+    fn arrival_patterns_replay_bit_exactly_from_their_seed() {
+        let storm = ArrivalPattern::Storm { rate: 100.0 };
+        let mut a = Xorshift128::new(9);
+        let mut b = Xorshift128::new(9);
+        for i in 0..200 {
+            let ga = storm.next_gap(i, &mut a);
+            let gb = storm.next_gap(i, &mut b);
+            assert_eq!(ga.to_bits(), gb.to_bits(), "storm gap {} diverged", i);
+            assert!(ga > 0.0);
+        }
+        // Burst: `burst` tight arrivals, then a gap, repeating.
+        let burst = ArrivalPattern::Burst { burst: 4, within: 0.001, gap: 0.1 };
+        let mut rng = Xorshift128::new(1);
+        let gaps: Vec<f64> = (0..9).map(|i| burst.next_gap(i, &mut rng)).collect();
+        assert_eq!(gaps[3], 0.001);
+        assert_eq!(gaps[4], 0.1);
+        assert_eq!(gaps[8], 0.1);
+        let uni = ArrivalPattern::Uniform { rate: 50.0 };
+        assert_eq!(uni.next_gap(7, &mut rng).to_bits(), (1.0 / 50.0).to_bits());
+    }
+
+    #[test]
+    fn uncontended_replay_serves_everything_with_no_shedding() {
+        // Arrivals far below μ(max_batch): nothing sheds, nothing
+        // degrades, and every row is served exactly once.
+        let n = 8;
+        let m = 64;
+        let primary = model(n, 0.0);
+        let a = rows(m, n);
+        let svc = ServiceModel { overhead_s: 0.0001, per_row_s: 0.00001 };
+        let cfg = OverloadConfig {
+            queue_cap: 32,
+            service: svc,
+            malformed_every: 0,
+            swap_at_batch: None,
+            seed: 42,
+        };
+        let pattern = ArrivalPattern::Uniform { rate: svc.sustainable_rate(8) * 0.2 };
+        let mut preds = Vec::new();
+        let st = overload_replay(&primary, None, &a, &policy(), &pattern, &cfg, &mut preds);
+        assert_eq!(st.offered, m);
+        assert_eq!(st.admitted, m);
+        assert_eq!(st.shed, 0);
+        assert_eq!(st.malformed, 0);
+        assert_eq!(st.degraded_batches, 0);
+        assert_eq!(preds.len(), m);
+        for (rid, p) in &preds {
+            let (idx, vals) = a.row(*rid);
+            assert_eq!(p.to_bits(), primary.predict_one(idx, vals).to_bits());
+        }
+    }
+}

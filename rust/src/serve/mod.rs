@@ -30,12 +30,24 @@
 //!   online RMSE/accuracy, queue-wait and end-to-end latency percentiles
 //!   (p50/p99), and predictions/sec — the numbers
 //!   `BENCH_hotpath.json`'s `serving` section records.
+//! * [`AdmissionController`] + [`overload_replay`] ([`admission`]) — the
+//!   overload layer (DESIGN.md §15): a bounded queue that sheds with a
+//!   typed [`Admission::Overload`] outcome past the high-water mark,
+//!   closed-form deadline degradation alongside the λ* cutover, model
+//!   hot-swap at batch boundaries without draining, and a seeded
+//!   burst/storm fault harness whose replays are bit-exact — the
+//!   `serving.overload` numbers in `BENCH_hotpath.json`.
 
+pub mod admission;
 pub mod batch;
 pub mod model;
 pub mod predict;
 pub mod stream;
 
+pub use admission::{
+    overload_replay, Admission, AdmissionController, ArrivalPattern, OverloadConfig,
+    OverloadStats, ServiceModel,
+};
 pub use batch::{BatchPolicy, Batcher, FlushReason};
 pub use model::{Output, PrimalModel};
 pub use predict::Predictor;

@@ -46,7 +46,7 @@ pub use observer::{CheckpointEvery, CsvTrace, Recording, RoundCtx, RoundObserver
 pub use policy::HPolicy;
 
 use crate::config::{Impl, Precision, SolverKind, TrainConfig};
-use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::checkpoint::{Checkpoint, CheckpointStore};
 use crate::coordinator::{oracle_objective, suboptimality};
 use crate::data::Dataset;
 use crate::framework::chaos::{ChaosSpec, FaultSchedule};
@@ -125,6 +125,7 @@ pub struct SessionBuilder<'a> {
     track_gap: bool,
     threads_per_worker: Option<usize>,
     chaos: Option<ChaosSpec>,
+    store: Option<(CheckpointStore, usize)>,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -301,6 +302,39 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Durable checkpointing (DESIGN.md §15): after every `every`-th
+    /// completed round the session writes a v6 envelope into a
+    /// [`CheckpointStore`] at `dir` — atomic rename, CRC footer, last
+    /// `keep` envelopes retained — with bounded retry, fanning every
+    /// [`DurabilityEvent`](crate::coordinator::checkpoint::DurabilityEvent)
+    /// to all observers via `on_durability`. A `crash@R` chaos round also
+    /// forces a write before the kill, so a restart resumes at R+1.
+    pub fn checkpoint_store(
+        mut self,
+        dir: impl AsRef<std::path::Path>,
+        every: usize,
+        keep: usize,
+    ) -> Self {
+        self.store = Some((CheckpointStore::new(dir, keep), every.max(1)));
+        self
+    }
+
+    /// Crash-safe resume: continue from the newest envelope in the store
+    /// at `dir` that decodes clean ([`CheckpointStore::latest_valid`] —
+    /// corrupt/truncated tail files are skipped). Errors when the store
+    /// holds no valid checkpoint at all; otherwise equivalent to
+    /// [`resume_from`](Self::resume_from) with the recovered checkpoint.
+    pub fn resume_from_store(self, dir: impl AsRef<std::path::Path>) -> Result<Self, String> {
+        let store = CheckpointStore::new(dir, CheckpointStore::DEFAULT_KEEP);
+        match store.latest_valid() {
+            Some((_, env)) => Ok(self.resume_from(env.ckpt)),
+            None => Err(format!(
+                "no valid checkpoint envelope in {}",
+                store.dir().display()
+            )),
+        }
+    }
+
     /// Validate and assemble the session (computes the oracle when needed).
     pub fn build(self) -> Result<Session<'a>, String> {
         let mut cfg = self
@@ -403,6 +437,12 @@ impl<'a> SessionBuilder<'a> {
             None => None,
         };
         let mut fault_sched = bound_chaos.as_ref().map(|s| FaultSchedule::new(&s.plan));
+        // Coordinator crash rounds (crash@R) are session-level, not engine
+        // chaos: the engine never sees them. bind() sorted and deduped.
+        let crash_rounds = bound_chaos
+            .as_ref()
+            .map(|s| s.crashes.clone())
+            .unwrap_or_default();
         opts.chaos = bound_chaos;
         let resume_fault_cursor = self.resume.as_ref().map(|c| c.fault_cursor);
         let mut engine = match self.attached {
@@ -484,6 +524,8 @@ impl<'a> SessionBuilder<'a> {
             clock_offset,
             track_gap: self.track_gap,
             fault_sched,
+            store: self.store,
+            crash_rounds,
         })
     }
 
@@ -509,6 +551,11 @@ pub struct Session<'a> {
     /// Fault-plan schedule (chaos sessions only): which deaths/slowdowns
     /// hit which round attempts, and how many deaths already fired.
     fault_sched: Option<FaultSchedule>,
+    /// Durable checkpoint store and its round cadence (DESIGN.md §15).
+    store: Option<(CheckpointStore, usize)>,
+    /// Sorted coordinator crash rounds (`crash@R` chaos): the run halts
+    /// after round R — after the store write — and must be resumed.
+    crash_rounds: Vec<usize>,
 }
 
 impl<'a> Session<'a> {
@@ -530,6 +577,7 @@ impl<'a> Session<'a> {
             track_gap: false,
             threads_per_worker: None,
             chaos: None,
+            store: None,
         }
     }
 
@@ -561,6 +609,8 @@ impl<'a> Session<'a> {
             clock_offset,
             track_gap,
             mut fault_sched,
+            store,
+            crash_rounds,
         } = self;
 
         let n_locals = engine.get().n_locals();
@@ -692,6 +742,41 @@ impl<'a> Session<'a> {
                 });
             }
             logs.push(log);
+
+            // Durable checkpointing (DESIGN.md §15): atomic store write on
+            // the cadence — and forced at a crash round, so the kill below
+            // lands *after* the store write race and a restart resumes at
+            // R+1. Save failures retry bounded and fan out through
+            // on_durability; training continues either way.
+            let crash_now = crash_rounds.binary_search(&round).is_ok();
+            if let Some((st, every)) = &store {
+                if (round + 1) % every == 0 || crash_now {
+                    let ckpt = Checkpoint {
+                        round: round + 1,
+                        time: engine.get().clock() + clock_offset,
+                        alpha: engine.get().alpha_global(),
+                        v: v.clone(),
+                        problem: cfg.problem,
+                        workers: engine.get().num_workers(),
+                        threads_per_worker: engine.get().threads_per_worker(),
+                        precision: cfg.precision,
+                        fault_cursor: fault_sched.as_ref().map_or(0, |s| s.cursor),
+                    };
+                    let mut events = Vec::new();
+                    let _ = st.save(&ckpt, &mut |e| events.push(e));
+                    for ev in &events {
+                        for obs in observers.iter_mut() {
+                            obs.on_durability(ev);
+                        }
+                    }
+                }
+            }
+            // Coordinator crash (crash@R): the session dies here — no
+            // stop-policy bookkeeping, no further rounds. Restart via
+            // resume_from_store to continue the trajectory bit-exactly.
+            if crash_now {
+                break;
+            }
 
             match stop {
                 StopPolicy::ToTarget { subopt } => {

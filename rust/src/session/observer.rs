@@ -14,7 +14,7 @@ use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use crate::config::TrainConfig;
-use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::checkpoint::{save_with_retry, Checkpoint, DurabilityEvent};
 use crate::framework::DistEngine;
 use crate::metrics::{RoundLog, TrainReport};
 
@@ -42,6 +42,13 @@ pub trait RoundObserver {
     /// (virtual or physical depending on the engine) and the session is
     /// about to recover and replay. Default: ignore.
     fn on_fault(&mut self, _round: usize, _worker: usize, _clock: f64) {}
+
+    /// A checkpoint-durability event: a save reached disk, a failed
+    /// attempt is being retried, or the bounded retry budget ran out
+    /// (DESIGN.md §15). Fired by the session's checkpoint store and by
+    /// [`CheckpointEvery`] — durability failures degrade loudly through
+    /// the observer stream instead of a lone eprintln. Default: ignore.
+    fn on_durability(&mut self, _event: &DurabilityEvent) {}
 
     fn on_complete(&mut self, _report: &TrainReport) {}
 }
@@ -87,8 +94,13 @@ pub struct CheckpointEvery {
     path: PathBuf,
     /// Successful saves so far.
     pub saves: usize,
-    /// Most recent save failure (also reported once on stderr).
+    /// Most recent `GaveUp` error — the save exhausted its bounded retry
+    /// budget. `None` while every save (eventually) lands.
     pub last_error: Option<String>,
+    /// Every durability event this observer routed through
+    /// [`RoundObserver::on_durability`], in order: the full audit trail
+    /// of saves, retries, and give-ups.
+    pub events: Vec<DurabilityEvent>,
 }
 
 impl CheckpointEvery {
@@ -98,6 +110,7 @@ impl CheckpointEvery {
             path: path.as_ref().to_path_buf(),
             saves: 0,
             last_error: None,
+            events: Vec::new(),
         }
     }
 
@@ -113,20 +126,13 @@ impl CheckpointEvery {
             precision: ctx.cfg.precision,
             fault_cursor: ctx.fault_cursor,
         };
-        match ckpt.save(&self.path) {
-            Ok(()) => self.saves += 1,
-            Err(e) => {
-                // Sessions drop their observers after the run; surface the
-                // failure instead of burying it in an unreachable field.
-                if self.last_error.is_none() {
-                    eprintln!(
-                        "warn: checkpoint save to {} failed: {}",
-                        self.path.display(),
-                        e
-                    );
-                }
-                self.last_error = Some(e);
-            }
+        // Bounded-retry save; failures degrade gracefully (training goes
+        // on) and surface through the on_durability stream instead of a
+        // lone eprintln (DESIGN.md §15).
+        let mut pending = Vec::new();
+        let _ = save_with_retry(&ckpt, &self.path, &mut |e| pending.push(e));
+        for ev in pending {
+            self.on_durability(&ev);
         }
     }
 }
@@ -136,6 +142,15 @@ impl RoundObserver for CheckpointEvery {
         if (ctx.log.round + 1) % self.every == 0 {
             self.capture(ctx);
         }
+    }
+
+    fn on_durability(&mut self, event: &DurabilityEvent) {
+        match event {
+            DurabilityEvent::Saved { .. } => self.saves += 1,
+            DurabilityEvent::Retry { .. } => {}
+            DurabilityEvent::GaveUp { error, .. } => self.last_error = Some(error.clone()),
+        }
+        self.events.push(event.clone());
     }
 }
 
@@ -147,6 +162,8 @@ pub struct RecordingInner {
     pub times: Vec<f64>,
     /// `(round, worker)` of every fault the session recovered from.
     pub faults: Vec<(usize, usize)>,
+    /// Checkpoint durability events, in order (saves/retries/give-ups).
+    pub durability: Vec<DurabilityEvent>,
     pub completions: usize,
 }
 
@@ -181,6 +198,10 @@ impl Recording {
     pub fn faults(&self) -> Vec<(usize, usize)> {
         self.inner.borrow().faults.clone()
     }
+
+    pub fn durability(&self) -> Vec<DurabilityEvent> {
+        self.inner.borrow().durability.clone()
+    }
 }
 
 impl RoundObserver for Recording {
@@ -193,6 +214,10 @@ impl RoundObserver for Recording {
 
     fn on_fault(&mut self, round: usize, worker: usize, _clock: f64) {
         self.inner.borrow_mut().faults.push((round, worker));
+    }
+
+    fn on_durability(&mut self, event: &DurabilityEvent) {
+        self.inner.borrow_mut().durability.push(event.clone());
     }
 
     fn on_complete(&mut self, _report: &TrainReport) {

@@ -1,0 +1,315 @@
+//! Integration: the durability layer (DESIGN.md §15) — checksummed
+//! atomic checkpoint stores, coordinator crashes (`crash@R`), and
+//! crash-safe resume, end to end through the Session.
+//!
+//! The proof obligation everywhere: a session killed after the store
+//! write race and restarted via `CheckpointStore::latest_valid()` —
+//! including past a deliberately corrupted newest envelope — finishes
+//! with objective bits EQUAL to the uninterrupted run, on the virtual
+//! engine and the physical threads engine alike. Durability failures
+//! degrade loudly (observer events), never silently and never by panic.
+
+#![cfg(not(miri))] // interpreted execution is ~100x too slow for these end-to-end suites
+
+use std::path::PathBuf;
+
+use sparkbench::config::{Impl, TrainConfig};
+use sparkbench::coordinator::checkpoint::{CheckpointStore, DurabilityEvent};
+use sparkbench::coordinator::oracle_objective;
+use sparkbench::data::synthetic::{webspam_like, SyntheticSpec};
+use sparkbench::data::Dataset;
+use sparkbench::framework::chaos::ChaosSpec;
+use sparkbench::framework::Engine;
+use sparkbench::metrics::TrainReport;
+use sparkbench::session::{CheckpointEvery, Recording, Session};
+
+fn setup() -> (Dataset, TrainConfig) {
+    let ds = webspam_like(&SyntheticSpec::small());
+    let mut cfg = TrainConfig::default_for(&ds);
+    cfg.workers = 4;
+    cfg.eval_every = 1;
+    cfg.max_rounds = 1200;
+    (ds, cfg)
+}
+
+fn objective_bits(rep: &TrainReport) -> Vec<u64> {
+    rep.logs
+        .iter()
+        .filter_map(|l| l.objective)
+        .map(f64::to_bits)
+        .collect()
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// The uninterrupted baseline: `rounds` rounds, objectives every round.
+fn clean_run(ds: &Dataset, cfg: &TrainConfig, fstar: f64, rounds: usize) -> TrainReport {
+    Session::builder(ds)
+        .engine(Impl::Mpi)
+        .config(cfg.clone())
+        .fixed_rounds(rounds)
+        .oracle(fstar)
+        .build()
+        .unwrap()
+        .run()
+}
+
+#[test]
+fn crash_chaos_resumes_from_store_onto_uninterrupted_bits() {
+    // crash@5 kills the session after round 5 — after the forced store
+    // write — and a restart via resume_from_store continues rounds 6..12
+    // on the exact trajectory of a run that never crashed.
+    let (ds, cfg) = setup();
+    let fstar = oracle_objective(&ds, &cfg);
+    let dir = fresh_dir("sparkbench_crash_resume_mpi");
+
+    let clean = clean_run(&ds, &cfg, fstar, 12);
+    let full = objective_bits(&clean);
+    assert_eq!(full.len(), 12);
+
+    let rec = Recording::new();
+    let crashed = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg.clone())
+        .chaos(ChaosSpec::parse("crash@5").unwrap())
+        .checkpoint_store(&dir, 4, 3)
+        .fixed_rounds(12)
+        .oracle(fstar)
+        .observe(rec.clone())
+        .build()
+        .unwrap()
+        .run();
+    // The "process" died after round 5: 6 completed rounds, on-trajectory.
+    assert_eq!(crashed.rounds, 6);
+    assert_eq!(objective_bits(&crashed), &full[..6]);
+    // The store holds the cadence write (round 4) and the crash-forced
+    // write (round 6), every save fanned to observers as a Saved event.
+    let store = CheckpointStore::new(&dir, 3);
+    assert_eq!(store.rounds(), vec![4, 6]);
+    let saves: Vec<usize> = rec
+        .durability()
+        .iter()
+        .filter_map(|e| match e {
+            DurabilityEvent::Saved { round, .. } => Some(*round),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(saves, vec![4, 6]);
+
+    // Restart: latest_valid picks round 6; rounds 6..12 replay the tail.
+    let resumed = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg.clone())
+        .resume_from_store(&dir)
+        .unwrap()
+        .fixed_rounds(6)
+        .oracle(fstar)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(objective_bits(&resumed), &full[6..]);
+    assert_eq!(
+        resumed.final_objective.unwrap().to_bits(),
+        clean.final_objective.unwrap().to_bits()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn crash_resume_skips_a_corrupted_newest_envelope() {
+    // The acceptance scenario with a damaged tail: corrupt the newest
+    // envelope after the crash; latest_valid() walks back to the cadence
+    // write at round 4, and the restart re-runs rounds 4..12 — still
+    // bit-equal to the chaos-free run (round seeds make re-runs exact).
+    let (ds, cfg) = setup();
+    let fstar = oracle_objective(&ds, &cfg);
+    let dir = fresh_dir("sparkbench_crash_resume_corrupt");
+
+    let clean = clean_run(&ds, &cfg, fstar, 12);
+    let full = objective_bits(&clean);
+
+    Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg.clone())
+        .chaos(ChaosSpec::parse("crash@5").unwrap())
+        .checkpoint_store(&dir, 4, 3)
+        .fixed_rounds(12)
+        .oracle(fstar)
+        .build()
+        .unwrap()
+        .run();
+
+    // Flip one payload bit in the newest envelope (round 6).
+    let store = CheckpointStore::new(&dir, 3);
+    let newest = store.path_for(6);
+    let text = std::fs::read_to_string(&newest).unwrap();
+    let pos = text.find("alpha_hex").unwrap() + 14;
+    let mut bytes = text.into_bytes();
+    bytes[pos] ^= 1;
+    std::fs::write(&newest, &bytes).unwrap();
+    let (_, env) = store.latest_valid().unwrap();
+    assert_eq!(env.ckpt.round, 4);
+
+    let resumed = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg.clone())
+        .resume_from_store(&dir)
+        .unwrap()
+        .fixed_rounds(8)
+        .oracle(fstar)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(objective_bits(&resumed), &full[4..]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn crash_resume_is_bit_exact_on_the_physical_threads_engine() {
+    // Same crash/recover story where rounds run on real OS threads: the
+    // recovered trajectory still lands on the virtual engine's clean-run
+    // bits (the registry invariant survives a coordinator crash).
+    let (ds, cfg) = setup();
+    let fstar = oracle_objective(&ds, &cfg);
+    let dir = fresh_dir("sparkbench_crash_resume_threads");
+
+    let clean = clean_run(&ds, &cfg, fstar, 10);
+    let full = objective_bits(&clean);
+
+    let crashed = Session::builder(&ds)
+        .engine(Engine::threads(0))
+        .config(cfg.clone())
+        .chaos(ChaosSpec::parse("crash@5").unwrap())
+        .checkpoint_store(&dir, 3, 3)
+        .fixed_rounds(10)
+        .oracle(fstar)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(crashed.rounds, 6);
+    assert_eq!(objective_bits(&crashed), &full[..6]);
+
+    let resumed = Session::builder(&ds)
+        .engine(Engine::threads(0))
+        .config(cfg.clone())
+        .resume_from_store(&dir)
+        .unwrap()
+        .fixed_rounds(4)
+        .oracle(fstar)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(objective_bits(&resumed), &full[6..]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_from_store_refuses_an_empty_or_all_corrupt_store() {
+    let (ds, cfg) = setup();
+    let dir = fresh_dir("sparkbench_store_empty_resume");
+    // Empty (nonexistent) store: a typed error, not a panic.
+    // (SessionBuilder is not Debug, so destructure instead of unwrap_err.)
+    let err = match Session::builder(&ds).config(cfg.clone()).resume_from_store(&dir) {
+        Ok(_) => panic!("resume from an empty store must fail"),
+        Err(e) => e,
+    };
+    assert!(err.contains("no valid checkpoint"), "{}", err);
+    // A store holding only garbage behaves the same.
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("ckpt.000004.pallas"), "{ not json").unwrap();
+    let err = match Session::builder(&ds).config(cfg).resume_from_store(&dir) {
+        Ok(_) => panic!("resume from an all-corrupt store must fail"),
+        Err(e) => e,
+    };
+    assert!(err.contains("no valid checkpoint"), "{}", err);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unwritable_checkpoint_target_degrades_gracefully_not_silently() {
+    // PR 3's silent-failure fix: CheckpointEvery pointed at an unwritable
+    // target (here: an existing directory, which fails for root and
+    // non-root alike — chmod-based read-only dirs don't stop root) must
+    // keep training, surface Retry + GaveUp through on_durability, and
+    // never panic. The session's own store path degrades the same way.
+    let (ds, cfg) = setup();
+    let fstar = oracle_objective(&ds, &cfg);
+    let bad_target = std::env::temp_dir().join("sparkbench_unwritable_ckpt_target");
+    std::fs::create_dir_all(&bad_target).unwrap();
+
+    let rec = Recording::new();
+    let report = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg.clone())
+        .fixed_rounds(6)
+        .oracle(fstar)
+        .observe(rec.clone())
+        .observe(CheckpointEvery::new(3, &bad_target))
+        .build()
+        .unwrap()
+        .run();
+    // Training completed despite every save failing.
+    assert_eq!(report.rounds, 6);
+    // The clean baseline proves the failed saves never touched the math.
+    let clean = clean_run(&ds, &cfg, fstar, 6);
+    assert_eq!(objective_bits(&report), objective_bits(&clean));
+
+    // The session-level store route surfaces the same failure to EVERY
+    // observer (CheckpointEvery keeps its events to itself — assert via
+    // the store path, where the session fans out). A store dir routed
+    // through a regular file fails create_dir_all for any uid.
+    let blocker = bad_target.join("blocker");
+    std::fs::write(&blocker, "not a directory").unwrap();
+    let rec2 = Recording::new();
+    let report2 = Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg)
+        .fixed_rounds(6)
+        .oracle(fstar)
+        .observe(rec2.clone())
+        .checkpoint_store(blocker.join("store"), 3, 2)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(report2.rounds, 6);
+    let events = rec2.durability();
+    assert!(!events.is_empty(), "durability failures must surface");
+    let gave_up = events
+        .iter()
+        .any(|e| matches!(e, DurabilityEvent::GaveUp { .. }));
+    let retried = events
+        .iter()
+        .any(|e| matches!(e, DurabilityEvent::Retry { .. }));
+    assert!(gave_up && retried, "{:?}", events);
+    std::fs::remove_dir_all(&bad_target).ok();
+    // write_atomic's temp file for the directory-target case lives next
+    // to the target; sweep it too.
+    std::fs::remove_file(std::env::temp_dir().join("sparkbench_unwritable_ckpt_target.tmp")).ok();
+}
+
+#[test]
+fn store_retention_keeps_only_the_newest_envelopes_during_training() {
+    let (ds, cfg) = setup();
+    let fstar = oracle_objective(&ds, &cfg);
+    let dir = fresh_dir("sparkbench_store_retention_run");
+    Session::builder(&ds)
+        .engine(Impl::Mpi)
+        .config(cfg)
+        .checkpoint_store(&dir, 2, 2)
+        .fixed_rounds(10)
+        .oracle(fstar)
+        .build()
+        .unwrap()
+        .run();
+    // Cadence 2 over 10 rounds writes 2,4,6,8,10; retention keeps 8, 10.
+    let store = CheckpointStore::new(&dir, 2);
+    assert_eq!(store.rounds(), vec![8, 10]);
+    let (_, env) = store.latest_valid().unwrap();
+    assert_eq!(env.ckpt.round, 10);
+    assert_eq!(env.version, 6);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -11,7 +11,10 @@ use sparkbench::coordinator::checkpoint::Envelope;
 use sparkbench::data::synthetic::{separable_classes, webspam_like, SyntheticSpec};
 use sparkbench::data::{train_test_split, CsrMatrix, Dataset};
 use sparkbench::problem::Problem;
-use sparkbench::serve::{replay, BatchPolicy, OnlineEval, Output, Predictor, PrimalModel};
+use sparkbench::serve::{
+    overload_replay, replay, ArrivalPattern, BatchPolicy, OnlineEval, Output, OverloadConfig,
+    Predictor, PrimalModel, ServiceModel,
+};
 use sparkbench::session::{CheckpointEvery, Session, StopPolicy};
 use sparkbench::testkit::alloc::{current_thread_allocations, CountingAllocator};
 
@@ -281,4 +284,216 @@ fn held_out_replay_reports_the_offline_rmse_bitwise() {
         "held-out rmse {} not better than the zero model",
         offline
     );
+}
+
+// ---------------------------------------------------------------------
+// Overload invariants (DESIGN.md §15): bounded-queue shedding, graceful
+// deadline degradation, hot-swap bit-identity, and seeded replayability
+// of the serve-side fault harness.
+// ---------------------------------------------------------------------
+
+/// A synthetic servable model over an `n`-dimensional request space;
+/// `phase` shifts the weights so two models disagree on every row.
+fn overload_model(n: usize, phase: f64) -> PrimalModel {
+    let alpha: Vec<f64> = (0..n).map(|j| (j as f64 * 0.37 + phase).sin()).collect();
+    PrimalModel::from_parts(
+        Problem::ridge(1.0),
+        &alpha,
+        &[],
+        sparkbench::config::Precision::F64,
+        1,
+    )
+}
+
+fn overload_setup() -> (CsrMatrix, PrimalModel, BatchPolicy, ServiceModel) {
+    let ds = small();
+    let rows = CsrMatrix::from_csc(&ds.a);
+    let model = overload_model(ds.n(), 0.0);
+    // μ(16) = 16 / (0.002 + 0.0005·16) = 1600 req/s.
+    let policy = BatchPolicy::new(16, 0.005);
+    let svc = ServiceModel { overhead_s: 0.002, per_row_s: 0.0005 };
+    (rows, model, policy, svc)
+}
+
+#[test]
+fn overload_storm_sheds_without_corrupting_the_queue() {
+    // A storm at 4× the sustainable rate must shed — and shedding must
+    // not disturb the admitted requests: depth never exceeds the cap,
+    // service order stays FIFO, and every served prediction bit-equals
+    // the direct per-row kernel call on the same model.
+    let (rows, model, policy, svc) = overload_setup();
+    let cfg = OverloadConfig {
+        queue_cap: 32,
+        service: svc,
+        malformed_every: 0,
+        swap_at_batch: None,
+        seed: 7,
+    };
+    let pattern = ArrivalPattern::Storm { rate: 4.0 * svc.sustainable_rate(policy.max_batch) };
+    let mut preds = Vec::new();
+    let st = overload_replay(&model, None, &rows, &policy, &pattern, &cfg, &mut preds);
+    assert_eq!(st.offered, rows.m);
+    assert_eq!(st.admitted + st.shed + st.malformed, st.offered);
+    assert!(st.shed > 0, "a 4x-rate storm must shed ({:?})", st);
+    assert!(st.shed_rate > 0.0 && st.shed_rate < 1.0, "shed_rate {}", st.shed_rate);
+    assert!(st.max_depth <= cfg.queue_cap, "depth {} broke the cap", st.max_depth);
+    assert_eq!(preds.len(), st.admitted);
+    assert!(st.p99_latency_s >= st.p50_latency_s && st.p50_latency_s > 0.0);
+    let mut last_rid = None;
+    for (rid, p) in &preds {
+        // FIFO service: row ids come out in admission order.
+        if let Some(prev) = last_rid {
+            assert!(*rid > prev, "service order corrupted: {} after {}", rid, prev);
+        }
+        last_rid = Some(*rid);
+        let (idx, vals) = rows.row(*rid);
+        assert_eq!(p.to_bits(), model.predict_one(idx, vals).to_bits(), "row {}", rid);
+    }
+}
+
+#[test]
+fn degraded_deadline_engages_under_pressure_and_recovers_after_it() {
+    // Thundering-herd bursts push the queue past the low-water mark
+    // (deadline shrinks, degraded batches form); the long inter-burst
+    // gaps drain it back below (full-deadline batches form again). One
+    // run showing 0 < degraded_occupancy < 1 proves both directions.
+    let (rows, model, policy, svc) = overload_setup();
+    let cfg = OverloadConfig {
+        queue_cap: 32,
+        service: svc,
+        malformed_every: 0,
+        swap_at_batch: None,
+        seed: 11,
+    };
+    let pattern = ArrivalPattern::Burst { burst: 40, within: 1e-5, gap: 0.5 };
+    let mut preds = Vec::new();
+    let st = overload_replay(&model, None, &rows, &policy, &pattern, &cfg, &mut preds);
+    assert!(st.degraded_batches > 0, "bursts past low-water must degrade ({:?})", st);
+    assert!(
+        st.degraded_batches < st.batches,
+        "the deadline must recover between bursts ({:?})",
+        st
+    );
+    assert!(st.degraded_occupancy > 0.0 && st.degraded_occupancy < 1.0);
+    // Degradation trades wait for depth; it never breaks the cap either.
+    assert!(st.max_depth <= cfg.queue_cap);
+}
+
+#[test]
+fn hot_swap_mid_replay_matches_a_drained_then_swapped_baseline_bitwise() {
+    // One run hot-swaps at a batch boundary without draining; the
+    // baseline is two no-swap runs (all-primary and all-standby) over
+    // identical arrivals — admission and batching are model-independent,
+    // so the hot-swap run must equal primary-bits up to the boundary and
+    // standby-bits after it, with nothing lost or reordered in between.
+    let (rows, primary, policy, svc) = overload_setup();
+    let standby = overload_model(rows.n, 1.7);
+    let pattern = ArrivalPattern::Uniform { rate: 0.5 * svc.sustainable_rate(policy.max_batch) };
+    let run = |swap: Option<usize>, sb: Option<&PrimalModel>| {
+        let cfg = OverloadConfig {
+            queue_cap: 64,
+            service: svc,
+            malformed_every: 0,
+            swap_at_batch: swap,
+            seed: 3,
+        };
+        let mut preds = Vec::new();
+        let st = overload_replay(&primary, sb, &rows, &policy, &pattern, &cfg, &mut preds);
+        (st, preds)
+    };
+    let (st_swap, hot) = run(Some(3), Some(&standby));
+    let (_, all_primary) = run(None, None);
+    let (st_all, all_standby) = run(Some(0), Some(&standby));
+    assert!(st_swap.swapped_batches > 0 && st_swap.swapped_batches < st_swap.batches);
+    assert_eq!(st_all.swapped_batches, st_all.batches);
+    assert_eq!(hot.len(), all_primary.len());
+    assert_eq!(hot.len(), all_standby.len());
+    // The boundary: the first prediction that left the primary's bits.
+    let split = hot
+        .iter()
+        .zip(all_primary.iter())
+        .position(|(a, b)| a.1.to_bits() != b.1.to_bits())
+        .expect("the swapped run never diverged from all-primary");
+    assert!(split > 0, "swap happened before any primary batch");
+    for i in 0..split {
+        assert_eq!(hot[i].0, all_primary[i].0, "row order diverged at {}", i);
+        assert_eq!(hot[i].1.to_bits(), all_primary[i].1.to_bits(), "pre-swap row {}", i);
+    }
+    for i in split..hot.len() {
+        assert_eq!(hot[i].0, all_standby[i].0, "row order diverged at {}", i);
+        assert_eq!(hot[i].1.to_bits(), all_standby[i].1.to_bits(), "post-swap row {}", i);
+    }
+}
+
+#[test]
+fn overload_replay_is_bit_exact_from_its_seed() {
+    // The whole harness — storm arrivals, shedding, degradation,
+    // malformed traffic, hot-swap — replays bit-identically from its
+    // seed: stats and every (row, prediction) pair.
+    let (rows, primary, policy, svc) = overload_setup();
+    let standby = overload_model(rows.n, 0.9);
+    let run = || {
+        let cfg = OverloadConfig {
+            queue_cap: 32,
+            service: svc,
+            malformed_every: 9,
+            swap_at_batch: Some(2),
+            seed: 0xC0FFEE,
+        };
+        let pattern = ArrivalPattern::Storm { rate: 3.0 * svc.sustainable_rate(policy.max_batch) };
+        let mut preds = Vec::new();
+        let st = overload_replay(&primary, Some(&standby), &rows, &policy, &pattern, &cfg, &mut preds);
+        (st, preds)
+    };
+    let (st_a, preds_a) = run();
+    let (st_b, preds_b) = run();
+    assert_eq!(st_a, st_b);
+    assert_eq!(preds_a.len(), preds_b.len());
+    for (a, b) in preds_a.iter().zip(preds_b.iter()) {
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1.to_bits(), b.1.to_bits());
+    }
+    // A different seed moves the storm: the run is seed-driven, not fixed.
+    let cfg2 = OverloadConfig {
+        queue_cap: 32,
+        service: svc,
+        malformed_every: 9,
+        swap_at_batch: Some(2),
+        seed: 0xBEEF,
+    };
+    let pattern = ArrivalPattern::Storm { rate: 3.0 * svc.sustainable_rate(policy.max_batch) };
+    let mut preds_c = Vec::new();
+    let st_c = overload_replay(&primary, Some(&standby), &rows, &policy, &pattern, &cfg2, &mut preds_c);
+    assert_ne!(st_c, st_a, "different seeds must produce different storms");
+}
+
+#[test]
+fn malformed_requests_are_refused_before_the_batch_arena() {
+    // Every 7th arrival is presented with a column index past the model
+    // dimension. CsrMatrix::push_row would panic on it — the harness
+    // must refuse it as a typed outcome instead, serve everything else,
+    // and keep the survivors' bits untouched.
+    let (rows, model, policy, svc) = overload_setup();
+    let cfg = OverloadConfig {
+        queue_cap: 64,
+        service: svc,
+        malformed_every: 7,
+        swap_at_batch: None,
+        seed: 5,
+    };
+    let pattern = ArrivalPattern::Uniform { rate: 0.5 * svc.sustainable_rate(policy.max_batch) };
+    let mut preds = Vec::new();
+    let st = overload_replay(&model, None, &rows, &policy, &pattern, &cfg, &mut preds);
+    let expected: Vec<usize> = (0..rows.m)
+        .filter(|i| (i + 1) % 7 == 0 && rows.row_nnz(*i) > 0)
+        .collect();
+    assert_eq!(st.malformed, expected.len());
+    assert_eq!(st.shed, 0, "half the sustainable rate must not shed");
+    assert_eq!(st.admitted, rows.m - expected.len());
+    assert_eq!(preds.len(), st.admitted);
+    for (rid, p) in &preds {
+        assert!(!expected.contains(rid), "refused row {} was served", rid);
+        let (idx, vals) = rows.row(*rid);
+        assert_eq!(p.to_bits(), model.predict_one(idx, vals).to_bits());
+    }
 }

@@ -1,7 +1,8 @@
 // lint-fixture: as=rust/src/framework/fixture.rs
 // R5 `clock`: wall-clock reads are banned outside the measurement
-// allowlist (benches, bench module, serve, testkit) — engine time is
-// virtual so simnet runs and chaos replays stay deterministic.
+// allowlist (benches, bench module, serve's stream replayer, testkit)
+// — engine time is virtual so simnet runs, chaos replays and overload
+// replays stay deterministic.
 
 use std::time::Instant;
 

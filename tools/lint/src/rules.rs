@@ -86,9 +86,16 @@ const BITEXACT_SCOPE: &[&str] = &[
 ];
 
 /// Wall-clock reads are legitimate here (R5): benches, the bench module's
-/// wall-clock compute, serve latency measurement, and the testkit.
-const CLOCK_ALLOWLIST: &[&str] =
-    &["rust/benches/", "rust/src/bench/", "rust/src/testkit/", "rust/src/serve/"];
+/// wall-clock compute, the testkit, and — alone in `serve/` — the stream
+/// replayer, which wall-times batch compute. The admission/overload layer
+/// (DESIGN.md §15) is deliberately NOT listed: it runs on the virtual
+/// clock so overload experiments replay bit-exactly from their seeds.
+const CLOCK_ALLOWLIST: &[&str] = &[
+    "rust/benches/",
+    "rust/src/bench/",
+    "rust/src/testkit/",
+    "rust/src/serve/stream.rs",
+];
 
 /// Allocating constructs banned inside `// lint: alloc-free` regions (R2).
 /// Token-level on the code view: method-call tokens are anchored on `.`,
